@@ -1,0 +1,67 @@
+//! Cross-compilation demo: optimize the same operator for all five targets
+//! from one host, with zero target-device access — the capability dynamic
+//! tuners structurally cannot offer.
+//!
+//! ```bash
+//! cargo run --release --example cross_compile
+//! ```
+//!
+//! Also demonstrates the cost-model *transferability* claim (paper §III):
+//! the Graviton2-calibrated model applied unmodified to the Cortex-A53
+//! (same NEON SIMD instruction set) still ranks schedules usefully.
+
+use tuna::coordinator::{calibrate, Coordinator, Strategy};
+use tuna::isa::TargetKind;
+use tuna::search::EsParams;
+use tuna::tir::ops::OpSpec;
+use tuna::util::stats::spearman;
+
+fn main() {
+    let op = OpSpec::Conv2d {
+        n: 1, cin: 128, h: 28, w: 28, cout: 128, kh: 3, kw: 3, stride: 1, pad: 1,
+    };
+    println!("cross-compiling {op} for every target from this host\n");
+    println!(
+        "{:<55} {:>11} {:>9} {:>8}",
+        "target", "latency ms", "wall s", "device s"
+    );
+    for kind in TargetKind::ALL {
+        let coord = Coordinator::new(kind);
+        let es = EsParams { population: 24, iterations: 8, ..Default::default() };
+        let r = coord.tune_op(&op, &Strategy::TunaStatic(es));
+        println!(
+            "{:<55} {:>11.3} {:>9.2} {:>8.1}",
+            kind.display_name(),
+            r.latency_s * 1e3,
+            r.wall_s,
+            r.device_s
+        );
+    }
+
+    // --- transferability: Graviton2 coefficients on the A53 ---
+    println!("\n== cost-model transferability (NEON -> NEON) ==");
+    let g2_model = calibrate::calibrated_model(TargetKind::Graviton2);
+    let a53_model = calibrate::calibrated_model(TargetKind::CortexA53);
+    let a53_coord = Coordinator::new(TargetKind::CortexA53);
+    // transplant Graviton2 coefficients onto the A53 feature extraction
+    let transplanted = tuna::analysis::CostModel::with_coeffs(
+        TargetKind::CortexA53,
+        g2_model.coeffs.clone(),
+    );
+    let space = tuna::transform::config_space(&op, TargetKind::CortexA53);
+    let mut native = Vec::new();
+    let mut transferred = Vec::new();
+    let mut truth = Vec::new();
+    for i in 0..space.size().min(40) {
+        let cfg = space.from_index(i);
+        native.push(a53_model.predict(&op, &cfg));
+        transferred.push(transplanted.predict(&op, &cfg));
+        truth.push(a53_coord.device.run(&op, &cfg).seconds);
+    }
+    println!(
+        "rank correlation with A53 ground truth: native {:.3}, Graviton2-transferred {:.3}",
+        spearman(&native, &truth),
+        spearman(&transferred, &truth)
+    );
+    println!("(close values = one NEON cost model serves both microarchitectures)");
+}

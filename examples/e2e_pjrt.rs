@@ -1,0 +1,22 @@
+//! Three-layer end-to-end proof: L1 Pallas kernel + L2 JAX model, AOT-
+//! lowered to HLO text by `make artifacts`, loaded and executed from the
+//! L3 Rust side via PJRT — and cross-checked against Tuna's static model.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example e2e_pjrt
+//! ```
+//!
+//! What it verifies:
+//! 1. every matmul schedule variant produces numerically correct results
+//!    (vs an f64 reference computed in Rust);
+//! 2. real wall-clock differences between schedule variants exist;
+//! 3. Tuna's static scores rank the variants consistently with reality
+//!    (Spearman correlation + regret of the top static pick).
+
+fn main() {
+    let dir = tuna::runtime::artifacts_dir();
+    if let Err(e) = tuna::runtime::e2e::run(&dir, 5) {
+        eprintln!("e2e failed: {e:#}");
+        std::process::exit(1);
+    }
+}

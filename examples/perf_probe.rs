@@ -1,0 +1,48 @@
+// quick hot-path probe
+use std::time::Instant;
+use tuna::isa::TargetKind;
+use tuna::tir::ops::OpSpec;
+use tuna::sim::Device;
+
+fn main() {
+    let kind = TargetKind::Graviton2;
+    let cm = tuna::analysis::CostModel::with_default_coeffs(kind);
+    let ops = [
+        OpSpec::Matmul { m: 256, n: 256, k: 256 },
+        OpSpec::Conv2d { n:1, cin:64, h:56, w:56, cout:64, kh:3, kw:3, stride:1, pad:1 },
+        OpSpec::DepthwiseConv2d { n:1, c:96, h:112, w:112, kh:3, kw:3, stride:2, pad:1 },
+    ];
+    for op in &ops {
+        let space = tuna::transform::config_space(op, kind);
+        // static predict timing
+        let t0 = Instant::now();
+        let mut n = 0u32;
+        for i in 0..space.size().min(40) {
+            let cfg = space.from_index(i);
+            let _ = cm.predict(op, &cfg);
+            n += 1;
+        }
+        let per_pred = t0.elapsed().as_secs_f64() / n as f64;
+        // device.run timing
+        let d = Device::new(kind);
+        let t1 = Instant::now();
+        let mut m = 0u32;
+        for i in 0..space.size().min(10) {
+            let cfg = space.from_index(i);
+            let _ = d.run(op, &cfg);
+            m += 1;
+        }
+        let per_sim = t1.elapsed().as_secs_f64() / m as f64;
+        println!("{op}: predict {:.2} ms/cand, sim {:.2} ms/meas", per_pred*1e3, per_sim*1e3);
+    }
+    // breakdown for conv: features phases
+    let op = ops[1];
+    let space = tuna::transform::config_space(&op, kind);
+    let cfg = space.from_index(7);
+    let f = tuna::transform::apply(&op, kind, &cfg);
+    let tmarch = match kind.build() { tuna::isa::Target::Cpu(m) => m, _ => unreachable!() };
+    let t = Instant::now(); let prog = tuna::codegen::lower_cpu(&f, &tmarch); println!("codegen {:.2} ms", t.elapsed().as_secs_f64()*1e3);
+    let t = Instant::now(); let lm = tuna::analysis::loop_map::map_loops(&f, &prog); println!("loop_map {:.2} ms", t.elapsed().as_secs_f64()*1e3);
+    let t = Instant::now(); let _ = tuna::analysis::cache::analyze(&f, 16*1024); println!("cache {:.2} ms", t.elapsed().as_secs_f64()*1e3);
+    let t = Instant::now(); let _ = tuna::analysis::ilp::program_cost(&prog, &lm, &tmarch); println!("ilp {:.2} ms", t.elapsed().as_secs_f64()*1e3);
+}

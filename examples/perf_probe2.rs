@@ -1,0 +1,39 @@
+use std::time::Instant;
+use tuna::isa::TargetKind;
+use tuna::tir::ops::OpSpec;
+
+fn main() {
+    let kind = TargetKind::Graviton2;
+    let op = OpSpec::Matmul { m: 256, n: 256, k: 256 };
+    let space = tuna::transform::config_space(&op, kind);
+    let cfg = space.from_index(9);
+    let f = tuna::transform::apply(&op, kind, &cfg);
+    let march = match kind.build() { tuna::isa::Target::Cpu(m) => m, _ => unreachable!() };
+    let t = Instant::now(); let prog = tuna::codegen::lower_cpu(&f, &march);
+    println!("codegen  {:.2} ms", t.elapsed().as_secs_f64()*1e3);
+    let t = Instant::now(); let lm = tuna::analysis::loop_map::map_loops(&f, &prog);
+    println!("loop_map {:.2} ms", t.elapsed().as_secs_f64()*1e3);
+    // steady-state pipeline estimate
+    let t = Instant::now();
+    let mut pipe = 0f64;
+    for (i, b) in prog.blocks.iter().enumerate() {
+        if b.instrs.is_empty() { continue; }
+        let once = tuna::analysis::ilp::schedule_block(b, &march).cycles as f64;
+        let mut tb = b.clone(); tb.instrs.extend(b.instrs.iter().cloned());
+        let twice = tuna::analysis::ilp::schedule_block(&tb, &march).cycles as f64;
+        pipe += (twice - once).max(1.0) * lm.block_trips[i] as f64;
+    }
+    println!("pipeline {:.2} ms (cost {pipe:.0})", t.elapsed().as_secs_f64()*1e3);
+    let bases: Vec<u64> = prog.tensors.iter().map(|x| x.base_addr).collect();
+    let t = Instant::now();
+    let mut cnt = 0u64;
+    let _ = tuna::sim::trace::visit(&f, &bases, 200_000, &mut |_, _| { cnt += 1; });
+    println!("trace-only {:.2} ms ({cnt} accesses)", t.elapsed().as_secs_f64()*1e3);
+    let mut h = tuna::sim::cache_sim::Hierarchy::new(&march.l1d, &march.l2);
+    let t = Instant::now();
+    let _ = tuna::sim::trace::visit(&f, &bases, 200_000, &mut |a, _| { h.access(a); });
+    println!("trace+cache {:.2} ms", t.elapsed().as_secs_f64()*1e3);
+    let t = Instant::now();
+    let _ = tuna::sim::cpu::simulate(&f, &prog, &march);
+    println!("simulate total {:.2} ms", t.elapsed().as_secs_f64()*1e3);
+}

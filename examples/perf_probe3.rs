@@ -1,0 +1,20 @@
+use std::time::Instant;
+use tuna::isa::TargetKind;
+use tuna::tir::ops::OpSpec;
+fn main() {
+    let kind = TargetKind::XeonPlatinum8124M;
+    for op in [
+        OpSpec::Conv2dWinograd { n:1, cin:64, h:56, w:56, cout:64 },
+        OpSpec::Conv2d { n:1, cin:64, h:56, w:56, cout:64, kh:3, kw:3, stride:1, pad:1 },
+    ] {
+        let cm = tuna::analysis::CostModel::with_default_coeffs(kind);
+        let space = tuna::transform::config_space(&op, kind);
+        let t0 = Instant::now();
+        for i in 0..10 { let _ = cm.predict(&op, &space.from_index(i * space.size() / 10)); }
+        println!("{op}: predict {:.1} ms", t0.elapsed().as_secs_f64()*1e3/10.0);
+        let d = tuna::sim::Device::new(kind);
+        let t0 = Instant::now();
+        for i in 0..5 { let _ = d.run(&op, &space.from_index(i * space.size() / 5)); }
+        println!("{op}: sim {:.1} ms", t0.elapsed().as_secs_f64()*1e3/5.0);
+    }
+}

@@ -1,0 +1,65 @@
+//! Quickstart: optimize one operator with Tuna's static analysis.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! Picks a ResNet-class conv2d, searches its schedule space with Evolution
+//! Strategies over the static cost model (no device needed!), then — only
+//! for reporting — checks the chosen schedule on the device simulator and
+//! against the vendor-library default.
+
+use tuna::coordinator::{Coordinator, Strategy};
+use tuna::isa::TargetKind;
+use tuna::search::EsParams;
+use tuna::tir::ops::OpSpec;
+
+fn main() {
+    let op = OpSpec::Conv2d {
+        n: 1, cin: 64, h: 56, w: 56, cout: 64, kh: 3, kw: 3, stride: 1, pad: 1,
+    };
+    let target = TargetKind::Graviton2;
+
+    println!("operator : {op}");
+    println!("target   : {}", target.display_name());
+    let space = tuna::transform::config_space(&op, target);
+    println!("schedule space: {} configurations", space.size());
+
+    // 1. Tuna: static search — no hardware, parallel across host threads.
+    let coord = Coordinator::new(target);
+    let es = EsParams { population: 32, iterations: 12, ..Default::default() };
+    let tuna = coord.tune_op(&op, &Strategy::TunaStatic(es));
+    println!(
+        "\nTuna static search: {} candidates analyzed in {:.2}s wall, 0s device time",
+        tuna.evaluations, tuna.wall_s
+    );
+
+    // 2. Baseline: the fixed vendor-library schedule.
+    let vendor = coord.tune_op(&op, &Strategy::Vendor);
+
+    // 3. Report (simulated deployment latency).
+    let gflops = |s: f64| op.flops() as f64 / s / 1e9;
+    println!("\n{:<24} {:>12} {:>12}", "schedule", "latency ms", "GFLOP/s");
+    println!(
+        "{:<24} {:>12.3} {:>12.1}",
+        "tuna (static search)",
+        tuna.latency_s * 1e3,
+        gflops(tuna.latency_s)
+    );
+    println!(
+        "{:<24} {:>12.3} {:>12.1}",
+        "vendor default",
+        vendor.latency_s * 1e3,
+        gflops(vendor.latency_s)
+    );
+    println!(
+        "\nspeedup over vendor: {:.2}x",
+        vendor.latency_s / tuna.latency_s
+    );
+
+    // show what was chosen
+    println!("\nchosen knobs:");
+    for (knob, &choice) in space.knobs.iter().zip(&tuna.chosen.choices) {
+        println!("  {:<12} = {:?}", knob.name, knob.values[choice]);
+    }
+}

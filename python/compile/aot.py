@@ -1,0 +1,96 @@
+"""AOT lowering: JAX (L2) + Pallas (L1) -> HLO text artifacts for Rust.
+
+Run once by ``make artifacts``. Emits, per schedule variant:
+
+* ``artifacts/matmul_<tag>.hlo.txt``  — the tiled GEMM kernel alone
+* ``artifacts/mlp_<tag>.hlo.txt``     — the two-layer MLP block
+* ``artifacts/manifest.json``         — names, paths, schedules, shapes
+
+HLO **text** (not ``.serialize()``) is the interchange format: jax >= 0.5
+emits protos with 64-bit instruction ids which the runtime's
+xla_extension 0.5.1 rejects; the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_matmul(variant):
+    m, n, k = model.MATMUL_SHAPE
+    x = jax.ShapeDtypeStruct((m, k), jnp.float32)
+    w = jax.ShapeDtypeStruct((k, n), jnp.float32)
+
+    def fn(x, w):
+        return (model.matmul_tiled(x, w, **variant),)
+
+    return jax.jit(fn).lower(x, w), [(m, k), (k, n)]
+
+
+def lower_mlp(variant):
+    b, d, h = model.MLP_SHAPE
+    x = jax.ShapeDtypeStruct((b, d), jnp.float32)
+    w1 = jax.ShapeDtypeStruct((d, h), jnp.float32)
+    b1 = jax.ShapeDtypeStruct((h,), jnp.float32)
+    w2 = jax.ShapeDtypeStruct((h, d), jnp.float32)
+    b2 = jax.ShapeDtypeStruct((d,), jnp.float32)
+
+    def fn(x, w1, b1, w2, b2):
+        return (model.mlp(x, w1, b1, w2, b2, **variant),)
+
+    return jax.jit(fn).lower(x, w1, b1, w2, b2), [(b, d), (d, h), (h,), (h, d), (d,)]
+
+
+def tag_of(variant) -> str:
+    return f"bm{variant['bm']}_bn{variant['bn']}_bk{variant['bk']}"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    entries = []
+    for variant in model.MATMUL_VARIANTS:
+        tag = tag_of(variant)
+        for kind, lower in [("matmul", lower_matmul), ("mlp", lower_mlp)]:
+            # mlp shapes don't fit the largest tiles; skip invalid combos
+            if kind == "mlp":
+                b, d, h = model.MLP_SHAPE
+                if b % variant["bm"] or d % variant["bn"] or d % variant["bk"]:
+                    continue
+            lowered, shapes = lower(variant)
+            text = to_hlo_text(lowered)
+            name = f"{kind}_{tag}"
+            path = f"{name}.hlo.txt"
+            with open(os.path.join(args.out_dir, path), "w") as f:
+                f.write(text)
+            entries.append(
+                dict(name=name, path=path, schedule=tag, kind=kind,
+                     inputs=[list(s) for s in shapes])
+            )
+            print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump({"artifacts": entries}, f, indent=1)
+    print(f"manifest: {len(entries)} artifacts")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,36 @@
+"""L1 Pallas kernel: fused bias + ReLU epilogue.
+
+The elementwise epilogue that follows every dense layer in the L2 model.
+Row-tiled so each grid step streams one block through VMEM — the TPU
+analogue of keeping the epilogue fused into the producer's cache tile
+(Tuna's cache model rewards exactly this fusion on CPU).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, b_ref, o_ref):
+    o_ref[...] = jnp.maximum(x_ref[...] + b_ref[...], 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("bm",))
+def bias_relu(x, b, *, bm=32):
+    """`max(x + b, 0)` with `b` broadcast over rows; row-block size bm."""
+    m, n = x.shape
+    assert b.shape == (n,), f"bias shape {b.shape} != ({n},)"
+    assert m % bm == 0, f"bm={bm} must divide m={m}"
+    return pl.pallas_call(
+        _kernel,
+        grid=(m // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, n), lambda i: (i, 0)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=True,
+    )(x, b)

@@ -1,0 +1,77 @@
+"""L1 Pallas kernel: tiled matmul with parametric block sizes.
+
+This is the executable realization of Tuna's schedule choice: the (bm, bn,
+bk) block shape corresponds to the (tile_m, tile_n, tile_k) knobs of the
+Rust-side CPU matmul template, expressed TPU-style — the tiles become
+`BlockSpec` block shapes (the VMEM working set, standing in for the L1
+footprint the paper's cache model bounds), the grid walks (m/bm, n/bn,
+k/bk) exactly like the outer tile loops, and the inner `jnp.dot` maps onto
+the MXU. See DESIGN.md §Hardware-Adaptation.
+
+interpret=True everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls; interpret mode lowers to plain HLO that both pytest (via
+jax) and the Rust runtime (via PJRT) execute with identical numerics.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, w_ref, o_ref, acc_ref, *, nsteps_k):
+    """One (bm, bn) output tile: accumulate x_tile @ w_tile over the k grid.
+
+    A float32 VMEM scratch accumulator keeps partial sums at full precision
+    regardless of the output dtype (the standard Pallas matmul pattern).
+    """
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros(acc_ref.shape, jnp.float32)
+
+    acc_ref[...] += jnp.dot(
+        x_ref[...].astype(jnp.float32),
+        w_ref[...].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(pl.program_id(2) == nsteps_k - 1)
+    def _done():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def matmul_tiled(x, w, *, bm=32, bn=32, bk=32):
+    """`x @ w` under an explicit (bm, bn, bk) tiling schedule.
+
+    Block sizes must divide the problem sizes — the Rust search space only
+    proposes divisors, mirroring AutoTVM's split candidates.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"inner dims mismatch: {k} vs {k2}"
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (
+        f"tiles ({bm},{bn},{bk}) must divide problem ({m},{n},{k})"
+    )
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        functools.partial(_kernel, nsteps_k=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, ks: (i, ks)),
+            pl.BlockSpec((bk, bn), lambda i, j, ks: (ks, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, ks: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=True,
+    )(x, w)
+
+
+def vmem_footprint_bytes(bm, bn, bk, dtype_bytes=4):
+    """Static VMEM working-set estimate for a schedule (DESIGN.md §Perf):
+    x tile + w tile + output tile + f32 accumulator."""
+    return dtype_bytes * (bm * bk + bk * bn + bm * bn) + 4 * bm * bn

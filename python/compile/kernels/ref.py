@@ -1,0 +1,40 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+Every kernel in this package has a reference here; pytest (and the
+hypothesis sweeps) assert allclose between the two. The references use
+only standard jax.numpy / lax ops so they exercise an entirely different
+code path from the Pallas lowering.
+"""
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def matmul_ref(x, w):
+    """Plain `x @ w` in f32 accumulation."""
+    return jnp.dot(
+        x.astype(jnp.float32), w.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    ).astype(x.dtype)
+
+
+def bias_relu_ref(x, b):
+    return jnp.maximum(x + b[None, :], 0.0)
+
+
+def mlp_ref(x, w1, b1, w2, b2):
+    """Two-layer MLP: relu(x@w1 + b1) @ w2 + b2."""
+    h = bias_relu_ref(matmul_ref(x, w1), b1)
+    return matmul_ref(h, w2) + b2[None, :]
+
+
+def conv2d_ref(x_nchw, w_oihw, stride=1, pad=1):
+    """NCHW direct convolution via lax.conv (the oracle for the im2col +
+    tiled-matmul path in model.py)."""
+    return lax.conv_general_dilated(
+        x_nchw,
+        w_oihw,
+        window_strides=(stride, stride),
+        padding=[(pad, pad), (pad, pad)],
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )

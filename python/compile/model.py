@@ -1,0 +1,84 @@
+"""L2: the JAX compute graph, built on the L1 Pallas kernels.
+
+Two model entry points, both schedule-parametric (the (bm, bn, bk) tiles
+are the knobs Tuna's Rust-side search chooses):
+
+* ``mlp`` — a two-layer MLP block (the BERT FFN shape family): both
+  matmuls run through the tiled Pallas kernel, the epilogue through the
+  fused bias+relu kernel.
+* ``conv_block`` — an im2col convolution: patch extraction stays in jnp
+  (layout transform), the GEMM — the compute hot-spot — runs through the
+  same tiled kernel, mirroring how the Rust templates treat conv as a
+  blocked contraction.
+
+Python here is build-time only: ``aot.py`` lowers these functions to HLO
+text once, and the Rust runtime executes the artifacts via PJRT.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.bias_relu import bias_relu
+from .kernels.matmul_tiled import matmul_tiled
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def mlp(x, w1, b1, w2, b2, *, bm=32, bn=32, bk=32):
+    """relu(x@w1 + b1) @ w2 + b2 under one tiling schedule."""
+    h = matmul_tiled(x, w1, bm=bm, bn=bn, bk=bk)
+    h = bias_relu(h, b1, bm=bm)
+    out = matmul_tiled(h, w2, bm=bm, bn=bn, bk=bk)
+    return out + b2[None, :]
+
+
+def im2col(x_nchw, kh, kw, stride=1, pad=1):
+    """Unfold NCHW input into (N*OH*OW, CIN*KH*KW) patches (jnp-only —
+    a layout transform, not the hot-spot)."""
+    n, c, h, w = x_nchw.shape
+    xp = jnp.pad(x_nchw, ((0, 0), (0, 0), (pad, pad), (pad, pad)))
+    oh = (h + 2 * pad - kh) // stride + 1
+    ow = (w + 2 * pad - kw) // stride + 1
+    cols = []
+    for i in range(kh):
+        for j in range(kw):
+            patch = xp[:, :, i : i + stride * oh : stride, j : j + stride * ow : stride]
+            cols.append(patch.reshape(n, c, oh * ow))
+    # (n, c*kh*kw, oh*ow) -> (n*oh*ow, c*kh*kw)
+    stacked = jnp.concatenate(cols, axis=1)
+    return stacked.transpose(0, 2, 1).reshape(n * oh * ow, c * kh * kw), (n, oh, ow)
+
+
+@functools.partial(jax.jit, static_argnames=("stride", "pad", "bm", "bn", "bk"))
+def conv_block(x_nchw, w_oihw, *, stride=1, pad=1, bm=32, bn=32, bk=32):
+    """NCHW conv as im2col + tiled-Pallas GEMM; returns NCHW."""
+    cout, cin, kh, kw = w_oihw.shape
+    patches, (n, oh, ow) = im2col(x_nchw, kh, kw, stride, pad)
+    # im2col lays patches out (kh, kw, cin)-major along the contraction dim
+    wmat = w_oihw.transpose(2, 3, 1, 0).reshape(kh * kw * cin, cout)
+    m, k = patches.shape
+    # pad GEMM dims up to tile multiples (zero rows/cols are exact)
+    pm, pn, pk = (-m) % bm, (-cout) % bn, (-k) % bk
+    patches = jnp.pad(patches, ((0, pm), (0, pk)))
+    wmat = jnp.pad(wmat, ((0, pk), (0, pn)))
+    out = matmul_tiled(patches, wmat, bm=bm, bn=bn, bk=bk)
+    out = out[:m, :cout]
+    return out.reshape(n, oh * ow, cout).transpose(0, 2, 1).reshape(n, cout, oh, ow)
+
+
+#: The schedule variants aot.py exports — a slice through the Rust matmul
+#: space (tile_m × tile_n × tile_k), from deliberately-poor to good, so the
+#: e2e example can check Tuna's static ranking against real execution.
+MATMUL_VARIANTS = [
+    dict(bm=8, bn=8, bk=8),
+    dict(bm=16, bn=16, bk=16),
+    dict(bm=32, bn=32, bk=32),
+    dict(bm=64, bn=64, bk=32),
+    dict(bm=64, bn=64, bk=64),
+    dict(bm=128, bn=128, bk=64),
+]
+
+#: Problem sizes exported for the runtime (BERT FFN-ish + square GEMM).
+MATMUL_SHAPE = (256, 256, 256)
+MLP_SHAPE = (128, 256, 512)  # (batch, d_in/d_out, d_hidden)

@@ -1,0 +1,100 @@
+"""Kernel-vs-reference correctness: the core L1 signal.
+
+Hypothesis sweeps shapes/tiles/dtypes for the tiled matmul; fixed cases
+cover the epilogue kernel and edge tiles.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.matmul_tiled import matmul_tiled, vmem_footprint_bytes
+from compile.kernels.bias_relu import bias_relu
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _rand(shape, dtype, seed):
+    rng = np.random.RandomState(seed)
+    return jnp.asarray(rng.randn(*shape).astype(dtype))
+
+
+# hypothesis: tile sizes drawn from divisor-friendly sets
+tiles = st.sampled_from([8, 16, 32])
+mults = st.integers(min_value=1, max_value=4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(bm=tiles, bn=tiles, bk=tiles, am=mults, an=mults, ak=mults, seed=st.integers(0, 2**16))
+def test_matmul_matches_ref_under_any_tiling(bm, bn, bk, am, an, ak, seed):
+    m, n, k = bm * am, bn * an, bk * ak
+    x = _rand((m, k), np.float32, seed)
+    w = _rand((k, n), np.float32, seed + 1)
+    got = matmul_tiled(x, w, bm=bm, bn=bn, bk=bk)
+    want = ref.matmul_ref(x, w)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("variant", [
+    dict(bm=8, bn=8, bk=8),
+    dict(bm=16, bn=32, bk=64),
+    dict(bm=64, bn=64, bk=64),
+])
+def test_matmul_exported_variants(variant):
+    m = n = k = 128
+    x = _rand((m, k), np.float32, 7)
+    w = _rand((k, n), np.float32, 8)
+    got = matmul_tiled(x, w, **variant)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref.matmul_ref(x, w)),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_matmul_single_tile_equals_problem():
+    # degenerate schedule: one grid step
+    x = _rand((16, 16), np.float32, 1)
+    w = _rand((16, 16), np.float32, 2)
+    got = matmul_tiled(x, w, bm=16, bn=16, bk=16)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(x) @ np.asarray(w),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_matmul_rejects_nondivisible_tiles():
+    x = _rand((30, 30), np.float32, 3)
+    w = _rand((30, 30), np.float32, 4)
+    with pytest.raises(AssertionError):
+        matmul_tiled(x, w, bm=16, bn=16, bk=16)
+
+
+def test_matmul_identity():
+    x = _rand((32, 32), np.float32, 5)
+    eye = jnp.eye(32, dtype=jnp.float32)
+    got = matmul_tiled(x, eye, bm=16, bn=16, bk=16)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(x), rtol=1e-6, atol=1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(bm=st.sampled_from([8, 16, 32]), rows=mults, n=st.sampled_from([16, 64, 256]),
+       seed=st.integers(0, 2**16))
+def test_bias_relu_matches_ref(bm, rows, n, seed):
+    m = bm * rows
+    x = _rand((m, n), np.float32, seed)
+    b = _rand((n,), np.float32, seed + 1)
+    got = bias_relu(x, b, bm=bm)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref.bias_relu_ref(x, b)),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_bias_relu_clamps_negative():
+    x = jnp.full((8, 4), -5.0, jnp.float32)
+    b = jnp.zeros((4,), jnp.float32)
+    got = bias_relu(x, b, bm=8)
+    assert float(jnp.max(got)) == 0.0
+
+
+def test_vmem_footprint_monotone():
+    assert vmem_footprint_bytes(8, 8, 8) < vmem_footprint_bytes(64, 64, 64)
+    # the biggest exported variant stays under 16 MiB VMEM
+    assert vmem_footprint_bytes(128, 128, 64) < 16 * 1024 * 1024

@@ -1,0 +1,61 @@
+"""L2 model-vs-reference tests: MLP block and im2col conv path."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _rand(shape, seed):
+    rng = np.random.RandomState(seed)
+    return jnp.asarray(rng.randn(*shape).astype(np.float32))
+
+
+@pytest.mark.parametrize("variant", [v for v in model.MATMUL_VARIANTS[:4]])
+def test_mlp_matches_ref(variant):
+    b, d, h = 64, 128, 256
+    if b % variant["bm"] or d % variant["bn"] or d % variant["bk"]:
+        pytest.skip("tile does not divide this test shape")
+    x = _rand((b, d), 0)
+    w1 = _rand((d, h), 1)
+    b1 = _rand((h,), 2)
+    w2 = _rand((h, d), 3)
+    b2 = _rand((d,), 4)
+    got = model.mlp(x, w1, b1, w2, b2, **variant)
+    want = ref.mlp_ref(x, w1, b1, w2, b2)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-3, atol=1e-4)
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    c=st.sampled_from([3, 8]),
+    cout=st.sampled_from([8, 16]),
+    hw=st.sampled_from([8, 14]),
+    stride=st.sampled_from([1, 2]),
+    seed=st.integers(0, 2**16),
+)
+def test_conv_block_matches_lax_conv(c, cout, hw, stride, seed):
+    x = _rand((1, c, hw, hw), seed)
+    w = _rand((cout, c, 3, 3), seed + 1)
+    got = model.conv_block(x, w, stride=stride, pad=1, bm=8, bn=8, bk=8)
+    want = ref.conv2d_ref(x, w, stride=stride, pad=1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+def test_im2col_shape():
+    x = _rand((2, 3, 8, 8), 0)
+    patches, (n, oh, ow) = model.im2col(x, 3, 3, stride=1, pad=1)
+    assert (n, oh, ow) == (2, 8, 8)
+    assert patches.shape == (2 * 8 * 8, 3 * 3 * 3)
+
+
+def test_exported_variants_all_divide_matmul_shape():
+    m, n, k = model.MATMUL_SHAPE
+    for v in model.MATMUL_VARIANTS:
+        assert m % v["bm"] == 0 and n % v["bn"] == 0 and k % v["bk"] == 0, v

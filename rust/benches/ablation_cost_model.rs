@@ -1,0 +1,89 @@
+//! Ablation — which cost-model features earn their keep? (DESIGN.md §7)
+//!
+//! For each CPU feature, zero its coefficient and measure the drop in
+//! rank correlation (Spearman) between static scores and device ground
+//! truth across a held-out operator set. Also compares calibrated vs
+//! latency-table-default coefficients, and ES vs random vs exhaustive
+//! search quality under the same evaluation budget.
+//!
+//! ```bash
+//! cargo bench --bench ablation_cost_model
+//! ```
+
+mod common;
+
+use tuna::analysis::cost::CPU_FEATURES;
+use tuna::analysis::CostModel;
+use tuna::coordinator::calibrate;
+use tuna::isa::TargetKind;
+use tuna::search::{self, EsParams, EvolutionStrategies};
+use tuna::sim::Device;
+use tuna::tir::ops::OpSpec;
+use tuna::util::stats::spearman;
+
+fn rank_corr(cm: &CostModel, device: &Device, ops: &[OpSpec], n_cfg: u64) -> f64 {
+    let mut rhos = Vec::new();
+    for op in ops {
+        let space = tuna::transform::config_space(op, cm.kind);
+        let mut preds = Vec::new();
+        let mut truths = Vec::new();
+        for i in 0..space.size().min(n_cfg) {
+            let cfg = space.from_index(i * space.size() / space.size().min(n_cfg));
+            preds.push(cm.predict(op, &cfg));
+            truths.push(device.run(op, &cfg).seconds);
+        }
+        rhos.push(spearman(&preds, &truths));
+    }
+    rhos.iter().sum::<f64>() / rhos.len() as f64
+}
+
+fn main() {
+    let kind = TargetKind::Graviton2;
+    let device = Device::new(kind);
+    let ops = [
+        OpSpec::Matmul { m: 128, n: 128, k: 128 },
+        OpSpec::Conv2d { n: 1, cin: 32, h: 28, w: 28, cout: 32, kh: 3, kw: 3, stride: 1, pad: 1 },
+        OpSpec::DepthwiseConv2d { n: 1, c: 48, h: 28, w: 28, kh: 3, kw: 3, stride: 1, pad: 1 },
+    ];
+
+    println!("## Ablation: cost-model features ({})\n", kind.display_name());
+    let full = calibrate::calibrated_model(kind);
+    let base_rho = rank_corr(&full, &device, &ops, 32);
+    println!("{:<28} {:>10}", "variant", "rank-corr");
+    println!("{:<28} {:>10.3}", "calibrated (all features)", base_rho);
+
+    let defaults = CostModel::with_default_coeffs(kind);
+    println!(
+        "{:<28} {:>10.3}",
+        "latency-table defaults",
+        rank_corr(&defaults, &device, &ops, 32)
+    );
+
+    for (i, name) in CPU_FEATURES.iter().enumerate() {
+        let mut ablated = full.clone();
+        ablated.coeffs[i] = 0.0;
+        let rho = rank_corr(&ablated, &device, &ops, 32);
+        println!("{:<28} {:>10.3}  (delta {:+.3})", format!("- {name}"), rho, rho - base_rho);
+    }
+
+    // ---- search-algorithm ablation at equal evaluation budget ----
+    println!("\n## Ablation: search algorithm (budget = 240 static evals)\n");
+    let op = ops[1];
+    let space = tuna::transform::config_space(&op, kind);
+    let cm = full.clone();
+    let obj = move |cfg: &tuna::transform::ScheduleConfig| cm.predict(&op, cfg);
+    let es = EvolutionStrategies::new(EsParams {
+        population: 24,
+        iterations: 10,
+        ..Default::default()
+    })
+    .run(&space, &obj);
+    let rnd = search::random_search(&space, &obj, 240, 10, 1, 7);
+    let exh = search::exhaustive(&space, &obj, 10, tuna::util::pool::default_threads());
+    println!("{:<28} {:>14} {:>12}", "algorithm", "best score", "measured ms");
+    for (name, r) in [("evolution strategies", &es), ("random search", &rnd), ("exhaustive", &exh)]
+    {
+        let lat = device.run(&op, &r.best).seconds;
+        println!("{:<28} {:>14.0} {:>12.4}", name, r.best_score, lat * 1e3);
+    }
+}

@@ -1,0 +1,85 @@
+//! Shared bench harness (the offline environment has no criterion, so the
+//! `harness = false` benches are plain binaries built on this module).
+//!
+//! Environment knobs, all optional:
+//!   TUNA_BENCH_TARGETS   comma list (default: xeon,graviton2 for CPU-only
+//!                        benches, all five where GPUs are meaningful)
+//!   TUNA_BENCH_NETS      comma list of networks (default: all four)
+//!   TUNA_BENCH_TRIALS    AutoTVM-Full measurement budget (default 64)
+//!   TUNA_BENCH_FAST      "1" = small ES populations for smoke runs
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use tuna::coordinator::{Coordinator, NetworkReport, Strategy};
+use tuna::graph::{all_networks, Network};
+use tuna::isa::TargetKind;
+use tuna::search::EsParams;
+
+pub fn targets() -> Vec<TargetKind> {
+    match std::env::var("TUNA_BENCH_TARGETS") {
+        Ok(s) => tuna::config::parse_targets(&s).expect("TUNA_BENCH_TARGETS"),
+        Err(_) => TargetKind::ALL.to_vec(),
+    }
+}
+
+pub fn networks() -> Vec<Network> {
+    let nets = all_networks();
+    match std::env::var("TUNA_BENCH_NETS") {
+        Ok(s) => nets
+            .into_iter()
+            .filter(|n| s.split(',').any(|x| x.trim() == n.name))
+            .collect(),
+        Err(_) => nets,
+    }
+}
+
+pub fn trials() -> u64 {
+    std::env::var("TUNA_BENCH_TRIALS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(64)
+}
+
+pub fn es_params() -> EsParams {
+    if std::env::var("TUNA_BENCH_FAST").as_deref() == Ok("1") {
+        EsParams { population: 12, iterations: 6, ..Default::default() }
+    } else {
+        EsParams { population: 24, iterations: 10, ..Default::default() }
+    }
+}
+
+/// Run all four strategies over the selected networks for one target.
+/// Returns results["<strategy>"]["<network>"].
+pub fn run_all_strategies(
+    kind: TargetKind,
+    nets: &[Network],
+) -> BTreeMap<String, BTreeMap<String, NetworkReport>> {
+    let c = Coordinator::new(kind);
+    let mut results: BTreeMap<String, BTreeMap<String, NetworkReport>> = BTreeMap::new();
+    for net in nets {
+        let t0 = Instant::now();
+        eprintln!("  [{:?}] {} ...", kind, net.name);
+        let tuna = c.tune_network(net, &Strategy::TunaStatic(es_params()));
+        let budget = c.partial_budget_per_op(&tuna);
+        let partial = c.tune_network(net, &Strategy::AutoTvmPartial { budget_s: budget });
+        let full = c.tune_network(net, &Strategy::AutoTvmFull { trials: trials() });
+        let vendor = c.tune_network(net, &Strategy::Vendor);
+        eprintln!("    done in {:.1}s wall", t0.elapsed().as_secs_f64());
+        results.entry("Tuna".into()).or_default().insert(net.name.into(), tuna);
+        results
+            .entry("AutoTVM Partial".into())
+            .or_default()
+            .insert(net.name.into(), partial);
+        results.entry("AutoTVM Full".into()).or_default().insert(net.name.into(), full);
+        results.entry("Framework".into()).or_default().insert(net.name.into(), vendor);
+    }
+    results
+}
+
+pub fn names_displays(nets: &[Network]) -> (Vec<&str>, Vec<&str>) {
+    (
+        nets.iter().map(|n| n.name).collect(),
+        nets.iter().map(|n| n.display).collect(),
+    )
+}

@@ -1,0 +1,36 @@
+//! Figure 3 — top-10 performance ratio, single operators, Tuna vs AutoTVM.
+//!
+//! For each operator: Tuna's static search picks its top-10; AutoTVM's
+//! measured tuner picks its top-10; both sets are then executed on the
+//! device and `Σ autotvm / Σ tuna` is reported (paper: ~0.869 average,
+//! values approaching 1 = the static model selects as well as measuring).
+//!
+//! ```bash
+//! cargo bench --bench fig3_top10_ratio
+//! TUNA_BENCH_TARGETS=v100 cargo bench --bench fig3_top10_ratio
+//! ```
+
+mod common;
+
+use tuna::coordinator::Coordinator;
+use tuna::metrics;
+
+fn main() {
+    let k = 10usize;
+    for kind in common::targets() {
+        let c = Coordinator::new(kind);
+        let mut entries = Vec::new();
+        for op in tuna::tir::ops::figure_op_suite() {
+            let ratio = metrics::topk_sweep_ratio(&c, &op, k, common::trials());
+            eprintln!("  [{kind:?}] {op}: {ratio:.3}");
+            entries.push((op.to_string(), ratio));
+        }
+        println!(
+            "{}",
+            metrics::figure_topk(
+                &format!("Figure 3: top-{k} performance ratio — {}", kind.display_name()),
+                &entries
+            )
+        );
+    }
+}

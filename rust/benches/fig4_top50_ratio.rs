@@ -1,0 +1,32 @@
+//! Figure 4 — top-50 performance ratio, single operators, Tuna vs AutoTVM.
+//!
+//! Same protocol as Figure 3 with k=50 (paper: ~0.873 average).
+//!
+//! ```bash
+//! cargo bench --bench fig4_top50_ratio
+//! ```
+
+mod common;
+
+use tuna::coordinator::Coordinator;
+use tuna::metrics;
+
+fn main() {
+    let k = 50usize;
+    for kind in common::targets() {
+        let c = Coordinator::new(kind);
+        let mut entries = Vec::new();
+        for op in tuna::tir::ops::figure_op_suite() {
+            let ratio = metrics::topk_sweep_ratio(&c, &op, k, common::trials());
+            eprintln!("  [{kind:?}] {op}: {ratio:.3}");
+            entries.push((op.to_string(), ratio));
+        }
+        println!(
+            "{}",
+            metrics::figure_topk(
+                &format!("Figure 4: top-{k} performance ratio — {}", kind.display_name()),
+                &entries
+            )
+        );
+    }
+}

@@ -1,0 +1,37 @@
+//! Table I — entire-network inference latency per target, for
+//! {Framework, AutoTVM Partial, AutoTVM Full, Tuna}.
+//!
+//! Reproduces the paper's Table I(a-e) shape: Tuna within ~±10% of
+//! AutoTVM-Full, far ahead of AutoTVM-Partial at equal compile budget,
+//! and ahead of the Framework row on most cells.
+//!
+//! ```bash
+//! cargo bench --bench table1_network_latency
+//! TUNA_BENCH_FAST=1 TUNA_BENCH_NETS=bert_base cargo bench --bench table1_network_latency
+//! ```
+
+mod common;
+
+fn main() {
+    for kind in common::targets() {
+        let nets = common::networks();
+        let results = common::run_all_strategies(kind, &nets);
+        let (names, displays) = common::names_displays(&nets);
+        println!("{}", tuna::metrics::table1(kind, &results, &names, &displays));
+
+        // paper-shape assertions (soft: printed, not panicking, so partial
+        // runs still emit their tables)
+        for net in &names {
+            let tuna = &results["Tuna"][*net];
+            let full = &results["AutoTVM Full"][*net];
+            let partial = &results["AutoTVM Partial"][*net];
+            let ratio_full = full.latency_s / tuna.latency_s;
+            let ratio_partial = partial.latency_s / tuna.latency_s;
+            println!(
+                "  {net}: tuna/full retained {:.1}%  partial-speedup {:.2}x",
+                ratio_full * 100.0,
+                ratio_partial
+            );
+        }
+    }
+}

@@ -1,0 +1,32 @@
+//! Table II — entire-network compilation time, AutoTVM vs Tuna.
+//!
+//! AutoTVM's cost = host wall + *virtual device seconds* (compile + RPC +
+//! timed repeats per measurement, sequential device); Tuna's cost = host
+//! wall only. The paper's headline: up to 339× compile-time speedup.
+//!
+//! ```bash
+//! cargo bench --bench table2_compile_time
+//! ```
+
+mod common;
+
+fn main() {
+    for kind in common::targets() {
+        let nets = common::networks();
+        let results = common::run_all_strategies(kind, &nets);
+        let (names, displays) = common::names_displays(&nets);
+        println!("{}", tuna::metrics::table2(kind, &results, &names, &displays));
+
+        for net in &names {
+            let tuna = &results["Tuna"][*net];
+            let full = &results["AutoTVM Full"][*net];
+            println!(
+                "  {net}: tuna {:.2}s (device 0s) vs autotvm {:.2}s (device {:.2}s) -> {:.0}x",
+                tuna.compile_seconds(),
+                full.compile_seconds(),
+                full.device_s,
+                full.compile_seconds() / tuna.compile_seconds().max(1e-9)
+            );
+        }
+    }
+}

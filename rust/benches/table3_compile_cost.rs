@@ -1,0 +1,37 @@
+//! Table III — compilation cost in dollars (cloud targets only:
+//! c5.9xlarge $1.53/hr, m6g.4xlarge $0.616/hr, p3.2xlarge $3.06/hr).
+//!
+//! cost = compile_seconds / 3600 × instance price. The paper's claim:
+//! Tuna reduces compile cost to ~1.1% of AutoTVM's.
+//!
+//! ```bash
+//! cargo bench --bench table3_compile_cost
+//! ```
+
+mod common;
+
+fn main() {
+    for kind in common::targets() {
+        if kind.dollars_per_hour().is_none() {
+            println!("(skipping {} — edge device, no cloud price)\n", kind.display_name());
+            continue;
+        }
+        let nets = common::networks();
+        let results = common::run_all_strategies(kind, &nets);
+        let (names, displays) = common::names_displays(&nets);
+        if let Some(t3) = tuna::metrics::table3(kind, &results, &names, &displays) {
+            println!("{t3}");
+        }
+        // cost-fraction summary
+        let mut tuna_total = 0.0;
+        let mut atvm_total = 0.0;
+        for net in &names {
+            tuna_total += results["Tuna"][*net].compile_seconds();
+            atvm_total += results["AutoTVM Full"][*net].compile_seconds();
+        }
+        println!(
+            "  Tuna cost fraction: {:.2}% of AutoTVM (paper: ~1.1%)\n",
+            tuna_total / atvm_total * 100.0
+        );
+    }
+}

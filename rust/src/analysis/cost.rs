@@ -1,0 +1,244 @@
+//! The linear hardware cost model: `score = a₀f₀ + a₁f₁ + … + aₙfₙ`.
+//!
+//! Features come from the joint IR/assembly analyses in this module; the
+//! coefficients are per-architecture, derived from instruction latency
+//! tables and refined by NNLS against microbenchmark profiles (the paper's
+//! "hardware instruction latency and empirical profiling data"). The model
+//! predicts *relative* performance — its job is to rank the candidates of
+//! a schedule search, not to forecast wall-clock.
+
+use super::{cache, gpu_ptx, gpu_tlp, ilp, loop_map, simd_count};
+use crate::codegen;
+use crate::isa::march::{GpuArch, Target};
+use crate::isa::{AsmProgram, MicroArch, TargetKind};
+use crate::tir::{ops::OpSpec, TirFunc};
+use crate::transform::{self, ScheduleConfig};
+
+
+/// CPU feature names (order fixed — coefficients index into it).
+pub const CPU_FEATURES: [&str; 7] = [
+    "simd_fma",
+    "simd_mem",
+    "scalar_mem",
+    "scalar_alu",
+    "loop_control",
+    "l1_dmov_lines",
+    "ilp_cycles",
+];
+
+/// GPU feature names.
+pub const GPU_FEATURES: [&str; 6] = [
+    "compute_cycles",
+    "mem_stall",
+    "sm_starvation",
+    "bank_conflict",
+    "low_occupancy",
+    "barriers",
+];
+
+/// A named feature vector.
+#[derive(Debug, Clone)]
+pub struct FeatureVector {
+    pub values: Vec<f64>,
+}
+
+impl FeatureVector {
+    pub fn dim(&self) -> usize {
+        self.values.len()
+    }
+}
+
+/// Extract CPU features from the scheduled IR + lowered assembly.
+pub fn extract_cpu(f: &TirFunc, prog: &AsmProgram, march: &MicroArch) -> FeatureVector {
+    let lm = loop_map::map_loops(f, prog);
+    let counts = simd_count::count(prog, &lm);
+    let l1_elems = (march.l1d.size_bytes / 4) as i64;
+    let ca = cache::analyze(f, l1_elems);
+    let ilp_cost = ilp::program_cost(prog, &lm, march);
+
+    // parallel division: outer Parallel iterations spread over cores
+    let par = (prog.parallel_extent.min(march.num_cores as i64)).max(1) as f64;
+    let line_elems = (march.l1d.line_bytes / 4) as f64;
+    let values = vec![
+        counts.vfma as f64 / par,
+        (counts.vload + counts.vstore + counts.valu) as f64 / par,
+        (counts.sload + counts.sstore) as f64 / par,
+        (counts.salu + counts.lea) as f64 / par,
+        counts.control as f64 / par,
+        ca.est_misses(line_elems) / par,
+        ilp_cost / par,
+    ];
+    FeatureVector { values }
+}
+
+/// Extract GPU features.
+pub fn extract_gpu(f: &TirFunc, prog: &AsmProgram, gpu: &GpuArch) -> FeatureVector {
+    let ptx = gpu_ptx::analyze(prog, gpu);
+    let tlp = gpu_tlp::analyze(f, prog, &ptx, gpu);
+    let launch = prog.launch.expect("gpu launch");
+    let total_threads = launch.num_blocks() as f64 * launch.threads_per_block() as f64;
+    let lanes = (gpu.num_sms * gpu.cores_per_sm) as f64;
+
+    // compute-bound term: total thread-cycles over the machine's lanes
+    let compute = ptx.thread_cycles * total_threads / lanes;
+    let mem_stall =
+        (ptx.ld_global + ptx.st_global) as f64 * tlp.mem_stall_per_op * total_threads / lanes
+            / 32.0; // stalls are per warp, not per thread
+    let starvation = compute * (tlp.sm_starvation - 1.0);
+    let smem_ops = (ptx.ld_shared + ptx.st_shared) as f64;
+    let bank = smem_ops * (tlp.bank_conflict_factor - 1.0) * total_threads / lanes;
+    let low_occ = compute * (1.0 - tlp.occupancy);
+    let barriers = ptx.bar_sync as f64 * tlp.waves * gpu.ptx_cost(crate::isa::Opcode::PtxBarSync);
+
+    FeatureVector {
+        values: vec![compute, mem_stall, starvation, bank, low_occ, barriers],
+    }
+}
+
+/// The per-architecture linear model.
+#[derive(Debug, Clone)]
+pub struct CostModel {
+    pub kind: TargetKind,
+    target: Target,
+    pub coeffs: Vec<f64>,
+}
+
+impl CostModel {
+    /// Model with latency-table-derived default coefficients (usable
+    /// before calibration; calibration replaces them).
+    pub fn with_default_coeffs(kind: TargetKind) -> Self {
+        let target = kind.build();
+        let coeffs = default_coeffs(&target);
+        CostModel { kind, target, coeffs }
+    }
+
+    /// Model with explicit (calibrated) coefficients.
+    pub fn with_coeffs(kind: TargetKind, coeffs: Vec<f64>) -> Self {
+        CostModel { kind, target: kind.build(), coeffs }
+    }
+
+    pub fn target(&self) -> &Target {
+        &self.target
+    }
+
+    /// `score = Σ aᵢ·fᵢ` — lower is better (pseudo-cycles).
+    pub fn score(&self, fv: &FeatureVector) -> f64 {
+        self.coeffs.iter().zip(&fv.values).map(|(a, f)| a * f).sum()
+    }
+
+    /// Lower a (op, config) and extract its features.
+    pub fn features(&self, op: &OpSpec, cfg: &ScheduleConfig) -> FeatureVector {
+        let f = transform::apply(op, self.kind, cfg);
+        match &self.target {
+            Target::Cpu(m) => {
+                let prog = codegen::lower_cpu(&f, m);
+                extract_cpu(&f, &prog, m)
+            }
+            Target::Gpu(g) => {
+                let prog = codegen::lower_gpu(&f, g);
+                extract_gpu(&f, &prog, g)
+            }
+        }
+    }
+
+    /// End-to-end static prediction for one schedule candidate.
+    pub fn predict(&self, op: &OpSpec, cfg: &ScheduleConfig) -> f64 {
+        self.score(&self.features(op, cfg))
+    }
+
+    /// Fit coefficients by non-negative least squares against measured
+    /// latencies (in cycles) of calibration samples.
+    pub fn calibrate(&mut self, samples: &[(FeatureVector, f64)]) {
+        let x: Vec<Vec<f64>> = samples.iter().map(|(f, _)| f.values.clone()).collect();
+        let y: Vec<f64> = samples.iter().map(|(_, c)| *c).collect();
+        let w = crate::util::stats::nnls_fit(&x, &y, 1e-3, 400);
+        // guard: a degenerate fit (all zeros) keeps the defaults
+        if w.iter().any(|&c| c > 0.0) {
+            self.coeffs = w;
+        }
+    }
+}
+
+/// Latency-table-derived initial coefficients.
+fn default_coeffs(target: &Target) -> Vec<f64> {
+    match target {
+        Target::Cpu(m) => vec![
+            1.0 / m.fma_units as f64,              // fma reciprocal throughput
+            1.0 / m.load_units as f64,             // vector memory
+            1.0 / m.load_units as f64,             // scalar memory
+            1.0 / (m.issue_width as f64 - 1.0),    // scalar ALU
+            0.5,                                   // loop control
+            m.l2.latency as f64,                   // per L1 miss (hits in L2)
+            0.35,                                  // ILP-scheduled cycles blend
+        ],
+        Target::Gpu(_) => vec![
+            1.0,  // compute cycles
+            1.0,  // memory stalls
+            1.0,  // starvation
+            2.0,  // bank-conflict serialization
+            0.3,  // low occupancy
+            1.0,  // barriers
+        ],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cpu_features_have_fixed_dim() {
+        let cm = CostModel::with_default_coeffs(TargetKind::XeonPlatinum8124M);
+        let op = OpSpec::Matmul { m: 64, n: 64, k: 64 };
+        let space = transform::config_space(&op, cm.kind);
+        let fv = cm.features(&op, &space.default_config());
+        assert_eq!(fv.dim(), CPU_FEATURES.len());
+        assert!(fv.values.iter().all(|v| v.is_finite() && *v >= 0.0));
+    }
+
+    #[test]
+    fn gpu_features_have_fixed_dim() {
+        let cm = CostModel::with_default_coeffs(TargetKind::TeslaV100);
+        let op = OpSpec::Matmul { m: 128, n: 128, k: 64 };
+        let space = transform::config_space(&op, cm.kind);
+        let fv = cm.features(&op, &space.default_config());
+        assert_eq!(fv.dim(), GPU_FEATURES.len());
+        assert!(fv.values.iter().all(|v| v.is_finite() && *v >= 0.0));
+    }
+
+    #[test]
+    fn score_positive_and_discriminative() {
+        let cm = CostModel::with_default_coeffs(TargetKind::Graviton2);
+        let op = OpSpec::Matmul { m: 128, n: 128, k: 128 };
+        let space = transform::config_space(&op, cm.kind);
+        let mut scores = Vec::new();
+        for idx in 0..space.size().min(64) {
+            scores.push(cm.predict(&op, &space.from_index(idx)));
+        }
+        assert!(scores.iter().all(|s| *s > 0.0));
+        let min = scores.iter().cloned().fold(f64::MAX, f64::min);
+        let max = scores.iter().cloned().fold(0.0f64, f64::max);
+        assert!(max / min > 2.0, "model cannot discriminate: {min}..{max}");
+    }
+
+    #[test]
+    fn calibration_improves_or_keeps_fit() {
+        let mut cm = CostModel::with_default_coeffs(TargetKind::Graviton2);
+        // synthetic ground truth: 2*f0 + 10*f5
+        let op = OpSpec::Matmul { m: 32, n: 32, k: 32 };
+        let space = transform::config_space(&op, cm.kind);
+        let mut samples = Vec::new();
+        for idx in 0..space.size().min(40) {
+            let fv = cm.features(&op, &space.from_index(idx));
+            let y = 2.0 * fv.values[0] + 10.0 * fv.values[5] + 1.0;
+            samples.push((fv, y));
+        }
+        cm.calibrate(&samples);
+        assert!(cm.coeffs.iter().all(|&c| c >= 0.0));
+        // fitted model correlates strongly with the synthetic truth
+        let preds: Vec<f64> = samples.iter().map(|(f, _)| cm.score(f)).collect();
+        let ys: Vec<f64> = samples.iter().map(|(_, y)| *y).collect();
+        let r = crate::util::stats::pearson(&preds, &ys);
+        assert!(r > 0.95, "calibration fit r={r}");
+    }
+}

@@ -1,0 +1,240 @@
+//! GPU thread-level-parallelism features (paper §III-B-2).
+//!
+//! * **Workload per thread** — Eq. (3) cycles from [`super::gpu_ptx`].
+//! * **SM occupancy** — resident blocks per SM from the `ptxas`-style
+//!   register/shared-memory report, with a penalty when the grid is too
+//!   small to keep every SM busy.
+//! * **Warp latency hiding** — more resident warps per SM give the warp
+//!   scheduler more chances to hide global-memory latency; the feature is
+//!   the expected stall fraction of memory operations.
+//! * **Shared-memory bank conflicts** — the access indices of all 32
+//!   threads of the first warp are *numerically evaluated from the IR* for
+//!   every shared-memory access; the worst per-bank multiplicity (with the
+//!   broadcast exception) scales the effective cost of shared-memory ops.
+
+use super::gpu_ptx::PtxAnalysis;
+use crate::isa::instr::LaunchConfig;
+use crate::isa::march::GpuArch;
+use crate::isa::AsmProgram;
+use crate::tir::{LoopKind, MemSpace, TirFunc, TirNode};
+use std::collections::HashMap;
+
+/// TLP feature bundle.
+#[derive(Debug, Clone)]
+pub struct TlpFeatures {
+    /// resident blocks per SM (occupancy limiter).
+    pub blocks_per_sm: u32,
+    /// resident warps per SM.
+    pub warps_per_sm: u32,
+    /// occupancy ratio in [0,1].
+    pub occupancy: f64,
+    /// multiplicative penalty (>1) when #blocks < #SMs.
+    pub sm_starvation: f64,
+    /// number of scheduling waves: ceil(blocks / (blocks_per_sm * sms)).
+    pub waves: f64,
+    /// expected stall cycles per global-memory op after latency hiding.
+    pub mem_stall_per_op: f64,
+    /// average shared-memory bank-conflict factor (1 = conflict-free).
+    pub bank_conflict_factor: f64,
+}
+
+/// Compute the TLP features for a lowered kernel.
+pub fn analyze(f: &TirFunc, prog: &AsmProgram, ptx: &PtxAnalysis, gpu: &GpuArch) -> TlpFeatures {
+    let launch = prog.launch.expect("GPU program must carry a launch config");
+    let tpb = launch.threads_per_block().max(1);
+    let blocks = launch.num_blocks().max(1);
+
+    let bpsm = gpu.blocks_per_sm(tpb, prog.regs_used, prog.shared_bytes).max(1);
+    let warps_per_sm = bpsm * (tpb + gpu.warp_size - 1) / gpu.warp_size;
+    let max_warps = gpu.max_threads_per_sm / gpu.warp_size;
+    let occupancy = (warps_per_sm as f64 / max_warps as f64).min(1.0);
+
+    // SM starvation: fewer blocks than SMs leaves silicon idle.
+    let sm_starvation = if blocks < gpu.num_sms as u64 {
+        gpu.num_sms as f64 / blocks as f64
+    } else {
+        1.0
+    };
+    let waves = (blocks as f64 / (bpsm as f64 * gpu.num_sms as f64)).ceil().max(1.0);
+
+    // Warp latency hiding: a global access stalls `gmem_latency` cycles;
+    // with W resident warps each issuing ~1 instr per `issue_interval`,
+    // the scheduler hides up to W * interval cycles between issue and use.
+    let total_ops = (ptx.fma
+        + ptx.ld_global
+        + ptx.st_global
+        + ptx.ld_shared
+        + ptx.st_shared
+        + ptx.other) as f64;
+    let mem_ops = (ptx.ld_global + ptx.st_global).max(1) as f64;
+    let instrs_between_mem = (total_ops / mem_ops).max(1.0);
+    let hidden = warps_per_sm as f64 * instrs_between_mem * 4.0;
+    let mem_stall_per_op = (gpu.gmem_latency as f64 - hidden).max(0.0);
+
+    let bank_conflict_factor = bank_conflicts(f, &launch, gpu);
+
+    TlpFeatures {
+        blocks_per_sm: bpsm,
+        warps_per_sm,
+        occupancy,
+        sm_starvation,
+        waves,
+        mem_stall_per_op,
+        bank_conflict_factor,
+    }
+}
+
+/// Numerically evaluate shared-memory access indices for the first warp
+/// (threads 0..32 of block (0,0)) straight from the IR, and compute the
+/// average conflict factor over all shared accesses (paper: ratio between
+/// requested and actual shared-memory throughput).
+pub fn bank_conflicts(f: &TirFunc, launch: &LaunchConfig, gpu: &GpuArch) -> f64 {
+    let bx = launch.block.0.max(1);
+    let mut factors = Vec::new();
+    // walk the tree, tracking gpu thread-bound vars; non-bound loop vars
+    // are fixed at 0 and 1 (two samples) to catch stride patterns.
+    let mut bind: HashMap<u32, char> = HashMap::new();
+    collect_bindings(&f.body, &mut bind);
+
+    for (stack, stmt) in f.statements() {
+        for a in stmt.accesses() {
+            let buf = &f.buffers[a.buffer as usize];
+            if buf.space != MemSpace::Shared {
+                continue;
+            }
+            // linearized element index as a function of tid
+            let mut worst = 1.0f64;
+            for sample in 0..2i64 {
+                let mut banks: HashMap<i64, Vec<i64>> = HashMap::new();
+                for t in 0..gpu.warp_size as i64 {
+                    let tx = t % bx as i64;
+                    let ty = t / bx as i64;
+                    let env = |v: u32| -> i64 {
+                        match bind.get(&v) {
+                            Some('x') => tx,
+                            Some('y') => ty,
+                            Some('b') => 0,
+                            _ => {
+                                // serial/unrolled var: sample value
+                                if stack.iter().any(|l| l.var == v) {
+                                    sample
+                                } else {
+                                    0
+                                }
+                            }
+                        }
+                    };
+                    let mut lin = 0i64;
+                    let mut rowstride = 1i64;
+                    for (dim, idx) in a.indices.iter().enumerate().rev() {
+                        lin += idx.eval(&env) * rowstride;
+                        rowstride *= buf.shape[dim];
+                    }
+                    let bank = lin.rem_euclid(gpu.smem_banks as i64);
+                    banks.entry(bank).or_default().push(lin);
+                }
+                // conflict factor: max over banks of distinct addresses
+                // (same address broadcasts -> counts once)
+                let fac = banks
+                    .values()
+                    .map(|addrs| {
+                        let mut d = addrs.clone();
+                        d.sort_unstable();
+                        d.dedup();
+                        d.len() as f64
+                    })
+                    .fold(1.0f64, f64::max);
+                worst = worst.max(fac);
+            }
+            factors.push(worst);
+        }
+    }
+    if factors.is_empty() {
+        1.0
+    } else {
+        factors.iter().sum::<f64>() / factors.len() as f64
+    }
+}
+
+fn collect_bindings(nodes: &[TirNode], bind: &mut HashMap<u32, char>) {
+    for n in nodes {
+        if let TirNode::Loop(l) = n {
+            match l.kind {
+                LoopKind::GpuThreadX => {
+                    bind.insert(l.var, 'x');
+                }
+                LoopKind::GpuThreadY => {
+                    bind.insert(l.var, 'y');
+                }
+                LoopKind::GpuBlockX | LoopKind::GpuBlockY | LoopKind::GpuBlockZ => {
+                    bind.insert(l.var, 'b');
+                }
+                _ => {}
+            }
+            collect_bindings(&l.body, bind);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codegen;
+    use crate::isa::march::tesla_v100;
+    use crate::isa::TargetKind;
+    use crate::tir::ops::OpSpec;
+    use crate::transform;
+
+    fn features(op: &OpSpec, cfg_idx: u64) -> TlpFeatures {
+        let t = TargetKind::TeslaV100;
+        let s = transform::config_space(op, t);
+        let f = transform::apply(op, t, &s.from_index(cfg_idx));
+        let g = tesla_v100();
+        let prog = codegen::lower_gpu(&f, &g);
+        let ptx = super::super::gpu_ptx::analyze(&prog, &g);
+        analyze(&f, &prog, &ptx, &g)
+    }
+
+    #[test]
+    fn occupancy_in_unit_range() {
+        let t = features(&OpSpec::Matmul { m: 256, n: 256, k: 64 }, 0);
+        assert!(t.occupancy > 0.0 && t.occupancy <= 1.0);
+        assert!(t.blocks_per_sm >= 1);
+        assert!(t.waves >= 1.0);
+    }
+
+    #[test]
+    fn small_grid_gets_starvation_penalty() {
+        // tiny matmul -> few blocks -> starvation on 80-SM V100
+        let t = features(&OpSpec::Matmul { m: 32, n: 32, k: 32 }, 0);
+        assert!(t.sm_starvation > 1.0, "starvation {}", t.sm_starvation);
+    }
+
+    #[test]
+    fn bank_conflict_factor_at_least_one() {
+        let op = OpSpec::Matmul { m: 128, n: 128, k: 64 };
+        let space = transform::config_space(&op, TargetKind::TeslaV100);
+        for idx in 0..space.size().min(12) {
+            let t = features(&op, idx);
+            assert!(t.bank_conflict_factor >= 1.0);
+            assert!(t.bank_conflict_factor <= 32.0);
+        }
+    }
+
+    #[test]
+    fn more_warps_hide_more_latency() {
+        // compare a config with small thread tiles (many threads/block)
+        // against one with large tiles (few threads): the small-tile one
+        // should stall less per memory op or equal.
+        let op = OpSpec::Matmul { m: 256, n: 256, k: 64 };
+        let space = transform::config_space(&op, TargetKind::TeslaV100);
+        let mut best_stall = f64::MAX;
+        let mut worst_stall: f64 = 0.0;
+        for idx in 0..space.size() {
+            let t = features(&op, idx);
+            best_stall = best_stall.min(t.mem_stall_per_op);
+            worst_stall = worst_stall.max(t.mem_stall_per_op);
+        }
+        assert!(best_stall <= worst_stall);
+    }
+}

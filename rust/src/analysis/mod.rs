@@ -1,0 +1,29 @@
+//! The static cost model — the paper's core contribution.
+//!
+//! Features are extracted jointly from the high-level loop IR and the
+//! lowered virtual assembly:
+//!
+//! * [`loop_map`] — Algorithm 1: match IR loops with assembly basic blocks
+//!   by iteration boundary, recovering per-block trip counts.
+//! * [`simd_count`] — significant-SIMD-instruction totals over the map.
+//! * [`cache`] — Algorithm 2: footprint/data-movement model over the TIR
+//!   tree with integer-set cardinalities.
+//! * [`ilp`] — the simplified out-of-order scheduler estimating
+//!   instruction-level parallelism per basic block.
+//! * [`gpu_ptx`] — Algorithm 3: PTX loop-iteration recovery from register
+//!   init/update maps, and Eq. (3) per-thread cycle totals.
+//! * [`gpu_tlp`] — SM occupancy, warp latency hiding, shared-memory bank
+//!   conflicts (evaluated numerically over the first warp, from the IR).
+//! * [`cost`] — the linear per-architecture model `score = Σ aᵢ·fᵢ` and
+//!   its calibration against microbenchmarks.
+
+pub mod cache;
+pub mod cost;
+pub mod gpu_ptx;
+pub mod gpu_tlp;
+pub mod ilp;
+pub mod loop_map;
+pub mod simd_count;
+
+pub use cost::{CostModel, FeatureVector};
+pub use loop_map::LoopMap;

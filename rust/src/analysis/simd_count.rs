@@ -1,0 +1,112 @@
+//! Significant-instruction counting over the Algorithm-1 loop map.
+//!
+//! The paper: "For Intel AVX instruction set, `vfmadd` and `vmov` are the
+//! most common instructions in conv2d and dense operators, while for
+//! AARCH64 Neon `fmla`, `ld` and `st` are used." We total each class as
+//! instruction *executions* (static count × mapped trip count).
+
+use super::loop_map::LoopMap;
+use crate::isa::{AsmProgram, Opcode};
+
+/// Executed-instruction totals by class.
+#[derive(Debug, Clone, Default)]
+pub struct SimdCounts {
+    /// vfmadd / fmla executions.
+    pub vfma: u64,
+    /// vector arithmetic other than fma (vadd/vmul/vmax).
+    pub valu: u64,
+    /// vector loads (incl. broadcasts).
+    pub vload: u64,
+    /// vector stores.
+    pub vstore: u64,
+    /// scalar memory ops (gather fallbacks, tails, spills).
+    pub sload: u64,
+    pub sstore: u64,
+    /// scalar fma/mul/add arithmetic.
+    pub salu: u64,
+    /// address arithmetic (lea).
+    pub lea: u64,
+    /// loop control (mov/add/cmp/jcc of counters).
+    pub control: u64,
+}
+
+impl SimdCounts {
+    /// All significant SIMD executions (the paper's headline feature).
+    pub fn simd_total(&self) -> u64 {
+        self.vfma + self.valu + self.vload + self.vstore
+    }
+
+    /// All memory-touching executions.
+    pub fn mem_total(&self) -> u64 {
+        self.vload + self.vstore + self.sload + self.sstore
+    }
+}
+
+/// Count instruction executions using the loop map's block trips.
+pub fn count(prog: &AsmProgram, lm: &LoopMap) -> SimdCounts {
+    let mut c = SimdCounts::default();
+    for (i, b) in prog.blocks.iter().enumerate() {
+        let trip = lm.block_trips[i];
+        for ins in &b.instrs {
+            match ins.op {
+                Opcode::VFma => c.vfma += trip,
+                Opcode::VAdd | Opcode::VMul | Opcode::VMax => c.valu += trip,
+                Opcode::VLoad | Opcode::VBroadcast => c.vload += trip,
+                Opcode::VStore => c.vstore += trip,
+                Opcode::SLoad => c.sload += trip,
+                Opcode::SStore => c.sstore += trip,
+                Opcode::SFma | Opcode::SMul => c.salu += trip,
+                Opcode::Lea => c.lea += trip,
+                Opcode::SAdd | Opcode::Mov | Opcode::Cmp | Opcode::Jcc | Opcode::Jmp => {
+                    c.control += trip
+                }
+                _ => {}
+            }
+        }
+    }
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::loop_map;
+    use crate::codegen;
+    use crate::isa::march::xeon_8124m;
+    use crate::isa::TargetKind;
+    use crate::tir::ops::OpSpec;
+    use crate::transform;
+
+    #[test]
+    fn vectorized_config_prefers_vector_ops() {
+        let op = OpSpec::Matmul { m: 64, n: 64, k: 64 };
+        let t = TargetKind::XeonPlatinum8124M;
+        let space = transform::config_space(&op, t);
+        // find configs: tile_n = 1 (scalar) vs tile_n = 16 (vector)
+        let mut scalar_cfg = None;
+        let mut vector_cfg = None;
+        for idx in 0..space.size() {
+            let c = space.from_index(idx);
+            if space.get_int(&c, "tile_n") == 1 && scalar_cfg.is_none() {
+                scalar_cfg = Some(c.clone());
+            }
+            if space.get_int(&c, "tile_n") == 16 && vector_cfg.is_none() {
+                vector_cfg = Some(c.clone());
+            }
+        }
+        let m = xeon_8124m();
+        let count_for = |cfg| {
+            let f = transform::apply(&op, t, &cfg);
+            let prog = codegen::lower_cpu(&f, &m);
+            let lm = loop_map::map_loops(&f, &prog);
+            count(&prog, &lm)
+        };
+        let sc = count_for(scalar_cfg.unwrap());
+        let vc = count_for(vector_cfg.unwrap());
+        assert_eq!(sc.vfma, 0, "tile_n=1 should be scalar");
+        assert!(sc.salu > 0);
+        assert!(vc.vfma > 0, "tile_n=16 should vectorize");
+        // vectorized total executed instructions far fewer
+        assert!(vc.simd_total() + vc.salu < (sc.salu + sc.simd_total()) / 2);
+    }
+}

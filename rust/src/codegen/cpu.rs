@@ -1,0 +1,665 @@
+//! CPU backend: scheduled TIR → virtual AVX/NEON assembly.
+//!
+//! Faithful-to-LLVM behaviours that matter for the paper's analysis:
+//!
+//! * do-while loop shape — preheader `mov ctr,0`; body block; latch
+//!   `add/cmp/jcc` back to the body label (so loop blocks are exactly the
+//!   "branch to a label above" pattern Algorithm 1 detects);
+//! * `Unroll` loops vanish (bodies duplicated, indices constant-folded);
+//! * `Vectorize` loops become packed ops (`vmovups`/`vbroadcast`/`vfmadd`)
+//!   plus a scalar tail when the extent is not a lane multiple;
+//! * accumulators are register-promoted out of reduction loops (bounded by
+//!   the architectural register count — excess groups stay in memory);
+//! * loop-invariant loads are hoisted to the loop level they depend on;
+//! * address arithmetic (`lea`) is CSE'd per loop level with constant
+//!   offsets folded into the memory operand.
+
+use crate::isa::instr::{AddrSpace, TensorDecl};
+use crate::isa::{AsmProgram, BasicBlock, Instr, MemRef, MicroArch, Opcode, Reg};
+use crate::isets::Affine;
+use crate::tir::{Access, BufferDecl, LoopKind, LoopNode, Stmt, StmtOp, TirFunc, TirNode};
+use std::collections::HashMap;
+
+/// Signature of an affine expression's variable part (sorted terms).
+type TermsKey = Vec<(u32, i64)>;
+
+struct LevelCache {
+    /// address CSE: (tensor, terms) -> (reg, konst captured at creation)
+    addr: HashMap<(u16, TermsKey), (Reg, i64)>,
+    /// loaded-value CSE: (tensor, terms, konst, width) -> reg
+    value: HashMap<(u16, TermsKey, i64, u32), Reg>,
+}
+
+impl LevelCache {
+    fn new() -> Self {
+        LevelCache { addr: HashMap::new(), value: HashMap::new() }
+    }
+}
+
+struct LoopCtx {
+    var: u32,
+    body_label: u32,
+    /// index into prog.blocks of the loop's body (entry) block.
+    body_block: usize,
+    extent: i64,
+    counter: Reg,
+    /// instructions to append right after this loop closes (acc stores).
+    pending_after: Vec<Instr>,
+}
+
+pub struct CpuCodegen<'a> {
+    march: &'a MicroArch,
+    prog: AsmProgram,
+    next_label: u32,
+    next_gpr: u16,
+    next_vec: u16,
+    stack: Vec<LoopCtx>,
+    caches: Vec<LevelCache>, // caches[0] = function level, then one per loop
+    const_env: HashMap<u32, i64>,
+    max_live_vec: u32,
+}
+
+impl<'a> CpuCodegen<'a> {
+    pub fn new(march: &'a MicroArch) -> Self {
+        CpuCodegen {
+            march,
+            prog: AsmProgram::new(),
+            next_label: 0,
+            next_gpr: 0,
+            next_vec: 0,
+            stack: Vec::new(),
+            caches: vec![LevelCache::new()],
+            const_env: HashMap::new(),
+            max_live_vec: 0,
+        }
+    }
+
+    pub fn lower(mut self, f: &TirFunc) -> AsmProgram {
+        // tensor table with page-aligned simulated base addresses
+        let mut base = 0x10_0000u64;
+        for b in &f.buffers {
+            self.prog.tensors.push(TensorDecl {
+                name: b.name.clone(),
+                elems: b.elems(),
+                elem_bytes: b.elem_bytes,
+                base_addr: base,
+            });
+            base += (b.bytes() as u64 + 4095) / 4096 * 4096 + 4096;
+        }
+        self.prog.parallel_extent = outer_parallel_extent(&f.body);
+        self.new_block();
+        self.gen_seq(&f.body, f);
+        self.prog.regs_used = self.max_live_vec.min(self.march.isa.num_simd_regs() as u32);
+        self.prog
+    }
+
+    // ---- block management ----
+
+    fn new_block(&mut self) -> usize {
+        let label = self.next_label;
+        self.next_label += 1;
+        self.prog.blocks.push(BasicBlock::new(label));
+        self.prog.blocks.len() - 1
+    }
+
+    fn cur(&mut self) -> &mut BasicBlock {
+        self.prog.blocks.last_mut().unwrap()
+    }
+
+    fn emit(&mut self, i: Instr) {
+        self.cur().instrs.push(i);
+    }
+
+    /// Emit into the block of loop level `level` (0 = function level).
+    fn emit_at(&mut self, level: usize, i: Instr) {
+        if level == 0 {
+            self.prog.blocks[0].instrs.push(i);
+        } else {
+            let idx = self.stack[level - 1].body_block;
+            self.prog.blocks[idx].instrs.push(i);
+        }
+    }
+
+    fn fresh_gpr(&mut self) -> Reg {
+        let r = Reg::Gpr(self.next_gpr);
+        self.next_gpr += 1;
+        r
+    }
+
+    fn fresh_vec(&mut self) -> Reg {
+        let r = Reg::Vec(self.next_vec);
+        self.next_vec += 1;
+        self.max_live_vec = self.max_live_vec.max(self.live_vecs() + 1);
+        r
+    }
+
+    /// Currently-live vector registers = value-cache entries (each holds a
+    /// loaded value or promoted accumulator across its loop level).
+    fn live_vecs(&self) -> u32 {
+        self.caches.iter().map(|c| c.value.len() as u32).sum()
+    }
+
+    // ---- tree walk ----
+
+    fn gen_seq(&mut self, nodes: &[TirNode], f: &TirFunc) {
+        for n in nodes {
+            match n {
+                TirNode::Loop(l) => self.gen_loop(l, f),
+                TirNode::Stmt(s) => self.gen_stmt(s, None, f),
+            }
+        }
+    }
+
+    fn gen_loop(&mut self, l: &LoopNode, f: &TirFunc) {
+        match l.kind {
+            LoopKind::Unroll => {
+                // full unroll: duplicate the body with the var pinned
+                for v in 0..l.extent {
+                    self.const_env.insert(l.var, v);
+                    self.gen_seq(&l.body, f);
+                }
+                self.const_env.remove(&l.var);
+            }
+            LoopKind::Vectorize if is_innermost_stmt_loop(l) => {
+                // consumed by statement emission
+                if let TirNode::Stmt(s) = &l.body[0] {
+                    self.gen_stmt(s, Some(l), f);
+                }
+            }
+            _ => {
+                // Serial / Parallel / (Vectorize fallback): real loop
+                let counter = self.fresh_gpr();
+                self.emit(Instr::new(Opcode::Mov).dst(counter).imm(0));
+                let body_idx = self.new_block();
+                let body_label = self.prog.blocks[body_idx].label;
+                self.stack.push(LoopCtx {
+                    var: l.var,
+                    body_label,
+                    body_block: body_idx,
+                    extent: l.extent,
+                    counter,
+                    pending_after: Vec::new(),
+                });
+                self.caches.push(LevelCache::new());
+                self.gen_seq(&l.body, f);
+                // latch
+                self.emit(Instr::new(Opcode::SAdd).dst(counter).src(counter).imm(1));
+                self.emit(Instr::new(Opcode::Cmp).src(counter).imm(l.extent));
+                self.emit(Instr::new(Opcode::Jcc).target(body_label));
+                let ctx = self.stack.pop().unwrap();
+                self.caches.pop();
+                self.new_block();
+                for i in ctx.pending_after {
+                    self.emit(i);
+                }
+            }
+        }
+    }
+
+    /// Current loop level (0 = function scope).
+    fn level(&self) -> usize {
+        self.stack.len()
+    }
+
+    /// Linearize an access into a single affine element-offset expression,
+    /// folding unrolled (pinned) vars into the constant.
+    fn linearize(&self, a: &Access, buf: &BufferDecl) -> Affine {
+        let mut lin = Affine::constant(0);
+        let mut rowstride = 1i64;
+        for (dim, idx) in a.indices.iter().enumerate().rev() {
+            let mut scaled = Affine::constant(idx.konst * rowstride);
+            for t in &idx.terms {
+                if let Some(&v) = self.const_env.get(&t.var) {
+                    scaled.konst += t.coeff * v * rowstride;
+                } else {
+                    scaled = scaled.add(&Affine::scaled(t.var, t.coeff * rowstride));
+                }
+            }
+            lin = lin.add(&scaled);
+            rowstride *= buf.shape[dim];
+        }
+        lin
+    }
+
+    /// Deepest loop level whose var appears in `terms` (0 if none).
+    fn dep_level(&self, terms: &TermsKey) -> usize {
+        for (i, ctx) in self.stack.iter().enumerate().rev() {
+            if terms.iter().any(|(v, _)| *v == ctx.var) {
+                return i + 1;
+            }
+        }
+        0
+    }
+
+    fn terms_key(lin: &Affine) -> TermsKey {
+        let mut t: TermsKey = lin.terms.iter().map(|t| (t.var, t.coeff)).collect();
+        t.sort_unstable();
+        t
+    }
+
+    /// Get (or create via `lea`) an address register for the variable part
+    /// of `lin`; returns (reg, byte_offset_to_add).
+    fn addr_reg(&mut self, tensor: u16, lin: &Affine, elem_bytes: u32) -> (Reg, i64) {
+        let key = Self::terms_key(lin);
+        let level = self.dep_level(&key);
+        if let Some(&(reg, base)) = self.caches[level].addr.get(&(tensor, key.clone())) {
+            return (reg, (lin.konst - base) * elem_bytes as i64);
+        }
+        let reg = self.fresh_gpr();
+        let mut ins = Instr::new(Opcode::Lea).dst(reg);
+        for (v, _) in &key {
+            if let Some(ctx) = self.stack.iter().find(|c| c.var == *v) {
+                ins = ins.src(ctx.counter);
+            }
+        }
+        ins = ins.imm(lin.konst);
+        self.emit_at(level, ins);
+        self.caches[level].addr.insert((tensor, key), (reg, lin.konst));
+        (reg, 0)
+    }
+
+    /// Emit (or reuse) a load of `lin` from `tensor`. `width` bytes.
+    /// `vector=true` emits VLoad/VBroadcast, else SLoad.
+    fn emit_load(&mut self, tensor: u16, lin: &Affine, width: u32, op: Opcode) -> Reg {
+        let key = Self::terms_key(lin);
+        let level = self.dep_level(&key);
+        let vkey = (tensor, key, lin.konst, width);
+        if let Some(&r) = self.caches[level].value.get(&vkey) {
+            return r;
+        }
+        let (areg, off) = self.addr_reg(tensor, lin, 4);
+        let dst = self.fresh_vec();
+        let mem = MemRef { tensor, space: AddrSpace::Global, addr_reg: areg, offset: off, width };
+        self.emit_at(level, Instr::new(op).dst(dst).mem(mem));
+        self.caches[level].value.insert(vkey, dst);
+        dst
+    }
+
+    fn emit_store(&mut self, tensor: u16, lin: &Affine, width: u32, src: Reg, op: Opcode) {
+        let (areg, off) = self.addr_reg(tensor, lin, 4);
+        let mem = MemRef { tensor, space: AddrSpace::Global, addr_reg: areg, offset: off, width };
+        self.emit(Instr::new(op).src(src).mem(mem));
+    }
+
+    // ---- statement emission ----
+
+    fn gen_stmt(&mut self, s: &Stmt, vec_loop: Option<&LoopNode>, f: &TirFunc) {
+        let lanes = self.march.isa.f32_lanes();
+        let compute_op = match s.op {
+            StmtOp::MulAdd => Some(Opcode::VFma),
+            StmtOp::Add => Some(Opcode::VAdd),
+            StmtOp::Max => Some(Opcode::VMax),
+            StmtOp::Copy | StmtOp::Zero => None,
+        };
+
+        // promotion: consecutive innermost loops whose vars are absent from
+        // the store index can hold the accumulator in registers.
+        let store_buf = &f.buffers[s.store.buffer as usize];
+        let store_lin = self.linearize(&s.store, store_buf);
+        let store_key = Self::terms_key(&store_lin);
+        let acc_level = self.dep_level(&store_key); // innermost level store depends on
+        let reduction = s.op == StmtOp::MulAdd || s.op == StmtOp::Max || s.op == StmtOp::Add;
+        let promote = reduction && acc_level < self.level();
+
+        match vec_loop {
+            Some(vl) => {
+                let e = vl.extent;
+                let full = e / lanes;
+                let tail = e % lanes;
+                // per-group emission
+                for g in 0..full {
+                    self.gen_vector_group(s, f, vl.var, g * lanes, lanes, promote, acc_level, compute_op);
+                }
+                for t in 0..tail {
+                    self.const_env.insert(vl.var, full * lanes + t);
+                    self.gen_scalar_instance(s, f, false, 0, compute_op);
+                    self.const_env.remove(&vl.var);
+                }
+            }
+            None => {
+                self.gen_scalar_instance(s, f, promote, acc_level, compute_op);
+            }
+        }
+    }
+
+    /// One SIMD group: lanes [lane0, lane0+lanes) of the vectorized var.
+    #[allow(clippy::too_many_arguments)]
+    fn gen_vector_group(
+        &mut self,
+        s: &Stmt,
+        f: &TirFunc,
+        vec_var: u32,
+        lane0: i64,
+        lanes: i64,
+        promote: bool,
+        acc_level: usize,
+        compute_op: Option<Opcode>,
+    ) {
+        let width = (lanes * 4) as u32;
+        // loads
+        let mut srcs = Vec::new();
+        for a in &s.loads {
+            let buf = &f.buffers[a.buffer as usize];
+            let lin = self.linearize(a, buf);
+            let vstride = lin.terms.iter().find(|t| t.var == vec_var).map(|t| t.coeff).unwrap_or(0);
+            let mut fixed = lin.clone();
+            fixed.terms.retain(|t| t.var != vec_var);
+            fixed.konst += vstride * lane0;
+            let r = if vstride == 0 {
+                self.emit_load(a.buffer, &fixed, 4, Opcode::VBroadcast)
+            } else if vstride == 1 {
+                self.emit_load(a.buffer, &fixed, width, Opcode::VLoad)
+            } else {
+                // strided gather: lanes scalar loads + one pack move
+                let mut last = Reg::Vec(0);
+                for l in 0..lanes {
+                    let mut e = fixed.clone();
+                    e.konst += vstride * l;
+                    last = self.emit_load(a.buffer, &e, 4, Opcode::SLoad);
+                }
+                let packed = self.fresh_vec();
+                self.emit(Instr::new(Opcode::Mov).dst(packed).src(last));
+                packed
+            };
+            srcs.push(r);
+        }
+        // accumulator / destination
+        let sbuf = &f.buffers[s.store.buffer as usize];
+        let slin = {
+            let lin = self.linearize(&s.store, sbuf);
+            let vstride = lin.terms.iter().find(|t| t.var == vec_var).map(|t| t.coeff).unwrap_or(0);
+            let mut fixed = lin.clone();
+            fixed.terms.retain(|t| t.var != vec_var);
+            fixed.konst += vstride * lane0;
+            fixed
+        };
+        match compute_op {
+            Some(op) => {
+                if promote {
+                    // acc register lives at acc_level; load/store emitted
+                    // there exactly once thanks to the value cache.
+                    let acc = self.promoted_acc(s.store.buffer, &slin, width, acc_level);
+                    let mut ins = Instr::new(op).dst(acc).src(acc);
+                    for r in srcs {
+                        ins = ins.src(r);
+                    }
+                    self.emit(ins);
+                } else {
+                    let acc = self.emit_load(s.store.buffer, &slin, width, Opcode::VLoad);
+                    let mut ins = Instr::new(op).dst(acc).src(acc);
+                    for r in srcs {
+                        ins = ins.src(r);
+                    }
+                    self.emit(ins);
+                    self.emit_store(s.store.buffer, &slin, width, acc, Opcode::VStore);
+                    self.invalidate_value(s.store.buffer, &slin, width);
+                }
+            }
+            None => {
+                // Copy / Zero
+                let src = if s.op == StmtOp::Zero {
+                    let z = self.fresh_vec();
+                    self.emit(Instr::new(Opcode::Mov).dst(z).imm(0));
+                    z
+                } else {
+                    srcs[0]
+                };
+                self.emit_store(s.store.buffer, &slin, width, src, Opcode::VStore);
+            }
+        }
+    }
+
+    fn gen_scalar_instance(
+        &mut self,
+        s: &Stmt,
+        f: &TirFunc,
+        promote: bool,
+        acc_level: usize,
+        compute_op: Option<Opcode>,
+    ) {
+        let scalar_op = match compute_op {
+            Some(Opcode::VFma) => Some(Opcode::SFma),
+            Some(Opcode::VAdd) | Some(Opcode::VMax) => Some(Opcode::SAdd),
+            _ => None,
+        };
+        let mut srcs = Vec::new();
+        for a in &s.loads {
+            let buf = &f.buffers[a.buffer as usize];
+            let lin = self.linearize(a, buf);
+            srcs.push(self.emit_load(a.buffer, &lin, 4, Opcode::SLoad));
+        }
+        let sbuf = &f.buffers[s.store.buffer as usize];
+        let slin = self.linearize(&s.store, sbuf);
+        match scalar_op {
+            Some(op) => {
+                if promote {
+                    let acc = self.promoted_scalar_acc(s.store.buffer, &slin, acc_level);
+                    let mut ins = Instr::new(op).dst(acc).src(acc);
+                    for r in srcs {
+                        ins = ins.src(r);
+                    }
+                    self.emit(ins);
+                } else {
+                    let acc = self.emit_load(s.store.buffer, &slin, 4, Opcode::SLoad);
+                    let mut ins = Instr::new(op).dst(acc).src(acc);
+                    for r in srcs {
+                        ins = ins.src(r);
+                    }
+                    self.emit(ins);
+                    self.emit_store(s.store.buffer, &slin, 4, acc, Opcode::SStore);
+                    self.invalidate_value(s.store.buffer, &slin, 4);
+                }
+            }
+            None => {
+                let src = if s.op == StmtOp::Zero {
+                    let z = self.fresh_gpr();
+                    self.emit(Instr::new(Opcode::Mov).dst(z).imm(0));
+                    z
+                } else {
+                    srcs[0]
+                };
+                self.emit_store(s.store.buffer, &slin, 4, src, Opcode::SStore);
+            }
+        }
+    }
+
+    /// Load the accumulator once at `acc_level` and schedule its store for
+    /// when the reduction loops close. The register is found via the value
+    /// cache so unrolled duplicates reuse it.
+    fn promoted_acc(&mut self, tensor: u16, lin: &Affine, width: u32, acc_level: usize) -> Reg {
+        let key = Self::terms_key(lin);
+        let vkey = (tensor, key, lin.konst, width);
+        if let Some(&r) = self.caches[acc_level].value.get(&vkey) {
+            return r;
+        }
+        // spill guard: too many live accumulator registers -> unpromoted
+        let budget = self.march.isa.num_simd_regs() as u32;
+        if self.live_vecs() + 2 >= budget {
+            return self.emit_load(tensor, lin, width, Opcode::VLoad);
+        }
+        let (areg, off) = self.addr_reg(tensor, lin, 4);
+        let dst = self.fresh_vec();
+        let mem =
+            MemRef { tensor, space: AddrSpace::Global, addr_reg: areg, offset: off, width };
+        self.emit_at(acc_level, Instr::new(Opcode::VLoad).dst(dst).mem(mem.clone()));
+        self.caches[acc_level].value.insert(vkey, dst);
+        // store after the outermost reduction loop (level acc_level+1) exits
+        if acc_level < self.stack.len() {
+            self.stack[acc_level]
+                .pending_after
+                .push(Instr::new(Opcode::VStore).src(dst).mem(mem));
+        } else {
+            self.emit(Instr::new(Opcode::VStore).src(dst).mem(mem));
+        }
+        dst
+    }
+
+    fn promoted_scalar_acc(&mut self, tensor: u16, lin: &Affine, acc_level: usize) -> Reg {
+        let key = Self::terms_key(lin);
+        let vkey = (tensor, key, lin.konst, 4u32);
+        if let Some(&r) = self.caches[acc_level].value.get(&vkey) {
+            return r;
+        }
+        let (areg, off) = self.addr_reg(tensor, lin, 4);
+        let dst = self.fresh_vec();
+        let mem = MemRef { tensor, space: AddrSpace::Global, addr_reg: areg, offset: off, width: 4 };
+        self.emit_at(acc_level, Instr::new(Opcode::SLoad).dst(dst).mem(mem.clone()));
+        self.caches[acc_level].value.insert(vkey, dst);
+        if acc_level < self.stack.len() {
+            self.stack[acc_level]
+                .pending_after
+                .push(Instr::new(Opcode::SStore).src(dst).mem(mem));
+        } else {
+            self.emit(Instr::new(Opcode::SStore).src(dst).mem(mem));
+        }
+        dst
+    }
+
+    fn invalidate_value(&mut self, tensor: u16, lin: &Affine, width: u32) {
+        let key = Self::terms_key(lin);
+        for c in self.caches.iter_mut() {
+            c.value.remove(&(tensor, key.clone(), lin.konst, width));
+        }
+    }
+}
+
+/// Extent of the outermost Parallel loop (1 if none).
+fn outer_parallel_extent(nodes: &[TirNode]) -> i64 {
+    for n in nodes {
+        if let TirNode::Loop(l) = n {
+            if l.kind == LoopKind::Parallel {
+                return l.extent;
+            }
+            let inner = outer_parallel_extent(&l.body);
+            if inner != 1 {
+                return inner;
+            }
+        }
+    }
+    1
+}
+
+/// Is this a Vectorize loop whose body is exactly one statement?
+fn is_innermost_stmt_loop(l: &LoopNode) -> bool {
+    l.body.len() == 1 && matches!(l.body[0], TirNode::Stmt(_))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::march::xeon_8124m;
+    use crate::isa::TargetKind;
+    use crate::tir::ops::OpSpec;
+    use crate::transform;
+
+    fn lower_default(op: &OpSpec) -> AsmProgram {
+        let t = TargetKind::XeonPlatinum8124M;
+        let s = transform::config_space(op, t);
+        let f = transform::apply(op, t, &s.default_config());
+        CpuCodegen::new(&xeon_8124m()).lower(&f)
+    }
+
+    /// Lower with a config that actually vectorizes (tile_n = 16).
+    fn lower_vectorized(op: &OpSpec) -> AsmProgram {
+        let t = TargetKind::XeonPlatinum8124M;
+        let s = transform::config_space(op, t);
+        let cfg = (0..s.size())
+            .map(|i| s.from_index(i))
+            .find(|c| s.get_int(c, "tile_n") == 16 && s.get_int(c, "tile_k") == 16)
+            .expect("no tile_n=16/tile_k=16 config");
+        let f = transform::apply(op, t, &cfg);
+        CpuCodegen::new(&xeon_8124m()).lower(&f)
+    }
+
+    #[test]
+    fn matmul_emits_fma_and_loops() {
+        let prog = lower_vectorized(&OpSpec::Matmul { m: 64, n: 64, k: 64 });
+        let fma: u64 = prog.blocks.iter().map(|b| b.count(|i| i.op == Opcode::VFma)).sum();
+        assert!(fma > 0, "no vector FMAs emitted");
+        // backward jumps exist (loop latches)
+        let back_jumps = prog
+            .blocks
+            .iter()
+            .flat_map(|b| b.instrs.iter())
+            .filter(|i| i.op == Opcode::Jcc)
+            .count();
+        assert!(back_jumps >= 4, "expected nested loop latches, got {back_jumps}");
+    }
+
+    #[test]
+    fn unrolled_loop_leaves_no_latch() {
+        let op = OpSpec::Matmul { m: 16, n: 16, k: 16 };
+        let t = TargetKind::XeonPlatinum8124M;
+        let space = transform::config_space(&op, t);
+        // find a config with unroll_k=1, tile_k small
+        let mut chosen = None;
+        for idx in 0..space.size() {
+            let c = space.from_index(idx);
+            if space.get_int(&c, "unroll_k") == 1 && space.get_int(&c, "tile_k") == 4 {
+                chosen = Some(c);
+                break;
+            }
+        }
+        let c = chosen.expect("no unrolled config found");
+        let f = transform::apply(&op, t, &c);
+        let unrolled = CpuCodegen::new(&xeon_8124m()).lower(&f);
+        // IR has 7 loops (mo,no,ko,mi,ki,ni) but ki is unrolled and ni
+        // vectorized: assembly must contain exactly 4 loop latches.
+        let latches = unrolled
+            .blocks
+            .iter()
+            .flat_map(|b| b.instrs.iter())
+            .filter(|i| i.op == Opcode::Jcc)
+            .count();
+        assert_eq!(latches, 4, "unroll/vectorize should erase 2 loops");
+    }
+
+    #[test]
+    fn parallel_extent_detected() {
+        let prog = lower_default(&OpSpec::Matmul { m: 128, n: 64, k: 64 });
+        assert!(prog.parallel_extent >= 1);
+    }
+
+    #[test]
+    fn accumulator_promotion_reduces_stores() {
+        // With promotion, store *executions* of C should be far fewer than
+        // fma executions (the accumulator stays in a register across ki).
+        let op = OpSpec::Matmul { m: 32, n: 32, k: 32 };
+        let t = TargetKind::XeonPlatinum8124M;
+        let s = transform::config_space(&op, t);
+        let cfg = (0..s.size())
+            .map(|i| s.from_index(i))
+            .find(|c| s.get_int(c, "tile_n") == 16 && s.get_int(c, "tile_k") == 16)
+            .unwrap();
+        let f = transform::apply(&op, t, &cfg);
+        let prog = CpuCodegen::new(&xeon_8124m()).lower(&f);
+        let lm = crate::analysis::loop_map::map_loops(&f, &prog);
+        let stores = lm.count_instrs(&prog, |i| i.op == Opcode::VStore);
+        let fmas = lm.count_instrs(&prog, |i| i.op == Opcode::VFma);
+        assert!(stores * 4 <= fmas, "stores {stores} should be ≪ fmas {fmas}");
+    }
+
+    #[test]
+    fn conv_both_layouts_lower() {
+        let op = OpSpec::Conv2d {
+            n: 1, cin: 16, h: 14, w: 14, cout: 16, kh: 3, kw: 3, stride: 1, pad: 1,
+        };
+        let t = TargetKind::XeonPlatinum8124M;
+        let space = transform::config_space(&op, t);
+        for idx in 0..space.size() {
+            let c = space.from_index(idx);
+            let f = transform::apply(&op, t, &c);
+            let prog = CpuCodegen::new(&xeon_8124m()).lower(&f);
+            assert!(prog.total_instrs() > 0, "config {idx} emitted nothing");
+        }
+    }
+
+    #[test]
+    fn tensors_have_disjoint_address_ranges() {
+        let prog = lower_default(&OpSpec::Matmul { m: 32, n: 32, k: 32 });
+        for w in prog.tensors.windows(2) {
+            let end = w[0].base_addr + (w[0].elems as u64) * w[0].elem_bytes as u64;
+            assert!(end <= w[1].base_addr, "overlap between tensors");
+        }
+    }
+}

@@ -1,0 +1,57 @@
+//! Lowering from scheduled TIR to virtual assembly.
+//!
+//! This module plays the role LLVM/NVCC play for the paper: it turns the
+//! loop-structured IR into flat basic blocks, and in doing so *loses* the
+//! loop structure the same ways a real backend does —
+//!
+//! * `Unroll` loops disappear entirely (constant-folded into offsets),
+//! * `Vectorize` loops become packed SIMD instructions plus scalar tails,
+//! * accumulators are *register-promoted* out of reduction loops,
+//! * loop-invariant loads are hoisted to the level they depend on,
+//! * address arithmetic is CSE'd within blocks,
+//!
+//! which is exactly why the paper's Algorithms 1/3 must jointly parse the
+//! IR and the assembly to recover per-loop instruction counts.
+
+pub mod cpu;
+pub mod gpu;
+
+use crate::isa::{AsmProgram, MicroArch};
+use crate::isa::march::GpuArch;
+use crate::tir::TirFunc;
+
+/// Lower a scheduled CPU function.
+pub fn lower_cpu(f: &TirFunc, march: &MicroArch) -> AsmProgram {
+    cpu::CpuCodegen::new(march).lower(f)
+}
+
+/// Lower a scheduled GPU kernel.
+pub fn lower_gpu(f: &TirFunc, gpu: &GpuArch) -> AsmProgram {
+    gpu::GpuCodegen::new(gpu).lower(f)
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::isa::march::{tesla_v100, xeon_8124m};
+    use crate::isa::TargetKind;
+    use crate::tir::ops::OpSpec;
+    use crate::transform;
+
+    #[test]
+    fn lower_all_figure_ops_cpu_and_gpu() {
+        let xeon = xeon_8124m();
+        let v100 = tesla_v100();
+        for op in crate::tir::ops::figure_op_suite() {
+            let s = transform::config_space(&op, TargetKind::XeonPlatinum8124M);
+            let f = transform::apply(&op, TargetKind::XeonPlatinum8124M, &s.default_config());
+            let prog = super::lower_cpu(&f, &xeon);
+            assert!(prog.total_instrs() > 0, "{op} cpu empty");
+
+            let s = transform::config_space(&op, TargetKind::TeslaV100);
+            let f = transform::apply(&op, TargetKind::TeslaV100, &s.default_config());
+            let prog = super::lower_gpu(&f, &v100);
+            assert!(prog.total_instrs() > 0, "{op} gpu empty");
+            assert!(prog.launch.is_some(), "{op} gpu has no launch config");
+        }
+    }
+}

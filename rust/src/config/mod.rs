@@ -1,0 +1,237 @@
+//! Run configuration: a TOML-subset file format plus CLI overrides.
+//!
+//! The offline environment has no toml crate, so this parses the subset the
+//! project needs: `[section]` headers, `key = value` with integer, float,
+//! boolean and quoted-string values, `#` comments. Unknown keys are
+//! reported, not silently dropped.
+
+use crate::isa::TargetKind;
+use crate::search::EsParams;
+use std::collections::BTreeMap;
+
+/// Parsed raw config: section -> key -> raw value.
+#[derive(Debug, Clone, Default)]
+pub struct RawConfig {
+    pub sections: BTreeMap<String, BTreeMap<String, Value>>,
+}
+
+/// A config value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Str(String),
+}
+
+impl Value {
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(v) => Some(*v),
+            Value::Float(f) if f.fract() == 0.0 => Some(*f as i64),
+            _ => None,
+        }
+    }
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Int(v) => Some(*v as f64),
+            Value::Float(f) => Some(*f),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+}
+
+/// Parse TOML-subset text.
+pub fn parse(text: &str) -> Result<RawConfig, String> {
+    let mut cfg = RawConfig::default();
+    let mut section = String::from("root");
+    for (ln, raw) in text.lines().enumerate() {
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        if line.starts_with('[') {
+            if !line.ends_with(']') {
+                return Err(format!("line {}: malformed section header", ln + 1));
+            }
+            section = line[1..line.len() - 1].trim().to_string();
+            cfg.sections.entry(section.clone()).or_default();
+            continue;
+        }
+        let Some(eq) = line.find('=') else {
+            return Err(format!("line {}: expected key = value", ln + 1));
+        };
+        let key = line[..eq].trim().to_string();
+        let val = line[eq + 1..].trim();
+        let value = parse_value(val).ok_or_else(|| format!("line {}: bad value {val:?}", ln + 1))?;
+        cfg.sections.entry(section.clone()).or_default().insert(key, value);
+    }
+    Ok(cfg)
+}
+
+fn parse_value(v: &str) -> Option<Value> {
+    if v == "true" {
+        return Some(Value::Bool(true));
+    }
+    if v == "false" {
+        return Some(Value::Bool(false));
+    }
+    if v.starts_with('"') && v.ends_with('"') && v.len() >= 2 {
+        return Some(Value::Str(v[1..v.len() - 1].to_string()));
+    }
+    if let Ok(i) = v.parse::<i64>() {
+        return Some(Value::Int(i));
+    }
+    if let Ok(f) = v.parse::<f64>() {
+        return Some(Value::Float(f));
+    }
+    None
+}
+
+/// Resolved run configuration with defaults.
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    /// targets to run (default: all five).
+    pub targets: Vec<TargetKind>,
+    /// ES parameters for the Tuna strategy.
+    pub es: EsParams,
+    /// AutoTVM-Full measurement trials per operator.
+    pub autotvm_trials: u64,
+    /// top-k sizes for the figure sweeps.
+    pub topk: Vec<usize>,
+    /// random seed.
+    pub seed: u64,
+    /// output directory for JSON dumps.
+    pub out_dir: String,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            targets: TargetKind::ALL.to_vec(),
+            es: EsParams::default(),
+            autotvm_trials: 128,
+            topk: vec![10, 50],
+            seed: 42,
+            out_dir: "results".into(),
+        }
+    }
+}
+
+impl RunConfig {
+    /// Load from a TOML-subset file, falling back to defaults per key.
+    pub fn from_file(path: &str) -> Result<RunConfig, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| e.to_string())?;
+        let raw = parse(&text)?;
+        let mut c = RunConfig::default();
+        if let Some(s) = raw.sections.get("search") {
+            if let Some(v) = s.get("population").and_then(Value::as_i64) {
+                c.es.population = v as usize;
+            }
+            if let Some(v) = s.get("iterations").and_then(Value::as_i64) {
+                c.es.iterations = v as usize;
+            }
+            if let Some(v) = s.get("sigma").and_then(Value::as_f64) {
+                c.es.sigma = v;
+            }
+            if let Some(v) = s.get("alpha").and_then(Value::as_f64) {
+                c.es.alpha = v;
+            }
+            if let Some(v) = s.get("seed").and_then(Value::as_i64) {
+                c.es.seed = v as u64;
+                c.seed = v as u64;
+            }
+        }
+        if let Some(s) = raw.sections.get("autotvm") {
+            if let Some(v) = s.get("trials").and_then(Value::as_i64) {
+                c.autotvm_trials = v as u64;
+            }
+        }
+        if let Some(s) = raw.sections.get("run") {
+            if let Some(v) = s.get("out_dir").and_then(Value::as_str) {
+                c.out_dir = v.to_string();
+            }
+            if let Some(v) = s.get("targets").and_then(Value::as_str) {
+                c.targets = parse_targets(v)?;
+            }
+        }
+        Ok(c)
+    }
+}
+
+/// Parse a comma-separated target list (`xeon,graviton2,a53,v100,xavier`).
+pub fn parse_targets(s: &str) -> Result<Vec<TargetKind>, String> {
+    s.split(',')
+        .map(|t| match t.trim().to_lowercase().as_str() {
+            "xeon" | "intel" | "c5" => Ok(TargetKind::XeonPlatinum8124M),
+            "graviton2" | "graviton" | "m6g" | "arm" => Ok(TargetKind::Graviton2),
+            "a53" | "cortex-a53" | "aisage" | "edge-cpu" => Ok(TargetKind::CortexA53),
+            "v100" | "p3" | "gpu" => Ok(TargetKind::TeslaV100),
+            "xavier" | "jetson" | "agx" => Ok(TargetKind::JetsonXavier),
+            "all" => Err("ALL".to_string()),
+            other => Err(format!("unknown target {other:?}")),
+        })
+        .collect::<Result<Vec<_>, _>>()
+        .or_else(|e| {
+            if e == "ALL" {
+                Ok(TargetKind::ALL.to_vec())
+            } else {
+                Err(e)
+            }
+        })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let c = parse(
+            "# comment\n[search]\npopulation = 16\nsigma = 1.5\n[run]\nout_dir = \"res\"\nquiet = true\n",
+        )
+        .unwrap();
+        let s = &c.sections["search"];
+        assert_eq!(s["population"], Value::Int(16));
+        assert_eq!(s["sigma"], Value::Float(1.5));
+        assert_eq!(c.sections["run"]["out_dir"], Value::Str("res".into()));
+        assert_eq!(c.sections["run"]["quiet"], Value::Bool(true));
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(parse("[broken\n").is_err());
+        assert!(parse("novalue\n").is_err());
+    }
+
+    #[test]
+    fn target_list_parses() {
+        let t = parse_targets("xeon, v100").unwrap();
+        assert_eq!(t, vec![TargetKind::XeonPlatinum8124M, TargetKind::TeslaV100]);
+        assert_eq!(parse_targets("all").unwrap().len(), 5);
+        assert!(parse_targets("tpu").is_err());
+    }
+
+    #[test]
+    fn run_config_from_file() {
+        let path = "/tmp/tuna_test_cfg.toml";
+        std::fs::write(path, "[search]\npopulation = 8\n[autotvm]\ntrials = 99\n").unwrap();
+        let c = RunConfig::from_file(path).unwrap();
+        assert_eq!(c.es.population, 8);
+        assert_eq!(c.autotvm_trials, 99);
+        // untouched keys keep defaults
+        assert_eq!(c.topk, vec![10, 50]);
+    }
+}

@@ -1,0 +1,116 @@
+//! Per-architecture cost-model calibration.
+//!
+//! The paper derives coefficients from "hardware instruction latency and
+//! empirical profiling data". We reproduce that: a fixed set of *micro*
+//! workloads (small GEMM/conv shapes, disjoint from every evaluation
+//! shape) is lowered under a spread of schedules, each is profiled once on
+//! the device simulator, and the coefficients are fit by non-negative
+//! least squares. One model per architecture, cached for the process
+//! lifetime; the evaluation workloads never enter the fit.
+
+use crate::analysis::CostModel;
+use crate::isa::TargetKind;
+use crate::sim::Device;
+use crate::tir::ops::OpSpec;
+use crate::transform;
+use std::collections::HashMap;
+use std::sync::{Mutex, OnceLock};
+
+/// Calibration micro-suite: deliberately small and disjoint from
+/// `figure_op_suite()` and all network shapes.
+fn micro_suite() -> Vec<OpSpec> {
+    vec![
+        OpSpec::Matmul { m: 48, n: 48, k: 48 },
+        OpSpec::Matmul { m: 96, n: 32, k: 96 },
+        OpSpec::Conv2d { n: 1, cin: 12, h: 20, w: 20, cout: 12, kh: 3, kw: 3, stride: 1, pad: 1 },
+        OpSpec::DepthwiseConv2d { n: 1, c: 20, h: 24, w: 24, kh: 3, kw: 3, stride: 1, pad: 1 },
+        OpSpec::BatchMatmul { b: 3, m: 48, n: 48, k: 24 },
+    ]
+}
+
+/// Configs sampled per micro-op.
+const SAMPLES_PER_OP: u64 = 24;
+
+/// Fit a cost model for `kind` against the device simulator.
+pub fn fit_model(kind: TargetKind) -> CostModel {
+    let mut cm = CostModel::with_default_coeffs(kind);
+    let device = Device::new(kind);
+    let mut rng = crate::util::Rng::new(0xCA11B);
+    let mut samples = Vec::new();
+    let freq_ghz = match kind.build() {
+        crate::isa::Target::Cpu(m) => m.freq_ghz,
+        crate::isa::Target::Gpu(g) => g.freq_ghz,
+    };
+    for op in micro_suite() {
+        let space = transform::config_space(&op, kind);
+        let n = SAMPLES_PER_OP.min(space.size());
+        for i in 0..n {
+            // spread: half grid-strided, half random
+            let cfg = if i % 2 == 0 {
+                space.from_index(i * space.size() / n)
+            } else {
+                space.random(&mut rng)
+            };
+            let fv = cm.features(&op, &cfg);
+            let cycles = device.run(&op, &cfg).seconds * freq_ghz * 1e9;
+            samples.push((fv, cycles));
+        }
+    }
+    cm.calibrate(&samples);
+    cm
+}
+
+/// Process-lifetime cache of calibrated models.
+pub fn calibrated_model(kind: TargetKind) -> CostModel {
+    static CACHE: OnceLock<Mutex<HashMap<&'static str, CostModel>>> = OnceLock::new();
+    let cache = CACHE.get_or_init(|| Mutex::new(HashMap::new()));
+    let key = kind.display_name();
+    if let Some(m) = cache.lock().unwrap().get(key) {
+        return m.clone();
+    }
+    let m = fit_model(kind);
+    cache.lock().unwrap().insert(key, m.clone());
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::spearman;
+
+    /// The central claim: the calibrated static model must *rank*
+    /// schedules like the device does.
+    #[test]
+    fn calibrated_model_ranks_like_the_device() {
+        let kind = TargetKind::Graviton2;
+        let cm = calibrated_model(kind);
+        let device = Device::new(kind);
+        // held-out op (not in the micro suite)
+        let op = OpSpec::Matmul { m: 128, n: 64, k: 64 };
+        let space = transform::config_space(&op, kind);
+        let mut preds = Vec::new();
+        let mut truths = Vec::new();
+        for i in 0..space.size().min(48) {
+            let cfg = space.from_index(i);
+            preds.push(cm.predict(&op, &cfg));
+            truths.push(device.run(&op, &cfg).seconds);
+        }
+        let rho = spearman(&preds, &truths);
+        assert!(rho > 0.6, "rank correlation too weak: {rho}");
+    }
+
+    #[test]
+    fn micro_suite_disjoint_from_figures() {
+        let micro: Vec<String> = micro_suite().iter().map(|o| o.cache_key()).collect();
+        for op in crate::tir::ops::figure_op_suite() {
+            assert!(!micro.contains(&op.cache_key()), "{op} leaks into calibration");
+        }
+    }
+
+    #[test]
+    fn cache_returns_same_coeffs() {
+        let a = calibrated_model(TargetKind::CortexA53);
+        let b = calibrated_model(TargetKind::CortexA53);
+        assert_eq!(a.coeffs, b.coeffs);
+    }
+}

@@ -1,0 +1,151 @@
+//! Whole-network workloads — the four models of Tables I-III.
+//!
+//! A network is an inventory of operator shapes with repetition counts
+//! (inference, batch 1), matching the architectures the paper benchmarks:
+//! TensorFlow SSD MobileNet v2 (depthwise-heavy), TensorFlow SSD Inception
+//! v2 (wide mixed convolutions), PyTorch ResNet-50 v1 (deep 3×3/1×1
+//! bottlenecks) and PyTorch BERT base uncased (dense + batched matmul).
+//! Layers may carry *alternative* implementations (direct conv vs Winograd
+//! for 3×3 stride-1) — the coordinator tunes each family and deploys the
+//! faster one, as TVM's relay op strategy does.
+
+pub mod networks;
+
+pub use networks::{all_networks, bert_base, resnet50, ssd_inception, ssd_mobilenet};
+
+use crate::tir::ops::OpSpec;
+use std::collections::BTreeMap;
+
+/// One layer: equivalent implementation alternatives + repetition count.
+#[derive(Debug, Clone)]
+pub struct Layer {
+    pub alternatives: Vec<OpSpec>,
+    pub count: u32,
+}
+
+impl Layer {
+    pub fn single(op: OpSpec, count: u32) -> Self {
+        Layer { alternatives: vec![op], count }
+    }
+}
+
+/// A network workload.
+#[derive(Debug, Clone)]
+pub struct Network {
+    /// short id (`ssd_mobilenet`, …).
+    pub name: &'static str,
+    /// the paper's column header (`TF SSD MobileNet`, …).
+    pub display: &'static str,
+    pub layers: Vec<Layer>,
+}
+
+impl Network {
+    /// All distinct operator tasks across layers and alternatives —
+    /// the tuning work-list (each tuned once, shared via the cache).
+    pub fn unique_tasks(&self) -> Vec<OpSpec> {
+        let mut seen = BTreeMap::new();
+        for l in &self.layers {
+            for op in &l.alternatives {
+                seen.entry(op.cache_key(), ).or_insert(*op);
+            }
+        }
+        seen.into_values().collect()
+    }
+
+    /// End-to-end latency given per-task latencies: every layer picks its
+    /// fastest alternative, weighted by count.
+    pub fn latency(&self, task_latency: &BTreeMap<String, f64>) -> f64 {
+        self.layers
+            .iter()
+            .map(|l| {
+                let best = l
+                    .alternatives
+                    .iter()
+                    .filter_map(|op| task_latency.get(&op.cache_key()))
+                    .cloned()
+                    .fold(f64::MAX, f64::min);
+                assert!(best < f64::MAX, "missing latency for a layer of {}", self.name);
+                best * l.count as f64
+            })
+            .sum()
+    }
+
+    /// Total theoretical flops (one forward pass, best-alternative basis
+    /// uses the first alternative).
+    pub fn flops(&self) -> u64 {
+        self.layers
+            .iter()
+            .map(|l| l.alternatives[0].flops() * l.count as u64)
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn four_networks_defined() {
+        let nets = all_networks();
+        assert_eq!(nets.len(), 4);
+        for n in &nets {
+            assert!(!n.layers.is_empty(), "{} empty", n.name);
+            assert!(n.flops() > 1_000_000, "{} too small", n.name);
+            assert!(!n.unique_tasks().is_empty());
+        }
+    }
+
+    #[test]
+    fn unique_tasks_deduplicate() {
+        // same op in two layers counts once
+        let op = OpSpec::Matmul { m: 8, n: 8, k: 8 };
+        let net = Network {
+            name: "t",
+            display: "T",
+            layers: vec![Layer::single(op, 1), Layer::single(op, 3)],
+        };
+        assert_eq!(net.unique_tasks().len(), 1);
+        // and real networks never exceed their reference count
+        for n in all_networks() {
+            let refs: usize = n.layers.iter().map(|l| l.alternatives.len()).sum();
+            assert!(n.unique_tasks().len() <= refs);
+        }
+    }
+
+    #[test]
+    fn latency_picks_fastest_alternative() {
+        let net = Network {
+            name: "t",
+            display: "T",
+            layers: vec![Layer {
+                alternatives: vec![
+                    OpSpec::Matmul { m: 8, n: 8, k: 8 },
+                    OpSpec::Matmul { m: 8, n: 8, k: 16 },
+                ],
+                count: 2,
+            }],
+        };
+        let mut lat = BTreeMap::new();
+        lat.insert(OpSpec::Matmul { m: 8, n: 8, k: 8 }.cache_key(), 5.0);
+        lat.insert(OpSpec::Matmul { m: 8, n: 8, k: 16 }.cache_key(), 3.0);
+        assert_eq!(net.latency(&lat), 6.0);
+    }
+
+    #[test]
+    fn mobilenet_has_depthwise_bert_has_bmm() {
+        let mb = ssd_mobilenet();
+        assert!(mb
+            .unique_tasks()
+            .iter()
+            .any(|op| matches!(op, OpSpec::DepthwiseConv2d { .. })));
+        let bert = bert_base();
+        assert!(bert
+            .unique_tasks()
+            .iter()
+            .any(|op| matches!(op, OpSpec::BatchMatmul { .. })));
+        assert!(bert
+            .unique_tasks()
+            .iter()
+            .all(|op| !matches!(op, OpSpec::Conv2d { .. })));
+    }
+}

@@ -1,0 +1,202 @@
+//! Shape inventories of the four benchmark networks (inference, batch 1).
+//!
+//! These are operator-accurate reproductions of the layer shapes in the
+//! published architectures (MobileNetV2-SSD at 300², InceptionV2-SSD at
+//! 300², ResNet-50 v1 at 224², BERT-base at sequence 128), lightly merged:
+//! repeated blocks become `count > 1`, and residual adds / activations /
+//! norms are omitted (they are memory-bound elementwise ops outside the
+//! paper's tuning scope). 3×3 stride-1 convolutions additionally carry a
+//! Winograd alternative where H/W are even, as TVM's op strategy offers.
+
+use super::{Layer, Network};
+use crate::tir::ops::OpSpec;
+
+fn conv(cin: i64, h: i64, w: i64, cout: i64, k: i64, stride: i64, pad: i64) -> OpSpec {
+    OpSpec::Conv2d { n: 1, cin, h, w, cout, kh: k, kw: k, stride, pad }
+}
+
+fn dw(c: i64, h: i64, w: i64, k: i64, stride: i64, pad: i64) -> OpSpec {
+    OpSpec::DepthwiseConv2d { n: 1, c, h, w, kh: k, kw: k, stride, pad }
+}
+
+/// 3×3 s1 conv with a Winograd alternative when spatial dims are even.
+fn conv3x3_layer(cin: i64, h: i64, w: i64, cout: i64, count: u32) -> Layer {
+    let direct = conv(cin, h, w, cout, 3, 1, 1);
+    if h % 2 == 0 && w % 2 == 0 {
+        Layer {
+            alternatives: vec![direct, OpSpec::Conv2dWinograd { n: 1, cin, h, w, cout }],
+            count,
+        }
+    } else {
+        Layer::single(direct, count)
+    }
+}
+
+/// TensorFlow SSD MobileNet v2 (300×300).
+pub fn ssd_mobilenet() -> Network {
+    let mut layers = Vec::new();
+    // stem
+    layers.push(Layer::single(conv(3, 300, 300, 32, 3, 2, 1), 1));
+    // inverted residual stages: (expand 1x1, depthwise 3x3, project 1x1)
+    // (cin, expanded, cout, h, w, stride, repeats)
+    let blocks: [(i64, i64, i64, i64, i64, i64, u32); 7] = [
+        (32, 32, 16, 150, 150, 1, 1),
+        (16, 96, 24, 150, 150, 2, 2),
+        (24, 144, 32, 75, 75, 2, 3),
+        (32, 192, 64, 38, 38, 2, 4),
+        (64, 384, 96, 19, 19, 1, 3),
+        (96, 576, 160, 19, 19, 2, 3),
+        (160, 960, 320, 10, 10, 1, 1),
+    ];
+    for (cin, exp, cout, h, w, s, reps) in blocks {
+        if exp != cin {
+            layers.push(Layer::single(conv(cin, h, w, exp, 1, 1, 0), reps));
+        }
+        layers.push(Layer::single(dw(exp, h, w, 3, s, 1), reps));
+        let (oh, ow) = (OpSpec::out_dim(h, 3, s, 1), OpSpec::out_dim(w, 3, s, 1));
+        layers.push(Layer::single(conv(exp, oh, ow, cout, 1, 1, 0), reps));
+    }
+    // final 1x1 + SSD feature heads
+    layers.push(Layer::single(conv(320, 10, 10, 1280, 1, 1, 0), 1));
+    // box/class predictors on 19/10/5/3/2/1 grids
+    for (c, g) in [(576i64, 19i64), (1280, 10), (512, 5), (256, 3), (256, 2), (128, 1)] {
+        layers.push(Layer::single(conv(c, g, g, 24, 3, 1, 1), 1)); // loc
+        layers.push(Layer::single(conv(c, g, g, 546, 3, 1, 1), 1)); // cls
+    }
+    // extra feature layers
+    layers.push(Layer::single(conv(1280, 10, 10, 256, 1, 1, 0), 1));
+    layers.push(Layer::single(conv(256, 10, 10, 512, 3, 2, 1), 1));
+    layers.push(Layer::single(conv(512, 5, 5, 128, 1, 1, 0), 1));
+    layers.push(Layer::single(conv(128, 5, 5, 256, 3, 2, 1), 1));
+    Network { name: "ssd_mobilenet", display: "TF SSD MobileNet", layers }
+}
+
+/// TensorFlow SSD Inception v2 (300×300).
+pub fn ssd_inception() -> Network {
+    let mut layers = Vec::new();
+    // stem
+    layers.push(Layer::single(conv(3, 300, 300, 64, 7, 2, 3), 1));
+    layers.push(Layer::single(conv(64, 75, 75, 64, 1, 1, 0), 1));
+    layers.push(conv3x3_layer(64, 75, 75, 192, 1)); // odd dims -> direct only
+    // inception blocks at 38x38 (mixed 3b/3c-style)
+    for _ in 0..1 {
+        layers.push(Layer::single(conv(192, 38, 38, 64, 1, 1, 0), 2));
+        layers.push(Layer::single(conv(192, 38, 38, 96, 1, 1, 0), 2));
+        layers.push(conv3x3_layer(96, 38, 38, 128, 2));
+        layers.push(Layer::single(conv(192, 38, 38, 32, 1, 1, 0), 2));
+        layers.push(conv3x3_layer(32, 38, 38, 96, 4)); // double 3x3 branch
+    }
+    // inception blocks at 19x19 (4b-4e style)
+    layers.push(Layer::single(conv(576, 19, 19, 224, 1, 1, 0), 4));
+    layers.push(Layer::single(conv(576, 19, 19, 96, 1, 1, 0), 4));
+    layers.push(Layer::single(conv(96, 19, 19, 128, 3, 1, 1), 8));
+    layers.push(Layer::single(conv(576, 19, 19, 128, 1, 1, 0), 4));
+    layers.push(Layer::single(conv(128, 19, 19, 192, 3, 1, 1), 4));
+    // 10x10 blocks (5a/5b)
+    layers.push(Layer::single(conv(1024, 10, 10, 352, 1, 1, 0), 2));
+    layers.push(Layer::single(conv(1024, 10, 10, 192, 1, 1, 0), 2));
+    layers.push(conv3x3_layer(192, 10, 10, 320, 4));
+    // SSD heads
+    for (c, g) in [(576i64, 19i64), (1024, 10), (512, 5), (256, 3), (256, 2), (128, 1)] {
+        layers.push(Layer::single(conv(c, g, g, 24, 3, 1, 1), 1));
+        layers.push(Layer::single(conv(c, g, g, 546, 3, 1, 1), 1));
+    }
+    // extras
+    layers.push(Layer::single(conv(1024, 10, 10, 256, 1, 1, 0), 1));
+    layers.push(Layer::single(conv(256, 10, 10, 512, 3, 2, 1), 1));
+    layers.push(Layer::single(conv(512, 5, 5, 128, 1, 1, 0), 1));
+    layers.push(Layer::single(conv(128, 5, 5, 256, 3, 2, 1), 1));
+    Network { name: "ssd_inception", display: "TF SSD Inception", layers }
+}
+
+/// PyTorch ResNet-50 v1 (224×224).
+pub fn resnet50() -> Network {
+    let mut layers = Vec::new();
+    layers.push(Layer::single(conv(3, 224, 224, 64, 7, 2, 3), 1));
+    // bottleneck stages: (h, w, cin_mid, planes_in, planes_out, blocks)
+    let stages: [(i64, i64, i64, i64, u32); 4] = [
+        (56, 56, 64, 256, 3),
+        (28, 28, 128, 512, 4),
+        (14, 14, 256, 1024, 6),
+        (7, 7, 512, 2048, 3),
+    ];
+    for (h, w, mid, out, blocks) in stages {
+        // 1x1 reduce (from the wide input), 3x3 mid, 1x1 expand
+        layers.push(Layer::single(conv(out, h, w, mid, 1, 1, 0), blocks - 1));
+        layers.push(Layer::single(conv(out / 2, h, w, mid, 1, 1, 0), 1)); // first block
+        layers.push(conv3x3_layer(mid, h, w, mid, blocks));
+        layers.push(Layer::single(conv(mid, h, w, out, 1, 1, 0), blocks));
+        // downsample shortcut of the first block
+        layers.push(Layer::single(conv(out / 2, h, w, out, 1, 1, 0), 1));
+    }
+    // classifier
+    layers.push(Layer::single(OpSpec::Matmul { m: 1, n: 1000, k: 2048 }, 1));
+    Network { name: "resnet50", display: "PT ResNet50", layers }
+}
+
+/// PyTorch BERT base uncased (sequence length 128, batch 1).
+pub fn bert_base() -> Network {
+    let l = 12u32; // encoder layers
+    let layers = vec![
+        // QKV projections (3 per layer) + attention output projection
+        Layer::single(OpSpec::Matmul { m: 128, n: 768, k: 768 }, 4 * l),
+        // attention scores and context: 12 heads of 64 dims
+        Layer::single(OpSpec::BatchMatmul { b: 12, m: 128, n: 128, k: 64 }, l),
+        Layer::single(OpSpec::BatchMatmul { b: 12, m: 128, n: 64, k: 128 }, l),
+        // feed-forward
+        Layer::single(OpSpec::Matmul { m: 128, n: 3072, k: 768 }, l),
+        Layer::single(OpSpec::Matmul { m: 128, n: 768, k: 3072 }, l),
+        // pooler
+        Layer::single(OpSpec::Matmul { m: 1, n: 768, k: 768 }, 1),
+    ];
+    Network { name: "bert_base", display: "PT Bert", layers }
+}
+
+/// All four benchmark networks in the paper's column order.
+pub fn all_networks() -> Vec<Network> {
+    vec![ssd_mobilenet(), ssd_inception(), resnet50(), bert_base()]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flop_scale_sane() {
+        // ballpark single-inference flops: MobileNet-SSD ~ GFLOPs range,
+        // ResNet50 ~ 8 GFLOP (2x MACs), BERT-base seq128 ~ 22 GFLOP
+        let r = resnet50().flops() as f64 / 1e9;
+        assert!(r > 4.0 && r < 16.0, "resnet50 {r} GFLOP");
+        let b = bert_base().flops() as f64 / 1e9;
+        assert!(b > 10.0 && b < 40.0, "bert {b} GFLOP");
+        let m = ssd_mobilenet().flops() as f64 / 1e9;
+        assert!(m > 1.0 && m < 20.0, "ssd-mobilenet {m} GFLOP");
+        let i = ssd_inception().flops() as f64 / 1e9;
+        assert!(i > 2.0 && i < 40.0, "ssd-inception {i} GFLOP");
+    }
+
+    #[test]
+    fn task_counts_reasonable() {
+        for n in all_networks() {
+            let t = n.unique_tasks().len();
+            assert!(
+                (4..=60).contains(&t),
+                "{}: {t} unique tasks (expected a few dozen)",
+                n.name
+            );
+        }
+    }
+
+    #[test]
+    fn all_shapes_have_nontrivial_spaces_on_cpu_and_gpu() {
+        use crate::isa::TargetKind;
+        for n in all_networks() {
+            for op in n.unique_tasks() {
+                for t in [TargetKind::Graviton2, TargetKind::TeslaV100] {
+                    let s = crate::transform::config_space(&op, t);
+                    assert!(s.size() >= 2, "{op} trivial space on {t:?}");
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,370 @@
+//! Virtual assembly: instructions, registers, basic blocks, programs.
+//!
+//! One instruction enum serves both CPU (AVX/NEON-flavored) and GPU
+//! (PTX-flavored) programs; the flavor only changes mnemonics and which
+//! opcodes the feature extractors count. Programs are sequences of labeled
+//! basic blocks with explicit control-flow edges — the same surface a
+//! disassembler or `ptxas -v` dump gives the paper's analyzers.
+
+
+use std::fmt;
+
+/// Virtual register. Codegen allocates from a finite architectural pool;
+/// spills materialize as extra loads/stores exactly like real regalloc.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Reg {
+    /// General-purpose (scalar/address) register.
+    Gpr(u16),
+    /// SIMD vector register (CPU) or 32-bit virtual register (PTX — PTX is
+    /// scalar-per-thread, vector width 1).
+    Vec(u16),
+    /// GPU special registers.
+    TidX,
+    TidY,
+    CtaIdX,
+    CtaIdY,
+    /// Predicate register (PTX `setp`/`@p bra`).
+    Pred(u16),
+}
+
+impl fmt::Display for Reg {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Reg::Gpr(i) => write!(f, "r{i}"),
+            Reg::Vec(i) => write!(f, "v{i}"),
+            Reg::TidX => write!(f, "%tid.x"),
+            Reg::TidY => write!(f, "%tid.y"),
+            Reg::CtaIdX => write!(f, "%ctaid.x"),
+            Reg::CtaIdY => write!(f, "%ctaid.y"),
+            Reg::Pred(i) => write!(f, "p{i}"),
+        }
+    }
+}
+
+/// Memory operand: which tensor, which address space, and an affine address
+/// expression over loop-carried registers — enough for the bank-conflict
+/// evaluator and the trace generator to compute concrete addresses.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MemRef {
+    /// Index into the program's tensor table.
+    pub tensor: u16,
+    /// GPU address space (shared vs global); `Global` for CPU.
+    pub space: AddrSpace,
+    /// base register holding the (already computed) element offset.
+    pub addr_reg: Reg,
+    /// static byte offset added to the register (from unrolling).
+    pub offset: i64,
+    /// access width in bytes (SIMD width or 4 for scalar f32).
+    pub width: u32,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum AddrSpace {
+    Global,
+    Shared,
+    Local,
+}
+
+/// Opcodes across both virtual ISAs. CPU-only, GPU-only and shared opcodes
+/// coexist; the feature extractors filter by flavor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Opcode {
+    // ---- SIMD arithmetic (CPU) ----
+    /// `vfmadd231ps` / `fmla` — the dominant compute instruction.
+    VFma,
+    VAdd,
+    VMul,
+    VMax,
+    /// `vbroadcastss` / `ld1r`.
+    VBroadcast,
+    // ---- SIMD memory (CPU) ----
+    /// `vmovups` load / `ldr q`.
+    VLoad,
+    /// `vmovups` store / `str q`.
+    VStore,
+    // ---- scalar ----
+    SAdd,
+    SMul,
+    SFma,
+    SLoad,
+    SStore,
+    /// scalar register move / immediate materialization.
+    Mov,
+    /// address arithmetic (lea-like).
+    Lea,
+    // ---- control flow ----
+    Cmp,
+    /// conditional jump (backedge or exit).
+    Jcc,
+    /// unconditional jump.
+    Jmp,
+    // ---- GPU (PTX-flavored) ----
+    /// `fma.rn.f32`.
+    PtxFma,
+    PtxAdd,
+    PtxMul,
+    /// `ld.global.f32` (or `.v4`).
+    PtxLdGlobal,
+    PtxStGlobal,
+    /// `ld.shared.f32`.
+    PtxLdShared,
+    PtxStShared,
+    /// `mov.u32`.
+    PtxMov,
+    /// `setp.lt.s32`.
+    PtxSetp,
+    /// `@p bra LBB...`.
+    PtxBra,
+    /// `bar.sync 0`.
+    PtxBarSync,
+}
+
+impl Opcode {
+    /// Is this one of the "significant SIMD instructions" the paper's CPU
+    /// model counts (vector fma/arith + vector load/store)?
+    pub fn is_simd_significant(self) -> bool {
+        matches!(
+            self,
+            Opcode::VFma
+                | Opcode::VAdd
+                | Opcode::VMul
+                | Opcode::VMax
+                | Opcode::VLoad
+                | Opcode::VStore
+                | Opcode::VBroadcast
+        )
+    }
+
+    /// Is this one of the significant PTX instructions (`fma`, `ld`, `st`)?
+    pub fn is_ptx_significant(self) -> bool {
+        matches!(
+            self,
+            Opcode::PtxFma
+                | Opcode::PtxAdd
+                | Opcode::PtxMul
+                | Opcode::PtxLdGlobal
+                | Opcode::PtxStGlobal
+                | Opcode::PtxLdShared
+                | Opcode::PtxStShared
+        )
+    }
+
+    pub fn is_control(self) -> bool {
+        matches!(self, Opcode::Cmp | Opcode::Jcc | Opcode::Jmp | Opcode::PtxSetp | Opcode::PtxBra)
+    }
+
+    pub fn is_memory(self) -> bool {
+        matches!(
+            self,
+            Opcode::VLoad
+                | Opcode::VStore
+                | Opcode::SLoad
+                | Opcode::SStore
+                | Opcode::VBroadcast
+                | Opcode::PtxLdGlobal
+                | Opcode::PtxStGlobal
+                | Opcode::PtxLdShared
+                | Opcode::PtxStShared
+        )
+    }
+
+    pub fn is_store(self) -> bool {
+        matches!(
+            self,
+            Opcode::VStore | Opcode::SStore | Opcode::PtxStGlobal | Opcode::PtxStShared
+        )
+    }
+}
+
+/// A single virtual instruction in three-address form.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Instr {
+    pub op: Opcode,
+    /// destination register (None for stores/branches).
+    pub dst: Option<Reg>,
+    /// source registers.
+    pub srcs: Vec<Reg>,
+    /// memory operand for loads/stores.
+    pub mem: Option<MemRef>,
+    /// immediate operand (loop bounds, increments, addresses).
+    pub imm: Option<i64>,
+    /// branch target label (block index) for Jcc/Jmp/PtxBra.
+    pub target: Option<u32>,
+}
+
+impl Instr {
+    pub fn new(op: Opcode) -> Self {
+        Instr { op, dst: None, srcs: Vec::new(), mem: None, imm: None, target: None }
+    }
+    pub fn dst(mut self, r: Reg) -> Self {
+        self.dst = Some(r);
+        self
+    }
+    pub fn src(mut self, r: Reg) -> Self {
+        self.srcs.push(r);
+        self
+    }
+    pub fn mem(mut self, m: MemRef) -> Self {
+        self.mem = Some(m);
+        self
+    }
+    pub fn imm(mut self, v: i64) -> Self {
+        self.imm = Some(v);
+        self
+    }
+    pub fn target(mut self, t: u32) -> Self {
+        self.target = Some(t);
+        self
+    }
+}
+
+/// A basic block: a label, straight-line instructions, and an optional
+/// trip-count annotation filled in *by the analyzers* (never by codegen —
+/// recovering trip counts is the point of Algorithms 1 and 3).
+#[derive(Debug, Clone)]
+pub struct BasicBlock {
+    /// `LBB<n>` label — blocks are addressed by index.
+    pub label: u32,
+    pub instrs: Vec<Instr>,
+}
+
+impl BasicBlock {
+    pub fn new(label: u32) -> Self {
+        BasicBlock { label, instrs: Vec::new() }
+    }
+
+    /// The terminating branch target, if the last instruction jumps.
+    pub fn branch_target(&self) -> Option<u32> {
+        self.instrs.last().and_then(|i| i.target)
+    }
+
+    /// Count instructions matching a predicate.
+    pub fn count<F: Fn(&Instr) -> bool>(&self, f: F) -> u64 {
+        self.instrs.iter().filter(|i| f(i)).count() as u64
+    }
+}
+
+/// Table entry describing a tensor buffer referenced by `MemRef.tensor`.
+#[derive(Debug, Clone)]
+pub struct TensorDecl {
+    pub name: String,
+    pub elems: i64,
+    pub elem_bytes: u32,
+    /// simulated base address (assigned by codegen, page-aligned).
+    pub base_addr: u64,
+}
+
+/// A whole lowered program: tensors + blocks in layout order. Layout order
+/// matters — the loop-candidate detector ("a jump targeting a block *above*
+/// it") walks blocks in this order, as in the paper.
+#[derive(Debug, Clone)]
+pub struct AsmProgram {
+    pub tensors: Vec<TensorDecl>,
+    pub blocks: Vec<BasicBlock>,
+    /// GPU-only launch metadata (None for CPU programs).
+    pub launch: Option<LaunchConfig>,
+    /// Extent of the outermost `Parallel` loop (1 = sequential): the
+    /// coordinator/simulator distribute these iterations over cores.
+    pub parallel_extent: i64,
+    /// registers used per thread (GPU) or peak live SIMD regs (CPU);
+    /// reported the way `ptxas -v` would.
+    pub regs_used: u32,
+    /// static shared-memory bytes per block (GPU).
+    pub shared_bytes: u32,
+}
+
+/// GPU kernel launch configuration.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LaunchConfig {
+    pub grid: (u32, u32, u32),
+    pub block: (u32, u32, u32),
+}
+
+impl LaunchConfig {
+    pub fn threads_per_block(&self) -> u32 {
+        self.block.0 * self.block.1 * self.block.2
+    }
+    pub fn num_blocks(&self) -> u64 {
+        self.grid.0 as u64 * self.grid.1 as u64 * self.grid.2 as u64
+    }
+}
+
+impl AsmProgram {
+    pub fn new() -> Self {
+        AsmProgram {
+            tensors: Vec::new(),
+            blocks: Vec::new(),
+            launch: None,
+            parallel_extent: 1,
+            regs_used: 0,
+            shared_bytes: 0,
+        }
+    }
+
+    pub fn total_instrs(&self) -> u64 {
+        self.blocks.iter().map(|b| b.instrs.len() as u64).sum()
+    }
+
+    /// Render in a gdb-disassembly-like text form (debugging / docs).
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        for b in &self.blocks {
+            s.push_str(&format!("LBB{}:\n", b.label));
+            for i in &b.instrs {
+                s.push_str(&format!("  {:?}", i.op));
+                if let Some(d) = i.dst {
+                    s.push_str(&format!(" {d},"));
+                }
+                for r in &i.srcs {
+                    s.push_str(&format!(" {r}"));
+                }
+                if let Some(m) = &i.mem {
+                    s.push_str(&format!(" [t{} + {} + {}]", m.tensor, m.addr_reg, m.offset));
+                }
+                if let Some(v) = i.imm {
+                    s.push_str(&format!(" #{v}"));
+                }
+                if let Some(t) = i.target {
+                    s.push_str(&format!(" -> LBB{t}"));
+                }
+                s.push('\n');
+            }
+        }
+        s
+    }
+}
+
+impl Default for AsmProgram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn significant_sets_disjoint_from_control() {
+        for op in [Opcode::VFma, Opcode::VLoad, Opcode::PtxFma, Opcode::PtxLdGlobal] {
+            assert!(!op.is_control());
+        }
+        assert!(Opcode::Jcc.is_control());
+        assert!(!Opcode::Jcc.is_simd_significant());
+    }
+
+    #[test]
+    fn block_branch_target() {
+        let mut b = BasicBlock::new(3);
+        b.instrs.push(Instr::new(Opcode::VFma).dst(Reg::Vec(0)));
+        b.instrs.push(Instr::new(Opcode::Jcc).target(1));
+        assert_eq!(b.branch_target(), Some(1));
+    }
+
+    #[test]
+    fn launch_counts() {
+        let l = LaunchConfig { grid: (4, 2, 1), block: (32, 4, 1) };
+        assert_eq!(l.threads_per_block(), 128);
+        assert_eq!(l.num_blocks(), 8);
+    }
+}

@@ -1,0 +1,377 @@
+//! Micro-architecture descriptors for the five paper targets.
+//!
+//! Numbers come from public microarchitecture references (Agner Fog tables
+//! for Skylake-SP, ARM Cortex technical reference manuals, Nvidia CUDA
+//! programming guides and the PPT-GPU paper's latency tables). They do not
+//! need to be cycle-exact — the static model only has to *rank* schedules,
+//! and the simulator only has to be a consistent ground truth that models
+//! strictly more effects than the static features see.
+
+use super::instr::Opcode;
+use super::CpuIsa;
+
+
+/// One cache level.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CacheDesc {
+    pub size_bytes: u64,
+    pub assoc: u32,
+    pub line_bytes: u32,
+    /// load-to-use latency in cycles.
+    pub latency: u32,
+}
+
+/// CPU micro-architecture descriptor.
+#[derive(Debug, Clone)]
+pub struct MicroArch {
+    pub name: String,
+    pub isa: CpuIsa,
+    pub freq_ghz: f64,
+    pub num_cores: u32,
+    /// max instructions issued per cycle (the ILP model's structural limit).
+    pub issue_width: u32,
+    /// number of SIMD FMA pipes.
+    pub fma_units: u32,
+    /// number of load ports.
+    pub load_units: u32,
+    /// number of store ports.
+    pub store_units: u32,
+    /// true for in-order cores (Cortex-A53): the simulator disables OoO.
+    pub in_order: bool,
+    /// reorder-buffer size (ignored when `in_order`).
+    pub rob_size: u32,
+    pub l1d: CacheDesc,
+    pub l2: CacheDesc,
+    /// DRAM bandwidth per socket.
+    pub dram_gbps: f64,
+    /// DRAM access latency in cycles.
+    pub dram_latency: u32,
+}
+
+impl MicroArch {
+    /// Instruction latency table for the static ILP model and simulator.
+    pub fn latency(&self, op: Opcode) -> u32 {
+        use Opcode::*;
+        match op {
+            VFma => 4,
+            VAdd | VMax => if matches!(self.isa, CpuIsa::AArch64Neon) { 3 } else { 4 },
+            VMul => 4,
+            VBroadcast => self.l1d.latency,
+            VLoad => self.l1d.latency,
+            VStore => 1, // store-buffer absorbs latency
+            SAdd | Mov | Lea | Cmp => 1,
+            SMul => 3,
+            SFma => 4,
+            SLoad => self.l1d.latency,
+            SStore => 1,
+            Jcc | Jmp => 1,
+            // PTX opcodes never appear in CPU programs.
+            _ => 1,
+        }
+    }
+
+    /// Which execution-port class an opcode occupies (structural hazards).
+    pub fn port_class(&self, op: Opcode) -> PortClass {
+        use Opcode::*;
+        match op {
+            VFma | VAdd | VMul | VMax | SFma | SMul => PortClass::Fma,
+            VLoad | VBroadcast | SLoad => PortClass::Load,
+            VStore | SStore => PortClass::Store,
+            _ => PortClass::Alu,
+        }
+    }
+
+    /// Units available per port class.
+    pub fn units(&self, class: PortClass) -> u32 {
+        match class {
+            PortClass::Fma => self.fma_units,
+            PortClass::Load => self.load_units,
+            PortClass::Store => self.store_units,
+            PortClass::Alu => self.issue_width.saturating_sub(1).max(1),
+        }
+    }
+
+    /// Peak f32 GFLOP/s (for roofline reporting).
+    pub fn peak_gflops(&self) -> f64 {
+        let lanes = self.isa.f32_lanes() as f64;
+        // FMA = 2 flops
+        self.freq_ghz * self.num_cores as f64 * self.fma_units as f64 * lanes * 2.0
+    }
+}
+
+/// Structural port classes for the issue model.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PortClass {
+    Fma,
+    Load,
+    Store,
+    Alu,
+}
+
+/// GPU architecture descriptor (Volta-class).
+#[derive(Debug, Clone)]
+pub struct GpuArch {
+    pub name: String,
+    pub freq_ghz: f64,
+    pub num_sms: u32,
+    /// FP32 CUDA cores per SM.
+    pub cores_per_sm: u32,
+    pub max_threads_per_sm: u32,
+    pub max_blocks_per_sm: u32,
+    pub regs_per_sm: u32,
+    pub shared_per_sm: u32,
+    pub warp_size: u32,
+    /// shared-memory banks (32 on everything >= CC 5.0).
+    pub smem_banks: u32,
+    pub dram_gbps: f64,
+    /// global-memory latency in cycles.
+    pub gmem_latency: u32,
+    /// shared-memory latency in cycles.
+    pub smem_latency: u32,
+}
+
+impl GpuArch {
+    /// PTX instruction cycle cost (issue-to-issue, per warp), following the
+    /// PPT-GPU-style tables the paper cites for Eq. (3).
+    pub fn ptx_cost(&self, op: Opcode) -> f64 {
+        use Opcode::*;
+        match op {
+            PtxFma | PtxAdd | PtxMul => 4.0,
+            PtxLdShared | PtxStShared => self.smem_latency as f64 / 8.0,
+            PtxLdGlobal | PtxStGlobal => 8.0, // issue cost; latency hidden by warps
+            PtxMov | PtxSetp => 1.0,
+            PtxBra => 2.0,
+            PtxBarSync => 8.0,
+            _ => 1.0,
+        }
+    }
+
+    pub fn peak_gflops(&self) -> f64 {
+        self.freq_ghz * self.num_sms as f64 * self.cores_per_sm as f64 * 2.0
+    }
+
+    /// Max resident blocks per SM for a kernel with the given per-block
+    /// register and shared-memory usage (the `ptxas-option` numbers).
+    pub fn blocks_per_sm(&self, threads_per_block: u32, regs_per_thread: u32, shared_bytes: u32) -> u32 {
+        if threads_per_block == 0 {
+            return 0;
+        }
+        let by_threads = self.max_threads_per_sm / threads_per_block.max(1);
+        let by_regs = if regs_per_thread == 0 {
+            self.max_blocks_per_sm
+        } else {
+            self.regs_per_sm / (regs_per_thread * threads_per_block).max(1)
+        };
+        let by_smem = if shared_bytes == 0 {
+            self.max_blocks_per_sm
+        } else {
+            self.shared_per_sm / shared_bytes.max(1)
+        };
+        by_threads.min(by_regs).min(by_smem).min(self.max_blocks_per_sm)
+    }
+}
+
+/// A compilation target: CPU or GPU.
+#[derive(Debug, Clone)]
+pub enum Target {
+    Cpu(MicroArch),
+    Gpu(GpuArch),
+}
+
+/// Target discriminant used in configs and reports.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum TargetKind {
+    XeonPlatinum8124M,
+    Graviton2,
+    CortexA53,
+    TeslaV100,
+    JetsonXavier,
+}
+
+impl TargetKind {
+    pub const ALL: [TargetKind; 5] = [
+        TargetKind::XeonPlatinum8124M,
+        TargetKind::Graviton2,
+        TargetKind::CortexA53,
+        TargetKind::TeslaV100,
+        TargetKind::JetsonXavier,
+    ];
+
+    pub fn is_gpu(self) -> bool {
+        matches!(self, TargetKind::TeslaV100 | TargetKind::JetsonXavier)
+    }
+
+    pub fn display_name(self) -> &'static str {
+        match self {
+            TargetKind::XeonPlatinum8124M => "Intel Xeon Platinum 8124M CPU",
+            TargetKind::Graviton2 => "AWS Graviton2 ARM CPU",
+            TargetKind::CortexA53 => "ARM Quad-core Cortex-A53 64-bit CPU (Acer aiSage)",
+            TargetKind::TeslaV100 => "Nvidia V100 GPU",
+            TargetKind::JetsonXavier => "Nvidia Jetson AGX Xavier GPU",
+        }
+    }
+
+    /// EC2 on-demand $/hr used by Table III (paper's prices).
+    pub fn dollars_per_hour(self) -> Option<f64> {
+        match self {
+            TargetKind::XeonPlatinum8124M => Some(1.53), // c5.9xlarge
+            TargetKind::Graviton2 => Some(0.616),        // m6g.4xlarge
+            TargetKind::TeslaV100 => Some(3.06),         // p3.2xlarge
+            _ => None,                                   // edge devices: no cloud price
+        }
+    }
+
+    pub fn build(self) -> Target {
+        match self {
+            TargetKind::XeonPlatinum8124M => Target::Cpu(xeon_8124m()),
+            TargetKind::Graviton2 => Target::Cpu(graviton2()),
+            TargetKind::CortexA53 => Target::Cpu(cortex_a53()),
+            TargetKind::TeslaV100 => Target::Gpu(tesla_v100()),
+            TargetKind::JetsonXavier => Target::Gpu(jetson_xavier()),
+        }
+    }
+}
+
+/// Intel Xeon Platinum 8124M (Skylake-SP, c5.9xlarge: 18 physical cores).
+pub fn xeon_8124m() -> MicroArch {
+    MicroArch {
+        name: "xeon-platinum-8124m".into(),
+        isa: CpuIsa::X86Avx512,
+        freq_ghz: 3.0,
+        num_cores: 18,
+        issue_width: 4,
+        fma_units: 2,
+        load_units: 2,
+        store_units: 1,
+        in_order: false,
+        rob_size: 224,
+        l1d: CacheDesc { size_bytes: 32 * 1024, assoc: 8, line_bytes: 64, latency: 4 },
+        l2: CacheDesc { size_bytes: 1024 * 1024, assoc: 16, line_bytes: 64, latency: 14 },
+        dram_gbps: 115.0,
+        dram_latency: 190,
+    }
+}
+
+/// AWS Graviton2 (Neoverse-N1, m6g.4xlarge: 16 cores).
+pub fn graviton2() -> MicroArch {
+    MicroArch {
+        name: "graviton2".into(),
+        isa: CpuIsa::AArch64Neon,
+        freq_ghz: 2.5,
+        num_cores: 16,
+        issue_width: 4,
+        fma_units: 2,
+        load_units: 2,
+        store_units: 1,
+        in_order: false,
+        rob_size: 128,
+        l1d: CacheDesc { size_bytes: 64 * 1024, assoc: 4, line_bytes: 64, latency: 4 },
+        l2: CacheDesc { size_bytes: 1024 * 1024, assoc: 8, line_bytes: 64, latency: 11 },
+        dram_gbps: 100.0,
+        dram_latency: 160,
+    }
+}
+
+/// ARM Cortex-A53 (Acer aiSage): in-order dual-issue, small caches.
+pub fn cortex_a53() -> MicroArch {
+    MicroArch {
+        name: "cortex-a53".into(),
+        isa: CpuIsa::AArch64Neon,
+        freq_ghz: 1.4,
+        num_cores: 4,
+        issue_width: 2,
+        fma_units: 1,
+        load_units: 1,
+        store_units: 1,
+        in_order: true,
+        rob_size: 8,
+        l1d: CacheDesc { size_bytes: 32 * 1024, assoc: 4, line_bytes: 64, latency: 3 },
+        l2: CacheDesc { size_bytes: 512 * 1024, assoc: 16, line_bytes: 64, latency: 15 },
+        dram_gbps: 6.4,
+        dram_latency: 140,
+    }
+}
+
+/// Nvidia Tesla V100 (p3.2xlarge).
+pub fn tesla_v100() -> GpuArch {
+    GpuArch {
+        name: "tesla-v100".into(),
+        freq_ghz: 1.38,
+        num_sms: 80,
+        cores_per_sm: 64,
+        max_threads_per_sm: 2048,
+        max_blocks_per_sm: 32,
+        regs_per_sm: 65536,
+        shared_per_sm: 96 * 1024,
+        warp_size: 32,
+        smem_banks: 32,
+        dram_gbps: 900.0,
+        gmem_latency: 400,
+        smem_latency: 24,
+    }
+}
+
+/// Nvidia Jetson AGX Xavier (512-core Volta, 8 SMs).
+pub fn jetson_xavier() -> GpuArch {
+    GpuArch {
+        name: "jetson-agx-xavier".into(),
+        freq_ghz: 1.377,
+        num_sms: 8,
+        cores_per_sm: 64,
+        max_threads_per_sm: 2048,
+        max_blocks_per_sm: 32,
+        regs_per_sm: 65536,
+        shared_per_sm: 96 * 1024,
+        warp_size: 32,
+        smem_banks: 32,
+        dram_gbps: 137.0,
+        gmem_latency: 450,
+        smem_latency: 28,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_targets_build() {
+        for k in TargetKind::ALL {
+            match k.build() {
+                Target::Cpu(m) => assert!(m.peak_gflops() > 0.0),
+                Target::Gpu(g) => assert!(g.peak_gflops() > 0.0),
+            }
+        }
+    }
+
+    #[test]
+    fn xeon_peak_sane() {
+        // 3.0 GHz * 18 cores * 2 FMA * 16 lanes * 2 = 3456 GFLOP/s
+        assert!((xeon_8124m().peak_gflops() - 3456.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn v100_occupancy_limits() {
+        let g = tesla_v100();
+        // 256 threads, 32 regs, 0 smem: thread-limited to 8 blocks.
+        assert_eq!(g.blocks_per_sm(256, 32, 0), 8);
+        // huge shared memory forces 1 block.
+        assert_eq!(g.blocks_per_sm(256, 32, 96 * 1024), 1);
+        // register pressure: 256 threads * 128 regs = 32768 -> 2 blocks.
+        assert_eq!(g.blocks_per_sm(256, 128, 0), 2);
+    }
+
+    #[test]
+    fn a53_is_in_order() {
+        assert!(cortex_a53().in_order);
+        assert!(!graviton2().in_order);
+    }
+
+    #[test]
+    fn prices_match_paper() {
+        assert_eq!(TargetKind::XeonPlatinum8124M.dollars_per_hour(), Some(1.53));
+        assert_eq!(TargetKind::Graviton2.dollars_per_hour(), Some(0.616));
+        assert_eq!(TargetKind::TeslaV100.dollars_per_hour(), Some(3.06));
+        assert_eq!(TargetKind::CortexA53.dollars_per_hour(), None);
+    }
+}

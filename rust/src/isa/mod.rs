@@ -1,0 +1,73 @@
+//! Virtual instruction sets and micro-architecture descriptors.
+//!
+//! The paper extracts features from real x86 AVX assembly, AArch64 NEON
+//! assembly and Nvidia PTX. We have no LLVM/NVCC in this environment, so
+//! [`crate::codegen`] emits programs over *virtual* ISAs that mirror the
+//! instruction classes the paper's cost model counts (`vfmadd`/`vmov` on
+//! AVX, `fmla`/`ld`/`st` on NEON, `fma`/`ld`/`st` on PTX), and this module
+//! carries the per-microarchitecture latency / issue / cache descriptors
+//! from which both the static cost model and the ground-truth simulator are
+//! parameterized.
+//!
+//! Five targets mirror the paper's testbed:
+//! Intel Xeon Platinum 8124M (c5.9xlarge), AWS Graviton2 (m6g.4xlarge),
+//! ARM Cortex-A53 (Acer aiSage), Nvidia V100 (p3.2xlarge) and Nvidia
+//! Jetson AGX Xavier.
+
+pub mod instr;
+pub mod march;
+
+pub use instr::{AsmProgram, BasicBlock, Instr, MemRef, Opcode, Reg};
+pub use march::{CacheDesc, GpuArch, MicroArch, Target, TargetKind};
+
+
+
+/// CPU instruction-set flavor. Determines SIMD width, mnemonic surface and
+/// which instructions the cost model treats as "significant".
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum CpuIsa {
+    /// Intel AVX-512-class (Skylake-SP): `vfmadd231ps`, `vmovups`, 512-bit.
+    X86Avx512,
+    /// Intel AVX2-class: 256-bit.
+    X86Avx2,
+    /// AArch64 NEON: `fmla`, `ldr q`, `str q`, 128-bit.
+    AArch64Neon,
+}
+
+impl CpuIsa {
+    /// SIMD register width in bits.
+    pub fn simd_bits(self) -> u32 {
+        match self {
+            CpuIsa::X86Avx512 => 512,
+            CpuIsa::X86Avx2 => 256,
+            CpuIsa::AArch64Neon => 128,
+        }
+    }
+
+    /// f32 lanes per SIMD register.
+    pub fn f32_lanes(self) -> i64 {
+        (self.simd_bits() / 32) as i64
+    }
+
+    /// Number of architectural SIMD registers (drives spill behaviour in
+    /// the virtual register allocator).
+    pub fn num_simd_regs(self) -> usize {
+        match self {
+            CpuIsa::X86Avx512 => 32,
+            CpuIsa::X86Avx2 => 16,
+            CpuIsa::AArch64Neon => 32,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lanes() {
+        assert_eq!(CpuIsa::X86Avx512.f32_lanes(), 16);
+        assert_eq!(CpuIsa::X86Avx2.f32_lanes(), 8);
+        assert_eq!(CpuIsa::AArch64Neon.f32_lanes(), 4);
+    }
+}

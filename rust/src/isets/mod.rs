@@ -1,0 +1,232 @@
+//! Box-union integer sets — the ISL substitute behind the cache-locality
+//! model (Algorithm 2).
+//!
+//! The paper implements its footprint/data-movement analysis "by using
+//! Integer Set Library". Our schedule space only produces *affine* accesses
+//! (tiling, fusion, reordering keep index expressions of the form
+//! `Σ cᵥ·v + c₀`), so the full polyhedral machinery is unnecessary: the
+//! image of an affine expression over a rectangular iteration domain is a
+//! *strided value set*, and a tensor's footprint is a product of per-dim
+//! value sets (a "box with strides"). Cardinalities, unions and Minkowski
+//! sums on these are exact for small sets (materialized) and tightly
+//! approximated for large ones (interval hull + gcd stride) — precisely the
+//! quantities `CREATE-IntegerSet` / `.cardinality` / `ESTIMATE-Dfp` need.
+
+mod strided;
+
+pub use strided::StridedSet;
+
+
+use std::collections::BTreeMap;
+
+/// An affine term: coefficient × loop variable (identified by id).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Term {
+    pub var: u32,
+    pub coeff: i64,
+}
+
+/// Affine index expression `Σ coeffᵥ·v + konst`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Affine {
+    pub terms: Vec<Term>,
+    pub konst: i64,
+}
+
+impl Affine {
+    pub fn constant(c: i64) -> Self {
+        Affine { terms: Vec::new(), konst: c }
+    }
+
+    pub fn var(v: u32) -> Self {
+        Affine { terms: vec![Term { var: v, coeff: 1 }], konst: 0 }
+    }
+
+    pub fn scaled(v: u32, coeff: i64) -> Self {
+        Affine { terms: vec![Term { var: v, coeff }], konst: 0 }
+    }
+
+    /// self + other, merging like terms and dropping zeros.
+    pub fn add(&self, other: &Affine) -> Affine {
+        let mut m: BTreeMap<u32, i64> = BTreeMap::new();
+        for t in self.terms.iter().chain(other.terms.iter()) {
+            *m.entry(t.var).or_insert(0) += t.coeff;
+        }
+        Affine {
+            terms: m
+                .into_iter()
+                .filter(|&(_, c)| c != 0)
+                .map(|(var, coeff)| Term { var, coeff })
+                .collect(),
+            konst: self.konst + other.konst,
+        }
+    }
+
+    pub fn add_const(&self, c: i64) -> Affine {
+        let mut a = self.clone();
+        a.konst += c;
+        a
+    }
+
+    /// Substitute `var := repl` (used by loop split/unroll: `v -> vo*f + vi`
+    /// or `v -> const`).
+    pub fn subst(&self, var: u32, repl: &Affine) -> Affine {
+        let mut out = Affine { terms: Vec::new(), konst: self.konst };
+        for t in &self.terms {
+            if t.var == var {
+                let mut scaled = repl.clone();
+                for st in &mut scaled.terms {
+                    st.coeff *= t.coeff;
+                }
+                scaled.konst *= t.coeff;
+                out = out.add(&scaled);
+            } else {
+                out = out.add(&Affine { terms: vec![*t], konst: 0 });
+            }
+        }
+        out
+    }
+
+    /// Does the expression reference `var`? (Algorithm 2's reuse test: a
+    /// tensor is reused across iterations of a loop its access function
+    /// does not include.)
+    pub fn uses_var(&self, var: u32) -> bool {
+        self.terms.iter().any(|t| t.var == var)
+    }
+
+    pub fn vars(&self) -> Vec<u32> {
+        self.terms.iter().map(|t| t.var).collect()
+    }
+
+    /// Evaluate with a concrete environment (missing vars read as 0).
+    pub fn eval(&self, env: &dyn Fn(u32) -> i64) -> i64 {
+        self.konst + self.terms.iter().map(|t| t.coeff * env(t.var)).sum::<i64>()
+    }
+
+    /// Image of this expression over rectangular variable domains
+    /// (`var -> extent`, each var ranging over `0..extent`). Vars absent
+    /// from `domains` are treated as fixed at 0 (i.e. "not iterated here").
+    pub fn image(&self, domains: &dyn Fn(u32) -> Option<i64>) -> StridedSet {
+        let mut img = StridedSet::singleton(self.konst);
+        for t in &self.terms {
+            if let Some(extent) = domains(t.var) {
+                if extent > 1 {
+                    let step = StridedSet::arithmetic(0, t.coeff, extent);
+                    img = img.minkowski(&step);
+                }
+            }
+        }
+        img
+    }
+}
+
+/// Footprint of one tensor: a product of per-dimension strided sets,
+/// plus the row-major dimension sizes needed to linearize to elements.
+#[derive(Debug, Clone)]
+pub struct TensorFootprint {
+    /// Per-dimension value sets (same order as tensor dims).
+    pub dims: Vec<StridedSet>,
+    /// Tensor dimension extents (for clamping / linearization).
+    pub shape: Vec<i64>,
+}
+
+impl TensorFootprint {
+    /// Number of distinct elements covered (product of dim cardinalities).
+    /// Exact for product-structured footprints — which is what affine
+    /// accesses over rectangular domains produce.
+    pub fn cardinality(&self) -> i64 {
+        self.dims.iter().map(|d| d.cardinality()).product()
+    }
+
+    /// Union with another footprint of the *same* tensor. Per-dimension
+    /// union keeps the product structure; this is exact when the two
+    /// accesses differ in at most one dimension (the common case: shifted
+    /// windows, load+store of the same buffer) and a tight over-
+    /// approximation otherwise — conservative in the direction Algorithm 2
+    /// needs (never under-reports footprint).
+    pub fn union(&self, other: &TensorFootprint) -> TensorFootprint {
+        assert_eq!(self.dims.len(), other.dims.len());
+        TensorFootprint {
+            dims: self
+                .dims
+                .iter()
+                .zip(other.dims.iter())
+                .map(|(a, b)| a.union(b))
+                .collect(),
+            shape: self.shape.clone(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dom(pairs: &[(u32, i64)]) -> impl Fn(u32) -> Option<i64> + '_ {
+        move |v| pairs.iter().find(|(p, _)| *p == v).map(|(_, e)| *e)
+    }
+
+    #[test]
+    fn affine_add_merges_terms() {
+        let a = Affine::var(0).add(&Affine::scaled(0, 2)).add(&Affine::var(1));
+        assert_eq!(a.terms.len(), 2);
+        assert_eq!(a.terms[0], Term { var: 0, coeff: 3 });
+    }
+
+    #[test]
+    fn image_tiled_index() {
+        // i*16 + j, i in [0,4), j in [0,16): dense 0..64
+        let e = Affine::scaled(0, 16).add(&Affine::var(1));
+        let img = e.image(&dom(&[(0, 4), (1, 16)]));
+        assert_eq!(img.cardinality(), 64);
+        assert_eq!(img.min(), 0);
+        assert_eq!(img.max(), 63);
+    }
+
+    #[test]
+    fn image_with_gaps() {
+        // i*16 + j, j in [0,8): 4 tiles of 8, gaps of 8 -> 32 distinct
+        let e = Affine::scaled(0, 16).add(&Affine::var(1));
+        let img = e.image(&dom(&[(0, 4), (1, 8)]));
+        assert_eq!(img.cardinality(), 32);
+    }
+
+    #[test]
+    fn image_fixed_var() {
+        // var 1 not in domain: treated as pinned -> image of i*3 alone
+        let e = Affine::scaled(0, 3).add(&Affine::var(1));
+        let img = e.image(&dom(&[(0, 5)]));
+        assert_eq!(img.cardinality(), 5);
+        assert_eq!(img.max(), 12);
+    }
+
+    #[test]
+    fn footprint_product() {
+        let fp = TensorFootprint {
+            dims: vec![StridedSet::arithmetic(0, 1, 8), StridedSet::arithmetic(0, 1, 16)],
+            shape: vec![64, 64],
+        };
+        assert_eq!(fp.cardinality(), 128);
+    }
+
+    #[test]
+    fn footprint_union_shifted_window() {
+        // conv-style: rows 0..3 and rows 1..4 -> union 0..4
+        let a = TensorFootprint {
+            dims: vec![StridedSet::arithmetic(0, 1, 3)],
+            shape: vec![10],
+        };
+        let b = TensorFootprint {
+            dims: vec![StridedSet::arithmetic(1, 1, 3)],
+            shape: vec![10],
+        };
+        assert_eq!(a.union(&b).cardinality(), 4);
+    }
+
+    #[test]
+    fn uses_var() {
+        let e = Affine::var(3).add(&Affine::constant(5));
+        assert!(e.uses_var(3));
+        assert!(!e.uses_var(2));
+    }
+}

@@ -1,0 +1,261 @@
+//! Strided value sets: the 1-D building block of the box-union footprints.
+//!
+//! A set is either *materialized* (sorted distinct values — exact, used
+//! while small) or *dense-approximated* (interval hull + gcd stride — a
+//! tight over-approximation used once materialization would exceed
+//! [`MATERIALIZE_LIMIT`]). All operations preserve the invariant that the
+//! approximation never under-counts the true set.
+
+/// Above this size we stop materializing and fall back to hull+stride.
+pub const MATERIALIZE_LIMIT: usize = 4096;
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+enum Repr {
+    /// Sorted, deduplicated values. Exact.
+    Explicit(Vec<i64>),
+    /// `{ min, min+stride, ..., max }` — `(max-min) % stride == 0`.
+    /// May over-approximate (some multiples might be absent).
+    Dense { min: i64, max: i64, stride: i64 },
+}
+
+/// A finite set of integers with strided structure.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct StridedSet {
+    repr: Repr,
+}
+
+fn gcd(a: i64, b: i64) -> i64 {
+    let (mut a, mut b) = (a.abs(), b.abs());
+    while b != 0 {
+        let t = a % b;
+        a = b;
+        b = t;
+    }
+    a
+}
+
+impl StridedSet {
+    pub fn singleton(v: i64) -> Self {
+        StridedSet { repr: Repr::Explicit(vec![v]) }
+    }
+
+    /// Arithmetic progression `{ start, start+step, ..., start+(n-1)·step }`.
+    pub fn arithmetic(start: i64, step: i64, n: i64) -> Self {
+        assert!(n >= 1);
+        if step == 0 || n == 1 {
+            return StridedSet::singleton(start);
+        }
+        if n as usize <= MATERIALIZE_LIMIT {
+            let mut v: Vec<i64> = (0..n).map(|i| start + i * step).collect();
+            v.sort_unstable();
+            StridedSet { repr: Repr::Explicit(v) }
+        } else {
+            let (lo, hi) = if step > 0 {
+                (start, start + (n - 1) * step)
+            } else {
+                (start + (n - 1) * step, start)
+            };
+            StridedSet { repr: Repr::Dense { min: lo, max: hi, stride: step.abs() } }
+        }
+    }
+
+    pub fn min(&self) -> i64 {
+        match &self.repr {
+            Repr::Explicit(v) => v[0],
+            Repr::Dense { min, .. } => *min,
+        }
+    }
+
+    pub fn max(&self) -> i64 {
+        match &self.repr {
+            Repr::Explicit(v) => *v.last().unwrap(),
+            Repr::Dense { max, .. } => *max,
+        }
+    }
+
+    /// Number of distinct values (exact for Explicit, upper bound for Dense).
+    pub fn cardinality(&self) -> i64 {
+        match &self.repr {
+            Repr::Explicit(v) => v.len() as i64,
+            Repr::Dense { min, max, stride } => (max - min) / stride + 1,
+        }
+    }
+
+    /// Minkowski sum `{ a + b : a ∈ self, b ∈ other }`.
+    pub fn minkowski(&self, other: &StridedSet) -> StridedSet {
+        match (&self.repr, &other.repr) {
+            (Repr::Explicit(a), Repr::Explicit(b)) => {
+                if a.len() * b.len() <= MATERIALIZE_LIMIT {
+                    let mut v: Vec<i64> = a
+                        .iter()
+                        .flat_map(|&x| b.iter().map(move |&y| x + y))
+                        .collect();
+                    v.sort_unstable();
+                    v.dedup();
+                    StridedSet { repr: Repr::Explicit(v) }
+                } else {
+                    self.to_dense().minkowski_dense(&other.to_dense())
+                }
+            }
+            _ => self.to_dense().minkowski_dense(&other.to_dense()),
+        }
+    }
+
+    /// Union. Exact when both sides are materialized, hull+gcd otherwise.
+    pub fn union(&self, other: &StridedSet) -> StridedSet {
+        match (&self.repr, &other.repr) {
+            (Repr::Explicit(a), Repr::Explicit(b)) if a.len() + b.len() <= MATERIALIZE_LIMIT => {
+                let mut v: Vec<i64> = a.iter().chain(b.iter()).copied().collect();
+                v.sort_unstable();
+                v.dedup();
+                StridedSet { repr: Repr::Explicit(v) }
+            }
+            _ => {
+                let a = self.to_dense();
+                let b = other.to_dense();
+                let (amin, amax, astr) = a.dense_parts();
+                let (bmin, bmax, bstr) = b.dense_parts();
+                let min = amin.min(bmin);
+                let max = amax.max(bmax);
+                let mut stride = gcd(astr, bstr);
+                // offset misalignment collapses the stride
+                stride = gcd(stride, (amin - bmin).abs());
+                if stride == 0 {
+                    stride = 1;
+                }
+                StridedSet { repr: Repr::Dense { min, max, stride } }
+            }
+        }
+    }
+
+    /// Does the set contain `v`? (Exact for Explicit; for Dense, membership
+    /// in the over-approximation.)
+    pub fn contains(&self, v: i64) -> bool {
+        match &self.repr {
+            Repr::Explicit(xs) => xs.binary_search(&v).is_ok(),
+            Repr::Dense { min, max, stride } => {
+                v >= *min && v <= *max && (v - min) % stride == 0
+            }
+        }
+    }
+
+    /// Iterate values when materialized (analysis helpers/tests only).
+    pub fn values(&self) -> Option<&[i64]> {
+        match &self.repr {
+            Repr::Explicit(v) => Some(v),
+            Repr::Dense { .. } => None,
+        }
+    }
+
+    fn to_dense(&self) -> StridedSet {
+        match &self.repr {
+            Repr::Dense { .. } => self.clone(),
+            Repr::Explicit(v) => {
+                if v.len() == 1 {
+                    return StridedSet {
+                        repr: Repr::Dense { min: v[0], max: v[0], stride: 1 },
+                    };
+                }
+                let mut stride = 0;
+                for w in v.windows(2) {
+                    stride = gcd(stride, w[1] - w[0]);
+                }
+                if stride == 0 {
+                    stride = 1;
+                }
+                StridedSet {
+                    repr: Repr::Dense { min: v[0], max: *v.last().unwrap(), stride },
+                }
+            }
+        }
+    }
+
+    fn dense_parts(&self) -> (i64, i64, i64) {
+        match &self.repr {
+            Repr::Dense { min, max, stride } => (*min, *max, *stride),
+            Repr::Explicit(_) => unreachable!("call to_dense first"),
+        }
+    }
+
+    fn minkowski_dense(&self, other: &StridedSet) -> StridedSet {
+        let (amin, amax, astr) = self.dense_parts();
+        let (bmin, bmax, bstr) = other.dense_parts();
+        let min = amin + bmin;
+        let max = amax + bmax;
+        if min == max {
+            return StridedSet::singleton(min);
+        }
+        let mut stride = gcd(astr, bstr);
+        if stride == 0 {
+            stride = 1;
+        }
+        StridedSet { repr: Repr::Dense { min, max, stride } }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arithmetic_cardinality() {
+        assert_eq!(StridedSet::arithmetic(0, 1, 10).cardinality(), 10);
+        assert_eq!(StridedSet::arithmetic(5, 3, 4).cardinality(), 4);
+        assert_eq!(StridedSet::arithmetic(0, 0, 7).cardinality(), 1);
+    }
+
+    #[test]
+    fn minkowski_dense_tiles() {
+        // {0,16,32,48} ⊕ {0..15} = 0..63 dense
+        let tiles = StridedSet::arithmetic(0, 16, 4);
+        let inner = StridedSet::arithmetic(0, 1, 16);
+        let sum = tiles.minkowski(&inner);
+        assert_eq!(sum.cardinality(), 64);
+        assert_eq!(sum.min(), 0);
+        assert_eq!(sum.max(), 63);
+    }
+
+    #[test]
+    fn minkowski_gapped() {
+        // {0,16,32,48} ⊕ {0..7}: 32 distinct values
+        let tiles = StridedSet::arithmetic(0, 16, 4);
+        let inner = StridedSet::arithmetic(0, 1, 8);
+        assert_eq!(tiles.minkowski(&inner).cardinality(), 32);
+    }
+
+    #[test]
+    fn minkowski_overlapping_windows() {
+        // conv: {0,1,2} ⊕ {0,2,4} (stride-2 output, kernel 3) = {0..6} = 7
+        let k = StridedSet::arithmetic(0, 1, 3);
+        let o = StridedSet::arithmetic(0, 2, 3);
+        assert_eq!(k.minkowski(&o).cardinality(), 7);
+    }
+
+    #[test]
+    fn union_exact_small() {
+        let a = StridedSet::arithmetic(0, 1, 3); // {0,1,2}
+        let b = StridedSet::arithmetic(1, 1, 3); // {1,2,3}
+        let u = a.union(&b);
+        assert_eq!(u.cardinality(), 4);
+        assert!(u.contains(3));
+        assert!(!u.contains(4));
+    }
+
+    #[test]
+    fn dense_never_undercounts() {
+        // worst-case approximation still >= exact cardinality
+        let a = StridedSet::arithmetic(0, 7, 5000); // dense repr (over limit)
+        assert_eq!(a.cardinality(), 5000);
+        let b = StridedSet::arithmetic(3, 11, 5000);
+        let u = a.union(&b);
+        assert!(u.cardinality() >= 5000);
+    }
+
+    #[test]
+    fn negative_steps() {
+        let a = StridedSet::arithmetic(10, -2, 4); // {10,8,6,4}
+        assert_eq!(a.min(), 4);
+        assert_eq!(a.max(), 10);
+        assert_eq!(a.cardinality(), 4);
+    }
+}

@@ -1,0 +1,66 @@
+//! # Tuna — static-analysis optimization of deep-learning tensor programs
+//!
+//! Reproduction of *"Tuna: A Static Analysis Approach to Optimizing Deep
+//! Neural Networks"* (Wang et al., 2021).
+//!
+//! Tuna replaces the measure-on-device cost model of auto-tuning compilers
+//! (AutoTVM-style) with a *static*, hardware-aware analytical cost model so
+//! that tensor-program schedule search needs no target hardware at compile
+//! time, parallelizes across host cores, and cuts compile time by orders of
+//! magnitude while retaining ~90% of fully-tuned performance.
+//!
+//! ## Crate layout (bottom-up)
+//!
+//! * [`util`] — deterministic RNG, small math helpers.
+//! * [`isa`] — virtual CPU/GPU instruction sets and per-microarchitecture
+//!   latency / issue-width / cache descriptors (Xeon-, Graviton2-, A53-,
+//!   V100-, Xavier-like targets).
+//! * [`isets`] — box-union integer-set library (ISL substitute) used by the
+//!   cache-locality model.
+//! * [`tir`] — mini tensor IR: loop-nest trees over affine accesses, plus
+//!   operator specs (conv2d, winograd, depthwise, batch-matmul, dense).
+//! * [`transform`] — schedule primitives (tile / reorder / fuse / vectorize /
+//!   unroll / parallel) and per-operator AutoTVM-style config spaces.
+//! * [`codegen`] — lowers scheduled TIR to virtual assembly (CPU) or
+//!   PTX-like code (GPU), with register allocation, unrolling and
+//!   SLP-style vectorization that *obscure* the loop structure exactly the
+//!   way LLVM/NVCC output does.
+//! * [`analysis`] — the paper's static cost model: joint IR/asm loop mapping
+//!   (Alg. 1), cache data-movement model (Alg. 2), ILP scheduler, PTX loop
+//!   recovery (Alg. 3), GPU thread-level-parallelism features, and the
+//!   linear per-architecture cost model.
+//! * [`sim`] — cycle-approximate device simulators (ground truth + the
+//!   "real device" the dynamic baseline must pay to measure on).
+//! * [`search`] — Evolution Strategies (Alg. 4) plus random/grid baselines.
+//! * [`autotvm`] — the dynamic-profiling baseline: surrogate model trained
+//!   online from (simulated) device measurements, sequential measure queue.
+//! * [`vendor`] — fixed "vendor library / framework" schedules.
+//! * [`graph`] — whole-network workloads (SSD-MobileNet, SSD-Inception,
+//!   ResNet-50, BERT-base shape inventories) and latency aggregation.
+//! * [`coordinator`] — multi-threaded tuning orchestrator with schedule
+//!   cache and both wall-clock and virtual device-clock accounting.
+//! * [`runtime`] — PJRT artifact loading/execution for the e2e example.
+//! * [`metrics`] — table/figure renderers for the paper's evaluation.
+//! * [`config`] — TOML-backed configuration for targets/search/workloads.
+
+pub mod analysis;
+pub mod autotvm;
+pub mod codegen;
+pub mod config;
+pub mod coordinator;
+pub mod graph;
+pub mod isa;
+pub mod isets;
+pub mod metrics;
+pub mod runtime;
+pub mod search;
+pub mod sim;
+pub mod tir;
+pub mod transform;
+pub mod util;
+pub mod vendor;
+
+pub use analysis::cost::{CostModel, FeatureVector};
+pub use isa::MicroArch;
+pub use tir::ops::OpSpec;
+pub use transform::space::{ConfigSpace, ScheduleConfig};

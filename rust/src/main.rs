@@ -1,0 +1,356 @@
+//! `tuna` — command-line driver for the Tuna reproduction.
+//!
+//! Subcommands (hand-rolled parsing; the offline environment has no clap):
+//!
+//! ```text
+//! tuna targets                         list the five target descriptors
+//! tuna calibrate --target <t>          fit + print cost-model coefficients
+//! tuna tune-op --op <spec> --target <t> [--strategy tuna|autotvm|vendor]
+//!                                      [--trials N] [--pop N] [--iters N]
+//! tuna tune-net --net <name> --target <t> [--strategy ...] [--trials N]
+//! tuna tables [--targets <list>] [--nets <list>] [--trials N] [--fast]
+//! tuna sweep --topk K [--targets <list>] [--trials N]
+//! tuna e2e [--artifacts DIR]           PJRT artifact ranking check
+//! ```
+
+use std::collections::BTreeMap;
+use std::process::exit;
+
+use tuna::config::parse_targets;
+use tuna::coordinator::{Coordinator, Strategy};
+use tuna::graph;
+use tuna::isa::{Target, TargetKind};
+use tuna::metrics;
+use tuna::search::EsParams;
+use tuna::tir::ops::OpSpec;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = args.first() else {
+        usage();
+        exit(2);
+    };
+    let flags = parse_flags(&args[1..]);
+    let r = match cmd.as_str() {
+        "targets" => cmd_targets(),
+        "calibrate" => cmd_calibrate(&flags),
+        "tune-op" => cmd_tune_op(&flags),
+        "tune-net" => cmd_tune_net(&flags),
+        "tables" => cmd_tables(&flags),
+        "sweep" => cmd_sweep(&flags),
+        "e2e" => cmd_e2e(&flags),
+        "-h" | "--help" | "help" => {
+            usage();
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown command {other:?}");
+            usage();
+            exit(2);
+        }
+    };
+    if let Err(e) = r {
+        eprintln!("error: {e}");
+        exit(1);
+    }
+}
+
+fn usage() {
+    eprintln!(
+        "tuna — static-analysis DNN optimization (paper reproduction)\n\
+         commands: targets | calibrate | tune-op | tune-net | tables | sweep | e2e\n\
+         see rust/src/main.rs header for flags"
+    );
+}
+
+fn parse_flags(args: &[String]) -> BTreeMap<String, String> {
+    let mut m = BTreeMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        let a = &args[i];
+        if let Some(key) = a.strip_prefix("--") {
+            if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                m.insert(key.to_string(), args[i + 1].clone());
+                i += 2;
+            } else {
+                m.insert(key.to_string(), "true".to_string());
+                i += 1;
+            }
+        } else {
+            i += 1;
+        }
+    }
+    m
+}
+
+fn targets_of(flags: &BTreeMap<String, String>) -> Result<Vec<TargetKind>, String> {
+    match flags.get("targets").or(flags.get("target")) {
+        Some(s) => parse_targets(s),
+        None => Ok(TargetKind::ALL.to_vec()),
+    }
+}
+
+/// Parse `--op` specs like `matmul:256x256x256`, `bmm:12x128x128x64`,
+/// `conv2d:64,56,56,64,3,1,1` (cin,h,w,cout,k,stride,pad),
+/// `dwconv:96,112,112,3,2,1`, `winograd:64,56,56,64`.
+fn parse_op(s: &str) -> Result<OpSpec, String> {
+    let (kind, rest) = s.split_once(':').ok_or("op spec needs kind:dims")?;
+    let dims: Vec<i64> = rest
+        .split(|c| c == 'x' || c == ',')
+        .map(|d| d.trim().parse().map_err(|e| format!("bad dim {d:?}: {e}")))
+        .collect::<Result<_, _>>()?;
+    let need = |n: usize| {
+        if dims.len() == n {
+            Ok(())
+        } else {
+            Err(format!("{kind} needs {n} dims, got {}", dims.len()))
+        }
+    };
+    match kind {
+        "matmul" | "dense" => {
+            need(3)?;
+            Ok(OpSpec::Matmul { m: dims[0], n: dims[1], k: dims[2] })
+        }
+        "bmm" => {
+            need(4)?;
+            Ok(OpSpec::BatchMatmul { b: dims[0], m: dims[1], n: dims[2], k: dims[3] })
+        }
+        "conv2d" => {
+            need(7)?;
+            Ok(OpSpec::Conv2d {
+                n: 1,
+                cin: dims[0],
+                h: dims[1],
+                w: dims[2],
+                cout: dims[3],
+                kh: dims[4],
+                kw: dims[4],
+                stride: dims[5],
+                pad: dims[6],
+            })
+        }
+        "dwconv" => {
+            need(6)?;
+            Ok(OpSpec::DepthwiseConv2d {
+                n: 1,
+                c: dims[0],
+                h: dims[1],
+                w: dims[2],
+                kh: dims[3],
+                kw: dims[3],
+                stride: dims[4],
+                pad: dims[5],
+            })
+        }
+        "winograd" => {
+            need(4)?;
+            Ok(OpSpec::Conv2dWinograd {
+                n: 1,
+                cin: dims[0],
+                h: dims[1],
+                w: dims[2],
+                cout: dims[3],
+            })
+        }
+        other => Err(format!("unknown op kind {other:?}")),
+    }
+}
+
+fn es_params(flags: &BTreeMap<String, String>) -> EsParams {
+    let mut p = EsParams::default();
+    if let Some(v) = flags.get("pop").and_then(|v| v.parse().ok()) {
+        p.population = v;
+    }
+    if let Some(v) = flags.get("iters").and_then(|v| v.parse().ok()) {
+        p.iterations = v;
+    }
+    if let Some(v) = flags.get("seed").and_then(|v| v.parse().ok()) {
+        p.seed = v;
+    }
+    p
+}
+
+fn cmd_targets() -> Result<(), String> {
+    for k in TargetKind::ALL {
+        match k.build() {
+            Target::Cpu(m) => println!(
+                "{:<55} cpu  {:>4} cores @ {:.2} GHz, {}-bit SIMD, peak {:.0} GF/s",
+                k.display_name(),
+                m.num_cores,
+                m.freq_ghz,
+                m.isa.simd_bits(),
+                m.peak_gflops()
+            ),
+            Target::Gpu(g) => println!(
+                "{:<55} gpu  {:>4} SMs  @ {:.2} GHz, peak {:.0} GF/s",
+                k.display_name(),
+                g.num_sms,
+                g.freq_ghz,
+                g.peak_gflops()
+            ),
+        }
+    }
+    Ok(())
+}
+
+fn cmd_calibrate(flags: &BTreeMap<String, String>) -> Result<(), String> {
+    for kind in targets_of(flags)? {
+        let cm = tuna::coordinator::calibrate::calibrated_model(kind);
+        let names: &[&str] = if kind.is_gpu() {
+            &tuna::analysis::cost::GPU_FEATURES
+        } else {
+            &tuna::analysis::cost::CPU_FEATURES
+        };
+        println!("# {}", kind.display_name());
+        for (n, c) in names.iter().zip(&cm.coeffs) {
+            println!("  {n:<16} {c:.6}");
+        }
+    }
+    Ok(())
+}
+
+fn cmd_tune_op(flags: &BTreeMap<String, String>) -> Result<(), String> {
+    let op = parse_op(flags.get("op").ok_or("--op required")?)?;
+    let kinds = targets_of(flags)?;
+    let strategy = strategy_of(flags)?;
+    for kind in kinds {
+        let c = Coordinator::new(kind);
+        let space = tuna::transform::config_space(&op, kind);
+        let r = c.tune_op(&op, &strategy);
+        let gflops = op.flops() as f64 / r.latency_s / 1e9;
+        println!(
+            "{:<50} {:>10.4} ms  {:>8.1} GF/s  wall {:>7.2}s  device {:>8.1}s  evals {} (space {})",
+            format!("{op} @ {}", kind.display_name()),
+            r.latency_s * 1e3,
+            gflops,
+            r.wall_s,
+            r.device_s,
+            r.evaluations,
+            space.size(),
+        );
+    }
+    Ok(())
+}
+
+fn cmd_tune_net(flags: &BTreeMap<String, String>) -> Result<(), String> {
+    let name = flags.get("net").ok_or("--net required")?;
+    let net = graph::all_networks()
+        .into_iter()
+        .find(|n| n.name == name)
+        .ok_or_else(|| {
+            format!("unknown network {name:?} (ssd_mobilenet|ssd_inception|resnet50|bert_base)")
+        })?;
+    let strategy = strategy_of(flags)?;
+    for kind in targets_of(flags)? {
+        let c = Coordinator::new(kind);
+        let r = c.tune_network(&net, &strategy);
+        println!(
+            "{:<18} {:<45} latency {:>9.2} ms  compile {:>9.1}s (wall {:.1}s + device {:.1}s)  ops {}",
+            net.display,
+            kind.display_name(),
+            r.latency_s * 1e3,
+            r.compile_seconds(),
+            r.wall_s,
+            r.device_s,
+            r.per_op.len()
+        );
+        println!("{}", metrics::report_json(&r).to_string());
+    }
+    Ok(())
+}
+
+fn strategy_of(flags: &BTreeMap<String, String>) -> Result<Strategy, String> {
+    let trials: u64 = flags.get("trials").and_then(|v| v.parse().ok()).unwrap_or(64);
+    Ok(match flags.get("strategy").map(String::as_str).unwrap_or("tuna") {
+        "tuna" => Strategy::TunaStatic(es_params(flags)),
+        "autotvm" => Strategy::AutoTvmFull { trials },
+        "autotvm-partial" => Strategy::AutoTvmPartial {
+            budget_s: flags.get("budget").and_then(|v| v.parse().ok()).unwrap_or(10.0),
+        },
+        "vendor" => Strategy::Vendor,
+        other => return Err(format!("unknown strategy {other:?}")),
+    })
+}
+
+/// The full Tables I-III pipeline (the benches call the same library code;
+/// this is the interactive entry point).
+fn cmd_tables(flags: &BTreeMap<String, String>) -> Result<(), String> {
+    let kinds = targets_of(flags)?;
+    let fast = flags.contains_key("fast");
+    let trials: u64 = flags
+        .get("trials")
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(if fast { 24 } else { 96 });
+    let nets = graph::all_networks();
+    let selected: Vec<&graph::Network> = match flags.get("nets") {
+        Some(list) => nets
+            .iter()
+            .filter(|n| list.split(',').any(|s| s.trim() == n.name))
+            .collect(),
+        None => nets.iter().collect(),
+    };
+    let names: Vec<&str> = selected.iter().map(|n| n.name).collect();
+    let displays: Vec<&str> = selected.iter().map(|n| n.display).collect();
+
+    for kind in kinds {
+        let c = Coordinator::new(kind);
+        let mut results: BTreeMap<String, BTreeMap<String, tuna::coordinator::NetworkReport>> =
+            BTreeMap::new();
+        for net in &selected {
+            eprintln!("[{}] tuning {} ...", kind.display_name(), net.name);
+            let mut es = es_params(flags);
+            if fast {
+                es.population = 16;
+                es.iterations = 8;
+            }
+            let tuna_rep = c.tune_network(net, &Strategy::TunaStatic(es));
+            let budget = c.partial_budget_per_op(&tuna_rep);
+            let partial = c.tune_network(net, &Strategy::AutoTvmPartial { budget_s: budget });
+            let full = c.tune_network(net, &Strategy::AutoTvmFull { trials });
+            let vendor = c.tune_network(net, &Strategy::Vendor);
+            results.entry("Tuna".into()).or_default().insert(net.name.into(), tuna_rep);
+            results
+                .entry("AutoTVM Partial".into())
+                .or_default()
+                .insert(net.name.into(), partial);
+            results.entry("AutoTVM Full".into()).or_default().insert(net.name.into(), full);
+            results.entry("Framework".into()).or_default().insert(net.name.into(), vendor);
+        }
+        println!("{}", metrics::table1(kind, &results, &names, &displays));
+        println!("{}", metrics::table2(kind, &results, &names, &displays));
+        if let Some(t3) = metrics::table3(kind, &results, &names, &displays) {
+            println!("{t3}");
+        }
+    }
+    Ok(())
+}
+
+/// Figures 3/4: single-operator top-k performance ratios.
+fn cmd_sweep(flags: &BTreeMap<String, String>) -> Result<(), String> {
+    let k: usize = flags.get("topk").and_then(|v| v.parse().ok()).unwrap_or(10);
+    let trials: u64 = flags.get("trials").and_then(|v| v.parse().ok()).unwrap_or(128);
+    for kind in targets_of(flags)? {
+        let c = Coordinator::new(kind);
+        let mut entries = Vec::new();
+        for op in tuna::tir::ops::figure_op_suite() {
+            let ratio = metrics::topk_sweep_ratio(&c, &op, k, trials);
+            entries.push((op.to_string(), ratio));
+        }
+        println!(
+            "{}",
+            metrics::figure_topk(
+                &format!("Top-{k} performance ratio — {}", kind.display_name()),
+                &entries
+            )
+        );
+    }
+    Ok(())
+}
+
+fn cmd_e2e(flags: &BTreeMap<String, String>) -> Result<(), String> {
+    let dir = flags
+        .get("artifacts")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(tuna::runtime::artifacts_dir);
+    tuna::runtime::e2e::run(&dir, 3).map_err(|e| e.to_string())
+}

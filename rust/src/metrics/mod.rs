@@ -1,0 +1,245 @@
+//! Table/figure renderers for the paper's evaluation artifacts.
+//!
+//! Every table/figure in the paper has a generator here that takes the
+//! coordinator's reports and prints the same rows/series the paper
+//! reports (markdown-ish aligned text + machine-readable JSON dump).
+
+use crate::coordinator::NetworkReport;
+use crate::isa::TargetKind;
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+/// Render an aligned text table.
+pub fn render_table(title: &str, headers: &[String], rows: &[Vec<String>]) -> String {
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for r in rows {
+        for (i, c) in r.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+    }
+    let mut s = format!("## {title}\n");
+    let line = |cells: &[String], w: &[usize]| -> String {
+        let mut out = String::from("|");
+        for (i, c) in cells.iter().enumerate() {
+            out.push_str(&format!(" {:<width$} |", c, width = w[i]));
+        }
+        out.push('\n');
+        out
+    };
+    s.push_str(&line(headers, &widths));
+    s.push_str(&format!(
+        "|{}\n",
+        widths.iter().map(|w| format!("{}-|", "-".repeat(w + 2 - 1))).collect::<String>()
+    ));
+    for r in rows {
+        s.push_str(&line(r, &widths));
+    }
+    s
+}
+
+/// Strategy-row labels in the paper's order.
+pub const TABLE1_ROWS: [&str; 4] = ["Framework", "AutoTVM Partial", "AutoTVM Full", "Tuna"];
+
+/// Table I (one target): network latency in ms per strategy.
+/// `results[strategy][network] = NetworkReport`.
+pub fn table1(
+    target: TargetKind,
+    results: &BTreeMap<String, BTreeMap<String, NetworkReport>>,
+    networks: &[&str],
+    displays: &[&str],
+) -> String {
+    let mut headers = vec!["Unit: ms".to_string()];
+    headers.extend(displays.iter().map(|d| d.to_string()));
+    let mut rows = Vec::new();
+    for strat in TABLE1_ROWS {
+        if let Some(per_net) = results.get(strat) {
+            let mut row = vec![strat.to_string()];
+            for net in networks {
+                row.push(match per_net.get(*net) {
+                    Some(r) => format!("{:.2}", r.latency_s * 1e3),
+                    None => "-".into(),
+                });
+            }
+            rows.push(row);
+        }
+    }
+    render_table(
+        &format!("Table I: entire network performance — {}", target.display_name()),
+        &headers,
+        &rows,
+    )
+}
+
+/// Table II (one target): compilation time per strategy (AutoTVM vs Tuna).
+pub fn table2(
+    target: TargetKind,
+    results: &BTreeMap<String, BTreeMap<String, NetworkReport>>,
+    networks: &[&str],
+    displays: &[&str],
+) -> String {
+    let mut headers = vec!["Unit: s".to_string()];
+    headers.extend(displays.iter().map(|d| d.to_string()));
+    let mut rows = Vec::new();
+    for strat in ["AutoTVM Full", "Tuna"] {
+        if let Some(per_net) = results.get(strat) {
+            let mut row =
+                vec![if strat == "AutoTVM Full" { "AutoTVM".to_string() } else { strat.to_string() }];
+            for net in networks {
+                row.push(match per_net.get(*net) {
+                    Some(r) => format!("{:.2}", r.compile_seconds()),
+                    None => "-".into(),
+                });
+            }
+            rows.push(row);
+        }
+    }
+    // speedup row
+    if let (Some(a), Some(t)) = (results.get("AutoTVM Full"), results.get("Tuna")) {
+        let mut row = vec!["Speedup".to_string()];
+        for net in networks {
+            row.push(match (a.get(*net), t.get(*net)) {
+                (Some(ar), Some(tr)) if tr.compile_seconds() > 0.0 => {
+                    format!("{:.0}x", ar.compile_seconds() / tr.compile_seconds())
+                }
+                _ => "-".into(),
+            });
+        }
+        rows.push(row);
+    }
+    render_table(
+        &format!("Table II: compilation time — {}", target.display_name()),
+        &headers,
+        &rows,
+    )
+}
+
+/// Table III (cloud targets only): compilation cost in dollars.
+pub fn table3(
+    target: TargetKind,
+    results: &BTreeMap<String, BTreeMap<String, NetworkReport>>,
+    networks: &[&str],
+    displays: &[&str],
+) -> Option<String> {
+    let price = target.dollars_per_hour()?;
+    let mut headers = vec!["Unit: $".to_string()];
+    headers.extend(displays.iter().map(|d| d.to_string()));
+    let mut rows = Vec::new();
+    for strat in ["AutoTVM Full", "Tuna"] {
+        if let Some(per_net) = results.get(strat) {
+            let mut row =
+                vec![if strat == "AutoTVM Full" { "AutoTVM".to_string() } else { strat.to_string() }];
+            for net in networks {
+                row.push(match per_net.get(*net) {
+                    Some(r) => format!("{:.4}", r.compile_seconds() / 3600.0 * price),
+                    None => "-".into(),
+                });
+            }
+            rows.push(row);
+        }
+    }
+    Some(render_table(
+        &format!(
+            "Table III: compilation cost — {} (${price}/hr)",
+            target.display_name()
+        ),
+        &headers,
+        &rows,
+    ))
+}
+
+/// Figures 3/4: per-operator top-k performance ratio
+/// (Σ AutoTVM-top-k latencies / Σ Tuna-top-k latencies — approaching 1
+/// means the static model ranks like real execution).
+pub fn topk_ratio(tuna_topk_latencies: &[f64], autotvm_topk_latencies: &[f64]) -> f64 {
+    let t: f64 = tuna_topk_latencies.iter().sum();
+    let a: f64 = autotvm_topk_latencies.iter().sum();
+    if t <= 0.0 {
+        return 0.0;
+    }
+    a / t
+}
+
+/// Render a Figure-3/4-style bar series.
+pub fn figure_topk(title: &str, entries: &[(String, f64)]) -> String {
+    let mut s = format!("## {title}\n");
+    for (name, ratio) in entries {
+        let bar = "#".repeat((ratio * 40.0).round().clamp(0.0, 60.0) as usize);
+        s.push_str(&format!("{name:<42} {ratio:>6.3} {bar}\n"));
+    }
+    let avg = entries.iter().map(|(_, r)| *r).sum::<f64>() / entries.len().max(1) as f64;
+    s.push_str(&format!("{:<42} {avg:>6.3}\n", "AVERAGE"));
+    s
+}
+
+/// One Figure-3/4 data point: run Tuna's static search and the measured
+/// AutoTVM tuner on the same operator/space, measure both top-k sets on
+/// the device, and return the latency-sum ratio.
+pub fn topk_sweep_ratio(
+    c: &crate::coordinator::Coordinator,
+    op: &crate::tir::ops::OpSpec,
+    k: usize,
+    autotvm_trials: u64,
+) -> f64 {
+    use crate::coordinator::Strategy;
+    use crate::search::EsParams;
+    let es = EsParams { k, ..Default::default() };
+    let tuna = c.tune_op(op, &Strategy::TunaStatic(es));
+    let atvm = c.tune_op(op, &Strategy::AutoTvmFull { trials: autotvm_trials });
+    // measure both top-k sets on the device (ground truth)
+    let measure = |top: &[(crate::transform::ScheduleConfig, f64)]| -> Vec<f64> {
+        top.iter().take(k).map(|(cfg, _)| c.device.run(op, cfg).seconds).collect()
+    };
+    let tuna_lat = measure(&tuna.top_k);
+    let atvm_lat = measure(&atvm.top_k);
+    topk_ratio(&tuna_lat, &atvm_lat)
+}
+
+/// JSON dump of a network report (for EXPERIMENTS.md regeneration).
+pub fn report_json(r: &NetworkReport) -> Json {
+    Json::obj(vec![
+        ("network", Json::Str(r.network.to_string())),
+        ("target", Json::Str(r.target.display_name().to_string())),
+        ("latency_ms", Json::Num(r.latency_s * 1e3)),
+        ("wall_s", Json::Num(r.wall_s)),
+        ("device_s", Json::Num(r.device_s)),
+        ("compile_s", Json::Num(r.compile_seconds())),
+        ("ops", Json::Num(r.per_op.len() as f64)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let t = render_table(
+            "Demo",
+            &["A".into(), "Long header".into()],
+            &[vec!["1".into(), "2".into()], vec!["333".into(), "4".into()]],
+        );
+        assert!(t.contains("## Demo"));
+        assert!(t.contains("| 333"));
+        let widths: Vec<usize> = t.lines().map(|l| l.len()).collect();
+        // all table body lines same width
+        assert_eq!(widths[1], widths[3]);
+    }
+
+    #[test]
+    fn ratio_semantics() {
+        // Tuna picked slightly worse schedules -> ratio < 1
+        let r = topk_ratio(&[1.1, 1.2], &[1.0, 1.1]);
+        assert!(r < 1.0 && r > 0.8);
+        // identical picks -> 1.0
+        assert!((topk_ratio(&[1.0], &[1.0]) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn figure_contains_average() {
+        let f = figure_topk("Fig", &[("conv2d".into(), 0.9), ("dense".into(), 0.8)]);
+        assert!(f.contains("AVERAGE"));
+        assert!(f.contains("0.850"));
+    }
+}

@@ -1,0 +1,211 @@
+//! End-to-end three-layer check: static ranking vs real PJRT execution.
+//!
+//! Loads the AOT artifacts (L1 Pallas kernel inside the L2 JAX graph,
+//! lowered to HLO text by `make artifacts`) and executes them through the
+//! PJRT CPU client. The host CPU is treated as a *sixth* target, exactly
+//! the way the paper onboards a new device:
+//!
+//! 1. **profile** — the `mlp_*` artifacts (different operator, different
+//!    shapes from the eval set) are measured on the host; NNLS fits the
+//!    host's cost-model coefficients from their static features — the
+//!    paper's "empirical profiling data" step;
+//! 2. **predict** — the fitted model statically ranks the `matmul_*`
+//!    schedule variants, never executing them;
+//! 3. **verify** — every variant is then executed: numerics are checked
+//!    against an f64 reference, and the static ranking is scored against
+//!    measured wall-clock (Spearman + regret of the top static pick).
+
+use super::{read_manifest, ManifestEntry, Runtime};
+use crate::analysis::cost::FeatureVector;
+use crate::analysis::CostModel;
+use crate::isa::TargetKind;
+use crate::tir::ops::OpSpec;
+use crate::transform::{self, ScheduleConfig};
+use crate::util::stats::{nnls_fit, spearman};
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// Parse a "bm<B>_bn<N>_bk<K>" schedule tag.
+pub fn parse_tag(tag: &str) -> Option<(i64, i64, i64)> {
+    let mut bm = None;
+    let mut bn = None;
+    let mut bk = None;
+    for part in tag.split('_') {
+        if let Some(v) = part.strip_prefix("bm") {
+            bm = v.parse().ok();
+        } else if let Some(v) = part.strip_prefix("bn") {
+            bn = v.parse().ok();
+        } else if let Some(v) = part.strip_prefix("bk") {
+            bk = v.parse().ok();
+        }
+    }
+    Some((bm?, bn?, bk?))
+}
+
+/// Map a (bm, bn, bk) Pallas schedule to the nearest config in the Rust
+/// matmul space (tiles beyond the space's cap clamp to the largest
+/// candidate).
+pub fn config_for_tiles(op: &OpSpec, kind: TargetKind, tiles: (i64, i64, i64)) -> ScheduleConfig {
+    let space = transform::config_space(op, kind);
+    let mut cfg = space.default_config();
+    for (name, want) in [("tile_m", tiles.0), ("tile_n", tiles.1), ("tile_k", tiles.2)] {
+        if let Some((i, k)) = space.knobs.iter().enumerate().find(|(_, k)| k.name == name) {
+            let mut best = 0;
+            let mut bd = i64::MAX;
+            for (vi, v) in k.values.iter().enumerate() {
+                if let crate::transform::space::KnobValue::Int(x) = v {
+                    let d = (x - want).abs();
+                    if d < bd {
+                        bd = d;
+                        best = vi;
+                    }
+                }
+            }
+            cfg.choices[i] = best;
+        }
+    }
+    cfg
+}
+
+/// Static features of one GEMM under a Pallas tile triple (host model).
+fn gemm_features(cm: &CostModel, m: i64, n: i64, k: i64, tiles: (i64, i64, i64)) -> FeatureVector {
+    let op = OpSpec::Matmul { m, n, k };
+    let cfg = config_for_tiles(&op, cm.kind, tiles);
+    cm.features(&op, &cfg)
+}
+
+fn add_features(a: &FeatureVector, b: &FeatureVector) -> FeatureVector {
+    FeatureVector {
+        values: a.values.iter().zip(&b.values).map(|(x, y)| x + y).collect(),
+    }
+}
+
+fn mk_input(rows: i64, cols_opt: Option<i64>, seed: u64) -> (Vec<f32>, Vec<i64>) {
+    let mut rng = crate::util::Rng::new(seed);
+    match cols_opt {
+        Some(cols) => (
+            (0..rows * cols).map(|_| rng.f64() as f32 - 0.5).collect(),
+            vec![rows, cols],
+        ),
+        None => ((0..rows).map(|_| rng.f64() as f32 - 0.5).collect(), vec![rows]),
+    }
+}
+
+fn inputs_for(entry: &ManifestEntry) -> Vec<(Vec<f32>, Vec<i64>)> {
+    entry
+        .inputs
+        .iter()
+        .enumerate()
+        .map(|(i, shape)| match shape.as_slice() {
+            [r, c] => mk_input(*r, Some(*c), i as u64 + 1),
+            [r] => mk_input(*r, None, i as u64 + 1),
+            other => panic!("unsupported input rank {other:?}"),
+        })
+        .collect()
+}
+
+/// Run the e2e check; `repeats` = timing repetitions per variant.
+pub fn run(dir: &Path, repeats: usize) -> Result<()> {
+    let entries = read_manifest(dir)?;
+    let rt = Runtime::cpu()?;
+    println!("PJRT platform: {}", rt.platform());
+
+    // feature extractor (coefficients irrelevant for extraction)
+    let host = TargetKind::XeonPlatinum8124M;
+    let extractor = CostModel::with_default_coeffs(host);
+
+    // ---- phase 1: profile the mlp_* artifacts, fit host coefficients ----
+    let (b, d, h) = (128i64, 256i64, 512i64); // python model.MLP_SHAPE
+    let mut calib: Vec<(FeatureVector, f64)> = Vec::new();
+    for entry in entries.iter().filter(|e| e.name.starts_with("mlp_")) {
+        let exe = rt.load_hlo_text(&dir.join(&entry.path))?;
+        let inputs = inputs_for(entry);
+        let secs = exe.time_median(&inputs, repeats)?;
+        let tiles = parse_tag(&entry.schedule).context("mlp tag")?;
+        // the block is two GEMMs: (b,d)x(d,h) and (b,h)x(h,d)
+        let fv = add_features(
+            &gemm_features(&extractor, b, h, d, tiles),
+            &gemm_features(&extractor, b, d, h, tiles),
+        );
+        println!("  profile {:<22} {:>10.3} ms", entry.schedule, secs * 1e3);
+        calib.push((fv, secs * 1e9)); // ns scale, rank-invariant
+    }
+    if calib.len() < 3 {
+        bail!("need >=3 mlp artifacts for host calibration, found {}", calib.len());
+    }
+    let x: Vec<Vec<f64>> = calib.iter().map(|(f, _)| f.values.clone()).collect();
+    let y: Vec<f64> = calib.iter().map(|(_, t)| *t).collect();
+    let coeffs = nnls_fit(&x, &y, 1e-3, 500);
+    let cm = CostModel::with_coeffs(host, coeffs);
+    println!("host coefficients fit from {} profiled variants", calib.len());
+
+    // ---- phase 2+3: statically rank the matmul_* variants, then verify --
+    let (m, n, k) = (256i64, 256i64, 256i64); // python model.MATMUL_SHAPE
+    let op = OpSpec::Matmul { m, n, k };
+    let x_in = mk_input(m, Some(k), 1);
+    let w_in = mk_input(k, Some(n), 2);
+    // f64 reference for numerics
+    let reference = {
+        let mut out = vec![0f64; (m * n) as usize];
+        for i in 0..m as usize {
+            for kk in 0..k as usize {
+                let a = x_in.0[i * k as usize + kk] as f64;
+                for j in 0..n as usize {
+                    out[i * n as usize + j] += a * w_in.0[kk * n as usize + j] as f64;
+                }
+            }
+        }
+        out
+    };
+
+    let mut rows = Vec::new();
+    let mut measured = Vec::new();
+    let mut predicted = Vec::new();
+    for entry in entries.iter().filter(|e| e.name.starts_with("matmul_")) {
+        let tiles = parse_tag(&entry.schedule).context("matmul tag")?;
+        let cfg = config_for_tiles(&op, host, tiles);
+        let score = cm.predict(&op, &cfg); // static — before any execution
+
+        let exe = rt.load_hlo_text(&dir.join(&entry.path))?;
+        let out = exe.run_f32(&[x_in.clone(), w_in.clone()])?;
+        let mut max_err = 0f64;
+        for idx in (0..out.len()).step_by(997) {
+            max_err = max_err.max((out[idx] as f64 - reference[idx]).abs());
+        }
+        if max_err > 1e-2 {
+            bail!("{}: numerics mismatch, max err {max_err}", entry.name);
+        }
+        let secs = exe.time_median(&[x_in.clone(), w_in.clone()], repeats)?;
+        measured.push(secs);
+        predicted.push(score);
+        rows.push((entry.schedule.clone(), secs, score, max_err));
+    }
+    if rows.is_empty() {
+        bail!("no matmul artifacts in {dir:?} — run `make artifacts`");
+    }
+
+    println!(
+        "\n{:<22} {:>12} {:>16} {:>12}",
+        "schedule", "measured ms", "static score", "max |err|"
+    );
+    for (tag, secs, score, err) in &rows {
+        println!("{tag:<22} {:>12.3} {score:>16.0} {err:>12.2e}", secs * 1e3);
+    }
+    let rho = spearman(&predicted, &measured);
+    let best_static = predicted
+        .iter()
+        .enumerate()
+        .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| measured[i])
+        .unwrap();
+    let best_measured = measured.iter().cloned().fold(f64::MAX, f64::min);
+    println!("\nSpearman(static score, measured): {rho:.3}");
+    println!(
+        "Tuna static pick: {:.3} ms vs best measured {:.3} ms (regret {:.1}%)",
+        best_static * 1e3,
+        best_measured * 1e3,
+        (best_static / best_measured - 1.0) * 100.0
+    );
+    println!("e2e OK: {} variants, numerics verified", rows.len());
+    Ok(())
+}

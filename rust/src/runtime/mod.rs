@@ -1,0 +1,195 @@
+//! PJRT runtime: load AOT-compiled HLO artifacts and execute them.
+//!
+//! The build-time Python layers (L2 JAX model calling the L1 Pallas kernel)
+//! lower once to HLO *text* (`make artifacts`); this module loads those
+//! artifacts through the `xla` crate's PJRT CPU client so the Rust side can
+//! run the schedules Tuna selects without Python anywhere near the
+//! execution path. Text is the interchange format — jax ≥ 0.5 serialized
+//! protos carry 64-bit instruction ids that xla_extension 0.5.1 rejects;
+//! the text parser reassigns ids.
+
+pub mod e2e;
+
+use crate::util::json::Json;
+use anyhow::{anyhow, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// A loaded PJRT client + compiled executables.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+/// One compiled artifact ready to execute.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+/// Artifact manifest entry (written by python/compile/aot.py).
+#[derive(Debug, Clone)]
+pub struct ManifestEntry {
+    pub name: String,
+    pub path: String,
+    /// schedule tag (e.g. "bm64_bn64_bk32") the variant realizes.
+    pub schedule: String,
+    /// input shapes, row-major.
+    pub inputs: Vec<Vec<i64>>,
+}
+
+impl Runtime {
+    /// CPU PJRT client.
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu: {e:?}"))?;
+        Ok(Runtime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load and compile one HLO-text artifact.
+    pub fn load_hlo_text(&self, path: &Path) -> Result<Executable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .map_err(|e| anyhow!("parse {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {path:?}: {e:?}"))?;
+        Ok(Executable {
+            exe,
+            name: path.file_stem().unwrap_or_default().to_string_lossy().into_owned(),
+        })
+    }
+
+    /// Read `artifacts/manifest.json` and load every listed executable.
+    pub fn load_manifest(&self, dir: &Path) -> Result<Vec<(ManifestEntry, Executable)>> {
+        let entries = read_manifest(dir)?;
+        entries
+            .into_iter()
+            .map(|e| {
+                let exe = self.load_hlo_text(&dir.join(&e.path))?;
+                Ok((e, exe))
+            })
+            .collect()
+    }
+}
+
+/// Parse the manifest written by aot.py.
+pub fn read_manifest(dir: &Path) -> Result<Vec<ManifestEntry>> {
+    let text = std::fs::read_to_string(dir.join("manifest.json"))
+        .with_context(|| format!("reading {dir:?}/manifest.json — run `make artifacts`"))?;
+    let j = Json::parse(&text).map_err(|e| anyhow!("manifest parse: {e}"))?;
+    let arr = j
+        .get("artifacts")
+        .and_then(Json::as_arr)
+        .context("manifest missing 'artifacts'")?;
+    arr.iter()
+        .map(|e| {
+            Ok(ManifestEntry {
+                name: e.get("name").and_then(Json::as_str).context("name")?.into(),
+                path: e.get("path").and_then(Json::as_str).context("path")?.into(),
+                schedule: e
+                    .get("schedule")
+                    .and_then(Json::as_str)
+                    .unwrap_or_default()
+                    .into(),
+                inputs: e
+                    .get("inputs")
+                    .and_then(Json::as_arr)
+                    .context("inputs")?
+                    .iter()
+                    .map(|shape| {
+                        shape
+                            .as_arr()
+                            .unwrap_or(&[])
+                            .iter()
+                            .filter_map(|d| d.as_f64().map(|f| f as i64))
+                            .collect()
+                    })
+                    .collect(),
+            })
+        })
+        .collect()
+}
+
+impl Executable {
+    /// Execute with f32 inputs `(data, shape)`; returns the flattened f32
+    /// output of the (1-tuple) result.
+    pub fn run_f32(&self, inputs: &[(Vec<f32>, Vec<i64>)]) -> Result<Vec<f32>> {
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (data, shape) in inputs {
+            let lit = xla::Literal::vec1(data)
+                .reshape(shape)
+                .map_err(|e| anyhow!("reshape {shape:?}: {e:?}"))?;
+            literals.push(lit);
+        }
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("execute: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("sync: {e:?}"))?;
+        // aot.py lowers with return_tuple=True → unwrap the 1-tuple
+        let out = result.to_tuple1().map_err(|e| anyhow!("tuple: {e:?}"))?;
+        out.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))
+    }
+
+    /// Wall-clock a single execution (seconds).
+    pub fn time_once(&self, inputs: &[(Vec<f32>, Vec<i64>)]) -> Result<f64> {
+        let t0 = std::time::Instant::now();
+        let _ = self.run_f32(inputs)?;
+        Ok(t0.elapsed().as_secs_f64())
+    }
+
+    /// Median-of-n timing.
+    pub fn time_median(&self, inputs: &[(Vec<f32>, Vec<i64>)], n: usize) -> Result<f64> {
+        let mut ts = Vec::with_capacity(n);
+        for _ in 0..n.max(1) {
+            ts.push(self.time_once(inputs)?);
+        }
+        ts.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Ok(ts[ts.len() / 2])
+    }
+}
+
+/// Default artifacts directory (repo-relative).
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var("TUNA_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // PJRT-dependent tests live in rust/tests/runtime_pjrt.rs (they need
+    // the artifacts built); here we test the manifest parsing only.
+    #[test]
+    fn manifest_roundtrip() {
+        let dir = std::path::Path::new("/tmp/tuna_manifest_test");
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"artifacts": [{"name": "mm", "path": "mm.hlo.txt",
+                "schedule": "bm64", "inputs": [[64, 64], [64, 64]]}]}"#,
+        )
+        .unwrap();
+        let m = read_manifest(dir).unwrap();
+        assert_eq!(m.len(), 1);
+        assert_eq!(m[0].name, "mm");
+        assert_eq!(m[0].inputs, vec![vec![64, 64], vec![64, 64]]);
+        assert_eq!(m[0].schedule, "bm64");
+    }
+
+    #[test]
+    fn missing_manifest_is_a_clear_error() {
+        let err = read_manifest(std::path::Path::new("/tmp/definitely_missing_xyz"))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("manifest.json"));
+    }
+}

@@ -1,0 +1,208 @@
+//! Evolution Strategies (Algorithm 4) over discrete config spaces.
+//!
+//! ES treats the search as black-box optimization of continuous parameters
+//! θ (one per knob): each iteration samples Gaussian perturbations
+//! `εᵢ ~ N(0, I)`, decodes `θ + σεᵢ` to a discrete config, evaluates the
+//! population **in parallel** (the whole point: static evaluations need no
+//! device, so they fan out across host cores), and updates
+//! `θ ← θ + α·(1/nσ)·Σ Fᵢ εᵢ` with rank-normalized fitness. Every decoded
+//! candidate feeds the running top-k list.
+
+use super::{Objective, SearchResult, TopK};
+use crate::transform::{ConfigSpace, ScheduleConfig};
+use crate::util::{parallel_map, Rng};
+
+/// ES hyperparameters.
+#[derive(Debug, Clone)]
+pub struct EsParams {
+    /// population size n.
+    pub population: usize,
+    /// iterations T.
+    pub iterations: usize,
+    /// noise standard deviation σ (in knob-index units).
+    pub sigma: f64,
+    /// learning rate α.
+    pub alpha: f64,
+    /// top-k list size.
+    pub k: usize,
+    /// host threads for parallel evaluation.
+    pub threads: usize,
+    pub seed: u64,
+}
+
+impl Default for EsParams {
+    fn default() -> Self {
+        EsParams {
+            population: 32,
+            iterations: 16,
+            sigma: 1.0,
+            alpha: 0.7,
+            k: 50,
+            threads: crate::util::pool::default_threads(),
+            seed: 0xE5,
+        }
+    }
+}
+
+/// The ES searcher.
+pub struct EvolutionStrategies {
+    pub params: EsParams,
+}
+
+impl EvolutionStrategies {
+    pub fn new(params: EsParams) -> Self {
+        EvolutionStrategies { params }
+    }
+
+    /// Decode continuous θ to a config: clamp+round each dim to a knob
+    /// index.
+    fn decode(space: &ConfigSpace, theta: &[f64]) -> ScheduleConfig {
+        let choices = space
+            .knobs
+            .iter()
+            .zip(theta)
+            .map(|(k, &t)| {
+                let hi = (k.values.len() - 1) as f64;
+                t.round().clamp(0.0, hi) as usize
+            })
+            .collect();
+        ScheduleConfig { choices }
+    }
+
+    /// Run the search.
+    pub fn run(&self, space: &ConfigSpace, obj: &dyn Objective) -> SearchResult {
+        let p = &self.params;
+        let d = space.knobs.len();
+        let mut rng = Rng::new(p.seed);
+        // start θ in the middle of each knob range
+        let mut theta: Vec<f64> = space
+            .knobs
+            .iter()
+            .map(|k| (k.values.len() - 1) as f64 / 2.0)
+            .collect();
+        let mut top = TopK::new(p.k.max(1));
+        let mut evals = 0u64;
+
+        for _iter in 0..p.iterations {
+            // sample ε and decode candidates
+            let eps: Vec<Vec<f64>> = (0..p.population)
+                .map(|_| (0..d).map(|_| rng.normal()).collect())
+                .collect();
+            let cands: Vec<ScheduleConfig> = eps
+                .iter()
+                .map(|e| {
+                    let pt: Vec<f64> =
+                        theta.iter().zip(e).map(|(t, n)| t + p.sigma * n).collect();
+                    Self::decode(space, &pt)
+                })
+                .collect();
+            // parallel static evaluation — F_i
+            let scores = parallel_map(cands.clone(), p.threads, |c| obj.eval(&c));
+            evals += scores.len() as u64;
+            for (c, s) in cands.iter().zip(&scores) {
+                top.push(c.clone(), *s);
+            }
+            // rank-normalized fitness: best gets +0.5, worst −0.5 (lower
+            // score = better, so invert)
+            let ranks = crate::util::stats::ranks(&scores);
+            let n = scores.len() as f64;
+            let fitness: Vec<f64> = ranks.iter().map(|r| 0.5 - (r - 1.0) / (n - 1.0).max(1.0)).collect();
+            // θ update
+            for j in 0..d {
+                let mut g = 0.0;
+                for (i, e) in eps.iter().enumerate() {
+                    g += fitness[i] * e[j];
+                }
+                theta[j] += p.alpha * g / (n * p.sigma);
+                let hi = (space.knobs[j].values.len() - 1) as f64;
+                theta[j] = theta[j].clamp(0.0, hi);
+            }
+        }
+
+        let (best, best_score) = top.best().cloned().expect("ES produced no candidates");
+        SearchResult { best, best_score, top_k: top.items().to_vec(), evaluations: evals }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transform::ConfigSpace;
+
+    fn space() -> ConfigSpace {
+        ConfigSpace::new()
+            .int_knob("a", vec![1, 2, 4, 8, 16, 32])
+            .int_knob("b", vec![1, 2, 4, 8, 16])
+            .int_knob("c", vec![0, 1])
+    }
+
+    #[test]
+    fn es_approaches_optimum_on_smooth_objective() {
+        let s = space();
+        // optimum at a=8 (idx 3), b=4 (idx 2), c=1 (idx 1)
+        let obj = |cfg: &ScheduleConfig| {
+            let a = cfg.choices[0] as f64;
+            let b = cfg.choices[1] as f64;
+            let c = cfg.choices[2] as f64;
+            (a - 3.0).powi(2) + (b - 2.0).powi(2) + (1.0 - c) * 4.0 + 1.0
+        };
+        let es = EvolutionStrategies::new(EsParams {
+            population: 24,
+            iterations: 20,
+            threads: 2,
+            seed: 7,
+            ..Default::default()
+        });
+        let r = es.run(&s, &obj);
+        assert!(r.best_score <= 2.0, "ES best {} too far from optimum 1.0", r.best_score);
+        assert!(r.evaluations >= 24 * 20);
+    }
+
+    #[test]
+    fn es_beats_tiny_random_budget() {
+        let s = space();
+        let obj = |cfg: &ScheduleConfig| {
+            (cfg.choices[0] as f64 - 4.0).abs() * 10.0
+                + (cfg.choices[1] as f64 - 3.0).abs() * 3.0
+                + 1.0
+        };
+        let es = EvolutionStrategies::new(EsParams {
+            population: 16,
+            iterations: 12,
+            threads: 1,
+            seed: 3,
+            ..Default::default()
+        });
+        let es_r = es.run(&s, &obj);
+        let rnd = super::super::random_search(&s, &obj, 8, 5, 1, 3);
+        assert!(es_r.best_score <= rnd.best_score);
+    }
+
+    #[test]
+    fn decode_clamps() {
+        let s = space();
+        let c = EvolutionStrategies::decode(&s, &[-5.0, 100.0, 0.4]);
+        assert_eq!(c.choices, vec![0, 4, 0]);
+        assert!(s.contains(&c));
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let s = space();
+        let obj = |cfg: &ScheduleConfig| cfg.choices[0] as f64 + 1.0;
+        let mk = || {
+            EvolutionStrategies::new(EsParams {
+                population: 8,
+                iterations: 5,
+                threads: 2,
+                seed: 11,
+                ..Default::default()
+            })
+            .run(&s, &obj)
+        };
+        let a = mk();
+        let b = mk();
+        assert_eq!(a.best, b.best);
+        assert_eq!(a.best_score, b.best_score);
+    }
+}

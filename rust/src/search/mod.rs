@@ -1,0 +1,170 @@
+//! Schedule-space search algorithms.
+//!
+//! Tuna's search is Evolution Strategies (Algorithm 4) over the discrete
+//! config space, with every population member evaluated *statically* and
+//! in parallel across host threads. Random search and exhaustive sweeps
+//! are provided as baselines and for the Figure-3/4 ground-truth ranking.
+
+pub mod es;
+
+pub use es::{EsParams, EvolutionStrategies};
+
+use crate::transform::{ConfigSpace, ScheduleConfig};
+use crate::util::{parallel_map, Rng};
+
+/// Anything that can score a candidate (lower = better). Implemented by the
+/// static cost model (Tuna) and by measurement surrogates (baselines).
+pub trait Objective: Sync {
+    fn eval(&self, cfg: &ScheduleConfig) -> f64;
+}
+
+impl<F: Fn(&ScheduleConfig) -> f64 + Sync> Objective for F {
+    fn eval(&self, cfg: &ScheduleConfig) -> f64 {
+        self(cfg)
+    }
+}
+
+/// Search outcome: the best config plus the top-k list of everything the
+/// search evaluated (the paper's top-k performance-ratio metric needs it).
+#[derive(Debug, Clone)]
+pub struct SearchResult {
+    pub best: ScheduleConfig,
+    pub best_score: f64,
+    /// ascending by score.
+    pub top_k: Vec<(ScheduleConfig, f64)>,
+    pub evaluations: u64,
+}
+
+/// Bounded best-list shared by the searchers.
+#[derive(Debug, Clone)]
+pub struct TopK {
+    cap: usize,
+    items: Vec<(ScheduleConfig, f64)>,
+}
+
+impl TopK {
+    pub fn new(cap: usize) -> Self {
+        TopK { cap, items: Vec::with_capacity(cap + 1) }
+    }
+
+    pub fn push(&mut self, cfg: ScheduleConfig, score: f64) {
+        if !score.is_finite() {
+            return;
+        }
+        if self.items.iter().any(|(c, _)| *c == cfg) {
+            return; // dedup: the same schedule may be proposed repeatedly
+        }
+        let pos = self
+            .items
+            .partition_point(|(_, s)| *s <= score);
+        if pos >= self.cap {
+            return;
+        }
+        self.items.insert(pos, (cfg, score));
+        self.items.truncate(self.cap);
+    }
+
+    pub fn items(&self) -> &[(ScheduleConfig, f64)] {
+        &self.items
+    }
+
+    pub fn best(&self) -> Option<&(ScheduleConfig, f64)> {
+        self.items.first()
+    }
+}
+
+/// Random search: `n` uniform samples, parallel evaluation.
+pub fn random_search(
+    space: &ConfigSpace,
+    obj: &dyn Objective,
+    n: u64,
+    k: usize,
+    threads: usize,
+    seed: u64,
+) -> SearchResult {
+    let mut rng = Rng::new(seed);
+    let cands: Vec<ScheduleConfig> = (0..n).map(|_| space.random(&mut rng)).collect();
+    let scores = parallel_map(cands.clone(), threads, |c| obj.eval(&c));
+    let mut top = TopK::new(k.max(1));
+    for (c, s) in cands.into_iter().zip(scores) {
+        top.push(c, s);
+    }
+    let (best, best_score) = top.best().cloned().expect("empty search");
+    SearchResult { best, best_score, top_k: top.items().to_vec(), evaluations: n }
+}
+
+/// Exhaustive sweep (ground truth for small spaces / figure experiments).
+pub fn exhaustive(
+    space: &ConfigSpace,
+    obj: &dyn Objective,
+    k: usize,
+    threads: usize,
+) -> SearchResult {
+    let n = space.size();
+    let cands: Vec<ScheduleConfig> = (0..n).map(|i| space.from_index(i)).collect();
+    let scores = parallel_map(cands.clone(), threads, |c| obj.eval(&c));
+    let mut top = TopK::new(k.max(1));
+    for (c, s) in cands.into_iter().zip(scores) {
+        top.push(c, s);
+    }
+    let (best, best_score) = top.best().cloned().expect("empty space");
+    SearchResult { best, best_score, top_k: top.items().to_vec(), evaluations: n }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transform::ConfigSpace;
+
+    fn space() -> ConfigSpace {
+        ConfigSpace::new()
+            .int_knob("a", vec![1, 2, 4, 8, 16])
+            .int_knob("b", vec![1, 2, 4, 8])
+            .tag_knob("c", &["x", "y"])
+    }
+
+    /// Objective with a unique optimum at a=8, b=4, c="y".
+    fn toy_obj(space: &ConfigSpace) -> impl Fn(&ScheduleConfig) -> f64 + Sync + '_ {
+        move |cfg: &ScheduleConfig| {
+            let a = space.get_int(cfg, "a") as f64;
+            let b = space.get_int(cfg, "b") as f64;
+            let c = if space.get_tag(cfg, "c") == "y" { 0.0 } else { 5.0 };
+            (a - 8.0).abs() + (b - 4.0).abs() + c + 1.0
+        }
+    }
+
+    #[test]
+    fn exhaustive_finds_global_optimum() {
+        let s = space();
+        let obj = toy_obj(&s);
+        let r = exhaustive(&s, &obj, 10, 2);
+        assert_eq!(r.best_score, 1.0);
+        assert_eq!(s.get_int(&r.best, "a"), 8);
+        assert_eq!(s.get_int(&r.best, "b"), 4);
+        assert_eq!(r.evaluations, s.size());
+        // top-k sorted ascending
+        assert!(r.top_k.windows(2).all(|w| w[0].1 <= w[1].1));
+    }
+
+    #[test]
+    fn random_search_improves_with_budget() {
+        let s = space();
+        let obj = toy_obj(&s);
+        let small = random_search(&s, &obj, 5, 5, 2, 42);
+        let large = random_search(&s, &obj, 200, 5, 2, 42);
+        assert!(large.best_score <= small.best_score);
+    }
+
+    #[test]
+    fn topk_dedups_and_bounds() {
+        let mut t = TopK::new(3);
+        let c = ScheduleConfig { choices: vec![0] };
+        t.push(c.clone(), 5.0);
+        t.push(c.clone(), 5.0); // dup ignored
+        t.push(ScheduleConfig { choices: vec![1] }, 1.0);
+        t.push(ScheduleConfig { choices: vec![2] }, 3.0);
+        t.push(ScheduleConfig { choices: vec![3] }, 10.0); // beyond cap
+        assert_eq!(t.items().len(), 3);
+        assert_eq!(t.best().unwrap().1, 1.0);
+    }
+}

@@ -1,0 +1,157 @@
+//! Trace-driven set-associative cache with true-LRU replacement.
+//!
+//! This is the simulator-side counterpart of the *analytical* footprint
+//! model in [`crate::analysis::cache`]: it sees concrete addresses, so it
+//! captures conflict misses, line granularity and write-allocate traffic
+//! the analytical model cannot — exactly the gap that keeps the
+//! static-vs-measured comparison honest.
+
+use crate::isa::march::CacheDesc;
+
+/// One cache level (LRU, write-allocate, write-back).
+pub struct CacheLevel {
+    sets: Vec<Vec<u64>>, // per-set stack of line tags, MRU first
+    assoc: usize,
+    line_shift: u32,
+    set_mask: u64,
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl CacheLevel {
+    pub fn new(desc: &CacheDesc) -> Self {
+        let lines = (desc.size_bytes / desc.line_bytes as u64).max(1);
+        let sets = (lines / desc.assoc as u64).max(1).next_power_of_two();
+        CacheLevel {
+            sets: vec![Vec::with_capacity(desc.assoc as usize); sets as usize],
+            assoc: desc.assoc as usize,
+            line_shift: desc.line_bytes.trailing_zeros(),
+            set_mask: sets - 1,
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    /// Access `addr`; returns true on hit.
+    pub fn access(&mut self, addr: u64) -> bool {
+        let line = addr >> self.line_shift;
+        let set = (line & self.set_mask) as usize;
+        let ways = &mut self.sets[set];
+        if let Some(pos) = ways.iter().position(|&t| t == line) {
+            let t = ways.remove(pos);
+            ways.insert(0, t);
+            self.hits += 1;
+            true
+        } else {
+            if ways.len() >= self.assoc {
+                ways.pop();
+            }
+            ways.insert(0, line);
+            self.misses += 1;
+            false
+        }
+    }
+
+    pub fn reset_stats(&mut self) {
+        self.hits = 0;
+        self.misses = 0;
+    }
+}
+
+/// Two-level hierarchy: L1 misses probe L2.
+pub struct Hierarchy {
+    pub l1: CacheLevel,
+    pub l2: CacheLevel,
+}
+
+impl Hierarchy {
+    pub fn new(l1: &CacheDesc, l2: &CacheDesc) -> Self {
+        Hierarchy { l1: CacheLevel::new(l1), l2: CacheLevel::new(l2) }
+    }
+
+    /// Access an address; returns the level it hit (1, 2, or 3 = memory).
+    pub fn access(&mut self, addr: u64) -> u8 {
+        if self.l1.access(addr) {
+            1
+        } else if self.l2.access(addr) {
+            2
+        } else {
+            3
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::march::CacheDesc;
+
+    fn small() -> CacheDesc {
+        CacheDesc { size_bytes: 1024, assoc: 2, line_bytes: 64, latency: 4 }
+    }
+
+    #[test]
+    fn sequential_within_line_hits() {
+        let mut c = CacheLevel::new(&small());
+        assert!(!c.access(0));
+        for b in 4..64 {
+            assert!(c.access(b), "offset {b} should hit");
+        }
+        assert_eq!(c.misses, 1);
+        assert_eq!(c.hits, 15 * 4);
+    }
+
+    #[test]
+    fn working_set_beyond_capacity_thrashes() {
+        let mut c = CacheLevel::new(&small()); // 16 lines
+        // stream 64 distinct lines twice: second pass still misses (LRU)
+        for pass in 0..2 {
+            for i in 0..64u64 {
+                c.access(i * 64);
+            }
+            let _ = pass;
+        }
+        assert_eq!(c.misses, 128, "no reuse survives a 4x-capacity stream");
+    }
+
+    #[test]
+    fn small_working_set_is_retained() {
+        let mut c = CacheLevel::new(&small());
+        for _ in 0..10 {
+            for i in 0..8u64 {
+                c.access(i * 64);
+            }
+        }
+        assert_eq!(c.misses, 8);
+        assert_eq!(c.hits, 72);
+    }
+
+    #[test]
+    fn conflict_misses_with_low_assoc() {
+        // 2-way, 8 sets: 3 lines mapping to the same set evict each other
+        let mut c = CacheLevel::new(&small());
+        let set_stride = 8 * 64; // lines with same set index
+        for _ in 0..10 {
+            c.access(0);
+            c.access(set_stride);
+            c.access(2 * set_stride);
+        }
+        assert!(c.misses > 20, "conflict misses expected, got {}", c.misses);
+    }
+
+    #[test]
+    fn hierarchy_l2_absorbs_l1_misses() {
+        let l1 = small();
+        let l2 = CacheDesc { size_bytes: 64 * 1024, assoc: 8, line_bytes: 64, latency: 12 };
+        let mut h = Hierarchy::new(&l1, &l2);
+        // 32KB working set: misses L1 (1KB) but fits L2
+        for pass in 0..3 {
+            for i in 0..512u64 {
+                let lvl = h.access(i * 64);
+                if pass > 0 {
+                    assert!(lvl <= 2, "pass {pass} addr {i} went to memory");
+                }
+            }
+        }
+    }
+}

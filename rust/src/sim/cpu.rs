@@ -1,0 +1,196 @@
+//! CPU device simulator: pipeline + cache hierarchy + DRAM + multicore.
+//!
+//! Latency model:
+//!
+//! * **Pipeline** — each basic block is scheduled twice back-to-back with
+//!   the list scheduler and the steady-state cost is
+//!   `cycles(2×block) − cycles(1×block)` (captures loop-carried overlap an
+//!   OoO core achieves across iterations; the static model schedules one
+//!   copy only). Block trips come from the exact loop structure.
+//! * **Memory** — the sampled address trace runs through a set-associative
+//!   L1+L2; L1-hit latency is already part of instruction latency, L2 hits
+//!   and DRAM accesses add stall cycles, partially hidden by OoO depth.
+//!   A DRAM-bandwidth floor bounds streaming kernels.
+//! * **Multicore** — the outer `Parallel` loop divides compute across
+//!   cores; bandwidth is shared; a fork/join overhead is charged per
+//!   parallel region.
+//! * **Noise** — deterministic ±2% jitter keyed on the program shape,
+//!   emulating real measurement variance for the dynamic tuner.
+
+use super::cache_sim::Hierarchy;
+use super::{trace, SimResult};
+use crate::analysis::ilp;
+use crate::analysis::loop_map;
+use crate::isa::{AsmProgram, BasicBlock, MicroArch};
+use crate::tir::TirFunc;
+
+/// Trace budget per measurement (accesses). Exposed for the perf pass.
+pub const TRACE_BUDGET: u64 = 120_000;
+
+/// Simulate one kernel execution on a CPU microarchitecture.
+pub fn simulate(f: &TirFunc, prog: &AsmProgram, march: &MicroArch) -> SimResult {
+    // --- pipeline ---
+    let lm = loop_map::map_loops(f, prog);
+    let mut pipe_cycles = 0.0;
+    for (i, b) in prog.blocks.iter().enumerate() {
+        if b.instrs.is_empty() {
+            continue;
+        }
+        let trips = lm.block_trips[i] as f64;
+        let steady = steady_state_cycles(b, march);
+        pipe_cycles += steady * trips;
+    }
+
+    // --- memory hierarchy (streamed, no trace materialization) ---
+    let bases: Vec<u64> = prog.tensors.iter().map(|t| t.base_addr).collect();
+    let mut h = Hierarchy::new(&march.l1d, &march.l2);
+    let scale = trace::visit(f, &bases, TRACE_BUDGET, &mut |addr, _| {
+        h.access(addr);
+    });
+    let l1_misses = h.l1.misses as f64 * scale;
+    let l2_misses = h.l2.misses as f64 * scale;
+    let l2_hits = (h.l1.misses - h.l2.misses) as f64 * scale;
+
+    // OoO cores overlap a fraction of miss latency with compute
+    let hide = if march.in_order { 1.0 } else { 0.35 };
+    let mem_stall = hide
+        * (l2_hits * march.l2.latency as f64 + l2_misses * march.dram_latency as f64);
+
+    // --- combine per-core, then parallel scaling ---
+    let par = (prog.parallel_extent.min(march.num_cores as i64)).max(1) as f64;
+    let core_cycles = (pipe_cycles + mem_stall) / par;
+
+    // DRAM bandwidth floor (shared across cores)
+    let dram_bytes = l2_misses * march.l1d.line_bytes as f64;
+    let bw_seconds = dram_bytes / (march.dram_gbps * 1e9);
+    let compute_seconds = core_cycles / (march.freq_ghz * 1e9);
+
+    // fork/join overhead per parallel region
+    let sync_seconds = if prog.parallel_extent > 1 { 4.0e-6 } else { 0.0 };
+
+    let mut seconds = compute_seconds.max(bw_seconds) + sync_seconds;
+    seconds *= noise(prog);
+
+    SimResult {
+        seconds,
+        cycles: seconds * march.freq_ghz * 1e9,
+        pipe_cycles,
+        mem_stall_cycles: mem_stall,
+        l1_misses,
+        l2_misses,
+    }
+}
+
+/// Steady-state cycles per iteration: schedule the block twice and take the
+/// increment (loop-carried overlap), never below the throughput bound.
+fn steady_state_cycles(b: &BasicBlock, march: &MicroArch) -> f64 {
+    if b.instrs.len() > 4000 {
+        // huge unrolled blocks: throughput bound is accurate enough
+        return ilp::throughput_bound(b, march);
+    }
+    let once = ilp::schedule_block(b, march).cycles as f64;
+    let mut twice_b = b.clone();
+    twice_b.instrs.extend(b.instrs.iter().cloned());
+    let twice = ilp::schedule_block(&twice_b, march).cycles as f64;
+    let steady = (twice - once).max(1.0);
+    steady.max(ilp::throughput_bound(b, march))
+}
+
+/// Deterministic ±2% noise keyed on program shape.
+fn noise(prog: &AsmProgram) -> f64 {
+    let mut h = 0xcbf29ce484222325u64;
+    let mut mix = |v: u64| {
+        h ^= v;
+        h = h.wrapping_mul(0x100000001b3);
+    };
+    mix(prog.blocks.len() as u64);
+    mix(prog.total_instrs());
+    for t in &prog.tensors {
+        mix(t.elems as u64);
+    }
+    mix(prog.parallel_extent as u64);
+    1.0 + ((h % 4001) as f64 / 1000.0 - 2.0) / 100.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codegen;
+    use crate::isa::march::{cortex_a53, graviton2, xeon_8124m};
+    use crate::isa::TargetKind;
+    use crate::tir::ops::OpSpec;
+    use crate::transform;
+
+    fn sim(op: &OpSpec, kind: TargetKind, march: &MicroArch, cfg_idx: u64) -> SimResult {
+        let s = transform::config_space(op, kind);
+        let f = transform::apply(op, kind, &s.from_index(cfg_idx % s.size()));
+        let prog = codegen::lower_cpu(&f, march);
+        simulate(&f, &prog, march)
+    }
+
+    #[test]
+    fn latency_positive_and_bounded_by_roofline() {
+        let m = xeon_8124m();
+        let op = OpSpec::Matmul { m: 256, n: 256, k: 256 };
+        let r = sim(&op, TargetKind::XeonPlatinum8124M, &m, 0);
+        assert!(r.seconds > 0.0);
+        // cannot beat peak flops
+        let min_seconds = op.flops() as f64 / (m.peak_gflops() * 1e9);
+        assert!(
+            r.seconds >= min_seconds,
+            "sim {} beats roofline {}",
+            r.seconds,
+            min_seconds
+        );
+    }
+
+    #[test]
+    fn bigger_problem_is_slower() {
+        let m = graviton2();
+        let small = sim(
+            &OpSpec::Matmul { m: 64, n: 64, k: 64 },
+            TargetKind::Graviton2,
+            &m,
+            0,
+        );
+        let big = sim(
+            &OpSpec::Matmul { m: 256, n: 256, k: 256 },
+            TargetKind::Graviton2,
+            &m,
+            0,
+        );
+        assert!(big.seconds > small.seconds * 10.0);
+    }
+
+    #[test]
+    fn a53_slower_than_xeon() {
+        let op = OpSpec::Matmul { m: 128, n: 128, k: 128 };
+        let xeon = sim(&op, TargetKind::XeonPlatinum8124M, &xeon_8124m(), 0);
+        let a53 = sim(&op, TargetKind::CortexA53, &cortex_a53(), 0);
+        assert!(a53.seconds > 5.0 * xeon.seconds);
+    }
+
+    #[test]
+    fn schedules_differ_measurably() {
+        let m = graviton2();
+        let op = OpSpec::Matmul { m: 128, n: 128, k: 128 };
+        let kind = TargetKind::Graviton2;
+        let space = transform::config_space(&op, kind);
+        let mut lats = Vec::new();
+        for idx in 0..space.size().min(36) {
+            lats.push(sim(&op, kind, &m, idx).seconds);
+        }
+        let min = lats.iter().cloned().fold(f64::MAX, f64::min);
+        let max = lats.iter().cloned().fold(0.0f64, f64::max);
+        assert!(max / min > 3.0, "schedules indistinguishable: {min}..{max}");
+    }
+
+    #[test]
+    fn noise_is_deterministic() {
+        let m = graviton2();
+        let op = OpSpec::Matmul { m: 64, n: 64, k: 64 };
+        let a = sim(&op, TargetKind::Graviton2, &m, 3);
+        let b = sim(&op, TargetKind::Graviton2, &m, 3);
+        assert_eq!(a.seconds, b.seconds);
+    }
+}

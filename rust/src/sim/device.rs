@@ -1,0 +1,148 @@
+//! The measurement interface a dynamic tuner pays for.
+//!
+//! Real AutoTVM tuning spends most of its wall-clock on the measurement
+//! loop: build the candidate, ship it over RPC, run it `repeat` times on
+//! the (sequential, exclusive) target device. `Device` reproduces that
+//! accounting: every [`Device::measure`] returns both the measured latency
+//! and the *virtual device seconds* the measurement consumed, which the
+//! coordinator accumulates into the Table-II compile-time comparison.
+
+use super::SimResult;
+use crate::codegen;
+use crate::isa::march::Target;
+use crate::isa::TargetKind;
+use crate::tir::ops::OpSpec;
+use crate::transform::{self, ScheduleConfig};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Per-measurement cost model of a real tuning harness (seconds).
+#[derive(Debug, Clone)]
+pub struct MeasureCosts {
+    /// candidate compilation (LLVM/NVCC) on the tuning host.
+    pub compile_s: f64,
+    /// RPC round-trip + upload.
+    pub rpc_s: f64,
+    /// timed repeats per measurement.
+    pub repeats: u32,
+    /// warm-up runs discarded.
+    pub warmup: u32,
+}
+
+impl Default for MeasureCosts {
+    fn default() -> Self {
+        // AutoTVM defaults: ~1-2 s build, 50 ms RPC, 3 warmup + 10 timed
+        MeasureCosts { compile_s: 1.2, rpc_s: 0.05, repeats: 10, warmup: 3 }
+    }
+}
+
+/// One measurement outcome.
+#[derive(Debug, Clone)]
+pub struct MeasureResult {
+    /// mean measured latency (seconds) — the simulator's ground truth.
+    pub latency_s: f64,
+    /// virtual device-seconds this measurement consumed.
+    pub device_cost_s: f64,
+    pub detail: SimResult,
+}
+
+/// A simulated target device with measurement accounting.
+pub struct Device {
+    pub kind: TargetKind,
+    target: Target,
+    pub costs: MeasureCosts,
+    /// accumulated virtual device time (nanoseconds, atomic so parallel
+    /// host threads can share the device handle — the *device* itself is
+    /// sequential, which is exactly what the accumulated time models).
+    device_ns: AtomicU64,
+    /// total measurements served.
+    measurements: AtomicU64,
+}
+
+impl Device {
+    pub fn new(kind: TargetKind) -> Self {
+        Device {
+            kind,
+            target: kind.build(),
+            costs: MeasureCosts::default(),
+            device_ns: AtomicU64::new(0),
+            measurements: AtomicU64::new(0),
+        }
+    }
+
+    /// Execute a scheduled candidate and account for the measurement cost.
+    pub fn measure(&self, op: &OpSpec, cfg: &ScheduleConfig) -> MeasureResult {
+        let detail = self.run(op, cfg);
+        let runs = (self.costs.repeats + self.costs.warmup) as f64;
+        let device_cost_s =
+            self.costs.compile_s + self.costs.rpc_s + runs * detail.seconds;
+        self.device_ns
+            .fetch_add((device_cost_s * 1e9) as u64, Ordering::Relaxed);
+        self.measurements.fetch_add(1, Ordering::Relaxed);
+        MeasureResult { latency_s: detail.seconds, device_cost_s, detail }
+    }
+
+    /// Raw simulation without measurement accounting (used for final
+    /// latency reports — Table I measures the *chosen* schedule once).
+    pub fn run(&self, op: &OpSpec, cfg: &ScheduleConfig) -> SimResult {
+        let f = transform::apply(op, self.kind, cfg);
+        match &self.target {
+            Target::Cpu(m) => {
+                let prog = codegen::lower_cpu(&f, m);
+                super::cpu::simulate(&f, &prog, m)
+            }
+            Target::Gpu(g) => {
+                let prog = codegen::lower_gpu(&f, g);
+                super::gpu::simulate(&f, &prog, g)
+            }
+        }
+    }
+
+    /// Virtual device time consumed so far (seconds).
+    pub fn device_seconds(&self) -> f64 {
+        self.device_ns.load(Ordering::Relaxed) as f64 / 1e9
+    }
+
+    pub fn measurement_count(&self) -> u64 {
+        self.measurements.load(Ordering::Relaxed)
+    }
+
+    pub fn reset_accounting(&self) {
+        self.device_ns.store(0, Ordering::Relaxed);
+        self.measurements.store(0, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measurement_accounting_accumulates() {
+        let d = Device::new(TargetKind::Graviton2);
+        let op = OpSpec::Matmul { m: 64, n: 64, k: 64 };
+        let space = crate::transform::config_space(&op, d.kind);
+        let before = d.device_seconds();
+        let r = d.measure(&op, &space.default_config());
+        assert!(r.device_cost_s > d.costs.compile_s);
+        assert!(d.device_seconds() > before + d.costs.compile_s);
+        assert_eq!(d.measurement_count(), 1);
+    }
+
+    #[test]
+    fn run_does_not_charge_device_time() {
+        let d = Device::new(TargetKind::Graviton2);
+        let op = OpSpec::Matmul { m: 64, n: 64, k: 64 };
+        let space = crate::transform::config_space(&op, d.kind);
+        let _ = d.run(&op, &space.default_config());
+        assert_eq!(d.device_seconds(), 0.0);
+    }
+
+    #[test]
+    fn gpu_device_works() {
+        let d = Device::new(TargetKind::TeslaV100);
+        let op = OpSpec::Matmul { m: 128, n: 128, k: 64 };
+        let space = crate::transform::config_space(&op, d.kind);
+        let r = d.measure(&op, &space.default_config());
+        assert!(r.latency_s > 0.0);
+    }
+}

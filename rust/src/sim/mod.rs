@@ -1,0 +1,42 @@
+//! Cycle-approximate device simulators — the "real hardware" substitute.
+//!
+//! The paper evaluates on five physical devices; this environment has none
+//! of them, so the dynamic baseline (AutoTVM-style measurement) and the
+//! final latency numbers both come from these simulators. Two properties
+//! keep the static-vs-dynamic comparison honest:
+//!
+//! 1. **The simulators model strictly more than the static cost model
+//!    sees**: a trace-driven set-associative L1+L2 hierarchy with DRAM
+//!    bandwidth and latency (vs. the analytical footprint model), a
+//!    two-copy steady-state pipeline schedule capturing loop-carried
+//!    overlap (vs. the single-block list scheduler), warp-level global
+//!    coalescing measured from concrete addresses, wave quantization and
+//!    deterministic measurement noise.
+//! 2. **They never share feature code with the cost model** — they consume
+//!    the same TIR/assembly artifacts but compute their own quantities.
+//!
+//! [`device`] wraps the simulators behind a measurement interface that
+//! additionally charges *virtual device time* (compile + RPC + repeated
+//! runs) the way a real AutoTVM tuning session pays for each measurement.
+
+pub mod cache_sim;
+pub mod cpu;
+pub mod device;
+pub mod gpu;
+pub mod trace;
+
+pub use device::{Device, MeasureResult};
+
+/// Simulation outcome for one kernel execution.
+#[derive(Debug, Clone)]
+pub struct SimResult {
+    /// end-to-end latency in seconds.
+    pub seconds: f64,
+    /// cycles on the critical path (per core / per SM wave).
+    pub cycles: f64,
+    /// breakdown for reports and debugging.
+    pub pipe_cycles: f64,
+    pub mem_stall_cycles: f64,
+    pub l1_misses: f64,
+    pub l2_misses: f64,
+}

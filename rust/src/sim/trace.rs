@@ -1,0 +1,311 @@
+//! Sampled memory-trace generation from the scheduled TIR.
+//!
+//! The trace generator walks the loop nest *semantically*, evaluating every
+//! access's affine index into a concrete byte address. Full nests can be
+//! hundreds of millions of accesses, so outer loops are truncated to a
+//! sample budget (innermost loops always run in full — they carry the
+//! locality structure) and the miss counts are scaled back up by the
+//! truncation factor. Truncation is outside-in, which preserves the reuse
+//! distances that decide L1/L2 behaviour.
+
+use crate::tir::{TirFunc, TirNode};
+use std::collections::HashMap;
+
+/// One memory access: byte address + store flag.
+#[derive(Debug, Clone, Copy)]
+pub struct TraceOp {
+    pub addr: u64,
+    pub is_store: bool,
+}
+
+/// Trace with its scaling factor (real accesses / simulated accesses).
+pub struct Trace {
+    pub ops: Vec<TraceOp>,
+    pub scale: f64,
+}
+
+/// Stream the (sampled) access sequence into `sink` without materializing
+/// it; returns the scale factor. This is the simulator's hot path — see
+/// EXPERIMENTS.md §Perf.
+pub fn visit(
+    f: &TirFunc,
+    bases: &[u64],
+    budget: u64,
+    sink: &mut dyn FnMut(u64, bool),
+) -> f64 {
+    let (clamp, scale) = build_clamp(f, budget);
+    let plan = Plan::new(f, bases, &clamp);
+    let mut env = vec![0i64; f.next_var as usize];
+    walk_sink(&plan.nodes, &mut env, sink);
+    scale
+}
+
+/// Choose per-loop clamped extents so the *per-statement* instance sum
+/// (correct for multi-stage programs like Winograd's three stages) fits the
+/// budget: repeatedly halve the currently-largest effective loop. Returns
+/// (clamp map, full/simulated scale factor).
+fn build_clamp(f: &TirFunc, budget: u64) -> (HashMap<u32, i64>, f64) {
+    // per-stmt loop stacks with GPU-bound loops pinned to one iteration
+    let stmts: Vec<Vec<(u32, i64)>> = f
+        .statements()
+        .iter()
+        .map(|(stack, _)| {
+            stack
+                .iter()
+                .map(|l| (l.var, if l.kind.is_gpu_binding() { 1 } else { l.extent }))
+                .collect()
+        })
+        .collect();
+    let mut eff: HashMap<u32, i64> = HashMap::new();
+    for s in &stmts {
+        for &(v, e) in s {
+            eff.insert(v, e);
+        }
+    }
+    let est = |eff: &HashMap<u32, i64>| -> u64 {
+        stmts
+            .iter()
+            .map(|s| s.iter().map(|(v, _)| eff[v].max(1) as u64).product::<u64>())
+            .sum::<u64>()
+            .max(1)
+    };
+    let full = est(&eff);
+    let mut cur = full;
+    while cur > budget {
+        // halve the largest effective extent (ties broken by var id so the
+        // sampling — and therefore the measurement — is deterministic)
+        let Some((&v, _)) = eff
+            .iter()
+            .filter(|(_, &e)| e > 1)
+            .max_by_key(|(&v, &e)| (e, std::cmp::Reverse(v)))
+        else {
+            break;
+        };
+        eff.insert(v, (eff[&v] / 2).max(1));
+        cur = est(&eff);
+    }
+    let clamp: HashMap<u32, i64> = f
+        .preorder_loops()
+        .iter()
+        .filter_map(|l| {
+            let e = *eff.get(&l.var).unwrap_or(&l.extent);
+            if e < l.extent {
+                Some((l.var, e))
+            } else {
+                None
+            }
+        })
+        .collect();
+    (clamp, full as f64 / cur as f64)
+}
+
+fn walk_sink(nodes: &[PlanNode], env: &mut [i64], sink: &mut dyn FnMut(u64, bool)) {
+    for n in nodes {
+        match n {
+            PlanNode::Loop { var, extent, body } => {
+                for v in 0..*extent {
+                    env[*var] = v;
+                    walk_sink(body, env, sink);
+                }
+                env[*var] = 0;
+            }
+            PlanNode::Stmt(accs) => {
+                for a in accs {
+                    let mut off = 0i64;
+                    for &(v, c) in &a.terms {
+                        off += c * env[v];
+                    }
+                    sink(a.base.wrapping_add((off * 4) as u64), a.is_store);
+                }
+            }
+        }
+    }
+}
+
+/// Generate a materialized trace (tests and offline inspection).
+pub fn generate(f: &TirFunc, bases: &[u64], budget: u64) -> Trace {
+    let (clamp, scale) = build_clamp(f, budget);
+    let mut ops = Vec::new();
+    // Pre-linearize: the hot loop only evaluates Σ coeff·env[var] + base
+    // per access, against a flat env array (HashMaps were the bottleneck —
+    // see EXPERIMENTS.md §Perf).
+    let plan = Plan::new(f, bases, &clamp);
+    let mut env = vec![0i64; f.next_var as usize];
+    walk(&plan.nodes, &mut env, &mut ops);
+    Trace { ops, scale }
+}
+
+/// Pre-compiled walk plan: loops carry simulated extents; statements carry
+/// fully linearized accesses (per-element coefficients folded with row
+/// strides, base address folded with the constant term).
+struct Plan {
+    nodes: Vec<PlanNode>,
+}
+
+enum PlanNode {
+    Loop { var: usize, extent: i64, body: Vec<PlanNode> },
+    Stmt(Vec<LinAccess>),
+}
+
+struct LinAccess {
+    base: u64,
+    terms: Vec<(usize, i64)>, // (var index, byte coefficient... element coeff)
+    is_store: bool,
+}
+
+impl Plan {
+    fn new(f: &TirFunc, bases: &[u64], clamp: &HashMap<u32, i64>) -> Plan {
+        fn build(
+            nodes: &[TirNode],
+            f: &TirFunc,
+            bases: &[u64],
+            clamp: &HashMap<u32, i64>,
+        ) -> Vec<PlanNode> {
+            nodes
+                .iter()
+                .map(|n| match n {
+                    TirNode::Loop(l) => {
+                        // GPU-bound loops don't run on the CPU trace path;
+                        // extent-1 per-thread view (the GPU simulator has
+                        // its own traffic model).
+                        let extent = if l.kind.is_gpu_binding() {
+                            1
+                        } else {
+                            clamp.get(&l.var).copied().unwrap_or(l.extent)
+                        };
+                        PlanNode::Loop {
+                            var: l.var as usize,
+                            extent,
+                            body: build(&l.body, f, bases, clamp),
+                        }
+                    }
+                    TirNode::Stmt(s) => PlanNode::Stmt(
+                        s.accesses()
+                            .map(|a| {
+                                let buf = &f.buffers[a.buffer as usize];
+                                let mut konst = 0i64;
+                                let mut terms: Vec<(usize, i64)> = Vec::new();
+                                let mut rowstride = 1i64;
+                                for (dim, idx) in a.indices.iter().enumerate().rev() {
+                                    konst += idx.konst * rowstride;
+                                    for t in &idx.terms {
+                                        let c = t.coeff * rowstride;
+                                        if let Some(e) =
+                                            terms.iter_mut().find(|(v, _)| *v == t.var as usize)
+                                        {
+                                            e.1 += c;
+                                        } else {
+                                            terms.push((t.var as usize, c));
+                                        }
+                                    }
+                                    rowstride *= buf.shape[dim];
+                                }
+                                LinAccess {
+                                    base: bases[a.buffer as usize]
+                                        .wrapping_add((konst.max(0) as u64) * 4),
+                                    terms,
+                                    is_store: a.is_store,
+                                }
+                            })
+                            .collect(),
+                    ),
+                })
+                .collect()
+        }
+        Plan { nodes: build(&f.body, f, bases, clamp) }
+    }
+}
+
+fn walk(nodes: &[PlanNode], env: &mut [i64], ops: &mut Vec<TraceOp>) {
+    for n in nodes {
+        match n {
+            PlanNode::Loop { var, extent, body } => {
+                for v in 0..*extent {
+                    env[*var] = v;
+                    walk(body, env, ops);
+                }
+                env[*var] = 0;
+            }
+            PlanNode::Stmt(accs) => {
+                for a in accs {
+                    let mut off = 0i64;
+                    for &(v, c) in &a.terms {
+                        off += c * env[v];
+                    }
+                    let addr = a.base.wrapping_add((off * 4) as u64);
+                    ops.push(TraceOp { addr, is_store: a.is_store });
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::TargetKind;
+    use crate::tir::ops::OpSpec;
+    use crate::transform;
+
+    fn bases_for(f: &crate::tir::TirFunc) -> Vec<u64> {
+        let mut base = 0x1000u64;
+        f.buffers
+            .iter()
+            .map(|b| {
+                let a = base;
+                base += b.bytes() as u64 + 4096;
+                a
+            })
+            .collect()
+    }
+
+    #[test]
+    fn small_nest_traced_fully() {
+        let op = OpSpec::Matmul { m: 16, n: 16, k: 16 };
+        let t = TargetKind::Graviton2;
+        let s = transform::config_space(&op, t);
+        let f = transform::apply(&op, t, &s.default_config());
+        let tr = generate(&f, &bases_for(&f), 1_000_000);
+        assert!((tr.scale - 1.0).abs() < 1e-9);
+        // 3 accesses per MulAdd instance
+        assert_eq!(tr.ops.len() as u64, 3 * f.total_stmt_instances());
+    }
+
+    #[test]
+    fn big_nest_is_sampled_and_scaled() {
+        let op = OpSpec::Matmul { m: 256, n: 256, k: 256 };
+        let t = TargetKind::Graviton2;
+        let s = transform::config_space(&op, t);
+        let f = transform::apply(&op, t, &s.default_config());
+        let tr = generate(&f, &bases_for(&f), 100_000);
+        assert!(tr.ops.len() < 600_000);
+        assert!(tr.scale > 1.0);
+        // scaled instance count matches the full program
+        let simulated = tr.ops.len() as f64 / 3.0;
+        let rel_err = (simulated * tr.scale - f.total_stmt_instances() as f64).abs()
+            / f.total_stmt_instances() as f64;
+        assert!(rel_err < 0.01, "rel_err {rel_err}");
+    }
+
+    #[test]
+    fn addresses_stay_inside_buffers() {
+        let op = OpSpec::Conv2d {
+            n: 1, cin: 8, h: 14, w: 14, cout: 8, kh: 3, kw: 3, stride: 1, pad: 1,
+        };
+        let t = TargetKind::Graviton2;
+        let s = transform::config_space(&op, t);
+        let f = transform::apply(&op, t, &s.default_config());
+        let bases = bases_for(&f);
+        let tr = generate(&f, &bases, 500_000);
+        for op_ in &tr.ops {
+            let mut inside = false;
+            for (i, b) in f.buffers.iter().enumerate() {
+                if op_.addr >= bases[i] && op_.addr < bases[i] + b.bytes() as u64 {
+                    inside = true;
+                    break;
+                }
+            }
+            assert!(inside, "address {:#x} outside all buffers", op_.addr);
+        }
+    }
+}

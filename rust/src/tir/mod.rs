@@ -1,0 +1,347 @@
+//! Mini tensor IR: loop-nest trees over affine tensor accesses.
+//!
+//! This plays the role TVM's TIR plays in the paper: the high-level program
+//! representation that (a) preserves complete loop structure for the
+//! analyzers (Algorithms 1-3 all start from "extract loops from the program
+//! AST"), and (b) is lowered by [`crate::codegen`] into virtual assembly
+//! where that structure is *lost* — which is exactly why the paper needs
+//! joint IR/asm parsing.
+
+pub mod ops;
+
+use crate::isets::Affine;
+
+
+/// Where a buffer lives. CPU buffers are all `Global`; GPU templates stage
+/// tiles in `Shared` (maps to PTX `.shared`, counted against SM occupancy)
+/// and accumulate in `Local` (registers).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum MemSpace {
+    Global,
+    Shared,
+    Local,
+}
+
+/// Tensor buffer declaration. Buffers are addressed by index in
+/// [`TirFunc::buffers`].
+#[derive(Debug, Clone)]
+pub struct BufferDecl {
+    pub name: String,
+    pub shape: Vec<i64>,
+    pub elem_bytes: u32,
+    pub space: MemSpace,
+}
+
+impl BufferDecl {
+    pub fn elems(&self) -> i64 {
+        self.shape.iter().product()
+    }
+    pub fn bytes(&self) -> i64 {
+        self.elems() * self.elem_bytes as i64
+    }
+}
+
+/// How a loop is realized.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum LoopKind {
+    /// plain sequential loop.
+    Serial,
+    /// distributed over CPU worker threads (outermost only).
+    Parallel,
+    /// SIMD-vectorized (innermost only; extent should divide lane count
+    /// or codegen falls back to scalar + masked tail).
+    Vectorize,
+    /// fully unrolled by codegen (disappears from the assembly).
+    Unroll,
+    /// GPU grid dimensions.
+    GpuBlockX,
+    GpuBlockY,
+    GpuBlockZ,
+    /// GPU thread dimensions.
+    GpuThreadX,
+    GpuThreadY,
+}
+
+impl LoopKind {
+    pub fn is_gpu_binding(self) -> bool {
+        matches!(
+            self,
+            LoopKind::GpuBlockX
+                | LoopKind::GpuBlockY
+                | LoopKind::GpuBlockZ
+                | LoopKind::GpuThreadX
+                | LoopKind::GpuThreadY
+        )
+    }
+}
+
+/// A loop over `var` in `[0, extent)`.
+#[derive(Debug, Clone)]
+pub struct LoopNode {
+    pub var: u32,
+    pub name: String,
+    pub extent: i64,
+    pub kind: LoopKind,
+    pub body: Vec<TirNode>,
+}
+
+/// A tensor access: `buffer[indices...]`, each index affine in loop vars.
+#[derive(Debug, Clone)]
+pub struct Access {
+    pub buffer: u16,
+    pub indices: Vec<Affine>,
+    pub is_store: bool,
+}
+
+impl Access {
+    pub fn load(buffer: u16, indices: Vec<Affine>) -> Self {
+        Access { buffer, indices, is_store: false }
+    }
+    pub fn store(buffer: u16, indices: Vec<Affine>) -> Self {
+        Access { buffer, indices, is_store: true }
+    }
+    /// Does any index expression reference `var`?
+    pub fn uses_var(&self, var: u32) -> bool {
+        self.indices.iter().any(|e| e.uses_var(var))
+    }
+}
+
+/// Statement operation kinds — the compute bodies our operator templates
+/// need. Each instance's flop count is `flops()`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StmtOp {
+    /// `dst += a * b` — the GEMM/conv reduction body.
+    MulAdd,
+    /// `dst = a + b`.
+    Add,
+    /// `dst = max(dst, a)`.
+    Max,
+    /// `dst = a` (copy / layout transform / cache write-back).
+    Copy,
+    /// `dst = 0` (reduction init).
+    Zero,
+}
+
+impl StmtOp {
+    pub fn flops(self) -> u64 {
+        match self {
+            StmtOp::MulAdd => 2,
+            StmtOp::Add | StmtOp::Max => 1,
+            StmtOp::Copy | StmtOp::Zero => 0,
+        }
+    }
+}
+
+/// A compute statement: one store and zero or more loads.
+#[derive(Debug, Clone)]
+pub struct Stmt {
+    pub op: StmtOp,
+    pub store: Access,
+    pub loads: Vec<Access>,
+}
+
+impl Stmt {
+    /// All accesses, store first.
+    pub fn accesses(&self) -> impl Iterator<Item = &Access> {
+        std::iter::once(&self.store).chain(self.loads.iter())
+    }
+}
+
+/// Tree node.
+#[derive(Debug, Clone)]
+pub enum TirNode {
+    Loop(LoopNode),
+    Stmt(Stmt),
+}
+
+/// A lowered-from-operator function: buffers + loop-nest body.
+#[derive(Debug, Clone)]
+pub struct TirFunc {
+    pub name: String,
+    pub buffers: Vec<BufferDecl>,
+    pub body: Vec<TirNode>,
+    /// next fresh loop-var id (used by transforms that split loops).
+    pub next_var: u32,
+}
+
+impl TirFunc {
+    pub fn new(name: impl Into<String>) -> Self {
+        TirFunc { name: name.into(), buffers: Vec::new(), body: Vec::new(), next_var: 0 }
+    }
+
+    pub fn add_buffer(&mut self, name: impl Into<String>, shape: Vec<i64>) -> u16 {
+        self.add_buffer_in(name, shape, MemSpace::Global)
+    }
+
+    pub fn add_buffer_in(
+        &mut self,
+        name: impl Into<String>,
+        shape: Vec<i64>,
+        space: MemSpace,
+    ) -> u16 {
+        self.buffers.push(BufferDecl { name: name.into(), shape, elem_bytes: 4, space });
+        (self.buffers.len() - 1) as u16
+    }
+
+    pub fn fresh_var(&mut self) -> u32 {
+        let v = self.next_var;
+        self.next_var += 1;
+        v
+    }
+
+    /// Pre-order DFS of all loops — the paper's
+    /// `Preorder-DFS-For-Loop(IR)` from Algorithm 1.
+    pub fn preorder_loops(&self) -> Vec<&LoopNode> {
+        fn walk<'a>(nodes: &'a [TirNode], out: &mut Vec<&'a LoopNode>) {
+            for n in nodes {
+                if let TirNode::Loop(l) = n {
+                    out.push(l);
+                    walk(&l.body, out);
+                }
+            }
+        }
+        let mut out = Vec::new();
+        walk(&self.body, &mut out);
+        out
+    }
+
+    /// All statements with the stack of enclosing loops for each.
+    pub fn statements(&self) -> Vec<(Vec<&LoopNode>, &Stmt)> {
+        fn walk<'a>(
+            nodes: &'a [TirNode],
+            stack: &mut Vec<&'a LoopNode>,
+            out: &mut Vec<(Vec<&'a LoopNode>, &'a Stmt)>,
+        ) {
+            for n in nodes {
+                match n {
+                    TirNode::Loop(l) => {
+                        stack.push(l);
+                        walk(&l.body, stack, out);
+                        stack.pop();
+                    }
+                    TirNode::Stmt(s) => out.push((stack.clone(), s)),
+                }
+            }
+        }
+        let mut out = Vec::new();
+        walk(&self.body, &mut Vec::new(), &mut out);
+        out
+    }
+
+    /// Total floating-point operations executed by the function.
+    pub fn total_flops(&self) -> u64 {
+        self.statements()
+            .iter()
+            .map(|(stack, s)| {
+                let iters: i64 = stack.iter().map(|l| l.extent).product();
+                iters as u64 * s.op.flops()
+            })
+            .sum()
+    }
+
+    /// Total statement *instances* (loop-trip products), the work measure
+    /// used by trip-count sanity checks.
+    pub fn total_stmt_instances(&self) -> u64 {
+        self.statements()
+            .iter()
+            .map(|(stack, _)| stack.iter().map(|l| l.extent as u64).product::<u64>())
+            .sum()
+    }
+
+    /// Pretty-print the loop nest (docs/tests/debugging).
+    pub fn render(&self) -> String {
+        fn walk(nodes: &[TirNode], depth: usize, bufs: &[BufferDecl], s: &mut String) {
+            let pad = "  ".repeat(depth);
+            for n in nodes {
+                match n {
+                    TirNode::Loop(l) => {
+                        s.push_str(&format!(
+                            "{pad}for {} in 0..{} ({:?})\n",
+                            l.name, l.extent, l.kind
+                        ));
+                        walk(&l.body, depth + 1, bufs, s);
+                    }
+                    TirNode::Stmt(st) => {
+                        s.push_str(&format!(
+                            "{pad}{}[..] {:?} {}\n",
+                            bufs[st.store.buffer as usize].name,
+                            st.op,
+                            st.loads
+                                .iter()
+                                .map(|a| bufs[a.buffer as usize].name.clone())
+                                .collect::<Vec<_>>()
+                                .join(", ")
+                        ));
+                    }
+                }
+            }
+        }
+        let mut s = String::new();
+        walk(&self.body, 0, &self.buffers, &mut s);
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isets::Affine;
+
+    /// Hand-build `for i in 0..4 { for j in 0..8 { C[i][j] += A[i][j]*B[j] } }`.
+    fn small_func() -> TirFunc {
+        let mut f = TirFunc::new("t");
+        let a = f.add_buffer("A", vec![4, 8]);
+        let b = f.add_buffer("B", vec![8]);
+        let c = f.add_buffer("C", vec![4, 8]);
+        let (vi, vj) = (f.fresh_var(), f.fresh_var());
+        let stmt = Stmt {
+            op: StmtOp::MulAdd,
+            store: Access::store(c, vec![Affine::var(vi), Affine::var(vj)]),
+            loads: vec![
+                Access::load(a, vec![Affine::var(vi), Affine::var(vj)]),
+                Access::load(b, vec![Affine::var(vj)]),
+            ],
+        };
+        f.body = vec![TirNode::Loop(LoopNode {
+            var: vi,
+            name: "i".into(),
+            extent: 4,
+            kind: LoopKind::Serial,
+            body: vec![TirNode::Loop(LoopNode {
+                var: vj,
+                name: "j".into(),
+                extent: 8,
+                kind: LoopKind::Serial,
+                body: vec![TirNode::Stmt(stmt)],
+            })],
+        })];
+        f
+    }
+
+    #[test]
+    fn preorder_and_flops() {
+        let f = small_func();
+        let loops = f.preorder_loops();
+        assert_eq!(loops.len(), 2);
+        assert_eq!(loops[0].name, "i");
+        assert_eq!(loops[1].name, "j");
+        assert_eq!(f.total_flops(), 4 * 8 * 2);
+        assert_eq!(f.total_stmt_instances(), 32);
+    }
+
+    #[test]
+    fn statements_capture_stack() {
+        let f = small_func();
+        let stmts = f.statements();
+        assert_eq!(stmts.len(), 1);
+        assert_eq!(stmts[0].0.len(), 2);
+        assert!(stmts[0].1.store.is_store);
+    }
+
+    #[test]
+    fn render_contains_loops() {
+        let r = small_func().render();
+        assert!(r.contains("for i in 0..4"));
+        assert!(r.contains("MulAdd"));
+    }
+}

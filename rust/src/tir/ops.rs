@@ -1,0 +1,207 @@
+//! Operator specifications — the tensor programs Tuna optimizes.
+//!
+//! These are the operators the paper's single-operator evaluation sweeps
+//! (`conv2d`, `conv2d_winograd`, `depthwise_conv2d`,
+//! `batch_matrix_multiplication`) plus `dense`, which dominates BERT.
+//! An [`OpSpec`] is pure *what* (shapes, semantics, flops); the scheduled
+//! *how* lives in [`crate::transform`].
+
+
+use std::fmt;
+
+/// A tensor-operator workload instance.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum OpSpec {
+    /// `C[m,n] = Σ_k A[m,k]·B[k,n]` (dense layer: batch folded into m).
+    Matmul { m: i64, n: i64, k: i64 },
+    /// `C[b,m,n] = Σ_k A[b,m,k]·B[b,k,n]` (attention score/context).
+    BatchMatmul { b: i64, m: i64, n: i64, k: i64 },
+    /// NCHW direct convolution.
+    Conv2d {
+        n: i64,
+        cin: i64,
+        h: i64,
+        w: i64,
+        cout: i64,
+        kh: i64,
+        kw: i64,
+        stride: i64,
+        pad: i64,
+    },
+    /// Depthwise convolution (channel multiplier 1).
+    DepthwiseConv2d {
+        n: i64,
+        c: i64,
+        h: i64,
+        w: i64,
+        kh: i64,
+        kw: i64,
+        stride: i64,
+        pad: i64,
+    },
+    /// Winograd F(m=2, r=3) convolution: input/weight transform, batched
+    /// GEMM over tiles, output transform. Only valid for 3×3 stride-1.
+    Conv2dWinograd {
+        n: i64,
+        cin: i64,
+        h: i64,
+        w: i64,
+        cout: i64,
+    },
+}
+
+impl OpSpec {
+    /// Operator family name (used in figures and the schedule cache key).
+    pub fn kind_name(&self) -> &'static str {
+        match self {
+            OpSpec::Matmul { .. } => "dense",
+            OpSpec::BatchMatmul { .. } => "batch_matmul",
+            OpSpec::Conv2d { .. } => "conv2d",
+            OpSpec::DepthwiseConv2d { .. } => "depthwise_conv2d",
+            OpSpec::Conv2dWinograd { .. } => "conv2d_winograd",
+        }
+    }
+
+    /// Output spatial size of a convolution dimension.
+    pub fn out_dim(size: i64, k: i64, stride: i64, pad: i64) -> i64 {
+        (size + 2 * pad - k) / stride + 1
+    }
+
+    /// Theoretical flop count (mul+add = 2 flops).
+    pub fn flops(&self) -> u64 {
+        match *self {
+            OpSpec::Matmul { m, n, k } => (2 * m * n * k) as u64,
+            OpSpec::BatchMatmul { b, m, n, k } => (2 * b * m * n * k) as u64,
+            OpSpec::Conv2d { n, cin, h, w, cout, kh, kw, stride, pad } => {
+                let oh = Self::out_dim(h, kh, stride, pad);
+                let ow = Self::out_dim(w, kw, stride, pad);
+                (2 * n * cout * oh * ow * cin * kh * kw) as u64
+            }
+            OpSpec::DepthwiseConv2d { n, c, h, w, kh, kw, stride, pad } => {
+                let oh = Self::out_dim(h, kh, stride, pad);
+                let ow = Self::out_dim(w, kw, stride, pad);
+                (2 * n * c * oh * ow * kh * kw) as u64
+            }
+            OpSpec::Conv2dWinograd { n, cin, h, w, cout } => {
+                // F(2x2, 3x3): per output tile, a 16-point GEMM over the
+                // transformed domain plus input/output transforms — counts
+                // match the canonical 3-stage template in
+                // transform::templates::cpu::build_winograd.
+                let oh = h; // stride 1, pad 1 "same"
+                let ow = w;
+                let tiles = (oh / 2) * (ow / 2) * n;
+                let gemm = 32 * tiles * cout * cin; // 2 * 16 * co * ci per tile
+                let xform_in = 128 * cin * tiles; // 4*4*4 muladds * 2 flops
+                let xform_out = 32 * cout * tiles; // 2*2*4 muladds * 2 flops
+                (gemm + xform_in + xform_out) as u64
+            }
+        }
+    }
+
+    /// Total bytes of all input+output tensors (f32), a memory-traffic
+    /// lower bound used by roofline reporting.
+    pub fn min_bytes(&self) -> u64 {
+        let elems: i64 = match *self {
+            OpSpec::Matmul { m, n, k } => m * k + k * n + m * n,
+            OpSpec::BatchMatmul { b, m, n, k } => b * (m * k + k * n + m * n),
+            OpSpec::Conv2d { n, cin, h, w, cout, kh, kw, stride, pad } => {
+                let oh = Self::out_dim(h, kh, stride, pad);
+                let ow = Self::out_dim(w, kw, stride, pad);
+                n * cin * h * w + cout * cin * kh * kw + n * cout * oh * ow
+            }
+            OpSpec::DepthwiseConv2d { n, c, h, w, kh, kw, stride, pad } => {
+                let oh = Self::out_dim(h, kh, stride, pad);
+                let ow = Self::out_dim(w, kw, stride, pad);
+                n * c * h * w + c * kh * kw + n * c * oh * ow
+            }
+            OpSpec::Conv2dWinograd { n, cin, h, w, cout } => {
+                n * cin * h * w + cout * cin * 9 + n * cout * h * w
+            }
+        };
+        elems as u64 * 4
+    }
+
+    /// Arithmetic intensity in flops/byte (roofline x-axis).
+    pub fn arithmetic_intensity(&self) -> f64 {
+        self.flops() as f64 / self.min_bytes() as f64
+    }
+
+    /// A stable cache key for the schedule registry.
+    pub fn cache_key(&self) -> String {
+        format!("{self}")
+    }
+}
+
+impl fmt::Display for OpSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match *self {
+            OpSpec::Matmul { m, n, k } => write!(f, "dense_m{m}_n{n}_k{k}"),
+            OpSpec::BatchMatmul { b, m, n, k } => write!(f, "bmm_b{b}_m{m}_n{n}_k{k}"),
+            OpSpec::Conv2d { n, cin, h, w, cout, kh, kw, stride, pad } => write!(
+                f,
+                "conv2d_n{n}_c{cin}_hw{h}x{w}_o{cout}_k{kh}x{kw}_s{stride}_p{pad}"
+            ),
+            OpSpec::DepthwiseConv2d { n, c, h, w, kh, kw, stride, pad } => {
+                write!(f, "dwconv_n{n}_c{c}_hw{h}x{w}_k{kh}x{kw}_s{stride}_p{pad}")
+            }
+            OpSpec::Conv2dWinograd { n, cin, h, w, cout } => {
+                write!(f, "winograd_n{n}_c{cin}_hw{h}x{w}_o{cout}")
+            }
+        }
+    }
+}
+
+/// The representative single-operator shapes used by Figures 3/4 (ResNet-
+/// and BERT-class layer sizes).
+pub fn figure_op_suite() -> Vec<OpSpec> {
+    vec![
+        OpSpec::Conv2d { n: 1, cin: 64, h: 56, w: 56, cout: 64, kh: 3, kw: 3, stride: 1, pad: 1 },
+        OpSpec::Conv2d { n: 1, cin: 128, h: 28, w: 28, cout: 128, kh: 3, kw: 3, stride: 1, pad: 1 },
+        OpSpec::Conv2d { n: 1, cin: 256, h: 14, w: 14, cout: 256, kh: 3, kw: 3, stride: 1, pad: 1 },
+        OpSpec::Conv2dWinograd { n: 1, cin: 64, h: 56, w: 56, cout: 64 },
+        OpSpec::Conv2dWinograd { n: 1, cin: 128, h: 28, w: 28, cout: 128 },
+        OpSpec::DepthwiseConv2d { n: 1, c: 96, h: 112, w: 112, kh: 3, kw: 3, stride: 2, pad: 1 },
+        OpSpec::DepthwiseConv2d { n: 1, c: 144, h: 56, w: 56, kh: 3, kw: 3, stride: 1, pad: 1 },
+        OpSpec::BatchMatmul { b: 12, m: 128, n: 128, k: 64 },
+        OpSpec::BatchMatmul { b: 12, m: 128, n: 64, k: 128 },
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_out_dim() {
+        assert_eq!(OpSpec::out_dim(56, 3, 1, 1), 56);
+        assert_eq!(OpSpec::out_dim(112, 3, 2, 1), 56);
+        assert_eq!(OpSpec::out_dim(224, 7, 2, 3), 112);
+    }
+
+    #[test]
+    fn matmul_flops() {
+        let op = OpSpec::Matmul { m: 128, n: 128, k: 128 };
+        assert_eq!(op.flops(), 2 * 128 * 128 * 128);
+    }
+
+    #[test]
+    fn conv_flops_match_formula() {
+        let op = OpSpec::Conv2d {
+            n: 1, cin: 64, h: 56, w: 56, cout: 64, kh: 3, kw: 3, stride: 1, pad: 1,
+        };
+        assert_eq!(op.flops(), 2 * 64 * 56 * 56 * 64 * 9);
+    }
+
+    #[test]
+    fn intensity_positive() {
+        for op in figure_op_suite() {
+            assert!(op.arithmetic_intensity() > 0.0, "{op}");
+        }
+    }
+
+    #[test]
+    fn display_stable() {
+        let op = OpSpec::Matmul { m: 1, n: 2, k: 3 };
+        assert_eq!(op.cache_key(), "dense_m1_n2_k3");
+    }
+}

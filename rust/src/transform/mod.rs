@@ -1,0 +1,48 @@
+//! Schedule transformations and per-operator configuration spaces.
+//!
+//! `primitives` implements the loop transformations (split / reorder /
+//! annotate / unroll / vectorize / parallel) as real tree rewrites over
+//! [`crate::tir`]; `space` defines AutoTVM-style discrete knob spaces; and
+//! `templates` composes the two: for every operator family × target it
+//! builds the naive loop nest, applies the transformations a config
+//! selects, and returns the scheduled [`crate::tir::TirFunc`] ready for
+//! code generation.
+
+pub mod primitives;
+pub mod space;
+pub mod templates;
+
+pub use space::{ConfigSpace, Knob, KnobValue, ScheduleConfig};
+
+use crate::isa::TargetKind;
+use crate::tir::{ops::OpSpec, TirFunc};
+
+/// Build the config space for an operator on a target.
+pub fn config_space(op: &OpSpec, target: TargetKind) -> ConfigSpace {
+    templates::space_for(op, target)
+}
+
+/// Apply a schedule config, producing the scheduled TIR.
+///
+/// Panics if `config` does not belong to `config_space(op, target)`.
+pub fn apply(op: &OpSpec, target: TargetKind, config: &ScheduleConfig) -> TirFunc {
+    templates::build(op, target, config)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_figure_op_has_space_on_every_target() {
+        for target in TargetKind::ALL {
+            for op in crate::tir::ops::figure_op_suite() {
+                let space = config_space(&op, target);
+                assert!(space.size() > 1, "{op} on {target:?} has trivial space");
+                // default config must build
+                let f = apply(&op, target, &space.default_config());
+                assert!(f.total_flops() > 0);
+            }
+        }
+    }
+}

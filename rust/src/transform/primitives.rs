@@ -1,0 +1,264 @@
+//! Loop-transformation primitives: real tree rewrites over [`crate::tir`].
+//!
+//! These mirror TVM's schedule primitives. All splits require the factor to
+//! divide the extent (templates only enumerate divisors), which keeps every
+//! access affine-exact — no boundary guards, so the analyzers and the
+//! simulator agree on trip counts.
+
+use crate::isets::Affine;
+use crate::tir::{LoopKind, LoopNode, TirFunc, TirNode};
+
+/// Split the loop over `var` by `factor`: `v -> vo*factor + vi`.
+/// Returns `(outer_var, inner_var)`. Panics if the loop is not found or the
+/// factor does not divide the extent.
+pub fn split(f: &mut TirFunc, var: u32, factor: i64) -> (u32, u32) {
+    assert!(factor >= 1);
+    let vo = f.fresh_var();
+    let vi = f.fresh_var();
+    let found = split_in(&mut f.body, var, factor, vo, vi);
+    assert!(found, "split: loop var {var} not found");
+    (vo, vi)
+}
+
+fn split_in(nodes: &mut Vec<TirNode>, var: u32, factor: i64, vo: u32, vi: u32) -> bool {
+    for n in nodes.iter_mut() {
+        if let TirNode::Loop(l) = n {
+            if l.var == var {
+                assert!(
+                    l.extent % factor == 0,
+                    "split factor {factor} !| extent {} of {}",
+                    l.extent,
+                    l.name
+                );
+                // substitute v := vo*factor + vi in the whole body
+                let repl = Affine::scaled(vo, factor).add(&Affine::var(vi));
+                let mut body = std::mem::take(&mut l.body);
+                subst_nodes(&mut body, var, &repl);
+                let inner = LoopNode {
+                    var: vi,
+                    name: format!("{}.i", l.name),
+                    extent: factor,
+                    kind: LoopKind::Serial,
+                    body,
+                };
+                let outer = LoopNode {
+                    var: vo,
+                    name: format!("{}.o", l.name),
+                    extent: l.extent / factor,
+                    kind: l.kind,
+                    body: vec![TirNode::Loop(inner)],
+                };
+                *n = TirNode::Loop(outer);
+                return true;
+            }
+            if split_in(&mut l.body, var, factor, vo, vi) {
+                return true;
+            }
+        }
+    }
+    false
+}
+
+/// Substitute `var := repl` in every access under `nodes`.
+fn subst_nodes(nodes: &mut [TirNode], var: u32, repl: &Affine) {
+    for n in nodes {
+        match n {
+            TirNode::Loop(l) => subst_nodes(&mut l.body, var, repl),
+            TirNode::Stmt(s) => {
+                for idx in s.store.indices.iter_mut() {
+                    *idx = idx.subst(var, repl);
+                }
+                for a in s.loads.iter_mut() {
+                    for idx in a.indices.iter_mut() {
+                        *idx = idx.subst(var, repl);
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Annotate the loop over `var` with a kind (vectorize/unroll/parallel/GPU
+/// bindings). Panics if the loop is not found.
+pub fn annotate(f: &mut TirFunc, var: u32, kind: LoopKind) {
+    fn walk(nodes: &mut [TirNode], var: u32, kind: LoopKind) -> bool {
+        for n in nodes {
+            if let TirNode::Loop(l) = n {
+                if l.var == var {
+                    l.kind = kind;
+                    return true;
+                }
+                if walk(&mut l.body, var, kind) {
+                    return true;
+                }
+            }
+        }
+        false
+    }
+    assert!(walk(&mut f.body, var, kind), "annotate: loop var {var} not found");
+}
+
+/// Reorder a *perfect* loop-nest chain so its loops appear in `order`
+/// (outermost first). `order` must be a permutation of the chain's vars.
+/// The chain starts at the unique outermost loop of `f.body[chain_root]`.
+pub fn reorder(f: &mut TirFunc, chain_root: usize, order: &[u32]) {
+    // Take ownership of the subtree, peel the perfect chain, rebuild.
+    let taken = std::mem::replace(
+        &mut f.body[chain_root],
+        TirNode::Stmt(crate::tir::Stmt {
+            op: crate::tir::StmtOp::Zero,
+            store: crate::tir::Access::store(0, vec![]),
+            loads: vec![],
+        }),
+    );
+    let TirNode::Loop(mut cur) = taken else {
+        panic!("reorder: body[{chain_root}] is not a loop");
+    };
+    let mut meta: Vec<(u32, String, i64, LoopKind)> = Vec::new();
+    let innermost_body;
+    loop {
+        meta.push((cur.var, cur.name.clone(), cur.extent, cur.kind));
+        if meta.len() == order.len() {
+            innermost_body = cur.body;
+            break;
+        }
+        if cur.body.len() == 1 && matches!(cur.body[0], TirNode::Loop(_)) {
+            let TirNode::Loop(next) = cur.body.into_iter().next().unwrap() else {
+                unreachable!()
+            };
+            cur = next;
+        } else {
+            innermost_body = cur.body;
+            break;
+        }
+    }
+    assert_eq!(
+        meta.len(),
+        order.len(),
+        "reorder: chain has {} loops, order lists {}",
+        meta.len(),
+        order.len()
+    );
+    // Rebuild in requested order.
+    let mut body = innermost_body;
+    for &v in order.iter().rev() {
+        let (var, name, extent, kind) = meta
+            .iter()
+            .find(|(mv, ..)| *mv == v)
+            .unwrap_or_else(|| panic!("reorder: var {v} not in chain"))
+            .clone();
+        body = vec![TirNode::Loop(LoopNode { var, name, extent, kind, body })];
+    }
+    f.body[chain_root] = body.into_iter().next().unwrap();
+}
+
+/// Convenience: split + annotate inner as Vectorize.
+pub fn split_vectorize(f: &mut TirFunc, var: u32, lanes: i64) -> (u32, u32) {
+    let (vo, vi) = split(f, var, lanes);
+    annotate(f, vi, LoopKind::Vectorize);
+    (vo, vi)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tir::{Access, Stmt, StmtOp};
+
+    /// `for i in 0..16 { for j in 0..32 { C[i][j] += A[i][j] * B[j][i] } }`
+    fn mk() -> (TirFunc, u32, u32) {
+        let mut f = TirFunc::new("t");
+        let a = f.add_buffer("A", vec![16, 32]);
+        let b = f.add_buffer("B", vec![32, 16]);
+        let c = f.add_buffer("C", vec![16, 32]);
+        let vi = f.fresh_var();
+        let vj = f.fresh_var();
+        let stmt = Stmt {
+            op: StmtOp::MulAdd,
+            store: Access::store(c, vec![Affine::var(vi), Affine::var(vj)]),
+            loads: vec![
+                Access::load(a, vec![Affine::var(vi), Affine::var(vj)]),
+                Access::load(b, vec![Affine::var(vj), Affine::var(vi)]),
+            ],
+        };
+        f.body = vec![TirNode::Loop(LoopNode {
+            var: vi,
+            name: "i".into(),
+            extent: 16,
+            kind: LoopKind::Serial,
+            body: vec![TirNode::Loop(LoopNode {
+                var: vj,
+                name: "j".into(),
+                extent: 32,
+                kind: LoopKind::Serial,
+                body: vec![TirNode::Stmt(stmt)],
+            })],
+        })];
+        (f, vi, vj)
+    }
+
+    #[test]
+    fn split_preserves_instances_and_flops() {
+        let (mut f, vi, _) = mk();
+        let before = f.total_stmt_instances();
+        let flops = f.total_flops();
+        split(&mut f, vi, 4);
+        assert_eq!(f.total_stmt_instances(), before);
+        assert_eq!(f.total_flops(), flops);
+        assert_eq!(f.preorder_loops().len(), 3);
+    }
+
+    #[test]
+    fn split_rewrites_accesses() {
+        let (mut f, vi, _) = mk();
+        let (vo, vin) = split(&mut f, vi, 4);
+        let stmts = f.statements();
+        let store = &stmts[0].1.store;
+        // index 0 must now be vo*4 + vin
+        assert!(store.indices[0].uses_var(vo));
+        assert!(store.indices[0].uses_var(vin));
+        assert!(!store.indices[0].uses_var(vi));
+        // evaluate at vo=2, vin=3 -> 11
+        let v = store.indices[0].eval(&|u| if u == vo { 2 } else if u == vin { 3 } else { 0 });
+        assert_eq!(v, 11);
+    }
+
+    #[test]
+    fn reorder_swaps_chain() {
+        let (mut f, vi, vj) = mk();
+        reorder(&mut f, 0, &[vj, vi]);
+        let loops = f.preorder_loops();
+        assert_eq!(loops[0].var, vj);
+        assert_eq!(loops[1].var, vi);
+        assert_eq!(f.total_stmt_instances(), 16 * 32);
+    }
+
+    #[test]
+    fn annotate_marks_kind() {
+        let (mut f, _, vj) = mk();
+        annotate(&mut f, vj, LoopKind::Vectorize);
+        let loops = f.preorder_loops();
+        assert_eq!(loops[1].kind, LoopKind::Vectorize);
+    }
+
+    #[test]
+    #[should_panic]
+    fn split_nondivisible_panics() {
+        let (mut f, vi, _) = mk();
+        split(&mut f, vi, 5);
+    }
+
+    #[test]
+    fn split_then_reorder_tiled_matmul_shape() {
+        // classic 2-level tiling: i->io,ii ; j->jo,ji ; order io,jo,ii,ji
+        let (mut f, vi, vj) = mk();
+        let (io, ii) = split(&mut f, vi, 4);
+        let (jo, ji) = split(&mut f, vj, 8);
+        reorder(&mut f, 0, &[io, jo, ii, ji]);
+        let loops = f.preorder_loops();
+        let vars: Vec<u32> = loops.iter().map(|l| l.var).collect();
+        assert_eq!(vars, vec![io, jo, ii, ji]);
+        let extents: Vec<i64> = loops.iter().map(|l| l.extent).collect();
+        assert_eq!(extents, vec![4, 4, 4, 8]);
+        assert_eq!(f.total_stmt_instances(), 512);
+    }
+}

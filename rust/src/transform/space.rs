@@ -1,0 +1,201 @@
+//! AutoTVM-style discrete configuration spaces.
+//!
+//! A space is an ordered list of named knobs, each with a finite value set;
+//! a [`ScheduleConfig`] picks one value per knob. Spaces are indexable
+//! (`flat index <-> config`), which both the ES search (continuous θ mapped
+//! to per-knob indices) and the exhaustive sweeps of Figures 3/4 rely on.
+
+
+
+/// One knob value.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum KnobValue {
+    /// a single integer (tile size, unroll factor, ...).
+    Int(i64),
+    /// a tag selecting a discrete alternative (loop order, layout, ...).
+    Tag(String),
+}
+
+impl KnobValue {
+    pub fn as_int(&self) -> i64 {
+        match self {
+            KnobValue::Int(v) => *v,
+            KnobValue::Tag(t) => panic!("knob value is tag {t:?}, not int"),
+        }
+    }
+    pub fn as_tag(&self) -> &str {
+        match self {
+            KnobValue::Tag(t) => t,
+            KnobValue::Int(v) => panic!("knob value is int {v}, not tag"),
+        }
+    }
+}
+
+/// A named knob with its candidate values.
+#[derive(Debug, Clone)]
+pub struct Knob {
+    pub name: String,
+    pub values: Vec<KnobValue>,
+}
+
+/// The discrete search space of one operator template.
+#[derive(Debug, Clone, Default)]
+pub struct ConfigSpace {
+    pub knobs: Vec<Knob>,
+}
+
+/// One point in a [`ConfigSpace`]: the chosen value index per knob.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct ScheduleConfig {
+    pub choices: Vec<usize>,
+}
+
+impl ConfigSpace {
+    pub fn new() -> Self {
+        ConfigSpace { knobs: Vec::new() }
+    }
+
+    /// Add an integer knob; returns self for chaining.
+    pub fn int_knob(mut self, name: &str, values: Vec<i64>) -> Self {
+        assert!(!values.is_empty(), "knob {name} has no candidates");
+        self.knobs.push(Knob {
+            name: name.into(),
+            values: values.into_iter().map(KnobValue::Int).collect(),
+        });
+        self
+    }
+
+    /// Add a tag (categorical) knob.
+    pub fn tag_knob(mut self, name: &str, values: &[&str]) -> Self {
+        assert!(!values.is_empty());
+        self.knobs.push(Knob {
+            name: name.into(),
+            values: values.iter().map(|s| KnobValue::Tag((*s).into())).collect(),
+        });
+        self
+    }
+
+    /// Total number of configurations (product of knob sizes).
+    pub fn size(&self) -> u64 {
+        self.knobs.iter().map(|k| k.values.len() as u64).product()
+    }
+
+    /// Config from flat index (mixed-radix decode). `idx < size()`.
+    pub fn from_index(&self, mut idx: u64) -> ScheduleConfig {
+        let mut choices = Vec::with_capacity(self.knobs.len());
+        for k in &self.knobs {
+            let n = k.values.len() as u64;
+            choices.push((idx % n) as usize);
+            idx /= n;
+        }
+        ScheduleConfig { choices }
+    }
+
+    /// Flat index of a config (inverse of [`Self::from_index`]).
+    pub fn to_index(&self, cfg: &ScheduleConfig) -> u64 {
+        let mut idx = 0u64;
+        let mut mul = 1u64;
+        for (k, &c) in self.knobs.iter().zip(&cfg.choices) {
+            idx += c as u64 * mul;
+            mul *= k.values.len() as u64;
+        }
+        idx
+    }
+
+    /// First value of every knob.
+    pub fn default_config(&self) -> ScheduleConfig {
+        ScheduleConfig { choices: vec![0; self.knobs.len()] }
+    }
+
+    /// Look up the chosen integer value of knob `name` under `cfg`.
+    pub fn get_int(&self, cfg: &ScheduleConfig, name: &str) -> i64 {
+        self.knob_value(cfg, name).as_int()
+    }
+
+    /// Look up the chosen tag of knob `name` under `cfg`.
+    pub fn get_tag<'a>(&'a self, cfg: &'a ScheduleConfig, name: &str) -> &'a str {
+        self.knob_value(cfg, name).as_tag()
+    }
+
+    fn knob_value<'a>(&'a self, cfg: &ScheduleConfig, name: &str) -> &'a KnobValue {
+        let (i, k) = self
+            .knobs
+            .iter()
+            .enumerate()
+            .find(|(_, k)| k.name == name)
+            .unwrap_or_else(|| panic!("no knob named {name}"));
+        &k.values[cfg.choices[i]]
+    }
+
+    /// Is the config structurally valid for this space?
+    pub fn contains(&self, cfg: &ScheduleConfig) -> bool {
+        cfg.choices.len() == self.knobs.len()
+            && cfg
+                .choices
+                .iter()
+                .zip(&self.knobs)
+                .all(|(&c, k)| c < k.values.len())
+    }
+
+    /// Uniformly random config.
+    pub fn random(&self, rng: &mut crate::util::Rng) -> ScheduleConfig {
+        ScheduleConfig {
+            choices: self.knobs.iter().map(|k| rng.below(k.values.len())).collect(),
+        }
+    }
+
+    /// Mutate one random knob (the AutoTVM-SA neighbourhood move).
+    pub fn mutate(&self, cfg: &ScheduleConfig, rng: &mut crate::util::Rng) -> ScheduleConfig {
+        let mut out = cfg.clone();
+        if self.knobs.is_empty() {
+            return out;
+        }
+        let i = rng.below(self.knobs.len());
+        out.choices[i] = rng.below(self.knobs[i].values.len());
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn space() -> ConfigSpace {
+        ConfigSpace::new()
+            .int_knob("tile_m", vec![1, 2, 4, 8])
+            .int_knob("tile_n", vec![1, 2, 4])
+            .tag_knob("order", &["mnk", "mkn"])
+    }
+
+    #[test]
+    fn size_and_roundtrip() {
+        let s = space();
+        assert_eq!(s.size(), 4 * 3 * 2);
+        for idx in 0..s.size() {
+            let c = s.from_index(idx);
+            assert!(s.contains(&c));
+            assert_eq!(s.to_index(&c), idx);
+        }
+    }
+
+    #[test]
+    fn lookups() {
+        let s = space();
+        let c = s.from_index(5); // tile_m idx 1 (=2), tile_n idx 1 (=2), order idx 0
+        assert_eq!(s.get_int(&c, "tile_m"), 2);
+        assert_eq!(s.get_int(&c, "tile_n"), 2);
+        assert_eq!(s.get_tag(&c, "order"), "mnk");
+    }
+
+    #[test]
+    fn mutate_stays_valid() {
+        let s = space();
+        let mut rng = Rng::new(1);
+        let mut c = s.default_config();
+        for _ in 0..100 {
+            c = s.mutate(&c, &mut rng);
+            assert!(s.contains(&c));
+        }
+    }
+}

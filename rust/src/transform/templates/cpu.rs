@@ -1,0 +1,688 @@
+//! CPU schedule templates (x86 AVX-512 and AArch64 NEON targets).
+//!
+//! These mirror TVM's x86/ARM operator schedules: multi-level tiling with
+//! divisor factors, a categorical loop order, an `NCHWc`-vs-`NCHW` layout
+//! choice for convolutions (vectorizing channels vs spatial width), unroll
+//! toggles on the small reduction loops, and thread-parallelism on the
+//! outermost loop.
+
+use super::{nest, tile_candidates, LoopSpec};
+use crate::isa::TargetKind;
+use crate::isets::Affine;
+use crate::tir::{ops::OpSpec, Access, LoopKind, Stmt, StmtOp, TirFunc};
+use crate::transform::primitives as prim;
+use crate::transform::space::{ConfigSpace, ScheduleConfig};
+
+/// Max tile-size candidates per knob (keeps spaces in the 10²-10⁴ range,
+/// like AutoTVM's conv2d spaces).
+const CAP: usize = 6;
+
+pub fn space_for(op: &OpSpec, _target: TargetKind) -> ConfigSpace {
+    match *op {
+        OpSpec::Matmul { m, n, k } => ConfigSpace::new()
+            .int_knob("tile_m", tile_candidates(m, 128, CAP + 2))
+            .int_knob("tile_n", tile_candidates(n, 128, CAP + 2))
+            .int_knob("tile_k", tile_candidates(k, 128, CAP + 2))
+            .tag_knob("order", &["mnk", "mkn"])
+            .int_knob("unroll_k", vec![0, 1]),
+        OpSpec::BatchMatmul { m, n, k, .. } => ConfigSpace::new()
+            .int_knob("tile_m", tile_candidates(m, 64, CAP))
+            .int_knob("tile_n", tile_candidates(n, 64, CAP))
+            .int_knob("tile_k", tile_candidates(k, 64, CAP))
+            .tag_knob("order", &["mnk", "mkn"]),
+        OpSpec::Conv2d { cout, w, kh, kw, stride, pad, .. } => {
+            let ow = OpSpec::out_dim(w, kw, stride, pad);
+            let _ = kh;
+            ConfigSpace::new()
+                .tag_knob("layout", &["nchwc", "nchw"])
+                .int_knob("tile_co", tile_candidates(cout, 32, CAP))
+                .int_knob("tile_ow", tile_candidates(ow, 32, CAP))
+                .tag_knob("ci_order", &["ci_outer", "ci_inner"])
+                .int_knob("unroll_kw", vec![0, 1])
+        }
+        OpSpec::DepthwiseConv2d { c, w, kw, stride, pad, .. } => {
+            let ow = OpSpec::out_dim(w, kw, stride, pad);
+            ConfigSpace::new()
+                .tag_knob("layout", &["nchwc", "nchw"])
+                .int_knob("tile_c", tile_candidates(c, 32, CAP))
+                .int_knob("tile_ow", tile_candidates(ow, 32, CAP))
+                .int_knob("unroll_kw", vec![0, 1])
+        }
+        OpSpec::Conv2dWinograd { n, cout, h, w, .. } => {
+            let nt = n * (h / 2) * (w / 2);
+            ConfigSpace::new()
+                .int_knob("tile_co", tile_candidates(cout, 32, CAP))
+                .int_knob("tile_t", tile_candidates(nt, 64, CAP))
+                .tag_knob("gemm_order", &["ci_co_t", "ci_t_co"])
+                .int_knob("unroll_xform", vec![0, 1])
+        }
+    }
+}
+
+pub fn build(op: &OpSpec, target: TargetKind, cfg: &ScheduleConfig) -> TirFunc {
+    let space = space_for(op, target);
+    assert!(space.contains(cfg), "config does not belong to space of {op}");
+    match *op {
+        OpSpec::Matmul { m, n, k } => build_matmul(m, n, k, &space, cfg),
+        OpSpec::BatchMatmul { b, m, n, k } => build_bmm(b, m, n, k, &space, cfg),
+        OpSpec::Conv2d { n, cin, h, w, cout, kh, kw, stride, pad } => {
+            build_conv2d(n, cin, h, w, cout, kh, kw, stride, pad, &space, cfg)
+        }
+        OpSpec::DepthwiseConv2d { n, c, h, w, kh, kw, stride, pad } => {
+            build_depthwise(n, c, h, w, kh, kw, stride, pad, &space, cfg)
+        }
+        OpSpec::Conv2dWinograd { n, cin, h, w, cout } => {
+            build_winograd(n, cin, h, w, cout, &space, cfg)
+        }
+    }
+}
+
+/// Matmul: built from the *naive* nest by real transformations —
+/// split×3, reorder, parallel/vectorize/unroll annotations.
+fn build_matmul(m: i64, n: i64, k: i64, space: &ConfigSpace, cfg: &ScheduleConfig) -> TirFunc {
+    let tm = space.get_int(cfg, "tile_m");
+    let tn = space.get_int(cfg, "tile_n");
+    let tk = space.get_int(cfg, "tile_k");
+    let order = space.get_tag(cfg, "order").to_string();
+    let unroll_k = space.get_int(cfg, "unroll_k") == 1;
+
+    let mut f = TirFunc::new(format!("dense_m{m}_n{n}_k{k}"));
+    let a = f.add_buffer("A", vec![m, k]);
+    let b = f.add_buffer("B", vec![k, n]);
+    let c = f.add_buffer("C", vec![m, n]);
+    let node = nest(
+        &mut f,
+        &[
+            ("m", m, LoopKind::Serial),
+            ("n", n, LoopKind::Serial),
+            ("k", k, LoopKind::Serial),
+        ],
+        |v| Stmt {
+            op: StmtOp::MulAdd,
+            store: Access::store(c, vec![Affine::var(v[0]), Affine::var(v[1])]),
+            loads: vec![
+                Access::load(a, vec![Affine::var(v[0]), Affine::var(v[2])]),
+                Access::load(b, vec![Affine::var(v[2]), Affine::var(v[1])]),
+            ],
+        },
+    );
+    f.body = vec![node];
+    let loops = f.preorder_loops();
+    let (vm, vn, vk) = (loops[0].var, loops[1].var, loops[2].var);
+
+    let (mo, mi) = prim::split(&mut f, vm, tm);
+    let (no, ni) = prim::split(&mut f, vn, tn);
+    let (ko, ki) = prim::split(&mut f, vk, tk);
+    let order_vars = if order == "mnk" {
+        vec![mo, no, ko, mi, ki, ni]
+    } else {
+        vec![mo, no, ko, ki, mi, ni]
+    };
+    prim::reorder(&mut f, 0, &order_vars);
+    prim::annotate(&mut f, mo, LoopKind::Parallel);
+    prim::annotate(&mut f, ni, LoopKind::Vectorize);
+    if unroll_k && tk <= 16 {
+        prim::annotate(&mut f, ki, LoopKind::Unroll);
+    }
+    f
+}
+
+/// Batched matmul: batch-parallel outer loop around a tiled GEMM.
+fn build_bmm(
+    bsz: i64,
+    m: i64,
+    n: i64,
+    k: i64,
+    space: &ConfigSpace,
+    cfg: &ScheduleConfig,
+) -> TirFunc {
+    let tm = space.get_int(cfg, "tile_m");
+    let tn = space.get_int(cfg, "tile_n");
+    let tk = space.get_int(cfg, "tile_k");
+    let order = space.get_tag(cfg, "order").to_string();
+
+    let mut f = TirFunc::new(format!("bmm_b{bsz}_m{m}_n{n}_k{k}"));
+    let a = f.add_buffer("A", vec![bsz, m, k]);
+    let b = f.add_buffer("B", vec![bsz, k, n]);
+    let c = f.add_buffer("C", vec![bsz, m, n]);
+
+    let mid: [LoopSpec; 2] = if order == "mnk" {
+        [("m.i", tm, LoopKind::Serial), ("k.i", tk, LoopKind::Serial)]
+    } else {
+        [("k.i", tk, LoopKind::Serial), ("m.i", tm, LoopKind::Serial)]
+    };
+    let specs: Vec<LoopSpec> = vec![
+        ("b", bsz, LoopKind::Parallel),
+        ("m.o", m / tm, LoopKind::Serial),
+        ("n.o", n / tn, LoopKind::Serial),
+        ("k.o", k / tk, LoopKind::Serial),
+        mid[0],
+        mid[1],
+        ("n.i", tn, LoopKind::Vectorize),
+    ];
+    let node = nest(&mut f, &specs, |v| {
+        // v indices: 0=b 1=mo 2=no 3=ko, 4/5 = mid per order, 6=ni
+        let (vmi, vki) = if order == "mnk" { (v[4], v[5]) } else { (v[5], v[4]) };
+        let em = Affine::scaled(v[1], tm).add(&Affine::var(vmi));
+        let en = Affine::scaled(v[2], tn).add(&Affine::var(v[6]));
+        let ek = Affine::scaled(v[3], tk).add(&Affine::var(vki));
+        Stmt {
+            op: StmtOp::MulAdd,
+            store: Access::store(c, vec![Affine::var(v[0]), em.clone(), en.clone()]),
+            loads: vec![
+                Access::load(a, vec![Affine::var(v[0]), em, ek.clone()]),
+                Access::load(b, vec![Affine::var(v[0]), ek, en]),
+            ],
+        }
+    });
+    f.body = vec![node];
+    f
+}
+
+/// Direct conv2d over a pre-padded input, with the NCHWc / NCHW layout
+/// choice deciding the vector axis (channels vs width).
+#[allow(clippy::too_many_arguments)]
+fn build_conv2d(
+    n: i64,
+    cin: i64,
+    h: i64,
+    w: i64,
+    cout: i64,
+    kh: i64,
+    kw: i64,
+    stride: i64,
+    pad: i64,
+    space: &ConfigSpace,
+    cfg: &ScheduleConfig,
+) -> TirFunc {
+    let oh = OpSpec::out_dim(h, kh, stride, pad);
+    let ow = OpSpec::out_dim(w, kw, stride, pad);
+    let (hp, wp) = (h + 2 * pad, w + 2 * pad);
+    let layout = space.get_tag(cfg, "layout").to_string();
+    let tco = space.get_int(cfg, "tile_co");
+    let tow = space.get_int(cfg, "tile_ow");
+    let ci_outer = space.get_tag(cfg, "ci_order") == "ci_outer";
+    let unroll_kw = space.get_int(cfg, "unroll_kw") == 1;
+
+    let mut f = TirFunc::new(format!("conv2d_c{cin}_o{cout}_{h}x{w}_{layout}"));
+    let kw_kind = if unroll_kw { LoopKind::Unroll } else { LoopKind::Serial };
+
+    if layout == "nchwc" {
+        let inp = f.add_buffer("IN", vec![n, cin, hp, wp]);
+        let wgt = f.add_buffer("W5", vec![cout / tco, cin, kh, kw, tco]);
+        let out = f.add_buffer("OUT5", vec![n, cout / tco, oh, ow, tco]);
+        // n, co.o(par), [ci], oh, ow.o, [ci], kh, kw, ow.i, co.i(vec)
+        let mut specs: Vec<LoopSpec> = vec![
+            ("n", n, LoopKind::Serial),
+            ("co.o", cout / tco, LoopKind::Parallel),
+        ];
+        if ci_outer {
+            specs.push(("ci", cin, LoopKind::Serial));
+        }
+        specs.push(("oh", oh, LoopKind::Serial));
+        specs.push(("ow.o", ow / tow, LoopKind::Serial));
+        if !ci_outer {
+            specs.push(("ci", cin, LoopKind::Serial));
+        }
+        specs.extend_from_slice(&[
+            ("kh", kh, LoopKind::Serial),
+            ("kw", kw, kw_kind),
+            ("ow.i", tow, LoopKind::Serial),
+            ("co.i", tco, LoopKind::Vectorize),
+        ]);
+        let node = nest(&mut f, &specs, |v| {
+            // recover vars by position
+            let (vn, vcoo) = (v[0], v[1]);
+            let (vci, voh, vowo, vkh, vkw, vowi, vcoi);
+            if ci_outer {
+                vci = v[2];
+                voh = v[3];
+                vowo = v[4];
+                vkh = v[5];
+                vkw = v[6];
+                vowi = v[7];
+                vcoi = v[8];
+            } else {
+                voh = v[2];
+                vowo = v[3];
+                vci = v[4];
+                vkh = v[5];
+                vkw = v[6];
+                vowi = v[7];
+                vcoi = v[8];
+            }
+            let ow_e = Affine::scaled(vowo, tow).add(&Affine::var(vowi));
+            let ih = Affine::scaled(voh, stride).add(&Affine::var(vkh));
+            let iw = {
+                let mut e = ow_e.clone();
+                for t in e.terms.iter_mut() {
+                    t.coeff *= stride;
+                }
+                e.add(&Affine::var(vkw))
+            };
+            Stmt {
+                op: StmtOp::MulAdd,
+                store: Access::store(
+                    out,
+                    vec![
+                        Affine::var(vn),
+                        Affine::var(vcoo),
+                        Affine::var(voh),
+                        ow_e,
+                        Affine::var(vcoi),
+                    ],
+                ),
+                loads: vec![
+                    Access::load(inp, vec![Affine::var(vn), Affine::var(vci), ih, iw]),
+                    Access::load(
+                        wgt,
+                        vec![
+                            Affine::var(vcoo),
+                            Affine::var(vci),
+                            Affine::var(vkh),
+                            Affine::var(vkw),
+                            Affine::var(vcoi),
+                        ],
+                    ),
+                ],
+            }
+        });
+        f.body = vec![node];
+    } else {
+        let inp = f.add_buffer("IN", vec![n, cin, hp, wp]);
+        let wgt = f.add_buffer("W", vec![cout, cin, kh, kw]);
+        let out = f.add_buffer("OUT", vec![n, cout, oh, ow]);
+        let mut specs: Vec<LoopSpec> = vec![
+            ("n", n, LoopKind::Serial),
+            ("co", cout, LoopKind::Parallel),
+        ];
+        if ci_outer {
+            specs.push(("ci", cin, LoopKind::Serial));
+        }
+        specs.push(("oh", oh, LoopKind::Serial));
+        specs.push(("ow.o", ow / tow, LoopKind::Serial));
+        if !ci_outer {
+            specs.push(("ci", cin, LoopKind::Serial));
+        }
+        specs.extend_from_slice(&[
+            ("kh", kh, LoopKind::Serial),
+            ("kw", kw, kw_kind),
+            ("ow.i", tow, LoopKind::Vectorize),
+        ]);
+        let node = nest(&mut f, &specs, |v| {
+            let (vn, vco) = (v[0], v[1]);
+            let (vci, voh, vowo, vkh, vkw, vowi);
+            if ci_outer {
+                vci = v[2];
+                voh = v[3];
+                vowo = v[4];
+                vkh = v[5];
+                vkw = v[6];
+                vowi = v[7];
+            } else {
+                voh = v[2];
+                vowo = v[3];
+                vci = v[4];
+                vkh = v[5];
+                vkw = v[6];
+                vowi = v[7];
+            }
+            let ow_e = Affine::scaled(vowo, tow).add(&Affine::var(vowi));
+            let ih = Affine::scaled(voh, stride).add(&Affine::var(vkh));
+            let iw = {
+                let mut e = ow_e.clone();
+                for t in e.terms.iter_mut() {
+                    t.coeff *= stride;
+                }
+                e.add(&Affine::var(vkw))
+            };
+            Stmt {
+                op: StmtOp::MulAdd,
+                store: Access::store(
+                    out,
+                    vec![Affine::var(vn), Affine::var(vco), Affine::var(voh), ow_e],
+                ),
+                loads: vec![
+                    Access::load(inp, vec![Affine::var(vn), Affine::var(vci), ih, iw]),
+                    Access::load(
+                        wgt,
+                        vec![
+                            Affine::var(vco),
+                            Affine::var(vci),
+                            Affine::var(vkh),
+                            Affine::var(vkw),
+                        ],
+                    ),
+                ],
+            }
+        });
+        f.body = vec![node];
+    }
+    f
+}
+
+/// Depthwise conv: per-channel spatial convolution (no channel reduction).
+#[allow(clippy::too_many_arguments)]
+fn build_depthwise(
+    n: i64,
+    c: i64,
+    h: i64,
+    w: i64,
+    kh: i64,
+    kw: i64,
+    stride: i64,
+    pad: i64,
+    space: &ConfigSpace,
+    cfg: &ScheduleConfig,
+) -> TirFunc {
+    let oh = OpSpec::out_dim(h, kh, stride, pad);
+    let ow = OpSpec::out_dim(w, kw, stride, pad);
+    let (hp, wp) = (h + 2 * pad, w + 2 * pad);
+    let layout = space.get_tag(cfg, "layout").to_string();
+    let tc = space.get_int(cfg, "tile_c");
+    let tow = space.get_int(cfg, "tile_ow");
+    let unroll_kw = space.get_int(cfg, "unroll_kw") == 1;
+    let kw_kind = if unroll_kw { LoopKind::Unroll } else { LoopKind::Serial };
+
+    let mut f = TirFunc::new(format!("dwconv_c{c}_{h}x{w}_{layout}"));
+    if layout == "nchwc" {
+        let inp = f.add_buffer("IN5", vec![n, c / tc, hp, wp, tc]);
+        let wgt = f.add_buffer("W3", vec![c / tc, kh, kw, tc]);
+        let out = f.add_buffer("OUT5", vec![n, c / tc, oh, ow, tc]);
+        let specs: Vec<LoopSpec> = vec![
+            ("n", n, LoopKind::Serial),
+            ("c.o", c / tc, LoopKind::Parallel),
+            ("oh", oh, LoopKind::Serial),
+            ("ow.o", ow / tow, LoopKind::Serial),
+            ("kh", kh, LoopKind::Serial),
+            ("kw", kw, kw_kind),
+            ("ow.i", tow, LoopKind::Serial),
+            ("c.i", tc, LoopKind::Vectorize),
+        ];
+        let node = nest(&mut f, &specs, |v| {
+            let (vn, vco, voh, vowo, vkh, vkw, vowi, vci) =
+                (v[0], v[1], v[2], v[3], v[4], v[5], v[6], v[7]);
+            let ow_e = Affine::scaled(vowo, tow).add(&Affine::var(vowi));
+            let ih = Affine::scaled(voh, stride).add(&Affine::var(vkh));
+            let iw = {
+                let mut e = ow_e.clone();
+                for t in e.terms.iter_mut() {
+                    t.coeff *= stride;
+                }
+                e.add(&Affine::var(vkw))
+            };
+            Stmt {
+                op: StmtOp::MulAdd,
+                store: Access::store(
+                    out,
+                    vec![
+                        Affine::var(vn),
+                        Affine::var(vco),
+                        Affine::var(voh),
+                        ow_e,
+                        Affine::var(vci),
+                    ],
+                ),
+                loads: vec![
+                    Access::load(
+                        inp,
+                        vec![Affine::var(vn), Affine::var(vco), ih, iw, Affine::var(vci)],
+                    ),
+                    Access::load(
+                        wgt,
+                        vec![
+                            Affine::var(vco),
+                            Affine::var(vkh),
+                            Affine::var(vkw),
+                            Affine::var(vci),
+                        ],
+                    ),
+                ],
+            }
+        });
+        f.body = vec![node];
+    } else {
+        let inp = f.add_buffer("IN", vec![n, c, hp, wp]);
+        let wgt = f.add_buffer("W", vec![c, kh, kw]);
+        let out = f.add_buffer("OUT", vec![n, c, oh, ow]);
+        let specs: Vec<LoopSpec> = vec![
+            ("n", n, LoopKind::Serial),
+            ("c", c, LoopKind::Parallel),
+            ("oh", oh, LoopKind::Serial),
+            ("ow.o", ow / tow, LoopKind::Serial),
+            ("kh", kh, LoopKind::Serial),
+            ("kw", kw, kw_kind),
+            ("ow.i", tow, LoopKind::Vectorize),
+        ];
+        let node = nest(&mut f, &specs, |v| {
+            let (vn, vc, voh, vowo, vkh, vkw, vowi) = (v[0], v[1], v[2], v[3], v[4], v[5], v[6]);
+            let ow_e = Affine::scaled(vowo, tow).add(&Affine::var(vowi));
+            let ih = Affine::scaled(voh, stride).add(&Affine::var(vkh));
+            let iw = {
+                let mut e = ow_e.clone();
+                for t in e.terms.iter_mut() {
+                    t.coeff *= stride;
+                }
+                e.add(&Affine::var(vkw))
+            };
+            Stmt {
+                op: StmtOp::MulAdd,
+                store: Access::store(
+                    out,
+                    vec![Affine::var(vn), Affine::var(vc), Affine::var(voh), ow_e],
+                ),
+                loads: vec![
+                    Access::load(inp, vec![Affine::var(vn), Affine::var(vc), ih, iw]),
+                    Access::load(
+                        wgt,
+                        vec![Affine::var(vc), Affine::var(vkh), Affine::var(vkw)],
+                    ),
+                ],
+            }
+        });
+        f.body = vec![node];
+    }
+    f
+}
+
+/// Winograd F(2×2, 3×3): input transform, 16 batched GEMMs over the
+/// transformed domain, output transform. The GEMM stage carries the tiling
+/// knobs; the transforms get optional unrolling.
+fn build_winograd(
+    n: i64,
+    cin: i64,
+    h: i64,
+    w: i64,
+    cout: i64,
+    space: &ConfigSpace,
+    cfg: &ScheduleConfig,
+) -> TirFunc {
+    assert!(h % 2 == 0 && w % 2 == 0, "winograd template needs even H/W");
+    let nt = n * (h / 2) * (w / 2);
+    let tco = space.get_int(cfg, "tile_co");
+    let tt = space.get_int(cfg, "tile_t");
+    let gemm_order = space.get_tag(cfg, "gemm_order").to_string();
+    let unroll = space.get_int(cfg, "unroll_xform") == 1;
+    let r_kind = if unroll { LoopKind::Unroll } else { LoopKind::Serial };
+
+    let mut f = TirFunc::new(format!("winograd_c{cin}_o{cout}_{h}x{w}"));
+    let d = f.add_buffer("D", vec![cin, nt, 4, 4]); // pre-gathered input tiles
+    let b1 = f.add_buffer("Bm", vec![4, 4]); // transform matrix
+    let v = f.add_buffer("V", vec![4, 4, cin, nt]);
+    let u = f.add_buffer("U", vec![4, 4, cout, cin]); // pre-transformed weights
+    let m = f.add_buffer("M", vec![4, 4, cout, nt]);
+    let a1 = f.add_buffer("Am", vec![4, 2]);
+    let out = f.add_buffer("OUT", vec![cout, nt, 2, 2]);
+
+    // Stage 1: input transform V[eps][nu][ci][t] += Bm[r][eps] * D[ci][t][r][nu]
+    let s1 = nest(
+        &mut f,
+        &[
+            ("ci", cin, LoopKind::Parallel),
+            ("t", nt, LoopKind::Serial),
+            ("eps", 4, LoopKind::Serial),
+            ("nu", 4, LoopKind::Serial),
+            ("r", 4, r_kind),
+        ],
+        |vv| Stmt {
+            op: StmtOp::MulAdd,
+            store: Access::store(
+                v,
+                vec![
+                    Affine::var(vv[2]),
+                    Affine::var(vv[3]),
+                    Affine::var(vv[0]),
+                    Affine::var(vv[1]),
+                ],
+            ),
+            loads: vec![
+                Access::load(b1, vec![Affine::var(vv[4]), Affine::var(vv[2])]),
+                Access::load(
+                    d,
+                    vec![
+                        Affine::var(vv[0]),
+                        Affine::var(vv[1]),
+                        Affine::var(vv[4]),
+                        Affine::var(vv[3]),
+                    ],
+                ),
+            ],
+        },
+    );
+
+    // Stage 2: batched GEMM M[eps][nu][co][t] += U[eps][nu][co][ci]*V[eps][nu][ci][t]
+    let mid: [LoopSpec; 2] = if gemm_order == "ci_co_t" {
+        [("ci", cin, LoopKind::Serial), ("co.i", tco, LoopKind::Serial)]
+    } else {
+        [("co.i", tco, LoopKind::Serial), ("ci", cin, LoopKind::Serial)]
+    };
+    let specs: Vec<LoopSpec> = vec![
+        ("co.o", cout / tco, LoopKind::Parallel),
+        ("eps", 4, LoopKind::Serial),
+        ("nu", 4, LoopKind::Serial),
+        ("t.o", nt / tt, LoopKind::Serial),
+        mid[0],
+        mid[1],
+        ("t.i", tt, LoopKind::Vectorize),
+    ];
+    let s2 = nest(&mut f, &specs, |vv| {
+        let (vcoo, veps, vnu, vto) = (vv[0], vv[1], vv[2], vv[3]);
+        let (vci, vcoi) = if gemm_order == "ci_co_t" { (vv[4], vv[5]) } else { (vv[5], vv[4]) };
+        let vti = vv[6];
+        let co_e = Affine::scaled(vcoo, tco).add(&Affine::var(vcoi));
+        let t_e = Affine::scaled(vto, tt).add(&Affine::var(vti));
+        Stmt {
+            op: StmtOp::MulAdd,
+            store: Access::store(
+                m,
+                vec![Affine::var(veps), Affine::var(vnu), co_e.clone(), t_e.clone()],
+            ),
+            loads: vec![
+                Access::load(
+                    u,
+                    vec![Affine::var(veps), Affine::var(vnu), co_e, Affine::var(vci)],
+                ),
+                Access::load(v, vec![Affine::var(veps), Affine::var(vnu), Affine::var(vci), t_e]),
+            ],
+        }
+    });
+
+    // Stage 3: output transform OUT[co][t][mh][mw] += Am[r][mh] * M[r][mw][co][t]
+    let s3 = nest(
+        &mut f,
+        &[
+            ("co", cout, LoopKind::Parallel),
+            ("t", nt, LoopKind::Serial),
+            ("mh", 2, LoopKind::Serial),
+            ("mw", 2, LoopKind::Serial),
+            ("r", 4, r_kind),
+        ],
+        |vv| Stmt {
+            op: StmtOp::MulAdd,
+            store: Access::store(
+                out,
+                vec![
+                    Affine::var(vv[0]),
+                    Affine::var(vv[1]),
+                    Affine::var(vv[2]),
+                    Affine::var(vv[3]),
+                ],
+            ),
+            loads: vec![
+                Access::load(a1, vec![Affine::var(vv[4]), Affine::var(vv[2])]),
+                Access::load(
+                    m,
+                    vec![
+                        Affine::var(vv[4]),
+                        Affine::var(vv[3]),
+                        Affine::var(vv[0]),
+                        Affine::var(vv[1]),
+                    ],
+                ),
+            ],
+        },
+    );
+
+    f.body = vec![s1, s2, s3];
+    f
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::TargetKind::Graviton2;
+
+    #[test]
+    fn matmul_flops_invariant_across_configs() {
+        let op = OpSpec::Matmul { m: 64, n: 64, k: 64 };
+        let space = space_for(&op, Graviton2);
+        let expected = op.flops();
+        for idx in [0u64, 7, 31, space.size() - 1] {
+            let f = build(&op, Graviton2, &space.from_index(idx));
+            assert_eq!(f.total_flops(), expected, "config {idx}");
+        }
+    }
+
+    #[test]
+    fn conv2d_both_layouts_preserve_flops() {
+        let op = OpSpec::Conv2d {
+            n: 1, cin: 16, h: 14, w: 14, cout: 16, kh: 3, kw: 3, stride: 1, pad: 1,
+        };
+        let space = space_for(&op, Graviton2);
+        let expected = op.flops();
+        for idx in 0..space.size().min(64) {
+            let f = build(&op, Graviton2, &space.from_index(idx));
+            assert_eq!(f.total_flops(), expected, "config {idx}");
+        }
+    }
+
+    #[test]
+    fn depthwise_flops() {
+        let op = OpSpec::DepthwiseConv2d {
+            n: 1, c: 16, h: 14, w: 14, kh: 3, kw: 3, stride: 1, pad: 1,
+        };
+        let space = space_for(&op, Graviton2);
+        for idx in 0..space.size().min(32) {
+            let f = build(&op, Graviton2, &space.from_index(idx));
+            assert_eq!(f.total_flops(), op.flops(), "config {idx}");
+        }
+    }
+
+    #[test]
+    fn winograd_builds_three_stages() {
+        let op = OpSpec::Conv2dWinograd { n: 1, cin: 8, h: 8, w: 8, cout: 8 };
+        let space = space_for(&op, Graviton2);
+        let f = build(&op, Graviton2, &space.default_config());
+        assert_eq!(f.body.len(), 3);
+        assert!(f.total_flops() > 0);
+    }
+
+    #[test]
+    fn bmm_has_parallel_batch() {
+        let op = OpSpec::BatchMatmul { b: 4, m: 16, n: 16, k: 16 };
+        let space = space_for(&op, Graviton2);
+        let f = build(&op, Graviton2, &space.default_config());
+        assert_eq!(f.preorder_loops()[0].kind, LoopKind::Parallel);
+        assert_eq!(f.total_flops(), op.flops());
+    }
+}

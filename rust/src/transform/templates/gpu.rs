@@ -1,0 +1,536 @@
+//! GPU (CUDA-style) schedule templates for the Volta-class targets.
+//!
+//! The classic threadblock-tiling structure: a block computes a `BM×BN`
+//! output tile, stages `A`/`B` K-slices through shared memory, each thread
+//! accumulates a `TM×TN` register tile. Tile tuples are enumerated as a
+//! single categorical knob over the *valid* combinations (thread count in
+//! [32,1024], shared memory within the SM budget, divisibility for the
+//! cooperative loads) — exactly how AutoTVM's CUDA templates prune their
+//! spaces. Convolutions use register tiling with direct global loads.
+
+use super::{nest, nest_multi, LoopSpec};
+use crate::isa::TargetKind;
+use crate::isets::Affine;
+use crate::tir::{ops::OpSpec, Access, LoopKind, MemSpace, Stmt, StmtOp, TirFunc, TirNode};
+use crate::transform::space::{ConfigSpace, ScheduleConfig};
+
+/// Valid GEMM tile tuple encoded as "BM.BN.KS.TM.TN".
+fn gemm_tiles(m: i64, n: i64, k: i64) -> Vec<String> {
+    let mut out = Vec::new();
+    for &bm in &[16i64, 32, 64, 128] {
+        if m % bm != 0 {
+            continue;
+        }
+        for &bn in &[16i64, 32, 64, 128] {
+            if n % bn != 0 {
+                continue;
+            }
+            for &ks in &[8i64, 16, 32] {
+                if k % ks != 0 {
+                    continue;
+                }
+                for &tm in &[2i64, 4, 8] {
+                    if bm % tm != 0 {
+                        continue;
+                    }
+                    for &tn in &[2i64, 4, 8] {
+                        if bn % tn != 0 {
+                            continue;
+                        }
+                        let ty = bm / tm; // threads.y
+                        let tx = bn / tn; // threads.x
+                        let threads = tx * ty;
+                        if !(32..=1024).contains(&threads) {
+                            continue;
+                        }
+                        // cooperative-load divisibility
+                        if ks % tx != 0 || ks % ty != 0 {
+                            continue;
+                        }
+                        // shared memory: (BM*KS + KS*BN) floats
+                        if (bm * ks + ks * bn) * 4 > 48 * 1024 {
+                            continue;
+                        }
+                        out.push(format!("{bm}.{bn}.{ks}.{tm}.{tn}"));
+                    }
+                }
+            }
+        }
+    }
+    if out.is_empty() {
+        // tiny shapes: single fallback tile covering the whole problem
+        out.push(format!("{}.{}.{}.1.1", m.min(16), n.min(16), k.min(8)));
+    }
+    out
+}
+
+/// Valid conv tile tuple "BC.BH.TC.TW" (block couts × block rows ×
+/// thread couts × thread width).
+fn conv_tiles(cout: i64, oh: i64, ow: i64) -> Vec<String> {
+    let mut out = Vec::new();
+    for &bc in &[8i64, 16, 32, 64] {
+        if cout % bc != 0 {
+            continue;
+        }
+        for &bh in &[1i64, 2, 4, 7, 8] {
+            if oh % bh != 0 {
+                continue;
+            }
+            for &tc in &[1i64, 2, 4, 8] {
+                if bc % tc != 0 {
+                    continue;
+                }
+                for &tw in &[1i64, 2, 4, 7, 8] {
+                    if ow % tw != 0 {
+                        continue;
+                    }
+                    let threads = (bc / tc) * (ow / tw);
+                    if !(32..=1024).contains(&threads) {
+                        continue;
+                    }
+                    // register tile bound
+                    if tc * bh * tw > 128 {
+                        continue;
+                    }
+                    out.push(format!("{bc}.{bh}.{tc}.{tw}"));
+                }
+            }
+        }
+    }
+    if out.is_empty() {
+        out.push(format!("{}.1.1.1", cout.min(8)));
+    }
+    out
+}
+
+fn parse_tile(s: &str) -> Vec<i64> {
+    s.split('.').map(|p| p.parse().unwrap()).collect()
+}
+
+pub fn space_for(op: &OpSpec, _target: TargetKind) -> ConfigSpace {
+    match *op {
+        OpSpec::Matmul { m, n, k } => ConfigSpace::new()
+            .tag_knob(
+                "tile",
+                &gemm_tiles(m, n, k).iter().map(|s| s.as_str()).collect::<Vec<_>>(),
+            )
+            .int_knob("unroll_k", vec![0, 1]),
+        OpSpec::BatchMatmul { m, n, k, .. } => ConfigSpace::new()
+            .tag_knob(
+                "tile",
+                &gemm_tiles(m, n, k).iter().map(|s| s.as_str()).collect::<Vec<_>>(),
+            )
+            .int_knob("unroll_k", vec![0, 1]),
+        OpSpec::Conv2dWinograd { n, cin, h, w, cout } => {
+            // GEMM-domain tiles: 16 × (cout × nt × cin)
+            let nt = n * (h / 2) * (w / 2);
+            ConfigSpace::new()
+                .tag_knob(
+                    "tile",
+                    &gemm_tiles(cout, nt, cin).iter().map(|s| s.as_str()).collect::<Vec<_>>(),
+                )
+                .int_knob("unroll_k", vec![0, 1])
+        }
+        OpSpec::Conv2d { h, w, cout, kh, kw, stride, pad, .. } => {
+            let oh = OpSpec::out_dim(h, kh, stride, pad);
+            let ow = OpSpec::out_dim(w, kw, stride, pad);
+            ConfigSpace::new()
+                .tag_knob(
+                    "tile",
+                    &conv_tiles(cout, oh, ow).iter().map(|s| s.as_str()).collect::<Vec<_>>(),
+                )
+                .int_knob("unroll_kw", vec![0, 1])
+        }
+        OpSpec::DepthwiseConv2d { c, h, w, kh, kw, stride, pad, .. } => {
+            let oh = OpSpec::out_dim(h, kh, stride, pad);
+            let ow = OpSpec::out_dim(w, kw, stride, pad);
+            ConfigSpace::new()
+                .tag_knob(
+                    "tile",
+                    &conv_tiles(c, oh, ow).iter().map(|s| s.as_str()).collect::<Vec<_>>(),
+                )
+                .int_knob("unroll_kw", vec![0, 1])
+        }
+    }
+}
+
+pub fn build(op: &OpSpec, target: TargetKind, cfg: &ScheduleConfig) -> TirFunc {
+    let space = space_for(op, target);
+    assert!(space.contains(cfg), "config does not belong to space of {op}");
+    match *op {
+        OpSpec::Matmul { m, n, k } => build_gemm("gemm", 1, m, n, k, &space, cfg),
+        OpSpec::BatchMatmul { b, m, n, k } => build_gemm("bmm", b, m, n, k, &space, cfg),
+        // GPU winograd: the batched GEMM over the 16-point transformed
+        // domain dominates; transforms are fused elementwise kernels whose
+        // cost the network aggregator charges separately (see DESIGN.md).
+        OpSpec::Conv2dWinograd { n, cin, h, w, cout } => {
+            let nt = n * (h / 2) * (w / 2);
+            build_gemm("winograd_gemm", 16, cout, nt, cin, &space, cfg)
+        }
+        OpSpec::Conv2d { n, cin, h, w, cout, kh, kw, stride, pad } => {
+            build_conv(n, cin, h, w, cout, kh, kw, stride, pad, &space, cfg, false)
+        }
+        OpSpec::DepthwiseConv2d { n, c, h, w, kh, kw, stride, pad } => {
+            build_conv(n, 1, h, w, c, kh, kw, stride, pad, &space, cfg, true)
+        }
+    }
+}
+
+/// Shared-memory-staged block GEMM, optionally batched over grid.z.
+fn build_gemm(
+    name: &str,
+    batch: i64,
+    m: i64,
+    n: i64,
+    k: i64,
+    space: &ConfigSpace,
+    cfg: &ScheduleConfig,
+) -> TirFunc {
+    let t = parse_tile(space.get_tag(cfg, "tile"));
+    let (bm, bn, ks, tm, tn) = (t[0], t[1], t[2], t[3], t[4]);
+    let unroll_k = space.get_int(cfg, "unroll_k") == 1;
+    let tx_threads = bn / tn;
+    let ty_threads = bm / tm;
+
+    let mut f = TirFunc::new(format!("{name}_b{batch}_m{m}_n{n}_k{k}_t{bm}x{bn}x{ks}"));
+    let a = f.add_buffer("A", vec![batch, m, k]);
+    let b = f.add_buffer("B", vec![batch, k, n]);
+    let c = f.add_buffer("C", vec![batch, m, n]);
+    let asm = f.add_buffer_in("As", vec![bm, ks], MemSpace::Shared);
+    let bsm = f.add_buffer_in("Bs", vec![ks, bn], MemSpace::Shared);
+    let cl = f.add_buffer_in("Cl", vec![tm, tn], MemSpace::Local);
+
+    let ki_kind = if unroll_k && ks <= 16 { LoopKind::Unroll } else { LoopKind::Serial };
+
+    let outer: Vec<LoopSpec> = vec![
+        ("bz", batch, LoopKind::GpuBlockZ),
+        ("by", m / bm, LoopKind::GpuBlockY),
+        ("bx", n / bn, LoopKind::GpuBlockX),
+        ("ty", ty_threads, LoopKind::GpuThreadY),
+        ("tx", tx_threads, LoopKind::GpuThreadX),
+    ];
+    let node = nest_multi(&mut f, &outer, |f, v| {
+        let (vbz, vby, vbx, vty, vtx) = (v[0], v[1], v[2], v[3], v[4]);
+        // init: Cl = 0
+        let init = nest(
+            f,
+            &[("im", tm, LoopKind::Serial), ("in", tn, LoopKind::Serial)],
+            |w| Stmt {
+                op: StmtOp::Zero,
+                store: Access::store(cl, vec![Affine::var(w[0]), Affine::var(w[1])]),
+                loads: vec![],
+            },
+        );
+        // ko loop: stage + compute
+        let seg_a = ks / tx_threads; // columns of As each tx loads
+        let seg_b = ks / ty_threads; // rows of Bs each ty loads
+        let ko_var = f.fresh_var();
+        let load_a = nest(
+            f,
+            &[("lm", tm, LoopKind::Serial), ("lk", seg_a, LoopKind::Serial)],
+            |w| {
+                let row = Affine::scaled(vty, tm).add(&Affine::var(w[0]));
+                let col = Affine::scaled(vtx, seg_a).add(&Affine::var(w[1]));
+                let gcol = Affine::scaled(ko_var, ks).add(&col);
+                Stmt {
+                    op: StmtOp::Copy,
+                    store: Access::store(asm, vec![row.clone(), col]),
+                    loads: vec![Access::load(
+                        a,
+                        vec![Affine::var(vbz), Affine::scaled(vby, bm).add(&row), gcol],
+                    )],
+                }
+            },
+        );
+        let load_b = nest(
+            f,
+            &[("lk", seg_b, LoopKind::Serial), ("ln", tn, LoopKind::Serial)],
+            |w| {
+                let row = Affine::scaled(vty, seg_b).add(&Affine::var(w[0]));
+                let col = Affine::scaled(vtx, tn).add(&Affine::var(w[1]));
+                let grow = Affine::scaled(ko_var, ks).add(&row);
+                Stmt {
+                    op: StmtOp::Copy,
+                    store: Access::store(bsm, vec![row, col.clone()]),
+                    loads: vec![Access::load(
+                        b,
+                        vec![Affine::var(vbz), grow, Affine::scaled(vbx, bn).add(&col)],
+                    )],
+                }
+            },
+        );
+        let compute = nest(
+            f,
+            &[
+                ("ki", ks, ki_kind),
+                ("im", tm, LoopKind::Serial),
+                ("in", tn, LoopKind::Serial),
+            ],
+            |w| Stmt {
+                op: StmtOp::MulAdd,
+                store: Access::store(cl, vec![Affine::var(w[1]), Affine::var(w[2])]),
+                loads: vec![
+                    Access::load(
+                        asm,
+                        vec![Affine::scaled(vty, tm).add(&Affine::var(w[1])), Affine::var(w[0])],
+                    ),
+                    Access::load(
+                        bsm,
+                        vec![Affine::var(w[0]), Affine::scaled(vtx, tn).add(&Affine::var(w[2]))],
+                    ),
+                ],
+            },
+        );
+        let ko = TirNode::Loop(crate::tir::LoopNode {
+            var: ko_var,
+            name: "ko".into(),
+            extent: k / ks,
+            kind: LoopKind::Serial,
+            body: vec![load_a, load_b, compute],
+        });
+        // write-back
+        let wb = nest(
+            f,
+            &[("im", tm, LoopKind::Serial), ("in", tn, LoopKind::Serial)],
+            |w| {
+                let row = Affine::scaled(vby, bm)
+                    .add(&Affine::scaled(vty, tm))
+                    .add(&Affine::var(w[0]));
+                let col = Affine::scaled(vbx, bn)
+                    .add(&Affine::scaled(vtx, tn))
+                    .add(&Affine::var(w[1]));
+                Stmt {
+                    op: StmtOp::Copy,
+                    store: Access::store(c, vec![Affine::var(vbz), row, col]),
+                    loads: vec![Access::load(cl, vec![Affine::var(w[0]), Affine::var(w[1])])],
+                }
+            },
+        );
+        vec![init, ko, wb]
+    });
+    f.body = vec![node];
+    f
+}
+
+/// Register-tiled direct convolution (depthwise when `depthwise=true`:
+/// the channel dim is not reduced, cin==1 per output channel).
+#[allow(clippy::too_many_arguments)]
+fn build_conv(
+    n: i64,
+    cin: i64,
+    h: i64,
+    w: i64,
+    cout: i64,
+    kh: i64,
+    kw: i64,
+    stride: i64,
+    pad: i64,
+    space: &ConfigSpace,
+    cfg: &ScheduleConfig,
+    depthwise: bool,
+) -> TirFunc {
+    let oh = OpSpec::out_dim(h, kh, stride, pad);
+    let ow = OpSpec::out_dim(w, kw, stride, pad);
+    let (hp, wp) = (h + 2 * pad, w + 2 * pad);
+    let t = parse_tile(space.get_tag(cfg, "tile"));
+    let (bc, bh, tc, tw) = (t[0], t[1], t[2], t[3]);
+    let unroll_kw = space.get_int(cfg, "unroll_kw") == 1;
+    let kw_kind = if unroll_kw { LoopKind::Unroll } else { LoopKind::Serial };
+
+    let kind = if depthwise { "dwconv" } else { "conv2d" };
+    let mut f = TirFunc::new(format!("{kind}_gpu_o{cout}_{h}x{w}_t{bc}.{bh}.{tc}.{tw}"));
+    // depthwise: input channel == output channel; direct: full cin reduce.
+    let inp = if depthwise {
+        f.add_buffer("IN", vec![n, cout, hp, wp])
+    } else {
+        f.add_buffer("IN", vec![n, cin, hp, wp])
+    };
+    let wgt = if depthwise {
+        f.add_buffer("W", vec![cout, kh, kw])
+    } else {
+        f.add_buffer("W", vec![cout, cin, kh, kw])
+    };
+    let out = f.add_buffer("OUT", vec![n, cout, oh, ow]);
+    let cl = f.add_buffer_in("Cl", vec![tc, bh, tw], MemSpace::Local);
+
+    let outer: Vec<LoopSpec> = vec![
+        ("by", cout / bc, LoopKind::GpuBlockY),
+        ("bx", oh / bh, LoopKind::GpuBlockX),
+        ("ty", bc / tc, LoopKind::GpuThreadY),
+        ("tx", ow / tw, LoopKind::GpuThreadX),
+    ];
+    let node = nest_multi(&mut f, &outer, |f, v| {
+        let (vby, vbx, vty, vtx) = (v[0], v[1], v[2], v[3]);
+        let init = nest(
+            f,
+            &[
+                ("ic", tc, LoopKind::Serial),
+                ("ih", bh, LoopKind::Serial),
+                ("iw", tw, LoopKind::Serial),
+            ],
+            |u| Stmt {
+                op: StmtOp::Zero,
+                store: Access::store(
+                    cl,
+                    vec![Affine::var(u[0]), Affine::var(u[1]), Affine::var(u[2])],
+                ),
+                loads: vec![],
+            },
+        );
+        // reduction: [bn], ci, kh, kw, tc, hh, twl
+        let mut specs: Vec<LoopSpec> = vec![("bn", n, LoopKind::Serial)];
+        if !depthwise {
+            specs.push(("ci", cin, LoopKind::Serial));
+        }
+        specs.extend_from_slice(&[
+            ("kh", kh, LoopKind::Serial),
+            ("kw", kw, kw_kind),
+            ("c.t", tc, LoopKind::Serial),
+            ("h.t", bh, LoopKind::Serial),
+            ("w.t", tw, LoopKind::Serial),
+        ]);
+        let red = nest(f, &specs, |u| {
+            let (vbn, rest) = (u[0], &u[1..]);
+            let (vci, vkh, vkw, vct, vht, vwt);
+            if depthwise {
+                vci = None;
+                vkh = rest[0];
+                vkw = rest[1];
+                vct = rest[2];
+                vht = rest[3];
+                vwt = rest[4];
+            } else {
+                vci = Some(rest[0]);
+                vkh = rest[1];
+                vkw = rest[2];
+                vct = rest[3];
+                vht = rest[4];
+                vwt = rest[5];
+            }
+            let co_e = Affine::scaled(vby, bc)
+                .add(&Affine::scaled(vty, tc))
+                .add(&Affine::var(vct));
+            let oh_e = Affine::scaled(vbx, bh).add(&Affine::var(vht));
+            let ow_e = Affine::scaled(vtx, tw).add(&Affine::var(vwt));
+            let ih = {
+                let mut e = oh_e.clone();
+                for tt in e.terms.iter_mut() {
+                    tt.coeff *= stride;
+                }
+                e.add(&Affine::var(vkh))
+            };
+            let iw = {
+                let mut e = ow_e.clone();
+                for tt in e.terms.iter_mut() {
+                    tt.coeff *= stride;
+                }
+                e.add(&Affine::var(vkw))
+            };
+            let in_chan = if depthwise { co_e.clone() } else { Affine::var(vci.unwrap()) };
+            let wload = if depthwise {
+                Access::load(wgt, vec![co_e.clone(), Affine::var(vkh), Affine::var(vkw)])
+            } else {
+                Access::load(
+                    wgt,
+                    vec![
+                        co_e.clone(),
+                        Affine::var(vci.unwrap()),
+                        Affine::var(vkh),
+                        Affine::var(vkw),
+                    ],
+                )
+            };
+            Stmt {
+                op: StmtOp::MulAdd,
+                store: Access::store(
+                    cl,
+                    vec![Affine::var(vct), Affine::var(vht), Affine::var(vwt)],
+                ),
+                loads: vec![Access::load(inp, vec![Affine::var(vbn), in_chan, ih, iw]), wload],
+            }
+        });
+        // write-back (batch folded: n==1 in all conv workloads)
+        let wb = nest(
+            f,
+            &[
+                ("c.t", tc, LoopKind::Serial),
+                ("h.t", bh, LoopKind::Serial),
+                ("w.t", tw, LoopKind::Serial),
+            ],
+            |u| {
+                let co_e = Affine::scaled(vby, bc)
+                    .add(&Affine::scaled(vty, tc))
+                    .add(&Affine::var(u[0]));
+                let oh_e = Affine::scaled(vbx, bh).add(&Affine::var(u[1]));
+                let ow_e = Affine::scaled(vtx, tw).add(&Affine::var(u[2]));
+                Stmt {
+                    op: StmtOp::Copy,
+                    store: Access::store(out, vec![Affine::constant(0), co_e, oh_e, ow_e]),
+                    loads: vec![Access::load(
+                        cl,
+                        vec![Affine::var(u[0]), Affine::var(u[1]), Affine::var(u[2])],
+                    )],
+                }
+            },
+        );
+        vec![init, red, wb]
+    });
+    f.body = vec![node];
+    f
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::TargetKind::TeslaV100;
+
+    #[test]
+    fn gemm_tiles_all_valid() {
+        for t in gemm_tiles(256, 256, 64) {
+            let p = parse_tile(&t);
+            let threads = (p[0] / p[3]) * (p[1] / p[4]);
+            assert!((32..=1024).contains(&threads), "{t}");
+            assert!((p[0] * p[2] + p[2] * p[1]) * 4 <= 48 * 1024, "{t}");
+        }
+    }
+
+    #[test]
+    fn gemm_builds_with_shared_staging() {
+        let op = OpSpec::Matmul { m: 128, n: 128, k: 64 };
+        let space = space_for(&op, TeslaV100);
+        let f = build(&op, TeslaV100, &space.default_config());
+        let shared: Vec<_> =
+            f.buffers.iter().filter(|b| b.space == MemSpace::Shared).collect();
+        assert_eq!(shared.len(), 2);
+        // flops: MulAdd instances must equal op flops
+        assert_eq!(
+            f.statements()
+                .iter()
+                .filter(|(_, s)| s.op == StmtOp::MulAdd)
+                .map(|(st, s)| st.iter().map(|l| l.extent as u64).product::<u64>()
+                    * s.op.flops())
+                .sum::<u64>(),
+            op.flops()
+        );
+    }
+
+    #[test]
+    fn conv_gpu_builds() {
+        let op = OpSpec::Conv2d {
+            n: 1, cin: 64, h: 56, w: 56, cout: 64, kh: 3, kw: 3, stride: 1, pad: 1,
+        };
+        let space = space_for(&op, TeslaV100);
+        assert!(space.size() > 4);
+        let f = build(&op, TeslaV100, &space.default_config());
+        assert!(f.preorder_loops().iter().any(|l| l.kind == LoopKind::GpuThreadX));
+    }
+
+    #[test]
+    fn bmm_uses_grid_z() {
+        let op = OpSpec::BatchMatmul { b: 12, m: 128, n: 128, k: 64 };
+        let space = space_for(&op, TeslaV100);
+        let f = build(&op, TeslaV100, &space.default_config());
+        let bz = f.preorder_loops().iter().any(|l| l.kind == LoopKind::GpuBlockZ && l.extent == 12);
+        assert!(bz);
+    }
+}

@@ -1,0 +1,122 @@
+//! Per-operator schedule templates.
+//!
+//! A template = (config space, builder). The config space mirrors what
+//! AutoTVM defines for the same operator (tile factors restricted to
+//! divisors, categorical loop orders/layouts, unroll toggles); the builder
+//! constructs the *scheduled* loop nest for a chosen config — for matmul by
+//! applying [`crate::transform::primitives`] to the naive nest, for the
+//! others by direct construction of the transformed nest (the way TVM's
+//! `compute_at`/cache-stage schedules materialize).
+
+pub mod cpu;
+pub mod gpu;
+
+use crate::isa::TargetKind;
+use crate::tir::{ops::OpSpec, LoopKind, LoopNode, Stmt, TirFunc, TirNode};
+use crate::transform::space::{ConfigSpace, ScheduleConfig};
+
+/// Build the config space for `op` on `target`.
+pub fn space_for(op: &OpSpec, target: TargetKind) -> ConfigSpace {
+    if target.is_gpu() {
+        gpu::space_for(op, target)
+    } else {
+        cpu::space_for(op, target)
+    }
+}
+
+/// Build the scheduled TIR for `op` × `target` × `config`.
+pub fn build(op: &OpSpec, target: TargetKind, config: &ScheduleConfig) -> TirFunc {
+    if target.is_gpu() {
+        gpu::build(op, target, config)
+    } else {
+        cpu::build(op, target, config)
+    }
+}
+
+/// Loop spec for the nest builder: (name, extent, kind).
+pub type LoopSpec<'a> = (&'a str, i64, LoopKind);
+
+/// Build a perfect nest of `specs` around the statement produced by
+/// `stmt_fn` (which receives the fresh loop vars, outermost first).
+/// Returns the outermost node.
+pub fn nest(f: &mut TirFunc, specs: &[LoopSpec], stmt_fn: impl FnOnce(&[u32]) -> Stmt) -> TirNode {
+    let vars: Vec<u32> = specs.iter().map(|_| f.fresh_var()).collect();
+    let mut node = TirNode::Stmt(stmt_fn(&vars));
+    for (i, &(name, extent, kind)) in specs.iter().enumerate().rev() {
+        node = TirNode::Loop(LoopNode {
+            var: vars[i],
+            name: name.to_string(),
+            extent,
+            kind,
+            body: vec![node],
+        });
+    }
+    node
+}
+
+/// Like [`nest`] but the innermost body is a *sequence* of nodes produced
+/// by `body_fn` (needed for shared-memory staging + compute + write-back).
+pub fn nest_multi(
+    f: &mut TirFunc,
+    specs: &[LoopSpec],
+    body_fn: impl FnOnce(&mut TirFunc, &[u32]) -> Vec<TirNode>,
+) -> TirNode {
+    let vars: Vec<u32> = specs.iter().map(|_| f.fresh_var()).collect();
+    let inner = body_fn(f, &vars);
+    let mut node_vec = inner;
+    for (i, &(name, extent, kind)) in specs.iter().enumerate().rev() {
+        node_vec = vec![TirNode::Loop(LoopNode {
+            var: vars[i],
+            name: name.to_string(),
+            extent,
+            kind,
+            body: node_vec,
+        })];
+    }
+    node_vec.into_iter().next().unwrap()
+}
+
+/// Divisor-based tile candidates: divisors of `n` clamped to `max`, at most
+/// `cap` values (log-spaced thin-out), always including 1 and min(n,max).
+pub fn tile_candidates(n: i64, max: i64, cap: usize) -> Vec<i64> {
+    let mut ds: Vec<i64> = crate::util::divisors(n).into_iter().filter(|&d| d <= max).collect();
+    if ds.is_empty() {
+        ds.push(1);
+    }
+    while ds.len() > cap {
+        // drop the value closest to its neighbour (keeps endpoints)
+        let mut best = 1usize;
+        let mut best_gap = f64::MAX;
+        for i in 1..ds.len() - 1 {
+            let gap = (ds[i + 1] as f64 / ds[i - 1] as f64).ln();
+            if gap < best_gap {
+                best_gap = gap;
+                best = i;
+            }
+        }
+        ds.remove(best);
+    }
+    ds
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tile_candidates_behaviour() {
+        let c = tile_candidates(64, 64, 5);
+        assert!(c.contains(&1));
+        assert!(c.contains(&64));
+        assert!(c.len() <= 5);
+        assert!(c.windows(2).all(|w| w[0] < w[1]));
+        // all divide 64
+        assert!(c.iter().all(|d| 64 % d == 0));
+    }
+
+    #[test]
+    fn tile_candidates_clamped() {
+        let c = tile_candidates(56, 16, 8);
+        assert!(c.iter().all(|&d| d <= 16 && 56 % d == 0));
+    }
+}

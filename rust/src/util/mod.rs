@@ -1,0 +1,80 @@
+//! Small self-contained utilities: deterministic RNG, math helpers and a
+//! virtual clock used for device-time accounting.
+
+pub mod json;
+pub mod pool;
+pub mod rng;
+pub mod stats;
+
+pub use pool::parallel_map;
+pub use rng::Rng;
+
+/// Round `x` up to the next multiple of `m` (m > 0).
+pub fn round_up(x: i64, m: i64) -> i64 {
+    debug_assert!(m > 0);
+    (x + m - 1) / m * m
+}
+
+/// Ceiling division for non-negative integers.
+pub fn ceil_div(a: i64, b: i64) -> i64 {
+    debug_assert!(b > 0);
+    (a + b - 1) / b
+}
+
+/// All positive divisors of `n`, ascending. Used to enumerate tile factors.
+pub fn divisors(n: i64) -> Vec<i64> {
+    let mut ds = Vec::new();
+    let mut i = 1;
+    while i * i <= n {
+        if n % i == 0 {
+            ds.push(i);
+            if i != n / i {
+                ds.push(n / i);
+            }
+        }
+        i += 1;
+    }
+    ds.sort_unstable();
+    ds
+}
+
+/// Powers of two `<= n`, plus `n` itself if not a power of two — the tile
+/// candidates AutoTVM uses for non-perfect splits.
+pub fn pow2_candidates(n: i64) -> Vec<i64> {
+    let mut v = Vec::new();
+    let mut p = 1;
+    while p <= n {
+        v.push(p);
+        p *= 2;
+    }
+    if *v.last().unwrap() != n {
+        v.push(n);
+    }
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn divisors_basic() {
+        assert_eq!(divisors(12), vec![1, 2, 3, 4, 6, 12]);
+        assert_eq!(divisors(1), vec![1]);
+        assert_eq!(divisors(7), vec![1, 7]);
+    }
+
+    #[test]
+    fn round_and_ceil() {
+        assert_eq!(round_up(5, 4), 8);
+        assert_eq!(round_up(8, 4), 8);
+        assert_eq!(ceil_div(9, 4), 3);
+        assert_eq!(ceil_div(8, 4), 2);
+    }
+
+    #[test]
+    fn pow2_includes_n() {
+        assert_eq!(pow2_candidates(6), vec![1, 2, 4, 6]);
+        assert_eq!(pow2_candidates(8), vec![1, 2, 4, 8]);
+    }
+}

@@ -1,0 +1,85 @@
+//! Minimal scoped thread-pool helpers (the environment is offline, so no
+//! rayon): an atomic-counter work queue over `std::thread::scope`.
+//!
+//! This is what makes Tuna's headline claim concrete: *static analysis
+//! tasks can be fully parallelized on a multi-core host* — candidate
+//! evaluation fans out here, while the dynamic baseline is forced through
+//! the sequential device queue.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Parallel map with `threads` workers; preserves item order.
+pub fn parallel_map<T, R, F>(items: Vec<T>, threads: usize, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(T) -> R + Sync,
+{
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let threads = threads.max(1).min(n);
+    if threads == 1 {
+        return items.into_iter().map(f).collect();
+    }
+    let work: Vec<Mutex<Option<T>>> =
+        items.into_iter().map(|t| Mutex::new(Some(t))).collect();
+    let results: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    let next = AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let item = work[i].lock().unwrap().take().unwrap();
+                let r = f(item);
+                *results[i].lock().unwrap() = Some(r);
+            });
+        }
+    });
+    results
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().unwrap())
+        .collect()
+}
+
+/// Number of worker threads to use (host parallelism).
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn maps_in_order() {
+        let xs: Vec<i64> = (0..100).collect();
+        let ys = parallel_map(xs, 4, |x| x * x);
+        for (i, y) in ys.iter().enumerate() {
+            assert_eq!(*y, (i * i) as i64);
+        }
+    }
+
+    #[test]
+    fn single_thread_fallback() {
+        let ys = parallel_map(vec![1, 2, 3], 1, |x| x + 1);
+        assert_eq!(ys, vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn empty_input() {
+        let ys: Vec<i32> = parallel_map(Vec::<i32>::new(), 4, |x| x);
+        assert!(ys.is_empty());
+    }
+
+    #[test]
+    fn more_threads_than_items() {
+        let ys = parallel_map(vec![5], 16, |x| x * 2);
+        assert_eq!(ys, vec![10]);
+    }
+}

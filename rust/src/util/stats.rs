@@ -1,0 +1,233 @@
+//! Tiny statistics + linear-algebra helpers (least squares for cost-model
+//! calibration and the ridge surrogate of the AutoTVM baseline).
+
+/// Mean of a slice (0.0 for empty).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+/// Population standard deviation.
+pub fn std_dev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+/// Pearson correlation coefficient; 0.0 when degenerate.
+pub fn pearson(xs: &[f64], ys: &[f64]) -> f64 {
+    assert_eq!(xs.len(), ys.len());
+    let n = xs.len();
+    if n < 2 {
+        return 0.0;
+    }
+    let mx = mean(xs);
+    let my = mean(ys);
+    let mut sxy = 0.0;
+    let mut sxx = 0.0;
+    let mut syy = 0.0;
+    for i in 0..n {
+        let dx = xs[i] - mx;
+        let dy = ys[i] - my;
+        sxy += dx * dy;
+        sxx += dx * dx;
+        syy += dy * dy;
+    }
+    if sxx <= 0.0 || syy <= 0.0 {
+        return 0.0;
+    }
+    sxy / (sxx.sqrt() * syy.sqrt())
+}
+
+/// Spearman rank correlation — the metric that matters for Tuna: the cost
+/// model only has to *rank* candidates correctly, not predict latency.
+pub fn spearman(xs: &[f64], ys: &[f64]) -> f64 {
+    let rx = ranks(xs);
+    let ry = ranks(ys);
+    pearson(&rx, &ry)
+}
+
+/// Average ranks (ties get the mean rank).
+pub fn ranks(xs: &[f64]) -> Vec<f64> {
+    let n = xs.len();
+    let mut idx: Vec<usize> = (0..n).collect();
+    idx.sort_by(|&a, &b| xs[a].partial_cmp(&xs[b]).unwrap_or(std::cmp::Ordering::Equal));
+    let mut out = vec![0.0; n];
+    let mut i = 0;
+    while i < n {
+        let mut j = i;
+        while j + 1 < n && xs[idx[j + 1]] == xs[idx[i]] {
+            j += 1;
+        }
+        let r = (i + j) as f64 / 2.0 + 1.0;
+        for k in i..=j {
+            out[idx[k]] = r;
+        }
+        i = j + 1;
+    }
+    out
+}
+
+/// Solve the ridge-regularized normal equations `(XᵀX + λI) w = Xᵀy` via
+/// Gaussian elimination with partial pivoting. `x` is row-major `n×d`.
+pub fn ridge_fit(x: &[Vec<f64>], y: &[f64], lambda: f64) -> Vec<f64> {
+    let n = x.len();
+    assert_eq!(n, y.len());
+    if n == 0 {
+        return Vec::new();
+    }
+    let d = x[0].len();
+    // A = XᵀX + λI, b = Xᵀy
+    let mut a = vec![vec![0.0; d]; d];
+    let mut b = vec![0.0; d];
+    for r in 0..n {
+        for i in 0..d {
+            b[i] += x[r][i] * y[r];
+            for j in 0..d {
+                a[i][j] += x[r][i] * x[r][j];
+            }
+        }
+    }
+    for i in 0..d {
+        a[i][i] += lambda;
+    }
+    solve_linear(&mut a, &mut b)
+}
+
+/// In-place Gaussian elimination with partial pivoting. Returns the solution
+/// (least-squares sense is the caller's responsibility via normal equations).
+pub fn solve_linear(a: &mut [Vec<f64>], b: &mut [f64]) -> Vec<f64> {
+    let d = b.len();
+    for col in 0..d {
+        // pivot
+        let mut piv = col;
+        for r in col + 1..d {
+            if a[r][col].abs() > a[piv][col].abs() {
+                piv = r;
+            }
+        }
+        a.swap(col, piv);
+        b.swap(col, piv);
+        let p = a[col][col];
+        if p.abs() < 1e-12 {
+            continue; // singular direction; leave zero
+        }
+        for r in col + 1..d {
+            let f = a[r][col] / p;
+            if f == 0.0 {
+                continue;
+            }
+            for c in col..d {
+                a[r][c] -= f * a[col][c];
+            }
+            b[r] -= f * b[col];
+        }
+    }
+    let mut w = vec![0.0; d];
+    for col in (0..d).rev() {
+        let mut s = b[col];
+        for c in col + 1..d {
+            s -= a[col][c] * w[c];
+        }
+        w[col] = if a[col][col].abs() < 1e-12 {
+            0.0
+        } else {
+            s / a[col][col]
+        };
+    }
+    w
+}
+
+/// Non-negative least squares via projected coordinate descent. The paper's
+/// cost-model coefficients are physically non-negative (each feature adds
+/// cycles), which NNLS enforces during calibration.
+pub fn nnls_fit(x: &[Vec<f64>], y: &[f64], lambda: f64, iters: usize) -> Vec<f64> {
+    let n = x.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let d = x[0].len();
+    let mut a = vec![vec![0.0; d]; d];
+    let mut b = vec![0.0; d];
+    for r in 0..n {
+        for i in 0..d {
+            b[i] += x[r][i] * y[r];
+            for j in 0..d {
+                a[i][j] += x[r][i] * x[r][j];
+            }
+        }
+    }
+    for i in 0..d {
+        a[i][i] += lambda;
+    }
+    let mut w = vec![0.0; d];
+    for _ in 0..iters {
+        for i in 0..d {
+            if a[i][i] <= 0.0 {
+                continue;
+            }
+            let mut g = b[i];
+            for j in 0..d {
+                if j != i {
+                    g -= a[i][j] * w[j];
+                }
+            }
+            w[i] = (g / a[i][i]).max(0.0);
+        }
+    }
+    w
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pearson_perfect() {
+        let xs = vec![1.0, 2.0, 3.0, 4.0];
+        let ys = vec![2.0, 4.0, 6.0, 8.0];
+        assert!((pearson(&xs, &ys) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn spearman_monotone() {
+        let xs = vec![1.0, 2.0, 3.0, 4.0];
+        let ys = vec![1.0, 10.0, 100.0, 1000.0]; // nonlinear but monotone
+        assert!((spearman(&xs, &ys) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ranks_with_ties() {
+        let r = ranks(&[10.0, 20.0, 10.0]);
+        assert_eq!(r, vec![1.5, 3.0, 1.5]);
+    }
+
+    #[test]
+    fn ridge_recovers_coeffs() {
+        // y = 2*x0 + 3*x1
+        let x: Vec<Vec<f64>> = (0..50)
+            .map(|i| vec![i as f64, (i * i % 17) as f64])
+            .collect();
+        let y: Vec<f64> = x.iter().map(|r| 2.0 * r[0] + 3.0 * r[1]).collect();
+        let w = ridge_fit(&x, &y, 1e-9);
+        assert!((w[0] - 2.0).abs() < 1e-6, "{w:?}");
+        assert!((w[1] - 3.0).abs() < 1e-6, "{w:?}");
+    }
+
+    #[test]
+    fn nnls_nonnegative() {
+        // y = -1*x0 + 4*x1 — NNLS must clamp w0 at 0.
+        let x: Vec<Vec<f64>> = (0..50)
+            .map(|i| vec![(i % 7) as f64, (i % 5) as f64])
+            .collect();
+        let y: Vec<f64> = x.iter().map(|r| -1.0 * r[0] + 4.0 * r[1]).collect();
+        let w = nnls_fit(&x, &y, 1e-9, 200);
+        assert!(w.iter().all(|&c| c >= 0.0), "{w:?}");
+        assert!(w[1] > 2.0, "{w:?}");
+    }
+}

@@ -1,0 +1,202 @@
+//! Cross-module integration tests: the full tuning pipeline on small
+//! workloads, dual-clock accounting, schedule-quality ordering, and the
+//! paper-shape relations the benches quantify at scale.
+
+use tuna::coordinator::{Coordinator, Strategy};
+use tuna::graph::{Layer, Network};
+use tuna::isa::TargetKind;
+use tuna::search::EsParams;
+use tuna::sim::Device;
+use tuna::tir::ops::OpSpec;
+
+fn tiny_es() -> EsParams {
+    EsParams { population: 14, iterations: 7, k: 10, seed: 9, ..Default::default() }
+}
+
+fn toy_net() -> Network {
+    Network {
+        name: "toy",
+        display: "Toy",
+        layers: vec![
+            Layer::single(OpSpec::Matmul { m: 64, n: 64, k: 64 }, 2),
+            Layer::single(
+                OpSpec::Conv2d {
+                    n: 1, cin: 8, h: 14, w: 14, cout: 16, kh: 3, kw: 3, stride: 1, pad: 1,
+                },
+                1,
+            ),
+            Layer::single(
+                OpSpec::DepthwiseConv2d {
+                    n: 1, c: 16, h: 14, w: 14, kh: 3, kw: 3, stride: 1, pad: 1,
+                },
+                3,
+            ),
+        ],
+    }
+}
+
+/// Tuna's search result must beat the median random schedule on the device
+/// — the basic "the static model is useful" claim.
+#[test]
+fn tuna_beats_median_random() {
+    let kind = TargetKind::Graviton2;
+    let c = Coordinator::new(kind);
+    let op = OpSpec::Matmul { m: 128, n: 128, k: 64 };
+    let r = c.tune_op(&op, &Strategy::TunaStatic(tiny_es()));
+    let space = tuna::transform::config_space(&op, kind);
+    let mut rng = tuna::util::Rng::new(33);
+    let mut lat: Vec<f64> = (0..15)
+        .map(|_| c.device.run(&op, &space.random(&mut rng)).seconds)
+        .collect();
+    lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    assert!(
+        r.latency_s <= lat[lat.len() / 2],
+        "tuna {} vs median random {}",
+        r.latency_s,
+        lat[lat.len() / 2]
+    );
+}
+
+/// Table-II shape: Tuna's compile time (wall only) must be far below
+/// AutoTVM's (wall + sequential virtual device time), even on a toy net.
+#[test]
+fn compile_time_asymmetry_holds() {
+    let kind = TargetKind::Graviton2;
+    let c = Coordinator::new(kind);
+    let net = toy_net();
+    let tuna = c.tune_network(&net, &Strategy::TunaStatic(tiny_es()));
+    let atvm = c.tune_network(&net, &Strategy::AutoTvmFull { trials: 16 });
+    assert_eq!(tuna.device_s, 0.0, "static strategy touched the device");
+    assert!(atvm.device_s > 30.0, "autotvm device time {}", atvm.device_s);
+    let speedup = atvm.compile_seconds() / tuna.compile_seconds().max(1e-9);
+    assert!(speedup > 3.0, "compile speedup only {speedup:.1}x");
+}
+
+/// Table-I shape: AutoTVM-Partial at Tuna's budget must not beat Tuna
+/// (it can barely measure anything), while AutoTVM-Full should land in
+/// Tuna's neighbourhood.
+#[test]
+fn equal_budget_comparison_favors_tuna() {
+    let kind = TargetKind::Graviton2;
+    let c = Coordinator::new(kind);
+    let net = toy_net();
+    let tuna = c.tune_network(&net, &Strategy::TunaStatic(tiny_es()));
+    let budget = c.partial_budget_per_op(&tuna);
+    let partial = c.tune_network(&net, &Strategy::AutoTvmPartial { budget_s: budget });
+    assert!(
+        partial.latency_s >= tuna.latency_s * 0.7,
+        "partial {} unexpectedly beats tuna {} badly",
+        partial.latency_s,
+        tuna.latency_s
+    );
+}
+
+/// The GPU pipeline works end to end too.
+#[test]
+fn gpu_pipeline_end_to_end() {
+    let kind = TargetKind::TeslaV100;
+    let c = Coordinator::new(kind);
+    let op = OpSpec::Matmul { m: 256, n: 256, k: 128 };
+    let r = c.tune_op(&op, &Strategy::TunaStatic(tiny_es()));
+    assert!(r.latency_s > 0.0);
+    assert_eq!(r.device_s, 0.0);
+    // V100 should be far faster than the A53 on the same op
+    let a53 = Coordinator::new(TargetKind::CortexA53);
+    let r53 = a53.tune_op(&op, &Strategy::Vendor);
+    assert!(r53.latency_s > r.latency_s * 3.0);
+}
+
+/// Schedule cache semantics: identical op in two layers is tuned once
+/// (unique_tasks) but charged per use in the latency sum.
+#[test]
+fn schedule_cache_dedups_work() {
+    let kind = TargetKind::Graviton2;
+    let c = Coordinator::new(kind);
+    let op = OpSpec::Matmul { m: 64, n: 64, k: 64 };
+    let net = Network {
+        name: "dup",
+        display: "Dup",
+        layers: vec![Layer::single(op, 1), Layer::single(op, 4)],
+    };
+    let rep = c.tune_network(&net, &Strategy::Vendor);
+    assert_eq!(rep.per_op.len(), 1, "duplicate op tuned twice");
+    let unit = rep.per_op.values().next().unwrap().latency_s;
+    assert!((rep.latency_s - 5.0 * unit).abs() < 1e-12);
+}
+
+/// Alternatives: a layer carrying {direct conv, winograd} deploys the
+/// faster of the two tuned families.
+#[test]
+fn alternative_selection_picks_faster_family() {
+    let kind = TargetKind::Graviton2;
+    let c = Coordinator::new(kind);
+    let direct = OpSpec::Conv2d {
+        n: 1, cin: 16, h: 16, w: 16, cout: 16, kh: 3, kw: 3, stride: 1, pad: 1,
+    };
+    let wino = OpSpec::Conv2dWinograd { n: 1, cin: 16, h: 16, w: 16, cout: 16 };
+    let net = Network {
+        name: "alt",
+        display: "Alt",
+        layers: vec![Layer { alternatives: vec![direct, wino], count: 1 }],
+    };
+    let rep = c.tune_network(&net, &Strategy::TunaStatic(tiny_es()));
+    let ld = rep.per_op[&direct.cache_key()].latency_s;
+    let lw = rep.per_op[&wino.cache_key()].latency_s;
+    assert!((rep.latency_s - ld.min(lw)).abs() < 1e-12);
+}
+
+/// Measurement noise is deterministic, so AutoTVM runs reproduce exactly.
+#[test]
+fn autotvm_is_reproducible() {
+    let kind = TargetKind::Graviton2;
+    let op = OpSpec::Matmul { m: 64, n: 64, k: 32 };
+    let space = tuna::transform::config_space(&op, kind);
+    let run = || {
+        let d = Device::new(kind);
+        tuna::autotvm::tune(
+            &op,
+            &space,
+            &d,
+            &tuna::autotvm::TunerParams { n_trials: 12, seed: 4, ..Default::default() },
+        )
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a.result.best, b.result.best);
+    assert_eq!(a.result.best_score, b.result.best_score);
+    assert_eq!(a.device_seconds, b.device_seconds);
+}
+
+/// Figure-3 machinery: top-k ratio is finite, positive and ≤ ~1.2 on a
+/// small operator (AutoTVM picking by measurement can't be much *worse*
+/// than Tuna's static picks when both measure the same space).
+#[test]
+fn topk_ratio_in_plausible_band() {
+    let kind = TargetKind::Graviton2;
+    let c = Coordinator::new(kind);
+    let op = OpSpec::Conv2d {
+        n: 1, cin: 8, h: 14, w: 14, cout: 16, kh: 3, kw: 3, stride: 1, pad: 1,
+    };
+    let ratio = tuna::metrics::topk_sweep_ratio(&c, &op, 5, 24);
+    assert!(ratio.is_finite() && ratio > 0.2 && ratio < 1.5, "ratio {ratio}");
+}
+
+/// Tables render with every strategy row present.
+#[test]
+fn tables_render_complete() {
+    use std::collections::BTreeMap;
+    let kind = TargetKind::Graviton2;
+    let c = Coordinator::new(kind);
+    let net = toy_net();
+    let mut results: BTreeMap<String, BTreeMap<String, tuna::coordinator::NetworkReport>> =
+        BTreeMap::new();
+    let tuna_rep = c.tune_network(&net, &Strategy::TunaStatic(tiny_es()));
+    let vendor = c.tune_network(&net, &Strategy::Vendor);
+    results.entry("Tuna".into()).or_default().insert("toy".into(), tuna_rep);
+    results.entry("Framework".into()).or_default().insert("toy".into(), vendor);
+    let t1 = tuna::metrics::table1(kind, &results, &["toy"], &["Toy"]);
+    assert!(t1.contains("Tuna") && t1.contains("Framework") && t1.contains("Toy"));
+    let t3 = tuna::metrics::table3(kind, &results, &["toy"], &["Toy"]);
+    assert!(t3.is_some()); // graviton2 has a cloud price
+    assert!(tuna::metrics::table3(TargetKind::CortexA53, &results, &["toy"], &["Toy"]).is_none());
+}

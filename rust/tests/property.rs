@@ -1,0 +1,270 @@
+//! Property-based tests over the core invariants (hand-rolled generators
+//! on the deterministic in-tree RNG — the offline environment has no
+//! proptest; same idea: random cases + shrink-free minimal assertions).
+
+use tuna::isa::TargetKind;
+use tuna::isets::{Affine, StridedSet};
+use tuna::tir::ops::OpSpec;
+use tuna::transform;
+use tuna::util::Rng;
+
+const CASES: usize = 60;
+
+fn random_op(rng: &mut Rng) -> OpSpec {
+    let pick = |rng: &mut Rng, xs: &[i64]| xs[rng.below(xs.len())];
+    match rng.below(5) {
+        0 => OpSpec::Matmul {
+            m: pick(rng, &[16, 32, 48, 64]),
+            n: pick(rng, &[16, 32, 64]),
+            k: pick(rng, &[16, 24, 64]),
+        },
+        1 => OpSpec::BatchMatmul {
+            b: pick(rng, &[2, 4]),
+            m: pick(rng, &[16, 32]),
+            n: pick(rng, &[16, 32]),
+            k: pick(rng, &[16, 32]),
+        },
+        2 => OpSpec::Conv2d {
+            n: 1,
+            cin: pick(rng, &[4, 8, 16]),
+            h: pick(rng, &[8, 14]),
+            w: pick(rng, &[8, 14]),
+            cout: pick(rng, &[8, 16]),
+            kh: 3,
+            kw: 3,
+            stride: pick(rng, &[1, 2]),
+            pad: 1,
+        },
+        3 => OpSpec::DepthwiseConv2d {
+            n: 1,
+            c: pick(rng, &[8, 16, 32]),
+            h: pick(rng, &[8, 14]),
+            w: pick(rng, &[8, 14]),
+            kh: 3,
+            kw: 3,
+            stride: pick(rng, &[1, 2]),
+            pad: 1,
+        },
+        _ => OpSpec::Conv2dWinograd {
+            n: 1,
+            cin: pick(rng, &[4, 8]),
+            h: pick(rng, &[8, 12]),
+            w: pick(rng, &[8, 12]),
+            cout: pick(rng, &[8, 16]),
+        },
+    }
+}
+
+/// INVARIANT: every schedule in every space computes the same flops —
+/// transformations never change the work, only its order.
+#[test]
+fn prop_schedules_preserve_flops() {
+    let mut rng = Rng::new(101);
+    for case in 0..CASES {
+        let op = random_op(&mut rng);
+        let target = if case % 2 == 0 { TargetKind::Graviton2 } else { TargetKind::TeslaV100 };
+        let space = transform::config_space(&op, target);
+        let cfg = space.random(&mut rng);
+        let f = transform::apply(&op, target, &cfg);
+        if target.is_gpu() {
+            // GPU templates include copy stages; compare MulAdd instances
+            let muladds: u64 = f
+                .statements()
+                .iter()
+                .filter(|(_, s)| s.op == tuna::tir::StmtOp::MulAdd)
+                .map(|(st, s)| {
+                    st.iter().map(|l| l.extent as u64).product::<u64>() * s.op.flops()
+                })
+                .sum();
+            // winograd-on-GPU is GEMM-stage only (documented substitution)
+            if !matches!(op, OpSpec::Conv2dWinograd { .. }) {
+                assert_eq!(muladds, op.flops(), "case {case}: {op} cfg {cfg:?}");
+            } else {
+                assert!(muladds > 0);
+            }
+        } else {
+            assert_eq!(f.total_flops(), op.flops(), "case {case}: {op} cfg {cfg:?}");
+        }
+    }
+}
+
+/// INVARIANT: Algorithm 1's recovered instruction executions equal the
+/// IR-side statement instances for arbitrary CPU schedules.
+#[test]
+fn prop_loop_map_recovers_exact_counts() {
+    use tuna::analysis::loop_map;
+    use tuna::isa::march::xeon_8124m;
+    use tuna::isa::Opcode;
+    let march = xeon_8124m();
+    let lanes = 16u64;
+    let mut rng = Rng::new(202);
+    for case in 0..CASES {
+        let op = random_op(&mut rng);
+        let target = TargetKind::XeonPlatinum8124M;
+        let space = transform::config_space(&op, target);
+        let cfg = space.random(&mut rng);
+        let f = transform::apply(&op, target, &cfg);
+        let prog = tuna::codegen::lower_cpu(&f, &march);
+        let lm = loop_map::map_loops(&f, &prog);
+        let vec_lanes: u64 = {
+            let mut s = 0;
+            for (i, b) in prog.blocks.iter().enumerate() {
+                for ins in &b.instrs {
+                    if ins.op == Opcode::VFma {
+                        s += lm.block_trips[i] * lanes;
+                    }
+                }
+            }
+            s
+        };
+        let scalar = lm.count_instrs(&prog, |i| i.op == Opcode::SFma);
+        let muladds: u64 = f
+            .statements()
+            .iter()
+            .filter(|(_, s)| s.op == tuna::tir::StmtOp::MulAdd)
+            .map(|(st, _)| st.iter().map(|l| l.extent as u64).product::<u64>())
+            .sum();
+        assert_eq!(vec_lanes + scalar, muladds, "case {case}: {op} cfg {cfg:?}");
+    }
+}
+
+/// INVARIANT: the space index mapping is a bijection.
+#[test]
+fn prop_space_index_bijection() {
+    let mut rng = Rng::new(303);
+    for _ in 0..CASES {
+        let op = random_op(&mut rng);
+        let target = TargetKind::Graviton2;
+        let space = transform::config_space(&op, target);
+        for _ in 0..10 {
+            let idx = (rng.next_u64()) % space.size();
+            let cfg = space.from_index(idx);
+            assert!(space.contains(&cfg));
+            assert_eq!(space.to_index(&cfg), idx);
+        }
+    }
+}
+
+/// INVARIANT: cache-model movement is monotone non-increasing in cache
+/// size, bounded below by footprint and above by total accesses.
+#[test]
+fn prop_cache_model_monotone_and_bounded() {
+    use tuna::analysis::cache;
+    let mut rng = Rng::new(404);
+    for case in 0..30 {
+        let op = random_op(&mut rng);
+        let target = TargetKind::Graviton2;
+        let space = transform::config_space(&op, target);
+        let cfg = space.random(&mut rng);
+        let f = transform::apply(&op, target, &cfg);
+        if target.is_gpu() {
+            continue;
+        }
+        let small = cache::analyze(&f, 512);
+        let mid = cache::analyze(&f, 16 * 1024);
+        let big = cache::analyze(&f, 64 * 1024 * 1024);
+        assert!(
+            small.dmov_elems + 1e-6 >= mid.dmov_elems,
+            "case {case} {op}: small {} < mid {}",
+            small.dmov_elems,
+            mid.dmov_elems
+        );
+        assert!(mid.dmov_elems + 1e-6 >= big.dmov_elems, "case {case} {op}");
+        // with an infinite cache movement equals footprint
+        assert!(
+            (big.dmov_elems - big.footprint_elems as f64).abs() <= 1e-6,
+            "case {case} {op}: dmov {} fp {}",
+            big.dmov_elems,
+            big.footprint_elems
+        );
+        // never below footprint
+        assert!(small.dmov_elems + 1e-6 >= small.footprint_elems as f64, "case {case} {op}");
+    }
+}
+
+/// INVARIANT: affine substitution then evaluation == evaluation with the
+/// substituted binding (subst correctness).
+#[test]
+fn prop_affine_subst_eval_commute() {
+    let mut rng = Rng::new(505);
+    for _ in 0..200 {
+        // random affine over vars 0..4
+        let mut e = Affine::constant(rng.below(20) as i64 - 10);
+        for v in 0..4u32 {
+            if rng.f64() < 0.7 {
+                e = e.add(&Affine::scaled(v, rng.below(9) as i64 - 4));
+            }
+        }
+        // random replacement for var 1: a*v2 + b
+        let repl = Affine::scaled(2, rng.below(5) as i64).add_const(rng.below(7) as i64);
+        let sub = e.subst(1, &repl);
+        let env = |v: u32| [3i64, 0, 5, -2][v as usize]; // v1 unused after subst
+        let env_orig = |v: u32| -> i64 {
+            if v == 1 {
+                repl.eval(&env)
+            } else {
+                env(v)
+            }
+        };
+        assert_eq!(sub.eval(&env), e.eval(&env_orig));
+        assert!(!sub.uses_var(1));
+    }
+}
+
+/// INVARIANT: StridedSet unions never under-count and contain both sides'
+/// extrema; Minkowski sums have cardinality ≤ product and ≥ max side.
+#[test]
+fn prop_strided_set_algebra() {
+    let mut rng = Rng::new(606);
+    for _ in 0..300 {
+        let a = StridedSet::arithmetic(
+            rng.below(40) as i64 - 20,
+            rng.below(6) as i64 + 1,
+            rng.below(30) as i64 + 1,
+        );
+        let b = StridedSet::arithmetic(
+            rng.below(40) as i64 - 20,
+            rng.below(6) as i64 + 1,
+            rng.below(30) as i64 + 1,
+        );
+        let u = a.union(&b);
+        assert!(u.cardinality() >= a.cardinality().max(b.cardinality()));
+        assert!(u.min() == a.min().min(b.min()));
+        assert!(u.max() == a.max().max(b.max()));
+        assert!(u.contains(a.min()) && u.contains(b.max()));
+
+        let m = a.minkowski(&b);
+        assert!(m.cardinality() <= a.cardinality() * b.cardinality());
+        assert!(m.cardinality() >= a.cardinality().max(b.cardinality()));
+        assert_eq!(m.min(), a.min() + b.min());
+        assert_eq!(m.max(), a.max() + b.max());
+    }
+}
+
+/// INVARIANT: simulator latency respects the roofline for every schedule
+/// (no schedule can beat peak flops) and is strictly positive.
+#[test]
+fn prop_simulator_respects_roofline() {
+    use tuna::isa::Target;
+    use tuna::sim::Device;
+    let mut rng = Rng::new(707);
+    for kind in [TargetKind::Graviton2, TargetKind::TeslaV100] {
+        let device = Device::new(kind);
+        let peak = match kind.build() {
+            Target::Cpu(m) => m.peak_gflops(),
+            Target::Gpu(g) => g.peak_gflops(),
+        };
+        for _ in 0..12 {
+            let op = random_op(&mut rng);
+            let space = transform::config_space(&op, kind);
+            let cfg = space.random(&mut rng);
+            let r = device.run(&op, &cfg);
+            assert!(r.seconds > 0.0);
+            let achieved = op.flops() as f64 / r.seconds / 1e9;
+            assert!(
+                achieved <= peak * 1.001,
+                "{op} on {kind:?}: {achieved} GF/s beats peak {peak}"
+            );
+        }
+    }
+}

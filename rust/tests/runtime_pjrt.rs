@@ -1,0 +1,104 @@
+//! PJRT runtime integration: load the AOT artifacts and execute them.
+//!
+//! Requires `make artifacts` (the Makefile's `test` target runs it first).
+//! If the artifacts directory is absent the tests skip with a message so
+//! `cargo test` works from a clean checkout too.
+
+use std::path::PathBuf;
+
+fn artifacts() -> Option<PathBuf> {
+    let dir = tuna::runtime::artifacts_dir();
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: {dir:?} missing (run `make artifacts`)");
+        None
+    }
+}
+
+#[test]
+fn manifest_lists_matmul_and_mlp_variants() {
+    let Some(dir) = artifacts() else { return };
+    let m = tuna::runtime::read_manifest(&dir).unwrap();
+    let matmuls = m.iter().filter(|e| e.name.starts_with("matmul_")).count();
+    let mlps = m.iter().filter(|e| e.name.starts_with("mlp_")).count();
+    assert!(matmuls >= 4, "only {matmuls} matmul artifacts");
+    assert!(mlps >= 3, "only {mlps} mlp artifacts");
+}
+
+#[test]
+fn matmul_artifact_is_numerically_correct() {
+    let Some(dir) = artifacts() else { return };
+    let rt = tuna::runtime::Runtime::cpu().unwrap();
+    let m = tuna::runtime::read_manifest(&dir).unwrap();
+    let entry = m.iter().find(|e| e.name.starts_with("matmul_")).unwrap();
+    let exe = rt.load_hlo_text(&dir.join(&entry.path)).unwrap();
+
+    // x = I scaled by 2 -> out = 2*w
+    let n = entry.inputs[0][0] as usize;
+    let mut x = vec![0f32; n * n];
+    for i in 0..n {
+        x[i * n + i] = 2.0;
+    }
+    let w: Vec<f32> = (0..n * n).map(|i| (i % 17) as f32 * 0.25).collect();
+    let out = exe
+        .run_f32(&[(x, vec![n as i64, n as i64]), (w.clone(), vec![n as i64, n as i64])])
+        .unwrap();
+    for i in (0..out.len()).step_by(389) {
+        assert!((out[i] - 2.0 * w[i]).abs() < 1e-4, "idx {i}: {} vs {}", out[i], 2.0 * w[i]);
+    }
+}
+
+#[test]
+fn all_variants_agree_with_each_other() {
+    let Some(dir) = artifacts() else { return };
+    let rt = tuna::runtime::Runtime::cpu().unwrap();
+    let m = tuna::runtime::read_manifest(&dir).unwrap();
+    let mats: Vec<_> = m.iter().filter(|e| e.name.starts_with("matmul_")).collect();
+    assert!(mats.len() >= 2);
+    let n = mats[0].inputs[0][0];
+    let mut rng = tuna::util::Rng::new(5);
+    let x: (Vec<f32>, Vec<i64>) =
+        ((0..n * n).map(|_| rng.f64() as f32 - 0.5).collect(), vec![n, n]);
+    let w: (Vec<f32>, Vec<i64>) =
+        ((0..n * n).map(|_| rng.f64() as f32 - 0.5).collect(), vec![n, n]);
+    let mut first: Option<Vec<f32>> = None;
+    for e in mats {
+        let exe = rt.load_hlo_text(&dir.join(&e.path)).unwrap();
+        let out = exe.run_f32(&[x.clone(), w.clone()]).unwrap();
+        match &first {
+            None => first = Some(out),
+            Some(f) => {
+                for i in (0..out.len()).step_by(211) {
+                    assert!(
+                        (out[i] - f[i]).abs() < 1e-3,
+                        "{}: variant disagreement at {i}",
+                        e.name
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn mlp_artifact_runs_and_is_relu_nonnegative_in_hidden_path() {
+    let Some(dir) = artifacts() else { return };
+    let rt = tuna::runtime::Runtime::cpu().unwrap();
+    let m = tuna::runtime::read_manifest(&dir).unwrap();
+    let Some(entry) = m.iter().find(|e| e.name.starts_with("mlp_")) else { return };
+    let exe = rt.load_hlo_text(&dir.join(&entry.path)).unwrap();
+    let mut rng = tuna::util::Rng::new(6);
+    let inputs: Vec<(Vec<f32>, Vec<i64>)> = entry
+        .inputs
+        .iter()
+        .map(|shape| {
+            let elems: i64 = shape.iter().product();
+            ((0..elems).map(|_| rng.f64() as f32 - 0.5).collect(), shape.clone())
+        })
+        .collect();
+    let out = exe.run_f32(&inputs).unwrap();
+    let (b, d) = (entry.inputs[0][0], entry.inputs[0][1]);
+    assert_eq!(out.len() as i64, b * d);
+    assert!(out.iter().all(|v| v.is_finite()));
+}
