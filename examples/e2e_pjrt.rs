@@ -13,10 +13,16 @@
 //! 3. Tuna's static scores rank the variants consistently with reality
 //!    (Spearman correlation + regret of the top static pick).
 
+#[cfg(feature = "pjrt")]
 fn main() {
     let dir = tuna::runtime::artifacts_dir();
     if let Err(e) = tuna::runtime::e2e::run(&dir, 5) {
         eprintln!("e2e failed: {e:#}");
         std::process::exit(1);
     }
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn main() {
+    eprintln!("e2e_pjrt needs the PJRT runtime; rebuild with `--features pjrt`");
 }

@@ -39,7 +39,7 @@ fn main() {
 
     // --- Tuna: static, parallel, deviceless ---
     let es = EsParams { population: 24, iterations: 10, ..Default::default() };
-    let tuna = coord.tune_network(&net, &Strategy::TunaStatic(es));
+    let tuna = coord.tune_network(&net, &Strategy::TunaStatic(es.clone()));
     println!(
         "[tuna]            latency {:>9.2} ms   compile {:>9.2}s  (all wall-clock, device idle)",
         tuna.latency_s * 1e3,
@@ -90,5 +90,16 @@ fn main() {
     println!(
         "speedup vs framework/vendor          : {:>8.2}x   (paper: up to 17.3x, avg 1.54x)",
         vendor.latency_s / tuna.latency_s
+    );
+
+    // --- schedule cache: recompiling the same network is free ---
+    let rerun = coord.tune_network(&net, &Strategy::TunaStatic(es));
+    let (entries, hits, _) = coord.cache_stats();
+    println!(
+        "recompile via schedule cache         : {:>8.4}s   ({} tasks served from {} cached entries, {} hits)",
+        rerun.compile_seconds(),
+        rerun.cache_hits,
+        entries,
+        hits
     );
 }

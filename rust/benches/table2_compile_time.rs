@@ -10,10 +10,12 @@
 
 mod common;
 
+use tuna::coordinator::Strategy;
+
 fn main() {
     for kind in common::targets() {
         let nets = common::networks();
-        let results = common::run_all_strategies(kind, &nets);
+        let (results, coords) = common::run_all_strategies_fresh(kind, &nets);
         let (names, displays) = common::names_displays(&nets);
         println!("{}", tuna::metrics::table2(kind, &results, &names, &displays));
 
@@ -26,6 +28,29 @@ fn main() {
                 full.compile_seconds(),
                 full.device_s,
                 full.compile_seconds() / tuna.compile_seconds().max(1e-9)
+            );
+        }
+
+        // repeated compilation on each network's own coordinator: every
+        // task is already in its schedule cache, so the second pass skips
+        // all searches
+        for (net, c) in nets.iter().zip(&coords) {
+            let searches_before = c.searches_performed();
+            let first = results["Tuna"][net.name].compile_seconds();
+            let rerun = c.tune_network(net, &Strategy::TunaStatic(common::es_params()));
+            assert_eq!(
+                c.searches_performed(),
+                searches_before,
+                "cached re-run of {} still searched",
+                net.name
+            );
+            println!(
+                "  {}: cached re-run {:.4}s vs first {:.2}s -> {:.0}x ({} hits)",
+                net.name,
+                rerun.compile_seconds(),
+                first,
+                first / rerun.compile_seconds().max(1e-9),
+                rerun.cache_hits
             );
         }
     }

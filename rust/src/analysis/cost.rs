@@ -36,6 +36,29 @@ pub const GPU_FEATURES: [&str; 6] = [
     "barriers",
 ];
 
+/// Typed feature-extraction failure. The evaluation pipeline propagates
+/// this instead of panicking mid-search: a search over thousands of
+/// candidates should surface *which* candidate was unanalyzable, not crash
+/// the host thread pool.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum CostError {
+    /// A program reached GPU feature extraction without kernel launch
+    /// metadata (no grid/block configuration was emitted).
+    MissingLaunch { func: String },
+}
+
+impl std::fmt::Display for CostError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CostError::MissingLaunch { func } => {
+                write!(f, "GPU program {func:?} has no launch configuration")
+            }
+        }
+    }
+}
+
+impl std::error::Error for CostError {}
+
 /// A named feature vector.
 #[derive(Debug, Clone)]
 pub struct FeatureVector {
@@ -71,11 +94,19 @@ pub fn extract_cpu(f: &TirFunc, prog: &AsmProgram, march: &MicroArch) -> Feature
     FeatureVector { values }
 }
 
-/// Extract GPU features.
-pub fn extract_gpu(f: &TirFunc, prog: &AsmProgram, gpu: &GpuArch) -> FeatureVector {
+/// Extract GPU features. Errors (rather than panicking) when the program
+/// carries no launch configuration — the launch check runs first so a
+/// malformed program never reaches the PTX analyses.
+pub fn extract_gpu(
+    f: &TirFunc,
+    prog: &AsmProgram,
+    gpu: &GpuArch,
+) -> Result<FeatureVector, CostError> {
+    let Some(launch) = prog.launch else {
+        return Err(CostError::MissingLaunch { func: f.name.clone() });
+    };
     let ptx = gpu_ptx::analyze(prog, gpu);
     let tlp = gpu_tlp::analyze(f, prog, &ptx, gpu);
-    let launch = prog.launch.expect("gpu launch");
     let total_threads = launch.num_blocks() as f64 * launch.threads_per_block() as f64;
     let lanes = (gpu.num_sms * gpu.cores_per_sm) as f64;
 
@@ -90,9 +121,9 @@ pub fn extract_gpu(f: &TirFunc, prog: &AsmProgram, gpu: &GpuArch) -> FeatureVect
     let low_occ = compute * (1.0 - tlp.occupancy);
     let barriers = ptx.bar_sync as f64 * tlp.waves * gpu.ptx_cost(crate::isa::Opcode::PtxBarSync);
 
-    FeatureVector {
+    Ok(FeatureVector {
         values: vec![compute, mem_stall, starvation, bank, low_occ, barriers],
-    }
+    })
 }
 
 /// The per-architecture linear model.
@@ -126,19 +157,35 @@ impl CostModel {
         self.coeffs.iter().zip(&fv.values).map(|(a, f)| a * f).sum()
     }
 
-    /// Lower a (op, config) and extract its features.
-    pub fn features(&self, op: &OpSpec, cfg: &ScheduleConfig) -> FeatureVector {
+    /// Lower a (op, config) and extract its features, surfacing extraction
+    /// failures as a typed error. This is the path the candidate evaluator
+    /// routes through.
+    pub fn try_features(
+        &self,
+        op: &OpSpec,
+        cfg: &ScheduleConfig,
+    ) -> Result<FeatureVector, CostError> {
         let f = transform::apply(op, self.kind, cfg);
+        let prog = codegen::lower(&f, &self.target);
         match &self.target {
-            Target::Cpu(m) => {
-                let prog = codegen::lower_cpu(&f, m);
-                extract_cpu(&f, &prog, m)
-            }
-            Target::Gpu(g) => {
-                let prog = codegen::lower_gpu(&f, g);
-                extract_gpu(&f, &prog, g)
-            }
+            Target::Cpu(m) => Ok(extract_cpu(&f, &prog, m)),
+            Target::Gpu(g) => extract_gpu(&f, &prog, g),
         }
+    }
+
+    /// Lower a (op, config) and extract its features.
+    ///
+    /// Panics on extraction failure; callers inside a search should prefer
+    /// [`Self::try_features`] (via the evaluator) so one bad candidate
+    /// cannot take down the whole run.
+    pub fn features(&self, op: &OpSpec, cfg: &ScheduleConfig) -> FeatureVector {
+        self.try_features(op, cfg)
+            .unwrap_or_else(|e| panic!("feature extraction failed for {op}: {e}"))
+    }
+
+    /// End-to-end static prediction for one candidate, typed-error form.
+    pub fn try_predict(&self, op: &OpSpec, cfg: &ScheduleConfig) -> Result<f64, CostError> {
+        Ok(self.score(&self.try_features(op, cfg)?))
     }
 
     /// End-to-end static prediction for one schedule candidate.

@@ -16,8 +16,8 @@
 pub mod cpu;
 pub mod gpu;
 
+use crate::isa::march::{GpuArch, Target};
 use crate::isa::{AsmProgram, MicroArch};
-use crate::isa::march::GpuArch;
 use crate::tir::TirFunc;
 
 /// Lower a scheduled CPU function.
@@ -28,6 +28,15 @@ pub fn lower_cpu(f: &TirFunc, march: &MicroArch) -> AsmProgram {
 /// Lower a scheduled GPU kernel.
 pub fn lower_gpu(f: &TirFunc, gpu: &GpuArch) -> AsmProgram {
     gpu::GpuCodegen::new(gpu).lower(f)
+}
+
+/// Lower for either flavor of target — the single entry point the
+/// candidate-evaluation pipeline routes through.
+pub fn lower(f: &TirFunc, target: &Target) -> AsmProgram {
+    match target {
+        Target::Cpu(m) => lower_cpu(f, m),
+        Target::Gpu(g) => lower_gpu(f, g),
+    }
 }
 
 #[cfg(test)]

@@ -1,0 +1,317 @@
+//! The persistent, content-addressed schedule cache.
+//!
+//! Maps a task identity — `(target, op cache key, config-space fingerprint,
+//! search signature)` — to the search outcome worth keeping: the chosen
+//! config, its score, the top-k list and the evaluation count. Entries are
+//! serialized through [`crate::util::json`], so a tuning log written by one
+//! process is readable by the next: repeated `tune_network` calls (same
+//! network, another network sharing tasks, or another process entirely)
+//! skip their searches and redeploy the cached schedule.
+//!
+//! The address is *content*-derived on every axis that changes the answer:
+//! the op key pins the workload shape, the space fingerprint pins the
+//! schedule template (editing a template invalidates stale entries), and
+//! the search signature pins the strategy and its hyperparameters, so a
+//! `k=5` sweep can never serve a `k=50` request.
+
+use crate::isa::TargetKind;
+use crate::tir::ops::OpSpec;
+use crate::transform::{ConfigSpace, ScheduleConfig};
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::io;
+use std::path::Path;
+
+/// Current on-disk format version. Bump on layout changes; loaders reject
+/// other versions rather than misread them.
+const FORMAT_VERSION: f64 = 1.0;
+
+/// One cached search outcome.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CachedSchedule {
+    pub chosen: ScheduleConfig,
+    pub best_score: f64,
+    /// ascending by score, as the searches produce it.
+    pub top_k: Vec<(ScheduleConfig, f64)>,
+    /// evaluations the original search spent (kept for accounting; a cache
+    /// hit itself costs zero evaluations).
+    pub evaluations: u64,
+}
+
+/// The cache: ordered map from content address to outcome, plus hit/miss
+/// counters for reporting.
+#[derive(Debug, Default)]
+pub struct ScheduleCache {
+    entries: BTreeMap<String, CachedSchedule>,
+    hits: u64,
+    misses: u64,
+}
+
+impl ScheduleCache {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The content address of one tuning task.
+    pub fn key(kind: TargetKind, op: &OpSpec, space: &ConfigSpace, search_sig: &str) -> String {
+        format!("{kind:?}/{}/{:016x}/{search_sig}", op.cache_key(), space.fingerprint())
+    }
+
+    /// Counted lookup (drives the hit/miss report).
+    pub fn get(&mut self, key: &str) -> Option<&CachedSchedule> {
+        match self.entries.get(key) {
+            Some(v) => {
+                self.hits += 1;
+                Some(v)
+            }
+            None => {
+                self.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Counted lookup that also validates the entry against the space it
+    /// will be deployed into: the chosen config *and* every top-k config
+    /// must fit (persisted entries may be stale after a template change
+    /// that kept the fingerprint only by coincidence, or hand-edited).
+    /// An invalid entry counts as a miss — the caller falls back to a
+    /// fresh search — so the hit counter matches tasks actually served.
+    pub fn get_valid(&mut self, key: &str, space: &ConfigSpace) -> Option<CachedSchedule> {
+        let valid = match self.entries.get(key) {
+            Some(v) => {
+                space.contains(&v.chosen) && v.top_k.iter().all(|(c, _)| space.contains(c))
+            }
+            None => false,
+        };
+        if valid {
+            self.hits += 1;
+            self.entries.get(key).cloned()
+        } else {
+            self.misses += 1;
+            None
+        }
+    }
+
+    /// Uncounted lookup (tests, inspection).
+    pub fn peek(&self, key: &str) -> Option<&CachedSchedule> {
+        self.entries.get(key)
+    }
+
+    pub fn insert(&mut self, key: String, value: CachedSchedule) {
+        self.entries.insert(key, value);
+    }
+
+    /// Absorb every entry of `other` (newer entries win on key clashes).
+    pub fn merge(&mut self, other: ScheduleCache) {
+        self.entries.extend(other.entries);
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.entries.keys().map(String::as_str)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let entries = self
+            .entries
+            .iter()
+            .map(|(k, v)| (k.clone(), entry_to_json(v)))
+            .collect::<BTreeMap<String, Json>>();
+        Json::obj(vec![
+            ("version", Json::Num(FORMAT_VERSION)),
+            ("entries", Json::Obj(entries)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self, String> {
+        match j.get("version").and_then(Json::as_f64) {
+            Some(v) if v == FORMAT_VERSION => {}
+            other => return Err(format!("unsupported schedule-cache version {other:?}")),
+        }
+        let Some(Json::Obj(entries)) = j.get("entries") else {
+            return Err("schedule cache missing 'entries' object".into());
+        };
+        let mut cache = ScheduleCache::new();
+        for (k, v) in entries {
+            cache.entries.insert(k.clone(), entry_from_json(v).map_err(|e| format!("{k}: {e}"))?);
+        }
+        Ok(cache)
+    }
+
+    /// Persist to `path` (creates parent directories).
+    pub fn save(&self, path: &Path) -> io::Result<()> {
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
+        }
+        std::fs::write(path, self.to_json().to_string())
+    }
+
+    /// Load from `path`; parse failures surface as `InvalidData`.
+    pub fn load(path: &Path) -> io::Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        let j = Json::parse(&text)
+            .map_err(|e| io::Error::new(io::ErrorKind::InvalidData, e))?;
+        Self::from_json(&j).map_err(|e| io::Error::new(io::ErrorKind::InvalidData, e))
+    }
+}
+
+fn cfg_to_json(c: &ScheduleConfig) -> Json {
+    Json::Arr(c.choices.iter().map(|&i| Json::Num(i as f64)).collect())
+}
+
+fn cfg_from_json(j: &Json) -> Result<ScheduleConfig, String> {
+    let arr = j.as_arr().ok_or("config must be an array")?;
+    let choices = arr
+        .iter()
+        .map(|v| {
+            let f = v.as_f64().ok_or("config index must be a number")?;
+            // knob indices are small non-negative integers; anything else
+            // is a corrupt entry and must fail the load, not truncate
+            if f.fract() != 0.0 || !(0.0..=u32::MAX as f64).contains(&f) {
+                return Err(format!("config index {f} is not a valid knob index"));
+            }
+            Ok(f as usize)
+        })
+        .collect::<Result<Vec<usize>, String>>()?;
+    Ok(ScheduleConfig { choices })
+}
+
+fn entry_to_json(e: &CachedSchedule) -> Json {
+    Json::obj(vec![
+        ("chosen", cfg_to_json(&e.chosen)),
+        ("best_score", Json::Num(e.best_score)),
+        ("evaluations", Json::Num(e.evaluations as f64)),
+        (
+            "top_k",
+            Json::Arr(
+                e.top_k
+                    .iter()
+                    .map(|(c, s)| Json::Arr(vec![cfg_to_json(c), Json::Num(*s)]))
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+fn entry_from_json(j: &Json) -> Result<CachedSchedule, String> {
+    let chosen = cfg_from_json(j.get("chosen").ok_or("missing 'chosen'")?)?;
+    let best_score = j.get("best_score").and_then(Json::as_f64).ok_or("missing 'best_score'")?;
+    let evaluations =
+        j.get("evaluations").and_then(Json::as_f64).ok_or("missing 'evaluations'")? as u64;
+    let mut top_k = Vec::new();
+    for pair in j.get("top_k").and_then(Json::as_arr).ok_or("missing 'top_k'")? {
+        let p = pair.as_arr().ok_or("top_k entry must be [config, score]")?;
+        if p.len() != 2 {
+            return Err("top_k entry must have exactly 2 elements".into());
+        }
+        let score = p[1].as_f64().ok_or("top_k score must be a number")?;
+        top_k.push((cfg_from_json(&p[0])?, score));
+    }
+    Ok(CachedSchedule { chosen, best_score, top_k, evaluations })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transform;
+
+    fn sample_entry() -> CachedSchedule {
+        CachedSchedule {
+            chosen: ScheduleConfig { choices: vec![3, 0, 1] },
+            best_score: 1234.5625, // exactly representable, fractional
+            top_k: vec![
+                (ScheduleConfig { choices: vec![3, 0, 1] }, 1234.5625),
+                (ScheduleConfig { choices: vec![2, 1, 0] }, 2000.0),
+            ],
+            evaluations: 168,
+        }
+    }
+
+    #[test]
+    fn json_roundtrip_exact() {
+        let mut c = ScheduleCache::new();
+        c.insert("k1".into(), sample_entry());
+        let back = ScheduleCache::from_json(&c.to_json()).unwrap();
+        assert_eq!(back.len(), 1);
+        assert_eq!(back.peek("k1"), Some(&sample_entry()));
+    }
+
+    #[test]
+    fn counted_get_tracks_hits_and_misses() {
+        let mut c = ScheduleCache::new();
+        c.insert("k".into(), sample_entry());
+        assert!(c.get("k").is_some());
+        assert!(c.get("absent").is_none());
+        assert_eq!((c.hits(), c.misses()), (1, 1));
+    }
+
+    #[test]
+    fn get_valid_rejects_stale_entries_as_misses() {
+        // sample_entry uses choices [3,0,1] / [2,1,0]
+        let fits = ConfigSpace::new()
+            .int_knob("a", vec![1, 2, 4, 8])
+            .int_knob("b", vec![1, 2])
+            .int_knob("c", vec![0, 1]);
+        let too_small = ConfigSpace::new()
+            .int_knob("a", vec![1, 2]) // index 3 out of range
+            .int_knob("b", vec![1, 2])
+            .int_knob("c", vec![0, 1]);
+        let mut c = ScheduleCache::new();
+        c.insert("k".into(), sample_entry());
+        assert!(c.get_valid("k", &fits).is_some());
+        assert!(c.get_valid("k", &too_small).is_none(), "stale entry served");
+        assert!(c.get_valid("absent", &fits).is_none());
+        assert_eq!((c.hits(), c.misses()), (1, 2));
+    }
+
+    #[test]
+    fn key_separates_target_op_space_and_search() {
+        use crate::isa::TargetKind;
+        use crate::tir::ops::OpSpec;
+        let op_a = OpSpec::Matmul { m: 32, n: 32, k: 32 };
+        let op_b = OpSpec::Matmul { m: 64, n: 32, k: 32 };
+        let sp_a = transform::config_space(&op_a, TargetKind::Graviton2);
+        let sp_b = transform::config_space(&op_b, TargetKind::Graviton2);
+        let base = ScheduleCache::key(TargetKind::Graviton2, &op_a, &sp_a, "es_x");
+        assert_ne!(base, ScheduleCache::key(TargetKind::CortexA53, &op_a, &sp_a, "es_x"));
+        assert_ne!(base, ScheduleCache::key(TargetKind::Graviton2, &op_b, &sp_b, "es_x"));
+        assert_ne!(base, ScheduleCache::key(TargetKind::Graviton2, &op_a, &sp_a, "es_y"));
+        // deterministic
+        assert_eq!(base, ScheduleCache::key(TargetKind::Graviton2, &op_a, &sp_a, "es_x"));
+    }
+
+    #[test]
+    fn rejects_corrupt_config_indices() {
+        for bad in ["[2.7]", "[-1]", "[1e12]"] {
+            let text = format!(
+                r#"{{"version":1,"entries":{{"k":{{"chosen":{bad},"best_score":1.0,"evaluations":1,"top_k":[]}}}}}}"#
+            );
+            let j = Json::parse(&text).unwrap();
+            assert!(ScheduleCache::from_json(&j).is_err(), "accepted {bad}");
+        }
+    }
+
+    #[test]
+    fn rejects_bad_version() {
+        let j = Json::obj(vec![("version", Json::Num(99.0)), ("entries", Json::Obj(Default::default()))]);
+        assert!(ScheduleCache::from_json(&j).is_err());
+    }
+}

@@ -1,0 +1,252 @@
+//! The staged candidate-evaluation pipeline.
+//!
+//! Tuna's headline economics rest on static candidate evaluation being
+//! cheap enough to fan out across host cores — but cheap still adds up
+//! when every ES generation re-lowers the same schedules. This module
+//! makes the evaluation path a reusable subsystem with three stages:
+//!
+//! 1. **memoized scoring** — [`CandidateEvaluator`] owns the (calibrated)
+//!    cost model and target; `(op, config)` pairs are keyed structurally
+//!    and their scores memoized in sharded maps, so a candidate proposed
+//!    twice (ES revisits decode collisions constantly) is lowered and
+//!    analyzed once;
+//! 2. **batched fan-out** — [`CandidateEvaluator::score_batch`] scores a
+//!    whole population with one index-space parallel map: no per-candidate
+//!    closure dispatch, no config clones, per-thread result buffers reused
+//!    across the worker's share of the batch;
+//! 3. **typed failure** — extraction errors ([`CostError`]) propagate out
+//!    of the batch instead of panicking mid-search.
+//!
+//! The sibling [`cache`] module persists *search outcomes* (the chosen
+//! schedule + top-k per task) across processes; this module avoids
+//! *within-search* recomputation. The coordinator composes both.
+//!
+//! Scores are computed by exactly the same code path as
+//! [`CostModel::predict`] (`transform::apply` → `codegen::lower` → feature
+//! extraction → linear score), so batched results are bit-identical to
+//! per-candidate prediction — a property the `eval_pipeline` integration
+//! tests pin down on CPU and GPU targets.
+
+pub mod cache;
+
+pub use cache::{CachedSchedule, ScheduleCache};
+
+use crate::analysis::cost::{CostError, CostModel};
+use crate::search::BatchObjective;
+use crate::tir::ops::OpSpec;
+use crate::transform::ScheduleConfig;
+use crate::util::pool::{self, parallel_map_indexed};
+use std::collections::HashMap;
+use std::hash::{Hash, Hasher};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Number of memo shards (bounds lock contention during batch fan-out).
+const SHARDS: usize = 16;
+
+/// Structural identity of one lowered candidate.
+#[derive(Clone, PartialEq, Eq, Hash)]
+struct MemoKey {
+    op: OpSpec,
+    choices: Vec<usize>,
+}
+
+/// Memo hit/miss counters (diagnostics; also what the cache-equivalence
+/// tests assert against).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct EvalStats {
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl EvalStats {
+    pub fn total(&self) -> u64 {
+        self.hits + self.misses
+    }
+}
+
+/// The batched, memoizing candidate evaluator. Owns the target (via its
+/// cost model) and is shared by every search the coordinator runs against
+/// that target.
+pub struct CandidateEvaluator {
+    model: CostModel,
+    threads: usize,
+    shards: Vec<Mutex<HashMap<MemoKey, f64>>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl CandidateEvaluator {
+    pub fn new(model: CostModel) -> Self {
+        Self::with_threads(model, pool::default_threads())
+    }
+
+    pub fn with_threads(model: CostModel, threads: usize) -> Self {
+        CandidateEvaluator {
+            model,
+            threads: threads.max(1),
+            shards: (0..SHARDS).map(|_| Mutex::new(HashMap::new())).collect(),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    /// The cost model this evaluator scores with.
+    pub fn model(&self) -> &CostModel {
+        &self.model
+    }
+
+    /// In-process structural hash of a candidate (shard selector). Not
+    /// stable across processes — persisted keys use
+    /// [`ScheduleCache::key`] instead.
+    pub fn structural_hash(op: &OpSpec, cfg: &ScheduleConfig) -> u64 {
+        let mut h = std::collections::hash_map::DefaultHasher::new();
+        op.hash(&mut h);
+        cfg.choices.hash(&mut h);
+        h.finish()
+    }
+
+    fn shard_of(key: &MemoKey) -> usize {
+        let mut h = std::collections::hash_map::DefaultHasher::new();
+        key.hash(&mut h);
+        (h.finish() as usize) % SHARDS
+    }
+
+    /// Score one candidate through the memo. Identical numerics to
+    /// [`CostModel::predict`]; typed error instead of panic.
+    pub fn try_score(&self, op: &OpSpec, cfg: &ScheduleConfig) -> Result<f64, CostError> {
+        let key = MemoKey { op: *op, choices: cfg.choices.clone() };
+        let shard = &self.shards[Self::shard_of(&key)];
+        if let Some(&s) = shard.lock().unwrap().get(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Ok(s);
+        }
+        // compute outside the lock — lowering dominates, and two threads
+        // racing on the same key just agree on the value
+        let s = self.model.try_predict(op, cfg)?;
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        shard.lock().unwrap().insert(key, s);
+        Ok(s)
+    }
+
+    /// Score a whole batch with one parallel fan-out over indices (configs
+    /// are borrowed, never cloned). Scores come back in candidate order and
+    /// are bit-identical to calling [`CostModel::predict`] per candidate.
+    pub fn try_score_batch(
+        &self,
+        op: &OpSpec,
+        cfgs: &[ScheduleConfig],
+    ) -> Result<Vec<f64>, CostError> {
+        parallel_map_indexed(cfgs.len(), self.threads, |i| self.try_score(op, &cfgs[i]))
+            .into_iter()
+            .collect()
+    }
+
+    /// Infallible batch scoring (panics on extraction failure; searches
+    /// should use [`Self::objective`] + `run_batched` to get typed errors).
+    pub fn score_batch(&self, op: &OpSpec, cfgs: &[ScheduleConfig]) -> Vec<f64> {
+        self.try_score_batch(op, cfgs)
+            .unwrap_or_else(|e| panic!("score_batch({op}): {e}"))
+    }
+
+    /// Bind an operator, yielding the [`BatchObjective`] the searchers
+    /// consume.
+    pub fn objective<'a>(&'a self, op: &'a OpSpec) -> OpObjective<'a> {
+        OpObjective { eval: self, op }
+    }
+
+    pub fn stats(&self) -> EvalStats {
+        EvalStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Number of memoized candidates across all shards.
+    pub fn memo_len(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
+    }
+
+    /// Drop all memoized scores (keeps the stats counters).
+    pub fn clear_memo(&self) {
+        for s in &self.shards {
+            s.lock().unwrap().clear();
+        }
+    }
+}
+
+/// A [`CandidateEvaluator`] bound to one operator — the form the searchers
+/// consume.
+pub struct OpObjective<'a> {
+    eval: &'a CandidateEvaluator,
+    op: &'a OpSpec,
+}
+
+impl BatchObjective for OpObjective<'_> {
+    fn eval_batch(&self, cfgs: &[ScheduleConfig]) -> Result<Vec<f64>, CostError> {
+        self.eval.try_score_batch(self.op, cfgs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::TargetKind;
+    use crate::transform;
+
+    fn sample_cfgs(op: &OpSpec, kind: TargetKind, n: u64) -> Vec<ScheduleConfig> {
+        let space = transform::config_space(op, kind);
+        let n = n.min(space.size());
+        (0..n).map(|i| space.from_index(i * space.size() / n.max(1))).collect()
+    }
+
+    #[test]
+    fn batch_matches_predict_bitwise() {
+        let kind = TargetKind::Graviton2;
+        let cm = CostModel::with_default_coeffs(kind);
+        let ev = CandidateEvaluator::with_threads(cm.clone(), 4);
+        let op = OpSpec::Matmul { m: 48, n: 32, k: 32 };
+        let cfgs = sample_cfgs(&op, kind, 24);
+        let batch = ev.score_batch(&op, &cfgs);
+        for (cfg, s) in cfgs.iter().zip(&batch) {
+            assert_eq!(*s, cm.predict(&op, cfg), "batched score diverged for {cfg:?}");
+        }
+    }
+
+    #[test]
+    fn memo_hits_on_repeat_batches() {
+        let kind = TargetKind::Graviton2;
+        let ev = CandidateEvaluator::with_threads(CostModel::with_default_coeffs(kind), 2);
+        let op = OpSpec::Matmul { m: 32, n: 32, k: 32 };
+        let cfgs = sample_cfgs(&op, kind, 10);
+        let first = ev.score_batch(&op, &cfgs);
+        let after_first = ev.stats();
+        assert_eq!(after_first.hits, 0);
+        assert_eq!(after_first.misses as usize, cfgs.len());
+        assert_eq!(ev.memo_len(), cfgs.len());
+        let second = ev.score_batch(&op, &cfgs);
+        assert_eq!(first, second);
+        let after_second = ev.stats();
+        assert_eq!(after_second.hits as usize, cfgs.len());
+        assert_eq!(after_second.misses, after_first.misses, "repeat batch recomputed");
+    }
+
+    #[test]
+    fn empty_batch_is_empty() {
+        let ev = CandidateEvaluator::new(CostModel::with_default_coeffs(TargetKind::Graviton2));
+        let op = OpSpec::Matmul { m: 8, n: 8, k: 8 };
+        assert!(ev.score_batch(&op, &[]).is_empty());
+    }
+
+    #[test]
+    fn distinct_ops_do_not_collide() {
+        let kind = TargetKind::Graviton2;
+        let ev = CandidateEvaluator::with_threads(CostModel::with_default_coeffs(kind), 1);
+        let a = OpSpec::Matmul { m: 32, n: 32, k: 32 };
+        let b = OpSpec::Matmul { m: 64, n: 32, k: 32 };
+        let cfg = transform::config_space(&a, kind).default_config();
+        let sa = ev.try_score(&a, &cfg).unwrap();
+        let sb = ev.try_score(&b, &cfg).unwrap();
+        assert_ne!(sa, sb, "different shapes memoized to one entry");
+    }
+}

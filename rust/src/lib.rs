@@ -31,7 +31,12 @@
 //!   linear per-architecture cost model.
 //! * [`sim`] — cycle-approximate device simulators (ground truth + the
 //!   "real device" the dynamic baseline must pay to measure on).
-//! * [`search`] — Evolution Strategies (Alg. 4) plus random/grid baselines.
+//! * [`search`] — Evolution Strategies (Alg. 4) plus random/grid baselines,
+//!   all consuming a *batched* objective so whole populations are scored in
+//!   one fan-out.
+//! * [`eval`] — the staged candidate-evaluation pipeline: a
+//!   [`eval::CandidateEvaluator`] that batches and memoizes static scoring,
+//!   plus the persistent content-addressed schedule cache.
 //! * [`autotvm`] — the dynamic-profiling baseline: surrogate model trained
 //!   online from (simulated) device measurements, sequential measure queue.
 //! * [`vendor`] — fixed "vendor library / framework" schedules.
@@ -39,7 +44,9 @@
 //!   ResNet-50, BERT-base shape inventories) and latency aggregation.
 //! * [`coordinator`] — multi-threaded tuning orchestrator with schedule
 //!   cache and both wall-clock and virtual device-clock accounting.
-//! * [`runtime`] — PJRT artifact loading/execution for the e2e example.
+//! * [`runtime`] — PJRT artifact loading/execution for the e2e example
+//!   (feature-gated behind `pjrt`: needs the external `xla`/`anyhow`
+//!   crates, which the offline build environment cannot fetch).
 //! * [`metrics`] — table/figure renderers for the paper's evaluation.
 //! * [`config`] — TOML-backed configuration for targets/search/workloads.
 
@@ -51,7 +58,9 @@ pub mod coordinator;
 pub mod graph;
 pub mod isa;
 pub mod isets;
+pub mod eval;
 pub mod metrics;
+#[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod search;
 pub mod sim;
@@ -60,7 +69,8 @@ pub mod transform;
 pub mod util;
 pub mod vendor;
 
-pub use analysis::cost::{CostModel, FeatureVector};
+pub use analysis::cost::{CostError, CostModel, FeatureVector};
+pub use eval::{CandidateEvaluator, ScheduleCache};
 pub use isa::MicroArch;
 pub use tir::ops::OpSpec;
 pub use transform::space::{ConfigSpace, ScheduleConfig};

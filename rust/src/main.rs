@@ -347,10 +347,16 @@ fn cmd_sweep(flags: &BTreeMap<String, String>) -> Result<(), String> {
     Ok(())
 }
 
+#[cfg(feature = "pjrt")]
 fn cmd_e2e(flags: &BTreeMap<String, String>) -> Result<(), String> {
     let dir = flags
         .get("artifacts")
         .map(std::path::PathBuf::from)
         .unwrap_or_else(tuna::runtime::artifacts_dir);
     tuna::runtime::e2e::run(&dir, 3).map_err(|e| e.to_string())
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn cmd_e2e(_flags: &BTreeMap<String, String>) -> Result<(), String> {
+    Err("this build has no PJRT runtime; rebuild with `--features pjrt`".into())
 }

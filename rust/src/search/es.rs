@@ -8,9 +8,10 @@
 //! `θ ← θ + α·(1/nσ)·Σ Fᵢ εᵢ` with rank-normalized fitness. Every decoded
 //! candidate feeds the running top-k list.
 
-use super::{Objective, SearchResult, TopK};
+use super::{BatchObjective, Objective, PerCandidate, SearchResult, TopK};
+use crate::analysis::cost::CostError;
 use crate::transform::{ConfigSpace, ScheduleConfig};
-use crate::util::{parallel_map, Rng};
+use crate::util::Rng;
 
 /// ES hyperparameters.
 #[derive(Debug, Clone)]
@@ -69,8 +70,22 @@ impl EvolutionStrategies {
         ScheduleConfig { choices }
     }
 
-    /// Run the search.
+    /// Run the search over a per-candidate objective (legacy convenience:
+    /// wraps it in a [`PerCandidate`] batch adapter).
     pub fn run(&self, space: &ConfigSpace, obj: &dyn Objective) -> SearchResult {
+        let batch = PerCandidate { obj, threads: self.params.threads };
+        self.run_batched(space, &batch).expect("per-candidate objective is infallible")
+    }
+
+    /// Run the search over a batched objective: each generation is scored
+    /// with a single `eval_batch` call over the whole population, so the
+    /// objective owns the fan-out (and, for the candidate evaluator, the
+    /// memoization). Typed evaluation failures abort the search cleanly.
+    pub fn run_batched(
+        &self,
+        space: &ConfigSpace,
+        obj: &dyn BatchObjective,
+    ) -> Result<SearchResult, CostError> {
         let p = &self.params;
         let d = space.knobs.len();
         let mut rng = Rng::new(p.seed);
@@ -96,8 +111,8 @@ impl EvolutionStrategies {
                     Self::decode(space, &pt)
                 })
                 .collect();
-            // parallel static evaluation — F_i
-            let scores = parallel_map(cands.clone(), p.threads, |c| obj.eval(&c));
+            // one batched static evaluation per generation — F_i
+            let scores = obj.eval_batch(&cands)?;
             evals += scores.len() as u64;
             for (c, s) in cands.iter().zip(&scores) {
                 top.push(c.clone(), *s);
@@ -120,7 +135,7 @@ impl EvolutionStrategies {
         }
 
         let (best, best_score) = top.best().cloned().expect("ES produced no candidates");
-        SearchResult { best, best_score, top_k: top.items().to_vec(), evaluations: evals }
+        Ok(SearchResult { best, best_score, top_k: top.items().to_vec(), evaluations: evals })
     }
 }
 

@@ -9,8 +9,9 @@ pub mod es;
 
 pub use es::{EsParams, EvolutionStrategies};
 
+use crate::analysis::cost::CostError;
 use crate::transform::{ConfigSpace, ScheduleConfig};
-use crate::util::{parallel_map, Rng};
+use crate::util::{parallel_map_indexed, Rng};
 
 /// Anything that can score a candidate (lower = better). Implemented by the
 /// static cost model (Tuna) and by measurement surrogates (baselines).
@@ -21,6 +22,30 @@ pub trait Objective: Sync {
 impl<F: Fn(&ScheduleConfig) -> f64 + Sync> Objective for F {
     fn eval(&self, cfg: &ScheduleConfig) -> f64 {
         self(cfg)
+    }
+}
+
+/// A *batched* objective: scores a whole population in one call. This is
+/// what the searchers actually consume — one fan-out per generation instead
+/// of one closure dispatch per candidate — and it is where the candidate
+/// evaluator plugs in its memoization and scratch reuse. Scores must be
+/// returned in candidate order. Fallible: a candidate that cannot be
+/// analyzed surfaces as a typed [`CostError`] instead of a panic.
+pub trait BatchObjective: Sync {
+    fn eval_batch(&self, cfgs: &[ScheduleConfig]) -> Result<Vec<f64>, CostError>;
+}
+
+/// Adapter running a per-candidate [`Objective`] as a batch via one
+/// index-space parallel map (no cloning of configs). Infallible by
+/// construction — plain objectives have no typed failure path.
+pub struct PerCandidate<'a> {
+    pub obj: &'a dyn Objective,
+    pub threads: usize,
+}
+
+impl BatchObjective for PerCandidate<'_> {
+    fn eval_batch(&self, cfgs: &[ScheduleConfig]) -> Result<Vec<f64>, CostError> {
+        Ok(parallel_map_indexed(cfgs.len(), self.threads, |i| self.obj.eval(&cfgs[i])))
     }
 }
 
@@ -73,6 +98,37 @@ impl TopK {
     }
 }
 
+/// Shared tail of the sweep searches: one batched evaluation of `cands`,
+/// folded into a top-k list.
+fn sweep_batched(
+    cands: Vec<ScheduleConfig>,
+    obj: &dyn BatchObjective,
+    k: usize,
+) -> Result<SearchResult, CostError> {
+    let n = cands.len() as u64;
+    let scores = obj.eval_batch(&cands)?;
+    let mut top = TopK::new(k.max(1));
+    for (c, s) in cands.into_iter().zip(scores) {
+        top.push(c, s);
+    }
+    let (best, best_score) = top.best().cloned().expect("empty search");
+    Ok(SearchResult { best, best_score, top_k: top.items().to_vec(), evaluations: n })
+}
+
+/// Random search over a batched objective: `n` uniform samples scored in
+/// one fan-out.
+pub fn random_search_batched(
+    space: &ConfigSpace,
+    obj: &dyn BatchObjective,
+    n: u64,
+    k: usize,
+    seed: u64,
+) -> Result<SearchResult, CostError> {
+    let mut rng = Rng::new(seed);
+    let cands: Vec<ScheduleConfig> = (0..n).map(|_| space.random(&mut rng)).collect();
+    sweep_batched(cands, obj, k)
+}
+
 /// Random search: `n` uniform samples, parallel evaluation.
 pub fn random_search(
     space: &ConfigSpace,
@@ -82,15 +138,18 @@ pub fn random_search(
     threads: usize,
     seed: u64,
 ) -> SearchResult {
-    let mut rng = Rng::new(seed);
-    let cands: Vec<ScheduleConfig> = (0..n).map(|_| space.random(&mut rng)).collect();
-    let scores = parallel_map(cands.clone(), threads, |c| obj.eval(&c));
-    let mut top = TopK::new(k.max(1));
-    for (c, s) in cands.into_iter().zip(scores) {
-        top.push(c, s);
-    }
-    let (best, best_score) = top.best().cloned().expect("empty search");
-    SearchResult { best, best_score, top_k: top.items().to_vec(), evaluations: n }
+    let batch = PerCandidate { obj, threads };
+    random_search_batched(space, &batch, n, k, seed).expect("per-candidate objective is infallible")
+}
+
+/// Exhaustive sweep over a batched objective.
+pub fn exhaustive_batched(
+    space: &ConfigSpace,
+    obj: &dyn BatchObjective,
+    k: usize,
+) -> Result<SearchResult, CostError> {
+    let cands: Vec<ScheduleConfig> = (0..space.size()).map(|i| space.from_index(i)).collect();
+    sweep_batched(cands, obj, k)
 }
 
 /// Exhaustive sweep (ground truth for small spaces / figure experiments).
@@ -100,15 +159,8 @@ pub fn exhaustive(
     k: usize,
     threads: usize,
 ) -> SearchResult {
-    let n = space.size();
-    let cands: Vec<ScheduleConfig> = (0..n).map(|i| space.from_index(i)).collect();
-    let scores = parallel_map(cands.clone(), threads, |c| obj.eval(&c));
-    let mut top = TopK::new(k.max(1));
-    for (c, s) in cands.into_iter().zip(scores) {
-        top.push(c, s);
-    }
-    let (best, best_score) = top.best().cloned().expect("empty space");
-    SearchResult { best, best_score, top_k: top.items().to_vec(), evaluations: n }
+    let batch = PerCandidate { obj, threads };
+    exhaustive_batched(space, &batch, k).expect("per-candidate objective is infallible")
 }
 
 #[cfg(test)]

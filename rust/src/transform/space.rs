@@ -127,6 +127,34 @@ impl ConfigSpace {
         &k.values[cfg.choices[i]]
     }
 
+    /// Stable structural fingerprint of the space: knob names, kinds and
+    /// candidate values, hashed with process-independent FNV-1a. Two spaces
+    /// with the same fingerprint accept the same configs with the same
+    /// meaning, which is what lets persisted schedule-cache entries survive
+    /// template changes being detected (a template edit that adds, removes
+    /// or reorders knobs changes the fingerprint and invalidates the entry).
+    pub fn fingerprint(&self) -> u64 {
+        let mut h = crate::util::hash::Fnv1a::new();
+        h.write_u64(self.knobs.len() as u64);
+        for k in &self.knobs {
+            h.write_str(&k.name);
+            h.write_u64(k.values.len() as u64);
+            for v in &k.values {
+                match v {
+                    KnobValue::Int(i) => {
+                        h.write(&[1]);
+                        h.write_i64(*i);
+                    }
+                    KnobValue::Tag(t) => {
+                        h.write(&[2]);
+                        h.write_str(t);
+                    }
+                }
+            }
+        }
+        h.finish()
+    }
+
     /// Is the config structurally valid for this space?
     pub fn contains(&self, cfg: &ScheduleConfig) -> bool {
         cfg.choices.len() == self.knobs.len()
@@ -186,6 +214,22 @@ mod tests {
         assert_eq!(s.get_int(&c, "tile_m"), 2);
         assert_eq!(s.get_int(&c, "tile_n"), 2);
         assert_eq!(s.get_tag(&c, "order"), "mnk");
+    }
+
+    #[test]
+    fn fingerprint_sensitive_to_structure() {
+        let base = space();
+        assert_eq!(base.fingerprint(), space().fingerprint());
+        let renamed = ConfigSpace::new()
+            .int_knob("tile_m2", vec![1, 2, 4, 8])
+            .int_knob("tile_n", vec![1, 2, 4])
+            .tag_knob("order", &["mnk", "mkn"]);
+        assert_ne!(base.fingerprint(), renamed.fingerprint());
+        let revalued = ConfigSpace::new()
+            .int_knob("tile_m", vec![1, 2, 4, 16])
+            .int_knob("tile_n", vec![1, 2, 4])
+            .tag_knob("order", &["mnk", "mkn"]);
+        assert_ne!(base.fingerprint(), revalued.fingerprint());
     }
 
     #[test]

@@ -1,12 +1,13 @@
 //! Small self-contained utilities: deterministic RNG, math helpers and a
 //! virtual clock used for device-time accounting.
 
+pub mod hash;
 pub mod json;
 pub mod pool;
 pub mod rng;
 pub mod stats;
 
-pub use pool::parallel_map;
+pub use pool::{parallel_map, parallel_map_indexed};
 pub use rng::Rng;
 
 /// Round `x` up to the next multiple of `m` (m > 0).

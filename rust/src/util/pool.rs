@@ -47,6 +47,59 @@ where
         .collect()
 }
 
+/// Parallel map over an index space: calls `f(i)` for every `i in 0..n`
+/// and returns the results in index order.
+///
+/// Unlike [`parallel_map`] this never moves or clones the items being
+/// processed (callers capture a slice and index into it), and each worker
+/// accumulates into one reusable local buffer instead of taking a mutex per
+/// item — the per-thread scratch that lets the candidate evaluator score
+/// whole populations without a fresh allocation per candidate.
+pub fn parallel_map_indexed<R, F>(n: usize, threads: usize, f: F) -> Vec<R>
+where
+    R: Send,
+    F: Fn(usize) -> R + Sync,
+{
+    if n == 0 {
+        return Vec::new();
+    }
+    let threads = threads.max(1).min(n);
+    if threads == 1 {
+        return (0..n).map(f).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let mut parts: Vec<Vec<(usize, R)>> = Vec::with_capacity(threads);
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..threads)
+            .map(|_| {
+                s.spawn(|| {
+                    // worker-local scratch: one buffer for this thread's
+                    // whole share of the batch
+                    let mut local: Vec<(usize, R)> = Vec::with_capacity(n / threads + 1);
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= n {
+                            break;
+                        }
+                        local.push((i, f(i)));
+                    }
+                    local
+                })
+            })
+            .collect();
+        for h in handles {
+            parts.push(h.join().expect("parallel_map_indexed worker panicked"));
+        }
+    });
+    let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    for part in parts {
+        for (i, r) in part {
+            out[i] = Some(r);
+        }
+    }
+    out.into_iter().map(|r| r.expect("every index produced")).collect()
+}
+
 /// Number of worker threads to use (host parallelism).
 pub fn default_threads() -> usize {
     std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1)
@@ -81,5 +134,20 @@ mod tests {
     fn more_threads_than_items() {
         let ys = parallel_map(vec![5], 16, |x| x * 2);
         assert_eq!(ys, vec![10]);
+    }
+
+    #[test]
+    fn indexed_matches_sequential() {
+        let xs: Vec<i64> = (0..257).map(|i| i * 3 + 1).collect();
+        let seq: Vec<i64> = xs.iter().map(|x| x * x).collect();
+        let par = parallel_map_indexed(xs.len(), 4, |i| xs[i] * xs[i]);
+        assert_eq!(par, seq);
+    }
+
+    #[test]
+    fn indexed_empty_and_single() {
+        let empty: Vec<u8> = parallel_map_indexed(0, 4, |_| 0u8);
+        assert!(empty.is_empty());
+        assert_eq!(parallel_map_indexed(3, 1, |i| i + 10), vec![10, 11, 12]);
     }
 }

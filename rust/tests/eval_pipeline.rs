@@ -1,0 +1,212 @@
+//! Integration tests for the staged candidate-evaluation pipeline:
+//! batched-vs-sequential score equivalence on CPU and GPU targets, the
+//! schedule cache's JSON round trip and cross-process reuse, cache-hit
+//! behaviour of repeated `tune_network` runs, and typed-error propagation
+//! through the batched search instead of mid-search panics.
+
+use tuna::analysis::cost::{extract_gpu, CostError};
+use tuna::coordinator::{Coordinator, Strategy};
+use tuna::eval::{CachedSchedule, CandidateEvaluator, ScheduleCache};
+use tuna::graph::{Layer, Network};
+use tuna::isa::march::tesla_v100;
+use tuna::isa::{AsmProgram, TargetKind};
+use tuna::search::{BatchObjective, EsParams, EvolutionStrategies};
+use tuna::tir::ops::OpSpec;
+use tuna::transform::{self, ScheduleConfig};
+use tuna::CostModel;
+
+fn tiny_es() -> EsParams {
+    EsParams { population: 12, iterations: 6, k: 10, seed: 5, ..Default::default() }
+}
+
+fn sample_cfgs(op: &OpSpec, kind: TargetKind, n: u64) -> Vec<ScheduleConfig> {
+    let space = transform::config_space(op, kind);
+    let n = n.min(space.size()).max(1);
+    (0..n).map(|i| space.from_index(i * space.size() / n)).collect()
+}
+
+/// Batched scores must be bit-identical to per-candidate
+/// `CostModel::predict` on a CPU target — the acceptance bar for routing
+/// every search through the evaluator.
+#[test]
+fn batched_scores_bit_identical_cpu() {
+    let kind = TargetKind::Graviton2;
+    let cm = CostModel::with_default_coeffs(kind);
+    let ev = CandidateEvaluator::new(cm.clone());
+    let op = OpSpec::Conv2d { n: 1, cin: 8, h: 14, w: 14, cout: 16, kh: 3, kw: 3, stride: 1, pad: 1 };
+    let cfgs = sample_cfgs(&op, kind, 32);
+    let batched = ev.score_batch(&op, &cfgs);
+    let sequential: Vec<f64> = cfgs.iter().map(|c| cm.predict(&op, c)).collect();
+    assert_eq!(batched, sequential, "batched CPU scores diverged from predict");
+    // memoized second pass returns the same bits
+    assert_eq!(ev.score_batch(&op, &cfgs), sequential);
+    assert!(ev.stats().hits >= cfgs.len() as u64);
+}
+
+/// Same equivalence on a GPU target (exercises the `extract_gpu` Result
+/// path end to end).
+#[test]
+fn batched_scores_bit_identical_gpu() {
+    let kind = TargetKind::TeslaV100;
+    let cm = CostModel::with_default_coeffs(kind);
+    let ev = CandidateEvaluator::new(cm.clone());
+    let op = OpSpec::Matmul { m: 128, n: 128, k: 64 };
+    let cfgs = sample_cfgs(&op, kind, 32);
+    let batched = ev.score_batch(&op, &cfgs);
+    let sequential: Vec<f64> = cfgs.iter().map(|c| cm.predict(&op, c)).collect();
+    assert_eq!(batched, sequential, "batched GPU scores diverged from predict");
+}
+
+/// A GPU program with no launch metadata is a typed error, not a panic.
+#[test]
+fn missing_launch_is_typed_error() {
+    let kind = TargetKind::TeslaV100;
+    let op = OpSpec::Matmul { m: 64, n: 64, k: 32 };
+    let space = transform::config_space(&op, kind);
+    let f = transform::apply(&op, kind, &space.default_config());
+    let gpu = tesla_v100();
+    let bare = AsmProgram::new(); // never lowered: no launch config
+    match extract_gpu(&f, &bare, &gpu) {
+        Err(CostError::MissingLaunch { func }) => assert_eq!(func, f.name),
+        other => panic!("expected MissingLaunch, got {other:?}"),
+    }
+}
+
+/// Typed evaluation failures propagate out of the batched ES search
+/// instead of crashing the thread pool.
+#[test]
+fn search_propagates_eval_errors() {
+    struct Failing;
+    impl BatchObjective for Failing {
+        fn eval_batch(&self, _cfgs: &[ScheduleConfig]) -> Result<Vec<f64>, CostError> {
+            Err(CostError::MissingLaunch { func: "synthetic".into() })
+        }
+    }
+    let op = OpSpec::Matmul { m: 32, n: 32, k: 32 };
+    let space = transform::config_space(&op, TargetKind::Graviton2);
+    let r = EvolutionStrategies::new(tiny_es()).run_batched(&space, &Failing);
+    assert_eq!(r.unwrap_err(), CostError::MissingLaunch { func: "synthetic".into() });
+}
+
+/// Schedule-cache JSON round trip through a real tuning outcome.
+#[test]
+fn schedule_cache_roundtrips_through_json() {
+    let kind = TargetKind::Graviton2;
+    let c = Coordinator::new_uncalibrated(kind);
+    let op = OpSpec::Matmul { m: 48, n: 48, k: 24 };
+    let rep = c.tune_op(&op, &Strategy::TunaStatic(tiny_es()));
+
+    let space = transform::config_space(&op, kind);
+    let sig = Strategy::TunaStatic(tiny_es()).cache_sig().unwrap();
+    let key = ScheduleCache::key(kind, &op, &space, &sig);
+    let mut cache = ScheduleCache::new();
+    cache.insert(
+        key.clone(),
+        CachedSchedule {
+            chosen: rep.chosen.clone(),
+            best_score: rep.top_k[0].1,
+            top_k: rep.top_k.clone(),
+            evaluations: rep.evaluations,
+        },
+    );
+
+    let path = std::env::temp_dir().join(format!("tuna_cache_rt_{}.json", std::process::id()));
+    cache.save(&path).unwrap();
+    let back = ScheduleCache::load(&path).unwrap();
+    let _ = std::fs::remove_file(&path);
+
+    assert_eq!(back.len(), 1);
+    let entry = back.peek(&key).expect("key survived the round trip");
+    assert_eq!(entry.chosen, rep.chosen);
+    assert_eq!(entry.top_k, rep.top_k, "top-k scores must round-trip bit-exactly");
+    assert_eq!(entry.evaluations, rep.evaluations);
+}
+
+fn toy_net() -> Network {
+    Network {
+        name: "cache_toy",
+        display: "CacheToy",
+        layers: vec![
+            Layer::single(OpSpec::Matmul { m: 64, n: 64, k: 64 }, 2),
+            Layer::single(OpSpec::Matmul { m: 64, n: 32, k: 64 }, 1),
+            Layer::single(
+                OpSpec::DepthwiseConv2d { n: 1, c: 16, h: 14, w: 14, kh: 3, kw: 3, stride: 1, pad: 1 },
+                1,
+            ),
+        ],
+    }
+}
+
+/// Second `tune_network` on the same coordinator performs zero searches:
+/// every task is served by the schedule cache, identically and much
+/// faster.
+#[test]
+fn second_tune_network_performs_zero_searches() {
+    let c = Coordinator::new_uncalibrated(TargetKind::Graviton2);
+    let net = toy_net();
+    let strategy = Strategy::TunaStatic(tiny_es());
+
+    let first = c.tune_network(&net, &strategy);
+    let searches_after_first = c.searches_performed();
+    assert_eq!(searches_after_first, net.unique_tasks().len() as u64);
+    assert_eq!(first.cache_hits, 0);
+
+    let second = c.tune_network(&net, &strategy);
+    assert_eq!(c.searches_performed(), searches_after_first, "second run searched");
+    assert_eq!(second.cache_hits, net.unique_tasks().len() as u64);
+    assert_eq!(second.latency_s, first.latency_s, "cached deployment diverged");
+    for (key, rep) in &second.per_op {
+        assert!(rep.cache_hit, "{key} missed the cache");
+        assert_eq!(rep.evaluations, 0);
+        assert_eq!(rep.chosen, first.per_op[key].chosen);
+    }
+    // the cached pass skips all ES generations, so it is far faster; keep
+    // the CI assertion conservative (the bench reports the real margin,
+    // typically orders of magnitude)
+    assert!(
+        second.wall_s < first.wall_s / 2.0,
+        "cached re-run not faster: {} vs {}",
+        second.wall_s,
+        first.wall_s
+    );
+}
+
+/// The persisted cache carries schedules across coordinators — the
+/// cross-process reuse path (`save_cache` in one process, `load_cache` in
+/// the next, zero searches after).
+#[test]
+fn persisted_cache_skips_searches_across_coordinators() {
+    let net = toy_net();
+    let strategy = Strategy::TunaStatic(tiny_es());
+    let path = std::env::temp_dir().join(format!("tuna_cache_xp_{}.json", std::process::id()));
+
+    let first = Coordinator::new_uncalibrated(TargetKind::Graviton2);
+    let rep1 = first.tune_network(&net, &strategy);
+    first.save_cache(&path).unwrap();
+    assert!(first.searches_performed() > 0);
+
+    let second = Coordinator::new_uncalibrated(TargetKind::Graviton2);
+    let resident = second.load_cache(&path).unwrap();
+    let _ = std::fs::remove_file(&path);
+    assert_eq!(resident, net.unique_tasks().len());
+    let rep2 = second.tune_network(&net, &strategy);
+    assert_eq!(second.searches_performed(), 0, "loaded cache did not serve the tasks");
+    assert_eq!(rep2.cache_hits, net.unique_tasks().len() as u64);
+    assert_eq!(rep2.latency_s, rep1.latency_s);
+    for (key, rep) in &rep2.per_op {
+        assert_eq!(rep.chosen, rep1.per_op[key].chosen, "{key} deployed a different schedule");
+    }
+}
+
+/// Different targets never share cache entries even for the same op.
+#[test]
+fn cache_keys_isolate_targets() {
+    let op = OpSpec::Matmul { m: 32, n: 32, k: 32 };
+    let sig = "es_x";
+    let g = transform::config_space(&op, TargetKind::Graviton2);
+    let x = transform::config_space(&op, TargetKind::XeonPlatinum8124M);
+    assert_ne!(
+        ScheduleCache::key(TargetKind::Graviton2, &op, &g, sig),
+        ScheduleCache::key(TargetKind::XeonPlatinum8124M, &op, &x, sig)
+    );
+}

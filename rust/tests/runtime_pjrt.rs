@@ -2,7 +2,9 @@
 //!
 //! Requires `make artifacts` (the Makefile's `test` target runs it first).
 //! If the artifacts directory is absent the tests skip with a message so
-//! `cargo test` works from a clean checkout too.
+//! `cargo test` works from a clean checkout too. The whole file is gated on
+//! the `pjrt` feature — without it the crate has no runtime module.
+#![cfg(feature = "pjrt")]
 
 use std::path::PathBuf;
 
