@@ -46,7 +46,7 @@ fn main() {
     // transplant Graviton2 coefficients onto the A53 feature extraction
     let transplanted = tuna::analysis::CostModel::with_coeffs(
         TargetKind::CortexA53,
-        g2_model.coeffs.clone(),
+        g2_model.coeffs().to_vec(),
     );
     let space = tuna::transform::config_space(&op, TargetKind::CortexA53);
     let mut native = Vec::new();

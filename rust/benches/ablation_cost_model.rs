@@ -6,34 +6,44 @@
 //! latency-table-default coefficients, and ES vs random vs exhaustive
 //! search quality under the same evaluation budget.
 //!
+//! Every coefficient variant is scored from **one** feature pass: the
+//! candidates are lowered and analyzed once into the evaluator's memoized
+//! feature store, and each variant is then a batch of dot products
+//! (`score_batch_with`). The bench reports the measured gap — re-scoring a
+//! variant is orders of magnitude cheaper than the feature pass it reuses.
+//!
 //! ```bash
 //! cargo bench --bench ablation_cost_model
 //! ```
 
 mod common;
 
+use std::time::Instant;
+
 use tuna::analysis::cost::CPU_FEATURES;
 use tuna::analysis::CostModel;
 use tuna::coordinator::calibrate;
+use tuna::eval::CandidateEvaluator;
 use tuna::isa::TargetKind;
 use tuna::search::{self, EsParams, EvolutionStrategies};
 use tuna::sim::Device;
 use tuna::tir::ops::OpSpec;
+use tuna::transform::ScheduleConfig;
 use tuna::util::stats::spearman;
 
-fn rank_corr(cm: &CostModel, device: &Device, ops: &[OpSpec], n_cfg: u64) -> f64 {
-    let mut rhos = Vec::new();
-    for op in ops {
-        let space = tuna::transform::config_space(op, cm.kind);
-        let mut preds = Vec::new();
-        let mut truths = Vec::new();
-        for i in 0..space.size().min(n_cfg) {
-            let cfg = space.from_index(i * space.size() / space.size().min(n_cfg));
-            preds.push(cm.predict(op, &cfg));
-            truths.push(device.run(op, &cfg).seconds);
-        }
-        rhos.push(spearman(&preds, &truths));
-    }
+/// Held-out candidate grid + device ground truth for one operator.
+struct Task {
+    op: OpSpec,
+    cfgs: Vec<ScheduleConfig>,
+    truths: Vec<f64>,
+}
+
+fn mean_rank_corr(tasks: &[Task], per_op_scores: &[Vec<f64>]) -> f64 {
+    let rhos: Vec<f64> = tasks
+        .iter()
+        .zip(per_op_scores)
+        .map(|(t, scores)| spearman(scores, &t.truths))
+        .collect();
     rhos.iter().sum::<f64>() / rhos.len() as f64
 }
 
@@ -46,40 +56,87 @@ fn main() {
         OpSpec::DepthwiseConv2d { n: 1, c: 48, h: 28, w: 28, kh: 3, kw: 3, stride: 1, pad: 1 },
     ];
 
+    // one evaluator holds the calibrated scorer and the shared feature store
+    let ev = CandidateEvaluator::new(calibrate::calibrated_model(kind));
+    let base_coeffs = ev.coeffs();
+
+    let tasks: Vec<Task> = ops
+        .iter()
+        .map(|&op| {
+            let space = tuna::transform::config_space(&op, kind);
+            let n = space.size().min(32);
+            let cfgs: Vec<ScheduleConfig> =
+                (0..n).map(|i| space.from_index(i * space.size() / n)).collect();
+            let truths = cfgs.iter().map(|c| device.run(&op, c).seconds).collect();
+            Task { op, cfgs, truths }
+        })
+        .collect();
+
+    // ---- stage 1, exactly once: lower + analyze every candidate ----
+    let t0 = Instant::now();
+    let base_scores: Vec<Vec<f64>> =
+        tasks.iter().map(|t| ev.score_batch(&t.op, &t.cfgs)).collect();
+    let feature_pass_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let lowered = ev.stats().misses;
+
     println!("## Ablation: cost-model features ({})\n", kind.display_name());
-    let full = calibrate::calibrated_model(kind);
-    let base_rho = rank_corr(&full, &device, &ops, 32);
+    let base_rho = mean_rank_corr(&tasks, &base_scores);
     println!("{:<28} {:>10}", "variant", "rank-corr");
     println!("{:<28} {:>10.3}", "calibrated (all features)", base_rho);
 
-    let defaults = CostModel::with_default_coeffs(kind);
-    println!(
-        "{:<28} {:>10.3}",
-        "latency-table defaults",
-        rank_corr(&defaults, &device, &ops, 32)
-    );
-
+    // every variant below is pure stage-2 work over the same features
+    let mut variants: Vec<(String, Vec<f64>)> = vec![(
+        "latency-table defaults".into(),
+        CostModel::with_default_coeffs(kind).coeffs().to_vec(),
+    )];
     for (i, name) in CPU_FEATURES.iter().enumerate() {
-        let mut ablated = full.clone();
-        ablated.coeffs[i] = 0.0;
-        let rho = rank_corr(&ablated, &device, &ops, 32);
-        println!("{:<28} {:>10.3}  (delta {:+.3})", format!("- {name}"), rho, rho - base_rho);
+        let mut coeffs = base_coeffs.clone();
+        coeffs[i] = 0.0;
+        variants.push((format!("- {name}"), coeffs));
     }
+
+    let t1 = Instant::now();
+    let variant_scores: Vec<Vec<Vec<f64>>> = variants
+        .iter()
+        .map(|(_, coeffs)| {
+            tasks.iter().map(|t| ev.score_batch_with(coeffs, &t.op, &t.cfgs)).collect()
+        })
+        .collect();
+    let rescore_ms = t1.elapsed().as_secs_f64() * 1e3;
+    assert_eq!(ev.stats().misses, lowered, "variant scoring re-lowered candidates");
+
+    for ((name, _), scores) in variants.iter().zip(&variant_scores) {
+        let rho = mean_rank_corr(tasks.as_slice(), scores);
+        println!("{:<28} {:>10.3}  (delta {:+.3})", name, rho, rho - base_rho);
+    }
+
+    let per_variant_ms = (rescore_ms / variants.len() as f64).max(1e-9);
+    println!(
+        "\nfeature pass (lower + analyze, {lowered} candidates): {feature_pass_ms:>10.2} ms"
+    );
+    println!(
+        "re-score per coefficient variant (memoized features):  {per_variant_ms:>10.4} ms",
+    );
+    println!(
+        "  -> {:.0}x cheaper than the feature pass ({} variants in {rescore_ms:.3} ms)",
+        feature_pass_ms / per_variant_ms,
+        variants.len(),
+    );
 
     // ---- search-algorithm ablation at equal evaluation budget ----
     println!("\n## Ablation: search algorithm (budget = 240 static evals)\n");
-    let op = ops[1];
+    let op = tasks[1].op;
     let space = tuna::transform::config_space(&op, kind);
-    let cm = full.clone();
-    let obj = move |cfg: &tuna::transform::ScheduleConfig| cm.predict(&op, cfg);
+    let obj = ev.objective(&op);
     let es = EvolutionStrategies::new(EsParams {
         population: 24,
         iterations: 10,
         ..Default::default()
     })
-    .run(&space, &obj);
-    let rnd = search::random_search(&space, &obj, 240, 10, 1, 7);
-    let exh = search::exhaustive(&space, &obj, 10, tuna::util::pool::default_threads());
+    .run_batched(&space, &obj)
+    .expect("es search");
+    let rnd = search::random_search_batched(&space, &obj, 240, 10, 7).expect("random search");
+    let exh = search::exhaustive_batched(&space, &obj, 10).expect("exhaustive sweep");
     println!("{:<28} {:>14} {:>12}", "algorithm", "best score", "measured ms");
     for (name, r) in [("evolution strategies", &es), ("random search", &rnd), ("exhaustive", &exh)]
     {

@@ -1,11 +1,27 @@
-//! The linear hardware cost model: `score = a₀f₀ + a₁f₁ + … + aₙfₙ`.
+//! The two-stage linear hardware cost model: `score = a₀f₀ + a₁f₁ + … + aₙfₙ`.
 //!
-//! Features come from the joint IR/assembly analyses in this module; the
-//! coefficients are per-architecture, derived from instruction latency
-//! tables and refined by NNLS against microbenchmark profiles (the paper's
-//! "hardware instruction latency and empirical profiling data"). The model
-//! predicts *relative* performance — its job is to rank the candidates of
-//! a schedule search, not to forecast wall-clock.
+//! Scoring a candidate has two stages with wildly different costs, and this
+//! module keeps them explicit:
+//!
+//! 1. **feature extraction** ([`FeatureExtractor`]) — schedule → lowered
+//!    assembly → the joint IR/assembly analyses in this module. This is the
+//!    expensive stage (micro- to milliseconds per candidate) and depends
+//!    only on the target, never on the model's coefficients;
+//! 2. **linear scoring** ([`LinearScorer`]) — the dot product with the
+//!    per-architecture coefficients. Nanoseconds, and the *only* stage that
+//!    changes under calibration, ablation, or what-if coefficient sweeps.
+//!
+//! The coefficients are derived from instruction latency tables and refined
+//! by NNLS against microbenchmark profiles (the paper's "hardware
+//! instruction latency and empirical profiling data"). The model predicts
+//! *relative* performance — its job is to rank the candidates of a schedule
+//! search, not to forecast wall-clock.
+//!
+//! [`CostModel`] is the thin composition of the two stages and keeps the
+//! historical single-call API (`predict` = extract + score, bit-identical
+//! to the staged path). The candidate evaluator in [`crate::eval`] exploits
+//! the split directly: it memoizes stage-1 feature vectors so stage 2 can
+//! be re-run under fresh coefficients without re-lowering anything.
 
 use super::{cache, gpu_ptx, gpu_tlp, ilp, loop_map, simd_count};
 use crate::codegen;
@@ -13,7 +29,6 @@ use crate::isa::march::{GpuArch, Target};
 use crate::isa::{AsmProgram, MicroArch, TargetKind};
 use crate::tir::{ops::OpSpec, TirFunc};
 use crate::transform::{self, ScheduleConfig};
-
 
 /// CPU feature names (order fixed — coefficients index into it).
 pub const CPU_FEATURES: [&str; 7] = [
@@ -60,7 +75,7 @@ impl std::fmt::Display for CostError {
 impl std::error::Error for CostError {}
 
 /// A named feature vector.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct FeatureVector {
     pub values: Vec<f64>,
 }
@@ -126,40 +141,35 @@ pub fn extract_gpu(
     })
 }
 
-/// The per-architecture linear model.
+/// Stage 1: lowering + analysis. Owns the target description and nothing
+/// else — feature vectors depend only on `(op, config, target)`, so one
+/// extractor serves every coefficient vector anyone will ever score with.
 #[derive(Debug, Clone)]
-pub struct CostModel {
+pub struct FeatureExtractor {
     pub kind: TargetKind,
     target: Target,
-    pub coeffs: Vec<f64>,
 }
 
-impl CostModel {
-    /// Model with latency-table-derived default coefficients (usable
-    /// before calibration; calibration replaces them).
-    pub fn with_default_coeffs(kind: TargetKind) -> Self {
-        let target = kind.build();
-        let coeffs = default_coeffs(&target);
-        CostModel { kind, target, coeffs }
-    }
-
-    /// Model with explicit (calibrated) coefficients.
-    pub fn with_coeffs(kind: TargetKind, coeffs: Vec<f64>) -> Self {
-        CostModel { kind, target: kind.build(), coeffs }
+impl FeatureExtractor {
+    pub fn new(kind: TargetKind) -> Self {
+        FeatureExtractor { kind, target: kind.build() }
     }
 
     pub fn target(&self) -> &Target {
         &self.target
     }
 
-    /// `score = Σ aᵢ·fᵢ` — lower is better (pseudo-cycles).
-    pub fn score(&self, fv: &FeatureVector) -> f64 {
-        self.coeffs.iter().zip(&fv.values).map(|(a, f)| a * f).sum()
+    /// Feature dimensionality for this target family.
+    pub fn dim(&self) -> usize {
+        match self.target {
+            Target::Cpu(_) => CPU_FEATURES.len(),
+            Target::Gpu(_) => GPU_FEATURES.len(),
+        }
     }
 
     /// Lower a (op, config) and extract its features, surfacing extraction
-    /// failures as a typed error. This is the path the candidate evaluator
-    /// routes through.
+    /// failures as a typed error. This is the expensive stage — the
+    /// candidate evaluator memoizes its results.
     pub fn try_features(
         &self,
         op: &OpSpec,
@@ -182,15 +192,41 @@ impl CostModel {
         self.try_features(op, cfg)
             .unwrap_or_else(|e| panic!("feature extraction failed for {op}: {e}"))
     }
+}
 
-    /// End-to-end static prediction for one candidate, typed-error form.
-    pub fn try_predict(&self, op: &OpSpec, cfg: &ScheduleConfig) -> Result<f64, CostError> {
-        Ok(self.score(&self.try_features(op, cfg)?))
+/// Stage 2: the linear model proper. Owns the coefficients and the fitting
+/// logic — swapping in a new `LinearScorer` re-ranks already-extracted
+/// features without touching stage 1.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LinearScorer {
+    coeffs: Vec<f64>,
+}
+
+impl LinearScorer {
+    pub fn new(coeffs: Vec<f64>) -> Self {
+        LinearScorer { coeffs }
     }
 
-    /// End-to-end static prediction for one schedule candidate.
-    pub fn predict(&self, op: &OpSpec, cfg: &ScheduleConfig) -> f64 {
-        self.score(&self.features(op, cfg))
+    /// Latency-table-derived default coefficients for `target` (usable
+    /// before calibration; calibration replaces them).
+    pub fn default_for(target: &Target) -> Self {
+        LinearScorer { coeffs: default_coeffs(target) }
+    }
+
+    pub fn coeffs(&self) -> &[f64] {
+        &self.coeffs
+    }
+
+    /// `score = Σ aᵢ·fᵢ` — lower is better (pseudo-cycles).
+    pub fn score(&self, fv: &FeatureVector) -> f64 {
+        Self::score_with(&self.coeffs, fv)
+    }
+
+    /// The same dot product under borrowed coefficients — the multi-model
+    /// path (`score_batch_with`) scores many coefficient vectors over one
+    /// set of features without constructing scorers.
+    pub fn score_with(coeffs: &[f64], fv: &FeatureVector) -> f64 {
+        coeffs.iter().zip(&fv.values).map(|(a, f)| a * f).sum()
     }
 
     /// Fit coefficients by non-negative least squares against measured
@@ -199,10 +235,100 @@ impl CostModel {
         let x: Vec<Vec<f64>> = samples.iter().map(|(f, _)| f.values.clone()).collect();
         let y: Vec<f64> = samples.iter().map(|(_, c)| *c).collect();
         let w = crate::util::stats::nnls_fit(&x, &y, 1e-3, 400);
-        // guard: a degenerate fit (all zeros) keeps the defaults
+        // guard: a degenerate fit (all zeros) keeps the previous coefficients
         if w.iter().any(|&c| c > 0.0) {
             self.coeffs = w;
         }
+    }
+}
+
+/// The per-architecture linear model: stage 1 + stage 2 composed behind
+/// the historical one-call API. `predict` is bit-identical to running the
+/// stages by hand.
+#[derive(Debug, Clone)]
+pub struct CostModel {
+    extractor: FeatureExtractor,
+    scorer: LinearScorer,
+}
+
+impl CostModel {
+    /// Model with latency-table-derived default coefficients (usable
+    /// before calibration; calibration replaces them).
+    pub fn with_default_coeffs(kind: TargetKind) -> Self {
+        let extractor = FeatureExtractor::new(kind);
+        let scorer = LinearScorer::default_for(extractor.target());
+        CostModel { extractor, scorer }
+    }
+
+    /// Model with explicit (calibrated) coefficients.
+    pub fn with_coeffs(kind: TargetKind, coeffs: Vec<f64>) -> Self {
+        CostModel { extractor: FeatureExtractor::new(kind), scorer: LinearScorer::new(coeffs) }
+    }
+
+    /// Recompose from previously split stages.
+    pub fn from_parts(extractor: FeatureExtractor, scorer: LinearScorer) -> Self {
+        CostModel { extractor, scorer }
+    }
+
+    /// Split into the two stages (the candidate evaluator holds them
+    /// separately so coefficients can change under a shared feature memo).
+    pub fn into_parts(self) -> (FeatureExtractor, LinearScorer) {
+        (self.extractor, self.scorer)
+    }
+
+    pub fn kind(&self) -> TargetKind {
+        self.extractor.kind
+    }
+
+    pub fn target(&self) -> &Target {
+        self.extractor.target()
+    }
+
+    pub fn extractor(&self) -> &FeatureExtractor {
+        &self.extractor
+    }
+
+    pub fn scorer(&self) -> &LinearScorer {
+        &self.scorer
+    }
+
+    pub fn coeffs(&self) -> &[f64] {
+        self.scorer.coeffs()
+    }
+
+    /// `score = Σ aᵢ·fᵢ` — lower is better (pseudo-cycles).
+    pub fn score(&self, fv: &FeatureVector) -> f64 {
+        self.scorer.score(fv)
+    }
+
+    /// Stage 1, typed-error form — see [`FeatureExtractor::try_features`].
+    pub fn try_features(
+        &self,
+        op: &OpSpec,
+        cfg: &ScheduleConfig,
+    ) -> Result<FeatureVector, CostError> {
+        self.extractor.try_features(op, cfg)
+    }
+
+    /// Stage 1, panicking form — see [`FeatureExtractor::features`].
+    pub fn features(&self, op: &OpSpec, cfg: &ScheduleConfig) -> FeatureVector {
+        self.extractor.features(op, cfg)
+    }
+
+    /// End-to-end static prediction for one candidate, typed-error form.
+    pub fn try_predict(&self, op: &OpSpec, cfg: &ScheduleConfig) -> Result<f64, CostError> {
+        Ok(self.scorer.score(&self.extractor.try_features(op, cfg)?))
+    }
+
+    /// End-to-end static prediction for one schedule candidate.
+    pub fn predict(&self, op: &OpSpec, cfg: &ScheduleConfig) -> f64 {
+        self.scorer.score(&self.extractor.features(op, cfg))
+    }
+
+    /// Fit coefficients by non-negative least squares against measured
+    /// latencies (in cycles) of calibration samples.
+    pub fn calibrate(&mut self, samples: &[(FeatureVector, f64)]) {
+        self.scorer.calibrate(samples);
     }
 }
 
@@ -237,9 +363,10 @@ mod tests {
     fn cpu_features_have_fixed_dim() {
         let cm = CostModel::with_default_coeffs(TargetKind::XeonPlatinum8124M);
         let op = OpSpec::Matmul { m: 64, n: 64, k: 64 };
-        let space = transform::config_space(&op, cm.kind);
+        let space = transform::config_space(&op, cm.kind());
         let fv = cm.features(&op, &space.default_config());
         assert_eq!(fv.dim(), CPU_FEATURES.len());
+        assert_eq!(fv.dim(), cm.extractor().dim());
         assert!(fv.values.iter().all(|v| v.is_finite() && *v >= 0.0));
     }
 
@@ -247,9 +374,10 @@ mod tests {
     fn gpu_features_have_fixed_dim() {
         let cm = CostModel::with_default_coeffs(TargetKind::TeslaV100);
         let op = OpSpec::Matmul { m: 128, n: 128, k: 64 };
-        let space = transform::config_space(&op, cm.kind);
+        let space = transform::config_space(&op, cm.kind());
         let fv = cm.features(&op, &space.default_config());
         assert_eq!(fv.dim(), GPU_FEATURES.len());
+        assert_eq!(fv.dim(), cm.extractor().dim());
         assert!(fv.values.iter().all(|v| v.is_finite() && *v >= 0.0));
     }
 
@@ -257,7 +385,7 @@ mod tests {
     fn score_positive_and_discriminative() {
         let cm = CostModel::with_default_coeffs(TargetKind::Graviton2);
         let op = OpSpec::Matmul { m: 128, n: 128, k: 128 };
-        let space = transform::config_space(&op, cm.kind);
+        let space = transform::config_space(&op, cm.kind());
         let mut scores = Vec::new();
         for idx in 0..space.size().min(64) {
             scores.push(cm.predict(&op, &space.from_index(idx)));
@@ -268,12 +396,37 @@ mod tests {
         assert!(max / min > 2.0, "model cannot discriminate: {min}..{max}");
     }
 
+    /// The composition contract: running the stages by hand produces the
+    /// same bits as the one-call API.
+    #[test]
+    fn staged_path_matches_predict_bitwise() {
+        for kind in [TargetKind::Graviton2, TargetKind::TeslaV100] {
+            let cm = CostModel::with_default_coeffs(kind);
+            let extractor = FeatureExtractor::new(kind);
+            let scorer = LinearScorer::new(cm.coeffs().to_vec());
+            let op = OpSpec::Matmul { m: 64, n: 64, k: 32 };
+            let space = transform::config_space(&op, kind);
+            for i in 0..space.size().min(16) {
+                let cfg = space.from_index(i);
+                let staged = scorer.score(&extractor.try_features(&op, &cfg).unwrap());
+                assert_eq!(staged, cm.predict(&op, &cfg), "staged path diverged on {kind:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn score_with_matches_owned_scorer() {
+        let scorer = LinearScorer::new(vec![1.5, 0.25, 3.0]);
+        let fv = FeatureVector { values: vec![2.0, 4.0, 0.5] };
+        assert_eq!(LinearScorer::score_with(scorer.coeffs(), &fv), scorer.score(&fv));
+    }
+
     #[test]
     fn calibration_improves_or_keeps_fit() {
         let mut cm = CostModel::with_default_coeffs(TargetKind::Graviton2);
         // synthetic ground truth: 2*f0 + 10*f5
         let op = OpSpec::Matmul { m: 32, n: 32, k: 32 };
-        let space = transform::config_space(&op, cm.kind);
+        let space = transform::config_space(&op, cm.kind());
         let mut samples = Vec::new();
         for idx in 0..space.size().min(40) {
             let fv = cm.features(&op, &space.from_index(idx));
@@ -281,7 +434,7 @@ mod tests {
             samples.push((fv, y));
         }
         cm.calibrate(&samples);
-        assert!(cm.coeffs.iter().all(|&c| c >= 0.0));
+        assert!(cm.coeffs().iter().all(|&c| c >= 0.0));
         // fitted model correlates strongly with the synthetic truth
         let preds: Vec<f64> = samples.iter().map(|(f, _)| cm.score(f)).collect();
         let ys: Vec<f64> = samples.iter().map(|(_, y)| *y).collect();

@@ -25,5 +25,5 @@ pub mod ilp;
 pub mod loop_map;
 pub mod simd_count;
 
-pub use cost::{CostError, CostModel, FeatureVector};
+pub use cost::{CostError, CostModel, FeatureExtractor, FeatureVector, LinearScorer};
 pub use loop_map::LoopMap;

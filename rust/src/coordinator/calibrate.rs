@@ -5,10 +5,19 @@
 //! workloads (small GEMM/conv shapes, disjoint from every evaluation
 //! shape) is lowered under a spread of schedules, each is profiled once on
 //! the device simulator, and the coefficients are fit by non-negative
-//! least squares. One model per architecture, cached for the process
-//! lifetime; the evaluation workloads never enter the fit.
+//! least squares. One coefficient vector per architecture, cached for the
+//! process lifetime; the evaluation workloads never enter the fit.
+//!
+//! Calibration is a *stage-2* operation: it consumes `(features, cycles)`
+//! samples and produces coefficients. The feature vectors are therefore
+//! extracted **through** a [`CandidateEvaluator`]'s memoized feature store
+//! ([`calibrate_evaluator`]) — the lowering work lands in the same memo
+//! later searches use, and refitting against the same samples re-runs only
+//! the NNLS solve, never the lowering.
 
+use crate::analysis::cost::FeatureVector;
 use crate::analysis::CostModel;
+use crate::eval::CandidateEvaluator;
 use crate::isa::TargetKind;
 use crate::sim::Device;
 use crate::tir::ops::OpSpec;
@@ -31,9 +40,11 @@ fn micro_suite() -> Vec<OpSpec> {
 /// Configs sampled per micro-op.
 const SAMPLES_PER_OP: u64 = 24;
 
-/// Fit a cost model for `kind` against the device simulator.
-pub fn fit_model(kind: TargetKind) -> CostModel {
-    let mut cm = CostModel::with_default_coeffs(kind);
+/// Profile the micro-suite and pair each schedule's *memoized* features
+/// (stage 1, through `ev`'s feature store) with its simulated device
+/// cycles. The sample set is deterministic for a given target.
+pub fn calibration_samples(ev: &CandidateEvaluator) -> Vec<(FeatureVector, f64)> {
+    let kind = ev.extractor().kind;
     let device = Device::new(kind);
     let mut rng = crate::util::Rng::new(0xCA11B);
     let mut samples = Vec::new();
@@ -51,26 +62,67 @@ pub fn fit_model(kind: TargetKind) -> CostModel {
             } else {
                 space.random(&mut rng)
             };
-            let fv = cm.features(&op, &cfg);
+            let fv = ev
+                .try_features(&op, &cfg)
+                .unwrap_or_else(|e| panic!("calibration extraction failed for {op}: {e}"));
             let cycles = device.run(&op, &cfg).seconds * freq_ghz * 1e9;
             samples.push((fv, cycles));
         }
     }
-    cm.calibrate(&samples);
-    cm
+    samples
 }
 
-/// Process-lifetime cache of calibrated models.
-pub fn calibrated_model(kind: TargetKind) -> CostModel {
-    static CACHE: OnceLock<Mutex<HashMap<&'static str, CostModel>>> = OnceLock::new();
-    let cache = CACHE.get_or_init(|| Mutex::new(HashMap::new()));
-    let key = kind.display_name();
-    if let Some(m) = cache.lock().unwrap().get(key) {
-        return m.clone();
+/// Calibrate `ev` in place: extract samples through its feature store,
+/// refit the scorer by NNLS. The evaluator's memo comes out warm with the
+/// micro-suite features.
+pub fn calibrate_evaluator(ev: &CandidateEvaluator) {
+    let samples = calibration_samples(ev);
+    ev.recalibrate(&samples);
+}
+
+/// Fit a cost model for `kind` against the device simulator (uncached —
+/// see [`calibrated_coeffs`] / [`calibrated_model`] for the process-cached
+/// form).
+pub fn fit_model(kind: TargetKind) -> CostModel {
+    let ev = CandidateEvaluator::new(CostModel::with_default_coeffs(kind));
+    calibrate_evaluator(&ev);
+    ev.model()
+}
+
+/// Process-lifetime cache of calibrated coefficients. Coefficients — not
+/// whole models — are what calibration produces, so that is what is
+/// cached; callers compose them with a fresh stage 1 (or swap them into a
+/// live evaluator) as needed.
+fn coeff_cache() -> &'static Mutex<HashMap<&'static str, Vec<f64>>> {
+    static CACHE: OnceLock<Mutex<HashMap<&'static str, Vec<f64>>>> = OnceLock::new();
+    CACHE.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+/// Already-fitted coefficients for `kind`, if any coordinator in this
+/// process has calibrated that target.
+pub fn cached_coeffs(kind: TargetKind) -> Option<Vec<f64>> {
+    coeff_cache().lock().unwrap().get(kind.display_name()).cloned()
+}
+
+/// Publish fitted coefficients for `kind` to the process cache.
+pub fn store_coeffs(kind: TargetKind, coeffs: Vec<f64>) {
+    coeff_cache().lock().unwrap().insert(kind.display_name(), coeffs);
+}
+
+/// Calibrated coefficients for `kind`, fitting (and caching) on first use.
+pub fn calibrated_coeffs(kind: TargetKind) -> Vec<f64> {
+    if let Some(c) = cached_coeffs(kind) {
+        return c;
     }
-    let m = fit_model(kind);
-    cache.lock().unwrap().insert(key, m.clone());
-    m
+    let coeffs = fit_model(kind).coeffs().to_vec();
+    store_coeffs(kind, coeffs.clone());
+    coeffs
+}
+
+/// A calibrated model for `kind`, composed from the process-cached
+/// coefficients.
+pub fn calibrated_model(kind: TargetKind) -> CostModel {
+    CostModel::with_coeffs(kind, calibrated_coeffs(kind))
 }
 
 #[cfg(test)]
@@ -111,6 +163,30 @@ mod tests {
     fn cache_returns_same_coeffs() {
         let a = calibrated_model(TargetKind::CortexA53);
         let b = calibrated_model(TargetKind::CortexA53);
-        assert_eq!(a.coeffs, b.coeffs);
+        assert_eq!(a.coeffs(), b.coeffs());
+    }
+
+    /// Calibrating through an evaluator's feature store and calibrating a
+    /// bare model against the same samples must agree bit-for-bit, and the
+    /// evaluator path must have warmed the memo (every sample lowered
+    /// exactly once, despite features appearing in multiple samples).
+    #[test]
+    fn evaluator_calibration_matches_bare_model() {
+        let kind = TargetKind::CortexA53;
+        let ev = CandidateEvaluator::new(CostModel::with_default_coeffs(kind));
+        let samples = calibration_samples(&ev);
+        let lowered = ev.stats().misses;
+        assert!(lowered > 0);
+        assert_eq!(ev.memo_len() as u64, lowered, "memo holds duplicates");
+
+        ev.recalibrate(&samples);
+        let mut bare = CostModel::with_default_coeffs(kind);
+        bare.calibrate(&samples);
+        assert_eq!(ev.coeffs(), bare.coeffs(), "evaluator calibration diverged");
+
+        // re-gathering the samples re-lowers nothing
+        let again = calibration_samples(&ev);
+        assert_eq!(ev.stats().misses, lowered, "resampling re-lowered");
+        assert_eq!(again.len(), samples.len());
     }
 }

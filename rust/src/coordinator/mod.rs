@@ -28,6 +28,15 @@
 //!    the cache, and the chosen schedule is deployed once on the
 //!    ground-truth device simulator.
 //!
+//! Orthogonal to the per-op pipeline, the coordinator has a
+//! **recalibration stage** ([`Coordinator::swap_coeffs`] /
+//! [`Coordinator::recalibrate`]): because the evaluator memoizes stage-1
+//! feature vectors (not final scores), new coefficients re-rank every
+//! cached top-k list as pure dot-product work — no candidate is ever
+//! re-lowered. Calibration itself flows through the same feature store
+//! ([`calibrate::calibrate_evaluator`]), so `Coordinator::new` warms the
+//! memo it will search with.
+//!
 //! Two clocks:
 //!
 //! * **wall clock** — real host time spent by the optimizer. Tuna's static
@@ -136,14 +145,38 @@ pub struct Coordinator {
     pub threads: usize,
     evaluator: CandidateEvaluator,
     cache: Mutex<ScheduleCache>,
+    /// Cache key → op for every task this process has recorded or served —
+    /// what lets the recalibration stage re-score cached entries (the key
+    /// string alone cannot recover the workload). Pruned in step with
+    /// bounded-cache eviction.
+    tasks: Mutex<BTreeMap<String, OpSpec>>,
+    /// Bumped by every coefficient change. A search that was in flight
+    /// across a recalibration detects the mismatch at record time and
+    /// re-scores its own entry, closing the race between `swap_coeffs`'s
+    /// bulk re-rank and concurrent `tune_op` inserts.
+    coeff_epoch: AtomicU64,
+    /// Serializes recalibrations (coefficient swap + bulk re-rank) so two
+    /// concurrent swaps cannot interleave their re-scoring passes.
+    recal: Mutex<()>,
     searches: AtomicU64,
 }
 
 impl Coordinator {
-    /// Build with a microbenchmark-calibrated cost model (cached per
-    /// target for the process lifetime).
+    /// Build with a microbenchmark-calibrated cost model. The calibration
+    /// runs *through this coordinator's evaluator*: the first coordinator
+    /// per target pays the micro-suite lowering (and keeps those features
+    /// memoized); later coordinators swap in the process-cached
+    /// coefficients without lowering anything.
     pub fn new(kind: TargetKind) -> Self {
-        Self::with_model(kind, calibrate::calibrated_model(kind))
+        let c = Self::new_uncalibrated(kind);
+        match calibrate::cached_coeffs(kind) {
+            Some(coeffs) => c.evaluator.swap_coeffs(coeffs),
+            None => {
+                calibrate::calibrate_evaluator(&c.evaluator);
+                calibrate::store_coeffs(kind, c.evaluator.coeffs());
+            }
+        }
+        c
     }
 
     /// Build with the uncalibrated (latency-table) cost model — used by
@@ -160,6 +193,9 @@ impl Coordinator {
             device: Device::new(kind),
             threads,
             cache: Mutex::new(ScheduleCache::new()),
+            tasks: Mutex::new(BTreeMap::new()),
+            coeff_epoch: AtomicU64::new(0),
+            recal: Mutex::new(()),
             searches: AtomicU64::new(0),
         }
     }
@@ -169,9 +205,9 @@ impl Coordinator {
         &self.evaluator
     }
 
-    /// The cost model scoring runs against. The evaluator owns the only
-    /// copy, so what this returns is exactly what searches use.
-    pub fn cost_model(&self) -> &CostModel {
+    /// Snapshot of the cost model scoring currently runs against (the
+    /// evaluator's extractor + its live coefficients).
+    pub fn cost_model(&self) -> CostModel {
         self.evaluator.model()
     }
 
@@ -184,6 +220,112 @@ impl Coordinator {
     pub fn cache_stats(&self) -> (usize, u64, u64) {
         let c = self.cache.lock().unwrap();
         (c.len(), c.hits(), c.misses())
+    }
+
+    /// Entries evicted from the schedule cache by its size bound.
+    pub fn cache_evictions(&self) -> u64 {
+        self.cache.lock().unwrap().evicted()
+    }
+
+    /// Bound (or unbound) the schedule cache; above the cap the
+    /// least-recently-hit entry is evicted. Evicted tasks simply fall back
+    /// to a fresh search on their next request.
+    pub fn set_cache_capacity(&self, cap: Option<usize>) {
+        let evicted = self.cache.lock().unwrap().set_capacity(cap);
+        self.drop_task_records(evicted);
+    }
+
+    /// The recalibration stage: swap new coefficients into the shared
+    /// evaluator and re-rank every cached entry this process knows the
+    /// workload for — chosen + top-k re-scored from the memoized feature
+    /// store (the search already lowered those candidates, so this is pure
+    /// stage-2 work), re-sorted, chosen updated to the new argmin. Returns
+    /// the number of cache entries re-ranked. Recalibrations serialize
+    /// against each other; searches in flight across the swap re-score
+    /// their own entries at record time (see [`Self::try_tune_op`]).
+    pub fn swap_coeffs(&self, coeffs: Vec<f64>) -> usize {
+        let _serialized = self.recal.lock().unwrap();
+        self.evaluator.swap_coeffs(coeffs);
+        self.coeff_epoch.fetch_add(1, Ordering::AcqRel);
+        self.rescore_cached()
+    }
+
+    /// Recalibration from `(features, cycles)` samples (e.g. fresh device
+    /// profiles): refit the scorer, then re-rank the cached entries.
+    /// Returns the number of cache entries re-ranked.
+    pub fn recalibrate(&self, samples: &[(crate::analysis::FeatureVector, f64)]) -> usize {
+        let _serialized = self.recal.lock().unwrap();
+        self.evaluator.recalibrate(samples);
+        self.coeff_epoch.fetch_add(1, Ordering::AcqRel);
+        self.rescore_cached()
+    }
+
+    /// Forget the workload records behind evicted cache keys, keeping the
+    /// tasks map bounded in step with a bounded cache.
+    fn drop_task_records(&self, evicted: Vec<String>) {
+        if !evicted.is_empty() {
+            let mut tasks = self.tasks.lock().unwrap();
+            for key in evicted {
+                tasks.remove(&key);
+            }
+        }
+    }
+
+    /// Re-score one cached entry under the evaluator's current
+    /// coefficients: top-k recomputed from the memoized feature store,
+    /// re-sorted, chosen updated to the new argmin. Scoring happens
+    /// outside the cache lock; the write-back is snapshot-validated, so if
+    /// a concurrent search replaced the entry meanwhile the stale update
+    /// is dropped (that writer re-scores its own entry via the epoch
+    /// check). Returns true if the entry was updated.
+    fn rescore_entry(&self, key: &str, op: &OpSpec) -> bool {
+        let Some(snapshot) = self.cache.lock().unwrap().peek(key).cloned() else {
+            return false; // evicted since it was recorded
+        };
+        let cfgs: Vec<ScheduleConfig> =
+            snapshot.top_k.iter().map(|(c, _)| c.clone()).collect();
+        let Ok(scores) = self.evaluator.try_score_batch(op, &cfgs) else {
+            return false; // unscorable top-k: leave the entry untouched
+        };
+        let mut top_k: Vec<(ScheduleConfig, f64)> = cfgs.into_iter().zip(scores).collect();
+        top_k.sort_by(|a, b| a.1.total_cmp(&b.1));
+        let mut cache = self.cache.lock().unwrap();
+        match cache.entry_mut(key) {
+            Some(e) if *e == snapshot => {
+                if let Some((best, best_score)) = top_k.first() {
+                    e.chosen = best.clone();
+                    e.best_score = *best_score;
+                }
+                e.top_k = top_k;
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// Re-score every known cached entry under the evaluator's current
+    /// coefficients, pruning task records whose entries were evicted.
+    fn rescore_cached(&self) -> usize {
+        let tasks: Vec<(String, OpSpec)> = self
+            .tasks
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, op)| (k.clone(), *op))
+            .collect();
+        let mut rescored = 0;
+        let mut dead = Vec::new();
+        for (key, op) in tasks {
+            if self.cache.lock().unwrap().peek(&key).is_none() {
+                dead.push(key);
+                continue;
+            }
+            if self.rescore_entry(&key, &op) {
+                rescored += 1;
+            }
+        }
+        self.drop_task_records(dead);
+        rescored
     }
 
     /// Persist the schedule cache to `path`.
@@ -212,12 +354,18 @@ impl Coordinator {
     pub fn try_tune_op(&self, op: &OpSpec, strategy: &Strategy) -> Result<OpReport, CostError> {
         let space = transform::config_space(op, self.kind);
         let start = Instant::now();
+        // coefficient epoch observed before searching — if a recalibration
+        // lands while the search runs, the recorded entry re-scores itself
+        let epoch = self.coeff_epoch.load(Ordering::Acquire);
 
         // stage 1: consult the schedule cache
         let key = strategy
             .cache_sig()
             .map(|sig| ScheduleCache::key(self.kind, op, &space, &sig));
         if let Some(k) = &key {
+            // remember the workload behind this key so the recalibration
+            // stage can re-score the entry later
+            self.tasks.lock().unwrap().insert(k.clone(), *op);
             // stale/corrupt persisted entries (chosen or top-k configs that
             // no longer fit the space) count as misses and fall through to
             // a fresh search
@@ -293,9 +441,12 @@ impl Coordinator {
         };
 
         // stage 3: record the outcome, then deploy once for ground truth
-        if let Some(k) = key {
-            self.cache.lock().unwrap().insert(
-                k,
+        if let Some(k) = &key {
+            // re-record the task: bounded-cache eviction may have dropped
+            // the stage-1 record while this search ran
+            self.tasks.lock().unwrap().insert(k.clone(), *op);
+            let evicted = self.cache.lock().unwrap().insert(
+                k.clone(),
                 CachedSchedule {
                     chosen: result.best.clone(),
                     best_score: result.best_score,
@@ -303,6 +454,14 @@ impl Coordinator {
                     evaluations: result.evaluations,
                 },
             );
+            self.drop_task_records(evicted);
+            // a recalibration landed mid-search: this entry's scores are
+            // from the old coefficients, and the bulk re-rank may have run
+            // before the insert — re-score it here (memoized features, so
+            // this is dot products, not lowering)
+            if self.coeff_epoch.load(Ordering::Acquire) != epoch {
+                self.rescore_entry(k, op);
+            }
         }
         let wall_s = start.elapsed().as_secs_f64();
         let latency_s = self.device.run(op, &result.best).seconds;
@@ -444,6 +603,51 @@ mod tests {
         );
         assert!(!other.cache_hit);
         assert_eq!(c.searches_performed(), 2);
+    }
+
+    #[test]
+    fn swap_coeffs_reranks_cache_without_relowering() {
+        let c = Coordinator::new_uncalibrated(TargetKind::Graviton2);
+        let op = OpSpec::Matmul { m: 48, n: 48, k: 24 };
+        let first = c.tune_op(&op, &Strategy::TunaStatic(tiny_es()));
+        assert!(first.top_k.len() > 1);
+        let misses_before = c.evaluator().stats().misses;
+
+        let coeffs = vec![0.1, 2.0, 0.5, 1.0, 0.25, 4.0, 1.5];
+        let reranked = c.swap_coeffs(coeffs.clone());
+        assert_eq!(reranked, 1);
+        assert_eq!(
+            c.evaluator().stats().misses,
+            misses_before,
+            "recalibration stage re-lowered candidates"
+        );
+
+        // the cached entry now ranks exactly as a fresh model with those
+        // coefficients would score the same configs
+        let second = c.tune_op(&op, &Strategy::TunaStatic(tiny_es()));
+        assert!(second.cache_hit);
+        let cm = CostModel::with_coeffs(TargetKind::Graviton2, coeffs);
+        for (cfg, s) in &second.top_k {
+            assert_eq!(*s, cm.predict(&op, cfg), "re-scored entry diverged");
+        }
+        assert!(second.top_k.windows(2).all(|w| w[0].1 <= w[1].1), "top-k unsorted");
+        assert_eq!(second.chosen, second.top_k[0].0, "chosen is not the new argmin");
+    }
+
+    #[test]
+    fn evicted_task_falls_back_to_fresh_search() {
+        let c = Coordinator::new_uncalibrated(TargetKind::Graviton2);
+        c.set_cache_capacity(Some(1));
+        let a = OpSpec::Matmul { m: 32, n: 32, k: 32 };
+        let b = OpSpec::Matmul { m: 64, n: 32, k: 32 };
+        let first = c.tune_op(&a, &Strategy::TunaStatic(tiny_es()));
+        c.tune_op(&b, &Strategy::TunaStatic(tiny_es())); // evicts a
+        assert_eq!(c.cache_evictions(), 1);
+        let again = c.tune_op(&a, &Strategy::TunaStatic(tiny_es()));
+        assert!(!again.cache_hit, "evicted entry served");
+        assert_eq!(c.searches_performed(), 3, "eviction did not force a re-search");
+        // the re-search is deterministic, so the outcome matches
+        assert_eq!(again.chosen, first.chosen);
     }
 
     #[test]

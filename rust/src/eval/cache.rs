@@ -13,14 +13,22 @@
 //! schedule template (editing a template invalidates stale entries), and
 //! the search signature pins the strategy and its hyperparameters, so a
 //! `k=5` sweep can never serve a `k=50` request.
+//!
+//! The cache can be bounded ([`ScheduleCache::set_capacity`]): above the
+//! cap, the least-recently-*hit* entry is evicted (recency advances on
+//! lookup hits, inserts and updates), and the eviction count is reported
+//! next to hits/misses. The bound is a runtime residency policy, not
+//! content, so it is deliberately not serialized — a loaded cache inherits
+//! the capacity of the cache it is merged into.
 
 use crate::isa::TargetKind;
 use crate::tir::ops::OpSpec;
 use crate::transform::{ConfigSpace, ScheduleConfig};
 use crate::util::json::Json;
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, HashMap};
 use std::io;
 use std::path::Path;
+use std::sync::Arc;
 
 /// Current on-disk format version. Bump on layout changes; loaders reject
 /// other versions rather than misread them.
@@ -38,13 +46,26 @@ pub struct CachedSchedule {
     pub evaluations: u64,
 }
 
-/// The cache: ordered map from content address to outcome, plus hit/miss
-/// counters for reporting.
+/// The cache: ordered map from content address to outcome, plus hit/miss/
+/// eviction counters for reporting. Optionally bounded: see
+/// [`Self::set_capacity`].
 #[derive(Debug, Default)]
 pub struct ScheduleCache {
     entries: BTreeMap<String, CachedSchedule>,
+    /// Size bound; `None` = unbounded.
+    capacity: Option<usize>,
+    /// Monotonic recency clock: bumped on every hit/insert/update.
+    tick: u64,
+    /// Last tick each resident key was hit (or inserted). Shares key
+    /// storage with `lru` via `Arc<str>` so a recency refresh never
+    /// re-allocates the key.
+    recency: HashMap<Arc<str>, u64>,
+    /// Inverse index (tick → key; ticks are unique) — makes evicting the
+    /// least-recently-hit entry O(log n) instead of a full scan.
+    lru: BTreeMap<u64, Arc<str>>,
     hits: u64,
     misses: u64,
+    evicted: u64,
 }
 
 impl ScheduleCache {
@@ -52,22 +73,77 @@ impl ScheduleCache {
         Self::default()
     }
 
+    /// A bounded cache: at most `cap` resident entries, least-recently-hit
+    /// evicted first.
+    pub fn with_capacity(cap: usize) -> Self {
+        let mut c = Self::default();
+        c.set_capacity(Some(cap));
+        c
+    }
+
+    /// Set (or clear) the size bound. Shrinking below the current
+    /// population evicts immediately; the evicted keys are returned so the
+    /// caller can drop any bookkeeping tied to them.
+    pub fn set_capacity(&mut self, cap: Option<usize>) -> Vec<String> {
+        self.capacity = cap;
+        self.enforce_capacity()
+    }
+
+    pub fn capacity(&self) -> Option<usize> {
+        self.capacity
+    }
+
+    /// Mark `key` as just-used and advance the recency clock.
+    fn touch(&mut self, key: &str) {
+        self.tick += 1;
+        match self.recency.get_key_value(key) {
+            Some((k, &old_tick)) => {
+                let k = Arc::clone(k);
+                self.lru.remove(&old_tick);
+                self.lru.insert(self.tick, Arc::clone(&k));
+                self.recency.insert(k, self.tick);
+            }
+            None => {
+                let k: Arc<str> = Arc::from(key);
+                self.lru.insert(self.tick, Arc::clone(&k));
+                self.recency.insert(k, self.tick);
+            }
+        }
+    }
+
+    /// Evict least-recently-hit entries until the population fits the cap;
+    /// returns the evicted keys. Every resident entry has an `lru` record
+    /// (all inserts — including deserialization — route through `touch`).
+    fn enforce_capacity(&mut self) -> Vec<String> {
+        let mut evicted = Vec::new();
+        let Some(cap) = self.capacity else { return evicted };
+        while self.entries.len() > cap {
+            let (&tick, key) = self.lru.iter().next().expect("lru tracks every resident entry");
+            let key = Arc::clone(key);
+            self.lru.remove(&tick);
+            self.recency.remove(&*key);
+            self.entries.remove(&*key);
+            self.evicted += 1;
+            evicted.push(key.to_string());
+        }
+        evicted
+    }
+
     /// The content address of one tuning task.
     pub fn key(kind: TargetKind, op: &OpSpec, space: &ConfigSpace, search_sig: &str) -> String {
         format!("{kind:?}/{}/{:016x}/{search_sig}", op.cache_key(), space.fingerprint())
     }
 
-    /// Counted lookup (drives the hit/miss report).
+    /// Counted lookup (drives the hit/miss report; a hit refreshes the
+    /// entry's eviction recency).
     pub fn get(&mut self, key: &str) -> Option<&CachedSchedule> {
-        match self.entries.get(key) {
-            Some(v) => {
-                self.hits += 1;
-                Some(v)
-            }
-            None => {
-                self.misses += 1;
-                None
-            }
+        if self.entries.contains_key(key) {
+            self.hits += 1;
+            self.touch(key);
+            self.entries.get(key)
+        } else {
+            self.misses += 1;
+            None
         }
     }
 
@@ -86,6 +162,7 @@ impl ScheduleCache {
         };
         if valid {
             self.hits += 1;
+            self.touch(key);
             self.entries.get(key).cloned()
         } else {
             self.misses += 1;
@@ -98,13 +175,34 @@ impl ScheduleCache {
         self.entries.get(key)
     }
 
-    pub fn insert(&mut self, key: String, value: CachedSchedule) {
+    /// Uncounted mutable access — the coordinator's recalibration stage
+    /// rewrites entries in place through this. Counts as a use for
+    /// eviction recency.
+    pub fn entry_mut(&mut self, key: &str) -> Option<&mut CachedSchedule> {
+        if self.entries.contains_key(key) {
+            self.touch(key);
+        }
+        self.entries.get_mut(key)
+    }
+
+    /// Insert an entry; if the cache is bounded and over capacity, the
+    /// least-recently-hit entries are evicted and their keys returned so
+    /// the caller can drop any bookkeeping tied to them.
+    pub fn insert(&mut self, key: String, value: CachedSchedule) -> Vec<String> {
+        self.touch(&key);
         self.entries.insert(key, value);
+        self.enforce_capacity()
     }
 
     /// Absorb every entry of `other` (newer entries win on key clashes).
+    /// Merged entries arrive with fresh recency; the receiving cache's
+    /// capacity is enforced afterwards.
     pub fn merge(&mut self, other: ScheduleCache) {
-        self.entries.extend(other.entries);
+        for (k, v) in other.entries {
+            self.touch(&k);
+            self.entries.insert(k, v);
+        }
+        self.enforce_capacity();
     }
 
     pub fn len(&self) -> usize {
@@ -121,6 +219,11 @@ impl ScheduleCache {
 
     pub fn misses(&self) -> u64 {
         self.misses
+    }
+
+    /// Entries evicted by the size bound since construction.
+    pub fn evicted(&self) -> u64 {
+        self.evicted
     }
 
     pub fn keys(&self) -> impl Iterator<Item = &str> {
@@ -149,7 +252,9 @@ impl ScheduleCache {
         };
         let mut cache = ScheduleCache::new();
         for (k, v) in entries {
-            cache.entries.insert(k.clone(), entry_from_json(v).map_err(|e| format!("{k}: {e}"))?);
+            // route through insert so every entry gets a recency record
+            // (deserialization order stands in for last-hit order)
+            cache.insert(k.clone(), entry_from_json(v).map_err(|e| format!("{k}: {e}"))?);
         }
         Ok(cache)
     }
@@ -313,5 +418,68 @@ mod tests {
     fn rejects_bad_version() {
         let j = Json::obj(vec![("version", Json::Num(99.0)), ("entries", Json::Obj(Default::default()))]);
         assert!(ScheduleCache::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn bounded_cache_never_exceeds_cap_under_churn() {
+        let mut c = ScheduleCache::with_capacity(4);
+        for i in 0..20 {
+            c.insert(format!("k{i}"), sample_entry());
+            assert!(c.len() <= 4, "cap breached at insert {i}: {}", c.len());
+        }
+        assert_eq!(c.len(), 4);
+        assert_eq!(c.evicted(), 16);
+        // the most recent inserts are the survivors
+        for i in 16..20 {
+            assert!(c.peek(&format!("k{i}")).is_some(), "k{i} wrongly evicted");
+        }
+    }
+
+    #[test]
+    fn eviction_prefers_least_recently_hit() {
+        let mut c = ScheduleCache::with_capacity(2);
+        c.insert("a".into(), sample_entry());
+        c.insert("b".into(), sample_entry());
+        assert!(c.get("a").is_some()); // refresh a: b is now coldest
+        c.insert("c".into(), sample_entry());
+        assert!(c.peek("a").is_some(), "recently-hit entry evicted");
+        assert!(c.peek("b").is_none(), "coldest entry survived");
+        assert!(c.peek("c").is_some());
+        assert_eq!(c.evicted(), 1);
+    }
+
+    #[test]
+    fn shrinking_capacity_evicts_immediately() {
+        let mut c = ScheduleCache::new();
+        for i in 0..6 {
+            c.insert(format!("k{i}"), sample_entry());
+        }
+        assert_eq!(c.len(), 6);
+        c.set_capacity(Some(2));
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.evicted(), 4);
+        c.set_capacity(None);
+        c.insert("k9".into(), sample_entry());
+        assert_eq!(c.len(), 3, "unbounding stopped eviction");
+    }
+
+    #[test]
+    fn bounded_cache_roundtrips_through_json() {
+        let mut c = ScheduleCache::with_capacity(3);
+        for i in 0..5 {
+            c.insert(format!("k{i}"), sample_entry());
+        }
+        let back = ScheduleCache::from_json(&c.to_json()).unwrap();
+        // the capacity itself is a runtime policy, not persisted content
+        assert_eq!(back.capacity(), None);
+        assert_eq!(back.len(), 3);
+        for k in c.keys() {
+            assert_eq!(back.peek(k), c.peek(k), "{k} lost in round trip");
+        }
+        // merging into a bounded cache re-applies the receiver's bound
+        let mut bounded = ScheduleCache::with_capacity(2);
+        bounded.merge(back);
+        assert_eq!(bounded.len(), 2);
+        assert_eq!(bounded.evicted(), 1);
     }
 }

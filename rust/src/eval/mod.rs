@@ -1,37 +1,52 @@
 //! The staged candidate-evaluation pipeline.
 //!
-//! Tuna's headline economics rest on static candidate evaluation being
-//! cheap enough to fan out across host cores — but cheap still adds up
-//! when every ES generation re-lowers the same schedules. This module
-//! makes the evaluation path a reusable subsystem with three stages:
+//! Tuna's static score is `Σ aᵢ·fᵢ`: stage 1 (lower → analyze, the
+//! [`FeatureExtractor`]) costs micro- to milliseconds per candidate, stage 2
+//! (the [`LinearScorer`] dot product) costs nanoseconds. This module keeps
+//! the two stages separate all the way through the evaluation path:
 //!
-//! 1. **memoized scoring** — [`CandidateEvaluator`] owns the (calibrated)
-//!    cost model and target; `(op, config)` pairs are keyed structurally
-//!    and their scores memoized in sharded maps, so a candidate proposed
-//!    twice (ES revisits decode collisions constantly) is lowered and
-//!    analyzed once;
-//! 2. **batched fan-out** — [`CandidateEvaluator::score_batch`] scores a
+//! 1. **memoized feature store** — [`CandidateEvaluator`] memoizes stage-1
+//!    `FeatureVector`s (not final scores) in sharded maps keyed by the
+//!    structural identity of `(op, config)`. A candidate proposed twice (ES
+//!    revisits decode collisions constantly) is lowered and analyzed once —
+//!    and because the store holds *features*, the memo survives coefficient
+//!    changes: calibration, ablation sweeps, and what-if scoring re-run
+//!    only the dot product. The memo hit path performs no heap allocation
+//!    (candidates are located by structural hash + in-place comparison, and
+//!    scored without copying the stored vector);
+//! 2. **swappable scorer** — the evaluator's [`LinearScorer`] sits behind a
+//!    lock: [`CandidateEvaluator::swap_coeffs`] /
+//!    [`CandidateEvaluator::recalibrate`] replace the coefficients without
+//!    touching the feature store, and
+//!    [`CandidateEvaluator::score_batch_with`] scores any number of
+//!    coefficient vectors over one set of lowered features;
+//! 3. **batched fan-out** — [`CandidateEvaluator::score_batch`] scores a
 //!    whole population with one index-space parallel map: no per-candidate
 //!    closure dispatch, no config clones, per-thread result buffers reused
 //!    across the worker's share of the batch;
-//! 3. **typed failure** — extraction errors ([`CostError`]) propagate out
+//! 4. **typed failure** — extraction errors ([`CostError`]) propagate out
 //!    of the batch instead of panicking mid-search.
 //!
 //! The sibling [`cache`] module persists *search outcomes* (the chosen
 //! schedule + top-k per task) across processes; this module avoids
-//! *within-search* recomputation. The coordinator composes both.
+//! *within-search* recomputation. The coordinator composes both, and its
+//! recalibration stage leans on the split: swapping coefficients re-ranks
+//! every cached top-k list from memoized features, with zero re-lowering.
 //!
 //! Scores are computed by exactly the same code path as
 //! [`CostModel::predict`] (`transform::apply` → `codegen::lower` → feature
 //! extraction → linear score), so batched results are bit-identical to
 //! per-candidate prediction — a property the `eval_pipeline` integration
-//! tests pin down on CPU and GPU targets.
+//! tests pin down on CPU and GPU targets, before and after a coefficient
+//! swap.
 
 pub mod cache;
 
 pub use cache::{CachedSchedule, ScheduleCache};
 
-use crate::analysis::cost::{CostError, CostModel};
+use crate::analysis::cost::{
+    CostError, CostModel, FeatureExtractor, FeatureVector, LinearScorer,
+};
 use crate::search::BatchObjective;
 use crate::tir::ops::OpSpec;
 use crate::transform::ScheduleConfig;
@@ -39,20 +54,31 @@ use crate::util::pool::{self, parallel_map_indexed};
 use std::collections::HashMap;
 use std::hash::{Hash, Hasher};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Mutex, RwLock};
 
 /// Number of memo shards (bounds lock contention during batch fan-out).
 const SHARDS: usize = 16;
 
-/// Structural identity of one lowered candidate.
-#[derive(Clone, PartialEq, Eq, Hash)]
+/// Structural identity of one lowered candidate (owned form — built only
+/// when a miss inserts into the feature store). Identity is resolved by
+/// [`Self::matches`] against a precomputed structural hash; the type
+/// deliberately derives nothing, so the only equality in play is that one.
 struct MemoKey {
     op: OpSpec,
     choices: Vec<usize>,
 }
 
-/// Memo hit/miss counters (diagnostics; also what the cache-equivalence
-/// tests assert against).
+impl MemoKey {
+    fn matches(&self, op: &OpSpec, cfg: &ScheduleConfig) -> bool {
+        self.op == *op && self.choices == cfg.choices
+    }
+}
+
+/// Memo hit/miss counters. `misses` counts feature extractions (stage-1
+/// lowering work actually performed); `hits` counts candidates served from
+/// the feature store — including every re-scoring under swapped
+/// coefficients, which is what the recalibration-equivalence tests assert
+/// against.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct EvalStats {
     pub hits: u64,
@@ -65,13 +91,18 @@ impl EvalStats {
     }
 }
 
-/// The batched, memoizing candidate evaluator. Owns the target (via its
-/// cost model) and is shared by every search the coordinator runs against
-/// that target.
+/// The batched, memoizing candidate evaluator. Owns the two model stages
+/// separately: the immutable [`FeatureExtractor`] (pinned to one target)
+/// feeds a sharded feature store, and the [`LinearScorer`] — the only
+/// mutable stage — is applied on lookup and swappable at runtime.
 pub struct CandidateEvaluator {
-    model: CostModel,
+    extractor: FeatureExtractor,
+    scorer: RwLock<LinearScorer>,
     threads: usize,
-    shards: Vec<Mutex<HashMap<MemoKey, f64>>>,
+    /// Feature store: structural hash → bucket of (key, features). Buckets
+    /// resolve the (vanishingly rare) hash collisions by full comparison;
+    /// keying on the hash keeps the lookup allocation-free.
+    shards: Vec<Mutex<HashMap<u64, Vec<(MemoKey, FeatureVector)>>>>,
     hits: AtomicU64,
     misses: AtomicU64,
 }
@@ -82,8 +113,10 @@ impl CandidateEvaluator {
     }
 
     pub fn with_threads(model: CostModel, threads: usize) -> Self {
+        let (extractor, scorer) = model.into_parts();
         CandidateEvaluator {
-            model,
+            extractor,
+            scorer: RwLock::new(scorer),
             threads: threads.max(1),
             shards: (0..SHARDS).map(|_| Mutex::new(HashMap::new())).collect(),
             hits: AtomicU64::new(0),
@@ -91,13 +124,62 @@ impl CandidateEvaluator {
         }
     }
 
-    /// The cost model this evaluator scores with.
-    pub fn model(&self) -> &CostModel {
-        &self.model
+    /// Stage 1 of the model — fixed for the evaluator's lifetime.
+    pub fn extractor(&self) -> &FeatureExtractor {
+        &self.extractor
     }
 
-    /// In-process structural hash of a candidate (shard selector). Not
-    /// stable across processes — persisted keys use
+    /// Snapshot of the current coefficients (stage 2).
+    pub fn coeffs(&self) -> Vec<f64> {
+        self.scorer.read().unwrap().coeffs().to_vec()
+    }
+
+    /// Snapshot of the composed cost model the evaluator currently scores
+    /// with. An owned value: the scorer can be swapped underneath, so a
+    /// borrow of the live model cannot be handed out.
+    pub fn model(&self) -> CostModel {
+        CostModel::from_parts(self.extractor.clone(), self.scorer.read().unwrap().clone())
+    }
+
+    /// Replace the scoring coefficients. The feature store is untouched:
+    /// every candidate scored so far re-ranks under the new coefficients
+    /// without any re-lowering.
+    ///
+    /// Panics if `coeffs` does not match the target's feature
+    /// dimensionality — a wrong-length vector would silently truncate in
+    /// the dot product and mis-rank everything downstream.
+    pub fn swap_coeffs(&self, coeffs: Vec<f64>) {
+        assert_eq!(
+            coeffs.len(),
+            self.extractor.dim(),
+            "coefficient vector does not match {:?}'s feature dimensionality",
+            self.extractor.kind
+        );
+        *self.scorer.write().unwrap() = LinearScorer::new(coeffs);
+    }
+
+    /// Refit the scorer by NNLS against `(features, measured cycles)`
+    /// samples — typically gathered through [`Self::try_features`] so the
+    /// calibration lowering lands in the shared feature store.
+    ///
+    /// Panics if any sample's features do not match the target's feature
+    /// dimensionality (see [`Self::swap_coeffs`]) — a short vector would
+    /// index out of bounds deep inside the NNLS solve, a long one would
+    /// silently pollute the fit.
+    pub fn recalibrate(&self, samples: &[(FeatureVector, f64)]) {
+        for (i, (fv, _)) in samples.iter().enumerate() {
+            assert_eq!(
+                fv.dim(),
+                self.extractor.dim(),
+                "calibration sample {i} does not match {:?}'s feature dimensionality",
+                self.extractor.kind
+            );
+        }
+        self.scorer.write().unwrap().calibrate(samples);
+    }
+
+    /// In-process structural hash of a candidate (shard + bucket selector).
+    /// Not stable across processes — persisted keys use
     /// [`ScheduleCache::key`] instead.
     pub fn structural_hash(op: &OpSpec, cfg: &ScheduleConfig) -> u64 {
         let mut h = std::collections::hash_map::DefaultHasher::new();
@@ -106,27 +188,99 @@ impl CandidateEvaluator {
         h.finish()
     }
 
-    fn shard_of(key: &MemoKey) -> usize {
-        let mut h = std::collections::hash_map::DefaultHasher::new();
-        key.hash(&mut h);
-        (h.finish() as usize) % SHARDS
+    /// Hit path: run `use_features` against the memoized feature vector
+    /// for `(op, cfg)`, if present. Allocates nothing: the candidate is
+    /// located by structural hash and compared in place, and the stored
+    /// vector is borrowed, not cloned.
+    fn lookup_with<R>(
+        &self,
+        op: &OpSpec,
+        cfg: &ScheduleConfig,
+        use_features: impl FnOnce(&FeatureVector) -> R,
+    ) -> Option<R> {
+        let h = Self::structural_hash(op, cfg);
+        let guard = self.shards[(h as usize) % SHARDS].lock().unwrap();
+        let r = guard
+            .get(&h)?
+            .iter()
+            .find(|(k, _)| k.matches(op, cfg))
+            .map(|(_, fv)| use_features(fv));
+        if r.is_some() {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+        }
+        r
     }
 
-    /// Score one candidate through the memo. Identical numerics to
-    /// [`CostModel::predict`]; typed error instead of panic.
-    pub fn try_score(&self, op: &OpSpec, cfg: &ScheduleConfig) -> Result<f64, CostError> {
-        let key = MemoKey { op: *op, choices: cfg.choices.clone() };
-        let shard = &self.shards[Self::shard_of(&key)];
-        if let Some(&s) = shard.lock().unwrap().get(&key) {
-            self.hits.fetch_add(1, Ordering::Relaxed);
-            return Ok(s);
+    /// Store freshly extracted features (first writer wins — two threads
+    /// racing on the same key just agree on the value).
+    fn insert_features(&self, op: &OpSpec, cfg: &ScheduleConfig, fv: FeatureVector) {
+        let h = Self::structural_hash(op, cfg);
+        let mut guard = self.shards[(h as usize) % SHARDS].lock().unwrap();
+        let bucket = guard.entry(h).or_default();
+        if !bucket.iter().any(|(k, _)| k.matches(op, cfg)) {
+            bucket.push((MemoKey { op: *op, choices: cfg.choices.clone() }, fv));
         }
-        // compute outside the lock — lowering dominates, and two threads
-        // racing on the same key just agree on the value
-        let s = self.model.try_predict(op, cfg)?;
+    }
+
+    /// Run `use_features` against the memoized feature vector for
+    /// `(op, cfg)`, extracting (and storing) it on a miss. No lock is held
+    /// during extraction.
+    fn with_features<R>(
+        &self,
+        op: &OpSpec,
+        cfg: &ScheduleConfig,
+        use_features: impl Fn(&FeatureVector) -> R,
+    ) -> Result<R, CostError> {
+        if let Some(r) = self.lookup_with(op, cfg, &use_features) {
+            return Ok(r);
+        }
+        let fv = self.extractor.try_features(op, cfg)?;
         self.misses.fetch_add(1, Ordering::Relaxed);
-        shard.lock().unwrap().insert(key, s);
+        let r = use_features(&fv);
+        self.insert_features(op, cfg, fv);
+        Ok(r)
+    }
+
+    /// Memoized stage 1: the feature vector for one candidate (cloned out
+    /// of the store). Calibration routes through this so its lowering work
+    /// is shared with every later search over the same shapes.
+    pub fn try_features(
+        &self,
+        op: &OpSpec,
+        cfg: &ScheduleConfig,
+    ) -> Result<FeatureVector, CostError> {
+        self.with_features(op, cfg, FeatureVector::clone)
+    }
+
+    /// Score one candidate through the feature store with the current
+    /// coefficients. Identical numerics to [`CostModel::predict`]; typed
+    /// error instead of panic.
+    pub fn try_score(&self, op: &OpSpec, cfg: &ScheduleConfig) -> Result<f64, CostError> {
+        {
+            // scorer read guard held only for the (nanoseconds) hit path —
+            // never across extraction, where it would stall a pending
+            // swap_coeffs writer and everyone queued behind it
+            let scorer = self.scorer.read().unwrap();
+            if let Some(s) = self.lookup_with(op, cfg, |fv| scorer.score(fv)) {
+                return Ok(s);
+            }
+        }
+        let fv = self.extractor.try_features(op, cfg)?;
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let s = self.scorer.read().unwrap().score(&fv);
+        self.insert_features(op, cfg, fv);
         Ok(s)
+    }
+
+    /// Score one candidate under borrowed coefficients (the multi-model
+    /// path: many coefficient vectors over one set of lowered features).
+    pub fn try_score_with(
+        &self,
+        coeffs: &[f64],
+        op: &OpSpec,
+        cfg: &ScheduleConfig,
+    ) -> Result<f64, CostError> {
+        self.with_features(op, cfg, |fv| LinearScorer::score_with(coeffs, fv))
     }
 
     /// Score a whole batch with one parallel fan-out over indices (configs
@@ -137,9 +291,32 @@ impl CandidateEvaluator {
         op: &OpSpec,
         cfgs: &[ScheduleConfig],
     ) -> Result<Vec<f64>, CostError> {
-        parallel_map_indexed(cfgs.len(), self.threads, |i| self.try_score(op, &cfgs[i]))
-            .into_iter()
-            .collect()
+        // one coefficient snapshot per batch, not one lock per candidate
+        let scorer = self.scorer.read().unwrap().clone();
+        self.try_score_batch_with(scorer.coeffs(), op, cfgs)
+    }
+
+    /// Batch scoring under borrowed coefficients: the whole batch is
+    /// lowered at most once (memoized), then each coefficient vector costs
+    /// only dot products. This is what makes ablation and what-if sweeps
+    /// orders of magnitude cheaper than re-lowering per variant.
+    pub fn try_score_batch_with(
+        &self,
+        coeffs: &[f64],
+        op: &OpSpec,
+        cfgs: &[ScheduleConfig],
+    ) -> Result<Vec<f64>, CostError> {
+        assert_eq!(
+            coeffs.len(),
+            self.extractor.dim(),
+            "coefficient vector does not match {:?}'s feature dimensionality",
+            self.extractor.kind
+        );
+        parallel_map_indexed(cfgs.len(), self.threads, |i| {
+            self.try_score_with(coeffs, op, &cfgs[i])
+        })
+        .into_iter()
+        .collect()
     }
 
     /// Infallible batch scoring (panics on extraction failure; searches
@@ -147,6 +324,17 @@ impl CandidateEvaluator {
     pub fn score_batch(&self, op: &OpSpec, cfgs: &[ScheduleConfig]) -> Vec<f64> {
         self.try_score_batch(op, cfgs)
             .unwrap_or_else(|e| panic!("score_batch({op}): {e}"))
+    }
+
+    /// Infallible form of [`Self::try_score_batch_with`].
+    pub fn score_batch_with(
+        &self,
+        coeffs: &[f64],
+        op: &OpSpec,
+        cfgs: &[ScheduleConfig],
+    ) -> Vec<f64> {
+        self.try_score_batch_with(coeffs, op, cfgs)
+            .unwrap_or_else(|e| panic!("score_batch_with({op}): {e}"))
     }
 
     /// Bind an operator, yielding the [`BatchObjective`] the searchers
@@ -164,10 +352,13 @@ impl CandidateEvaluator {
 
     /// Number of memoized candidates across all shards.
     pub fn memo_len(&self) -> usize {
-        self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
+        self.shards
+            .iter()
+            .map(|s| s.lock().unwrap().values().map(Vec::len).sum::<usize>())
+            .sum()
     }
 
-    /// Drop all memoized scores (keeps the stats counters).
+    /// Drop all memoized features (keeps the stats counters).
     pub fn clear_memo(&self) {
         for s in &self.shards {
             s.lock().unwrap().clear();
@@ -248,5 +439,51 @@ mod tests {
         let sa = ev.try_score(&a, &cfg).unwrap();
         let sb = ev.try_score(&b, &cfg).unwrap();
         assert_ne!(sa, sb, "different shapes memoized to one entry");
+    }
+
+    #[test]
+    fn swap_coeffs_rescores_from_the_feature_store() {
+        let kind = TargetKind::Graviton2;
+        let ev = CandidateEvaluator::with_threads(CostModel::with_default_coeffs(kind), 2);
+        let op = OpSpec::Matmul { m: 32, n: 32, k: 32 };
+        let cfgs = sample_cfgs(&op, kind, 8);
+        ev.score_batch(&op, &cfgs);
+        let misses_before = ev.stats().misses;
+
+        let new_coeffs = vec![2.0, 0.5, 1.0, 0.0, 3.0, 0.25, 1.5];
+        ev.swap_coeffs(new_coeffs.clone());
+        let swapped = ev.score_batch(&op, &cfgs);
+        assert_eq!(ev.stats().misses, misses_before, "swap path re-lowered");
+
+        let fresh = CandidateEvaluator::with_threads(
+            CostModel::with_coeffs(kind, new_coeffs),
+            2,
+        );
+        assert_eq!(swapped, fresh.score_batch(&op, &cfgs), "swap diverged from fresh");
+    }
+
+    #[test]
+    #[should_panic(expected = "feature dimensionality")]
+    fn swap_coeffs_rejects_wrong_dimensionality() {
+        let ev = CandidateEvaluator::new(CostModel::with_default_coeffs(TargetKind::Graviton2));
+        ev.swap_coeffs(vec![1.0, 2.0]); // CPU targets have 7 features
+    }
+
+    #[test]
+    fn score_batch_with_is_pure_dot_product_after_warmup() {
+        let kind = TargetKind::Graviton2;
+        let ev = CandidateEvaluator::with_threads(CostModel::with_default_coeffs(kind), 2);
+        let op = OpSpec::Matmul { m: 32, n: 32, k: 32 };
+        let cfgs = sample_cfgs(&op, kind, 8);
+        ev.score_batch(&op, &cfgs); // warm the feature store
+        let misses_before = ev.stats().misses;
+        for variant in 0..4u32 {
+            let coeffs: Vec<f64> = (0..7).map(|i| (i + 1) as f64 * (variant + 1) as f64).collect();
+            let got = ev.score_batch_with(&coeffs, &op, &cfgs);
+            let want = CandidateEvaluator::new(CostModel::with_coeffs(kind, coeffs))
+                .score_batch(&op, &cfgs);
+            assert_eq!(got, want, "variant {variant} diverged");
+        }
+        assert_eq!(ev.stats().misses, misses_before, "variant scoring re-lowered");
     }
 }

@@ -69,7 +69,7 @@ pub mod transform;
 pub mod util;
 pub mod vendor;
 
-pub use analysis::cost::{CostError, CostModel, FeatureVector};
+pub use analysis::cost::{CostError, CostModel, FeatureExtractor, FeatureVector, LinearScorer};
 pub use eval::{CandidateEvaluator, ScheduleCache};
 pub use isa::MicroArch;
 pub use tir::ops::OpSpec;

@@ -202,7 +202,7 @@ fn cmd_calibrate(flags: &BTreeMap<String, String>) -> Result<(), String> {
             &tuna::analysis::cost::CPU_FEATURES
         };
         println!("# {}", kind.display_name());
-        for (n, c) in names.iter().zip(&cm.coeffs) {
+        for (n, c) in names.iter().zip(cm.coeffs()) {
             println!("  {n:<16} {c:.6}");
         }
     }

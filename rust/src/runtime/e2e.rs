@@ -70,7 +70,7 @@ pub fn config_for_tiles(op: &OpSpec, kind: TargetKind, tiles: (i64, i64, i64)) -
 /// Static features of one GEMM under a Pallas tile triple (host model).
 fn gemm_features(cm: &CostModel, m: i64, n: i64, k: i64, tiles: (i64, i64, i64)) -> FeatureVector {
     let op = OpSpec::Matmul { m, n, k };
-    let cfg = config_for_tiles(&op, cm.kind, tiles);
+    let cfg = config_for_tiles(&op, cm.kind(), tiles);
     cm.features(&op, &cfg)
 }
 

@@ -1,8 +1,10 @@
 //! Integration tests for the staged candidate-evaluation pipeline:
-//! batched-vs-sequential score equivalence on CPU and GPU targets, the
-//! schedule cache's JSON round trip and cross-process reuse, cache-hit
-//! behaviour of repeated `tune_network` runs, and typed-error propagation
-//! through the batched search instead of mid-search panics.
+//! batched-vs-sequential score equivalence on CPU and GPU targets,
+//! coefficient-swap re-scoring from the memoized feature store (no
+//! re-lowering), the schedule cache's JSON round trip, bounded-cache
+//! eviction, cross-process reuse, cache-hit behaviour of repeated
+//! `tune_network` runs, and typed-error propagation through the batched
+//! search instead of mid-search panics.
 
 use tuna::analysis::cost::{extract_gpu, CostError};
 use tuna::coordinator::{Coordinator, Strategy};
@@ -196,6 +198,160 @@ fn persisted_cache_skips_searches_across_coordinators() {
     for (key, rep) in &rep2.per_op {
         assert_eq!(rep.chosen, rep1.per_op[key].chosen, "{key} deployed a different schedule");
     }
+}
+
+/// The recalibration contract, CPU: an evaluator that swaps coefficients
+/// after a batch must score bit-identically to a fresh evaluator built
+/// with those coefficients — and the swap path must not re-lower anything
+/// (feature-memo miss count unchanged).
+#[test]
+fn swap_coeffs_matches_fresh_evaluator_cpu() {
+    let kind = TargetKind::Graviton2;
+    let ev = CandidateEvaluator::new(CostModel::with_default_coeffs(kind));
+    let op =
+        OpSpec::Conv2d { n: 1, cin: 8, h: 14, w: 14, cout: 16, kh: 3, kw: 3, stride: 1, pad: 1 };
+    let cfgs = sample_cfgs(&op, kind, 24);
+    ev.score_batch(&op, &cfgs);
+    let misses_before = ev.stats().misses;
+
+    let coeffs = vec![0.7, 1.3, 0.2, 2.0, 0.9, 5.0, 0.4];
+    ev.swap_coeffs(coeffs.clone());
+    let swapped = ev.score_batch(&op, &cfgs);
+    assert_eq!(ev.stats().misses, misses_before, "swap path re-lowered candidates");
+
+    let fresh = CandidateEvaluator::new(CostModel::with_coeffs(kind, coeffs.clone()));
+    assert_eq!(swapped, fresh.score_batch(&op, &cfgs), "swapped scores diverged from fresh");
+    // and both agree with the one-call model API
+    let cm = CostModel::with_coeffs(kind, coeffs);
+    let sequential: Vec<f64> = cfgs.iter().map(|c| cm.predict(&op, c)).collect();
+    assert_eq!(swapped, sequential);
+}
+
+/// Same recalibration contract on a GPU target.
+#[test]
+fn swap_coeffs_matches_fresh_evaluator_gpu() {
+    let kind = TargetKind::TeslaV100;
+    let ev = CandidateEvaluator::new(CostModel::with_default_coeffs(kind));
+    let op = OpSpec::Matmul { m: 128, n: 128, k: 64 };
+    let cfgs = sample_cfgs(&op, kind, 24);
+    ev.score_batch(&op, &cfgs);
+    let misses_before = ev.stats().misses;
+
+    let coeffs = vec![1.5, 0.8, 2.0, 0.1, 0.6, 3.0];
+    ev.swap_coeffs(coeffs.clone());
+    let swapped = ev.score_batch(&op, &cfgs);
+    assert_eq!(ev.stats().misses, misses_before, "GPU swap path re-lowered candidates");
+
+    let fresh = CandidateEvaluator::new(CostModel::with_coeffs(kind, coeffs));
+    assert_eq!(swapped, fresh.score_batch(&op, &cfgs), "GPU swapped scores diverged");
+}
+
+/// `recalibrate` through the evaluator is bit-identical to calibrating a
+/// bare `CostModel` on the same samples.
+#[test]
+fn recalibrate_matches_bare_model_calibration() {
+    let kind = TargetKind::Graviton2;
+    let ev = CandidateEvaluator::new(CostModel::with_default_coeffs(kind));
+    let op = OpSpec::Matmul { m: 48, n: 48, k: 48 };
+    let cfgs = sample_cfgs(&op, kind, 20);
+    // synthetic ground truth over memoized features
+    let samples: Vec<_> = cfgs
+        .iter()
+        .map(|c| {
+            let fv = ev.try_features(&op, c).unwrap();
+            let y = 3.0 * fv.values[0] + 7.0 * fv.values[5] + 1.0;
+            (fv, y)
+        })
+        .collect();
+    ev.recalibrate(&samples);
+
+    let mut cm = CostModel::with_default_coeffs(kind);
+    cm.calibrate(&samples);
+    assert_eq!(ev.coeffs(), cm.coeffs(), "refit diverged from bare calibrate");
+    let batch = ev.score_batch(&op, &cfgs);
+    let sequential: Vec<f64> = cfgs.iter().map(|c| cm.predict(&op, c)).collect();
+    assert_eq!(batch, sequential);
+}
+
+/// Multi-model scoring: several coefficient vectors over one set of
+/// lowered features, each bit-identical to a dedicated model, with zero
+/// extra lowering.
+#[test]
+fn score_batch_with_scores_many_models_from_one_feature_pass() {
+    let kind = TargetKind::Graviton2;
+    let ev = CandidateEvaluator::new(CostModel::with_default_coeffs(kind));
+    let op = OpSpec::Matmul { m: 64, n: 32, k: 32 };
+    let cfgs = sample_cfgs(&op, kind, 16);
+    ev.score_batch(&op, &cfgs); // the one feature pass
+    let misses_before = ev.stats().misses;
+    for variant in 1..=3u32 {
+        let coeffs: Vec<f64> = (0..7).map(|i| (i as f64 + 0.5) * variant as f64).collect();
+        let got = ev.score_batch_with(&coeffs, &op, &cfgs);
+        let cm = CostModel::with_coeffs(kind, coeffs);
+        let want: Vec<f64> = cfgs.iter().map(|c| cm.predict(&op, c)).collect();
+        assert_eq!(got, want, "variant {variant} diverged");
+    }
+    assert_eq!(ev.stats().misses, misses_before, "multi-model pass re-lowered");
+}
+
+/// A coordinator's recalibration stage re-ranks its cached entries under
+/// the new coefficients without invalidating the cache: the next request
+/// is still a hit and deploys the re-chosen schedule.
+#[test]
+fn coordinator_recalibration_rescores_cache_without_new_searches() {
+    let c = Coordinator::new_uncalibrated(TargetKind::Graviton2);
+    let op = OpSpec::Matmul { m: 64, n: 64, k: 64 };
+    let strategy = Strategy::TunaStatic(tiny_es());
+    let first = c.tune_op(&op, &strategy);
+    assert!(!first.cache_hit);
+
+    let coeffs = vec![0.2, 1.1, 0.4, 2.2, 0.3, 6.0, 0.8];
+    let reranked = c.swap_coeffs(coeffs.clone());
+    assert_eq!(reranked, 1);
+
+    let second = c.tune_op(&op, &strategy);
+    assert!(second.cache_hit, "recalibration invalidated the cache");
+    assert_eq!(c.searches_performed(), 1);
+    let cm = CostModel::with_coeffs(TargetKind::Graviton2, coeffs);
+    for (cfg, s) in &second.top_k {
+        assert_eq!(*s, cm.predict(&op, cfg), "cached top-k not re-scored");
+    }
+    assert!(second.top_k.windows(2).all(|w| w[0].1 <= w[1].1));
+    assert_eq!(second.chosen, second.top_k[0].0);
+}
+
+/// A bounded schedule cache under tuning churn: never exceeds its cap,
+/// reports evictions, survives a JSON save/load round trip, and an
+/// evicted task falls back to a fresh (deterministic) search.
+#[test]
+fn bounded_cache_evicts_and_falls_back_to_search() {
+    let c = Coordinator::new_uncalibrated(TargetKind::Graviton2);
+    c.set_cache_capacity(Some(2));
+    let strategy = Strategy::TunaStatic(tiny_es());
+    let ops = [
+        OpSpec::Matmul { m: 32, n: 32, k: 32 },
+        OpSpec::Matmul { m: 48, n: 32, k: 32 },
+        OpSpec::Matmul { m: 64, n: 32, k: 32 },
+        OpSpec::Matmul { m: 96, n: 32, k: 32 },
+    ];
+    let first: Vec<_> = ops.iter().map(|op| c.tune_op(op, &strategy)).collect();
+    let (entries, _, _) = c.cache_stats();
+    assert_eq!(entries, 2, "cap breached");
+    assert_eq!(c.cache_evictions(), 2);
+
+    // the bounded cache still round-trips its resident entries
+    let path = std::env::temp_dir().join(format!("tuna_cache_ev_{}.json", std::process::id()));
+    c.save_cache(&path).unwrap();
+    let back = ScheduleCache::load(&path).unwrap();
+    let _ = std::fs::remove_file(&path);
+    assert_eq!(back.len(), 2);
+
+    // evicted task: miss → fresh search → same deterministic outcome
+    let searches_before = c.searches_performed();
+    let again = c.tune_op(&ops[0], &strategy);
+    assert!(!again.cache_hit, "evicted entry served");
+    assert_eq!(c.searches_performed(), searches_before + 1);
+    assert_eq!(again.chosen, first[0].chosen, "re-search diverged");
 }
 
 /// Different targets never share cache entries even for the same op.
