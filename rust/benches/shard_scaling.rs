@@ -1,0 +1,99 @@
+//! Shard-scaling bench — the paper's distributed-compilation claim made
+//! quantitative on the Table-I networks: because candidate evaluation is
+//! static (no device in the loop), tuning work partitions over N workers
+//! and the only serial step left is merging their schedule caches.
+//!
+//! Each worker is timed running its deterministic partition with the full
+//! host to itself (workers on separate machines don't share cores, so
+//! running them back-to-back and reporting `max(worker wall)` is the
+//! honest N-machine wall-clock; `sum(worker wall)` is the single-machine
+//! cost). Speedup = single-process total / max worker wall. Efficiency
+//! falls off exactly as far as the hash partition is unbalanced — small
+//! task sets (BERT: 6 tasks) plateau early, the SSD networks (~dozens of
+//! tasks) stay near-linear.
+//!
+//! Every shard count also merges the worker caches, serves the whole
+//! network from the merged cache with zero searches, and asserts the
+//! deployment is identical to the single-process outcome.
+//!
+//! ```bash
+//! cargo bench --bench shard_scaling
+//! TUNA_BENCH_FAST=1 TUNA_BENCH_NETS=bert_base TUNA_BENCH_TARGETS=graviton2 \
+//!     cargo bench --bench shard_scaling
+//! ```
+
+mod common;
+
+use std::time::Instant;
+use tuna::coordinator::{Coordinator, NetworkReport, Strategy};
+use tuna::shard::{self, ShardWorker};
+
+fn main() {
+    for kind in common::targets() {
+        for net in common::networks() {
+            let tasks = net.unique_tasks();
+            let strategy = Strategy::TunaStatic(common::es_params());
+            let model = tuna::coordinator::calibrate::calibrated_model(kind);
+            println!(
+                "== shard scaling: {} on {} ({} tasks) ==",
+                net.name,
+                kind.display_name(),
+                tasks.len()
+            );
+
+            let mut single_total = 0.0_f64;
+            let mut reference: Option<NetworkReport> = None;
+            for n in [1usize, 2, 4, 8] {
+                let shards = shard::partition(kind, &tasks, n);
+                let occupied = shards.iter().filter(|s| !s.is_empty()).count();
+
+                // workers run back-to-back, each with the whole host (as
+                // they would on N separate machines); per-worker wall
+                // times give both the N-machine and 1-machine clocks
+                let mut worker_walls = Vec::new();
+                let mut caches = Vec::new();
+                for (id, shard_tasks) in shards.iter().enumerate() {
+                    let worker = ShardWorker::with_model(id, kind, model.clone());
+                    let t0 = Instant::now();
+                    worker.run(shard_tasks, &strategy);
+                    worker_walls.push(t0.elapsed().as_secs_f64());
+                    caches.push(worker.into_cache());
+                }
+                let total: f64 = worker_walls.iter().sum();
+                let wall = worker_walls.iter().cloned().fold(0.0, f64::max);
+                if n == 1 {
+                    single_total = total;
+                }
+
+                // merge + serve: the whole network from the merged cache,
+                // zero searches, identical to the single-process tune
+                let (merged, stats) = shard::merge_caches(caches);
+                assert_eq!(stats.combined, 0, "disjoint partition clashed at n={n}");
+                assert_eq!(merged.len(), tasks.len());
+                let serving = Coordinator::with_model(kind, model.clone());
+                serving.import_cache(merged);
+                let rep = serving.tune_network(&net, &strategy);
+                assert_eq!(
+                    serving.searches_performed(),
+                    0,
+                    "merged cache incomplete at n={n}"
+                );
+                match &reference {
+                    None => reference = Some(rep),
+                    Some(want) => assert_eq!(
+                        rep.latency_s, want.latency_s,
+                        "n={n} deployment diverged from single-process"
+                    ),
+                }
+
+                let speedup = if wall > 0.0 { single_total / wall } else { 1.0 };
+                println!(
+                    "  shards {n:>2} (occupied {occupied:>2})  1-machine {total:>8.2}s  \
+                     N-machine wall {wall:>8.2}s  speedup {speedup:>5.2}x  \
+                     efficiency {:>5.1}%",
+                    100.0 * speedup / n as f64
+                );
+            }
+        }
+    }
+}

@@ -33,9 +33,21 @@
 //! [`Coordinator::recalibrate`]): because the evaluator memoizes stage-1
 //! feature vectors (not final scores), new coefficients re-rank every
 //! cached top-k list as pure dot-product work — no candidate is ever
-//! re-lowered. Calibration itself flows through the same feature store
+//! re-lowered. Cache entries are *self-describing* (each carries its
+//! [`OpSpec`]), so the stage re-ranks any entry — including entries merged
+//! from shard workers or loaded from disk by a process that never tuned
+//! them. Calibration itself flows through the same feature store
 //! ([`calibrate::calibrate_evaluator`]), so `Coordinator::new` warms the
 //! memo it will search with.
+//!
+//! Because candidate evaluation never touches a device, whole tuning runs
+//! shard across workers ([`crate::shard`]): a deterministic partitioner
+//! assigns each task to one worker, each worker tunes its shard on a
+//! private coordinator, and the emitted caches merge
+//! ([`Coordinator::import_cache`]) into one serving cache —
+//! [`Coordinator::tune_network_sharded`] is the in-process form of that
+//! fan-out, and the shard integration tests pin its outcome bit-identical
+//! to a single-process `tune_network`.
 //!
 //! Two clocks:
 //!
@@ -53,7 +65,7 @@ pub mod calibrate;
 use crate::analysis::cost::CostError;
 use crate::analysis::CostModel;
 use crate::autotvm::{self, TunerParams};
-use crate::eval::{CachedSchedule, CandidateEvaluator, ScheduleCache};
+use crate::eval::{CacheError, CachedSchedule, CandidateEvaluator, MergeStats, ScheduleCache};
 use crate::graph::Network;
 use crate::isa::TargetKind;
 use crate::search::{EsParams, EvolutionStrategies, SearchResult};
@@ -145,11 +157,6 @@ pub struct Coordinator {
     pub threads: usize,
     evaluator: CandidateEvaluator,
     cache: Mutex<ScheduleCache>,
-    /// Cache key → op for every task this process has recorded or served —
-    /// what lets the recalibration stage re-score cached entries (the key
-    /// string alone cannot recover the workload). Pruned in step with
-    /// bounded-cache eviction.
-    tasks: Mutex<BTreeMap<String, OpSpec>>,
     /// Bumped by every coefficient change. A search that was in flight
     /// across a recalibration detects the mismatch at record time and
     /// re-scores its own entry, closing the race between `swap_coeffs`'s
@@ -185,15 +192,22 @@ impl Coordinator {
         Self::with_model(kind, CostModel::with_default_coeffs(kind))
     }
 
-    fn with_model(kind: TargetKind, cost_model: CostModel) -> Self {
-        let threads = crate::util::pool::default_threads();
+    /// Build around an already-fitted model — how shard workers inherit
+    /// their parent coordinator's calibration without refitting.
+    pub fn with_model(kind: TargetKind, cost_model: CostModel) -> Self {
+        Self::with_model_threads(kind, cost_model, crate::util::pool::default_threads())
+    }
+
+    /// [`Self::with_model`] with an explicit evaluator thread count (shard
+    /// workers running side by side split the host between them).
+    pub fn with_model_threads(kind: TargetKind, cost_model: CostModel, threads: usize) -> Self {
+        let threads = threads.max(1);
         Coordinator {
             kind,
             evaluator: CandidateEvaluator::with_threads(cost_model, threads),
             device: Device::new(kind),
             threads,
             cache: Mutex::new(ScheduleCache::new()),
-            tasks: Mutex::new(BTreeMap::new()),
             coeff_epoch: AtomicU64::new(0),
             recal: Mutex::new(()),
             searches: AtomicU64::new(0),
@@ -231,15 +245,16 @@ impl Coordinator {
     /// least-recently-hit entry is evicted. Evicted tasks simply fall back
     /// to a fresh search on their next request.
     pub fn set_cache_capacity(&self, cap: Option<usize>) {
-        let evicted = self.cache.lock().unwrap().set_capacity(cap);
-        self.drop_task_records(evicted);
+        self.cache.lock().unwrap().set_capacity(cap);
     }
 
     /// The recalibration stage: swap new coefficients into the shared
-    /// evaluator and re-rank every cached entry this process knows the
-    /// workload for — chosen + top-k re-scored from the memoized feature
-    /// store (the search already lowered those candidates, so this is pure
-    /// stage-2 work), re-sorted, chosen updated to the new argmin. Returns
+    /// evaluator and re-rank every self-describing cached entry — chosen +
+    /// top-k re-scored through the feature store (candidates searched this
+    /// process are already memoized, so they cost pure stage-2 dot
+    /// products; entries merged or loaded from disk are lowered once and
+    /// memoized from then on), re-sorted, chosen updated to the new argmin.
+    /// Returns
     /// the number of cache entries re-ranked. Recalibrations serialize
     /// against each other; searches in flight across the swap re-score
     /// their own entries at record time (see [`Self::try_tune_op`]).
@@ -260,17 +275,6 @@ impl Coordinator {
         self.rescore_cached()
     }
 
-    /// Forget the workload records behind evicted cache keys, keeping the
-    /// tasks map bounded in step with a bounded cache.
-    fn drop_task_records(&self, evicted: Vec<String>) {
-        if !evicted.is_empty() {
-            let mut tasks = self.tasks.lock().unwrap();
-            for key in evicted {
-                tasks.remove(&key);
-            }
-        }
-    }
-
     /// Re-score one cached entry under the evaluator's current
     /// coefficients: top-k recomputed from the memoized feature store,
     /// re-sorted, chosen updated to the new argmin. Scoring happens
@@ -282,6 +286,16 @@ impl Coordinator {
         let Some(snapshot) = self.cache.lock().unwrap().peek(key).cloned() else {
             return false; // evicted since it was recorded
         };
+        // self-describing entries may come from disk or a merge, so —
+        // exactly like the serving path's `get_valid` — validate every
+        // config against the live space before scoring: a corrupt or
+        // stale entry must be skipped, not panic inside lowering
+        let space = transform::config_space(op, self.kind);
+        if !space.contains(&snapshot.chosen)
+            || !snapshot.top_k.iter().all(|(c, _)| space.contains(c))
+        {
+            return false;
+        }
         let cfgs: Vec<ScheduleConfig> =
             snapshot.top_k.iter().map(|(c, _)| c.clone()).collect();
         let Ok(scores) = self.evaluator.try_score_batch(op, &cfgs) else {
@@ -303,28 +317,20 @@ impl Coordinator {
         }
     }
 
-    /// Re-score every known cached entry under the evaluator's current
-    /// coefficients, pruning task records whose entries were evicted.
+    /// Re-score every cached entry under the evaluator's current
+    /// coefficients. Entries describe their own workload, so this covers
+    /// everything resident — searched here, merged from a shard worker, or
+    /// loaded from disk. Only entries migrated from a pre-OpSpec
+    /// (version-1) file are skipped: without a workload there is nothing
+    /// to lower against.
     fn rescore_cached(&self) -> usize {
-        let tasks: Vec<(String, OpSpec)> = self
-            .tasks
-            .lock()
-            .unwrap()
-            .iter()
-            .map(|(k, op)| (k.clone(), *op))
-            .collect();
+        let tasks = self.cache.lock().unwrap().tasks();
         let mut rescored = 0;
-        let mut dead = Vec::new();
         for (key, op) in tasks {
-            if self.cache.lock().unwrap().peek(&key).is_none() {
-                dead.push(key);
-                continue;
-            }
             if self.rescore_entry(&key, &op) {
                 rescored += 1;
             }
         }
-        self.drop_task_records(dead);
         rescored
     }
 
@@ -334,12 +340,29 @@ impl Coordinator {
     }
 
     /// Merge a persisted schedule cache into this coordinator; returns the
-    /// number of entries now resident.
-    pub fn load_cache(&self, path: &Path) -> std::io::Result<usize> {
+    /// number of entries now resident. Malformed files surface as a typed
+    /// [`CacheError`] (never a silently empty cache): distinguish an
+    /// unreadable file, invalid JSON, an unsupported format version, and a
+    /// corrupt entry (named by key).
+    pub fn load_cache(&self, path: &Path) -> Result<usize, CacheError> {
         let loaded = ScheduleCache::load(path)?;
         let mut c = self.cache.lock().unwrap();
-        c.merge(loaded);
+        c.merge_from(loaded);
         Ok(c.len())
+    }
+
+    /// Snapshot this coordinator's schedule cache — how a shard worker
+    /// emits its results for merging.
+    pub fn export_cache(&self) -> ScheduleCache {
+        self.cache.lock().unwrap().clone()
+    }
+
+    /// Merge an in-memory cache (e.g. a shard worker's
+    /// [`Self::export_cache`]) into this coordinator's serving cache. On
+    /// key clashes the top-k lists are unioned and the chosen config
+    /// becomes the union's argmin (see [`ScheduleCache::merge_from`]).
+    pub fn import_cache(&self, other: ScheduleCache) -> MergeStats {
+        self.cache.lock().unwrap().merge_from(other)
     }
 
     /// Tune one operator under a strategy (panics on evaluation failure;
@@ -363,9 +386,6 @@ impl Coordinator {
             .cache_sig()
             .map(|sig| ScheduleCache::key(self.kind, op, &space, &sig));
         if let Some(k) = &key {
-            // remember the workload behind this key so the recalibration
-            // stage can re-score the entry later
-            self.tasks.lock().unwrap().insert(k.clone(), *op);
             // stale/corrupt persisted entries (chosen or top-k configs that
             // no longer fit the space) count as misses and fall through to
             // a fresh search
@@ -440,21 +460,20 @@ impl Coordinator {
             }
         };
 
-        // stage 3: record the outcome, then deploy once for ground truth
+        // stage 3: record the outcome (the entry carries its own workload,
+        // so any later process can re-rank it), then deploy once for
+        // ground truth
         if let Some(k) = &key {
-            // re-record the task: bounded-cache eviction may have dropped
-            // the stage-1 record while this search ran
-            self.tasks.lock().unwrap().insert(k.clone(), *op);
-            let evicted = self.cache.lock().unwrap().insert(
+            self.cache.lock().unwrap().insert(
                 k.clone(),
                 CachedSchedule {
                     chosen: result.best.clone(),
                     best_score: result.best_score,
                     top_k: result.top_k.clone(),
                     evaluations: result.evaluations,
+                    op: Some(*op),
                 },
             );
-            self.drop_task_records(evicted);
             // a recalibration landed mid-search: this entry's scores are
             // from the old coefficients, and the bulk re-rank may have run
             // before the insert — re-score it here (memoized features, so
@@ -513,6 +532,67 @@ impl Coordinator {
             device_s,
             cache_hits,
         }
+    }
+
+    /// Tune a whole network by fanning its task list over `n_shards`
+    /// in-process shard workers, then serving from the merged cache — the
+    /// single-host form of the paper's multi-machine compilation claim
+    /// (static evaluation needs no device, so workers scale with cores).
+    ///
+    /// Each worker is a private [`Coordinator`] sharing this one's cost
+    /// model (no refit), assigned a deterministic partition of the task
+    /// list ([`crate::shard::partition`]). The workers' caches merge into
+    /// this coordinator, and the final `tune_network` pass serves every
+    /// task from the merged cache — searches are deterministic, so the
+    /// result is bit-identical to an unsharded `tune_network`, which the
+    /// shard integration tests pin down.
+    ///
+    /// Measured strategies (AutoTVM) are never cached, so sharding cannot
+    /// hand their results across workers; those fall through to a plain
+    /// `tune_network` (their bottleneck is the sequential device anyway).
+    pub fn tune_network_sharded(
+        &self,
+        net: &Network,
+        strategy: &Strategy,
+        n_shards: usize,
+    ) -> NetworkReport {
+        let n_shards = n_shards.max(1);
+        let sig = match strategy.cache_sig() {
+            Some(sig) if n_shards > 1 => sig,
+            _ => return self.tune_network(net, strategy),
+        };
+        // tasks the (possibly warm — load_cache/import_cache) serving
+        // cache already holds need no worker: sharding only the cold
+        // tasks keeps a warm-started sharded tune incremental
+        let cold: Vec<OpSpec> = net
+            .unique_tasks()
+            .into_iter()
+            .filter(|op| {
+                let space = transform::config_space(op, self.kind);
+                let key = ScheduleCache::key(self.kind, op, &space, &sig);
+                self.cache.lock().unwrap().peek(&key).is_none()
+            })
+            .collect();
+        if !cold.is_empty() {
+            let shards = crate::shard::partition(self.kind, &cold, n_shards);
+            // workers run side by side, so each gets a slice of the host
+            let worker_threads = (self.threads / n_shards).max(1);
+            let work: Vec<(usize, Vec<OpSpec>)> = shards.into_iter().enumerate().collect();
+            let caches: Vec<ScheduleCache> = parallel_map(work, n_shards, |(id, tasks)| {
+                let worker = crate::shard::ShardWorker::with_model_threads(
+                    id,
+                    self.kind,
+                    self.cost_model(),
+                    worker_threads,
+                );
+                worker.run(&tasks, strategy);
+                worker.into_cache()
+            });
+            for cache in caches {
+                self.import_cache(cache);
+            }
+        }
+        self.tune_network(net, strategy)
     }
 
     /// Tuna's per-network compile budget, used to parameterize the
@@ -648,6 +728,33 @@ mod tests {
         assert_eq!(c.searches_performed(), 3, "eviction did not force a re-search");
         // the re-search is deterministic, so the outcome matches
         assert_eq!(again.chosen, first.chosen);
+    }
+
+    #[test]
+    fn sharded_tune_network_matches_single_process() {
+        use crate::graph::{Layer, Network};
+        let net = Network {
+            name: "shard_toy",
+            display: "ShardToy",
+            layers: vec![
+                Layer::single(OpSpec::Matmul { m: 32, n: 32, k: 32 }, 1),
+                Layer::single(OpSpec::Matmul { m: 48, n: 32, k: 32 }, 2),
+                Layer::single(OpSpec::Matmul { m: 64, n: 32, k: 32 }, 1),
+            ],
+        };
+        let strategy = Strategy::TunaStatic(tiny_es());
+        let single = Coordinator::new_uncalibrated(TargetKind::Graviton2);
+        let want = single.tune_network(&net, &strategy);
+
+        let sharded = Coordinator::new_uncalibrated(TargetKind::Graviton2);
+        let got = sharded.tune_network_sharded(&net, &strategy, 3);
+        // every search ran in a worker; the serving pass is pure cache
+        assert_eq!(sharded.searches_performed(), 0, "serving pass searched");
+        assert_eq!(got.cache_hits, net.unique_tasks().len() as u64);
+        assert_eq!(got.latency_s, want.latency_s, "sharded deployment diverged");
+        for (key, rep) in &got.per_op {
+            assert_eq!(rep.chosen, want.per_op[key].chosen, "{key} chose differently");
+        }
     }
 
     #[test]

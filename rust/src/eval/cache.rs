@@ -14,6 +14,20 @@
 //! the search signature pins the strategy and its hyperparameters, so a
 //! `k=5` sweep can never serve a `k=50` request.
 //!
+//! Since format version 2, each entry is **self-describing**: it carries
+//! the [`OpSpec`] of the workload it was tuned for. Merged and disk-loaded
+//! entries can therefore be re-ranked by the coordinator's recalibration
+//! stage without any in-process `key → OpSpec` bookkeeping — the entry
+//! *is* the task. Version-1 files (pre-OpSpec) still load; their entries
+//! just arrive without a workload (`op: None`) and are skipped by
+//! re-ranking. See `docs/CACHE_FORMAT.md` for the full on-disk spec.
+//!
+//! Caches produced by independent shard workers combine through
+//! [`ScheduleCache::merge_from`]: disjoint keys are inserted as-is, and on
+//! a key clash the two top-k lists are unioned (incoming scores win on
+//! duplicate configs), re-sorted, and the chosen config becomes the new
+//! argmin — so N worker caches collapse into one serving cache.
+//!
 //! The cache can be bounded ([`ScheduleCache::set_capacity`]): above the
 //! cap, the least-recently-*hit* entry is evicted (recency advances on
 //! lookup hits, inserts and updates), and the eviction count is reported
@@ -31,8 +45,83 @@ use std::path::Path;
 use std::sync::Arc;
 
 /// Current on-disk format version. Bump on layout changes; loaders reject
-/// other versions rather than misread them.
-const FORMAT_VERSION: f64 = 1.0;
+/// unknown versions rather than misread them. Version 1 (entries without
+/// an embedded `OpSpec`) is still accepted and migrated on load.
+const FORMAT_VERSION: f64 = 2.0;
+
+/// Typed failure of a schedule-cache load. Loading must never silently
+/// start from an empty cache: a malformed tuning log is an operational
+/// signal (truncated copy, version skew between workers, hand-edit gone
+/// wrong), not something to paper over with a fresh search of everything.
+#[derive(Debug)]
+pub enum CacheError {
+    /// The file could not be read at all.
+    Io(io::Error),
+    /// The bytes are not valid JSON.
+    Parse(String),
+    /// Valid JSON, but not a schedule-cache document (missing/invalid
+    /// version or entries table).
+    Malformed(String),
+    /// A version this build does not understand (`None`: no numeric
+    /// version field at all).
+    UnsupportedVersion(Option<f64>),
+    /// One entry failed validation; names the offending key.
+    Entry { key: String, detail: String },
+}
+
+impl std::fmt::Display for CacheError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CacheError::Io(e) => write!(f, "schedule cache unreadable: {e}"),
+            CacheError::Parse(e) => write!(f, "schedule cache is not valid JSON: {e}"),
+            CacheError::Malformed(e) => write!(f, "schedule cache malformed: {e}"),
+            CacheError::UnsupportedVersion(v) => match v {
+                Some(v) => write!(f, "unsupported schedule-cache version {v}"),
+                None => write!(f, "schedule cache has no version field"),
+            },
+            CacheError::Entry { key, detail } => {
+                write!(f, "schedule-cache entry {key:?} is corrupt: {detail}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for CacheError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            CacheError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<io::Error> for CacheError {
+    fn from(e: io::Error) -> Self {
+        CacheError::Io(e)
+    }
+}
+
+/// What [`ScheduleCache::merge_from`] did: how many incoming entries were
+/// new keys vs. combined with an existing entry.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct MergeStats {
+    /// incoming entries whose key was not yet resident.
+    pub inserted: usize,
+    /// incoming entries combined with an existing entry (top-k union).
+    pub combined: usize,
+}
+
+impl MergeStats {
+    pub fn total(&self) -> usize {
+        self.inserted + self.combined
+    }
+
+    /// Accumulate another merge's stats (for N-way merges).
+    pub fn absorb(&mut self, other: MergeStats) {
+        self.inserted += other.inserted;
+        self.combined += other.combined;
+    }
+}
 
 /// One cached search outcome.
 #[derive(Debug, Clone, PartialEq)]
@@ -44,12 +133,16 @@ pub struct CachedSchedule {
     /// evaluations the original search spent (kept for accounting; a cache
     /// hit itself costs zero evaluations).
     pub evaluations: u64,
+    /// The workload this entry was tuned for — what makes the entry
+    /// self-describing (re-rankable from disk, with no in-process task
+    /// map). `None` only for entries migrated from a version-1 file.
+    pub op: Option<OpSpec>,
 }
 
 /// The cache: ordered map from content address to outcome, plus hit/miss/
 /// eviction counters for reporting. Optionally bounded: see
 /// [`Self::set_capacity`].
-#[derive(Debug, Default)]
+#[derive(Debug, Default, Clone)]
 pub struct ScheduleCache {
     entries: BTreeMap<String, CachedSchedule>,
     /// Size bound; `None` = unbounded.
@@ -194,15 +287,47 @@ impl ScheduleCache {
         self.enforce_capacity()
     }
 
-    /// Absorb every entry of `other` (newer entries win on key clashes).
-    /// Merged entries arrive with fresh recency; the receiving cache's
-    /// capacity is enforced afterwards.
+    /// Absorb every entry of `other` (see [`Self::merge_from`] for the
+    /// conflict rules), discarding the stats.
     pub fn merge(&mut self, other: ScheduleCache) {
-        for (k, v) in other.entries {
+        self.merge_from(other);
+    }
+
+    /// Absorb every entry of `other` — the step that combines N shard
+    /// workers' caches into one serving cache. Disjoint keys (the common
+    /// case under a disjoint work partition) are inserted unchanged. On a
+    /// key clash the entries are *combined*, not overwritten:
+    ///
+    /// * the two top-k lists are unioned by config — the incoming (newer)
+    ///   score wins where both sides scored the same config — then
+    ///   re-sorted ascending and truncated to the longer of the two
+    ///   original lists, so a merge never grows k;
+    /// * `chosen`/`best_score` become the head of the merged list (the
+    ///   union's argmin);
+    /// * `evaluations` are summed (both searches really ran);
+    /// * a `Some` op wins over `None`, so merging a self-describing entry
+    ///   into a migrated version-1 entry upgrades it.
+    ///
+    /// Merged entries arrive with fresh recency (`other`'s iteration
+    /// order stands in for last-hit order); the receiving cache's capacity
+    /// is enforced afterwards.
+    pub fn merge_from(&mut self, other: ScheduleCache) -> MergeStats {
+        let mut stats = MergeStats::default();
+        for (k, incoming) in other.entries {
             self.touch(&k);
-            self.entries.insert(k, v);
+            match self.entries.remove(&k) {
+                Some(existing) => {
+                    stats.combined += 1;
+                    self.entries.insert(k, combine_entries(existing, incoming));
+                }
+                None => {
+                    stats.inserted += 1;
+                    self.entries.insert(k, incoming);
+                }
+            }
         }
         self.enforce_capacity();
+        stats
     }
 
     pub fn len(&self) -> usize {
@@ -230,6 +355,24 @@ impl ScheduleCache {
         self.entries.keys().map(String::as_str)
     }
 
+    /// Uncounted iteration over resident entries (inspection; does not
+    /// advance recency).
+    pub fn iter(&self) -> impl Iterator<Item = (&str, &CachedSchedule)> {
+        self.entries.iter().map(|(k, v)| (k.as_str(), v))
+    }
+
+    /// Every resident task the cache can describe by itself:
+    /// `(key, op)` for each entry carrying its workload. This is what the
+    /// coordinator's recalibration stage iterates — entries migrated from
+    /// a version-1 file (no embedded op) are simply absent. Uncounted, no
+    /// recency effect.
+    pub fn tasks(&self) -> Vec<(String, OpSpec)> {
+        self.entries
+            .iter()
+            .filter_map(|(k, v)| v.op.map(|op| (k.clone(), op)))
+            .collect()
+    }
+
     pub fn to_json(&self) -> Json {
         let entries = self
             .entries
@@ -242,19 +385,27 @@ impl ScheduleCache {
         ])
     }
 
-    pub fn from_json(j: &Json) -> Result<Self, String> {
-        match j.get("version").and_then(Json::as_f64) {
-            Some(v) if v == FORMAT_VERSION => {}
-            other => return Err(format!("unsupported schedule-cache version {other:?}")),
+    /// Deserialize. Accepts the current format (2) and migrates format 1
+    /// in place: version-1 entries predate the embedded `OpSpec`, so they
+    /// load with `op: None` — servable as always, just not re-rankable.
+    /// Anything else is a typed [`CacheError`], never a silently empty
+    /// cache.
+    pub fn from_json(j: &Json) -> Result<Self, CacheError> {
+        let version = j.get("version").and_then(Json::as_f64);
+        match version {
+            Some(v) if v == 1.0 || v == FORMAT_VERSION => {}
+            other => return Err(CacheError::UnsupportedVersion(other)),
         }
         let Some(Json::Obj(entries)) = j.get("entries") else {
-            return Err("schedule cache missing 'entries' object".into());
+            return Err(CacheError::Malformed("missing 'entries' object".into()));
         };
         let mut cache = ScheduleCache::new();
         for (k, v) in entries {
             // route through insert so every entry gets a recency record
             // (deserialization order stands in for last-hit order)
-            cache.insert(k.clone(), entry_from_json(v).map_err(|e| format!("{k}: {e}"))?);
+            let entry = entry_from_json(v)
+                .map_err(|detail| CacheError::Entry { key: k.clone(), detail })?;
+            cache.insert(k.clone(), entry);
         }
         Ok(cache)
     }
@@ -269,12 +420,39 @@ impl ScheduleCache {
         std::fs::write(path, self.to_json().to_string())
     }
 
-    /// Load from `path`; parse failures surface as `InvalidData`.
-    pub fn load(path: &Path) -> io::Result<Self> {
+    /// Load from `path`. Every failure mode is a typed [`CacheError`]:
+    /// unreadable file, invalid JSON, wrong document shape, unknown
+    /// version, or a corrupt entry (named by key).
+    pub fn load(path: &Path) -> Result<Self, CacheError> {
         let text = std::fs::read_to_string(path)?;
-        let j = Json::parse(&text)
-            .map_err(|e| io::Error::new(io::ErrorKind::InvalidData, e))?;
-        Self::from_json(&j).map_err(|e| io::Error::new(io::ErrorKind::InvalidData, e))
+        let j = Json::parse(&text).map_err(CacheError::Parse)?;
+        Self::from_json(&j)
+    }
+}
+
+/// Merge two entries for the same content address (see
+/// [`ScheduleCache::merge_from`] for the policy).
+fn combine_entries(existing: CachedSchedule, incoming: CachedSchedule) -> CachedSchedule {
+    let k = existing.top_k.len().max(incoming.top_k.len()).max(1);
+    let mut top_k = incoming.top_k;
+    for (cfg, score) in existing.top_k {
+        if !top_k.iter().any(|(c, _)| *c == cfg) {
+            top_k.push((cfg, score));
+        }
+    }
+    top_k.sort_by(|a, b| a.1.total_cmp(&b.1));
+    top_k.truncate(k);
+    let (chosen, best_score) = match top_k.first() {
+        Some((c, s)) => (c.clone(), *s),
+        // both lists empty (never produced by a search, but representable)
+        None => (incoming.chosen.clone(), incoming.best_score),
+    };
+    CachedSchedule {
+        chosen,
+        best_score,
+        top_k,
+        evaluations: existing.evaluations + incoming.evaluations,
+        op: incoming.op.or(existing.op),
     }
 }
 
@@ -300,7 +478,7 @@ fn cfg_from_json(j: &Json) -> Result<ScheduleConfig, String> {
 }
 
 fn entry_to_json(e: &CachedSchedule) -> Json {
-    Json::obj(vec![
+    let mut fields = vec![
         ("chosen", cfg_to_json(&e.chosen)),
         ("best_score", Json::Num(e.best_score)),
         ("evaluations", Json::Num(e.evaluations as f64)),
@@ -313,7 +491,13 @@ fn entry_to_json(e: &CachedSchedule) -> Json {
                     .collect(),
             ),
         ),
-    ])
+    ];
+    // absent for entries migrated from a version-1 file — re-saving never
+    // fabricates a workload it does not know
+    if let Some(op) = &e.op {
+        fields.push(("op", op.to_json()));
+    }
+    Json::obj(fields)
 }
 
 fn entry_from_json(j: &Json) -> Result<CachedSchedule, String> {
@@ -330,7 +514,13 @@ fn entry_from_json(j: &Json) -> Result<CachedSchedule, String> {
         let score = p[1].as_f64().ok_or("top_k score must be a number")?;
         top_k.push((cfg_from_json(&p[0])?, score));
     }
-    Ok(CachedSchedule { chosen, best_score, top_k, evaluations })
+    // optional: version-1 entries (and hand-trimmed files) carry no op.
+    // A *present but malformed* op is a corrupt entry, not a missing one.
+    let op = match j.get("op") {
+        Some(op_json) => Some(OpSpec::from_json(op_json)?),
+        None => None,
+    };
+    Ok(CachedSchedule { chosen, best_score, top_k, evaluations, op })
 }
 
 #[cfg(test)]
@@ -347,6 +537,7 @@ mod tests {
                 (ScheduleConfig { choices: vec![2, 1, 0] }, 2000.0),
             ],
             evaluations: 168,
+            op: Some(OpSpec::Matmul { m: 32, n: 32, k: 32 }),
         }
     }
 
@@ -417,7 +608,130 @@ mod tests {
     #[test]
     fn rejects_bad_version() {
         let j = Json::obj(vec![("version", Json::Num(99.0)), ("entries", Json::Obj(Default::default()))]);
-        assert!(ScheduleCache::from_json(&j).is_err());
+        match ScheduleCache::from_json(&j) {
+            Err(CacheError::UnsupportedVersion(Some(v))) => assert_eq!(v, 99.0),
+            other => panic!("expected UnsupportedVersion, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn entries_are_self_describing_through_json() {
+        let mut c = ScheduleCache::new();
+        c.insert("k".into(), sample_entry());
+        let back = ScheduleCache::from_json(&c.to_json()).unwrap();
+        assert_eq!(back.peek("k").unwrap().op, Some(OpSpec::Matmul { m: 32, n: 32, k: 32 }));
+        assert_eq!(back.tasks(), vec![("k".to_string(), OpSpec::Matmul { m: 32, n: 32, k: 32 })]);
+    }
+
+    #[test]
+    fn migrates_version1_files_without_panic() {
+        // a pre-OpSpec (version 1) file: loads fine, entries just carry no
+        // workload and therefore do not appear in tasks()
+        let text = r#"{"version":1,"entries":{"k":{"chosen":[3,0,1],"best_score":1.5,"evaluations":7,"top_k":[[[3,0,1],1.5]]}}}"#;
+        let cache = ScheduleCache::from_json(&Json::parse(text).unwrap()).unwrap();
+        assert_eq!(cache.len(), 1);
+        let e = cache.peek("k").unwrap();
+        assert_eq!(e.op, None, "v1 migration invented a workload");
+        assert_eq!(e.chosen, ScheduleConfig { choices: vec![3, 0, 1] });
+        assert!(cache.tasks().is_empty());
+        // re-saving a migrated entry must not fabricate an 'op' field
+        let resaved = cache.to_json().to_string();
+        assert!(!resaved.contains("\"op\""), "re-save invented an op: {resaved}");
+        // and the re-saved file is version 2
+        assert!(resaved.contains("\"version\":2"), "{resaved}");
+    }
+
+    #[test]
+    fn rejects_malformed_embedded_op() {
+        // 'op' present but corrupt is an Entry error, not a silent None
+        let text = r#"{"version":2,"entries":{"k":{"chosen":[1],"best_score":1.0,"evaluations":1,"top_k":[],"op":{"kind":"sparse"}}}}"#;
+        match ScheduleCache::from_json(&Json::parse(text).unwrap()) {
+            Err(CacheError::Entry { key, .. }) => assert_eq!(key, "k"),
+            other => panic!("expected Entry error, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn load_surfaces_typed_errors() {
+        let dir = std::env::temp_dir();
+        let pid = std::process::id();
+        // unreadable file → Io
+        let missing = dir.join(format!("tuna_cache_absent_{pid}.json"));
+        assert!(matches!(ScheduleCache::load(&missing), Err(CacheError::Io(_))));
+        // invalid JSON → Parse
+        let garbage = dir.join(format!("tuna_cache_garbage_{pid}.json"));
+        std::fs::write(&garbage, "{not json").unwrap();
+        assert!(matches!(ScheduleCache::load(&garbage), Err(CacheError::Parse(_))));
+        let _ = std::fs::remove_file(&garbage);
+        // valid JSON, wrong shape → Malformed
+        let shape = dir.join(format!("tuna_cache_shape_{pid}.json"));
+        std::fs::write(&shape, r#"{"version":2,"entries":[1,2]}"#).unwrap();
+        assert!(matches!(ScheduleCache::load(&shape), Err(CacheError::Malformed(_))));
+        let _ = std::fs::remove_file(&shape);
+        // no version field at all → UnsupportedVersion(None)
+        let unversioned = dir.join(format!("tuna_cache_nover_{pid}.json"));
+        std::fs::write(&unversioned, r#"{"entries":{}}"#).unwrap();
+        assert!(matches!(
+            ScheduleCache::load(&unversioned),
+            Err(CacheError::UnsupportedVersion(None))
+        ));
+        let _ = std::fs::remove_file(&unversioned);
+    }
+
+    fn entry_with(choices: Vec<Vec<usize>>, scores: Vec<f64>, evals: u64) -> CachedSchedule {
+        let top_k: Vec<(ScheduleConfig, f64)> = choices
+            .into_iter()
+            .map(|c| ScheduleConfig { choices: c })
+            .zip(scores)
+            .collect();
+        CachedSchedule {
+            chosen: top_k[0].0.clone(),
+            best_score: top_k[0].1,
+            top_k,
+            evaluations: evals,
+            op: Some(OpSpec::Matmul { m: 8, n: 8, k: 8 }),
+        }
+    }
+
+    #[test]
+    fn merge_from_counts_inserts_and_combines() {
+        let mut a = ScheduleCache::new();
+        a.insert("only_a".into(), sample_entry());
+        a.insert("shared".into(), entry_with(vec![vec![0], vec![1]], vec![10.0, 20.0], 5));
+        let mut b = ScheduleCache::new();
+        b.insert("only_b".into(), sample_entry());
+        b.insert("shared".into(), entry_with(vec![vec![2], vec![1]], vec![5.0, 19.0], 7));
+
+        let stats = a.merge_from(b);
+        assert_eq!(stats, MergeStats { inserted: 1, combined: 1 });
+        assert_eq!(stats.total(), 2);
+        assert_eq!(a.len(), 3);
+
+        let merged = a.peek("shared").unwrap();
+        // union of {[0]:10, [1]:20} and {[2]:5, [1]:19}: incoming score
+        // wins for [1], argmin is [2], truncated back to k=2
+        assert_eq!(merged.chosen, ScheduleConfig { choices: vec![2] });
+        assert_eq!(merged.best_score, 5.0);
+        assert_eq!(
+            merged.top_k,
+            vec![
+                (ScheduleConfig { choices: vec![2] }, 5.0),
+                (ScheduleConfig { choices: vec![0] }, 10.0),
+            ]
+        );
+        assert_eq!(merged.evaluations, 12, "evaluations must sum across workers");
+    }
+
+    #[test]
+    fn merge_upgrades_pre_opspec_entries() {
+        let v1 = r#"{"version":1,"entries":{"k":{"chosen":[0],"best_score":2.0,"evaluations":3,"top_k":[[[0],2.0]]}}}"#;
+        let mut base = ScheduleCache::from_json(&Json::parse(v1).unwrap()).unwrap();
+        assert!(base.tasks().is_empty());
+        let mut incoming = ScheduleCache::new();
+        incoming.insert("k".into(), entry_with(vec![vec![0]], vec![2.0], 3));
+        let stats = base.merge_from(incoming);
+        assert_eq!(stats.combined, 1);
+        assert!(base.peek("k").unwrap().op.is_some(), "merge dropped the self-description");
     }
 
     #[test]

@@ -29,9 +29,14 @@
 //!
 //! The sibling [`cache`] module persists *search outcomes* (the chosen
 //! schedule + top-k per task) across processes; this module avoids
-//! *within-search* recomputation. The coordinator composes both, and its
+//! *within-search* recomputation. Cache entries are self-describing (each
+//! carries its `OpSpec`) and caches from independent shard workers merge
+//! into one serving cache ([`ScheduleCache::merge_from`] — the substrate
+//! of [`crate::shard`]). The coordinator composes both, and its
 //! recalibration stage leans on the split: swapping coefficients re-ranks
-//! every cached top-k list from memoized features, with zero re-lowering.
+//! every cached top-k list from memoized features, with zero re-lowering —
+//! including entries merged or loaded from disk, thanks to the embedded
+//! op specs.
 //!
 //! Scores are computed by exactly the same code path as
 //! [`CostModel::predict`] (`transform::apply` → `codegen::lower` → feature
@@ -42,7 +47,7 @@
 
 pub mod cache;
 
-pub use cache::{CachedSchedule, ScheduleCache};
+pub use cache::{CacheError, CachedSchedule, MergeStats, ScheduleCache};
 
 use crate::analysis::cost::{
     CostError, CostModel, FeatureExtractor, FeatureVector, LinearScorer,

@@ -36,7 +36,8 @@
 //!   one fan-out.
 //! * [`eval`] — the staged candidate-evaluation pipeline: a
 //!   [`eval::CandidateEvaluator`] that batches and memoizes static scoring,
-//!   plus the persistent content-addressed schedule cache.
+//!   plus the persistent content-addressed schedule cache (versioned JSON,
+//!   self-describing mergeable entries — see `docs/CACHE_FORMAT.md`).
 //! * [`autotvm`] — the dynamic-profiling baseline: surrogate model trained
 //!   online from (simulated) device measurements, sequential measure queue.
 //! * [`vendor`] — fixed "vendor library / framework" schedules.
@@ -44,6 +45,9 @@
 //!   ResNet-50, BERT-base shape inventories) and latency aggregation.
 //! * [`coordinator`] — multi-threaded tuning orchestrator with schedule
 //!   cache and both wall-clock and virtual device-clock accounting.
+//! * [`shard`] — distributed tuning: deterministic work partitioner
+//!   (FNV-1a over `(target, op key)`), per-shard tuning workers, and the
+//!   cache-merge step that folds N worker caches into one serving cache.
 //! * [`runtime`] — PJRT artifact loading/execution for the e2e example
 //!   (feature-gated behind `pjrt`: needs the external `xla`/`anyhow`
 //!   crates, which the offline build environment cannot fetch).
@@ -63,6 +67,7 @@ pub mod metrics;
 #[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod search;
+pub mod shard;
 pub mod sim;
 pub mod tir;
 pub mod transform;
@@ -70,7 +75,7 @@ pub mod util;
 pub mod vendor;
 
 pub use analysis::cost::{CostError, CostModel, FeatureExtractor, FeatureVector, LinearScorer};
-pub use eval::{CandidateEvaluator, ScheduleCache};
+pub use eval::{CacheError, CandidateEvaluator, ScheduleCache};
 pub use isa::MicroArch;
 pub use tir::ops::OpSpec;
 pub use transform::space::{ConfigSpace, ScheduleConfig};

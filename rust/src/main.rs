@@ -8,6 +8,10 @@
 //! tuna tune-op --op <spec> --target <t> [--strategy tuna|autotvm|vendor]
 //!                                      [--trials N] [--pop N] [--iters N]
 //! tuna tune-net --net <name> --target <t> [--strategy ...] [--trials N]
+//!               [--shards N] [--load-cache a.json,b.json] [--save-cache out.json]
+//!                                      sharded tuning + schedule-cache I/O
+//! tuna merge-caches --inputs a.json,b.json,... --out merged.json
+//!                                      fold N worker caches into one
 //! tuna tables [--targets <list>] [--nets <list>] [--trials N] [--fast]
 //! tuna sweep --topk K [--targets <list>] [--trials N]
 //! tuna e2e [--artifacts DIR]           PJRT artifact ranking check
@@ -36,6 +40,7 @@ fn main() {
         "calibrate" => cmd_calibrate(&flags),
         "tune-op" => cmd_tune_op(&flags),
         "tune-net" => cmd_tune_net(&flags),
+        "merge-caches" => cmd_merge_caches(&flags),
         "tables" => cmd_tables(&flags),
         "sweep" => cmd_sweep(&flags),
         "e2e" => cmd_e2e(&flags),
@@ -58,7 +63,7 @@ fn main() {
 fn usage() {
     eprintln!(
         "tuna — static-analysis DNN optimization (paper reproduction)\n\
-         commands: targets | calibrate | tune-op | tune-net | tables | sweep | e2e\n\
+         commands: targets | calibrate | tune-op | tune-net | merge-caches | tables | sweep | e2e\n\
          see rust/src/main.rs header for flags"
     );
 }
@@ -241,9 +246,25 @@ fn cmd_tune_net(flags: &BTreeMap<String, String>) -> Result<(), String> {
             format!("unknown network {name:?} (ssd_mobilenet|ssd_inception|resnet50|bert_base)")
         })?;
     let strategy = strategy_of(flags)?;
+    let shards: usize = flags.get("shards").and_then(|v| v.parse().ok()).unwrap_or(1);
+    // cache keys are target-prefixed, so one accumulated file safely
+    // holds every tuned target (saving per target would overwrite)
+    let mut outgoing = flags.get("save-cache").map(|_| tuna::eval::ScheduleCache::new());
     for kind in targets_of(flags)? {
         let c = Coordinator::new(kind);
-        let r = c.tune_network(&net, &strategy);
+        if let Some(paths) = flags.get("load-cache") {
+            for p in paths.split(',') {
+                let p = p.trim();
+                let resident =
+                    c.load_cache(std::path::Path::new(p)).map_err(|e| e.to_string())?;
+                eprintln!("loaded {p}: {resident} entries resident");
+            }
+        }
+        let r = if shards > 1 {
+            c.tune_network_sharded(&net, &strategy, shards)
+        } else {
+            c.tune_network(&net, &strategy)
+        };
         println!(
             "{:<18} {:<45} latency {:>9.2} ms  compile {:>9.1}s (wall {:.1}s + device {:.1}s)  ops {}",
             net.display,
@@ -255,7 +276,39 @@ fn cmd_tune_net(flags: &BTreeMap<String, String>) -> Result<(), String> {
             r.per_op.len()
         );
         println!("{}", metrics::report_json(&r).to_string());
+        if let Some(acc) = outgoing.as_mut() {
+            acc.merge_from(c.export_cache());
+        }
     }
+    if let (Some(acc), Some(p)) = (outgoing, flags.get("save-cache")) {
+        acc.save(std::path::Path::new(p)).map_err(|e| e.to_string())?;
+        eprintln!("saved schedule cache to {p} ({} entries, all targets)", acc.len());
+    }
+    Ok(())
+}
+
+/// Fold N worker cache files into one serving cache — the merge point of
+/// a multi-machine sharded tune (each worker ran `tune-net --save-cache`
+/// over its partition; see `tuna::shard::partition`).
+fn cmd_merge_caches(flags: &BTreeMap<String, String>) -> Result<(), String> {
+    use tuna::eval::{MergeStats, ScheduleCache};
+    let inputs = flags.get("inputs").ok_or("--inputs a.json,b.json,... required")?;
+    let out = flags.get("out").ok_or("--out required")?;
+    let mut merged = ScheduleCache::new();
+    let mut stats = MergeStats::default();
+    for p in inputs.split(',') {
+        let p = p.trim();
+        let c = ScheduleCache::load(std::path::Path::new(p)).map_err(|e| e.to_string())?;
+        eprintln!("read {p}: {} entries", c.len());
+        stats.absorb(merged.merge_from(c));
+    }
+    merged.save(std::path::Path::new(out)).map_err(|e| e.to_string())?;
+    println!(
+        "merged {} entries into {out} ({} inserted, {} key clashes combined)",
+        merged.len(),
+        stats.inserted,
+        stats.combined
+    );
     Ok(())
 }
 

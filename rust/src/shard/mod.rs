@@ -1,0 +1,262 @@
+//! Sharded tuning: a deterministic work partitioner, per-shard workers,
+//! and cache merging — distributed tuning for a cost model with no device
+//! in the loop.
+//!
+//! Tuna's evaluation is static, so candidate scoring has no serial
+//! device-measurement bottleneck: tuning fans out across however many
+//! cores — or machines — are available (the paper scales to 80-core
+//! hosts; measurement-driven tuners are bound by one device). This module
+//! supplies the three pieces that make that fan-out safe and mergeable:
+//!
+//! 1. **partitioning** — [`partition`] assigns every task to exactly one
+//!    of `n` shards by FNV-1a hashing `(target, op key)`
+//!    ([`crate::util::hash`]; process-seeded hashers would desynchronize
+//!    independent workers). The assignment is a pure function of the task
+//!    identity and the shard count, so separately launched workers agree
+//!    on the split with no coordination, and re-runs are stable;
+//! 2. **workers** — a [`ShardWorker`] owns a private [`Coordinator`] and
+//!    tunes its shard's tasks; the outcome is the coordinator's
+//!    [`ScheduleCache`], emitted via [`ShardWorker::into_cache`] (or
+//!    persisted with `save_cache` for cross-machine transport);
+//! 3. **merging** — [`merge_caches`] folds N worker caches into one
+//!    serving cache with [`ScheduleCache::merge_from`]'s conflict rules
+//!    (top-k union, argmin re-chosen). Under a disjoint partition there
+//!    are no key clashes, so the merged cache is exactly the union — and
+//!    because searches are deterministic, serving from it is bit-identical
+//!    to a single-process tune, which `rust/tests/shard_merge.rs` pins.
+//!
+//! Cache entries are self-describing (each carries its [`OpSpec`]), so
+//! the merged cache needs no side channel back to the workers: any
+//! coordinator that loads it can re-rank every entry on recalibration.
+//!
+//! [`Coordinator::tune_network_sharded`] composes the three pieces
+//! in-process; multi-machine deployments run one worker per host over the
+//! same `partition` and ship the cache JSONs to the merge point.
+
+use crate::analysis::CostModel;
+use crate::coordinator::{Coordinator, OpReport, Strategy};
+use crate::eval::{MergeStats, ScheduleCache};
+use crate::isa::TargetKind;
+use crate::tir::ops::OpSpec;
+use crate::util::hash::Fnv1a;
+use crate::util::parallel_map;
+
+/// The shard a task belongs to: FNV-1a of `(target, op key)` mod `n`.
+/// Deterministic across processes and machines — every worker computes
+/// the same assignment from the task identity alone.
+pub fn shard_of(kind: TargetKind, op: &OpSpec, n_shards: usize) -> usize {
+    assert!(n_shards > 0, "shard_of needs at least one shard");
+    let mut h = Fnv1a::new();
+    h.write_str(&format!("{kind:?}"));
+    h.write_str(&op.cache_key());
+    (h.finish() % n_shards as u64) as usize
+}
+
+/// Deterministically partition `tasks` over `n_shards` workers. Every
+/// task lands in exactly one shard; shards may be empty (hashing does not
+/// balance tiny task sets — that is the price of coordination-free
+/// assignment). Within a shard, tasks keep their input order.
+pub fn partition(kind: TargetKind, tasks: &[OpSpec], n_shards: usize) -> Vec<Vec<OpSpec>> {
+    assert!(n_shards > 0, "partition needs at least one shard");
+    let mut shards: Vec<Vec<OpSpec>> = vec![Vec::new(); n_shards];
+    for op in tasks {
+        shards[shard_of(kind, op, n_shards)].push(*op);
+    }
+    shards
+}
+
+/// One tuning worker: a private [`Coordinator`] plus the shard id it is
+/// responsible for. Run it over the tasks `partition` assigned to that
+/// id, then emit the cache.
+pub struct ShardWorker {
+    pub id: usize,
+    coordinator: Coordinator,
+}
+
+impl ShardWorker {
+    /// A calibrated worker (shares the process-wide coefficient cache, so
+    /// only the first worker per target pays the calibration lowering).
+    pub fn new(id: usize, kind: TargetKind) -> Self {
+        ShardWorker { id, coordinator: Coordinator::new(kind) }
+    }
+
+    /// A worker inheriting an already-fitted model — what
+    /// [`Coordinator::tune_network_sharded`] uses so every worker scores
+    /// exactly like the parent.
+    pub fn with_model(id: usize, kind: TargetKind, model: CostModel) -> Self {
+        ShardWorker { id, coordinator: Coordinator::with_model(kind, model) }
+    }
+
+    /// [`Self::with_model`] with an explicit evaluator thread count, for
+    /// workers running side by side on one host.
+    pub fn with_model_threads(
+        id: usize,
+        kind: TargetKind,
+        model: CostModel,
+        threads: usize,
+    ) -> Self {
+        ShardWorker { id, coordinator: Coordinator::with_model_threads(kind, model, threads) }
+    }
+
+    pub fn coordinator(&self) -> &Coordinator {
+        &self.coordinator
+    }
+
+    /// Tune every task in this worker's shard (sequentially at the task
+    /// level — candidate-level fan-out inside the evaluator is where the
+    /// worker's threads go).
+    pub fn run(&self, tasks: &[OpSpec], strategy: &Strategy) -> Vec<OpReport> {
+        tasks.iter().map(|op| self.coordinator.tune_op(op, strategy)).collect()
+    }
+
+    /// Emit the worker's schedule cache for merging.
+    pub fn into_cache(self) -> ScheduleCache {
+        self.coordinator.export_cache()
+    }
+}
+
+/// Fold N worker caches into one serving cache. Returns the merged cache
+/// and the accumulated merge stats (under a disjoint partition,
+/// `combined` stays 0 — every entry is a plain insert).
+pub fn merge_caches<I>(caches: I) -> (ScheduleCache, MergeStats)
+where
+    I: IntoIterator<Item = ScheduleCache>,
+{
+    let mut merged = ScheduleCache::new();
+    let mut stats = MergeStats::default();
+    for c in caches {
+        stats.absorb(merged.merge_from(c));
+    }
+    (merged, stats)
+}
+
+/// End-to-end convenience used by the scaling bench: partition `tasks`
+/// over `n_shards` calibrated workers running in parallel, and return the
+/// merged cache. Worker evaluator threads split the host so the fan-out
+/// does not oversubscribe.
+pub fn tune_tasks_sharded(
+    kind: TargetKind,
+    tasks: &[OpSpec],
+    strategy: &Strategy,
+    n_shards: usize,
+) -> ScheduleCache {
+    let shards = partition(kind, tasks, n_shards);
+    let worker_threads = (crate::util::pool::default_threads() / n_shards.max(1)).max(1);
+    let model = crate::coordinator::calibrate::calibrated_model(kind);
+    let work: Vec<(usize, Vec<OpSpec>)> = shards.into_iter().enumerate().collect();
+    let caches = parallel_map(work, n_shards, |(id, shard_tasks)| {
+        let worker = ShardWorker::with_model_threads(id, kind, model.clone(), worker_threads);
+        worker.run(&shard_tasks, strategy);
+        worker.into_cache()
+    });
+    merge_caches(caches).0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_tasks() -> Vec<OpSpec> {
+        vec![
+            OpSpec::Matmul { m: 128, n: 768, k: 768 },
+            OpSpec::Matmul { m: 128, n: 3072, k: 768 },
+            OpSpec::Matmul { m: 128, n: 768, k: 3072 },
+            OpSpec::BatchMatmul { b: 12, m: 128, n: 128, k: 64 },
+            OpSpec::BatchMatmul { b: 12, m: 128, n: 64, k: 128 },
+            OpSpec::Matmul { m: 1, n: 768, k: 768 },
+            OpSpec::Conv2d { n: 1, cin: 64, h: 56, w: 56, cout: 64, kh: 3, kw: 3, stride: 1, pad: 1 },
+        ]
+    }
+
+    #[test]
+    fn partition_is_deterministic_and_complete() {
+        let kind = TargetKind::Graviton2;
+        let tasks = sample_tasks();
+        for n in [1usize, 2, 3, 4, 8] {
+            let a = partition(kind, &tasks, n);
+            let b = partition(kind, &tasks, n);
+            assert_eq!(a.len(), n);
+            // same tasks + same n ⇒ same assignment, run to run
+            for (sa, sb) in a.iter().zip(&b) {
+                assert_eq!(sa, sb, "partition not deterministic at n={n}");
+            }
+            // every task lands in exactly one shard
+            let total: usize = a.iter().map(Vec::len).sum();
+            assert_eq!(total, tasks.len(), "task lost or duplicated at n={n}");
+            for op in &tasks {
+                let homes = a
+                    .iter()
+                    .filter(|s| s.iter().any(|o| o == op))
+                    .count();
+                assert_eq!(homes, 1, "{op} lives in {homes} shards at n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn shard_of_matches_partition() {
+        let kind = TargetKind::Graviton2;
+        let tasks = sample_tasks();
+        let shards = partition(kind, &tasks, 4);
+        for op in &tasks {
+            let home = shard_of(kind, op, 4);
+            assert!(shards[home].contains(op), "{op} not in its shard_of home");
+        }
+    }
+
+    #[test]
+    fn partition_separates_targets() {
+        // the assignment keys on the target too: the same op may live in
+        // different shards on different targets (and must on at least one
+        // of these ops, with overwhelming probability)
+        let tasks = sample_tasks();
+        let moved = tasks.iter().any(|op| {
+            shard_of(TargetKind::Graviton2, op, 8) != shard_of(TargetKind::TeslaV100, op, 8)
+        });
+        assert!(moved, "target does not influence the assignment");
+    }
+
+    #[test]
+    fn empty_and_singleton_inputs() {
+        let kind = TargetKind::Graviton2;
+        // empty task list: n empty shards
+        let empty = partition(kind, &[], 4);
+        assert_eq!(empty.len(), 4);
+        assert!(empty.iter().all(Vec::is_empty));
+        // singleton task list: one occupied shard, the rest empty
+        let one = [OpSpec::Matmul { m: 8, n: 8, k: 8 }];
+        let shards = partition(kind, &one, 4);
+        assert_eq!(shards.iter().map(Vec::len).sum::<usize>(), 1);
+        // n = 1 degenerates to the whole list in order
+        let all = partition(kind, &sample_tasks(), 1);
+        assert_eq!(all[0], sample_tasks());
+    }
+
+    #[test]
+    #[should_panic(expected = "at least one shard")]
+    fn zero_shards_is_a_bug() {
+        partition(TargetKind::Graviton2, &[], 0);
+    }
+
+    #[test]
+    fn merge_caches_accumulates_disjoint_workers() {
+        use crate::eval::CachedSchedule;
+        use crate::transform::ScheduleConfig;
+        let entry = |op: OpSpec| CachedSchedule {
+            chosen: ScheduleConfig { choices: vec![0] },
+            best_score: 1.0,
+            top_k: vec![(ScheduleConfig { choices: vec![0] }, 1.0)],
+            evaluations: 1,
+            op: Some(op),
+        };
+        let mut a = ScheduleCache::new();
+        a.insert("ka".into(), entry(OpSpec::Matmul { m: 8, n: 8, k: 8 }));
+        let mut b = ScheduleCache::new();
+        b.insert("kb".into(), entry(OpSpec::Matmul { m: 16, n: 8, k: 8 }));
+        let (merged, stats) = merge_caches([a, b]);
+        assert_eq!(merged.len(), 2);
+        assert_eq!(stats.inserted, 2);
+        assert_eq!(stats.combined, 0, "disjoint caches reported clashes");
+        assert_eq!(merged.tasks().len(), 2, "merged entries lost self-description");
+    }
+}

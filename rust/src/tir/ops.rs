@@ -7,6 +7,7 @@
 //! *how* lives in [`crate::transform`].
 
 
+use crate::util::json::Json;
 use std::fmt;
 
 /// A tensor-operator workload instance.
@@ -130,6 +131,116 @@ impl OpSpec {
     pub fn cache_key(&self) -> String {
         format!("{self}")
     }
+
+    /// Serialize to JSON: `{"kind": <family>, <dims>...}` with the family
+    /// names of [`Self::kind_name`]. This is what makes persisted schedule-
+    /// cache entries *self-describing* — a process that never saw the
+    /// workload can recover the exact `OpSpec` from the entry alone.
+    pub fn to_json(&self) -> Json {
+        let kind = Json::Str(self.kind_name().into());
+        let num = |v: i64| Json::Num(v as f64);
+        match *self {
+            OpSpec::Matmul { m, n, k } => {
+                Json::obj(vec![("kind", kind), ("m", num(m)), ("n", num(n)), ("k", num(k))])
+            }
+            OpSpec::BatchMatmul { b, m, n, k } => Json::obj(vec![
+                ("kind", kind),
+                ("b", num(b)),
+                ("m", num(m)),
+                ("n", num(n)),
+                ("k", num(k)),
+            ]),
+            OpSpec::Conv2d { n, cin, h, w, cout, kh, kw, stride, pad } => Json::obj(vec![
+                ("kind", kind),
+                ("n", num(n)),
+                ("cin", num(cin)),
+                ("h", num(h)),
+                ("w", num(w)),
+                ("cout", num(cout)),
+                ("kh", num(kh)),
+                ("kw", num(kw)),
+                ("stride", num(stride)),
+                ("pad", num(pad)),
+            ]),
+            OpSpec::DepthwiseConv2d { n, c, h, w, kh, kw, stride, pad } => Json::obj(vec![
+                ("kind", kind),
+                ("n", num(n)),
+                ("c", num(c)),
+                ("h", num(h)),
+                ("w", num(w)),
+                ("kh", num(kh)),
+                ("kw", num(kw)),
+                ("stride", num(stride)),
+                ("pad", num(pad)),
+            ]),
+            OpSpec::Conv2dWinograd { n, cin, h, w, cout } => Json::obj(vec![
+                ("kind", kind),
+                ("n", num(n)),
+                ("cin", num(cin)),
+                ("h", num(h)),
+                ("w", num(w)),
+                ("cout", num(cout)),
+            ]),
+        }
+    }
+
+    /// Parse the [`Self::to_json`] form. Dimensions must be integral
+    /// numbers — a fractional or absurd value marks a corrupt record and
+    /// fails the parse rather than silently truncating.
+    pub fn from_json(j: &Json) -> Result<OpSpec, String> {
+        let kind = j
+            .get("kind")
+            .and_then(Json::as_str)
+            .ok_or("op spec missing 'kind' string")?;
+        let dim = |field: &str| -> Result<i64, String> {
+            let v = j
+                .get(field)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| format!("op spec missing numeric '{field}'"))?;
+            if v.fract() != 0.0 || v.abs() > (i64::MAX / 2) as f64 {
+                return Err(format!("op dimension {field}={v} is not a valid integer"));
+            }
+            Ok(v as i64)
+        };
+        match kind {
+            "dense" => Ok(OpSpec::Matmul { m: dim("m")?, n: dim("n")?, k: dim("k")? }),
+            "batch_matmul" => Ok(OpSpec::BatchMatmul {
+                b: dim("b")?,
+                m: dim("m")?,
+                n: dim("n")?,
+                k: dim("k")?,
+            }),
+            "conv2d" => Ok(OpSpec::Conv2d {
+                n: dim("n")?,
+                cin: dim("cin")?,
+                h: dim("h")?,
+                w: dim("w")?,
+                cout: dim("cout")?,
+                kh: dim("kh")?,
+                kw: dim("kw")?,
+                stride: dim("stride")?,
+                pad: dim("pad")?,
+            }),
+            "depthwise_conv2d" => Ok(OpSpec::DepthwiseConv2d {
+                n: dim("n")?,
+                c: dim("c")?,
+                h: dim("h")?,
+                w: dim("w")?,
+                kh: dim("kh")?,
+                kw: dim("kw")?,
+                stride: dim("stride")?,
+                pad: dim("pad")?,
+            }),
+            "conv2d_winograd" => Ok(OpSpec::Conv2dWinograd {
+                n: dim("n")?,
+                cin: dim("cin")?,
+                h: dim("h")?,
+                w: dim("w")?,
+                cout: dim("cout")?,
+            }),
+            other => Err(format!("unknown op kind {other:?}")),
+        }
+    }
 }
 
 impl fmt::Display for OpSpec {
@@ -203,5 +314,36 @@ mod tests {
     fn display_stable() {
         let op = OpSpec::Matmul { m: 1, n: 2, k: 3 };
         assert_eq!(op.cache_key(), "dense_m1_n2_k3");
+    }
+
+    #[test]
+    fn json_roundtrips_every_variant() {
+        let ops = [
+            OpSpec::Matmul { m: 128, n: 768, k: 768 },
+            OpSpec::BatchMatmul { b: 12, m: 128, n: 128, k: 64 },
+            OpSpec::Conv2d { n: 1, cin: 64, h: 56, w: 56, cout: 64, kh: 3, kw: 3, stride: 1, pad: 1 },
+            OpSpec::DepthwiseConv2d { n: 1, c: 96, h: 112, w: 112, kh: 3, kw: 3, stride: 2, pad: 1 },
+            OpSpec::Conv2dWinograd { n: 1, cin: 64, h: 56, w: 56, cout: 64 },
+        ];
+        for op in ops {
+            // through text too, so the writer/parser pair is covered
+            let text = op.to_json().to_string();
+            let back = OpSpec::from_json(&Json::parse(&text).unwrap()).unwrap();
+            assert_eq!(back, op, "{op} mangled by the JSON round trip");
+        }
+    }
+
+    #[test]
+    fn json_rejects_malformed_specs() {
+        for bad in [
+            r#"{"m":1,"n":2,"k":3}"#,                       // no kind
+            r#"{"kind":"dense","m":1,"n":2}"#,              // missing dim
+            r#"{"kind":"dense","m":1.5,"n":2,"k":3}"#,      // fractional dim
+            r#"{"kind":"sparse","m":1,"n":2,"k":3}"#,       // unknown family
+            r#"{"kind":"dense","m":"x","n":2,"k":3}"#,      // non-numeric dim
+        ] {
+            let j = Json::parse(bad).unwrap();
+            assert!(OpSpec::from_json(&j).is_err(), "accepted {bad}");
+        }
     }
 }

@@ -109,6 +109,7 @@ fn schedule_cache_roundtrips_through_json() {
             best_score: rep.top_k[0].1,
             top_k: rep.top_k.clone(),
             evaluations: rep.evaluations,
+            op: Some(op),
         },
     );
 

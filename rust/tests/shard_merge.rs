@@ -1,0 +1,232 @@
+//! Integration tests for sharded tuning: the deterministic partition →
+//! shard workers → cache merge pipeline must reproduce a single-process
+//! tune bit-for-bit, and the merged/persisted caches must stay first-class
+//! citizens of the recalibration stage (entries are self-describing, so a
+//! process that never tuned a task can still re-rank it from disk).
+//!
+//! The workload is BERT-base's task set — a Table-I network — partitioned
+//! over N=4 workers.
+
+use tuna::coordinator::{Coordinator, Strategy};
+use tuna::eval::{CacheError, ScheduleCache};
+use tuna::graph::bert_base;
+use tuna::isa::TargetKind;
+use tuna::search::EsParams;
+use tuna::shard::{self, ShardWorker};
+use tuna::tir::ops::OpSpec;
+use tuna::CostModel;
+
+fn tiny_es() -> EsParams {
+    EsParams { population: 10, iterations: 5, k: 8, seed: 11, ..Default::default() }
+}
+
+fn temp_path(tag: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("tuna_shard_{tag}_{}.json", std::process::id()))
+}
+
+/// The acceptance test: partition the Table-I task set over N=4 shard
+/// workers, merge their caches, and the merged coordinator serves every
+/// task with zero searches, choosing configs bit-identical to a
+/// single-process `tune_network`.
+#[test]
+fn four_shard_merge_matches_single_process_bit_for_bit() {
+    let kind = TargetKind::Graviton2;
+    let net = bert_base();
+    let tasks = net.unique_tasks();
+    let strategy = Strategy::TunaStatic(tiny_es());
+
+    // single-process reference
+    let single = Coordinator::new_uncalibrated(kind);
+    let want = single.tune_network(&net, &strategy);
+
+    // four independent workers, each over its deterministic partition,
+    // all sharing the reference's cost model (as distributed workers
+    // share one calibration artifact)
+    let shards = shard::partition(kind, &tasks, 4);
+    assert_eq!(shards.iter().map(Vec::len).sum::<usize>(), tasks.len());
+    let caches: Vec<ScheduleCache> = shards
+        .iter()
+        .enumerate()
+        .map(|(id, shard_tasks)| {
+            let worker = ShardWorker::with_model(id, kind, single.cost_model());
+            let reports = worker.run(shard_tasks, &strategy);
+            assert_eq!(reports.len(), shard_tasks.len());
+            assert_eq!(
+                worker.coordinator().searches_performed(),
+                shard_tasks.len() as u64,
+                "worker {id} did not search exactly its shard"
+            );
+            worker.into_cache()
+        })
+        .collect();
+
+    // disjoint partition ⇒ merge is a pure union
+    let (merged, stats) = shard::merge_caches(caches);
+    assert_eq!(stats.inserted, tasks.len());
+    assert_eq!(stats.combined, 0, "disjoint shards clashed");
+    assert_eq!(merged.len(), tasks.len());
+
+    // the merged cache serves a fresh coordinator with zero searches
+    let serving = Coordinator::with_model(kind, single.cost_model());
+    serving.import_cache(merged);
+    let got = serving.tune_network(&net, &strategy);
+    assert_eq!(serving.searches_performed(), 0, "merged cache missed a task");
+    assert_eq!(got.cache_hits, tasks.len() as u64);
+    assert_eq!(got.latency_s, want.latency_s, "sharded deployment diverged");
+    for (key, rep) in &got.per_op {
+        let reference = &want.per_op[key];
+        assert!(rep.cache_hit, "{key} missed");
+        assert_eq!(rep.evaluations, 0);
+        assert_eq!(rep.chosen, reference.chosen, "{key} chose a different config");
+        assert_eq!(rep.top_k, reference.top_k, "{key} top-k diverged");
+        assert_eq!(rep.latency_s, reference.latency_s);
+    }
+}
+
+/// Recalibration must re-rank entries loaded purely from disk: the loading
+/// process never tuned the tasks and keeps no task map — the entries'
+/// embedded op specs are all it has.
+#[test]
+fn recalibration_reranks_entries_loaded_from_disk() {
+    let kind = TargetKind::Graviton2;
+    let strategy = Strategy::TunaStatic(tiny_es());
+    let ops = [
+        OpSpec::Matmul { m: 64, n: 64, k: 64 },
+        OpSpec::Matmul { m: 48, n: 32, k: 32 },
+    ];
+    let path = temp_path("rerank");
+
+    let producer = Coordinator::new_uncalibrated(kind);
+    for op in &ops {
+        producer.tune_op(op, &strategy);
+    }
+    producer.save_cache(&path).unwrap();
+
+    // a fresh process: loads the cache, tunes nothing
+    let consumer = Coordinator::new_uncalibrated(kind);
+    assert_eq!(consumer.load_cache(&path).unwrap(), ops.len());
+    let _ = std::fs::remove_file(&path);
+
+    let coeffs = vec![0.3, 1.4, 0.6, 2.1, 0.2, 5.0, 1.1];
+    let reranked = consumer.swap_coeffs(coeffs.clone());
+    assert_eq!(reranked, ops.len(), "disk-loaded entries were not re-ranked");
+    assert_eq!(consumer.searches_performed(), 0);
+
+    // the re-ranked entries now score exactly as a fresh model would
+    let cm = CostModel::with_coeffs(kind, coeffs);
+    for op in &ops {
+        let rep = consumer.tune_op(op, &strategy);
+        assert!(rep.cache_hit, "{op} fell out of the cache");
+        for (cfg, s) in &rep.top_k {
+            assert_eq!(*s, cm.predict(op, cfg), "{op} top-k not re-scored from disk");
+        }
+        assert!(rep.top_k.windows(2).all(|w| w[0].1 <= w[1].1), "{op} top-k unsorted");
+        assert_eq!(rep.chosen, rep.top_k[0].0, "{op} chosen is not the argmin");
+    }
+}
+
+/// A pre-OpSpec (format version 1) cache file loads without panicking and
+/// still serves its schedules; its entries simply cannot be re-ranked
+/// (graceful migration, not an error).
+#[test]
+fn pre_opspec_cache_file_migrates_gracefully() {
+    let kind = TargetKind::Graviton2;
+    let strategy = Strategy::TunaStatic(tiny_es());
+    let op = OpSpec::Matmul { m: 64, n: 64, k: 64 };
+    let path = temp_path("v1");
+
+    // produce a v2 file, then strip it down to the version-1 format
+    // (no "op" fields) — the literal layout PR 1 wrote
+    let producer = Coordinator::new_uncalibrated(kind);
+    let first = producer.tune_op(&op, &strategy);
+    producer.save_cache(&path).unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+    let v2 = tuna::util::json::Json::parse(&text).unwrap();
+    let tuna::util::json::Json::Obj(mut doc) = v2 else { panic!("cache root not an object") };
+    doc.insert("version".into(), tuna::util::json::Json::Num(1.0));
+    if let Some(tuna::util::json::Json::Obj(entries)) = doc.get_mut("entries") {
+        for (_, e) in entries.iter_mut() {
+            if let tuna::util::json::Json::Obj(fields) = e {
+                fields.remove("op");
+            }
+        }
+    }
+    std::fs::write(&path, tuna::util::json::Json::Obj(doc).to_string()).unwrap();
+
+    let consumer = Coordinator::new_uncalibrated(kind);
+    assert_eq!(consumer.load_cache(&path).unwrap(), 1);
+    let _ = std::fs::remove_file(&path);
+
+    // migrated entries serve hits…
+    let served = consumer.tune_op(&op, &strategy);
+    assert!(served.cache_hit, "migrated entry not served");
+    assert_eq!(served.chosen, first.chosen);
+    assert_eq!(consumer.searches_performed(), 0);
+
+    // …but cannot be re-ranked (no workload to lower against), and that
+    // must be a no-op, not a panic
+    let reranked = consumer.swap_coeffs(vec![0.3, 1.4, 0.6, 2.1, 0.2, 5.0, 1.1]);
+    assert_eq!(reranked, 0, "re-ranked an entry with no workload");
+}
+
+/// `load_cache` on a malformed file is a typed error — never a silently
+/// empty cache.
+#[test]
+fn malformed_cache_file_is_a_typed_error() {
+    let consumer = Coordinator::new_uncalibrated(TargetKind::Graviton2);
+    let path = temp_path("malformed");
+    std::fs::write(&path, "{\"version\": 2, \"entries\": ").unwrap();
+    match consumer.load_cache(&path) {
+        Err(CacheError::Parse(_)) => {}
+        other => panic!("expected CacheError::Parse, got {other:?}"),
+    }
+    let (resident, _, _) = consumer.cache_stats();
+    assert_eq!(resident, 0, "a failed load left entries behind");
+    let _ = std::fs::remove_file(&path);
+
+    // a corrupt entry names its key
+    std::fs::write(
+        &path,
+        r#"{"version":2,"entries":{"bad_key":{"chosen":[1.5],"best_score":1.0,"evaluations":1,"top_k":[]}}}"#,
+    )
+    .unwrap();
+    match consumer.load_cache(&path) {
+        Err(CacheError::Entry { key, .. }) => assert_eq!(key, "bad_key"),
+        other => panic!("expected CacheError::Entry, got {other:?}"),
+    }
+    let _ = std::fs::remove_file(&path);
+}
+
+/// Worker caches transported as files (the multi-machine path: each
+/// worker `save_cache`s, the merge point loads and folds) behave exactly
+/// like in-memory merges.
+#[test]
+fn file_transported_worker_caches_merge_and_serve() {
+    let kind = TargetKind::Graviton2;
+    let net = bert_base();
+    let tasks = net.unique_tasks();
+    let strategy = Strategy::TunaStatic(tiny_es());
+    let model = Coordinator::new_uncalibrated(kind).cost_model();
+
+    // two workers, caches shipped through files
+    let shards = shard::partition(kind, &tasks, 2);
+    let mut paths = Vec::new();
+    for (id, shard_tasks) in shards.iter().enumerate() {
+        let worker = ShardWorker::with_model(id, kind, model.clone());
+        worker.run(shard_tasks, &strategy);
+        let path = temp_path(&format!("w{id}"));
+        worker.coordinator().save_cache(&path).unwrap();
+        paths.push(path);
+    }
+
+    let serving = Coordinator::with_model(kind, model);
+    let mut resident = 0;
+    for p in &paths {
+        resident = serving.load_cache(p).unwrap();
+        let _ = std::fs::remove_file(p);
+    }
+    assert_eq!(resident, tasks.len());
+    let got = serving.tune_network(&net, &strategy);
+    assert_eq!(serving.searches_performed(), 0, "file-merged cache missed a task");
+    assert_eq!(got.cache_hits, tasks.len() as u64);
+}
