@@ -116,7 +116,8 @@ impl Strategy {
 pub struct OpReport {
     pub op: OpSpec,
     pub chosen: ScheduleConfig,
-    /// ground-truth latency of the deployed schedule (seconds).
+    /// ground-truth latency of the deployed schedule (seconds); 0.0 from
+    /// the deploy-free shard-worker path ([`Coordinator::try_search_op`]).
     pub latency_s: f64,
     /// host wall seconds spent searching.
     pub wall_s: f64,
@@ -375,6 +376,33 @@ impl Coordinator {
     /// Tune one operator through the staged pipeline: cache lookup →
     /// search (batched through the evaluator) → record + deploy.
     pub fn try_tune_op(&self, op: &OpSpec, strategy: &Strategy) -> Result<OpReport, CostError> {
+        self.tune_op_staged(op, strategy, true)
+    }
+
+    /// [`Self::try_search_op`] with the panic-on-failure convention of
+    /// [`Self::tune_op`].
+    pub fn search_op(&self, op: &OpSpec, strategy: &Strategy) -> OpReport {
+        self.try_search_op(op, strategy)
+            .unwrap_or_else(|e| panic!("search_op({op}) failed: {e}"))
+    }
+
+    /// The staged pipeline *without* the ground-truth deploy: cache lookup
+    /// → search → record, `latency_s` reported as 0.0. This is the shard-
+    /// worker path — the serving pass re-deploys every task from the merged
+    /// cache anyway, so a worker-side simulator run would be paid twice for
+    /// no information. Cache contents are identical to [`Self::try_tune_op`]
+    /// (the entry records the search outcome, which never depends on the
+    /// deploy).
+    pub fn try_search_op(&self, op: &OpSpec, strategy: &Strategy) -> Result<OpReport, CostError> {
+        self.tune_op_staged(op, strategy, false)
+    }
+
+    fn tune_op_staged(
+        &self,
+        op: &OpSpec,
+        strategy: &Strategy,
+        deploy: bool,
+    ) -> Result<OpReport, CostError> {
         let space = transform::config_space(op, self.kind);
         let start = Instant::now();
         // coefficient epoch observed before searching — if a recalibration
@@ -394,7 +422,8 @@ impl Coordinator {
                 // wall_s captured before the deploy measurement, matching
                 // the search path below
                 let wall_s = start.elapsed().as_secs_f64();
-                let latency_s = self.device.run(op, &hit.chosen).seconds;
+                let latency_s =
+                    if deploy { self.device.run(op, &hit.chosen).seconds } else { 0.0 };
                 return Ok(OpReport {
                     op: *op,
                     chosen: hit.chosen,
@@ -483,7 +512,7 @@ impl Coordinator {
             }
         }
         let wall_s = start.elapsed().as_secs_f64();
-        let latency_s = self.device.run(op, &result.best).seconds;
+        let latency_s = if deploy { self.device.run(op, &result.best).seconds } else { 0.0 };
         Ok(OpReport {
             op: *op,
             chosen: result.best,

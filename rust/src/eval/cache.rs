@@ -373,6 +373,25 @@ impl ScheduleCache {
             .collect()
     }
 
+    /// The subset of entries addressed to `kind` — keys are
+    /// target-prefixed (see [`Self::key`]), so a cache file accumulated
+    /// across targets splits cleanly. Counters are not carried over.
+    ///
+    /// This is how a serving process loads one multi-target file into
+    /// per-target coordinators: handing a coordinator another target's
+    /// entries would let its recalibration stage re-score them under the
+    /// wrong target's feature extractor.
+    pub fn filter_target(&self, kind: TargetKind) -> ScheduleCache {
+        let prefix = format!("{kind:?}/");
+        let mut out = ScheduleCache::new();
+        for (k, v) in self.iter() {
+            if k.starts_with(&prefix) {
+                out.insert(k.to_string(), v.clone());
+            }
+        }
+        out
+    }
+
     pub fn to_json(&self) -> Json {
         let entries = self
             .entries
@@ -456,11 +475,15 @@ fn combine_entries(existing: CachedSchedule, incoming: CachedSchedule) -> Cached
     }
 }
 
-fn cfg_to_json(c: &ScheduleConfig) -> Json {
+/// Wire/disk form of a config: the knob-index array. Shared with the
+/// serve protocol (`crate::serve::protocol`), so the cache format and the
+/// wire format can never disagree on what a valid config is.
+pub(crate) fn cfg_to_json(c: &ScheduleConfig) -> Json {
     Json::Arr(c.choices.iter().map(|&i| Json::Num(i as f64)).collect())
 }
 
-fn cfg_from_json(j: &Json) -> Result<ScheduleConfig, String> {
+/// Inverse of [`cfg_to_json`]; rejects non-integral or absurd indices.
+pub(crate) fn cfg_from_json(j: &Json) -> Result<ScheduleConfig, String> {
     let arr = j.as_arr().ok_or("config must be an array")?;
     let choices = arr
         .iter()
@@ -691,6 +714,25 @@ mod tests {
             evaluations: evals,
             op: Some(OpSpec::Matmul { m: 8, n: 8, k: 8 }),
         }
+    }
+
+    #[test]
+    fn filter_target_splits_a_multi_target_cache() {
+        use crate::isa::TargetKind;
+        let op = OpSpec::Matmul { m: 32, n: 32, k: 32 };
+        let space = transform::config_space(&op, TargetKind::Graviton2);
+        let gspace = transform::config_space(&op, TargetKind::TeslaV100);
+        let mut c = ScheduleCache::new();
+        c.insert(ScheduleCache::key(TargetKind::Graviton2, &op, &space, "es_x"), sample_entry());
+        c.insert(ScheduleCache::key(TargetKind::TeslaV100, &op, &gspace, "es_x"), sample_entry());
+        let cpu = c.filter_target(TargetKind::Graviton2);
+        assert_eq!(cpu.len(), 1);
+        assert!(cpu.keys().all(|k| k.starts_with("Graviton2/")), "foreign entry leaked");
+        let gpu = c.filter_target(TargetKind::TeslaV100);
+        assert_eq!(gpu.len(), 1);
+        assert!(c.filter_target(TargetKind::CortexA53).is_empty());
+        // counters start fresh on the filtered view
+        assert_eq!((cpu.hits(), cpu.misses(), cpu.evicted()), (0, 0, 0));
     }
 
     #[test]

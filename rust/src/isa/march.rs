@@ -201,6 +201,26 @@ impl TargetKind {
         matches!(self, TargetKind::TeslaV100 | TargetKind::JetsonXavier)
     }
 
+    /// Canonical short name used on the wire by the serve protocol and in
+    /// CLI target lists (each is also accepted by
+    /// `crate::config::parse_targets`). Round-trips through
+    /// [`Self::from_wire`].
+    pub fn wire_name(self) -> &'static str {
+        match self {
+            TargetKind::XeonPlatinum8124M => "xeon",
+            TargetKind::Graviton2 => "graviton2",
+            TargetKind::CortexA53 => "a53",
+            TargetKind::TeslaV100 => "v100",
+            TargetKind::JetsonXavier => "xavier",
+        }
+    }
+
+    /// Strict inverse of [`Self::wire_name`] — the serve protocol accepts
+    /// only canonical names (CLI alias leniency stays in `config`).
+    pub fn from_wire(s: &str) -> Option<TargetKind> {
+        TargetKind::ALL.into_iter().find(|k| k.wire_name() == s)
+    }
+
     pub fn display_name(self) -> &'static str {
         match self {
             TargetKind::XeonPlatinum8124M => "Intel Xeon Platinum 8124M CPU",

@@ -48,6 +48,10 @@
 //! * [`shard`] — distributed tuning: deterministic work partitioner
 //!   (FNV-1a over `(target, op key)`), per-shard tuning workers, and the
 //!   cache-merge step that folds N worker caches into one serving cache.
+//! * [`serve`] — the tune-serving daemon: per-target coordinators with
+//!   calibrated models and warm schedule caches behind a loopback TCP
+//!   socket, speaking a line-delimited JSON protocol (`tune`, `stats`,
+//!   `recalibrate`, `save`, `shutdown` — spec in `docs/SERVING.md`).
 //! * [`runtime`] — PJRT artifact loading/execution for the e2e example
 //!   (feature-gated behind `pjrt`: needs the external `xla`/`anyhow`
 //!   crates, which the offline build environment cannot fetch).
@@ -67,6 +71,7 @@ pub mod metrics;
 #[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod search;
+pub mod serve;
 pub mod shard;
 pub mod sim;
 pub mod tir;

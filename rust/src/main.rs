@@ -12,6 +12,15 @@
 //!                                      sharded tuning + schedule-cache I/O
 //! tuna merge-caches --inputs a.json,b.json,... --out merged.json
 //!                                      fold N worker caches into one
+//! tuna serve --targets <list> --port N [--load-cache a.json,b.json]
+//!            [--save-cache out.json] [--cache-cap N] [--serve-threads N]
+//!                                      tune-serving daemon on 127.0.0.1
+//!                                      (protocol: docs/SERVING.md;
+//!                                       --port 0 picks an ephemeral port)
+//! tuna query --port N [--host H] --op <spec> --target <t> [--pop N] ...
+//! tuna query --port N --stats | --shutdown | --save PATH
+//!            | --recalibrate c0,c1,... --target <t>
+//!                                      one-shot client for a serve daemon
 //! tuna tables [--targets <list>] [--nets <list>] [--trials N] [--fast]
 //! tuna sweep --topk K [--targets <list>] [--trials N]
 //! tuna e2e [--artifacts DIR]           PJRT artifact ranking check
@@ -41,6 +50,8 @@ fn main() {
         "tune-op" => cmd_tune_op(&flags),
         "tune-net" => cmd_tune_net(&flags),
         "merge-caches" => cmd_merge_caches(&flags),
+        "serve" => cmd_serve(&flags),
+        "query" => cmd_query(&flags),
         "tables" => cmd_tables(&flags),
         "sweep" => cmd_sweep(&flags),
         "e2e" => cmd_e2e(&flags),
@@ -63,7 +74,8 @@ fn main() {
 fn usage() {
     eprintln!(
         "tuna — static-analysis DNN optimization (paper reproduction)\n\
-         commands: targets | calibrate | tune-op | tune-net | merge-caches | tables | sweep | e2e\n\
+         commands: targets | calibrate | tune-op | tune-net | merge-caches | serve | query |\n\
+         \x20         tables | sweep | e2e\n\
          see rust/src/main.rs header for flags"
     );
 }
@@ -310,6 +322,111 @@ fn cmd_merge_caches(flags: &BTreeMap<String, String>) -> Result<(), String> {
         stats.combined
     );
     Ok(())
+}
+
+/// Run the tune-serving daemon (`tuna serve`). Prints the bound address
+/// on stdout — `listening on 127.0.0.1:PORT` — before entering the accept
+/// loop; scripts and the CLI integration test wait for that line.
+fn cmd_serve(flags: &BTreeMap<String, String>) -> Result<(), String> {
+    use std::io::Write as _;
+    use tuna::serve::{ServeConfig, Server};
+    let mut cfg = ServeConfig { targets: targets_of(flags)?, ..ServeConfig::default() };
+    cfg.port = match flags.get("port") {
+        Some(p) => p.parse().map_err(|e| format!("bad --port {p:?}: {e}"))?,
+        None => 7700,
+    };
+    if let Some(t) = flags.get("serve-threads") {
+        cfg.threads =
+            t.parse().map_err(|e| format!("bad --serve-threads {t:?}: {e}"))?;
+    }
+    if let Some(paths) = flags.get("load-cache") {
+        cfg.cache_paths =
+            paths.split(',').map(|p| std::path::PathBuf::from(p.trim())).collect();
+    }
+    if let Some(p) = flags.get("save-cache") {
+        cfg.save_on_shutdown = Some(p.into());
+    }
+    if let Some(cap) = flags.get("cache-cap") {
+        cfg.cache_capacity =
+            Some(cap.parse().map_err(|e| format!("bad --cache-cap {cap:?}: {e}"))?);
+    }
+    let server = Server::bind(cfg).map_err(|e| e.to_string())?;
+    println!("listening on {}", server.local_addr());
+    let _ = std::io::stdout().flush();
+    server.run().map_err(|e| e.to_string())
+}
+
+/// Exactly one target (`query` addresses a single coordinator).
+fn single_target(flags: &BTreeMap<String, String>) -> Result<tuna::isa::TargetKind, String> {
+    match targets_of(flags)?.as_slice() {
+        [one] => Ok(*one),
+        _ => Err("this command needs exactly one --target".into()),
+    }
+}
+
+/// One-shot client for a running serve daemon (`tuna query`): send one
+/// request line, print the response line, exit non-zero on a server-side
+/// error response.
+fn cmd_query(flags: &BTreeMap<String, String>) -> Result<(), String> {
+    use std::io::{BufRead, BufReader, Write as _};
+    use tuna::serve::protocol::{Request, Response, TuneParams};
+    let port: u16 = flags
+        .get("port")
+        .ok_or("--port required")?
+        .parse()
+        .map_err(|e| format!("bad --port: {e}"))?;
+    let host = flags.get("host").map(String::as_str).unwrap_or("127.0.0.1");
+    let req = if flags.contains_key("shutdown") {
+        Request::Shutdown
+    } else if flags.contains_key("stats") {
+        Request::Stats
+    } else if let Some(path) = flags.get("save") {
+        Request::Save { path: path.clone() }
+    } else if let Some(csv) = flags.get("recalibrate") {
+        let coeffs = csv
+            .split(',')
+            .map(|c| {
+                c.trim().parse::<f64>().map_err(|e| format!("bad coefficient {c:?}: {e}"))
+            })
+            .collect::<Result<Vec<f64>, String>>()?;
+        // "nan"/"inf" parse as f64 but have no JSON representation — the
+        // encoded line would be unparseable; reject before it hits the wire
+        if coeffs.iter().any(|c| !c.is_finite()) {
+            return Err("coefficients must be finite".into());
+        }
+        Request::Recalibrate { target: single_target(flags)?, coeffs }
+    } else {
+        let op = parse_op(
+            flags
+                .get("op")
+                .ok_or("--op required (or --stats | --save | --recalibrate | --shutdown)")?,
+        )?;
+        // explicit search params so the request addresses the same cache
+        // entry as a `tune-net` run with the same --pop/--iters/--seed
+        Request::Tune {
+            target: single_target(flags)?,
+            op,
+            params: Some(TuneParams::from_es(&es_params(flags))),
+        }
+    };
+    let mut stream = std::net::TcpStream::connect((host, port))
+        .map_err(|e| format!("connect {host}:{port}: {e}"))?;
+    let mut line = req.encode();
+    line.push('\n');
+    stream.write_all(line.as_bytes()).map_err(|e| e.to_string())?;
+    let mut resp_line = String::new();
+    BufReader::new(&stream).read_line(&mut resp_line).map_err(|e| e.to_string())?;
+    if resp_line.is_empty() {
+        return Err("server closed the connection without responding".into());
+    }
+    match Response::decode(&resp_line) {
+        Ok(Response::Error { code, detail }) => Err(format!("server error [{code}] {detail}")),
+        Ok(_) => {
+            println!("{}", resp_line.trim_end());
+            Ok(())
+        }
+        Err(e) => Err(format!("unintelligible response ({e}): {}", resp_line.trim_end())),
+    }
 }
 
 fn strategy_of(flags: &BTreeMap<String, String>) -> Result<Strategy, String> {

@@ -1,0 +1,694 @@
+//! The tune-serving daemon: a long-lived process that holds one calibrated
+//! [`Coordinator`] per target — warm feature stores, warm schedule caches —
+//! and answers tuning requests over a TCP socket.
+//!
+//! This is the deployment shape the static-analysis approach buys (paper
+//! §1): because candidate evaluation never touches a device, a schedule is
+//! cheap enough to compute — and cache — that it can be *served* like any
+//! other lookup, instead of re-tuned per client the way measurement-driven
+//! tuners must. The daemon composes everything the lower layers provide:
+//!
+//! * **startup** — one coordinator per served target, calibrated through
+//!   the shared evaluator; `--load-cache` files are split per target
+//!   ([`ScheduleCache::filter_target`] — handing a coordinator a foreign
+//!   target's entries would let recalibration re-score them under the
+//!   wrong extractor) and merged in, so a cache produced by `tune-net`
+//!   shard workers and `merge-caches` serves search-free from request one;
+//! * **request loop** — line-delimited JSON ([`protocol`]): `tune`,
+//!   `stats`, `recalibrate`, `save`, `shutdown`. Connections are fed
+//!   through a [`WorkQueue`] to a fixed pool of handler threads, and a
+//!   connection that goes idle is *parked* back into the queue (its
+//!   partial read buffer travels with it), so any number of idle
+//!   keep-alive clients can never pin the pool or block shutdown; each
+//!   target has its own coordinator (own cache lock, own evaluator), so
+//!   concurrent tunes for different targets never serialize, and tunes for
+//!   one target contend only on that target's cache mutex around the
+//!   (microseconds) lookup/record sections — searches themselves run
+//!   outside any lock;
+//! * **online recalibration** — `recalibrate` swaps coefficients into the
+//!   live evaluator and re-ranks every resident cache entry from memoized
+//!   features ([`Coordinator::swap_coeffs`]): zero re-lowering, zero
+//!   downtime, concurrent tunes race safely via the coordinator's
+//!   coefficient-epoch check;
+//! * **failure containment** — every malformed line is answered with a
+//!   typed [`protocol::ErrorCode`] on the same (still-open) connection,
+//!   and a panicking handler is caught ([`std::panic::catch_unwind`]) and
+//!   answered as `internal` — one bad request never takes the daemon
+//!   down. A panic *while holding* a coordinator's cache lock poisons
+//!   that one target — later requests for it answer `internal` — but
+//!   other targets keep serving and shutdown still completes;
+//! * **graceful shutdown** — `shutdown` stops the accept loop, lets
+//!   in-flight connections drain, and persists every target's cache to
+//!   the `--save-cache` path if one was configured.
+//!
+//! The CLI front ends are `tuna serve` (run a daemon) and `tuna query`
+//! (one-shot client); `rust/tests/serve_e2e.rs` drives an in-process
+//! daemon over real sockets, and `docs/SERVING.md` specifies the wire
+//! protocol.
+
+pub mod protocol;
+
+use crate::coordinator::{Coordinator, Strategy};
+use crate::eval::{CacheError, ScheduleCache};
+use crate::isa::TargetKind;
+use crate::tir::ops::OpSpec;
+use crate::transform::ScheduleConfig;
+use crate::util::pool::WorkQueue;
+use self::protocol::{ErrorCode, Request, Response, TargetStats};
+use std::collections::{BTreeMap, HashMap};
+use std::io::{self, Read, Write};
+use std::net::{Ipv4Addr, SocketAddr, TcpListener, TcpStream};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Longest accepted request line (1 MiB) — a lost-newline client must get
+/// an error, not grow an unbounded buffer.
+const MAX_LINE_BYTES: usize = 1 << 20;
+
+/// How the daemon is built. The listener always binds 127.0.0.1 — this is
+/// a loopback service (remote exposure would need auth the protocol
+/// deliberately does not have).
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Targets to serve; one coordinator each. Must be non-empty.
+    pub targets: Vec<TargetKind>,
+    /// TCP port; 0 picks an ephemeral port (see [`Server::local_addr`]).
+    pub port: u16,
+    /// Connection-handler threads.
+    pub threads: usize,
+    /// Schedule-cache files to warm-load at startup. Entries are split
+    /// per served target; entries for *unserved* targets are held aside
+    /// and folded back into every save, so loading and re-saving one file
+    /// never destroys another target's tuning work.
+    pub cache_paths: Vec<PathBuf>,
+    /// Where graceful shutdown persists the merged caches, if anywhere.
+    pub save_on_shutdown: Option<PathBuf>,
+    /// Optional per-target schedule-cache bound (least-recently-hit
+    /// eviction).
+    pub cache_capacity: Option<usize>,
+    /// Calibrate coordinators at startup (production default). `false`
+    /// keeps the latency-table coefficients — cheaper for tests.
+    pub calibrated: bool,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            targets: Vec::new(),
+            port: 0,
+            threads: 4,
+            cache_paths: Vec::new(),
+            save_on_shutdown: None,
+            cache_capacity: None,
+            calibrated: true,
+        }
+    }
+}
+
+/// Why a daemon could not be built or run.
+#[derive(Debug)]
+pub enum ServeError {
+    Io(io::Error),
+    /// A `--load-cache` file failed to load (typed, per
+    /// [`CacheError`] — a daemon must never silently start cold when it
+    /// was told to start warm).
+    Cache(PathBuf, CacheError),
+    NoTargets,
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::Io(e) => write!(f, "serve: {e}"),
+            ServeError::Cache(p, e) => write!(f, "serve: cache {}: {e}", p.display()),
+            ServeError::NoTargets => write!(f, "serve: no targets configured"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+impl From<io::Error> for ServeError {
+    fn from(e: io::Error) -> Self {
+        ServeError::Io(e)
+    }
+}
+
+/// One served target: its coordinator plus a ground-truth latency memo.
+struct Served {
+    kind: TargetKind,
+    coordinator: Coordinator,
+    /// `(op, chosen config) → deployed seconds`. The device simulator is
+    /// deterministic, so each distinct schedule is deployed exactly once;
+    /// every later tune for it — above all the cache-hit path — answers
+    /// from here in microseconds instead of re-simulating. Grows with the
+    /// number of distinct schedules served (one f64 per schedule).
+    deployed: Mutex<HashMap<String, f64>>,
+}
+
+impl Served {
+    /// The deployed latency of `(op, cfg)`: memoized, simulated on first
+    /// need. The lock is never held across the simulation — two racing
+    /// first deploys just agree on the (deterministic) value.
+    fn deploy_once(&self, op: &OpSpec, cfg: &ScheduleConfig) -> f64 {
+        let key = format!("{}/{:?}", op.cache_key(), cfg.choices);
+        if let Some(&s) = self.deployed.lock().unwrap().get(&key) {
+            return s;
+        }
+        let s = self.coordinator.device.run(op, cfg).seconds;
+        self.deployed.lock().unwrap().insert(key, s);
+        s
+    }
+}
+
+/// Shared daemon state: the per-target coordinators and the stop flag.
+struct State {
+    /// One entry per served target. The Vec is immutable after startup
+    /// (coordinators synchronize internally), so handler threads index it
+    /// lock-free; with five possible targets a linear scan is the whole
+    /// "routing table".
+    coords: Vec<Served>,
+    /// Loaded cache entries addressed to targets this daemon does not
+    /// serve: held aside untouched and folded back into every `save`, so
+    /// `--load-cache f.json --save-cache f.json` never destroys another
+    /// target's tuning work.
+    foreign: ScheduleCache,
+    stop: AtomicBool,
+    /// Our own address — `begin_shutdown` pokes it to unblock `accept`.
+    addr: SocketAddr,
+}
+
+impl State {
+    fn served(&self, kind: TargetKind) -> Option<&Served> {
+        self.coords.iter().find(|t| t.kind == kind)
+    }
+
+    fn stopping(&self) -> bool {
+        self.stop.load(Ordering::Acquire)
+    }
+
+    /// Flip the stop flag and wake the accept loop with a throwaway
+    /// connection so it observes the flag without waiting for a client.
+    fn begin_shutdown(&self) {
+        self.stop.store(true, Ordering::Release);
+        let _ = TcpStream::connect(self.addr);
+    }
+
+    /// Every target's cache folded into one (keys are target-prefixed, so
+    /// this never clashes across targets), plus the pass-through entries
+    /// of unserved targets — the `save` payload.
+    fn merged_cache(&self) -> ScheduleCache {
+        let mut merged = self.foreign.clone();
+        for t in &self.coords {
+            merged.merge_from(t.coordinator.export_cache());
+        }
+        merged
+    }
+
+    /// Decode + execute one request line. Total: every outcome is a
+    /// [`Response`], including handler panics (answered as `internal` —
+    /// the panic message goes to the server's stderr via the panic hook).
+    fn respond(&self, line: &str) -> Response {
+        catch_unwind(AssertUnwindSafe(|| match Request::decode(line) {
+            Err(e) => e.into(),
+            Ok(req) => self.execute(&req),
+        }))
+        .unwrap_or_else(|_| Response::Error {
+            code: ErrorCode::Internal,
+            detail: "request handler panicked (see server stderr)".into(),
+        })
+    }
+
+    fn execute(&self, req: &Request) -> Response {
+        match req {
+            Request::Tune { target, op, params } => {
+                let Some(t) = self.served(*target) else {
+                    return self.not_served(*target);
+                };
+                let es = params.clone().unwrap_or_default().into_es();
+                // search without the coordinator-side deploy, then answer
+                // the ground truth from the per-schedule latency memo: a
+                // cache-hit tune costs a lookup, not a re-simulation
+                match t.coordinator.try_search_op(op, &Strategy::TunaStatic(es)) {
+                    Ok(rep) => Response::Tuned {
+                        target: *target,
+                        op: *op,
+                        predicted_cost: rep.top_k.first().map(|(_, s)| *s).unwrap_or(0.0),
+                        latency_s: t.deploy_once(op, &rep.chosen),
+                        config: rep.chosen,
+                        cache_hit: rep.cache_hit,
+                        evaluations: rep.evaluations,
+                    },
+                    Err(e) => Response::Error {
+                        code: ErrorCode::Unscorable,
+                        detail: e.to_string(),
+                    },
+                }
+            }
+            Request::Stats => {
+                let mut targets = BTreeMap::new();
+                for t in &self.coords {
+                    let c = &t.coordinator;
+                    let (entries, hits, misses) = c.cache_stats();
+                    let ev = c.evaluator().stats();
+                    targets.insert(
+                        t.kind.wire_name().to_string(),
+                        TargetStats {
+                            entries: entries as u64,
+                            hits,
+                            misses,
+                            evictions: c.cache_evictions(),
+                            searches: c.searches_performed(),
+                            feature_hits: ev.hits,
+                            feature_misses: ev.misses,
+                        },
+                    );
+                }
+                Response::Stats { targets }
+            }
+            Request::Recalibrate { target, coeffs } => {
+                let Some(t) = self.served(*target) else {
+                    return self.not_served(*target);
+                };
+                let c = &t.coordinator;
+                let dim = c.evaluator().extractor().dim();
+                if coeffs.len() != dim {
+                    return Response::Error {
+                        code: ErrorCode::BadCoeffs,
+                        detail: format!(
+                            "{} takes {dim} coefficients, got {}",
+                            target.wire_name(),
+                            coeffs.len()
+                        ),
+                    };
+                }
+                if coeffs.iter().any(|c| !c.is_finite()) {
+                    return Response::Error {
+                        code: ErrorCode::BadCoeffs,
+                        detail: "coefficients must be finite".into(),
+                    };
+                }
+                let reranked = c.swap_coeffs(coeffs.clone());
+                Response::Recalibrated { target: *target, reranked: reranked as u64 }
+            }
+            Request::Save { path } => {
+                let merged = self.merged_cache();
+                match merged.save(std::path::Path::new(path)) {
+                    Ok(()) => Response::Saved {
+                        path: path.clone(),
+                        entries: merged.len() as u64,
+                    },
+                    Err(e) => Response::Error { code: ErrorCode::Io, detail: e.to_string() },
+                }
+            }
+            Request::Shutdown => Response::ShuttingDown,
+        }
+    }
+
+    fn not_served(&self, target: TargetKind) -> Response {
+        let served: Vec<&str> = self.coords.iter().map(|t| t.kind.wire_name()).collect();
+        Response::Error {
+            code: ErrorCode::UnknownTarget,
+            detail: format!(
+                "target {} not served by this daemon (serving {})",
+                target.wire_name(),
+                served.join(",")
+            ),
+        }
+    }
+}
+
+/// A bound (not yet running) daemon. [`Server::bind`] does all the
+/// fallible work — coordinators, cache warm-up, the listener — so `run`
+/// only loops.
+pub struct Server {
+    listener: TcpListener,
+    state: State,
+    threads: usize,
+    save_on_shutdown: Option<PathBuf>,
+}
+
+impl Server {
+    /// Build the per-target coordinators (calibrated unless configured
+    /// otherwise), warm-load caches, and bind `127.0.0.1:port`.
+    pub fn bind(config: ServeConfig) -> Result<Server, ServeError> {
+        let mut targets: Vec<TargetKind> = Vec::new();
+        for t in &config.targets {
+            if !targets.contains(t) {
+                targets.push(*t);
+            }
+        }
+        if targets.is_empty() {
+            return Err(ServeError::NoTargets);
+        }
+        let mut coords = Vec::with_capacity(targets.len());
+        for kind in targets {
+            let coordinator = if config.calibrated {
+                Coordinator::new(kind)
+            } else {
+                Coordinator::new_uncalibrated(kind)
+            };
+            if let Some(cap) = config.cache_capacity {
+                coordinator.set_cache_capacity(Some(cap));
+            }
+            coords.push(Served { kind, coordinator, deployed: Mutex::new(HashMap::new()) });
+        }
+        let served_prefixes: Vec<String> =
+            coords.iter().map(|t| format!("{:?}/", t.kind)).collect();
+        let mut foreign = ScheduleCache::new();
+        for path in &config.cache_paths {
+            let loaded = ScheduleCache::load(path)
+                .map_err(|e| ServeError::Cache(path.clone(), e))?;
+            for t in &coords {
+                let own = loaded.filter_target(t.kind);
+                if !own.is_empty() {
+                    t.coordinator.import_cache(own);
+                }
+            }
+            // entries for targets this daemon does not serve are held
+            // aside and folded back into every save — never dropped
+            let mut rest = ScheduleCache::new();
+            for (k, v) in loaded.iter() {
+                if !served_prefixes.iter().any(|p| k.starts_with(p.as_str())) {
+                    rest.insert(k.to_string(), v.clone());
+                }
+            }
+            foreign.merge_from(rest);
+        }
+        let listener = TcpListener::bind((Ipv4Addr::LOCALHOST, config.port))?;
+        let addr = listener.local_addr()?;
+        Ok(Server {
+            listener,
+            state: State { coords, foreign, stop: AtomicBool::new(false), addr },
+            threads: config.threads.max(1),
+            save_on_shutdown: config.save_on_shutdown,
+        })
+    }
+
+    /// The address actually bound — how callers learn an ephemeral port.
+    pub fn local_addr(&self) -> SocketAddr {
+        self.state.addr
+    }
+
+    /// Serve until a `shutdown` request, then drain in-flight connections
+    /// and persist the caches if configured. Blocks the calling thread.
+    pub fn run(self) -> Result<(), ServeError> {
+        let Server { listener, state, threads, save_on_shutdown } = self;
+        let queue: WorkQueue<Conn> = WorkQueue::new();
+        std::thread::scope(|s| {
+            for _ in 0..threads {
+                s.spawn(|| {
+                    while let Some(mut conn) = queue.pop() {
+                        if let ConnFate::Parked = serve_slice(&mut conn, &state) {
+                            // back of the queue: a handful of idle
+                            // keep-alive clients can never pin the whole
+                            // pool (or block shutdown) the way
+                            // thread-per-connection would
+                            queue.push(conn);
+                        }
+                    }
+                });
+            }
+            loop {
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        if state.stopping() {
+                            break; // the shutdown wake-up (or a late client)
+                        }
+                        let _ = stream.set_nodelay(true);
+                        queue.push(Conn { stream, buf: Vec::new() });
+                    }
+                    Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                    Err(_) => {
+                        if state.stopping() {
+                            break;
+                        }
+                        // transient accept failure (e.g. fd pressure):
+                        // back off instead of spinning
+                        std::thread::sleep(Duration::from_millis(50));
+                    }
+                }
+            }
+            queue.close();
+        });
+        if let Some(path) = &save_on_shutdown {
+            // a poisoned coordinator lock (a handler panicked while
+            // holding it) must not turn a graceful shutdown into a crash
+            // with nothing persisted — degrade to an error report instead
+            match catch_unwind(AssertUnwindSafe(|| state.merged_cache())) {
+                Ok(merged) => merged.save(path)?,
+                Err(_) => eprintln!(
+                    "serve: cache export panicked during shutdown; {} not written",
+                    path.display()
+                ),
+            }
+        }
+        Ok(())
+    }
+}
+
+/// One connection in flight: the socket plus its partial-line buffer. The
+/// buffer travels with the connection through the work queue, so parking
+/// a connection never loses bytes.
+struct Conn {
+    stream: TcpStream,
+    buf: Vec<u8>,
+}
+
+enum ConnFate {
+    /// Closed (client EOF, I/O error, line-limit breach, or shutdown).
+    Closed,
+    /// Idle right now — requeue it and let this worker serve someone else.
+    Parked,
+}
+
+/// Serve one connection until it goes idle: peel complete lines from the
+/// buffer, answer each, keep reading while data is flowing. A read
+/// timeout with no complete line parks the connection (the caller
+/// requeues it), which both caps how long an idle client can hold a
+/// worker and acts as the shutdown heartbeat. Partial lines survive
+/// parking — the buffer is ours, not `BufReader`'s.
+fn serve_slice(conn: &mut Conn, state: &State) -> ConnFate {
+    let _ = conn.stream.set_read_timeout(Some(Duration::from_millis(200)));
+    // a client that sends requests but never reads responses must not pin
+    // this worker in write_all forever: once its receive window and our
+    // send buffer fill, the write times out and the connection is dropped
+    let _ = conn.stream.set_write_timeout(Some(Duration::from_secs(5)));
+    let mut chunk = [0u8; 4096];
+    loop {
+        while let Some(nl) = conn.buf.iter().position(|&b| b == b'\n') {
+            let line: Vec<u8> = conn.buf.drain(..=nl).collect();
+            let text = String::from_utf8_lossy(&line[..nl]);
+            let text = text.trim();
+            if text.is_empty() {
+                continue;
+            }
+            let resp = state.respond(text);
+            let is_shutdown = matches!(resp, Response::ShuttingDown);
+            if write_line(&mut conn.stream, &resp).is_err() {
+                return ConnFate::Closed;
+            }
+            if is_shutdown {
+                state.begin_shutdown();
+                return ConnFate::Closed;
+            }
+        }
+        if conn.buf.len() > MAX_LINE_BYTES {
+            let _ = write_line(
+                &mut conn.stream,
+                &Response::Error {
+                    code: ErrorCode::Parse,
+                    detail: format!("request line exceeds {MAX_LINE_BYTES} bytes"),
+                },
+            );
+            return ConnFate::Closed;
+        }
+        match conn.stream.read(&mut chunk) {
+            Ok(0) => return ConnFate::Closed, // client closed
+            Ok(n) => conn.buf.extend_from_slice(&chunk[..n]),
+            Err(e)
+                if matches!(e.kind(), io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut) =>
+            {
+                return if state.stopping() { ConnFate::Closed } else { ConnFate::Parked };
+            }
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+            Err(_) => return ConnFate::Closed,
+        }
+    }
+}
+
+fn write_line(stream: &mut TcpStream, resp: &Response) -> io::Result<()> {
+    let mut line = resp.encode();
+    line.push('\n');
+    stream.write_all(line.as_bytes())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::search::EsParams;
+    use crate::tir::ops::OpSpec;
+
+    /// A daemon state over one uncalibrated coordinator — exercises the
+    /// dispatch layer without sockets (the socket path is covered by
+    /// `rust/tests/serve_e2e.rs`).
+    fn test_state() -> State {
+        State {
+            coords: vec![Served {
+                kind: TargetKind::Graviton2,
+                coordinator: Coordinator::new_uncalibrated(TargetKind::Graviton2),
+                deployed: Mutex::new(HashMap::new()),
+            }],
+            foreign: ScheduleCache::new(),
+            stop: AtomicBool::new(false),
+            addr: SocketAddr::from(([127, 0, 0, 1], 0)),
+        }
+    }
+
+    fn tiny_params() -> protocol::TuneParams {
+        protocol::TuneParams::from_es(&EsParams {
+            population: 8,
+            iterations: 4,
+            k: 8,
+            seed: 3,
+            ..EsParams::default()
+        })
+    }
+
+    #[test]
+    fn tune_then_retune_is_a_cache_hit() {
+        let state = test_state();
+        let req = Request::Tune {
+            target: TargetKind::Graviton2,
+            op: OpSpec::Matmul { m: 32, n: 32, k: 32 },
+            params: Some(tiny_params()),
+        };
+        let first = state.execute(&req);
+        let Response::Tuned { cache_hit, config, .. } = &first else {
+            panic!("expected Tuned, got {first:?}");
+        };
+        assert!(!*cache_hit);
+        let again = state.execute(&req);
+        let Response::Tuned { cache_hit, config: config2, evaluations, .. } = &again else {
+            panic!("expected Tuned, got {again:?}");
+        };
+        assert!(*cache_hit, "repeat tune searched");
+        assert_eq!(*evaluations, 0);
+        assert_eq!(config2, config, "cache hit changed the schedule");
+    }
+
+    #[test]
+    fn unserved_target_and_bad_coeffs_are_typed_errors() {
+        let state = test_state();
+        let unserved = state.execute(&Request::Tune {
+            target: TargetKind::TeslaV100,
+            op: OpSpec::Matmul { m: 8, n: 8, k: 8 },
+            params: None,
+        });
+        let Response::Error { code, detail } = unserved else {
+            panic!("unserved target did not error")
+        };
+        assert_eq!(code, ErrorCode::UnknownTarget);
+        assert!(detail.contains("graviton2"), "detail does not list served targets");
+
+        // wrong dimensionality must be rejected *before* the evaluator's
+        // assert — a daemon answers, it must not panic
+        let bad = state.execute(&Request::Recalibrate {
+            target: TargetKind::Graviton2,
+            coeffs: vec![1.0, 2.0],
+        });
+        assert!(
+            matches!(bad, Response::Error { code: ErrorCode::BadCoeffs, .. }),
+            "wrong-dim coeffs: {bad:?}"
+        );
+        let nan = state.execute(&Request::Recalibrate {
+            target: TargetKind::Graviton2,
+            coeffs: vec![f64::NAN; 7],
+        });
+        assert!(
+            matches!(nan, Response::Error { code: ErrorCode::BadCoeffs, .. }),
+            "non-finite coeffs: {nan:?}"
+        );
+    }
+
+    #[test]
+    fn respond_survives_panicking_handlers_and_garbage() {
+        let state = test_state();
+        // garbage line → typed parse error, not a panic
+        let r = state.respond("][ not json");
+        assert!(matches!(r, Response::Error { code: ErrorCode::Parse, .. }), "{r:?}");
+        // failing execute paths stay typed responses: save to an
+        // unwritable path is an Io error (and resource-exhausting search
+        // params never reach execute — decode caps them, see
+        // protocol::TuneParams::MAX_SEARCH_PARAM)
+        let r = state.respond(r#"{"cmd":"save","path":"/proc/definitely/not/writable.json"}"#);
+        assert!(matches!(r, Response::Error { code: ErrorCode::Io, .. }), "{r:?}");
+    }
+
+    #[test]
+    fn unserved_target_entries_pass_through_save_untouched() {
+        use crate::eval::CachedSchedule;
+        use crate::transform::ScheduleConfig;
+        // a daemon serving graviton2 only, warm-loaded from a file that
+        // also holds a v100 entry: save must keep the v100 entry
+        let mut state = test_state();
+        let mut loaded = ScheduleCache::new();
+        loaded.insert(
+            "TeslaV100/dense_m8_n8_k8/0000000000000000/es_x".into(),
+            CachedSchedule {
+                chosen: ScheduleConfig { choices: vec![0] },
+                best_score: 1.0,
+                top_k: vec![(ScheduleConfig { choices: vec![0] }, 1.0)],
+                evaluations: 1,
+                op: Some(OpSpec::Matmul { m: 8, n: 8, k: 8 }),
+            },
+        );
+        state.foreign = loaded.filter_target(TargetKind::TeslaV100);
+        assert_eq!(state.foreign.len(), 1);
+        let path = std::env::temp_dir()
+            .join(format!("tuna_serve_foreign_{}.json", std::process::id()));
+        let saved = state.execute(&Request::Save { path: path.display().to_string() });
+        assert!(matches!(saved, Response::Saved { entries: 1, .. }), "{saved:?}");
+        let back = ScheduleCache::load(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
+        assert!(
+            back.keys().any(|k| k.starts_with("TeslaV100/")),
+            "unserved target's entry was destroyed by save"
+        );
+    }
+
+    #[test]
+    fn save_roundtrips_through_a_fresh_daemon_state() {
+        let state = test_state();
+        let op = OpSpec::Matmul { m: 48, n: 32, k: 32 };
+        let tune = Request::Tune {
+            target: TargetKind::Graviton2,
+            op,
+            params: Some(tiny_params()),
+        };
+        assert!(matches!(state.execute(&tune), Response::Tuned { .. }));
+        let path = std::env::temp_dir()
+            .join(format!("tuna_serve_state_{}.json", std::process::id()));
+        let saved = state.execute(&Request::Save { path: path.display().to_string() });
+        assert!(matches!(saved, Response::Saved { entries: 1, .. }), "{saved:?}");
+
+        // a fresh state warm-loaded from that file serves without a search
+        let fresh = test_state();
+        let loaded = ScheduleCache::load(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
+        fresh.served(TargetKind::Graviton2).unwrap().coordinator.import_cache(
+            loaded.filter_target(TargetKind::Graviton2),
+        );
+        let served = fresh.execute(&tune);
+        let Response::Tuned { cache_hit, .. } = served else { panic!("{served:?}") };
+        assert!(cache_hit, "persisted cache did not serve the fresh daemon");
+        let Response::Stats { targets } = fresh.execute(&Request::Stats) else {
+            panic!("stats failed")
+        };
+        assert_eq!(targets["graviton2"].searches, 0, "warm daemon searched");
+        assert_eq!(targets["graviton2"].entries, 1);
+    }
+}

@@ -1,0 +1,666 @@
+//! The tune-serving wire protocol: line-delimited JSON over TCP.
+//!
+//! One request per line, one response line back, connection reusable. The
+//! encoding rides on [`crate::util::json`] and [`OpSpec::to_json`] /
+//! [`OpSpec::from_json`] — the same self-describing op form the version-2
+//! schedule-cache format persists, so anything a cache file can name, a
+//! client can ask for. Targets travel as their canonical
+//! [`TargetKind::wire_name`] strings.
+//!
+//! Decoding is total: any byte sequence either yields a [`Request`] or a
+//! typed [`WireError`] (which converts straight into the
+//! [`Response::Error`] the daemon writes back). Truncated lines, trailing
+//! garbage, wrong-typed fields, unknown commands/targets/op kinds — all
+//! errors, never panics; the `property` test suite fuzzes exactly this.
+//! Encode → decode is identity for every finite-valued variant
+//! (`assert_eq!` on the typed value), which the same suite pins down.
+//! The one representational hole is JSON's: `NaN`/`±inf` have no JSON
+//! form, so a value carrying one encodes to an unparseable line — senders
+//! must validate floats finite (the CLI and daemon both do; the daemon
+//! additionally re-checks decoded coefficients).
+//!
+//! The full request/response catalogue with examples and error codes is
+//! specified in `docs/SERVING.md`.
+
+use crate::eval::cache::{cfg_from_json, cfg_to_json};
+use crate::isa::TargetKind;
+use crate::search::EsParams;
+use crate::tir::ops::OpSpec;
+use crate::transform::ScheduleConfig;
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+/// Search hyperparameters carried on the wire. A concrete mirror of
+/// [`EsParams`] minus the host-local `threads` field (a server decides its
+/// own threading); defaults match [`EsParams::default`], so an omitted
+/// `es` object and an explicit default one address the same cache entry.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TuneParams {
+    pub population: usize,
+    pub iterations: usize,
+    pub sigma: f64,
+    pub alpha: f64,
+    pub k: usize,
+    pub seed: u64,
+}
+
+impl Default for TuneParams {
+    fn default() -> Self {
+        Self::from_es(&EsParams::default())
+    }
+}
+
+impl TuneParams {
+    pub fn from_es(p: &EsParams) -> TuneParams {
+        TuneParams {
+            population: p.population,
+            iterations: p.iterations,
+            sigma: p.sigma,
+            alpha: p.alpha,
+            k: p.k,
+            seed: p.seed,
+        }
+    }
+
+    /// Concrete search parameters (threads filled from the host default —
+    /// the evaluator's own thread count is what actually fans out).
+    pub fn into_es(self) -> EsParams {
+        EsParams {
+            population: self.population,
+            iterations: self.iterations,
+            sigma: self.sigma,
+            alpha: self.alpha,
+            k: self.k,
+            seed: self.seed,
+            ..EsParams::default()
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("population", Json::Num(self.population as f64)),
+            ("iterations", Json::Num(self.iterations as f64)),
+            ("sigma", Json::Num(self.sigma)),
+            ("alpha", Json::Num(self.alpha)),
+            ("k", Json::Num(self.k as f64)),
+            // the seed is a full-range u64 (often a hash); a JSON number
+            // would lose bits above 2^53 and silently re-address the
+            // schedule cache, so it travels as a decimal string
+            ("seed", Json::Str(self.seed.to_string())),
+        ])
+    }
+
+    /// Upper bound on wire-supplied `population`/`iterations`/`k`. The
+    /// population is materialized per generation, so an unbounded value
+    /// would let one request abort the daemon on allocation failure (or
+    /// pin a handler for hours). Generous vs. the defaults (32/16/50);
+    /// operators who really want more own the daemon and its code.
+    pub const MAX_SEARCH_PARAM: u64 = 65_536;
+
+    fn from_json(j: &Json) -> Result<TuneParams, String> {
+        let population = count_field(j, "population")?;
+        let iterations = count_field(j, "iterations")?;
+        let k = count_field(j, "k")?;
+        if population == 0 || iterations == 0 || k == 0 {
+            return Err("population, iterations and k must be >= 1".into());
+        }
+        if population.max(iterations).max(k) > Self::MAX_SEARCH_PARAM {
+            return Err(format!(
+                "population, iterations and k must be <= {}",
+                Self::MAX_SEARCH_PARAM
+            ));
+        }
+        let sigma = f64_field(j, "sigma")?;
+        let alpha = f64_field(j, "alpha")?;
+        if !sigma.is_finite() || !alpha.is_finite() {
+            return Err("sigma and alpha must be finite".into());
+        }
+        // string (exact, any u64) or integral number (convenience for
+        // hand-written requests; exact only up to 2^53)
+        let seed = match j.get("seed") {
+            Some(Json::Str(s)) => {
+                s.parse::<u64>().map_err(|e| format!("seed {s:?} is not a u64: {e}"))?
+            }
+            Some(_) => count_field(j, "seed")?,
+            None => return Err("missing 'seed'".into()),
+        };
+        Ok(TuneParams {
+            population: population as usize,
+            iterations: iterations as usize,
+            sigma,
+            alpha,
+            k: k as usize,
+            seed,
+        })
+    }
+}
+
+/// A client request.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Request {
+    /// Optimize `op` for `target` (served from the schedule cache when the
+    /// task was already tuned under the same parameters). `params: None`
+    /// means the server-side defaults.
+    Tune { target: TargetKind, op: OpSpec, params: Option<TuneParams> },
+    /// Per-target cache/search/feature-store counters.
+    Stats,
+    /// Swap new scoring coefficients into `target`'s evaluator and re-rank
+    /// every resident cache entry — online, from memoized features.
+    Recalibrate { target: TargetKind, coeffs: Vec<f64> },
+    /// Persist every target's schedule cache into one file at `path`
+    /// (server-side path).
+    Save { path: String },
+    /// Stop accepting connections and shut the daemon down gracefully.
+    Shutdown,
+}
+
+/// Machine-readable failure class, carried in [`Response::Error`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ErrorCode {
+    /// The line is not valid JSON.
+    Parse,
+    /// Valid JSON, but not a well-formed request (unknown `cmd`, missing
+    /// or wrong-typed fields).
+    BadRequest,
+    /// The named target is unknown, or known but not served by this
+    /// daemon.
+    UnknownTarget,
+    /// The op spec did not parse (unknown kind, bad dimensions).
+    UnknownOp,
+    /// The candidate could not be scored (typed `CostError` from the
+    /// analysis pipeline).
+    Unscorable,
+    /// Recalibration coefficients rejected (wrong dimensionality or
+    /// non-finite values).
+    BadCoeffs,
+    /// A server-side I/O failure (e.g. `save` could not write).
+    Io,
+    /// The request handler panicked; the daemon survives, the request
+    /// does not.
+    Internal,
+}
+
+impl ErrorCode {
+    pub const ALL: [ErrorCode; 8] = [
+        ErrorCode::Parse,
+        ErrorCode::BadRequest,
+        ErrorCode::UnknownTarget,
+        ErrorCode::UnknownOp,
+        ErrorCode::Unscorable,
+        ErrorCode::BadCoeffs,
+        ErrorCode::Io,
+        ErrorCode::Internal,
+    ];
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ErrorCode::Parse => "parse",
+            ErrorCode::BadRequest => "bad_request",
+            ErrorCode::UnknownTarget => "unknown_target",
+            ErrorCode::UnknownOp => "unknown_op",
+            ErrorCode::Unscorable => "unscorable",
+            ErrorCode::BadCoeffs => "bad_coeffs",
+            ErrorCode::Io => "io",
+            ErrorCode::Internal => "internal",
+        }
+    }
+
+    /// Strict inverse of [`Self::as_str`].
+    pub fn from_wire(s: &str) -> Option<ErrorCode> {
+        ErrorCode::ALL.into_iter().find(|c| c.as_str() == s)
+    }
+}
+
+impl std::fmt::Display for ErrorCode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// A typed decode/handling failure. Converts into the [`Response::Error`]
+/// the daemon writes back, so "reject bad input" is one `?` away from
+/// "answer with a typed error".
+#[derive(Debug, Clone, PartialEq)]
+pub struct WireError {
+    pub code: ErrorCode,
+    pub detail: String,
+}
+
+impl WireError {
+    pub fn new(code: ErrorCode, detail: impl Into<String>) -> WireError {
+        WireError { code, detail: detail.into() }
+    }
+}
+
+impl From<WireError> for Response {
+    fn from(e: WireError) -> Response {
+        Response::Error { code: e.code, detail: e.detail }
+    }
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "[{}] {}", self.code, self.detail)
+    }
+}
+
+/// Per-target counters reported by [`Response::Stats`]. `feature_*` are
+/// the evaluator's stage-1 memo counters — `feature_misses` is the number
+/// of candidates actually lowered, the quantity that must *not* move when
+/// a recalibration re-ranks the cache.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct TargetStats {
+    pub entries: u64,
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    pub searches: u64,
+    pub feature_hits: u64,
+    pub feature_misses: u64,
+}
+
+impl TargetStats {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("entries", Json::Num(self.entries as f64)),
+            ("hits", Json::Num(self.hits as f64)),
+            ("misses", Json::Num(self.misses as f64)),
+            ("evictions", Json::Num(self.evictions as f64)),
+            ("searches", Json::Num(self.searches as f64)),
+            ("feature_hits", Json::Num(self.feature_hits as f64)),
+            ("feature_misses", Json::Num(self.feature_misses as f64)),
+        ])
+    }
+
+    fn from_json(j: &Json) -> Result<TargetStats, String> {
+        Ok(TargetStats {
+            entries: count_field(j, "entries")?,
+            hits: count_field(j, "hits")?,
+            misses: count_field(j, "misses")?,
+            evictions: count_field(j, "evictions")?,
+            searches: count_field(j, "searches")?,
+            feature_hits: count_field(j, "feature_hits")?,
+            feature_misses: count_field(j, "feature_misses")?,
+        })
+    }
+}
+
+/// A server response.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Response {
+    /// Outcome of a [`Request::Tune`]: the chosen schedule, its predicted
+    /// cost under the live coefficients, the ground-truth deployed
+    /// latency, and whether the schedule cache served it search-free.
+    Tuned {
+        target: TargetKind,
+        op: OpSpec,
+        config: ScheduleConfig,
+        predicted_cost: f64,
+        latency_s: f64,
+        cache_hit: bool,
+        evaluations: u64,
+    },
+    /// Counters per served target, keyed by wire name.
+    Stats { targets: BTreeMap<String, TargetStats> },
+    /// Recalibration applied; `reranked` cache entries re-scored.
+    Recalibrated { target: TargetKind, reranked: u64 },
+    /// Caches persisted (`entries` across all served targets).
+    Saved { path: String, entries: u64 },
+    /// Acknowledged shutdown; the daemon stops accepting work.
+    ShuttingDown,
+    /// Typed failure — the connection stays open.
+    Error { code: ErrorCode, detail: String },
+}
+
+impl Request {
+    pub fn to_json(&self) -> Json {
+        match self {
+            Request::Tune { target, op, params } => {
+                let mut fields = vec![
+                    ("cmd", Json::Str("tune".into())),
+                    ("target", Json::Str(target.wire_name().into())),
+                    ("op", op.to_json()),
+                ];
+                if let Some(p) = params {
+                    fields.push(("es", p.to_json()));
+                }
+                Json::obj(fields)
+            }
+            Request::Stats => Json::obj(vec![("cmd", Json::Str("stats".into()))]),
+            Request::Recalibrate { target, coeffs } => Json::obj(vec![
+                ("cmd", Json::Str("recalibrate".into())),
+                ("target", Json::Str(target.wire_name().into())),
+                ("coeffs", Json::Arr(coeffs.iter().map(|&c| Json::Num(c)).collect())),
+            ]),
+            Request::Save { path } => Json::obj(vec![
+                ("cmd", Json::Str("save".into())),
+                ("path", Json::Str(path.clone())),
+            ]),
+            Request::Shutdown => Json::obj(vec![("cmd", Json::Str("shutdown".into()))]),
+        }
+    }
+
+    /// One wire line (no trailing newline).
+    pub fn encode(&self) -> String {
+        self.to_json().to_string()
+    }
+
+    /// Decode one line. Total: every failure is a typed [`WireError`]
+    /// ready to be written back as a [`Response::Error`].
+    pub fn decode(line: &str) -> Result<Request, WireError> {
+        let j = Json::parse(line.trim())
+            .map_err(|e| WireError::new(ErrorCode::Parse, e))?;
+        let cmd = j
+            .get("cmd")
+            .and_then(Json::as_str)
+            .ok_or_else(|| WireError::new(ErrorCode::BadRequest, "missing 'cmd' string"))?;
+        match cmd {
+            "tune" => {
+                let target = target_field(&j)?;
+                let op_j = j.get("op").ok_or_else(|| {
+                    WireError::new(ErrorCode::BadRequest, "tune needs an 'op' object")
+                })?;
+                let op = OpSpec::from_json(op_j)
+                    .map_err(|e| WireError::new(ErrorCode::UnknownOp, e))?;
+                let params = match j.get("es") {
+                    None => None,
+                    Some(p) => Some(
+                        TuneParams::from_json(p)
+                            .map_err(|e| WireError::new(ErrorCode::BadRequest, e))?,
+                    ),
+                };
+                Ok(Request::Tune { target, op, params })
+            }
+            "stats" => Ok(Request::Stats),
+            "recalibrate" => {
+                let target = target_field(&j)?;
+                let arr = j.get("coeffs").and_then(Json::as_arr).ok_or_else(|| {
+                    WireError::new(ErrorCode::BadRequest, "recalibrate needs a 'coeffs' array")
+                })?;
+                let coeffs = arr
+                    .iter()
+                    .map(|v| {
+                        v.as_f64().ok_or_else(|| {
+                            WireError::new(ErrorCode::BadCoeffs, "coefficients must be numbers")
+                        })
+                    })
+                    .collect::<Result<Vec<f64>, WireError>>()?;
+                Ok(Request::Recalibrate { target, coeffs })
+            }
+            "save" => {
+                let path = j.get("path").and_then(Json::as_str).ok_or_else(|| {
+                    WireError::new(ErrorCode::BadRequest, "save needs a 'path' string")
+                })?;
+                Ok(Request::Save { path: path.to_string() })
+            }
+            "shutdown" => Ok(Request::Shutdown),
+            other => Err(WireError::new(
+                ErrorCode::BadRequest,
+                format!("unknown cmd {other:?} (tune|stats|recalibrate|save|shutdown)"),
+            )),
+        }
+    }
+}
+
+impl Response {
+    pub fn to_json(&self) -> Json {
+        match self {
+            Response::Tuned {
+                target,
+                op,
+                config,
+                predicted_cost,
+                latency_s,
+                cache_hit,
+                evaluations,
+            } => Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("type", Json::Str("tuned".into())),
+                ("target", Json::Str(target.wire_name().into())),
+                ("op", op.to_json()),
+                ("config", cfg_to_json(config)),
+                ("predicted_cost", Json::Num(*predicted_cost)),
+                ("latency_s", Json::Num(*latency_s)),
+                ("cache_hit", Json::Bool(*cache_hit)),
+                ("evaluations", Json::Num(*evaluations as f64)),
+            ]),
+            Response::Stats { targets } => Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("type", Json::Str("stats".into())),
+                (
+                    "targets",
+                    Json::Obj(
+                        targets.iter().map(|(k, v)| (k.clone(), v.to_json())).collect(),
+                    ),
+                ),
+            ]),
+            Response::Recalibrated { target, reranked } => Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("type", Json::Str("recalibrated".into())),
+                ("target", Json::Str(target.wire_name().into())),
+                ("reranked", Json::Num(*reranked as f64)),
+            ]),
+            Response::Saved { path, entries } => Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("type", Json::Str("saved".into())),
+                ("path", Json::Str(path.clone())),
+                ("entries", Json::Num(*entries as f64)),
+            ]),
+            Response::ShuttingDown => Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("type", Json::Str("shutting_down".into())),
+            ]),
+            Response::Error { code, detail } => Json::obj(vec![
+                ("ok", Json::Bool(false)),
+                (
+                    "error",
+                    Json::obj(vec![
+                        ("code", Json::Str(code.as_str().into())),
+                        ("detail", Json::Str(detail.clone())),
+                    ]),
+                ),
+            ]),
+        }
+    }
+
+    /// One wire line (no trailing newline).
+    pub fn encode(&self) -> String {
+        self.to_json().to_string()
+    }
+
+    /// Decode one response line (the client side; also total).
+    pub fn decode(line: &str) -> Result<Response, String> {
+        let j = Json::parse(line.trim())?;
+        let ok = match j.get("ok") {
+            Some(Json::Bool(b)) => *b,
+            _ => return Err("response missing 'ok' bool".into()),
+        };
+        if !ok {
+            let err = j.get("error").ok_or("error response missing 'error' object")?;
+            let code_s =
+                err.get("code").and_then(Json::as_str).ok_or("error missing 'code'")?;
+            let code = ErrorCode::from_wire(code_s)
+                .ok_or_else(|| format!("unknown error code {code_s:?}"))?;
+            let detail =
+                err.get("detail").and_then(Json::as_str).ok_or("error missing 'detail'")?;
+            return Ok(Response::Error { code, detail: detail.to_string() });
+        }
+        let ty = j.get("type").and_then(Json::as_str).ok_or("response missing 'type'")?;
+        match ty {
+            "tuned" => {
+                let target = target_field(&j).map_err(|e| e.detail)?;
+                let op = OpSpec::from_json(j.get("op").ok_or("tuned missing 'op'")?)?;
+                let config = cfg_from_json(j.get("config").ok_or("tuned missing 'config'")?)?;
+                let cache_hit = match j.get("cache_hit") {
+                    Some(Json::Bool(b)) => *b,
+                    _ => return Err("tuned missing 'cache_hit' bool".into()),
+                };
+                Ok(Response::Tuned {
+                    target,
+                    op,
+                    config,
+                    predicted_cost: f64_field(&j, "predicted_cost")?,
+                    latency_s: f64_field(&j, "latency_s")?,
+                    cache_hit,
+                    evaluations: count_field(&j, "evaluations")?,
+                })
+            }
+            "stats" => {
+                let Some(Json::Obj(m)) = j.get("targets") else {
+                    return Err("stats missing 'targets' object".into());
+                };
+                let mut targets = BTreeMap::new();
+                for (k, v) in m {
+                    targets.insert(k.clone(), TargetStats::from_json(v)?);
+                }
+                Ok(Response::Stats { targets })
+            }
+            "recalibrated" => Ok(Response::Recalibrated {
+                target: target_field(&j).map_err(|e| e.detail)?,
+                reranked: count_field(&j, "reranked")?,
+            }),
+            "saved" => Ok(Response::Saved {
+                path: j
+                    .get("path")
+                    .and_then(Json::as_str)
+                    .ok_or("saved missing 'path'")?
+                    .to_string(),
+                entries: count_field(&j, "entries")?,
+            }),
+            "shutting_down" => Ok(Response::ShuttingDown),
+            other => Err(format!("unknown response type {other:?}")),
+        }
+    }
+}
+
+/// Parse + validate the `target` field against the canonical wire names.
+fn target_field(j: &Json) -> Result<TargetKind, WireError> {
+    let s = j
+        .get("target")
+        .and_then(Json::as_str)
+        .ok_or_else(|| WireError::new(ErrorCode::BadRequest, "missing 'target' string"))?;
+    TargetKind::from_wire(s).ok_or_else(|| {
+        let known: Vec<&str> = TargetKind::ALL.iter().map(|k| k.wire_name()).collect();
+        WireError::new(
+            ErrorCode::UnknownTarget,
+            format!("unknown target {s:?} (one of {})", known.join("|")),
+        )
+    })
+}
+
+fn f64_field(j: &Json, name: &str) -> Result<f64, String> {
+    j.get(name).and_then(Json::as_f64).ok_or_else(|| format!("missing numeric '{name}'"))
+}
+
+/// A non-negative integral count (u64 through the JSON number space; the
+/// protocol's counters stay far below the 2^53 exactness bound).
+fn count_field(j: &Json, name: &str) -> Result<u64, String> {
+    let v = f64_field(j, name)?;
+    if v.fract() != 0.0 || !(0.0..=9.0e15).contains(&v) {
+        return Err(format!("'{name}'={v} is not a valid count"));
+    }
+    Ok(v as u64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wire_names_roundtrip_every_target() {
+        for kind in TargetKind::ALL {
+            assert_eq!(TargetKind::from_wire(kind.wire_name()), Some(kind));
+            // and the CLI parser accepts the canonical name too
+            assert_eq!(
+                crate::config::parse_targets(kind.wire_name()).unwrap(),
+                vec![kind],
+                "wire name {} unknown to parse_targets",
+                kind.wire_name()
+            );
+        }
+        assert_eq!(TargetKind::from_wire("tpu"), None);
+    }
+
+    #[test]
+    fn request_examples_roundtrip() {
+        let reqs = [
+            Request::Tune {
+                target: TargetKind::Graviton2,
+                op: OpSpec::Matmul { m: 64, n: 64, k: 64 },
+                params: None,
+            },
+            Request::Tune {
+                target: TargetKind::TeslaV100,
+                op: OpSpec::BatchMatmul { b: 12, m: 128, n: 128, k: 64 },
+                params: Some(TuneParams::default()),
+            },
+            Request::Stats,
+            Request::Recalibrate {
+                target: TargetKind::CortexA53,
+                coeffs: vec![0.5, 1.25, 3.0],
+            },
+            Request::Save { path: "/tmp/caches with space.json".into() },
+            Request::Shutdown,
+        ];
+        for r in reqs {
+            let line = r.encode();
+            assert_eq!(Request::decode(&line).unwrap(), r, "mangled: {line}");
+        }
+    }
+
+    #[test]
+    fn default_params_address_the_same_cache_entry_as_none() {
+        // cache signature derives from EsParams; wire defaults must match
+        let explicit = TuneParams::default().into_es();
+        let default = EsParams::default();
+        let sig = |p: EsParams| crate::coordinator::Strategy::TunaStatic(p).cache_sig();
+        assert_eq!(sig(explicit), sig(default));
+    }
+
+    #[test]
+    fn malformed_requests_get_typed_codes() {
+        for (line, code) in [
+            ("not json at all", ErrorCode::Parse),
+            (r#"{"cmd":"tune"}"#, ErrorCode::BadRequest),
+            (r#"{"cmd":"frobnicate"}"#, ErrorCode::BadRequest),
+            (r#"{"op":{}}"#, ErrorCode::BadRequest),
+            (r#"{"cmd":"tune","target":"tpu","op":{}}"#, ErrorCode::UnknownTarget),
+            (
+                r#"{"cmd":"tune","target":"graviton2","op":{"kind":"sparse"}}"#,
+                ErrorCode::UnknownOp,
+            ),
+            (
+                r#"{"cmd":"tune","target":"graviton2","op":{"kind":"dense","m":1,"n":2}}"#,
+                ErrorCode::UnknownOp,
+            ),
+            (r#"{"cmd":"recalibrate","target":"graviton2"}"#, ErrorCode::BadRequest),
+            (
+                // resource-exhaustion guard: a population no search should
+                // ever materialize is rejected at decode, not attempted
+                r#"{"cmd":"tune","target":"graviton2","op":{"kind":"dense","m":1,"n":2,"k":3},"es":{"population":9000000000,"iterations":1,"sigma":1,"alpha":0.7,"k":8,"seed":"1"}}"#,
+                ErrorCode::BadRequest,
+            ),
+            (
+                r#"{"cmd":"recalibrate","target":"graviton2","coeffs":[1,"x"]}"#,
+                ErrorCode::BadCoeffs,
+            ),
+            (r#"{"cmd":"save"}"#, ErrorCode::BadRequest),
+            (r#"{"cmd":"shutdown"} trailing"#, ErrorCode::Parse),
+        ] {
+            match Request::decode(line) {
+                Err(e) => assert_eq!(e.code, code, "{line} → {e}"),
+                Ok(r) => panic!("accepted {line:?} as {r:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn error_response_roundtrips_every_code() {
+        for code in ErrorCode::ALL {
+            let r = Response::Error { code, detail: format!("why {code} happened") };
+            let line = r.encode();
+            assert_eq!(Response::decode(&line).unwrap(), r, "mangled: {line}");
+            assert!(line.contains(code.as_str()));
+        }
+    }
+}

@@ -105,8 +105,15 @@ impl ShardWorker {
     /// Tune every task in this worker's shard (sequentially at the task
     /// level — candidate-level fan-out inside the evaluator is where the
     /// worker's threads go).
+    ///
+    /// Workers search and record but do **not** deploy: the serving pass
+    /// over the merged cache re-deploys every task for ground truth, so a
+    /// worker-side simulator run would be paid twice for no information
+    /// ([`Coordinator::search_op`]). Worker reports therefore carry
+    /// `latency_s == 0.0`; the cache contents — what the merge consumes —
+    /// are bit-identical to the deploying path.
     pub fn run(&self, tasks: &[OpSpec], strategy: &Strategy) -> Vec<OpReport> {
-        tasks.iter().map(|op| self.coordinator.tune_op(op, strategy)).collect()
+        tasks.iter().map(|op| self.coordinator.search_op(op, strategy)).collect()
     }
 
     /// Emit the worker's schedule cache for merging.

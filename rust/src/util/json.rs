@@ -207,20 +207,58 @@ fn parse_value(b: &[u8], pos: &mut usize) -> Result<Json, String> {
                             Some(b'\\') => s.push('\\'),
                             Some(b'/') => s.push('/'),
                             Some(b'u') => {
+                                // bounds-checked: a line truncated inside a
+                                // \uXXXX escape must fail the parse, not
+                                // panic (this parser now reads socket input)
+                                if *pos + 5 > b.len() {
+                                    return Err("truncated \\u escape".into());
+                                }
                                 let hex = std::str::from_utf8(&b[*pos + 1..*pos + 5])
                                     .map_err(|e| e.to_string())?;
                                 let code =
                                     u32::from_str_radix(hex, 16).map_err(|e| e.to_string())?;
-                                s.push(char::from_u32(code).unwrap_or('?'));
-                                *pos += 4;
+                                if (0xD800..=0xDBFF).contains(&code) {
+                                    // high surrogate: standard JSON encoders
+                                    // (ensure_ascii) emit astral chars as a
+                                    // \uD8xx\uDCxx pair — decode it, never
+                                    // mangle it to replacement characters
+                                    if *pos + 11 > b.len()
+                                        || b[*pos + 5] != b'\\'
+                                        || b[*pos + 6] != b'u'
+                                    {
+                                        return Err("unpaired high surrogate".into());
+                                    }
+                                    let hex2 =
+                                        std::str::from_utf8(&b[*pos + 7..*pos + 11])
+                                            .map_err(|e| e.to_string())?;
+                                    let low = u32::from_str_radix(hex2, 16)
+                                        .map_err(|e| e.to_string())?;
+                                    if !(0xDC00..=0xDFFF).contains(&low) {
+                                        return Err("unpaired high surrogate".into());
+                                    }
+                                    let astral =
+                                        0x10000 + ((code - 0xD800) << 10) + (low - 0xDC00);
+                                    s.push(char::from_u32(astral).ok_or("bad surrogate pair")?);
+                                    *pos += 10;
+                                } else if (0xDC00..=0xDFFF).contains(&code) {
+                                    return Err("unpaired low surrogate".into());
+                                } else {
+                                    s.push(char::from_u32(code).ok_or("invalid \\u escape")?);
+                                    *pos += 4;
+                                }
                             }
                             _ => return Err("bad escape".into()),
                         }
                         *pos += 1;
                     }
                     c => {
-                        // collect a full UTF-8 sequence
+                        // collect a full UTF-8 sequence (bounds-checked:
+                        // input truncated mid-sequence is an error, not a
+                        // panic)
                         let ch_len = utf8_len(c);
+                        if *pos + ch_len > b.len() {
+                            return Err("truncated UTF-8 sequence".into());
+                        }
                         let chunk = std::str::from_utf8(&b[*pos..*pos + ch_len])
                             .map_err(|e| e.to_string())?;
                         s.push_str(chunk);
@@ -303,5 +341,44 @@ mod tests {
     fn rejects_garbage() {
         assert!(Json::parse("{invalid}").is_err());
         assert!(Json::parse("[1,2,").is_err());
+    }
+
+    #[test]
+    fn decodes_surrogate_pairs_and_rejects_lone_halves() {
+        // what json.dumps (ensure_ascii) emits for an astral character
+        let j = Json::parse(r#""\ud83d\ude00""#).unwrap();
+        assert_eq!(j.as_str(), Some("\u{1F600}"));
+        // raw UTF-8 astral input works too (what our own writer emits)
+        assert_eq!(Json::parse("\"\u{1F600}\"").unwrap().as_str(), Some("\u{1F600}"));
+        // lone or malformed halves are errors, not '?' substitutions
+        for bad in [
+            r#""\ud83d""#,
+            r#""\ud83dx""#,
+            r#""\ud83dA""#,
+            r#""\ude00""#,
+        ] {
+            assert!(Json::parse(bad).is_err(), "accepted {bad}");
+        }
+    }
+
+    #[test]
+    fn rejects_truncated_escapes_without_panicking() {
+        // truncated \u escape, truncated multi-byte UTF-8, bare backslash
+        for bad in ["\"\\u12", "\"\\u", "\"\\", "\"\u{e9}"] {
+            let truncated = &bad.as_bytes()[..bad.len().saturating_sub(1)];
+            if let Ok(s) = std::str::from_utf8(truncated) {
+                assert!(Json::parse(s).is_err(), "accepted {s:?}");
+            }
+            assert!(Json::parse(bad).is_err(), "accepted {bad:?}");
+        }
+        // every strict prefix of a valid document is an error, not a panic
+        let full = r#"{"a":"xAy","b":[1.5,true,"\n"]}"#;
+        assert!(Json::parse(full).is_ok());
+        for cut in 0..full.len() {
+            if !full.is_char_boundary(cut) {
+                continue;
+            }
+            assert!(Json::parse(&full[..cut]).is_err(), "prefix {cut} accepted");
+        }
     }
 }

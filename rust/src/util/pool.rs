@@ -6,8 +6,9 @@
 //! evaluation fans out here, while the dynamic baseline is forced through
 //! the sequential device queue.
 
+use std::collections::VecDeque;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{Condvar, Mutex};
 
 /// Parallel map with `threads` workers; preserves item order.
 pub fn parallel_map<T, R, F>(items: Vec<T>, threads: usize, f: F) -> Vec<R>
@@ -105,6 +106,75 @@ pub fn default_threads() -> usize {
     std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1)
 }
 
+/// A closeable blocking MPMC work queue — the long-lived-service
+/// counterpart to [`parallel_map`]'s fixed work list. Producers `push`,
+/// worker threads block in `pop`; `close` wakes every worker, which then
+/// drain the remaining items and exit. The serve daemon feeds accepted
+/// connections through one of these to a fixed pool of handler threads.
+pub struct WorkQueue<T> {
+    state: Mutex<WorkQueueState<T>>,
+    ready: Condvar,
+}
+
+struct WorkQueueState<T> {
+    items: VecDeque<T>,
+    closed: bool,
+}
+
+impl<T> Default for WorkQueue<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T> WorkQueue<T> {
+    pub fn new() -> Self {
+        WorkQueue {
+            state: Mutex::new(WorkQueueState { items: VecDeque::new(), closed: false }),
+            ready: Condvar::new(),
+        }
+    }
+
+    /// Enqueue an item and wake one waiting worker. Returns `false` (and
+    /// drops the item) if the queue is already closed.
+    pub fn push(&self, item: T) -> bool {
+        let mut s = self.state.lock().unwrap();
+        if s.closed {
+            return false;
+        }
+        s.items.push_back(item);
+        self.ready.notify_one();
+        true
+    }
+
+    /// Block until an item is available (`Some`) or the queue is closed
+    /// *and* drained (`None`) — workers finish outstanding work before
+    /// exiting.
+    pub fn pop(&self) -> Option<T> {
+        let mut s = self.state.lock().unwrap();
+        loop {
+            if let Some(item) = s.items.pop_front() {
+                return Some(item);
+            }
+            if s.closed {
+                return None;
+            }
+            s = self.ready.wait(s).unwrap();
+        }
+    }
+
+    /// Close the queue: pending items still drain, further pushes are
+    /// refused, and every blocked worker wakes up.
+    pub fn close(&self) {
+        self.state.lock().unwrap().closed = true;
+        self.ready.notify_all();
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.state.lock().unwrap().closed
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -149,5 +219,38 @@ mod tests {
         let empty: Vec<u8> = parallel_map_indexed(0, 4, |_| 0u8);
         assert!(empty.is_empty());
         assert_eq!(parallel_map_indexed(3, 1, |i| i + 10), vec![10, 11, 12]);
+    }
+
+    #[test]
+    fn work_queue_delivers_every_item_once() {
+        let q: WorkQueue<usize> = WorkQueue::new();
+        let seen = Mutex::new(Vec::new());
+        std::thread::scope(|s| {
+            for _ in 0..3 {
+                s.spawn(|| {
+                    while let Some(i) = q.pop() {
+                        seen.lock().unwrap().push(i);
+                    }
+                });
+            }
+            for i in 0..50 {
+                assert!(q.push(i));
+            }
+            q.close();
+        });
+        let mut got = seen.into_inner().unwrap();
+        got.sort_unstable();
+        assert_eq!(got, (0..50).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn closed_queue_refuses_pushes_but_drains() {
+        let q: WorkQueue<u8> = WorkQueue::new();
+        assert!(q.push(1));
+        q.close();
+        assert!(q.is_closed());
+        assert!(!q.push(2), "closed queue accepted an item");
+        assert_eq!(q.pop(), Some(1), "pending item lost on close");
+        assert_eq!(q.pop(), None, "closed+drained queue did not release the worker");
     }
 }

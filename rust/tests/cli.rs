@@ -1,0 +1,173 @@
+//! CLI integration tests across a real process boundary: the built `tuna`
+//! binary (`CARGO_BIN_EXE_tuna`) is spawned as separate OS processes for
+//! the whole multi-machine story — sharded `tune-net --save-cache` runs,
+//! `merge-caches`, then a `serve` daemon warm-loaded from the merged file
+//! answered by `query` over a real socket. `merge-caches`, `serve` and
+//! `query` have no other coverage at this level; everything here crosses
+//! argv, exit codes, stdout and TCP, not library calls.
+
+use std::io::{BufRead, BufReader};
+use std::path::PathBuf;
+use std::process::{Child, Command, Stdio};
+
+fn bin() -> &'static str {
+    env!("CARGO_BIN_EXE_tuna")
+}
+
+fn temp_path(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("tuna_cli_{tag}_{}.json", std::process::id()))
+}
+
+/// The search parameters every stage of the test must share — the
+/// schedule-cache address includes them, so a `query` with different
+/// parameters would (correctly) miss the tuned entries.
+const ES_FLAGS: [&str; 6] = ["--pop", "8", "--iters", "4", "--seed", "11"];
+
+/// Kill the daemon if the test panics before the clean shutdown path.
+struct DaemonGuard(Option<Child>);
+
+impl DaemonGuard {
+    /// Hand the child back for a clean `wait`.
+    fn take(&mut self) -> Child {
+        self.0.take().expect("daemon already taken")
+    }
+}
+
+impl Drop for DaemonGuard {
+    fn drop(&mut self) {
+        if let Some(mut child) = self.0.take() {
+            let _ = child.kill();
+            let _ = child.wait();
+        }
+    }
+}
+
+fn run_ok(args: &[&str]) -> String {
+    let out = Command::new(bin())
+        .args(args)
+        .stderr(Stdio::null())
+        .output()
+        .expect("failed to spawn tuna");
+    assert!(
+        out.status.success(),
+        "tuna {} exited with {:?}",
+        args.join(" "),
+        out.status.code()
+    );
+    String::from_utf8_lossy(&out.stdout).into_owned()
+}
+
+#[test]
+fn sharded_tune_merge_serve_query_across_process_boundaries() {
+    let w0 = temp_path("w0");
+    let w1 = temp_path("w1");
+    let merged = temp_path("merged");
+
+    // two independent sharded tuning runs persist their caches — as two
+    // machines would. Identical inputs, so the merge below exercises the
+    // key-clash (combine) path end to end.
+    for out in [&w0, &w1] {
+        let mut args = vec![
+            "tune-net",
+            "--net",
+            "bert_base",
+            "--target",
+            "graviton2",
+            "--shards",
+            "2",
+        ];
+        args.extend(ES_FLAGS);
+        let out_s = out.display().to_string();
+        args.extend(["--save-cache", out_s.as_str()]);
+        run_ok(&args);
+        assert!(out.exists(), "{} was not written", out.display());
+    }
+
+    // fold the two worker files into one serving cache
+    let inputs = format!("{},{}", w0.display(), w1.display());
+    let merged_s = merged.display().to_string();
+    let stdout =
+        run_ok(&["merge-caches", "--inputs", inputs.as_str(), "--out", merged_s.as_str()]);
+    assert!(stdout.contains("merged"), "merge-caches reported nothing: {stdout}");
+    let _ = std::fs::remove_file(&w0);
+    let _ = std::fs::remove_file(&w1);
+
+    // serve the merged file on an ephemeral port (a separate process)
+    let mut daemon = DaemonGuard(Some(
+        Command::new(bin())
+            .args(["serve", "--targets", "graviton2", "--port", "0"])
+            .args(["--load-cache", merged_s.as_str()])
+            .stdout(Stdio::piped())
+            .stderr(Stdio::null())
+            .spawn()
+            .expect("failed to spawn serve daemon"),
+    ));
+    let port = {
+        let stdout = daemon.0.as_mut().unwrap().stdout.take().expect("no stdout pipe");
+        let mut line = String::new();
+        BufReader::new(stdout).read_line(&mut line).expect("daemon stdout unreadable");
+        // "listening on 127.0.0.1:PORT"
+        line.trim()
+            .rsplit(':')
+            .next()
+            .and_then(|p| p.parse::<u16>().ok())
+            .unwrap_or_else(|| panic!("no port in daemon banner {line:?}"))
+    };
+    let port_s = port.to_string();
+
+    // a bert_base task, queried with the same search parameters the
+    // tune-net runs used: served from the merged cache, search-free
+    let mut args = vec![
+        "query",
+        "--port",
+        port_s.as_str(),
+        "--target",
+        "graviton2",
+        "--op",
+        "matmul:128x768x768",
+    ];
+    args.extend(ES_FLAGS);
+    let tuned = run_ok(&args);
+    assert!(
+        tuned.contains("\"cache_hit\":true"),
+        "query was not served from the merged cache: {tuned}"
+    );
+    assert!(tuned.contains("\"evaluations\":0"), "served query evaluated: {tuned}");
+
+    // the daemon performed zero searches for it
+    let stats = run_ok(&["query", "--port", port_s.as_str(), "--stats"]);
+    assert!(stats.contains("\"searches\":0"), "daemon searched: {stats}");
+
+    // a target the daemon does not serve is a clean non-zero exit
+    let unserved = Command::new(bin())
+        .args(["query", "--port", port_s.as_str(), "--target", "v100", "--op", "matmul:8x8x8"])
+        .output()
+        .expect("failed to spawn query");
+    assert!(!unserved.status.success(), "unserved-target query exited 0");
+    assert!(
+        String::from_utf8_lossy(&unserved.stderr).contains("unknown_target"),
+        "missing typed code: {}",
+        String::from_utf8_lossy(&unserved.stderr)
+    );
+
+    // graceful shutdown via the socket; the daemon process exits 0
+    run_ok(&["query", "--port", port_s.as_str(), "--shutdown"]);
+    let status = daemon.take().wait().expect("daemon did not exit");
+    assert!(status.success(), "daemon exited with {:?}", status.code());
+    let _ = std::fs::remove_file(&merged);
+}
+
+#[test]
+fn query_against_a_dead_port_fails_cleanly() {
+    // port 1 on loopback is never listening in CI containers
+    let out = Command::new(bin())
+        .args(["query", "--port", "1", "--stats"])
+        .output()
+        .expect("failed to spawn query");
+    assert!(!out.status.success(), "query to a dead port exited 0");
+    assert!(
+        String::from_utf8_lossy(&out.stderr).contains("connect"),
+        "unhelpful connect error: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+}

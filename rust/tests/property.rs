@@ -2,10 +2,13 @@
 //! on the deterministic in-tree RNG — the offline environment has no
 //! proptest; same idea: random cases + shrink-free minimal assertions).
 
+use std::collections::BTreeMap;
 use tuna::isa::TargetKind;
 use tuna::isets::{Affine, StridedSet};
+use tuna::serve::protocol::{ErrorCode, Request, Response, TargetStats, TuneParams};
 use tuna::tir::ops::OpSpec;
 use tuna::transform;
+use tuna::transform::ScheduleConfig;
 use tuna::util::Rng;
 
 const CASES: usize = 60;
@@ -238,6 +241,194 @@ fn prop_strided_set_algebra() {
         assert!(m.cardinality() >= a.cardinality().max(b.cardinality()));
         assert_eq!(m.min(), a.min() + b.min());
         assert_eq!(m.max(), a.max() + b.max());
+    }
+}
+
+// ---------------------------------------------------------------------
+// serve-protocol properties: arbitrary Request/Response values survive
+// encode → decode bit-identically, and the decoder is total (truncation,
+// trailing garbage and wrong shapes are errors, never panics).
+
+fn random_target(rng: &mut Rng) -> TargetKind {
+    TargetKind::ALL[rng.below(TargetKind::ALL.len())]
+}
+
+/// Strings with every character class the escaper must survive: quotes,
+/// backslashes, control characters, multi-byte UTF-8, spaces.
+fn random_string(rng: &mut Rng) -> String {
+    const PIECES: [&str; 8] = [
+        "caches/merged.json",
+        "/tmp/with space",
+        "q\"uote",
+        "back\\slash",
+        "line\nbreak\ttab",
+        "ünïcødé—カタカナ",
+        "ctl\u{1}\u{1f}",
+        "",
+    ];
+    let mut s = String::new();
+    for _ in 0..rng.below(4) {
+        s.push_str(PIECES[rng.below(PIECES.len())]);
+    }
+    s
+}
+
+fn random_params(rng: &mut Rng) -> TuneParams {
+    TuneParams {
+        population: 1 + rng.below(64),
+        iterations: 1 + rng.below(32),
+        sigma: 0.25 * (1 + rng.below(8)) as f64,
+        alpha: 0.1 * (1 + rng.below(20)) as f64,
+        k: 1 + rng.below(64),
+        // full-range: the wire carries seeds as decimal strings, so bits
+        // above 2^53 must survive too
+        seed: rng.next_u64(),
+    }
+}
+
+fn random_request(rng: &mut Rng) -> Request {
+    match rng.below(5) {
+        0 => Request::Tune {
+            target: random_target(rng),
+            op: random_op(rng),
+            params: if rng.below(2) == 0 { None } else { Some(random_params(rng)) },
+        },
+        1 => Request::Stats,
+        2 => Request::Recalibrate {
+            target: random_target(rng),
+            coeffs: (0..rng.below(9)).map(|_| rng.f64() * 4.0 - 2.0).collect(),
+        },
+        3 => Request::Save { path: random_string(rng) },
+        _ => Request::Shutdown,
+    }
+}
+
+fn random_stats(rng: &mut Rng) -> TargetStats {
+    TargetStats {
+        entries: rng.below(10_000) as u64,
+        hits: rng.below(10_000) as u64,
+        misses: rng.below(10_000) as u64,
+        evictions: rng.below(100) as u64,
+        searches: rng.below(10_000) as u64,
+        feature_hits: rng.below(1_000_000) as u64,
+        feature_misses: rng.below(1_000_000) as u64,
+    }
+}
+
+fn random_response(rng: &mut Rng) -> Response {
+    match rng.below(6) {
+        0 => Response::Tuned {
+            target: random_target(rng),
+            op: random_op(rng),
+            config: ScheduleConfig {
+                choices: (0..rng.below(7)).map(|_| rng.below(16)).collect(),
+            },
+            predicted_cost: rng.f64() * 1e6,
+            latency_s: rng.f64(),
+            cache_hit: rng.below(2) == 0,
+            evaluations: rng.below(1_000_000) as u64,
+        },
+        1 => {
+            let mut targets = BTreeMap::new();
+            for _ in 0..rng.below(4) {
+                targets.insert(random_target(rng).wire_name().to_string(), random_stats(rng));
+            }
+            Response::Stats { targets }
+        }
+        2 => Response::Recalibrated {
+            target: random_target(rng),
+            reranked: rng.below(1000) as u64,
+        },
+        3 => Response::Saved { path: random_string(rng), entries: rng.below(1000) as u64 },
+        4 => Response::ShuttingDown,
+        _ => Response::Error {
+            code: ErrorCode::ALL[rng.below(ErrorCode::ALL.len())],
+            detail: random_string(rng),
+        },
+    }
+}
+
+/// INVARIANT: every request survives the wire bit-identically.
+#[test]
+fn prop_protocol_requests_roundtrip() {
+    let mut rng = Rng::new(808);
+    for case in 0..250 {
+        let req = random_request(&mut rng);
+        let line = req.encode();
+        let back = Request::decode(&line)
+            .unwrap_or_else(|e| panic!("case {case}: rejected own encoding {line}: {e}"));
+        assert_eq!(back, req, "case {case}: {line}");
+    }
+}
+
+/// INVARIANT: every response — including every error variant — survives
+/// the wire bit-identically.
+#[test]
+fn prop_protocol_responses_roundtrip() {
+    // systematically: each error code, with an adversarial detail string
+    let mut rng = Rng::new(909);
+    for code in ErrorCode::ALL {
+        let r = Response::Error { code, detail: random_string(&mut rng) };
+        let line = r.encode();
+        assert_eq!(Response::decode(&line).unwrap(), r, "{line}");
+    }
+    for case in 0..250 {
+        let resp = random_response(&mut rng);
+        let line = resp.encode();
+        let back = Response::decode(&line)
+            .unwrap_or_else(|e| panic!("case {case}: rejected own encoding {line}: {e}"));
+        assert_eq!(back, resp, "case {case}: {line}");
+    }
+}
+
+/// INVARIANT: the decoders are total — every strict prefix of a valid
+/// line and every trailing-garbage extension is a typed error, and none
+/// of them panic. (A network peer controls these bytes.)
+#[test]
+fn prop_protocol_decoder_rejects_truncation_and_trailing_garbage() {
+    let mut rng = Rng::new(1010);
+    for _ in 0..40 {
+        let line = random_request(&mut rng).encode();
+        for cut in 0..line.len() {
+            if !line.is_char_boundary(cut) {
+                continue;
+            }
+            assert!(
+                Request::decode(&line[..cut]).is_err(),
+                "prefix {cut} of {line} accepted"
+            );
+        }
+        for garbage in ["x", " {}", r#"{"cmd":"stats"}"#] {
+            assert!(
+                Request::decode(&format!("{line}{garbage}")).is_err(),
+                "trailing {garbage:?} after {line} accepted"
+            );
+        }
+
+        let resp = random_response(&mut rng).encode();
+        for cut in 0..resp.len() {
+            if !resp.is_char_boundary(cut) {
+                continue;
+            }
+            assert!(
+                Response::decode(&resp[..cut]).is_err(),
+                "prefix {cut} of {resp} accepted"
+            );
+        }
+        assert!(Response::decode(&format!("{resp} null")).is_err());
+    }
+    // wrong-typed fields are rejected, not coerced
+    for bad in [
+        r#"{"cmd":3}"#,
+        r#"{"cmd":"tune","target":3,"op":{"kind":"dense","m":1,"n":1,"k":1}}"#,
+        r#"{"cmd":"tune","target":"graviton2","op":"dense"}"#,
+        r#"{"cmd":"save","path":7}"#,
+        r#"{"cmd":"recalibrate","target":"graviton2","coeffs":"all"}"#,
+        "null",
+        "[]",
+        "42",
+    ] {
+        assert!(Request::decode(bad).is_err(), "accepted {bad}");
     }
 }
 

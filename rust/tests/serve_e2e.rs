@@ -1,0 +1,337 @@
+//! End-to-end tests for the tune-serving daemon: a real `Server` bound to
+//! an ephemeral loopback port, driven over real TCP sockets by a
+//! line-delimited JSON client — the full cache/shard/serve stack through a
+//! process-boundary-shaped interface (the daemon also runs in-process
+//! here so the tests can cross-check against library-level tuning).
+//!
+//! What must hold (the PR's acceptance criteria):
+//! * the warm-cache hit path over the socket is search-free and
+//!   bit-identical to in-process tuning;
+//! * `recalibrate` over the socket re-ranks with zero additional lowering
+//!   (feature-store miss counter frozen) and zero additional searches;
+//! * `save` + a fresh daemon with warm-loaded caches serves zero-search;
+//! * malformed and unknown-op requests get typed error responses on a
+//!   connection that stays open — never a dropped socket or a panic.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::path::PathBuf;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use tuna::coordinator::{Coordinator, Strategy};
+use tuna::isa::TargetKind;
+use tuna::search::EsParams;
+use tuna::serve::protocol::{ErrorCode, Request, Response, TuneParams};
+use tuna::serve::{ServeConfig, Server};
+use tuna::tir::ops::OpSpec;
+
+fn tiny_es() -> EsParams {
+    EsParams { population: 10, iterations: 5, k: 8, seed: 23, ..Default::default() }
+}
+
+fn tiny_params() -> TuneParams {
+    TuneParams::from_es(&tiny_es())
+}
+
+fn temp_path(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("tuna_serve_e2e_{tag}_{}.json", std::process::id()))
+}
+
+/// Bind + run a daemon on an ephemeral port; returns its address and the
+/// handle that yields `run()`'s result after shutdown.
+fn start_daemon(cfg: ServeConfig) -> (SocketAddr, JoinHandle<()>) {
+    let server = Server::bind(cfg).expect("daemon failed to bind");
+    let addr = server.local_addr();
+    let handle = std::thread::spawn(move || server.run().expect("daemon run failed"));
+    (addr, handle)
+}
+
+fn base_config() -> ServeConfig {
+    ServeConfig {
+        targets: vec![TargetKind::Graviton2],
+        threads: 2,
+        // latency-table coefficients: deterministic and cheap, and the
+        // in-process reference coordinator below uses the same
+        calibrated: false,
+        ..ServeConfig::default()
+    }
+}
+
+/// One line-oriented protocol client over a real socket.
+struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    fn connect(addr: SocketAddr) -> Client {
+        let stream = TcpStream::connect(addr).expect("connect failed");
+        stream
+            .set_read_timeout(Some(Duration::from_secs(120)))
+            .expect("set_read_timeout failed");
+        let writer = stream.try_clone().expect("clone failed");
+        Client { reader: BufReader::new(stream), writer }
+    }
+
+    /// Send one raw line, read one response line.
+    fn send_raw(&mut self, line: &str) -> Response {
+        self.writer.write_all(line.as_bytes()).expect("write failed");
+        self.writer.write_all(b"\n").expect("write failed");
+        let mut resp = String::new();
+        let n = self.reader.read_line(&mut resp).expect("read failed");
+        assert!(n > 0, "server dropped the connection after {line:?}");
+        Response::decode(&resp).unwrap_or_else(|e| panic!("bad response {resp:?}: {e}"))
+    }
+
+    fn send(&mut self, req: &Request) -> Response {
+        self.send_raw(&req.encode())
+    }
+
+    fn tune(&mut self, target: TargetKind, op: OpSpec) -> Response {
+        self.send(&Request::Tune { target, op, params: Some(tiny_params()) })
+    }
+
+    fn stats_for(&mut self, target: TargetKind) -> tuna::serve::protocol::TargetStats {
+        match self.send(&Request::Stats) {
+            Response::Stats { targets } => targets[target.wire_name()],
+            other => panic!("stats failed: {other:?}"),
+        }
+    }
+
+    fn shutdown(&mut self) {
+        let resp = self.send(&Request::Shutdown);
+        assert!(matches!(resp, Response::ShuttingDown), "shutdown not acked: {resp:?}");
+    }
+}
+
+#[test]
+fn warm_cache_hit_over_the_socket_is_search_free_and_bit_identical() {
+    let (addr, daemon) = start_daemon(base_config());
+    let mut client = Client::connect(addr);
+    let op = OpSpec::Matmul { m: 48, n: 48, k: 24 };
+
+    // first tune performs a search
+    let first = client.tune(TargetKind::Graviton2, op);
+    let Response::Tuned { cache_hit, config, predicted_cost, evaluations, latency_s, .. } =
+        first.clone()
+    else {
+        panic!("tune failed: {first:?}");
+    };
+    assert!(!cache_hit, "cold daemon claimed a cache hit");
+    assert!(evaluations > 0);
+    assert!(latency_s > 0.0, "tune response missing deployed latency");
+    assert_eq!(client.stats_for(TargetKind::Graviton2).searches, 1);
+
+    // second identical tune: a cache hit, zero evaluations, bit-identical
+    let second = client.tune(TargetKind::Graviton2, op);
+    let Response::Tuned {
+        cache_hit: hit2,
+        config: config2,
+        predicted_cost: cost2,
+        evaluations: ev2,
+        ..
+    } = second
+    else {
+        panic!("second tune failed");
+    };
+    assert!(hit2, "repeat tune missed the schedule cache");
+    assert_eq!(ev2, 0, "cache hit still evaluated candidates");
+    assert_eq!(config2, config, "cache hit returned a different schedule");
+    assert_eq!(cost2, predicted_cost, "cache hit re-scored the schedule");
+    let stats = client.stats_for(TargetKind::Graviton2);
+    assert_eq!(stats.searches, 1, "repeat tune searched again");
+    assert_eq!(stats.hits, 1);
+
+    // the daemon's choice is bit-identical to in-process tuning with the
+    // same model and search parameters
+    let reference = Coordinator::new_uncalibrated(TargetKind::Graviton2);
+    let want = reference.tune_op(&op, &Strategy::TunaStatic(tiny_es()));
+    assert_eq!(config, want.chosen, "served schedule diverged from in-process tuning");
+    assert_eq!(
+        predicted_cost, want.top_k[0].1,
+        "served predicted cost diverged from in-process tuning"
+    );
+
+    client.shutdown();
+    daemon.join().unwrap();
+}
+
+#[test]
+fn recalibrate_over_the_socket_reranks_without_searching_or_lowering() {
+    let (addr, daemon) = start_daemon(base_config());
+    let mut client = Client::connect(addr);
+    let op = OpSpec::Matmul { m: 64, n: 64, k: 64 };
+
+    let Response::Tuned { cache_hit: false, .. } = client.tune(TargetKind::Graviton2, op)
+    else {
+        panic!("initial tune failed");
+    };
+    let before = client.stats_for(TargetKind::Graviton2);
+    assert_eq!(before.searches, 1);
+
+    // swap coefficients online: entries re-rank, nothing is re-lowered
+    let coeffs = vec![0.1, 2.0, 0.5, 1.0, 0.25, 4.0, 1.5];
+    let resp = client.send(&Request::Recalibrate {
+        target: TargetKind::Graviton2,
+        coeffs: coeffs.clone(),
+    });
+    let Response::Recalibrated { reranked, .. } = resp else {
+        panic!("recalibrate failed: {resp:?}");
+    };
+    assert_eq!(reranked, 1, "resident entry was not re-ranked");
+    let after = client.stats_for(TargetKind::Graviton2);
+    assert_eq!(after.searches, before.searches, "recalibration triggered a search");
+    assert_eq!(
+        after.feature_misses, before.feature_misses,
+        "recalibration re-lowered candidates (stage-1 misses moved)"
+    );
+
+    // the re-ranked entry still serves as a hit, scored exactly as a
+    // fresh model with those coefficients would score it
+    let served = client.tune(TargetKind::Graviton2, op);
+    let Response::Tuned { cache_hit, config, predicted_cost, .. } = served else {
+        panic!("post-recalibration tune failed");
+    };
+    assert!(cache_hit, "recalibration invalidated the cache");
+    let cm = tuna::CostModel::with_coeffs(TargetKind::Graviton2, coeffs);
+    assert_eq!(
+        predicted_cost,
+        cm.predict(&op, &config),
+        "served cost is not the new model's score for the served config"
+    );
+    assert_eq!(client.stats_for(TargetKind::Graviton2).searches, before.searches);
+
+    client.shutdown();
+    daemon.join().unwrap();
+}
+
+#[test]
+fn save_then_fresh_daemon_with_warm_cache_serves_zero_search() {
+    let path = temp_path("warm");
+    let ops =
+        [OpSpec::Matmul { m: 32, n: 32, k: 32 }, OpSpec::Matmul { m: 64, n: 32, k: 32 }];
+
+    // daemon A tunes and persists
+    let (addr_a, daemon_a) = start_daemon(base_config());
+    let mut client = Client::connect(addr_a);
+    let mut chosen = Vec::new();
+    for op in ops {
+        match client.tune(TargetKind::Graviton2, op) {
+            Response::Tuned { config, .. } => chosen.push(config),
+            other => panic!("tune failed: {other:?}"),
+        }
+    }
+    let saved = client.send(&Request::Save { path: path.display().to_string() });
+    let Response::Saved { entries, .. } = saved else { panic!("save failed: {saved:?}") };
+    assert_eq!(entries, ops.len() as u64);
+    client.shutdown();
+    daemon_a.join().unwrap();
+
+    // daemon B warm-loads the file and never searches
+    let cfg = ServeConfig { cache_paths: vec![path.clone()], ..base_config() };
+    let (addr_b, daemon_b) = start_daemon(cfg);
+    let _ = std::fs::remove_file(&path);
+    let mut client = Client::connect(addr_b);
+    let warm = client.stats_for(TargetKind::Graviton2);
+    assert_eq!(warm.entries, ops.len() as u64, "warm daemon did not load the cache");
+    for (op, want) in ops.iter().zip(&chosen) {
+        let served = client.tune(TargetKind::Graviton2, *op);
+        let Response::Tuned { cache_hit, config, evaluations, .. } = served else {
+            panic!("warm tune failed")
+        };
+        assert!(cache_hit, "{op} missed the warm cache");
+        assert_eq!(evaluations, 0);
+        assert_eq!(&config, want, "{op} served a different schedule than daemon A chose");
+    }
+    assert_eq!(client.stats_for(TargetKind::Graviton2).searches, 0, "warm daemon searched");
+
+    client.shutdown();
+    daemon_b.join().unwrap();
+}
+
+#[test]
+fn malformed_input_gets_typed_errors_and_the_connection_survives() {
+    let (addr, daemon) = start_daemon(base_config());
+    let mut client = Client::connect(addr);
+
+    let expect_error = |client: &mut Client, line: &str, code: ErrorCode| {
+        match client.send_raw(line) {
+            Response::Error { code: got, .. } => {
+                assert_eq!(got, code, "{line:?} answered the wrong code")
+            }
+            other => panic!("{line:?} was accepted: {other:?}"),
+        }
+    };
+
+    expect_error(&mut client, "this is not json", ErrorCode::Parse);
+    expect_error(&mut client, r#"{"cmd":"stats"} trailing garbage"#, ErrorCode::Parse);
+    expect_error(&mut client, "\"\\u12", ErrorCode::Parse); // truncated escape
+    expect_error(&mut client, r#"{"cmd":"frobnicate"}"#, ErrorCode::BadRequest);
+    expect_error(&mut client, r#"{"cmd":"tune"}"#, ErrorCode::BadRequest);
+    expect_error(
+        &mut client,
+        r#"{"cmd":"tune","target":"tpu","op":{"kind":"dense","m":1,"n":1,"k":1}}"#,
+        ErrorCode::UnknownTarget,
+    );
+    expect_error(
+        &mut client,
+        r#"{"cmd":"tune","target":"graviton2","op":{"kind":"sparse","m":1,"n":1,"k":1}}"#,
+        ErrorCode::UnknownOp,
+    );
+    // a known target this daemon does not serve
+    expect_error(
+        &mut client,
+        r#"{"cmd":"tune","target":"v100","op":{"kind":"dense","m":8,"n":8,"k":8}}"#,
+        ErrorCode::UnknownTarget,
+    );
+    // wrong-dimensionality coefficients must not panic the handler
+    expect_error(
+        &mut client,
+        r#"{"cmd":"recalibrate","target":"graviton2","coeffs":[1.0,2.0]}"#,
+        ErrorCode::BadCoeffs,
+    );
+
+    // after nine rejected requests, the same connection still works
+    let op = OpSpec::Matmul { m: 16, n: 16, k: 16 };
+    let ok = client.tune(TargetKind::Graviton2, op);
+    assert!(
+        matches!(ok, Response::Tuned { .. }),
+        "connection unusable after malformed input: {ok:?}"
+    );
+
+    client.shutdown();
+    daemon.join().unwrap();
+}
+
+#[test]
+fn concurrent_tunes_on_different_targets_both_succeed() {
+    let cfg = ServeConfig {
+        targets: vec![TargetKind::Graviton2, TargetKind::CortexA53],
+        threads: 2,
+        calibrated: false,
+        ..ServeConfig::default()
+    };
+    let (addr, daemon) = start_daemon(cfg);
+
+    let tune_on = move |target: TargetKind| {
+        std::thread::spawn(move || {
+            let mut client = Client::connect(addr);
+            let op = OpSpec::Matmul { m: 32, n: 32, k: 32 };
+            let resp = client.tune(target, op);
+            assert!(matches!(resp, Response::Tuned { cache_hit: false, .. }), "{resp:?}");
+        })
+    };
+    let a = tune_on(TargetKind::Graviton2);
+    let b = tune_on(TargetKind::CortexA53);
+    a.join().unwrap();
+    b.join().unwrap();
+
+    let mut client = Client::connect(addr);
+    let stats = client.send(&Request::Stats);
+    let Response::Stats { targets } = stats else { panic!("stats failed") };
+    assert_eq!(targets["graviton2"].searches, 1);
+    assert_eq!(targets["a53"].searches, 1);
+    client.shutdown();
+    daemon.join().unwrap();
+}

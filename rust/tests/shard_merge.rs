@@ -56,6 +56,12 @@ fn four_shard_merge_matches_single_process_bit_for_bit() {
                 shard_tasks.len() as u64,
                 "worker {id} did not search exactly its shard"
             );
+            // workers search + record only; the serving pass owns the
+            // ground-truth deploy, so worker-side simulator time is never
+            // paid (reports carry latency 0 by contract)
+            for r in &reports {
+                assert_eq!(r.latency_s, 0.0, "worker {id} deployed {}", r.op);
+            }
             worker.into_cache()
         })
         .collect();
