@@ -1,0 +1,55 @@
+//! Serving-throughput bench — `tuna bench-serve` as a cargo bench target.
+//!
+//! Boots a real daemon per selected target/network, hammers it with
+//! concurrent clients through single-op / batched / mixed phases (see
+//! `tuna::serve::bench`), prints the per-phase table, and writes the last
+//! run's report to `BENCH_serve_load.json` at the repo root.
+//!
+//! ```bash
+//! cargo bench --bench serve_load
+//! TUNA_BENCH_FAST=1 TUNA_BENCH_NETS=bert_base TUNA_BENCH_TARGETS=graviton2 \
+//!     cargo bench --bench serve_load
+//! ```
+
+mod common;
+
+use tuna::serve::bench::{self, BenchConfig};
+use tuna::serve::protocol::TuneParams;
+
+fn main() {
+    let fast = std::env::var("TUNA_BENCH_FAST").as_deref() == Ok("1");
+    for kind in common::targets() {
+        for net in common::networks() {
+            let mut cfg = BenchConfig::new(kind, net.unique_tasks());
+            cfg.params = TuneParams::from_es(&common::es_params());
+            if fast {
+                cfg.clients = 4;
+                cfg.requests_per_client = 16;
+                cfg.batches_per_client = 4;
+            }
+            println!(
+                "== serve load: {} on {} ({} ops, {} clients, {} serve threads) ==",
+                net.name,
+                kind.display_name(),
+                cfg.ops.len(),
+                cfg.clients,
+                cfg.serve_threads
+            );
+            let report = bench::run(&cfg).expect("bench run failed");
+            for p in &report.phases {
+                assert_eq!(p.errors, 0, "{}: error responses under load", p.label);
+                println!(
+                    "  {:<8} requests {:>6}  ops {:>6}  p50 {:>9.1} us  p99 {:>9.1} us  \
+                     {:>8.0} req/s  {:>8.0} ops/s",
+                    p.label, p.requests, p.ops, p.p50_us, p.p99_us, p.rps, p.ops_per_s
+                );
+            }
+            if let Some(s) = report.batched_speedup() {
+                println!("  batched/single op throughput: {s:.2}x");
+            }
+            let mut text = bench::report_json(&report).to_string();
+            text.push('\n');
+            std::fs::write("BENCH_serve_load.json", text).expect("write BENCH_serve_load.json");
+        }
+    }
+}

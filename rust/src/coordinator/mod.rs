@@ -76,7 +76,7 @@ use crate::util::parallel_map;
 use std::collections::BTreeMap;
 use std::path::Path;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Mutex, RwLock};
 use std::time::Instant;
 
 /// How to optimize each operator.
@@ -157,7 +157,14 @@ pub struct Coordinator {
     pub device: Device,
     pub threads: usize,
     evaluator: CandidateEvaluator,
-    cache: Mutex<ScheduleCache>,
+    /// `RwLock`, not `Mutex`: the serving hot path is the warm cache hit,
+    /// and for an *unbounded* cache a validated hit needs no mutation at
+    /// all ([`ScheduleCache::get_valid_shared`] — atomic counters, no
+    /// recency to advance). Concurrent warm hits therefore share the read
+    /// lock instead of serializing; only inserts, merges, recalibration
+    /// write-backs and bounded-cache lookups (which must advance LRU
+    /// recency) take the write lock.
+    cache: RwLock<ScheduleCache>,
     /// Bumped by every coefficient change. A search that was in flight
     /// across a recalibration detects the mismatch at record time and
     /// re-scores its own entry, closing the race between `swap_coeffs`'s
@@ -208,7 +215,7 @@ impl Coordinator {
             evaluator: CandidateEvaluator::with_threads(cost_model, threads),
             device: Device::new(kind),
             threads,
-            cache: Mutex::new(ScheduleCache::new()),
+            cache: RwLock::new(ScheduleCache::new()),
             coeff_epoch: AtomicU64::new(0),
             recal: Mutex::new(()),
             searches: AtomicU64::new(0),
@@ -233,20 +240,20 @@ impl Coordinator {
 
     /// (entries, hits, misses) of the schedule cache.
     pub fn cache_stats(&self) -> (usize, u64, u64) {
-        let c = self.cache.lock().unwrap();
+        let c = self.cache.read().unwrap();
         (c.len(), c.hits(), c.misses())
     }
 
     /// Entries evicted from the schedule cache by its size bound.
     pub fn cache_evictions(&self) -> u64 {
-        self.cache.lock().unwrap().evicted()
+        self.cache.read().unwrap().evicted()
     }
 
     /// Bound (or unbound) the schedule cache; above the cap the
     /// least-recently-hit entry is evicted. Evicted tasks simply fall back
     /// to a fresh search on their next request.
     pub fn set_cache_capacity(&self, cap: Option<usize>) {
-        self.cache.lock().unwrap().set_capacity(cap);
+        self.cache.write().unwrap().set_capacity(cap);
     }
 
     /// The recalibration stage: swap new coefficients into the shared
@@ -284,7 +291,7 @@ impl Coordinator {
     /// is dropped (that writer re-scores its own entry via the epoch
     /// check). Returns true if the entry was updated.
     fn rescore_entry(&self, key: &str, op: &OpSpec) -> bool {
-        let Some(snapshot) = self.cache.lock().unwrap().peek(key).cloned() else {
+        let Some(snapshot) = self.cache.read().unwrap().peek(key).cloned() else {
             return false; // evicted since it was recorded
         };
         // self-describing entries may come from disk or a merge, so —
@@ -304,7 +311,7 @@ impl Coordinator {
         };
         let mut top_k: Vec<(ScheduleConfig, f64)> = cfgs.into_iter().zip(scores).collect();
         top_k.sort_by(|a, b| a.1.total_cmp(&b.1));
-        let mut cache = self.cache.lock().unwrap();
+        let mut cache = self.cache.write().unwrap();
         match cache.entry_mut(key) {
             Some(e) if *e == snapshot => {
                 if let Some((best, best_score)) = top_k.first() {
@@ -325,7 +332,7 @@ impl Coordinator {
     /// (version-1) file are skipped: without a workload there is nothing
     /// to lower against.
     fn rescore_cached(&self) -> usize {
-        let tasks = self.cache.lock().unwrap().tasks();
+        let tasks = self.cache.read().unwrap().tasks();
         let mut rescored = 0;
         for (key, op) in tasks {
             if self.rescore_entry(&key, &op) {
@@ -337,7 +344,7 @@ impl Coordinator {
 
     /// Persist the schedule cache to `path`.
     pub fn save_cache(&self, path: &Path) -> std::io::Result<()> {
-        self.cache.lock().unwrap().save(path)
+        self.cache.read().unwrap().save(path)
     }
 
     /// Merge a persisted schedule cache into this coordinator; returns the
@@ -347,7 +354,7 @@ impl Coordinator {
     /// corrupt entry (named by key).
     pub fn load_cache(&self, path: &Path) -> Result<usize, CacheError> {
         let loaded = ScheduleCache::load(path)?;
-        let mut c = self.cache.lock().unwrap();
+        let mut c = self.cache.write().unwrap();
         c.merge_from(loaded);
         Ok(c.len())
     }
@@ -355,7 +362,7 @@ impl Coordinator {
     /// Snapshot this coordinator's schedule cache — how a shard worker
     /// emits its results for merging.
     pub fn export_cache(&self) -> ScheduleCache {
-        self.cache.lock().unwrap().clone()
+        self.cache.read().unwrap().clone()
     }
 
     /// Merge an in-memory cache (e.g. a shard worker's
@@ -363,7 +370,7 @@ impl Coordinator {
     /// key clashes the top-k lists are unioned and the chosen config
     /// becomes the union's argmin (see [`ScheduleCache::merge_from`]).
     pub fn import_cache(&self, other: ScheduleCache) -> MergeStats {
-        self.cache.lock().unwrap().merge_from(other)
+        self.cache.write().unwrap().merge_from(other)
     }
 
     /// Tune one operator under a strategy (panics on evaluation failure;
@@ -416,8 +423,22 @@ impl Coordinator {
         if let Some(k) = &key {
             // stale/corrupt persisted entries (chosen or top-k configs that
             // no longer fit the space) count as misses and fall through to
-            // a fresh search
-            let hit = self.cache.lock().unwrap().get_valid(k, &space);
+            // a fresh search.
+            //
+            // Unbounded caches (the serving default) have no recency to
+            // advance, so a validated hit is a pure read: it runs under
+            // the shared read lock and concurrent warm hits never
+            // serialize. Bounded caches must refresh LRU recency on every
+            // hit, so they pay the write lock.
+            let hit = {
+                let c = self.cache.read().unwrap();
+                if c.capacity().is_none() {
+                    c.get_valid_shared(k, &space)
+                } else {
+                    drop(c);
+                    self.cache.write().unwrap().get_valid(k, &space)
+                }
+            };
             if let Some(hit) = hit {
                 // wall_s captured before the deploy measurement, matching
                 // the search path below
@@ -493,7 +514,7 @@ impl Coordinator {
         // so any later process can re-rank it), then deploy once for
         // ground truth
         if let Some(k) = &key {
-            self.cache.lock().unwrap().insert(
+            self.cache.write().unwrap().insert(
                 k.clone(),
                 CachedSchedule {
                     chosen: result.best.clone(),
@@ -599,7 +620,7 @@ impl Coordinator {
             .filter(|op| {
                 let space = transform::config_space(op, self.kind);
                 let key = ScheduleCache::key(self.kind, op, &space, &sig);
-                self.cache.lock().unwrap().peek(&key).is_none()
+                self.cache.read().unwrap().peek(&key).is_none()
             })
             .collect();
         if !cold.is_empty() {
@@ -784,6 +805,37 @@ mod tests {
         for (key, rep) in &got.per_op {
             assert_eq!(rep.chosen, want.per_op[key].chosen, "{key} chose differently");
         }
+    }
+
+    #[test]
+    fn concurrent_warm_hits_are_identical_and_exactly_counted() {
+        let c = Coordinator::new_uncalibrated(TargetKind::Graviton2);
+        let op = OpSpec::Matmul { m: 48, n: 48, k: 24 };
+        let strategy = Strategy::TunaStatic(tiny_es());
+        let reference = c.tune_op(&op, &strategy); // one search, one miss
+        let (threads, per_thread) = (8, 20);
+        std::thread::scope(|s| {
+            let handles: Vec<_> = (0..threads)
+                .map(|_| {
+                    s.spawn(|| {
+                        for _ in 0..per_thread {
+                            let r = c.tune_op(&op, &strategy);
+                            assert!(r.cache_hit);
+                            assert_eq!(r.chosen, reference.chosen);
+                            assert_eq!(r.top_k, reference.top_k);
+                        }
+                    })
+                })
+                .collect();
+            for h in handles {
+                h.join().unwrap();
+            }
+        });
+        // the shared (read-locked) hit path must not lose counter updates
+        let (_, hits, misses) = c.cache_stats();
+        assert_eq!(hits, (threads * per_thread) as u64);
+        assert_eq!(misses, 1);
+        assert_eq!(c.searches_performed(), 1, "a warm hit searched");
     }
 
     #[test]

@@ -42,6 +42,7 @@ use crate::util::json::Json;
 use std::collections::{BTreeMap, HashMap};
 use std::io;
 use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
 /// Current on-disk format version. Bump on layout changes; loaders reject
@@ -142,7 +143,7 @@ pub struct CachedSchedule {
 /// The cache: ordered map from content address to outcome, plus hit/miss/
 /// eviction counters for reporting. Optionally bounded: see
 /// [`Self::set_capacity`].
-#[derive(Debug, Default, Clone)]
+#[derive(Debug, Default)]
 pub struct ScheduleCache {
     entries: BTreeMap<String, CachedSchedule>,
     /// Size bound; `None` = unbounded.
@@ -156,9 +157,27 @@ pub struct ScheduleCache {
     /// Inverse index (tick → key; ticks are unique) — makes evicting the
     /// least-recently-hit entry O(log n) instead of a full scan.
     lru: BTreeMap<u64, Arc<str>>,
-    hits: u64,
-    misses: u64,
-    evicted: u64,
+    // atomic so the *shared* hit path ([`Self::get_valid_shared`]) can
+    // count through `&self` — an unbounded cache behind a read lock serves
+    // concurrent warm hits without serializing on counter updates
+    hits: AtomicU64,
+    misses: AtomicU64,
+    evicted: AtomicU64,
+}
+
+impl Clone for ScheduleCache {
+    fn clone(&self) -> Self {
+        ScheduleCache {
+            entries: self.entries.clone(),
+            capacity: self.capacity,
+            tick: self.tick,
+            recency: self.recency.clone(),
+            lru: self.lru.clone(),
+            hits: AtomicU64::new(self.hits.load(Ordering::Relaxed)),
+            misses: AtomicU64::new(self.misses.load(Ordering::Relaxed)),
+            evicted: AtomicU64::new(self.evicted.load(Ordering::Relaxed)),
+        }
+    }
 }
 
 impl ScheduleCache {
@@ -216,7 +235,7 @@ impl ScheduleCache {
             self.lru.remove(&tick);
             self.recency.remove(&*key);
             self.entries.remove(&*key);
-            self.evicted += 1;
+            self.evicted.fetch_add(1, Ordering::Relaxed);
             evicted.push(key.to_string());
         }
         evicted
@@ -231,11 +250,11 @@ impl ScheduleCache {
     /// entry's eviction recency).
     pub fn get(&mut self, key: &str) -> Option<&CachedSchedule> {
         if self.entries.contains_key(key) {
-            self.hits += 1;
+            self.hits.fetch_add(1, Ordering::Relaxed);
             self.touch(key);
             self.entries.get(key)
         } else {
-            self.misses += 1;
+            self.misses.fetch_add(1, Ordering::Relaxed);
             None
         }
     }
@@ -254,11 +273,35 @@ impl ScheduleCache {
             None => false,
         };
         if valid {
-            self.hits += 1;
+            self.hits.fetch_add(1, Ordering::Relaxed);
             self.touch(key);
             self.entries.get(key).cloned()
         } else {
-            self.misses += 1;
+            self.misses.fetch_add(1, Ordering::Relaxed);
+            None
+        }
+    }
+
+    /// [`Self::get_valid`] through a shared reference: same validation,
+    /// same hit/miss accounting (the counters are atomic), but **no
+    /// recency touch** — eviction order is left where it was. That makes
+    /// this correct only for *unbounded* caches (no capacity ⇒ nothing is
+    /// ever evicted ⇒ recency is inert); callers gate on
+    /// [`Self::capacity`]` == None`. The point: behind an `RwLock`, warm
+    /// hits take the read lock and run concurrently instead of
+    /// serializing on `&mut` access.
+    pub fn get_valid_shared(&self, key: &str, space: &ConfigSpace) -> Option<CachedSchedule> {
+        let valid = match self.entries.get(key) {
+            Some(v) => {
+                space.contains(&v.chosen) && v.top_k.iter().all(|(c, _)| space.contains(c))
+            }
+            None => false,
+        };
+        if valid {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            self.entries.get(key).cloned()
+        } else {
+            self.misses.fetch_add(1, Ordering::Relaxed);
             None
         }
     }
@@ -339,16 +382,16 @@ impl ScheduleCache {
     }
 
     pub fn hits(&self) -> u64 {
-        self.hits
+        self.hits.load(Ordering::Relaxed)
     }
 
     pub fn misses(&self) -> u64 {
-        self.misses
+        self.misses.load(Ordering::Relaxed)
     }
 
     /// Entries evicted by the size bound since construction.
     pub fn evicted(&self) -> u64 {
-        self.evicted
+        self.evicted.load(Ordering::Relaxed)
     }
 
     pub fn keys(&self) -> impl Iterator<Item = &str> {
@@ -599,6 +642,32 @@ mod tests {
         assert!(c.get_valid("k", &too_small).is_none(), "stale entry served");
         assert!(c.get_valid("absent", &fits).is_none());
         assert_eq!((c.hits(), c.misses()), (1, 2));
+    }
+
+    #[test]
+    fn shared_lookup_counts_but_never_touches_recency() {
+        let fits = ConfigSpace::new()
+            .int_knob("a", vec![1, 2, 4, 8])
+            .int_knob("b", vec![1, 2])
+            .int_knob("c", vec![0, 1]);
+        let mut c = ScheduleCache::new();
+        c.insert("old".into(), sample_entry());
+        c.insert("new".into(), sample_entry());
+        // shared hits through &self: same accounting as get_valid ...
+        assert!(c.get_valid_shared("old", &fits).is_some());
+        assert!(c.get_valid_shared("old", &fits).is_some());
+        assert!(c.get_valid_shared("absent", &fits).is_none());
+        assert_eq!((c.hits(), c.misses()), (2, 1));
+        // ... but no recency effect: despite the shared hits on "old",
+        // bounding to one entry still evicts it (insert order stands)
+        let evicted = c.set_capacity(Some(1));
+        assert_eq!(evicted, vec!["old".to_string()]);
+        // and the identical lookup through get_valid *does* refresh
+        let mut c = ScheduleCache::new();
+        c.insert("old".into(), sample_entry());
+        c.insert("new".into(), sample_entry());
+        assert!(c.get_valid("old", &fits).is_some());
+        assert_eq!(c.set_capacity(Some(1)), vec!["new".to_string()]);
     }
 
     #[test]

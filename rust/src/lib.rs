@@ -50,12 +50,15 @@
 //!   cache-merge step that folds N worker caches into one serving cache.
 //! * [`serve`] — the tune-serving daemon: per-target coordinators with
 //!   calibrated models and warm schedule caches behind a loopback TCP
-//!   socket, speaking a line-delimited JSON protocol (`tune`, `stats`,
-//!   `recalibrate`, `save`, `shutdown` — spec in `docs/SERVING.md`).
+//!   socket, speaking a line-delimited JSON protocol (`tune`, batched
+//!   `tune_net`, `stats`, Prometheus-style `metrics`, `recalibrate`,
+//!   `save`, `shutdown` — spec in `docs/SERVING.md`), plus the
+//!   `bench-serve` load generator ([`serve::bench`]).
+//! * [`metrics`] — table/figure renderers for the paper's evaluation,
+//!   plus the serving daemon's lock-free counters ([`metrics::serve`]).
 //! * [`runtime`] — PJRT artifact loading/execution for the e2e example
 //!   (feature-gated behind `pjrt`: needs the external `xla`/`anyhow`
 //!   crates, which the offline build environment cannot fetch).
-//! * [`metrics`] — table/figure renderers for the paper's evaluation.
 //! * [`config`] — TOML-backed configuration for targets/search/workloads.
 
 pub mod analysis;

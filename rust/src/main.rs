@@ -18,9 +18,17 @@
 //!                                      (protocol: docs/SERVING.md;
 //!                                       --port 0 picks an ephemeral port)
 //! tuna query --port N [--host H] --op <spec> --target <t> [--pop N] ...
-//! tuna query --port N --stats | --shutdown | --save PATH
+//! tuna query --port N --net <name> --target <t> [--pop N] ...
+//!                                      batched tune_net for a whole network;
+//!                                      exits non-zero if any op fails
+//! tuna query --port N --stats | --metrics | --shutdown | --save PATH
 //!            | --recalibrate c0,c1,... --target <t>
 //!                                      one-shot client for a serve daemon
+//! tuna bench-serve [--target <t>] [--net <name>] [--clients N] [--requests N]
+//!                  [--batches N] [--max-ops N] [--serve-threads N]
+//!                  [--pop N] [--iters N] [--seed N] [--out PATH]
+//!                                      load-generate against an in-process
+//!                                      daemon; writes BENCH_serve_load.json
 //! tuna tables [--targets <list>] [--nets <list>] [--trials N] [--fast]
 //! tuna sweep --topk K [--targets <list>] [--trials N]
 //! tuna e2e [--artifacts DIR]           PJRT artifact ranking check
@@ -52,6 +60,7 @@ fn main() {
         "merge-caches" => cmd_merge_caches(&flags),
         "serve" => cmd_serve(&flags),
         "query" => cmd_query(&flags),
+        "bench-serve" => cmd_bench_serve(&flags),
         "tables" => cmd_tables(&flags),
         "sweep" => cmd_sweep(&flags),
         "e2e" => cmd_e2e(&flags),
@@ -75,7 +84,7 @@ fn usage() {
     eprintln!(
         "tuna — static-analysis DNN optimization (paper reproduction)\n\
          commands: targets | calibrate | tune-op | tune-net | merge-caches | serve | query |\n\
-         \x20         tables | sweep | e2e\n\
+         \x20         bench-serve | tables | sweep | e2e\n\
          see rust/src/main.rs header for flags"
     );
 }
@@ -249,14 +258,15 @@ fn cmd_tune_op(flags: &BTreeMap<String, String>) -> Result<(), String> {
     Ok(())
 }
 
+fn network_by_name(name: &str) -> Result<graph::Network, String> {
+    graph::all_networks().into_iter().find(|n| n.name == name).ok_or_else(|| {
+        format!("unknown network {name:?} (ssd_mobilenet|ssd_inception|resnet50|bert_base)")
+    })
+}
+
 fn cmd_tune_net(flags: &BTreeMap<String, String>) -> Result<(), String> {
     let name = flags.get("net").ok_or("--net required")?;
-    let net = graph::all_networks()
-        .into_iter()
-        .find(|n| n.name == name)
-        .ok_or_else(|| {
-            format!("unknown network {name:?} (ssd_mobilenet|ssd_inception|resnet50|bert_base)")
-        })?;
+    let net = network_by_name(name)?;
     let strategy = strategy_of(flags)?;
     let shards: usize = flags.get("shards").and_then(|v| v.parse().ok()).unwrap_or(1);
     // cache keys are target-prefixed, so one accumulated file safely
@@ -369,7 +379,7 @@ fn single_target(flags: &BTreeMap<String, String>) -> Result<tuna::isa::TargetKi
 /// error response.
 fn cmd_query(flags: &BTreeMap<String, String>) -> Result<(), String> {
     use std::io::{BufRead, BufReader, Write as _};
-    use tuna::serve::protocol::{Request, Response, TuneParams};
+    use tuna::serve::protocol::{OpOutcome, Request, Response, TuneParams};
     let port: u16 = flags
         .get("port")
         .ok_or("--port required")?
@@ -380,6 +390,15 @@ fn cmd_query(flags: &BTreeMap<String, String>) -> Result<(), String> {
         Request::Shutdown
     } else if flags.contains_key("stats") {
         Request::Stats
+    } else if flags.contains_key("metrics") {
+        Request::Metrics
+    } else if let Some(name) = flags.get("net") {
+        // one wire exchange for the whole network's distinct tasks
+        Request::TuneNet {
+            target: single_target(flags)?,
+            ops: network_by_name(name)?.unique_tasks(),
+            params: Some(TuneParams::from_es(&es_params(flags))),
+        }
     } else if let Some(path) = flags.get("save") {
         Request::Save { path: path.clone() }
     } else if let Some(csv) = flags.get("recalibrate") {
@@ -396,11 +415,9 @@ fn cmd_query(flags: &BTreeMap<String, String>) -> Result<(), String> {
         }
         Request::Recalibrate { target: single_target(flags)?, coeffs }
     } else {
-        let op = parse_op(
-            flags
-                .get("op")
-                .ok_or("--op required (or --stats | --save | --recalibrate | --shutdown)")?,
-        )?;
+        let op = parse_op(flags.get("op").ok_or(
+            "--op required (or --net | --stats | --metrics | --save | --recalibrate | --shutdown)",
+        )?)?;
         // explicit search params so the request addresses the same cache
         // entry as a `tune-net` run with the same --pop/--iters/--seed
         Request::Tune {
@@ -421,12 +438,104 @@ fn cmd_query(flags: &BTreeMap<String, String>) -> Result<(), String> {
     }
     match Response::decode(&resp_line) {
         Ok(Response::Error { code, detail }) => Err(format!("server error [{code}] {detail}")),
+        Ok(Response::TunedNet { results, .. }) => {
+            println!("{}", resp_line.trim_end());
+            // the batch response is total — per-op failures ride inside
+            // it — but a client script still needs a process-level verdict
+            let failed: Vec<String> = results
+                .iter()
+                .filter_map(|r| match r {
+                    OpOutcome::Failed { op, code, detail } => {
+                        Some(format!("{op}: [{code}] {detail}"))
+                    }
+                    OpOutcome::Tuned { .. } => None,
+                })
+                .collect();
+            if failed.is_empty() {
+                Ok(())
+            } else {
+                Err(format!("{} of {} ops failed:\n  {}", failed.len(), results.len(),
+                    failed.join("\n  ")))
+            }
+        }
+        Ok(Response::Metrics { text }) => {
+            // the exposition is the payload — print it scrape-shaped, not
+            // as one escaped JSON line
+            print!("{text}");
+            Ok(())
+        }
         Ok(_) => {
             println!("{}", resp_line.trim_end());
             Ok(())
         }
         Err(e) => Err(format!("unintelligible response ({e}): {}", resp_line.trim_end())),
     }
+}
+
+/// Load-generate against an in-process daemon (`tuna bench-serve`) and
+/// write the phase reports as JSON — the serving-throughput benchmark.
+fn cmd_bench_serve(flags: &BTreeMap<String, String>) -> Result<(), String> {
+    use tuna::serve::bench::{self, BenchConfig};
+    use tuna::serve::protocol::TuneParams;
+    let target = match flags.get("target") {
+        Some(_) => single_target(flags)?,
+        None => TargetKind::Graviton2,
+    };
+    let net_name = flags.get("net").map(String::as_str).unwrap_or("bert_base");
+    let mut ops = network_by_name(net_name)?.unique_tasks();
+    if let Some(cap) = flags.get("max-ops").and_then(|v| v.parse::<usize>().ok()) {
+        ops.truncate(cap.max(1));
+    }
+    let mut cfg = BenchConfig::new(target, ops);
+    // bench defaults favor a short warm pass; --pop/--iters/--seed override
+    let mut es = cfg.params.clone().into_es();
+    if let Some(v) = flags.get("pop").and_then(|v| v.parse().ok()) {
+        es.population = v;
+    }
+    if let Some(v) = flags.get("iters").and_then(|v| v.parse().ok()) {
+        es.iterations = v;
+    }
+    if let Some(v) = flags.get("seed").and_then(|v| v.parse().ok()) {
+        es.seed = v;
+    }
+    cfg.params = TuneParams::from_es(&es);
+    if let Some(v) = flags.get("clients").and_then(|v| v.parse().ok()) {
+        cfg.clients = v;
+    }
+    if let Some(v) = flags.get("requests").and_then(|v| v.parse().ok()) {
+        cfg.requests_per_client = v;
+    }
+    if let Some(v) = flags.get("batches").and_then(|v| v.parse().ok()) {
+        cfg.batches_per_client = v;
+    }
+    if let Some(v) = flags.get("serve-threads").and_then(|v| v.parse().ok()) {
+        cfg.serve_threads = v;
+    }
+    eprintln!(
+        "bench-serve: {} ops of {net_name} on {}, {} clients x ({} single | {} batched), {} serve threads",
+        cfg.ops.len(),
+        target.display_name(),
+        cfg.clients,
+        cfg.requests_per_client,
+        cfg.batches_per_client,
+        cfg.serve_threads
+    );
+    let report = bench::run(&cfg)?;
+    for p in &report.phases {
+        println!(
+            "{:<8} requests {:>6}  ops {:>6}  errors {:>3}  p50 {:>9.1} us  p99 {:>9.1} us  {:>8.0} req/s  {:>8.0} ops/s",
+            p.label, p.requests, p.ops, p.errors, p.p50_us, p.p99_us, p.rps, p.ops_per_s
+        );
+    }
+    if let Some(s) = report.batched_speedup() {
+        println!("batched/single op throughput: {s:.2}x");
+    }
+    let out = flags.get("out").map(String::as_str).unwrap_or("BENCH_serve_load.json");
+    let mut text = bench::report_json(&report).to_string();
+    text.push('\n');
+    std::fs::write(out, text).map_err(|e| format!("write {out}: {e}"))?;
+    eprintln!("wrote {out}");
+    Ok(())
 }
 
 fn strategy_of(flags: &BTreeMap<String, String>) -> Result<Strategy, String> {

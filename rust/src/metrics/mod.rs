@@ -1,8 +1,11 @@
-//! Table/figure renderers for the paper's evaluation artifacts.
+//! Table/figure renderers for the paper's evaluation artifacts, plus the
+//! serving daemon's scrapeable counters ([`serve`]).
 //!
 //! Every table/figure in the paper has a generator here that takes the
 //! coordinator's reports and prints the same rows/series the paper
 //! reports (markdown-ish aligned text + machine-readable JSON dump).
+
+pub mod serve;
 
 use crate::coordinator::NetworkReport;
 use crate::isa::TargetKind;

@@ -1,0 +1,359 @@
+//! Serving-daemon metrics: lock-free counters and latency histograms with
+//! a Prometheus-style text exposition.
+//!
+//! The daemon records into this through `&self` on its hot path — every
+//! counter is an [`AtomicU64`], so metric accounting adds no lock traffic
+//! to the request pipeline it is measuring. Label sets are fixed at
+//! construction (the daemon knows its commands, error codes and served
+//! targets up front), which keeps recording allocation-free and makes the
+//! rendered exposition deterministic: same traffic, same text.
+//!
+//! Rendering follows the Prometheus text format conventions: one
+//! `# HELP` / `# TYPE` block per metric family, `{label="value"}` sample
+//! lines, cumulative `le` histogram buckets ending in `+Inf`, and
+//! `_sum` / `_count` series beside every `_bucket` family. The metric-name
+//! table lives in `docs/SERVING.md`.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Histogram bucket upper bounds, in seconds. Spans the daemon's real
+/// dynamic range: a warm cache hit is tens of microseconds, a cold search
+/// is seconds. An implicit `+Inf` bucket follows the last bound.
+pub const LATENCY_BUCKETS_S: [f64; 9] =
+    [1e-5, 1e-4, 1e-3, 1e-2, 1e-1, 1.0, 10.0, 60.0, 600.0];
+
+/// A fixed-bucket latency histogram with atomic cells. Buckets store
+/// *non*-cumulative counts internally; rendering accumulates them into the
+/// Prometheus cumulative-`le` form.
+#[derive(Debug, Default)]
+pub struct LatencyHistogram {
+    // one cell per bound in LATENCY_BUCKETS_S, plus the +Inf cell
+    buckets: [AtomicU64; LATENCY_BUCKETS_S.len() + 1],
+    /// Sum of observations in nanoseconds — integral so it can be atomic;
+    /// at u64 range that is ~584 years of observed latency before wrap.
+    sum_ns: AtomicU64,
+    count: AtomicU64,
+}
+
+impl LatencyHistogram {
+    pub fn new() -> LatencyHistogram {
+        LatencyHistogram::default()
+    }
+
+    /// Record one observation (negative or NaN clamps to zero — the cast
+    /// saturates, and a nonsense duration should not poison the sum).
+    pub fn observe(&self, seconds: f64) {
+        let s = if seconds.is_finite() && seconds > 0.0 { seconds } else { 0.0 };
+        let idx = LATENCY_BUCKETS_S
+            .iter()
+            .position(|&b| s <= b)
+            .unwrap_or(LATENCY_BUCKETS_S.len());
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.sum_ns.fetch_add((s * 1e9) as u64, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum_seconds(&self) -> f64 {
+        self.sum_ns.load(Ordering::Relaxed) as f64 / 1e9
+    }
+
+    /// Cumulative counts per bucket, `+Inf` last (equals [`Self::count`]
+    /// in any quiescent moment).
+    fn cumulative(&self) -> Vec<u64> {
+        let mut acc = 0u64;
+        self.buckets
+            .iter()
+            .map(|c| {
+                acc += c.load(Ordering::Relaxed);
+                acc
+            })
+            .collect()
+    }
+}
+
+/// Per-target serving counters: ops answered, schedule-cache outcome of
+/// those ops, and the per-op service-latency histogram.
+#[derive(Debug)]
+pub struct TargetMetrics {
+    /// The target's wire name — the `target` label value.
+    pub name: &'static str,
+    ops: AtomicU64,
+    cache_hits: AtomicU64,
+    cache_misses: AtomicU64,
+    latency: LatencyHistogram,
+}
+
+impl TargetMetrics {
+    fn new(name: &'static str) -> TargetMetrics {
+        TargetMetrics {
+            name,
+            ops: AtomicU64::new(0),
+            cache_hits: AtomicU64::new(0),
+            cache_misses: AtomicU64::new(0),
+            latency: LatencyHistogram::new(),
+        }
+    }
+
+    /// Record one tune op answered for this target. `cache_hit: None`
+    /// means the op failed before a cache verdict (counts as neither).
+    pub fn record_op(&self, cache_hit: Option<bool>, seconds: f64) {
+        self.ops.fetch_add(1, Ordering::Relaxed);
+        match cache_hit {
+            Some(true) => self.cache_hits.fetch_add(1, Ordering::Relaxed),
+            Some(false) => self.cache_misses.fetch_add(1, Ordering::Relaxed),
+            None => 0,
+        };
+        self.latency.observe(seconds);
+    }
+
+    pub fn ops(&self) -> u64 {
+        self.ops.load(Ordering::Relaxed)
+    }
+
+    pub fn cache_hits(&self) -> u64 {
+        self.cache_hits.load(Ordering::Relaxed)
+    }
+
+    pub fn cache_misses(&self) -> u64 {
+        self.cache_misses.load(Ordering::Relaxed)
+    }
+}
+
+/// The daemon's full counter set. Construct once with the fixed label
+/// sets; record through `&self` from any handler thread.
+#[derive(Debug)]
+pub struct ServeMetrics {
+    cmds: Vec<(&'static str, AtomicU64)>,
+    errors: Vec<(&'static str, AtomicU64)>,
+    targets: Vec<TargetMetrics>,
+}
+
+impl ServeMetrics {
+    pub fn new(
+        cmds: &[&'static str],
+        errors: &[&'static str],
+        targets: &[&'static str],
+    ) -> ServeMetrics {
+        ServeMetrics {
+            cmds: cmds.iter().map(|&c| (c, AtomicU64::new(0))).collect(),
+            errors: errors.iter().map(|&e| (e, AtomicU64::new(0))).collect(),
+            targets: targets.iter().map(|&t| TargetMetrics::new(t)).collect(),
+        }
+    }
+
+    /// Count one decoded request by command name. Unknown labels are
+    /// dropped rather than panicking — the label set is fixed at scrape
+    /// time, and the daemon registers every command it dispatches.
+    pub fn inc_cmd(&self, cmd: &str) {
+        if let Some((_, c)) = self.cmds.iter().find(|(n, _)| *n == cmd) {
+            c.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Count one error response by wire code.
+    pub fn inc_error(&self, code: &str) {
+        if let Some((_, c)) = self.errors.iter().find(|(n, _)| *n == code) {
+            c.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    pub fn cmd_count(&self, cmd: &str) -> u64 {
+        self.cmds
+            .iter()
+            .find(|(n, _)| *n == cmd)
+            .map_or(0, |(_, c)| c.load(Ordering::Relaxed))
+    }
+
+    pub fn error_count(&self, code: &str) -> u64 {
+        self.errors
+            .iter()
+            .find(|(n, _)| *n == code)
+            .map_or(0, |(_, c)| c.load(Ordering::Relaxed))
+    }
+
+    /// The per-target recorder, by wire name.
+    pub fn target(&self, name: &str) -> Option<&TargetMetrics> {
+        self.targets.iter().find(|t| t.name == name)
+    }
+
+    /// Render every family this struct owns as Prometheus text. Callers
+    /// with extra point-in-time values (the daemon's cache gauges) append
+    /// [`gauge_block`]s to the result.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        counter_block(
+            &mut out,
+            "tuna_serve_requests_total",
+            "Requests decoded, by wire command.",
+            "cmd",
+            self.cmds.iter().map(|(n, c)| (*n, c.load(Ordering::Relaxed))),
+        );
+        counter_block(
+            &mut out,
+            "tuna_serve_errors_total",
+            "Error responses written, by wire error code.",
+            "code",
+            self.errors.iter().map(|(n, c)| (*n, c.load(Ordering::Relaxed))),
+        );
+        counter_block(
+            &mut out,
+            "tuna_serve_ops_total",
+            "Tune ops answered (tune requests plus each op of a tune_net).",
+            "target",
+            self.targets.iter().map(|t| (t.name, t.ops())),
+        );
+        counter_block(
+            &mut out,
+            "tuna_serve_op_cache_hits_total",
+            "Answered ops served from the schedule cache without a search.",
+            "target",
+            self.targets.iter().map(|t| (t.name, t.cache_hits())),
+        );
+        counter_block(
+            &mut out,
+            "tuna_serve_op_cache_misses_total",
+            "Answered ops that required a fresh search.",
+            "target",
+            self.targets.iter().map(|t| (t.name, t.cache_misses())),
+        );
+        out.push_str("# HELP tuna_serve_op_seconds Service time per answered op.\n");
+        out.push_str("# TYPE tuna_serve_op_seconds histogram\n");
+        for t in &self.targets {
+            let cumulative = t.latency.cumulative();
+            for (i, &le) in LATENCY_BUCKETS_S.iter().enumerate() {
+                out.push_str(&format!(
+                    "tuna_serve_op_seconds_bucket{{target=\"{}\",le=\"{}\"}} {}\n",
+                    t.name, le, cumulative[i]
+                ));
+            }
+            out.push_str(&format!(
+                "tuna_serve_op_seconds_bucket{{target=\"{}\",le=\"+Inf\"}} {}\n",
+                t.name,
+                cumulative[LATENCY_BUCKETS_S.len()]
+            ));
+            out.push_str(&format!(
+                "tuna_serve_op_seconds_sum{{target=\"{}\"}} {}\n",
+                t.name,
+                t.latency.sum_seconds()
+            ));
+            out.push_str(&format!(
+                "tuna_serve_op_seconds_count{{target=\"{}\"}} {}\n",
+                t.name,
+                t.latency.count()
+            ));
+        }
+        out
+    }
+}
+
+fn counter_block<'a>(
+    out: &mut String,
+    name: &str,
+    help: &str,
+    label: &str,
+    rows: impl Iterator<Item = (&'a str, u64)>,
+) {
+    out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} counter\n"));
+    for (value, count) in rows {
+        out.push_str(&format!("{name}{{{label}=\"{value}\"}} {count}\n"));
+    }
+}
+
+/// One gauge family as Prometheus text — how the daemon exports
+/// point-in-time values (cache population, search totals) that live in the
+/// coordinator rather than in [`ServeMetrics`].
+pub fn gauge_block(name: &str, help: &str, rows: &[(&str, f64)]) -> String {
+    let mut out = format!("# HELP {name} {help}\n# TYPE {name} gauge\n");
+    for (target, v) in rows {
+        out.push_str(&format!("{name}{{target=\"{target}\"}} {v}\n"));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_buckets_are_cumulative_and_exact() {
+        let h = LatencyHistogram::new();
+        h.observe(5e-6); // ≤ 1e-5
+        h.observe(5e-6);
+        h.observe(5e-4); // ≤ 1e-3
+        h.observe(30.0); // ≤ 60
+        h.observe(1e9); // +Inf
+        assert_eq!(h.count(), 5);
+        let c = h.cumulative();
+        assert_eq!(c[0], 2, "{c:?}"); // le=1e-5
+        assert_eq!(c[1], 2); // le=1e-4
+        assert_eq!(c[2], 3); // le=1e-3
+        assert_eq!(c[7], 4); // le=60
+        assert_eq!(*c.last().unwrap(), 5, "+Inf must equal count");
+        assert!(c.windows(2).all(|w| w[0] <= w[1]), "not monotone: {c:?}");
+        // degenerate observations clamp instead of corrupting the sum
+        h.observe(f64::NAN);
+        h.observe(-3.0);
+        assert_eq!(h.count(), 7);
+        assert!(h.sum_seconds().is_finite());
+    }
+
+    #[test]
+    fn render_reports_exact_counts_in_prometheus_shape() {
+        let m = ServeMetrics::new(
+            &["tune", "tune_net", "stats"],
+            &["parse", "bad_request"],
+            &["graviton2", "v100"],
+        );
+        m.inc_cmd("tune");
+        m.inc_cmd("tune");
+        m.inc_cmd("tune_net");
+        m.inc_cmd("never_registered"); // dropped, not a panic
+        m.inc_error("parse");
+        let t = m.target("graviton2").unwrap();
+        t.record_op(Some(true), 2e-5);
+        t.record_op(Some(false), 0.5);
+        t.record_op(None, 1e-5);
+        assert_eq!((t.ops(), t.cache_hits(), t.cache_misses()), (3, 1, 1));
+
+        let text = m.render();
+        for want in [
+            "# TYPE tuna_serve_requests_total counter",
+            "tuna_serve_requests_total{cmd=\"tune\"} 2",
+            "tuna_serve_requests_total{cmd=\"tune_net\"} 1",
+            "tuna_serve_requests_total{cmd=\"stats\"} 0",
+            "tuna_serve_errors_total{code=\"parse\"} 1",
+            "tuna_serve_ops_total{target=\"graviton2\"} 3",
+            "tuna_serve_op_cache_hits_total{target=\"graviton2\"} 1",
+            "tuna_serve_op_cache_misses_total{target=\"graviton2\"} 1",
+            "tuna_serve_ops_total{target=\"v100\"} 0",
+            "# TYPE tuna_serve_op_seconds histogram",
+            "tuna_serve_op_seconds_bucket{target=\"graviton2\",le=\"+Inf\"} 3",
+            "tuna_serve_op_seconds_count{target=\"graviton2\"} 3",
+        ] {
+            assert!(text.contains(want), "missing {want:?} in:\n{text}");
+        }
+        // cumulative within one target's bucket family
+        let graviton_buckets: Vec<u64> = text
+            .lines()
+            .filter(|l| l.starts_with("tuna_serve_op_seconds_bucket{target=\"graviton2\""))
+            .map(|l| l.rsplit(' ').next().unwrap().parse().unwrap())
+            .collect();
+        assert_eq!(graviton_buckets.len(), LATENCY_BUCKETS_S.len() + 1);
+        assert!(graviton_buckets.windows(2).all(|w| w[0] <= w[1]), "{graviton_buckets:?}");
+    }
+
+    #[test]
+    fn gauge_block_renders_every_row() {
+        let g = gauge_block("tuna_cache_entries", "Resident entries.", &[
+            ("graviton2", 12.0),
+            ("v100", 0.0),
+        ]);
+        assert!(g.contains("# TYPE tuna_cache_entries gauge"));
+        assert!(g.contains("tuna_cache_entries{target=\"graviton2\"} 12"));
+        assert!(g.contains("tuna_cache_entries{target=\"v100\"} 0"));
+    }
+}

@@ -1,0 +1,430 @@
+//! Load generator for the serving daemon — the measurement half of the
+//! serving-throughput work.
+//!
+//! [`run`] boots a real daemon (ephemeral port, uncalibrated coordinators
+//! — the wire and lock behavior under test is identical), warms every op
+//! once, then hammers it with N concurrent keep-alive clients through
+//! three phases over the *same* warm schedules:
+//!
+//! * `single` — one `tune` request per op per round trip: the pre-batching
+//!   baseline, where every op pays a full wire round trip;
+//! * `batched` — the whole op list in one `tune_net` line: same tuning
+//!   work, one parse and one round trip per network;
+//! * `mixed` — interleaved `tune` / `tune_net` / `stats` / `recalibrate`
+//!   traffic, the realistic steady state (recalibration re-ranks the warm
+//!   cache while tunes race it).
+//!
+//! Each phase reports client-observed p50/p99 request latency plus request
+//! and op throughput; `single` vs `batched` ops/s is the headline batching
+//! win. The CLI front end is `tuna bench-serve` (wrapped by
+//! `benches/serve_load.rs`), which writes the report as
+//! `BENCH_serve_load.json`.
+
+use crate::isa::TargetKind;
+use crate::search::EsParams;
+use crate::serve::protocol::{OpOutcome, Request, Response, TuneParams};
+use crate::serve::{ServeConfig, Server};
+use crate::tir::ops::OpSpec;
+use crate::util::json::Json;
+use std::io::{self, BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::time::Instant;
+
+/// What to throw at the daemon.
+#[derive(Debug, Clone)]
+pub struct BenchConfig {
+    /// The one target every request addresses.
+    pub target: TargetKind,
+    /// The op roster; `tune` requests cycle through it, `tune_net`
+    /// requests carry all of it. Must be non-empty.
+    pub ops: Vec<OpSpec>,
+    /// Search params shared by every request — pinned so each op maps to
+    /// one cache key and the phases measure the warm path.
+    pub params: TuneParams,
+    /// Concurrent keep-alive client connections per phase.
+    pub clients: usize,
+    /// Single-op requests per client (`single` and `mixed` phases).
+    pub requests_per_client: usize,
+    /// Whole-network requests per client (`batched` phase).
+    pub batches_per_client: usize,
+    /// Daemon handler-pool size.
+    pub serve_threads: usize,
+}
+
+impl BenchConfig {
+    /// Defaults sized so a laptop run finishes in seconds: 8 clients on a
+    /// 4-thread daemon, 64 single / 16 batched requests each.
+    pub fn new(target: TargetKind, ops: Vec<OpSpec>) -> BenchConfig {
+        BenchConfig {
+            target,
+            ops,
+            params: TuneParams::from_es(&EsParams {
+                population: 16,
+                iterations: 8,
+                seed: 7,
+                ..EsParams::default()
+            }),
+            clients: 8,
+            requests_per_client: 64,
+            batches_per_client: 16,
+            serve_threads: 4,
+        }
+    }
+}
+
+/// Client-observed results of one traffic phase.
+#[derive(Debug, Clone)]
+pub struct PhaseReport {
+    pub label: &'static str,
+    pub clients: usize,
+    /// Request lines written (and responses read).
+    pub requests: u64,
+    /// Tune ops answered across those requests (`stats`/`recalibrate`
+    /// count zero).
+    pub ops: u64,
+    /// Error responses plus failed per-op outcomes inside batches.
+    pub errors: u64,
+    pub wall_s: f64,
+    /// Per-request round-trip latency percentiles, microseconds.
+    pub p50_us: f64,
+    pub p99_us: f64,
+    pub rps: f64,
+    pub ops_per_s: f64,
+}
+
+/// The full bench run.
+#[derive(Debug, Clone)]
+pub struct BenchReport {
+    pub target: TargetKind,
+    pub op_count: usize,
+    pub clients: usize,
+    pub serve_threads: usize,
+    pub phases: Vec<PhaseReport>,
+}
+
+impl BenchReport {
+    pub fn phase(&self, label: &str) -> Option<&PhaseReport> {
+        self.phases.iter().find(|p| p.label == label)
+    }
+
+    /// Batched op throughput over single-op — the headline ratio.
+    pub fn batched_speedup(&self) -> Option<f64> {
+        let s = self.phase("single")?.ops_per_s;
+        let b = self.phase("batched")?.ops_per_s;
+        (s > 0.0).then(|| b / s)
+    }
+}
+
+/// One pre-encoded request line a client will send. Encoding happens up
+/// front so the timed loop measures the wire and the daemon, not the
+/// client's serializer.
+struct Job {
+    line: String,
+}
+
+impl Job {
+    fn new(req: &Request) -> Job {
+        Job { line: req.encode() }
+    }
+}
+
+/// One keep-alive client connection.
+struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    fn connect(addr: SocketAddr) -> io::Result<Client> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true)?;
+        Ok(Client { reader: BufReader::new(stream.try_clone()?), writer: stream })
+    }
+
+    fn exchange(&mut self, line: &str) -> io::Result<String> {
+        self.writer.write_all(line.as_bytes())?;
+        self.writer.write_all(b"\n")?;
+        let mut resp = String::new();
+        self.reader.read_line(&mut resp)?;
+        if resp.is_empty() {
+            return Err(io::Error::new(
+                io::ErrorKind::UnexpectedEof,
+                "server closed the connection",
+            ));
+        }
+        Ok(resp)
+    }
+}
+
+/// Nearest-rank percentile over an already-sorted sample (`util::stats`
+/// has means and R², not order statistics — request latencies need the
+/// tail, so sort-and-index here).
+fn percentile(sorted_us: &[f64], p: f64) -> f64 {
+    if sorted_us.is_empty() {
+        return 0.0;
+    }
+    let idx = ((p / 100.0) * (sorted_us.len() - 1) as f64).round() as usize;
+    sorted_us[idx.min(sorted_us.len() - 1)]
+}
+
+/// Drive one phase: every client replays its job list over its own
+/// connection; latencies and error counts are client-observed.
+fn run_phase(
+    addr: SocketAddr,
+    label: &'static str,
+    jobs: Vec<Vec<Job>>,
+) -> Result<PhaseReport, String> {
+    let clients = jobs.len();
+    let start = Instant::now();
+    let per_client: Vec<(Vec<f64>, u64, u64)> = std::thread::scope(|s| {
+        let handles: Vec<_> = jobs
+            .into_iter()
+            .map(|list| {
+                s.spawn(move || -> Result<(Vec<f64>, u64, u64), String> {
+                    let mut c =
+                        Client::connect(addr).map_err(|e| format!("{label}: connect: {e}"))?;
+                    let mut lat_us = Vec::with_capacity(list.len());
+                    let mut ops = 0u64;
+                    let mut errors = 0u64;
+                    for job in &list {
+                        let t = Instant::now();
+                        let resp = c
+                            .exchange(&job.line)
+                            .map_err(|e| format!("{label}: exchange: {e}"))?;
+                        lat_us.push(t.elapsed().as_secs_f64() * 1e6);
+                        match Response::decode(&resp) {
+                            Ok(Response::Tuned { .. }) => ops += 1,
+                            Ok(Response::TunedNet { results, .. }) => {
+                                ops += results.len() as u64;
+                                errors += results
+                                    .iter()
+                                    .filter(|r| matches!(r, OpOutcome::Failed { .. }))
+                                    .count()
+                                    as u64;
+                            }
+                            Ok(Response::Error { .. }) => errors += 1,
+                            Ok(_) => {}
+                            Err(e) => return Err(format!("{label}: bad response: {e}")),
+                        }
+                    }
+                    Ok((lat_us, ops, errors))
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().map_err(|_| format!("{label}: client panicked"))?)
+            .collect::<Result<Vec<_>, String>>()
+    })?;
+    let wall_s = start.elapsed().as_secs_f64().max(1e-9);
+    let mut lat: Vec<f64> = Vec::new();
+    let mut ops = 0u64;
+    let mut errors = 0u64;
+    for (l, o, e) in per_client {
+        lat.extend(l);
+        ops += o;
+        errors += e;
+    }
+    lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let requests = lat.len() as u64;
+    Ok(PhaseReport {
+        label,
+        clients,
+        requests,
+        ops,
+        errors,
+        wall_s,
+        p50_us: percentile(&lat, 50.0),
+        p99_us: percentile(&lat, 99.0),
+        rps: requests as f64 / wall_s,
+        ops_per_s: ops as f64 / wall_s,
+    })
+}
+
+/// Boot a daemon, run the three phases against it, shut it down, report.
+pub fn run(cfg: &BenchConfig) -> Result<BenchReport, String> {
+    if cfg.ops.is_empty() {
+        return Err("bench: no ops to serve".into());
+    }
+    let clients = cfg.clients.max(1);
+    // the recalibrate traffic swaps in the coefficients the daemon already
+    // runs — a real administrative write (full re-rank of the warm cache)
+    // with a deterministic outcome, so mixed-phase tunes stay comparable
+    let recal_coeffs =
+        crate::coordinator::Coordinator::new_uncalibrated(cfg.target).evaluator().coeffs();
+    let server = Server::bind(ServeConfig {
+        targets: vec![cfg.target],
+        port: 0,
+        threads: cfg.serve_threads.max(1),
+        calibrated: false,
+        ..ServeConfig::default()
+    })
+    .map_err(|e| e.to_string())?;
+    let addr = server.local_addr();
+    let daemon = std::thread::spawn(move || server.run());
+
+    let tune = |op: OpSpec| Request::Tune {
+        target: cfg.target,
+        op,
+        params: Some(cfg.params.clone()),
+    };
+    let tune_net = || Request::TuneNet {
+        target: cfg.target,
+        ops: cfg.ops.clone(),
+        params: Some(cfg.params.clone()),
+    };
+
+    // warm pass: every op searched exactly once, so the phases below
+    // measure the contended warm path, not first-touch search cost
+    {
+        let mut c = Client::connect(addr).map_err(|e| format!("warm: {e}"))?;
+        let resp = c.exchange(&tune_net().encode()).map_err(|e| format!("warm: {e}"))?;
+        match Response::decode(&resp) {
+            Ok(Response::TunedNet { .. }) => {}
+            other => return Err(format!("warm pass failed: {other:?}")),
+        }
+    }
+
+    let single_jobs = || -> Vec<Vec<Job>> {
+        (0..clients)
+            .map(|c| {
+                (0..cfg.requests_per_client)
+                    .map(|i| Job::new(&tune(cfg.ops[(c + i) % cfg.ops.len()])))
+                    .collect()
+            })
+            .collect()
+    };
+    let batched_jobs = || -> Vec<Vec<Job>> {
+        (0..clients)
+            .map(|_| (0..cfg.batches_per_client).map(|_| Job::new(&tune_net())).collect())
+            .collect()
+    };
+    let mixed_jobs = || -> Vec<Vec<Job>> {
+        (0..clients)
+            .map(|c| {
+                (0..cfg.requests_per_client)
+                    .map(|i| match (c + i) % 8 {
+                        0 => Job::new(&Request::Stats),
+                        1 => Job::new(&Request::Recalibrate {
+                            target: cfg.target,
+                            coeffs: recal_coeffs.clone(),
+                        }),
+                        2 | 3 => Job::new(&tune_net()),
+                        n => Job::new(&tune(cfg.ops[n % cfg.ops.len()])),
+                    })
+                    .collect()
+            })
+            .collect()
+    };
+
+    let phases = vec![
+        run_phase(addr, "single", single_jobs())?,
+        run_phase(addr, "batched", batched_jobs())?,
+        run_phase(addr, "mixed", mixed_jobs())?,
+    ];
+
+    let mut c = Client::connect(addr).map_err(|e| format!("shutdown: {e}"))?;
+    let _ = c.exchange(&Request::Shutdown.encode());
+    daemon
+        .join()
+        .map_err(|_| "daemon thread panicked".to_string())?
+        .map_err(|e| e.to_string())?;
+
+    Ok(BenchReport {
+        target: cfg.target,
+        op_count: cfg.ops.len(),
+        clients,
+        serve_threads: cfg.serve_threads.max(1),
+        phases,
+    })
+}
+
+/// The `BENCH_serve_load.json` payload.
+pub fn report_json(r: &BenchReport) -> Json {
+    Json::obj(vec![
+        ("bench", Json::Str("serve_load".into())),
+        ("target", Json::Str(r.target.wire_name().to_string())),
+        ("ops", Json::Num(r.op_count as f64)),
+        ("clients", Json::Num(r.clients as f64)),
+        ("serve_threads", Json::Num(r.serve_threads as f64)),
+        (
+            "batched_speedup_ops_per_s",
+            r.batched_speedup().map_or(Json::Null, Json::Num),
+        ),
+        (
+            "phases",
+            Json::Arr(
+                r.phases
+                    .iter()
+                    .map(|p| {
+                        Json::obj(vec![
+                            ("label", Json::Str(p.label.to_string())),
+                            ("clients", Json::Num(p.clients as f64)),
+                            ("requests", Json::Num(p.requests as f64)),
+                            ("ops", Json::Num(p.ops as f64)),
+                            ("errors", Json::Num(p.errors as f64)),
+                            ("wall_s", Json::Num(p.wall_s)),
+                            ("p50_us", Json::Num(p.p50_us)),
+                            ("p99_us", Json::Num(p.p99_us)),
+                            ("rps", Json::Num(p.rps)),
+                            ("ops_per_s", Json::Num(p.ops_per_s)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_is_nearest_rank() {
+        let s = [1.0, 2.0, 3.0, 4.0, 100.0];
+        assert_eq!(percentile(&s, 50.0), 3.0);
+        assert_eq!(percentile(&s, 99.0), 100.0);
+        assert_eq!(percentile(&s, 0.0), 1.0);
+        assert_eq!(percentile(&[], 50.0), 0.0);
+    }
+
+    #[test]
+    fn tiny_bench_runs_clean_end_to_end() {
+        let mut cfg = BenchConfig::new(
+            TargetKind::Graviton2,
+            vec![
+                OpSpec::Matmul { m: 32, n: 32, k: 32 },
+                OpSpec::Matmul { m: 64, n: 32, k: 16 },
+            ],
+        );
+        cfg.params = TuneParams::from_es(&EsParams {
+            population: 8,
+            iterations: 4,
+            seed: 11,
+            ..EsParams::default()
+        });
+        cfg.clients = 2;
+        cfg.requests_per_client = 8;
+        cfg.batches_per_client = 4;
+        cfg.serve_threads = 2;
+        let r = run(&cfg).expect("bench failed");
+        assert_eq!(r.phases.len(), 3);
+        for p in &r.phases {
+            assert!(p.requests > 0, "{}: no requests", p.label);
+            assert_eq!(p.errors, 0, "{}: errors", p.label);
+            assert!(p.rps > 0.0 && p.p50_us > 0.0 && p.p99_us >= p.p50_us, "{p:?}");
+        }
+        let single = r.phase("single").unwrap();
+        assert_eq!(single.requests, 16);
+        assert_eq!(single.ops, 16);
+        let batched = r.phase("batched").unwrap();
+        assert_eq!(batched.requests, 8);
+        assert_eq!(batched.ops, 16, "each batch answers every op");
+        assert!(r.batched_speedup().is_some());
+        let text = report_json(&r).to_string();
+        for want in ["\"bench\":", "serve_load", "\"phases\":", "\"ops_per_s\":"] {
+            assert!(text.contains(want), "missing {want} in {text}");
+        }
+    }
+}

@@ -15,16 +15,25 @@
 //!   wrong extractor) and merged in, so a cache produced by `tune-net`
 //!   shard workers and `merge-caches` serves search-free from request one;
 //! * **request loop** — line-delimited JSON ([`protocol`]): `tune`,
-//!   `stats`, `recalibrate`, `save`, `shutdown`. Connections are fed
-//!   through a [`WorkQueue`] to a fixed pool of handler threads, and a
-//!   connection that goes idle is *parked* back into the queue (its
-//!   partial read buffer travels with it), so any number of idle
-//!   keep-alive clients can never pin the pool or block shutdown; each
-//!   target has its own coordinator (own cache lock, own evaluator), so
-//!   concurrent tunes for different targets never serialize, and tunes for
-//!   one target contend only on that target's cache mutex around the
-//!   (microseconds) lookup/record sections — searches themselves run
+//!   `tune_net` (a whole network's ops on one line, one parse/dispatch for
+//!   the batch), `stats`, `metrics`, `recalibrate`, `save`, `shutdown`.
+//!   Connections are fed through a [`WorkQueue`] to a fixed pool of
+//!   handler threads, and a connection that goes idle is *parked* back
+//!   into the queue (its partial read buffer travels with it), so any
+//!   number of idle keep-alive clients can never pin the pool or block
+//!   shutdown; each target has its own coordinator (own cache lock, own
+//!   evaluator), so concurrent tunes for different targets never
+//!   serialize. Within one target the warm path is contention-audited:
+//!   an unbounded schedule cache answers validated hits under a *shared*
+//!   read lock ([`ScheduleCache::get_valid_shared`] behind the
+//!   coordinator's `RwLock`), and the deployed-latency memo is sharded by
+//!   FNV key hash with a single lock acquisition per lookup — concurrent
+//!   warm hits on one target proceed in parallel; searches themselves run
 //!   outside any lock;
+//! * **observability** — every request updates lock-free counters
+//!   ([`crate::metrics::serve::ServeMetrics`]); the `metrics` request
+//!   renders them (plus point-in-time cache gauges) as a Prometheus-style
+//!   text exposition, so operators scrape instead of polling `stats`;
 //! * **online recalibration** — `recalibrate` swaps coefficients into the
 //!   live evaluator and re-ranks every resident cache entry from memoized
 //!   features ([`Coordinator::swap_coeffs`]): zero re-lowering, zero
@@ -46,15 +55,19 @@
 //! daemon over real sockets, and `docs/SERVING.md` specifies the wire
 //! protocol.
 
+pub mod bench;
 pub mod protocol;
 
 use crate::coordinator::{Coordinator, Strategy};
 use crate::eval::{CacheError, ScheduleCache};
 use crate::isa::TargetKind;
+use crate::metrics::serve::{gauge_block, ServeMetrics};
+use crate::search::EsParams;
 use crate::tir::ops::OpSpec;
 use crate::transform::ScheduleConfig;
+use crate::util::hash::fnv1a64;
 use crate::util::pool::WorkQueue;
-use self::protocol::{ErrorCode, Request, Response, TargetStats};
+use self::protocol::{ErrorCode, OpOutcome, Request, Response, TargetStats};
 use std::collections::{BTreeMap, HashMap};
 use std::io::{self, Read, Write};
 use std::net::{Ipv4Addr, SocketAddr, TcpListener, TcpStream};
@@ -62,7 +75,7 @@ use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Mutex;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// Longest accepted request line (1 MiB) — a lost-newline client must get
 /// an error, not grow an unbounded buffer.
@@ -137,29 +150,49 @@ impl From<io::Error> for ServeError {
     }
 }
 
+/// Shard count for the deployed-latency memo — the same fan-out the
+/// evaluator's feature store uses. Warm hits for different schedules hash
+/// to different shards, so the pool's handler threads stop serializing on
+/// one map lock.
+const DEPLOY_SHARDS: usize = 16;
+
 /// One served target: its coordinator plus a ground-truth latency memo.
 struct Served {
     kind: TargetKind,
     coordinator: Coordinator,
-    /// `(op, chosen config) → deployed seconds`. The device simulator is
-    /// deterministic, so each distinct schedule is deployed exactly once;
-    /// every later tune for it — above all the cache-hit path — answers
-    /// from here in microseconds instead of re-simulating. Grows with the
-    /// number of distinct schedules served (one f64 per schedule).
-    deployed: Mutex<HashMap<String, f64>>,
+    /// `(op, chosen config) → deployed seconds`, sharded by FNV-1a of the
+    /// memo key. The device simulator is deterministic, so each distinct
+    /// schedule is deployed exactly once; every later tune for it — above
+    /// all the cache-hit path — answers from here in microseconds instead
+    /// of re-simulating. Grows with the number of distinct schedules
+    /// served (one f64 per schedule).
+    deployed: Vec<Mutex<HashMap<String, f64>>>,
 }
 
 impl Served {
+    fn new(kind: TargetKind, coordinator: Coordinator) -> Served {
+        Served {
+            kind,
+            coordinator,
+            deployed: (0..DEPLOY_SHARDS).map(|_| Mutex::new(HashMap::new())).collect(),
+        }
+    }
+
     /// The deployed latency of `(op, cfg)`: memoized, simulated on first
-    /// need. The lock is never held across the simulation — two racing
-    /// first deploys just agree on the (deterministic) value.
+    /// need. One lock acquisition per call — the shard guard is held
+    /// across the miss-fill, which keeps the deploy exactly-once per
+    /// schedule; misses are rare (each distinct schedule pays one) and
+    /// only stall the 1-in-[`DEPLOY_SHARDS`] keys sharing the shard, so
+    /// warm hits on other schedules proceed untouched.
     fn deploy_once(&self, op: &OpSpec, cfg: &ScheduleConfig) -> f64 {
         let key = format!("{}/{:?}", op.cache_key(), cfg.choices);
-        if let Some(&s) = self.deployed.lock().unwrap().get(&key) {
+        let shard = &self.deployed[(fnv1a64(key.as_bytes()) % DEPLOY_SHARDS as u64) as usize];
+        let mut memo = shard.lock().unwrap();
+        if let Some(&s) = memo.get(&key) {
             return s;
         }
         let s = self.coordinator.device.run(op, cfg).seconds;
-        self.deployed.lock().unwrap().insert(key, s);
+        memo.insert(key, s);
         s
     }
 }
@@ -179,6 +212,21 @@ struct State {
     stop: AtomicBool,
     /// Our own address — `begin_shutdown` pokes it to unblock `accept`.
     addr: SocketAddr,
+    /// Lock-free request/error/latency counters, rendered by the
+    /// `metrics` request.
+    metrics: ServeMetrics,
+}
+
+/// Every wire command the dispatcher counts — the `cmd` label set of
+/// `tuna_serve_requests_total` (each is a [`Request::cmd_name`] value).
+const WIRE_CMDS: [&str; 7] =
+    ["tune", "tune_net", "stats", "metrics", "recalibrate", "save", "shutdown"];
+
+/// The daemon's metric set for a target roster.
+fn metrics_for(coords: &[Served]) -> ServeMetrics {
+    let errors = ErrorCode::ALL.map(|c| c.as_str());
+    let targets: Vec<&'static str> = coords.iter().map(|t| t.kind.wire_name()).collect();
+    ServeMetrics::new(&WIRE_CMDS, &errors, &targets)
 }
 
 impl State {
@@ -212,14 +260,108 @@ impl State {
     /// [`Response`], including handler panics (answered as `internal` —
     /// the panic message goes to the server's stderr via the panic hook).
     fn respond(&self, line: &str) -> Response {
-        catch_unwind(AssertUnwindSafe(|| match Request::decode(line) {
+        let resp = catch_unwind(AssertUnwindSafe(|| match Request::decode(line) {
             Err(e) => e.into(),
-            Ok(req) => self.execute(&req),
+            Ok(req) => {
+                self.metrics.inc_cmd(req.cmd_name());
+                self.execute(&req)
+            }
         }))
         .unwrap_or_else(|_| Response::Error {
             code: ErrorCode::Internal,
             detail: "request handler panicked (see server stderr)".into(),
-        })
+        });
+        // one counting point for every error the daemon writes back —
+        // decode rejections, dispatch errors and caught panics alike
+        if let Response::Error { code, .. } = &resp {
+            self.metrics.inc_error(code.as_str());
+        }
+        resp
+    }
+
+    /// Tune one op for a served target — the unit both `tune` and
+    /// `tune_net` dispatch to. Records per-target metrics (op count,
+    /// cache verdict, service latency) on every attempt.
+    fn tune_one(&self, t: &Served, op: &OpSpec, es: &EsParams) -> OpOutcome {
+        let start = Instant::now();
+        // search without the coordinator-side deploy, then answer the
+        // ground truth from the per-schedule latency memo: a cache-hit
+        // tune costs a lookup, not a re-simulation
+        let outcome = match t.coordinator.try_search_op(op, &Strategy::TunaStatic(es.clone()))
+        {
+            Ok(rep) => OpOutcome::Tuned {
+                op: *op,
+                predicted_cost: rep.top_k.first().map(|(_, s)| *s).unwrap_or(0.0),
+                latency_s: t.deploy_once(op, &rep.chosen),
+                config: rep.chosen,
+                cache_hit: rep.cache_hit,
+                evaluations: rep.evaluations,
+            },
+            Err(e) => OpOutcome::Failed {
+                op: *op,
+                code: ErrorCode::Unscorable,
+                detail: e.to_string(),
+            },
+        };
+        if let Some(m) = self.metrics.target(t.kind.wire_name()) {
+            let verdict = match &outcome {
+                OpOutcome::Tuned { cache_hit, .. } => Some(*cache_hit),
+                OpOutcome::Failed { .. } => None,
+            };
+            m.record_op(verdict, start.elapsed().as_secs_f64());
+        }
+        outcome
+    }
+
+    /// Point-in-time counters for one served target (the `stats` payload,
+    /// also exported as metrics gauges).
+    fn target_stats(t: &Served) -> TargetStats {
+        let c = &t.coordinator;
+        let (entries, hits, misses) = c.cache_stats();
+        let ev = c.evaluator().stats();
+        TargetStats {
+            entries: entries as u64,
+            hits,
+            misses,
+            evictions: c.cache_evictions(),
+            searches: c.searches_performed(),
+            feature_hits: ev.hits,
+            feature_misses: ev.misses,
+        }
+    }
+
+    /// The full Prometheus exposition: the lock-free request counters plus
+    /// gauge families for the coordinators' point-in-time stats.
+    fn render_metrics(&self) -> String {
+        let mut text = self.metrics.render();
+        let stats: Vec<(&'static str, TargetStats)> = self
+            .coords
+            .iter()
+            .map(|t| (t.kind.wire_name(), Self::target_stats(t)))
+            .collect();
+        let families: [(&str, &str, fn(&TargetStats) -> u64); 7] = [
+            ("tuna_cache_entries", "Resident schedule-cache entries.", |s| s.entries),
+            ("tuna_cache_hits_total", "Schedule-cache lookup hits.", |s| s.hits),
+            ("tuna_cache_misses_total", "Schedule-cache lookup misses.", |s| s.misses),
+            ("tuna_cache_evictions_total", "Entries evicted by the cache bound.", |s| {
+                s.evictions
+            }),
+            ("tuna_searches_total", "Searches actually executed (hits excluded).", |s| {
+                s.searches
+            }),
+            ("tuna_feature_hits_total", "Feature-store (stage-1 memo) hits.", |s| {
+                s.feature_hits
+            }),
+            ("tuna_feature_misses_total", "Candidates actually lowered.", |s| {
+                s.feature_misses
+            }),
+        ];
+        for (name, help, pick) in families {
+            let rows: Vec<(&str, f64)> =
+                stats.iter().map(|(n, s)| (*n, pick(s) as f64)).collect();
+            text.push_str(&gauge_block(name, help, &rows));
+        }
+        text
     }
 
     fn execute(&self, req: &Request) -> Response {
@@ -229,46 +371,47 @@ impl State {
                     return self.not_served(*target);
                 };
                 let es = params.clone().unwrap_or_default().into_es();
-                // search without the coordinator-side deploy, then answer
-                // the ground truth from the per-schedule latency memo: a
-                // cache-hit tune costs a lookup, not a re-simulation
-                match t.coordinator.try_search_op(op, &Strategy::TunaStatic(es)) {
-                    Ok(rep) => Response::Tuned {
+                match self.tune_one(t, op, &es) {
+                    OpOutcome::Tuned {
+                        op,
+                        config,
+                        predicted_cost,
+                        latency_s,
+                        cache_hit,
+                        evaluations,
+                    } => Response::Tuned {
                         target: *target,
-                        op: *op,
-                        predicted_cost: rep.top_k.first().map(|(_, s)| *s).unwrap_or(0.0),
-                        latency_s: t.deploy_once(op, &rep.chosen),
-                        config: rep.chosen,
-                        cache_hit: rep.cache_hit,
-                        evaluations: rep.evaluations,
+                        op,
+                        config,
+                        predicted_cost,
+                        latency_s,
+                        cache_hit,
+                        evaluations,
                     },
-                    Err(e) => Response::Error {
-                        code: ErrorCode::Unscorable,
-                        detail: e.to_string(),
-                    },
+                    OpOutcome::Failed { code, detail, .. } => {
+                        Response::Error { code, detail }
+                    }
                 }
+            }
+            Request::TuneNet { target, ops, params } => {
+                let Some(t) = self.served(*target) else {
+                    return self.not_served(*target);
+                };
+                // one parse, one dispatch, one response for the whole
+                // network; per-op failures ride along as Failed outcomes
+                // instead of poisoning the batch
+                let es = params.clone().unwrap_or_default().into_es();
+                let results = ops.iter().map(|op| self.tune_one(t, op, &es)).collect();
+                Response::TunedNet { target: *target, results }
             }
             Request::Stats => {
                 let mut targets = BTreeMap::new();
                 for t in &self.coords {
-                    let c = &t.coordinator;
-                    let (entries, hits, misses) = c.cache_stats();
-                    let ev = c.evaluator().stats();
-                    targets.insert(
-                        t.kind.wire_name().to_string(),
-                        TargetStats {
-                            entries: entries as u64,
-                            hits,
-                            misses,
-                            evictions: c.cache_evictions(),
-                            searches: c.searches_performed(),
-                            feature_hits: ev.hits,
-                            feature_misses: ev.misses,
-                        },
-                    );
+                    targets.insert(t.kind.wire_name().to_string(), Self::target_stats(t));
                 }
                 Response::Stats { targets }
             }
+            Request::Metrics => Response::Metrics { text: self.render_metrics() },
             Request::Recalibrate { target, coeffs } => {
                 let Some(t) = self.served(*target) else {
                     return self.not_served(*target);
@@ -354,7 +497,7 @@ impl Server {
             if let Some(cap) = config.cache_capacity {
                 coordinator.set_cache_capacity(Some(cap));
             }
-            coords.push(Served { kind, coordinator, deployed: Mutex::new(HashMap::new()) });
+            coords.push(Served::new(kind, coordinator));
         }
         let served_prefixes: Vec<String> =
             coords.iter().map(|t| format!("{:?}/", t.kind)).collect();
@@ -380,9 +523,10 @@ impl Server {
         }
         let listener = TcpListener::bind((Ipv4Addr::LOCALHOST, config.port))?;
         let addr = listener.local_addr()?;
+        let metrics = metrics_for(&coords);
         Ok(Server {
             listener,
-            state: State { coords, foreign, stop: AtomicBool::new(false), addr },
+            state: State { coords, foreign, stop: AtomicBool::new(false), addr, metrics },
             threads: config.threads.max(1),
             save_on_shutdown: config.save_on_shutdown,
         })
@@ -536,15 +680,17 @@ mod tests {
     /// dispatch layer without sockets (the socket path is covered by
     /// `rust/tests/serve_e2e.rs`).
     fn test_state() -> State {
+        let coords = vec![Served::new(
+            TargetKind::Graviton2,
+            Coordinator::new_uncalibrated(TargetKind::Graviton2),
+        )];
+        let metrics = metrics_for(&coords);
         State {
-            coords: vec![Served {
-                kind: TargetKind::Graviton2,
-                coordinator: Coordinator::new_uncalibrated(TargetKind::Graviton2),
-                deployed: Mutex::new(HashMap::new()),
-            }],
+            coords,
             foreign: ScheduleCache::new(),
             stop: AtomicBool::new(false),
             addr: SocketAddr::from(([127, 0, 0, 1], 0)),
+            metrics,
         }
     }
 
@@ -626,6 +772,117 @@ mod tests {
         // protocol::TuneParams::MAX_SEARCH_PARAM)
         let r = state.respond(r#"{"cmd":"save","path":"/proc/definitely/not/writable.json"}"#);
         assert!(matches!(r, Response::Error { code: ErrorCode::Io, .. }), "{r:?}");
+    }
+
+    #[test]
+    fn tune_net_matches_individual_tunes_and_shares_the_cache() {
+        let ops = [
+            OpSpec::Matmul { m: 32, n: 32, k: 32 },
+            OpSpec::Matmul { m: 64, n: 32, k: 16 },
+        ];
+        // reference: the same ops tuned one by one on a fresh state
+        let single = test_state();
+        let mut expect = Vec::new();
+        for op in ops {
+            let r = single.execute(&Request::Tune {
+                target: TargetKind::Graviton2,
+                op,
+                params: Some(tiny_params()),
+            });
+            let Response::Tuned { config, latency_s, .. } = r else { panic!("{r:?}") };
+            expect.push((config, latency_s));
+        }
+
+        let state = test_state();
+        let req = Request::TuneNet {
+            target: TargetKind::Graviton2,
+            ops: ops.to_vec(),
+            params: Some(tiny_params()),
+        };
+        let first = state.execute(&req);
+        let Response::TunedNet { target, results } = &first else { panic!("{first:?}") };
+        assert_eq!(*target, TargetKind::Graviton2);
+        assert_eq!(results.len(), 2);
+        for (i, r) in results.iter().enumerate() {
+            let OpOutcome::Tuned { op, config, latency_s, cache_hit, .. } = r else {
+                panic!("op {i} failed: {r:?}")
+            };
+            assert_eq!(*op, ops[i], "results must keep request order");
+            assert!(!*cache_hit);
+            assert_eq!(*config, expect[i].0, "batched tune diverged from single-op");
+            assert_eq!(*latency_s, expect[i].1);
+        }
+        // the batch filled the same per-target cache the single path uses
+        let again = state.execute(&req);
+        let Response::TunedNet { results, .. } = &again else { panic!("{again:?}") };
+        for r in results {
+            let OpOutcome::Tuned { cache_hit, evaluations, .. } = r else {
+                panic!("{r:?}")
+            };
+            assert!(*cache_hit, "repeat batch searched");
+            assert_eq!(*evaluations, 0);
+        }
+    }
+
+    #[test]
+    fn tune_net_isolates_per_op_failures() {
+        let state = test_state();
+        // an unserved target fails the whole batch with one typed error
+        let r = state.execute(&Request::TuneNet {
+            target: TargetKind::TeslaV100,
+            ops: vec![OpSpec::Matmul { m: 8, n: 8, k: 8 }],
+            params: None,
+        });
+        assert!(
+            matches!(r, Response::Error { code: ErrorCode::UnknownTarget, .. }),
+            "{r:?}"
+        );
+    }
+
+    #[test]
+    fn metrics_exposition_counts_known_traffic_exactly() {
+        let state = test_state();
+        let op = OpSpec::Matmul { m: 32, n: 32, k: 32 };
+        let tune = Request::Tune {
+            target: TargetKind::Graviton2,
+            op,
+            params: Some(tiny_params()),
+        }
+        .encode();
+        // respond() is the counting point: 1 miss + 2 hits, one garbage
+        // line, one batched request (2 ops, both hits), one stats
+        for _ in 0..3 {
+            state.respond(&tune);
+        }
+        state.respond("not json at all");
+        state.respond(
+            &Request::TuneNet {
+                target: TargetKind::Graviton2,
+                ops: vec![op, op],
+                params: Some(tiny_params()),
+            }
+            .encode(),
+        );
+        state.respond(&Request::Stats.encode());
+
+        let r = state.respond(&Request::Metrics.encode());
+        let Response::Metrics { text } = r else { panic!("{r:?}") };
+        for want in [
+            "tuna_serve_requests_total{cmd=\"tune\"} 3",
+            "tuna_serve_requests_total{cmd=\"tune_net\"} 1",
+            "tuna_serve_requests_total{cmd=\"stats\"} 1",
+            "tuna_serve_requests_total{cmd=\"metrics\"} 1",
+            "tuna_serve_errors_total{code=\"parse\"} 1",
+            // 3 single ops + 2 batched ops; one search total
+            "tuna_serve_ops_total{target=\"graviton2\"} 5",
+            "tuna_serve_op_cache_hits_total{target=\"graviton2\"} 4",
+            "tuna_serve_op_cache_misses_total{target=\"graviton2\"} 1",
+            "tuna_serve_op_seconds_count{target=\"graviton2\"} 5",
+            "tuna_cache_entries{target=\"graviton2\"} 1",
+            "tuna_searches_total{target=\"graviton2\"} 1",
+        ] {
+            assert!(text.contains(want), "missing {want:?} in:\n{text}");
+        }
     }
 
     #[test]

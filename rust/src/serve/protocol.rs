@@ -142,8 +142,16 @@ pub enum Request {
     /// task was already tuned under the same parameters). `params: None`
     /// means the server-side defaults.
     Tune { target: TargetKind, op: OpSpec, params: Option<TuneParams> },
+    /// Optimize a whole network's ops for `target` in one wire exchange,
+    /// amortizing parse, dispatch and lock traffic across the batch. One
+    /// [`Response::TunedNet`] comes back with a per-op outcome in request
+    /// order; a failing op never poisons its batch-mates.
+    TuneNet { target: TargetKind, ops: Vec<OpSpec>, params: Option<TuneParams> },
     /// Per-target cache/search/feature-store counters.
     Stats,
+    /// Prometheus-style text exposition of the daemon's counters and
+    /// latency histograms (scrapeable; see `docs/SERVING.md`).
+    Metrics,
     /// Swap new scoring coefficients into `target`'s evaluator and re-rank
     /// every resident cache entry — online, from memoized features.
     Recalibrate { target: TargetKind, coeffs: Vec<f64> },
@@ -285,6 +293,88 @@ impl TargetStats {
     }
 }
 
+/// One op's outcome inside a [`Response::TunedNet`]. Self-describing —
+/// each element carries its op, so results stay attributable even though
+/// order already matches the request. A `Failed` element reuses the
+/// [`ErrorCode`] taxonomy without failing its batch-mates.
+#[derive(Debug, Clone, PartialEq)]
+pub enum OpOutcome {
+    Tuned {
+        op: OpSpec,
+        config: ScheduleConfig,
+        predicted_cost: f64,
+        latency_s: f64,
+        cache_hit: bool,
+        evaluations: u64,
+    },
+    Failed { op: OpSpec, code: ErrorCode, detail: String },
+}
+
+impl OpOutcome {
+    fn to_json(&self) -> Json {
+        match self {
+            OpOutcome::Tuned {
+                op,
+                config,
+                predicted_cost,
+                latency_s,
+                cache_hit,
+                evaluations,
+            } => Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("op", op.to_json()),
+                ("config", cfg_to_json(config)),
+                ("predicted_cost", Json::Num(*predicted_cost)),
+                ("latency_s", Json::Num(*latency_s)),
+                ("cache_hit", Json::Bool(*cache_hit)),
+                ("evaluations", Json::Num(*evaluations as f64)),
+            ]),
+            OpOutcome::Failed { op, code, detail } => Json::obj(vec![
+                ("ok", Json::Bool(false)),
+                ("op", op.to_json()),
+                (
+                    "error",
+                    Json::obj(vec![
+                        ("code", Json::Str(code.as_str().into())),
+                        ("detail", Json::Str(detail.clone())),
+                    ]),
+                ),
+            ]),
+        }
+    }
+
+    fn from_json(j: &Json) -> Result<OpOutcome, String> {
+        let ok = match j.get("ok") {
+            Some(Json::Bool(b)) => *b,
+            _ => return Err("op outcome missing 'ok' bool".into()),
+        };
+        let op = OpSpec::from_json(j.get("op").ok_or("op outcome missing 'op'")?)?;
+        if !ok {
+            let err = j.get("error").ok_or("failed outcome missing 'error' object")?;
+            let code_s =
+                err.get("code").and_then(Json::as_str).ok_or("error missing 'code'")?;
+            let code = ErrorCode::from_wire(code_s)
+                .ok_or_else(|| format!("unknown error code {code_s:?}"))?;
+            let detail =
+                err.get("detail").and_then(Json::as_str).ok_or("error missing 'detail'")?;
+            return Ok(OpOutcome::Failed { op, code, detail: detail.to_string() });
+        }
+        let config = cfg_from_json(j.get("config").ok_or("tuned outcome missing 'config'")?)?;
+        let cache_hit = match j.get("cache_hit") {
+            Some(Json::Bool(b)) => *b,
+            _ => return Err("tuned outcome missing 'cache_hit' bool".into()),
+        };
+        Ok(OpOutcome::Tuned {
+            op,
+            config,
+            predicted_cost: f64_field(j, "predicted_cost")?,
+            latency_s: f64_field(j, "latency_s")?,
+            cache_hit,
+            evaluations: count_field(j, "evaluations")?,
+        })
+    }
+}
+
 /// A server response.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Response {
@@ -300,8 +390,14 @@ pub enum Response {
         cache_hit: bool,
         evaluations: u64,
     },
+    /// Outcome of a [`Request::TuneNet`]: one element per requested op,
+    /// in request order.
+    TunedNet { target: TargetKind, results: Vec<OpOutcome> },
     /// Counters per served target, keyed by wire name.
     Stats { targets: BTreeMap<String, TargetStats> },
+    /// Prometheus text exposition. Multi-line on the inside; the JSON
+    /// string escaping keeps it one wire line.
+    Metrics { text: String },
     /// Recalibration applied; `reranked` cache entries re-scored.
     Recalibrated { target: TargetKind, reranked: u64 },
     /// Caches persisted (`entries` across all served targets).
@@ -313,6 +409,27 @@ pub enum Response {
 }
 
 impl Request {
+    /// Upper bound on the ops a single `tune_net` line may carry — the
+    /// batch analogue of [`TuneParams::MAX_SEARCH_PARAM`]. The Table-I
+    /// networks top out at a few dozen unique tasks; 1024 is generous
+    /// headroom while keeping one line from pinning a handler on an
+    /// unbounded amount of search work.
+    pub const MAX_NET_OPS: usize = 1024;
+
+    /// Canonical wire command string — also the `cmd` label on the
+    /// daemon's `tuna_serve_requests_total` metric.
+    pub fn cmd_name(&self) -> &'static str {
+        match self {
+            Request::Tune { .. } => "tune",
+            Request::TuneNet { .. } => "tune_net",
+            Request::Stats => "stats",
+            Request::Metrics => "metrics",
+            Request::Recalibrate { .. } => "recalibrate",
+            Request::Save { .. } => "save",
+            Request::Shutdown => "shutdown",
+        }
+    }
+
     pub fn to_json(&self) -> Json {
         match self {
             Request::Tune { target, op, params } => {
@@ -326,7 +443,19 @@ impl Request {
                 }
                 Json::obj(fields)
             }
+            Request::TuneNet { target, ops, params } => {
+                let mut fields = vec![
+                    ("cmd", Json::Str("tune_net".into())),
+                    ("target", Json::Str(target.wire_name().into())),
+                    ("ops", Json::Arr(ops.iter().map(OpSpec::to_json).collect())),
+                ];
+                if let Some(p) = params {
+                    fields.push(("es", p.to_json()));
+                }
+                Json::obj(fields)
+            }
             Request::Stats => Json::obj(vec![("cmd", Json::Str("stats".into()))]),
+            Request::Metrics => Json::obj(vec![("cmd", Json::Str("metrics".into()))]),
             Request::Recalibrate { target, coeffs } => Json::obj(vec![
                 ("cmd", Json::Str("recalibrate".into())),
                 ("target", Json::Str(target.wire_name().into())),
@@ -371,7 +500,49 @@ impl Request {
                 };
                 Ok(Request::Tune { target, op, params })
             }
+            "tune_net" => {
+                let target = target_field(&j)?;
+                let arr = j.get("ops").and_then(Json::as_arr).ok_or_else(|| {
+                    WireError::new(ErrorCode::BadRequest, "tune_net needs an 'ops' array")
+                })?;
+                if arr.is_empty() {
+                    return Err(WireError::new(
+                        ErrorCode::BadRequest,
+                        "tune_net needs a non-empty 'ops' array",
+                    ));
+                }
+                // resource cap, checked before any element parse: one line
+                // must not be able to pin a handler on unbounded work
+                if arr.len() > Request::MAX_NET_OPS {
+                    return Err(WireError::new(
+                        ErrorCode::BadRequest,
+                        format!(
+                            "tune_net carries {} ops (max {})",
+                            arr.len(),
+                            Request::MAX_NET_OPS
+                        ),
+                    ));
+                }
+                let ops = arr
+                    .iter()
+                    .enumerate()
+                    .map(|(i, o)| {
+                        OpSpec::from_json(o).map_err(|e| {
+                            WireError::new(ErrorCode::UnknownOp, format!("ops[{i}]: {e}"))
+                        })
+                    })
+                    .collect::<Result<Vec<OpSpec>, WireError>>()?;
+                let params = match j.get("es") {
+                    None => None,
+                    Some(p) => Some(
+                        TuneParams::from_json(p)
+                            .map_err(|e| WireError::new(ErrorCode::BadRequest, e))?,
+                    ),
+                };
+                Ok(Request::TuneNet { target, ops, params })
+            }
             "stats" => Ok(Request::Stats),
+            "metrics" => Ok(Request::Metrics),
             "recalibrate" => {
                 let target = target_field(&j)?;
                 let arr = j.get("coeffs").and_then(Json::as_arr).ok_or_else(|| {
@@ -396,7 +567,9 @@ impl Request {
             "shutdown" => Ok(Request::Shutdown),
             other => Err(WireError::new(
                 ErrorCode::BadRequest,
-                format!("unknown cmd {other:?} (tune|stats|recalibrate|save|shutdown)"),
+                format!(
+                    "unknown cmd {other:?} (tune|tune_net|stats|metrics|recalibrate|save|shutdown)"
+                ),
             )),
         }
     }
@@ -424,6 +597,12 @@ impl Response {
                 ("cache_hit", Json::Bool(*cache_hit)),
                 ("evaluations", Json::Num(*evaluations as f64)),
             ]),
+            Response::TunedNet { target, results } => Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("type", Json::Str("tuned_net".into())),
+                ("target", Json::Str(target.wire_name().into())),
+                ("results", Json::Arr(results.iter().map(OpOutcome::to_json).collect())),
+            ]),
             Response::Stats { targets } => Json::obj(vec![
                 ("ok", Json::Bool(true)),
                 ("type", Json::Str("stats".into())),
@@ -433,6 +612,11 @@ impl Response {
                         targets.iter().map(|(k, v)| (k.clone(), v.to_json())).collect(),
                     ),
                 ),
+            ]),
+            Response::Metrics { text } => Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("type", Json::Str("metrics".into())),
+                ("text", Json::Str(text.clone())),
             ]),
             Response::Recalibrated { target, reranked } => Json::obj(vec![
                 ("ok", Json::Bool(true)),
@@ -505,6 +689,30 @@ impl Response {
                     evaluations: count_field(&j, "evaluations")?,
                 })
             }
+            "tuned_net" => {
+                let target = target_field(&j).map_err(|e| e.detail)?;
+                let arr = j
+                    .get("results")
+                    .and_then(Json::as_arr)
+                    .ok_or("tuned_net missing 'results' array")?;
+                // mirror the request-side cap: a server never answers with
+                // more results than a decodable request could carry
+                if arr.len() > Request::MAX_NET_OPS {
+                    return Err(format!(
+                        "tuned_net carries {} results (max {})",
+                        arr.len(),
+                        Request::MAX_NET_OPS
+                    ));
+                }
+                let results = arr
+                    .iter()
+                    .enumerate()
+                    .map(|(i, o)| {
+                        OpOutcome::from_json(o).map_err(|e| format!("results[{i}]: {e}"))
+                    })
+                    .collect::<Result<Vec<OpOutcome>, String>>()?;
+                Ok(Response::TunedNet { target, results })
+            }
             "stats" => {
                 let Some(Json::Obj(m)) = j.get("targets") else {
                     return Err("stats missing 'targets' object".into());
@@ -526,6 +734,13 @@ impl Response {
                     .ok_or("saved missing 'path'")?
                     .to_string(),
                 entries: count_field(&j, "entries")?,
+            }),
+            "metrics" => Ok(Response::Metrics {
+                text: j
+                    .get("text")
+                    .and_then(Json::as_str)
+                    .ok_or("metrics missing 'text'")?
+                    .to_string(),
             }),
             "shutting_down" => Ok(Response::ShuttingDown),
             other => Err(format!("unknown response type {other:?}")),
@@ -594,7 +809,21 @@ mod tests {
                 op: OpSpec::BatchMatmul { b: 12, m: 128, n: 128, k: 64 },
                 params: Some(TuneParams::default()),
             },
+            Request::TuneNet {
+                target: TargetKind::Graviton2,
+                ops: vec![
+                    OpSpec::Matmul { m: 128, n: 768, k: 768 },
+                    OpSpec::BatchMatmul { b: 12, m: 128, n: 128, k: 64 },
+                ],
+                params: None,
+            },
+            Request::TuneNet {
+                target: TargetKind::TeslaV100,
+                ops: vec![OpSpec::Matmul { m: 8, n: 8, k: 8 }],
+                params: Some(TuneParams::default()),
+            },
             Request::Stats,
+            Request::Metrics,
             Request::Recalibrate {
                 target: TargetKind::CortexA53,
                 coeffs: vec![0.5, 1.25, 3.0],
@@ -605,7 +834,67 @@ mod tests {
         for r in reqs {
             let line = r.encode();
             assert_eq!(Request::decode(&line).unwrap(), r, "mangled: {line}");
+            assert!(line.contains(r.cmd_name()), "cmd name not on the wire: {line}");
         }
+    }
+
+    #[test]
+    fn tune_net_decode_enforces_the_op_count_cap() {
+        // cap + 1 copies of a perfectly valid op must be rejected up front
+        let one_op = r#"{"kind":"dense","m":8,"n":8,"k":8}"#;
+        let ops = vec![one_op; Request::MAX_NET_OPS + 1].join(",");
+        let line = format!(r#"{{"cmd":"tune_net","target":"graviton2","ops":[{ops}]}}"#);
+        match Request::decode(&line) {
+            Err(e) => {
+                assert_eq!(e.code, ErrorCode::BadRequest, "{e}");
+                assert!(e.detail.contains("max"), "{e}");
+            }
+            Ok(r) => panic!("accepted an over-cap batch as {r:?}"),
+        }
+        // exactly at the cap is fine
+        let ops = vec![one_op; Request::MAX_NET_OPS].join(",");
+        let line = format!(r#"{{"cmd":"tune_net","target":"graviton2","ops":[{ops}]}}"#);
+        match Request::decode(&line).unwrap() {
+            Request::TuneNet { ops, .. } => assert_eq!(ops.len(), Request::MAX_NET_OPS),
+            other => panic!("decoded as {other:?}"),
+        }
+    }
+
+    #[test]
+    fn tuned_net_response_roundtrips_mixed_outcomes() {
+        let cfg = ScheduleConfig { choices: vec![4, 1, 0, 2] };
+        let r = Response::TunedNet {
+            target: TargetKind::Graviton2,
+            results: vec![
+                OpOutcome::Tuned {
+                    op: OpSpec::Matmul { m: 16, n: 16, k: 16 },
+                    config: cfg,
+                    predicted_cost: 123.5,
+                    latency_s: 0.00625,
+                    cache_hit: true,
+                    evaluations: 0,
+                },
+                OpOutcome::Failed {
+                    op: OpSpec::BatchMatmul { b: 2, m: 4, n: 4, k: 4 },
+                    code: ErrorCode::Unscorable,
+                    detail: "no lowering".into(),
+                },
+            ],
+        };
+        let line = r.encode();
+        assert_eq!(Response::decode(&line).unwrap(), r, "mangled: {line}");
+    }
+
+    #[test]
+    fn metrics_exchange_roundtrips_multiline_text() {
+        let req = Request::Metrics;
+        assert_eq!(Request::decode(&req.encode()).unwrap(), req);
+        let r = Response::Metrics {
+            text: "# HELP x y\n# TYPE x counter\nx{target=\"graviton2\"} 3\n".into(),
+        };
+        let line = r.encode();
+        assert!(!line.contains('\n'), "metrics response spans wire lines: {line}");
+        assert_eq!(Response::decode(&line).unwrap(), r, "mangled: {line}");
     }
 
     #[test]
@@ -631,6 +920,12 @@ mod tests {
             ),
             (
                 r#"{"cmd":"tune","target":"graviton2","op":{"kind":"dense","m":1,"n":2}}"#,
+                ErrorCode::UnknownOp,
+            ),
+            (r#"{"cmd":"tune_net","target":"graviton2"}"#, ErrorCode::BadRequest),
+            (r#"{"cmd":"tune_net","target":"graviton2","ops":[]}"#, ErrorCode::BadRequest),
+            (
+                r#"{"cmd":"tune_net","target":"graviton2","ops":[{"kind":"dense","m":1,"n":2,"k":3},{"kind":"sparse"}]}"#,
                 ErrorCode::UnknownOp,
             ),
             (r#"{"cmd":"recalibrate","target":"graviton2"}"#, ErrorCode::BadRequest),

@@ -134,9 +134,35 @@ fn sharded_tune_merge_serve_query_across_process_boundaries() {
     );
     assert!(tuned.contains("\"evaluations\":0"), "served query evaluated: {tuned}");
 
+    // the whole network in one batched tune_net exchange: every op is
+    // covered by the merged cache, so the batch is all hits and exit 0
+    let mut args = vec![
+        "query",
+        "--port",
+        port_s.as_str(),
+        "--target",
+        "graviton2",
+        "--net",
+        "bert_base",
+    ];
+    args.extend(ES_FLAGS);
+    let batched = run_ok(&args);
+    assert!(batched.contains("\"type\":\"tuned_net\""), "not a batch response: {batched}");
+    assert!(!batched.contains("\"cache_hit\":false"), "batched query searched: {batched}");
+    assert!(!batched.contains("\"ok\":false"), "an op inside the batch failed: {batched}");
+
     // the daemon performed zero searches for it
     let stats = run_ok(&["query", "--port", port_s.as_str(), "--stats"]);
     assert!(stats.contains("\"searches\":0"), "daemon searched: {stats}");
+
+    // the metrics exposition is scrape-shaped on stdout and counted the
+    // traffic above (2 tunes... counting is exact-tested in serve_e2e)
+    let metrics = run_ok(&["query", "--port", port_s.as_str(), "--metrics"]);
+    assert!(
+        metrics.contains("# TYPE tuna_serve_requests_total counter"),
+        "not an exposition: {metrics}"
+    );
+    assert!(metrics.contains("tuna_serve_requests_total{cmd=\"tune_net\"} 1"), "{metrics}");
 
     // a target the daemon does not serve is a clean non-zero exit
     let unserved = Command::new(bin())

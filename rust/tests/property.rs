@@ -5,7 +5,7 @@
 use std::collections::BTreeMap;
 use tuna::isa::TargetKind;
 use tuna::isets::{Affine, StridedSet};
-use tuna::serve::protocol::{ErrorCode, Request, Response, TargetStats, TuneParams};
+use tuna::serve::protocol::{ErrorCode, OpOutcome, Request, Response, TargetStats, TuneParams};
 use tuna::tir::ops::OpSpec;
 use tuna::transform;
 use tuna::transform::ScheduleConfig;
@@ -287,18 +287,24 @@ fn random_params(rng: &mut Rng) -> TuneParams {
 }
 
 fn random_request(rng: &mut Rng) -> Request {
-    match rng.below(5) {
+    match rng.below(7) {
         0 => Request::Tune {
             target: random_target(rng),
             op: random_op(rng),
             params: if rng.below(2) == 0 { None } else { Some(random_params(rng)) },
         },
-        1 => Request::Stats,
-        2 => Request::Recalibrate {
+        1 => Request::TuneNet {
+            target: random_target(rng),
+            ops: (0..1 + rng.below(6)).map(|_| random_op(rng)).collect(),
+            params: if rng.below(2) == 0 { None } else { Some(random_params(rng)) },
+        },
+        2 => Request::Stats,
+        3 => Request::Metrics,
+        4 => Request::Recalibrate {
             target: random_target(rng),
             coeffs: (0..rng.below(9)).map(|_| rng.f64() * 4.0 - 2.0).collect(),
         },
-        3 => Request::Save { path: random_string(rng) },
+        5 => Request::Save { path: random_string(rng) },
         _ => Request::Shutdown,
     }
 }
@@ -315,8 +321,29 @@ fn random_stats(rng: &mut Rng) -> TargetStats {
     }
 }
 
+fn random_outcome(rng: &mut Rng) -> OpOutcome {
+    if rng.below(4) == 0 {
+        OpOutcome::Failed {
+            op: random_op(rng),
+            code: ErrorCode::ALL[rng.below(ErrorCode::ALL.len())],
+            detail: random_string(rng),
+        }
+    } else {
+        OpOutcome::Tuned {
+            op: random_op(rng),
+            config: ScheduleConfig {
+                choices: (0..rng.below(7)).map(|_| rng.below(16)).collect(),
+            },
+            predicted_cost: rng.f64() * 1e6,
+            latency_s: rng.f64(),
+            cache_hit: rng.below(2) == 0,
+            evaluations: rng.below(1_000_000) as u64,
+        }
+    }
+}
+
 fn random_response(rng: &mut Rng) -> Response {
-    match rng.below(6) {
+    match rng.below(8) {
         0 => Response::Tuned {
             target: random_target(rng),
             op: random_op(rng),
@@ -327,6 +354,19 @@ fn random_response(rng: &mut Rng) -> Response {
             latency_s: rng.f64(),
             cache_hit: rng.below(2) == 0,
             evaluations: rng.below(1_000_000) as u64,
+        },
+        6 => Response::TunedNet {
+            target: random_target(rng),
+            results: (0..rng.below(5)).map(|_| random_outcome(rng)).collect(),
+        },
+        // multi-line Prometheus text with label quotes and backslashes —
+        // worst case for the line-oriented escaper
+        7 => Response::Metrics {
+            text: format!(
+                "# HELP x y\n# TYPE x counter\nx{{t=\"{}\"}} {}\n",
+                random_string(rng),
+                rng.below(1_000_000)
+            ),
         },
         1 => {
             let mut targets = BTreeMap::new();

@@ -305,6 +305,190 @@ fn malformed_input_gets_typed_errors_and_the_connection_survives() {
 }
 
 #[test]
+fn concurrent_warm_hammer_on_one_target_is_bit_identical_and_exactly_counted() {
+    // the contention-audit acceptance test: many client threads hammering
+    // one warm target must all get byte-identical answers (shared read
+    // path, no LRU cross-talk) and the counters must come out exact
+    let cfg = ServeConfig { threads: 4, ..base_config() };
+    let (addr, daemon) = start_daemon(cfg);
+    let op = OpSpec::Matmul { m: 40, n: 40, k: 20 };
+
+    // warm the op: exactly one search, one miss
+    let mut client = Client::connect(addr);
+    let reference = client.tune(TargetKind::Graviton2, op);
+    assert!(matches!(reference, Response::Tuned { cache_hit: false, .. }), "{reference:?}");
+
+    const THREADS: usize = 8;
+    const PER_THREAD: usize = 10;
+    std::thread::scope(|s| {
+        for _ in 0..THREADS {
+            let want = &reference;
+            s.spawn(move || {
+                let mut c = Client::connect(addr);
+                for _ in 0..PER_THREAD {
+                    let got = c.tune(TargetKind::Graviton2, op);
+                    let (Response::Tuned { config, predicted_cost, latency_s, cache_hit, .. },
+                         Response::Tuned {
+                             config: wc,
+                             predicted_cost: wp,
+                             latency_s: wl,
+                             ..
+                         }) = (&got, want)
+                    else {
+                        panic!("hammer tune failed: {got:?}");
+                    };
+                    assert!(*cache_hit, "warm hammer missed the cache");
+                    assert_eq!(config, wc, "concurrent hit changed the schedule");
+                    assert_eq!(predicted_cost, wp, "concurrent hit re-scored");
+                    assert_eq!(latency_s, wl, "deployed-latency memo disagreed");
+                }
+            });
+        }
+    });
+
+    let stats = client.stats_for(TargetKind::Graviton2);
+    assert_eq!(stats.searches, 1, "a warm hit searched");
+    assert_eq!(stats.misses, 1);
+    assert_eq!(stats.hits, (THREADS * PER_THREAD) as u64, "hit counter lost updates");
+    assert_eq!(stats.entries, 1);
+
+    client.shutdown();
+    daemon.join().unwrap();
+}
+
+#[test]
+fn tune_net_over_the_socket_matches_single_op_tuning_and_fills_the_cache() {
+    use tuna::serve::protocol::OpOutcome;
+    let (addr, daemon) = start_daemon(base_config());
+    let mut client = Client::connect(addr);
+    let ops = vec![
+        OpSpec::Matmul { m: 32, n: 32, k: 32 },
+        OpSpec::Matmul { m: 64, n: 48, k: 16 },
+        OpSpec::BatchMatmul { b: 4, m: 16, n: 16, k: 16 },
+    ];
+
+    let batch = Request::TuneNet {
+        target: TargetKind::Graviton2,
+        ops: ops.clone(),
+        params: Some(tiny_params()),
+    };
+    let resp = client.send(&batch);
+    let Response::TunedNet { target, results } = resp else { panic!("{resp:?}") };
+    assert_eq!(target, TargetKind::Graviton2);
+    assert_eq!(results.len(), ops.len());
+    for (i, r) in results.iter().enumerate() {
+        let OpOutcome::Tuned { op, cache_hit, evaluations, .. } = r else {
+            panic!("ops[{i}] failed: {r:?}")
+        };
+        assert_eq!(*op, ops[i], "batch results out of request order");
+        assert!(!cache_hit, "cold batch claimed a hit");
+        assert!(*evaluations > 0);
+    }
+    let stats = client.stats_for(TargetKind::Graviton2);
+    assert_eq!(stats.searches, ops.len() as u64);
+
+    // the batch filled the same cache the single-op path reads: each op
+    // re-tuned individually is a hit, bit-identical to its batch outcome
+    for (i, r) in results.iter().enumerate() {
+        let OpOutcome::Tuned { config, predicted_cost, latency_s, .. } = r else {
+            unreachable!()
+        };
+        let single = client.tune(TargetKind::Graviton2, ops[i]);
+        let Response::Tuned {
+            cache_hit,
+            config: sc,
+            predicted_cost: sp,
+            latency_s: sl,
+            ..
+        } = single
+        else {
+            panic!("single re-tune of ops[{i}] failed")
+        };
+        assert!(cache_hit, "ops[{i}]: batch did not warm the cache");
+        assert_eq!(&sc, config, "ops[{i}]: single path diverged from batch");
+        assert_eq!(sp, *predicted_cost);
+        assert_eq!(sl, *latency_s, "ops[{i}]: deployed latency diverged");
+    }
+    assert_eq!(
+        client.stats_for(TargetKind::Graviton2).searches,
+        ops.len() as u64,
+        "re-tunes after the batch searched"
+    );
+
+    // one bad op inside a batch: its slot fails, batch-mates still tune
+    let mixed = client.send_raw(
+        r#"{"cmd":"tune_net","target":"graviton2","ops":[{"kind":"dense","m":8,"n":8,"k":8},{"kind":"dense","m":0,"n":8,"k":8}]}"#,
+    );
+    match mixed {
+        // decode-level rejection of the whole batch is also acceptable
+        // only if typed; what must never happen is a dropped connection
+        Response::Error { code, .. } => assert_eq!(code, ErrorCode::UnknownOp),
+        Response::TunedNet { results, .. } => {
+            assert_eq!(results.len(), 2);
+            assert!(matches!(results[0], OpOutcome::Tuned { .. }));
+            assert!(matches!(results[1], OpOutcome::Failed { .. }));
+        }
+        other => panic!("{other:?}"),
+    }
+
+    client.shutdown();
+    daemon.join().unwrap();
+}
+
+#[test]
+fn metrics_exposition_over_the_socket_counts_traffic_exactly() {
+    let (addr, daemon) = start_daemon(base_config());
+    let mut client = Client::connect(addr);
+    let op = OpSpec::Matmul { m: 24, n: 24, k: 24 };
+
+    // known traffic: 2 tunes (1 miss + 1 hit), 1 batch of the same op
+    // (1 more hit), 1 garbage line, 1 stats
+    assert!(matches!(
+        client.tune(TargetKind::Graviton2, op),
+        Response::Tuned { cache_hit: false, .. }
+    ));
+    assert!(matches!(
+        client.tune(TargetKind::Graviton2, op),
+        Response::Tuned { cache_hit: true, .. }
+    ));
+    let batch = client.send(&Request::TuneNet {
+        target: TargetKind::Graviton2,
+        ops: vec![op],
+        params: Some(tiny_params()),
+    });
+    assert!(matches!(batch, Response::TunedNet { .. }), "{batch:?}");
+    assert!(matches!(
+        client.send_raw("not json"),
+        Response::Error { code: ErrorCode::Parse, .. }
+    ));
+    let _ = client.stats_for(TargetKind::Graviton2);
+
+    let resp = client.send(&Request::Metrics);
+    let Response::Metrics { text } = resp else { panic!("{resp:?}") };
+    for want in [
+        "# TYPE tuna_serve_requests_total counter",
+        "tuna_serve_requests_total{cmd=\"tune\"} 2",
+        "tuna_serve_requests_total{cmd=\"tune_net\"} 1",
+        "tuna_serve_requests_total{cmd=\"stats\"} 1",
+        "tuna_serve_requests_total{cmd=\"metrics\"} 1",
+        "tuna_serve_errors_total{code=\"parse\"} 1",
+        "tuna_serve_ops_total{target=\"graviton2\"} 3",
+        "tuna_serve_op_cache_hits_total{target=\"graviton2\"} 2",
+        "tuna_serve_op_cache_misses_total{target=\"graviton2\"} 1",
+        "# TYPE tuna_serve_op_seconds histogram",
+        "tuna_serve_op_seconds_bucket{target=\"graviton2\",le=\"+Inf\"} 3",
+        "tuna_serve_op_seconds_count{target=\"graviton2\"} 3",
+        "tuna_cache_entries{target=\"graviton2\"} 1",
+        "tuna_searches_total{target=\"graviton2\"} 1",
+    ] {
+        assert!(text.contains(want), "missing {want:?} in exposition:\n{text}");
+    }
+
+    client.shutdown();
+    daemon.join().unwrap();
+}
+
+#[test]
 fn concurrent_tunes_on_different_targets_both_succeed() {
     let cfg = ServeConfig {
         targets: vec![TargetKind::Graviton2, TargetKind::CortexA53],
