@@ -13,12 +13,13 @@
 use tuna::coordinator::{calibrate, Coordinator, Strategy};
 use tuna::isa::TargetKind;
 use tuna::search::EsParams;
-use tuna::tir::ops::OpSpec;
+use tuna::tir::ops::{Epilogue, OpSpec};
 use tuna::util::stats::spearman;
 
 fn main() {
     let op = OpSpec::Conv2d {
         n: 1, cin: 128, h: 28, w: 28, cout: 128, kh: 3, kw: 3, stride: 1, pad: 1,
+        epilogue: Epilogue::None,
     };
     println!("cross-compiling {op} for every target from this host\n");
     println!(

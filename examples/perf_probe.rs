@@ -1,16 +1,22 @@
 // quick hot-path probe
 use std::time::Instant;
 use tuna::isa::TargetKind;
-use tuna::tir::ops::OpSpec;
+use tuna::tir::ops::{Epilogue, OpSpec};
 use tuna::sim::Device;
 
 fn main() {
     let kind = TargetKind::Graviton2;
     let cm = tuna::analysis::CostModel::with_default_coeffs(kind);
     let ops = [
-        OpSpec::Matmul { m: 256, n: 256, k: 256 },
-        OpSpec::Conv2d { n:1, cin:64, h:56, w:56, cout:64, kh:3, kw:3, stride:1, pad:1 },
-        OpSpec::DepthwiseConv2d { n:1, c:96, h:112, w:112, kh:3, kw:3, stride:2, pad:1 },
+        OpSpec::Matmul { m: 256, n: 256, k: 256, epilogue: Epilogue::None },
+        OpSpec::Conv2d {
+            n: 1, cin: 64, h: 56, w: 56, cout: 64, kh: 3, kw: 3, stride: 1, pad: 1,
+            epilogue: Epilogue::None,
+        },
+        OpSpec::DepthwiseConv2d {
+            n: 1, c: 96, h: 112, w: 112, kh: 3, kw: 3, stride: 2, pad: 1,
+            epilogue: Epilogue::None,
+        },
     ];
     for op in &ops {
         let space = tuna::transform::config_space(op, kind);

@@ -1,10 +1,10 @@
 use std::time::Instant;
 use tuna::isa::TargetKind;
-use tuna::tir::ops::OpSpec;
+use tuna::tir::ops::{Epilogue, OpSpec};
 
 fn main() {
     let kind = TargetKind::Graviton2;
-    let op = OpSpec::Matmul { m: 256, n: 256, k: 256 };
+    let op = OpSpec::Matmul { m: 256, n: 256, k: 256, epilogue: Epilogue::None };
     let space = tuna::transform::config_space(&op, kind);
     let cfg = space.from_index(9);
     let f = tuna::transform::apply(&op, kind, &cfg);

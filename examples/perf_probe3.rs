@@ -1,11 +1,14 @@
 use std::time::Instant;
 use tuna::isa::TargetKind;
-use tuna::tir::ops::OpSpec;
+use tuna::tir::ops::{Epilogue, OpSpec};
 fn main() {
     let kind = TargetKind::XeonPlatinum8124M;
     for op in [
         OpSpec::Conv2dWinograd { n:1, cin:64, h:56, w:56, cout:64 },
-        OpSpec::Conv2d { n:1, cin:64, h:56, w:56, cout:64, kh:3, kw:3, stride:1, pad:1 },
+        OpSpec::Conv2d {
+            n: 1, cin: 64, h: 56, w: 56, cout: 64, kh: 3, kw: 3, stride: 1, pad: 1,
+            epilogue: Epilogue::None,
+        },
     ] {
         let cm = tuna::analysis::CostModel::with_default_coeffs(kind);
         let space = tuna::transform::config_space(&op, kind);

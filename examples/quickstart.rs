@@ -12,11 +12,12 @@
 use tuna::coordinator::{Coordinator, Strategy};
 use tuna::isa::TargetKind;
 use tuna::search::EsParams;
-use tuna::tir::ops::OpSpec;
+use tuna::tir::ops::{Epilogue, OpSpec};
 
 fn main() {
     let op = OpSpec::Conv2d {
         n: 1, cin: 64, h: 56, w: 56, cout: 64, kh: 3, kw: 3, stride: 1, pad: 1,
+        epilogue: Epilogue::None,
     };
     let target = TargetKind::Graviton2;
 

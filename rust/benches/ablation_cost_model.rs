@@ -27,7 +27,7 @@ use tuna::eval::CandidateEvaluator;
 use tuna::isa::TargetKind;
 use tuna::search::{self, EsParams, EvolutionStrategies};
 use tuna::sim::Device;
-use tuna::tir::ops::OpSpec;
+use tuna::tir::ops::{Epilogue, OpSpec};
 use tuna::transform::ScheduleConfig;
 use tuna::util::stats::spearman;
 
@@ -51,9 +51,15 @@ fn main() {
     let kind = TargetKind::Graviton2;
     let device = Device::new(kind);
     let ops = [
-        OpSpec::Matmul { m: 128, n: 128, k: 128 },
-        OpSpec::Conv2d { n: 1, cin: 32, h: 28, w: 28, cout: 32, kh: 3, kw: 3, stride: 1, pad: 1 },
-        OpSpec::DepthwiseConv2d { n: 1, c: 48, h: 28, w: 28, kh: 3, kw: 3, stride: 1, pad: 1 },
+        OpSpec::Matmul { m: 128, n: 128, k: 128, epilogue: Epilogue::None },
+        OpSpec::Conv2d {
+            n: 1, cin: 32, h: 28, w: 28, cout: 32, kh: 3, kw: 3, stride: 1, pad: 1,
+            epilogue: Epilogue::None,
+        },
+        OpSpec::DepthwiseConv2d {
+            n: 1, c: 48, h: 28, w: 28, kh: 3, kw: 3, stride: 1, pad: 1,
+            epilogue: Epilogue::None,
+        },
     ];
 
     // one evaluator holds the calibrated scorer and the shared feature store

@@ -1,0 +1,170 @@
+//! Fusion-speedup bench — the graph-level epilogue-fusion acceptance
+//! numbers: each paper network is deployed twice on the same coordinator,
+//! once with fused candidates offered (the default `all_networks` form)
+//! and once fusion-forbidden (`fuse::strip`), and every layer decides
+//! fused-vs-unfused by measured latency. The stripped run goes first, so
+//! the fused run serves every unfused task from the cache — the two
+//! deployments price shared tasks identically and the delta is purely
+//! the fusion decisions. Writes `BENCH_fusion.json` at the repo root.
+//!
+//! ```bash
+//! cargo bench --bench fusion_speedup
+//! TUNA_BENCH_FAST=1 TUNA_BENCH_NETS=bert_base cargo bench --bench fusion_speedup
+//! ```
+
+mod common;
+
+use std::collections::BTreeMap;
+
+use tuna::coordinator::{Coordinator, NetworkReport, Strategy};
+use tuna::graph::{fuse, EpilogueTask, Network};
+use tuna::isa::TargetKind;
+use tuna::tir::ops::Epilogue;
+use tuna::util::json::Json;
+
+struct Row {
+    network: &'static str,
+    unfused_s: f64,
+    fused_s: f64,
+    speedup: f64,
+    layers_fused: usize,
+    layers_fusable: usize,
+    layers_total: usize,
+}
+
+/// Recompute the per-layer deployment decisions exactly the way
+/// `Network::latency` makes them: min over viable alternatives, with
+/// unfused ones charged the measured standalone epilogue pass. Returns
+/// (layers deployed fused, layers that declare a fusable tail).
+fn fused_layer_count(c: &Coordinator, net: &Network, rep: &NetworkReport) -> (usize, usize) {
+    let mut task_latency: BTreeMap<String, f64> =
+        rep.per_op.iter().map(|(k, r)| (k.clone(), r.latency_s)).collect();
+    for t in net.epilogue_tasks() {
+        task_latency.insert(t.key.clone(), c.device.run_epilogue(&t).seconds);
+    }
+    let mut fused = 0usize;
+    let mut fusable = 0usize;
+    for l in &net.layers {
+        if l.epilogue == Epilogue::None {
+            continue;
+        }
+        fusable += 1;
+        let pass = EpilogueTask::for_layer(l).and_then(|t| task_latency.get(&t.key).copied());
+        let mut best = f64::MAX;
+        let mut best_fused = false;
+        for op in &l.alternatives {
+            let Some(&own) = task_latency.get(&op.cache_key()) else { continue };
+            let cost = if op.epilogue() == l.epilogue {
+                own
+            } else if op.epilogue() == Epilogue::None {
+                match pass {
+                    Some(p) => own + p,
+                    None => continue,
+                }
+            } else {
+                continue;
+            };
+            if cost < best {
+                best = cost;
+                best_fused = op.is_fused();
+            }
+        }
+        fused += best_fused as usize;
+    }
+    (fused, fusable)
+}
+
+fn main() {
+    let kind = match std::env::var("TUNA_BENCH_TARGETS") {
+        Ok(s) => *tuna::config::parse_targets(&s)
+            .expect("TUNA_BENCH_TARGETS")
+            .first()
+            .expect("TUNA_BENCH_TARGETS is empty"),
+        Err(_) => TargetKind::Graviton2,
+    };
+    let c = Coordinator::new_uncalibrated(kind);
+    let strategy = Strategy::TunaStatic(common::es_params());
+
+    println!(
+        "## Fusion speedup on {} (per-layer deploy by measured latency)\n",
+        kind.display_name()
+    );
+    println!(
+        "{:<16} {:>12} {:>12} {:>9} {:>14}",
+        "network", "unfused ms", "fused ms", "speedup", "layers fused"
+    );
+    let mut rows = Vec::new();
+    for net in common::networks() {
+        // fusion-forbidden baseline first: the fused run below then hits
+        // the cache for every shared unfused task
+        let stripped = fuse::strip(&net);
+        let unfused = c.tune_network(&stripped, &strategy);
+        let fused_rep = c.tune_network(&net, &strategy);
+        assert!(
+            fused_rep.latency_s <= unfused.latency_s + 1e-12,
+            "{}: offering fused candidates made deployment slower",
+            net.name
+        );
+        let (layers_fused, layers_fusable) = fused_layer_count(&c, &net, &fused_rep);
+        let speedup = unfused.latency_s / fused_rep.latency_s;
+        println!(
+            "{:<16} {:>12.3} {:>12.3} {:>8.3}x {:>11}/{}",
+            net.name,
+            unfused.latency_s * 1e3,
+            fused_rep.latency_s * 1e3,
+            speedup,
+            layers_fused,
+            layers_fusable
+        );
+        rows.push(Row {
+            network: net.name,
+            unfused_s: unfused.latency_s,
+            fused_s: fused_rep.latency_s,
+            speedup,
+            layers_fused,
+            layers_fusable,
+            layers_total: net.layers.len(),
+        });
+    }
+
+    // the PR's acceptance bar, checked whenever the full set runs
+    if rows.len() == 4 {
+        let faster = rows.iter().filter(|r| r.speedup > 1.0).count();
+        assert!(faster >= 2, "fused deployment strictly faster on only {faster}/4 networks");
+    }
+
+    let networks = Json::Arr(
+        rows.iter()
+            .map(|r| {
+                Json::obj(vec![
+                    ("network", Json::Str(r.network.into())),
+                    ("unfused_latency_s", Json::Num(r.unfused_s)),
+                    ("fused_latency_s", Json::Num(r.fused_s)),
+                    ("speedup", Json::Num(r.speedup)),
+                    ("layers_fused", Json::Num(r.layers_fused as f64)),
+                    ("layers_fusable", Json::Num(r.layers_fusable as f64)),
+                    ("layers_total", Json::Num(r.layers_total as f64)),
+                ])
+            })
+            .collect(),
+    );
+    let doc = Json::obj(vec![
+        ("bench", Json::Str("fusion_speedup".into())),
+        ("target", Json::Str(kind.wire_name().into())),
+        (
+            "provenance",
+            Json::Str(
+                "measured by `cargo bench --bench fusion_speedup`; regenerate in place \
+                 with the same command (the CI fusion smoke step runs the \
+                 TUNA_BENCH_FAST=1 TUNA_BENCH_NETS=bert_base form and validates the \
+                 schema)"
+                    .into(),
+            ),
+        ),
+        ("networks", networks),
+    ]);
+    let mut text = doc.to_string();
+    text.push('\n');
+    std::fs::write("BENCH_fusion.json", text).expect("write BENCH_fusion.json");
+    println!("\nwrote BENCH_fusion.json");
+}

@@ -358,11 +358,49 @@ fn default_coeffs(target: &Target) -> Vec<f64> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::tir::ops::Epilogue;
+
+    /// Fusion accounting: features come from the actual lowered TIR, so a
+    /// fused op's vector includes the in-tile tail, while the unfused
+    /// deployment would additionally pay a standalone pass that re-reads
+    /// the whole intermediate tensor. The fused memory-traffic feature
+    /// must undercut that sum — the saved round-trip, made visible to the
+    /// linear model.
+    #[test]
+    fn fused_epilogue_saves_intermediate_traffic() {
+        let kind = TargetKind::Graviton2;
+        let Target::Cpu(march) = kind.build() else { unreachable!("graviton2 is a CPU") };
+        let base = OpSpec::Matmul { m: 64, n: 64, k: 64, epilogue: Epilogue::None };
+        let fused = base.with_epilogue(Epilogue::BiasRelu).unwrap();
+        let ex = FeatureExtractor::new(kind);
+        let cfg = transform::config_space(&base, kind).default_config();
+        let fv_base = ex.features(&base, &cfg);
+        let fv_fused = ex.features(&fused, &cfg);
+        assert_ne!(fv_base, fv_fused, "tail invisible to feature extraction");
+
+        let pass = transform::templates::epilogue_standalone(
+            Epilogue::BiasRelu,
+            64 * 64,
+            64,
+            kind,
+        );
+        let prog = codegen::lower_cpu(&pass, &march);
+        let fv_pass = extract_cpu(&pass, &prog, &march);
+        let miss = |fv: &FeatureVector| fv.values[5]; // l1_dmov_lines
+        assert!(miss(&fv_pass) > 0.0, "standalone pass costs no memory traffic");
+        assert!(
+            miss(&fv_fused) < miss(&fv_base) + miss(&fv_pass),
+            "fusion saved no intermediate-tensor traffic: fused {} vs {} + {}",
+            miss(&fv_fused),
+            miss(&fv_base),
+            miss(&fv_pass)
+        );
+    }
 
     #[test]
     fn cpu_features_have_fixed_dim() {
         let cm = CostModel::with_default_coeffs(TargetKind::XeonPlatinum8124M);
-        let op = OpSpec::Matmul { m: 64, n: 64, k: 64 };
+        let op = OpSpec::Matmul { m: 64, n: 64, k: 64, epilogue: Epilogue::None };
         let space = transform::config_space(&op, cm.kind());
         let fv = cm.features(&op, &space.default_config());
         assert_eq!(fv.dim(), CPU_FEATURES.len());
@@ -373,7 +411,7 @@ mod tests {
     #[test]
     fn gpu_features_have_fixed_dim() {
         let cm = CostModel::with_default_coeffs(TargetKind::TeslaV100);
-        let op = OpSpec::Matmul { m: 128, n: 128, k: 64 };
+        let op = OpSpec::Matmul { m: 128, n: 128, k: 64, epilogue: Epilogue::None };
         let space = transform::config_space(&op, cm.kind());
         let fv = cm.features(&op, &space.default_config());
         assert_eq!(fv.dim(), GPU_FEATURES.len());
@@ -384,7 +422,7 @@ mod tests {
     #[test]
     fn score_positive_and_discriminative() {
         let cm = CostModel::with_default_coeffs(TargetKind::Graviton2);
-        let op = OpSpec::Matmul { m: 128, n: 128, k: 128 };
+        let op = OpSpec::Matmul { m: 128, n: 128, k: 128, epilogue: Epilogue::None };
         let space = transform::config_space(&op, cm.kind());
         let mut scores = Vec::new();
         for idx in 0..space.size().min(64) {
@@ -404,7 +442,7 @@ mod tests {
             let cm = CostModel::with_default_coeffs(kind);
             let extractor = FeatureExtractor::new(kind);
             let scorer = LinearScorer::new(cm.coeffs().to_vec());
-            let op = OpSpec::Matmul { m: 64, n: 64, k: 32 };
+            let op = OpSpec::Matmul { m: 64, n: 64, k: 32, epilogue: Epilogue::None };
             let space = transform::config_space(&op, kind);
             for i in 0..space.size().min(16) {
                 let cfg = space.from_index(i);
@@ -425,7 +463,7 @@ mod tests {
     fn calibration_improves_or_keeps_fit() {
         let mut cm = CostModel::with_default_coeffs(TargetKind::Graviton2);
         // synthetic ground truth: 2*f0 + 10*f5
-        let op = OpSpec::Matmul { m: 32, n: 32, k: 32 };
+        let op = OpSpec::Matmul { m: 32, n: 32, k: 32, epilogue: Epilogue::None };
         let space = transform::config_space(&op, cm.kind());
         let mut samples = Vec::new();
         for idx in 0..space.size().min(40) {

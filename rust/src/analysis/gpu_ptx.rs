@@ -147,7 +147,7 @@ mod tests {
     use crate::codegen;
     use crate::isa::march::tesla_v100;
     use crate::isa::TargetKind;
-    use crate::tir::ops::OpSpec;
+    use crate::tir::ops::{Epilogue, OpSpec};
     use crate::transform;
 
     fn analyze_default(op: &OpSpec) -> (crate::tir::TirFunc, PtxAnalysis) {
@@ -165,7 +165,7 @@ mod tests {
     #[test]
     fn recovered_fma_totals_match_ir() {
         for op in [
-            OpSpec::Matmul { m: 128, n: 128, k: 64 },
+            OpSpec::Matmul { m: 128, n: 128, k: 64, epilogue: Epilogue::None },
             OpSpec::BatchMatmul { b: 4, m: 64, n: 64, k: 32 },
         ] {
             let t = TargetKind::TeslaV100;
@@ -188,7 +188,8 @@ mod tests {
 
     #[test]
     fn loop_iterations_recovered_from_registers() {
-        let (_, a) = analyze_default(&OpSpec::Matmul { m: 128, n: 128, k: 64 });
+        let (_, a) =
+            analyze_default(&OpSpec::Matmul { m: 128, n: 128, k: 64, epilogue: Epilogue::None });
         // the serial ko loop (k/KS) must be recovered with correct trip
         assert!(!a.loops.is_empty());
         assert!(a.loops.iter().any(|l| l.iterations > 1), "{:?}", a.loops);
@@ -196,8 +197,10 @@ mod tests {
 
     #[test]
     fn thread_cycles_positive_and_scaled() {
-        let (_, small) = analyze_default(&OpSpec::Matmul { m: 64, n: 64, k: 32 });
-        let (_, big) = analyze_default(&OpSpec::Matmul { m: 64, n: 64, k: 256 });
+        let (_, small) =
+            analyze_default(&OpSpec::Matmul { m: 64, n: 64, k: 32, epilogue: Epilogue::None });
+        let (_, big) =
+            analyze_default(&OpSpec::Matmul { m: 64, n: 64, k: 256, epilogue: Epilogue::None });
         assert!(small.thread_cycles > 0.0);
         // same default tile -> more K means more per-thread work
         assert!(big.thread_cycles > small.thread_cycles);

@@ -182,7 +182,7 @@ mod tests {
     use crate::codegen;
     use crate::isa::march::tesla_v100;
     use crate::isa::TargetKind;
-    use crate::tir::ops::OpSpec;
+    use crate::tir::ops::{Epilogue, OpSpec};
     use crate::transform;
 
     fn features(op: &OpSpec, cfg_idx: u64) -> TlpFeatures {
@@ -197,7 +197,7 @@ mod tests {
 
     #[test]
     fn occupancy_in_unit_range() {
-        let t = features(&OpSpec::Matmul { m: 256, n: 256, k: 64 }, 0);
+        let t = features(&OpSpec::Matmul { m: 256, n: 256, k: 64, epilogue: Epilogue::None }, 0);
         assert!(t.occupancy > 0.0 && t.occupancy <= 1.0);
         assert!(t.blocks_per_sm >= 1);
         assert!(t.waves >= 1.0);
@@ -206,13 +206,13 @@ mod tests {
     #[test]
     fn small_grid_gets_starvation_penalty() {
         // tiny matmul -> few blocks -> starvation on 80-SM V100
-        let t = features(&OpSpec::Matmul { m: 32, n: 32, k: 32 }, 0);
+        let t = features(&OpSpec::Matmul { m: 32, n: 32, k: 32, epilogue: Epilogue::None }, 0);
         assert!(t.sm_starvation > 1.0, "starvation {}", t.sm_starvation);
     }
 
     #[test]
     fn bank_conflict_factor_at_least_one() {
-        let op = OpSpec::Matmul { m: 128, n: 128, k: 64 };
+        let op = OpSpec::Matmul { m: 128, n: 128, k: 64, epilogue: Epilogue::None };
         let space = transform::config_space(&op, TargetKind::TeslaV100);
         for idx in 0..space.size().min(12) {
             let t = features(&op, idx);
@@ -226,7 +226,7 @@ mod tests {
         // compare a config with small thread tiles (many threads/block)
         // against one with large tiles (few threads): the small-tile one
         // should stall less per memory op or equal.
-        let op = OpSpec::Matmul { m: 256, n: 256, k: 64 };
+        let op = OpSpec::Matmul { m: 256, n: 256, k: 64, epilogue: Epilogue::None };
         let space = transform::config_space(&op, TargetKind::TeslaV100);
         let mut best_stall = f64::MAX;
         let mut worst_stall: f64 = 0.0;

@@ -137,7 +137,7 @@ mod tests {
     use crate::codegen;
     use crate::isa::march::xeon_8124m;
     use crate::isa::TargetKind;
-    use crate::tir::ops::OpSpec;
+    use crate::tir::ops::{Epilogue, OpSpec};
     use crate::transform;
 
     fn setup(op: &OpSpec) -> (TirFunc, AsmProgram) {
@@ -150,7 +150,7 @@ mod tests {
 
     #[test]
     fn identifies_all_materialized_loops() {
-        let (f, prog) = setup(&OpSpec::Matmul { m: 64, n: 64, k: 64 });
+        let (f, prog) = setup(&OpSpec::Matmul { m: 64, n: 64, k: 64, epilogue: Epilogue::None });
         let materialized = f
             .preorder_loops()
             .iter()
@@ -162,7 +162,7 @@ mod tests {
 
     #[test]
     fn matched_trips_equal_extents() {
-        let (f, prog) = setup(&OpSpec::Matmul { m: 64, n: 32, k: 16 });
+        let (f, prog) = setup(&OpSpec::Matmul { m: 64, n: 32, k: 16, epilogue: Epilogue::None });
         let lm = map_loops(&f, &prog);
         assert_eq!(lm.unmatched_ir, 0);
         let extents: Vec<i64> = f
@@ -181,7 +181,7 @@ mod tests {
     #[test]
     fn fma_executions_match_ir_flops() {
         for (m, n, k) in [(32, 32, 32), (64, 32, 16), (128, 64, 64)] {
-            let (f, prog) = setup(&OpSpec::Matmul { m, n, k });
+            let (f, prog) = setup(&OpSpec::Matmul { m, n, k, epilogue: Epilogue::None });
             let lm = map_loops(&f, &prog);
             let lanes = 16u64; // avx-512 f32
             let vfma = lm.count_instrs(&prog, |i| i.op == Opcode::VFma);
@@ -199,6 +199,7 @@ mod tests {
     fn conv_fma_executions_match() {
         let op = OpSpec::Conv2d {
             n: 1, cin: 8, h: 14, w: 14, cout: 16, kh: 3, kw: 3, stride: 1, pad: 1,
+            epilogue: Epilogue::None,
         };
         let t = TargetKind::XeonPlatinum8124M;
         let space = transform::config_space(&op, t);

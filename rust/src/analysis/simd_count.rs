@@ -74,12 +74,12 @@ mod tests {
     use crate::codegen;
     use crate::isa::march::xeon_8124m;
     use crate::isa::TargetKind;
-    use crate::tir::ops::OpSpec;
+    use crate::tir::ops::{Epilogue, OpSpec};
     use crate::transform;
 
     #[test]
     fn vectorized_config_prefers_vector_ops() {
-        let op = OpSpec::Matmul { m: 64, n: 64, k: 64 };
+        let op = OpSpec::Matmul { m: 64, n: 64, k: 64, epilogue: Epilogue::None };
         let t = TargetKind::XeonPlatinum8124M;
         let space = transform::config_space(&op, t);
         // find configs: tile_n = 1 (scalar) vs tile_n = 16 (vector)

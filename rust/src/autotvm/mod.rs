@@ -163,10 +163,11 @@ fn propose_sa(
 mod tests {
     use super::*;
     use crate::isa::TargetKind;
+    use crate::tir::ops::Epilogue;
 
     #[test]
     fn tuner_finds_good_schedule_and_charges_device_time() {
-        let op = OpSpec::Matmul { m: 64, n: 64, k: 64 };
+        let op = OpSpec::Matmul { m: 64, n: 64, k: 64, epilogue: Epilogue::None };
         let kind = TargetKind::Graviton2;
         let space = crate::transform::config_space(&op, kind);
         let device = Device::new(kind);
@@ -191,7 +192,7 @@ mod tests {
 
     #[test]
     fn partial_budget_stops_early() {
-        let op = OpSpec::Matmul { m: 64, n: 64, k: 64 };
+        let op = OpSpec::Matmul { m: 64, n: 64, k: 64, epilogue: Epilogue::None };
         let kind = TargetKind::Graviton2;
         let space = crate::transform::config_space(&op, kind);
         let device = Device::new(kind);
@@ -215,7 +216,7 @@ mod tests {
 
     #[test]
     fn exhausts_tiny_spaces_gracefully() {
-        let op = OpSpec::Matmul { m: 4, n: 4, k: 4 };
+        let op = OpSpec::Matmul { m: 4, n: 4, k: 4, epilogue: Epilogue::None };
         let kind = TargetKind::Graviton2;
         let space = crate::transform::config_space(&op, kind);
         let device = Device::new(kind);

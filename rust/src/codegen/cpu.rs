@@ -549,7 +549,7 @@ mod tests {
     use super::*;
     use crate::isa::march::xeon_8124m;
     use crate::isa::TargetKind;
-    use crate::tir::ops::OpSpec;
+    use crate::tir::ops::{Epilogue, OpSpec};
     use crate::transform;
 
     fn lower_default(op: &OpSpec) -> AsmProgram {
@@ -573,7 +573,8 @@ mod tests {
 
     #[test]
     fn matmul_emits_fma_and_loops() {
-        let prog = lower_vectorized(&OpSpec::Matmul { m: 64, n: 64, k: 64 });
+        let prog =
+            lower_vectorized(&OpSpec::Matmul { m: 64, n: 64, k: 64, epilogue: Epilogue::None });
         let fma: u64 = prog.blocks.iter().map(|b| b.count(|i| i.op == Opcode::VFma)).sum();
         assert!(fma > 0, "no vector FMAs emitted");
         // backward jumps exist (loop latches)
@@ -588,7 +589,7 @@ mod tests {
 
     #[test]
     fn unrolled_loop_leaves_no_latch() {
-        let op = OpSpec::Matmul { m: 16, n: 16, k: 16 };
+        let op = OpSpec::Matmul { m: 16, n: 16, k: 16, epilogue: Epilogue::None };
         let t = TargetKind::XeonPlatinum8124M;
         let space = transform::config_space(&op, t);
         // find a config with unroll_k=1, tile_k small
@@ -616,7 +617,8 @@ mod tests {
 
     #[test]
     fn parallel_extent_detected() {
-        let prog = lower_default(&OpSpec::Matmul { m: 128, n: 64, k: 64 });
+        let prog =
+            lower_default(&OpSpec::Matmul { m: 128, n: 64, k: 64, epilogue: Epilogue::None });
         assert!(prog.parallel_extent >= 1);
     }
 
@@ -624,7 +626,7 @@ mod tests {
     fn accumulator_promotion_reduces_stores() {
         // With promotion, store *executions* of C should be far fewer than
         // fma executions (the accumulator stays in a register across ki).
-        let op = OpSpec::Matmul { m: 32, n: 32, k: 32 };
+        let op = OpSpec::Matmul { m: 32, n: 32, k: 32, epilogue: Epilogue::None };
         let t = TargetKind::XeonPlatinum8124M;
         let s = transform::config_space(&op, t);
         let cfg = (0..s.size())
@@ -643,6 +645,7 @@ mod tests {
     fn conv_both_layouts_lower() {
         let op = OpSpec::Conv2d {
             n: 1, cin: 16, h: 14, w: 14, cout: 16, kh: 3, kw: 3, stride: 1, pad: 1,
+            epilogue: Epilogue::None,
         };
         let t = TargetKind::XeonPlatinum8124M;
         let space = transform::config_space(&op, t);
@@ -656,7 +659,7 @@ mod tests {
 
     #[test]
     fn tensors_have_disjoint_address_ranges() {
-        let prog = lower_default(&OpSpec::Matmul { m: 32, n: 32, k: 32 });
+        let prog = lower_default(&OpSpec::Matmul { m: 32, n: 32, k: 32, epilogue: Epilogue::None });
         for w in prog.tensors.windows(2) {
             let end = w[0].base_addr + (w[0].elems as u64) * w[0].elem_bytes as u64;
             assert!(end <= w[1].base_addr, "overlap between tensors");

@@ -328,7 +328,7 @@ mod tests {
     use super::*;
     use crate::isa::march::tesla_v100;
     use crate::isa::TargetKind;
-    use crate::tir::ops::OpSpec;
+    use crate::tir::ops::{Epilogue, OpSpec};
     use crate::transform;
 
     fn lower_default(op: &OpSpec) -> AsmProgram {
@@ -340,7 +340,8 @@ mod tests {
 
     #[test]
     fn gemm_has_launch_and_shared() {
-        let prog = lower_default(&OpSpec::Matmul { m: 128, n: 128, k: 64 });
+        let prog =
+            lower_default(&OpSpec::Matmul { m: 128, n: 128, k: 64, epilogue: Epilogue::None });
         let launch = prog.launch.unwrap();
         assert!(launch.threads_per_block() >= 32);
         assert!(prog.shared_bytes > 0);
@@ -351,7 +352,8 @@ mod tests {
 
     #[test]
     fn serial_loops_have_ptx_shape() {
-        let prog = lower_default(&OpSpec::Matmul { m: 128, n: 128, k: 64 });
+        let prog =
+            lower_default(&OpSpec::Matmul { m: 128, n: 128, k: 64, epilogue: Epilogue::None });
         // every backward bra has a matching setp and add on the same counter
         let mut found = false;
         for b in &prog.blocks {
@@ -376,7 +378,8 @@ mod tests {
 
     #[test]
     fn local_accumulator_emits_no_memory_ops() {
-        let prog = lower_default(&OpSpec::Matmul { m: 128, n: 128, k: 64 });
+        let prog =
+            lower_default(&OpSpec::Matmul { m: 128, n: 128, k: 64, epilogue: Epilogue::None });
         // Cl is Local: no ld/st should reference it
         let cl_idx = prog.tensors.iter().position(|t| t.name == "Cl").unwrap() as u16;
         for b in &prog.blocks {
@@ -392,6 +395,7 @@ mod tests {
     fn conv_launch_covers_output() {
         let op = OpSpec::Conv2d {
             n: 1, cin: 64, h: 56, w: 56, cout: 64, kh: 3, kw: 3, stride: 1, pad: 1,
+            epilogue: Epilogue::None,
         };
         let prog = lower_default(&op);
         let l = prog.launch.unwrap();

@@ -20,7 +20,7 @@ use crate::analysis::CostModel;
 use crate::eval::CandidateEvaluator;
 use crate::isa::TargetKind;
 use crate::sim::Device;
-use crate::tir::ops::OpSpec;
+use crate::tir::ops::{Epilogue, OpSpec};
 use crate::transform;
 use std::collections::HashMap;
 use std::sync::{Mutex, OnceLock};
@@ -29,10 +29,16 @@ use std::sync::{Mutex, OnceLock};
 /// `figure_op_suite()` and all network shapes.
 fn micro_suite() -> Vec<OpSpec> {
     vec![
-        OpSpec::Matmul { m: 48, n: 48, k: 48 },
-        OpSpec::Matmul { m: 96, n: 32, k: 96 },
-        OpSpec::Conv2d { n: 1, cin: 12, h: 20, w: 20, cout: 12, kh: 3, kw: 3, stride: 1, pad: 1 },
-        OpSpec::DepthwiseConv2d { n: 1, c: 20, h: 24, w: 24, kh: 3, kw: 3, stride: 1, pad: 1 },
+        OpSpec::Matmul { m: 48, n: 48, k: 48, epilogue: Epilogue::None },
+        OpSpec::Matmul { m: 96, n: 32, k: 96, epilogue: Epilogue::None },
+        OpSpec::Conv2d {
+            n: 1, cin: 12, h: 20, w: 20, cout: 12, kh: 3, kw: 3, stride: 1, pad: 1,
+            epilogue: Epilogue::None,
+        },
+        OpSpec::DepthwiseConv2d {
+            n: 1, c: 20, h: 24, w: 24, kh: 3, kw: 3, stride: 1, pad: 1,
+            epilogue: Epilogue::None,
+        },
         OpSpec::BatchMatmul { b: 3, m: 48, n: 48, k: 24 },
     ]
 }
@@ -138,7 +144,7 @@ mod tests {
         let cm = calibrated_model(kind);
         let device = Device::new(kind);
         // held-out op (not in the micro suite)
-        let op = OpSpec::Matmul { m: 128, n: 64, k: 64 };
+        let op = OpSpec::Matmul { m: 128, n: 64, k: 64, epilogue: Epilogue::None };
         let space = transform::config_space(&op, kind);
         let mut preds = Vec::new();
         let mut truths = Vec::new();

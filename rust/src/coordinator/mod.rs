@@ -572,6 +572,12 @@ impl Coordinator {
             cache_hits += r.cache_hit as u64;
             per_op.insert(r.op.cache_key(), r);
         }
+        // price every standalone epilogue pass an unfused deployment might
+        // need — simulated once per distinct shape, so `Network::latency`
+        // weighs fused kernels against measured (not hard-coded) pass costs
+        for t in net.epilogue_tasks() {
+            task_latency.insert(t.key.clone(), self.device.run_epilogue(&t).seconds);
+        }
         let latency_s = net.latency(&task_latency);
         NetworkReport {
             network: net.name,
@@ -656,6 +662,7 @@ impl Coordinator {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::tir::ops::Epilogue;
 
     fn tiny_es() -> EsParams {
         EsParams { population: 12, iterations: 6, k: 10, seed: 5, ..Default::default() }
@@ -664,7 +671,7 @@ mod tests {
     #[test]
     fn tuna_strategy_no_device_time() {
         let c = Coordinator::new_uncalibrated(TargetKind::Graviton2);
-        let op = OpSpec::Matmul { m: 64, n: 64, k: 64 };
+        let op = OpSpec::Matmul { m: 64, n: 64, k: 64, epilogue: Epilogue::None };
         let r = c.tune_op(&op, &Strategy::TunaStatic(tiny_es()));
         assert_eq!(r.device_s, 0.0);
         assert!(r.evaluations >= 72);
@@ -674,7 +681,7 @@ mod tests {
     #[test]
     fn autotvm_charges_device_time() {
         let c = Coordinator::new_uncalibrated(TargetKind::Graviton2);
-        let op = OpSpec::Matmul { m: 64, n: 64, k: 64 };
+        let op = OpSpec::Matmul { m: 64, n: 64, k: 64, epilogue: Epilogue::None };
         let r = c.tune_op(&op, &Strategy::AutoTvmFull { trials: 12 });
         assert!(r.device_s > 10.0);
         assert!(r.latency_s > 0.0);
@@ -685,6 +692,7 @@ mod tests {
         let c = Coordinator::new_uncalibrated(TargetKind::Graviton2);
         let op = OpSpec::Conv2d {
             n: 1, cin: 16, h: 28, w: 28, cout: 16, kh: 3, kw: 3, stride: 1, pad: 1,
+            epilogue: Epilogue::None,
         };
         let r = c.tune_op(&op, &Strategy::Vendor);
         assert_eq!(r.evaluations, 0);
@@ -699,8 +707,8 @@ mod tests {
             name: "toy",
             display: "Toy",
             layers: vec![
-                Layer::single(OpSpec::Matmul { m: 32, n: 32, k: 32 }, 2),
-                Layer::single(OpSpec::Matmul { m: 64, n: 32, k: 32 }, 1),
+                Layer::single(OpSpec::Matmul { m: 32, n: 32, k: 32, epilogue: Epilogue::None }, 2),
+                Layer::single(OpSpec::Matmul { m: 64, n: 32, k: 32, epilogue: Epilogue::None }, 1),
             ],
         };
         let c = Coordinator::new_uncalibrated(TargetKind::Graviton2);
@@ -708,15 +716,52 @@ mod tests {
         assert_eq!(rep.per_op.len(), 2);
         assert!(rep.latency_s > 0.0);
         // latency = 2*l1 + l2
-        let l1 = rep.per_op[&OpSpec::Matmul { m: 32, n: 32, k: 32 }.cache_key()].latency_s;
-        let l2 = rep.per_op[&OpSpec::Matmul { m: 64, n: 32, k: 32 }.cache_key()].latency_s;
+        let op1 = OpSpec::Matmul { m: 32, n: 32, k: 32, epilogue: Epilogue::None };
+        let op2 = OpSpec::Matmul { m: 64, n: 32, k: 32, epilogue: Epilogue::None };
+        let l1 = rep.per_op[&op1.cache_key()].latency_s;
+        let l2 = rep.per_op[&op2.cache_key()].latency_s;
         assert!((rep.latency_s - (2.0 * l1 + l2)).abs() < 1e-12);
+    }
+
+    /// A layer with a declared epilogue tunes both variants, prices the
+    /// standalone pass, and deploys whichever side of the fused-vs-unfused
+    /// trade measures faster — the decision is min-over-measured-latency,
+    /// never hard-coded.
+    #[test]
+    fn network_with_epilogue_deploys_by_measured_latency() {
+        use crate::graph::{fuse, EpilogueTask, Layer, Network};
+        let base = OpSpec::Matmul { m: 32, n: 32, k: 32, epilogue: Epilogue::None };
+        let declared = Network {
+            name: "fused_toy",
+            display: "FusedToy",
+            layers: vec![Layer::with_epilogue(base, 2, Epilogue::BiasRelu)],
+        };
+        let net = fuse::fuse(&declared);
+        assert_eq!(net.unique_tasks().len(), 2, "fusion pass added no candidate");
+
+        let c = Coordinator::new_uncalibrated(TargetKind::Graviton2);
+        let rep = c.tune_network(&net, &Strategy::TunaStatic(tiny_es()));
+        assert_eq!(rep.per_op.len(), 2);
+
+        let fused = base.with_epilogue(Epilogue::BiasRelu).unwrap();
+        let lf = rep.per_op[&fused.cache_key()].latency_s;
+        let lu = rep.per_op[&base.cache_key()].latency_s;
+        let task = EpilogueTask::for_layer(&net.layers[0]).unwrap();
+        let pass = c.device.run_epilogue(&task).seconds;
+        assert!(lf > 0.0 && lu > 0.0 && pass > 0.0);
+        // the aggregate picked min(fused, unfused + pass), count-weighted
+        let want = 2.0 * lf.min(lu + pass);
+        assert!(
+            (rep.latency_s - want).abs() < 1e-12,
+            "latency {} != min(fused {lf}, unfused {lu} + pass {pass}) * 2",
+            rep.latency_s
+        );
     }
 
     #[test]
     fn repeated_tune_op_hits_cache() {
         let c = Coordinator::new_uncalibrated(TargetKind::Graviton2);
-        let op = OpSpec::Matmul { m: 48, n: 48, k: 24 };
+        let op = OpSpec::Matmul { m: 48, n: 48, k: 24, epilogue: Epilogue::None };
         let first = c.tune_op(&op, &Strategy::TunaStatic(tiny_es()));
         assert!(!first.cache_hit);
         assert_eq!(c.searches_performed(), 1);
@@ -738,7 +783,7 @@ mod tests {
     #[test]
     fn swap_coeffs_reranks_cache_without_relowering() {
         let c = Coordinator::new_uncalibrated(TargetKind::Graviton2);
-        let op = OpSpec::Matmul { m: 48, n: 48, k: 24 };
+        let op = OpSpec::Matmul { m: 48, n: 48, k: 24, epilogue: Epilogue::None };
         let first = c.tune_op(&op, &Strategy::TunaStatic(tiny_es()));
         assert!(first.top_k.len() > 1);
         let misses_before = c.evaluator().stats().misses;
@@ -768,8 +813,8 @@ mod tests {
     fn evicted_task_falls_back_to_fresh_search() {
         let c = Coordinator::new_uncalibrated(TargetKind::Graviton2);
         c.set_cache_capacity(Some(1));
-        let a = OpSpec::Matmul { m: 32, n: 32, k: 32 };
-        let b = OpSpec::Matmul { m: 64, n: 32, k: 32 };
+        let a = OpSpec::Matmul { m: 32, n: 32, k: 32, epilogue: Epilogue::None };
+        let b = OpSpec::Matmul { m: 64, n: 32, k: 32, epilogue: Epilogue::None };
         let first = c.tune_op(&a, &Strategy::TunaStatic(tiny_es()));
         c.tune_op(&b, &Strategy::TunaStatic(tiny_es())); // evicts a
         assert_eq!(c.cache_evictions(), 1);
@@ -787,9 +832,9 @@ mod tests {
             name: "shard_toy",
             display: "ShardToy",
             layers: vec![
-                Layer::single(OpSpec::Matmul { m: 32, n: 32, k: 32 }, 1),
-                Layer::single(OpSpec::Matmul { m: 48, n: 32, k: 32 }, 2),
-                Layer::single(OpSpec::Matmul { m: 64, n: 32, k: 32 }, 1),
+                Layer::single(OpSpec::Matmul { m: 32, n: 32, k: 32, epilogue: Epilogue::None }, 1),
+                Layer::single(OpSpec::Matmul { m: 48, n: 32, k: 32, epilogue: Epilogue::None }, 2),
+                Layer::single(OpSpec::Matmul { m: 64, n: 32, k: 32, epilogue: Epilogue::None }, 1),
             ],
         };
         let strategy = Strategy::TunaStatic(tiny_es());
@@ -810,7 +855,7 @@ mod tests {
     #[test]
     fn concurrent_warm_hits_are_identical_and_exactly_counted() {
         let c = Coordinator::new_uncalibrated(TargetKind::Graviton2);
-        let op = OpSpec::Matmul { m: 48, n: 48, k: 24 };
+        let op = OpSpec::Matmul { m: 48, n: 48, k: 24, epilogue: Epilogue::None };
         let strategy = Strategy::TunaStatic(tiny_es());
         let reference = c.tune_op(&op, &strategy); // one search, one miss
         let (threads, per_thread) = (8, 20);
@@ -841,7 +886,7 @@ mod tests {
     #[test]
     fn measured_strategies_are_never_cached() {
         let c = Coordinator::new_uncalibrated(TargetKind::Graviton2);
-        let op = OpSpec::Matmul { m: 32, n: 32, k: 32 };
+        let op = OpSpec::Matmul { m: 32, n: 32, k: 32, epilogue: Epilogue::None };
         let a = c.tune_op(&op, &Strategy::AutoTvmFull { trials: 4 });
         let b = c.tune_op(&op, &Strategy::AutoTvmFull { trials: 4 });
         assert!(!a.cache_hit && !b.cache_hit);

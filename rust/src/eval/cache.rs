@@ -592,6 +592,7 @@ fn entry_from_json(j: &Json) -> Result<CachedSchedule, String> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::tir::ops::Epilogue;
     use crate::transform;
 
     fn sample_entry() -> CachedSchedule {
@@ -603,7 +604,7 @@ mod tests {
                 (ScheduleConfig { choices: vec![2, 1, 0] }, 2000.0),
             ],
             evaluations: 168,
-            op: Some(OpSpec::Matmul { m: 32, n: 32, k: 32 }),
+            op: Some(OpSpec::Matmul { m: 32, n: 32, k: 32, epilogue: Epilogue::None }),
         }
     }
 
@@ -674,8 +675,8 @@ mod tests {
     fn key_separates_target_op_space_and_search() {
         use crate::isa::TargetKind;
         use crate::tir::ops::OpSpec;
-        let op_a = OpSpec::Matmul { m: 32, n: 32, k: 32 };
-        let op_b = OpSpec::Matmul { m: 64, n: 32, k: 32 };
+        let op_a = OpSpec::Matmul { m: 32, n: 32, k: 32, epilogue: Epilogue::None };
+        let op_b = OpSpec::Matmul { m: 64, n: 32, k: 32, epilogue: Epilogue::None };
         let sp_a = transform::config_space(&op_a, TargetKind::Graviton2);
         let sp_b = transform::config_space(&op_b, TargetKind::Graviton2);
         let base = ScheduleCache::key(TargetKind::Graviton2, &op_a, &sp_a, "es_x");
@@ -711,8 +712,9 @@ mod tests {
         let mut c = ScheduleCache::new();
         c.insert("k".into(), sample_entry());
         let back = ScheduleCache::from_json(&c.to_json()).unwrap();
-        assert_eq!(back.peek("k").unwrap().op, Some(OpSpec::Matmul { m: 32, n: 32, k: 32 }));
-        assert_eq!(back.tasks(), vec![("k".to_string(), OpSpec::Matmul { m: 32, n: 32, k: 32 })]);
+        let op = OpSpec::Matmul { m: 32, n: 32, k: 32, epilogue: Epilogue::None };
+        assert_eq!(back.peek("k").unwrap().op, Some(op));
+        assert_eq!(back.tasks(), vec![("k".to_string(), op)]);
     }
 
     #[test]
@@ -781,14 +783,14 @@ mod tests {
             best_score: top_k[0].1,
             top_k,
             evaluations: evals,
-            op: Some(OpSpec::Matmul { m: 8, n: 8, k: 8 }),
+            op: Some(OpSpec::Matmul { m: 8, n: 8, k: 8, epilogue: Epilogue::None }),
         }
     }
 
     #[test]
     fn filter_target_splits_a_multi_target_cache() {
         use crate::isa::TargetKind;
-        let op = OpSpec::Matmul { m: 32, n: 32, k: 32 };
+        let op = OpSpec::Matmul { m: 32, n: 32, k: 32, epilogue: Epilogue::None };
         let space = transform::config_space(&op, TargetKind::Graviton2);
         let gspace = transform::config_space(&op, TargetKind::TeslaV100);
         let mut c = ScheduleCache::new();

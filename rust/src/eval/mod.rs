@@ -388,6 +388,7 @@ impl BatchObjective for OpObjective<'_> {
 mod tests {
     use super::*;
     use crate::isa::TargetKind;
+    use crate::tir::ops::Epilogue;
     use crate::transform;
 
     fn sample_cfgs(op: &OpSpec, kind: TargetKind, n: u64) -> Vec<ScheduleConfig> {
@@ -401,7 +402,7 @@ mod tests {
         let kind = TargetKind::Graviton2;
         let cm = CostModel::with_default_coeffs(kind);
         let ev = CandidateEvaluator::with_threads(cm.clone(), 4);
-        let op = OpSpec::Matmul { m: 48, n: 32, k: 32 };
+        let op = OpSpec::Matmul { m: 48, n: 32, k: 32, epilogue: Epilogue::None };
         let cfgs = sample_cfgs(&op, kind, 24);
         let batch = ev.score_batch(&op, &cfgs);
         for (cfg, s) in cfgs.iter().zip(&batch) {
@@ -413,7 +414,7 @@ mod tests {
     fn memo_hits_on_repeat_batches() {
         let kind = TargetKind::Graviton2;
         let ev = CandidateEvaluator::with_threads(CostModel::with_default_coeffs(kind), 2);
-        let op = OpSpec::Matmul { m: 32, n: 32, k: 32 };
+        let op = OpSpec::Matmul { m: 32, n: 32, k: 32, epilogue: Epilogue::None };
         let cfgs = sample_cfgs(&op, kind, 10);
         let first = ev.score_batch(&op, &cfgs);
         let after_first = ev.stats();
@@ -430,7 +431,7 @@ mod tests {
     #[test]
     fn empty_batch_is_empty() {
         let ev = CandidateEvaluator::new(CostModel::with_default_coeffs(TargetKind::Graviton2));
-        let op = OpSpec::Matmul { m: 8, n: 8, k: 8 };
+        let op = OpSpec::Matmul { m: 8, n: 8, k: 8, epilogue: Epilogue::None };
         assert!(ev.score_batch(&op, &[]).is_empty());
     }
 
@@ -438,8 +439,8 @@ mod tests {
     fn distinct_ops_do_not_collide() {
         let kind = TargetKind::Graviton2;
         let ev = CandidateEvaluator::with_threads(CostModel::with_default_coeffs(kind), 1);
-        let a = OpSpec::Matmul { m: 32, n: 32, k: 32 };
-        let b = OpSpec::Matmul { m: 64, n: 32, k: 32 };
+        let a = OpSpec::Matmul { m: 32, n: 32, k: 32, epilogue: Epilogue::None };
+        let b = OpSpec::Matmul { m: 64, n: 32, k: 32, epilogue: Epilogue::None };
         let cfg = transform::config_space(&a, kind).default_config();
         let sa = ev.try_score(&a, &cfg).unwrap();
         let sb = ev.try_score(&b, &cfg).unwrap();
@@ -450,7 +451,7 @@ mod tests {
     fn swap_coeffs_rescores_from_the_feature_store() {
         let kind = TargetKind::Graviton2;
         let ev = CandidateEvaluator::with_threads(CostModel::with_default_coeffs(kind), 2);
-        let op = OpSpec::Matmul { m: 32, n: 32, k: 32 };
+        let op = OpSpec::Matmul { m: 32, n: 32, k: 32, epilogue: Epilogue::None };
         let cfgs = sample_cfgs(&op, kind, 8);
         ev.score_batch(&op, &cfgs);
         let misses_before = ev.stats().misses;
@@ -478,7 +479,7 @@ mod tests {
     fn score_batch_with_is_pure_dot_product_after_warmup() {
         let kind = TargetKind::Graviton2;
         let ev = CandidateEvaluator::with_threads(CostModel::with_default_coeffs(kind), 2);
-        let op = OpSpec::Matmul { m: 32, n: 32, k: 32 };
+        let op = OpSpec::Matmul { m: 32, n: 32, k: 32, epilogue: Epilogue::None };
         let cfgs = sample_cfgs(&op, kind, 8);
         ev.score_batch(&op, &cfgs); // warm the feature store
         let misses_before = ev.stats().misses;

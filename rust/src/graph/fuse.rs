@@ -1,0 +1,135 @@
+//! The graph-level epilogue-fusion pass.
+//!
+//! Networks declare *what the graph does* (each [`Layer`]'s required
+//! [`Epilogue`]); this pass decides *what the tuner may try*: for every
+//! layer with a non-`None` tail it adds, next to each unfused alternative
+//! that can carry one, the fused-kernel candidate
+//! (`op.with_epilogue(layer.epilogue)`). Nothing is removed and nothing is
+//! decided here — fused and unfused variants are distinct tuning tasks
+//! with distinct cache keys, and `Network::latency` deploys whichever
+//! measures faster per layer (an unfused deployment is charged the
+//! standalone elementwise pass it would really need; see
+//! [`super::EpilogueTask`]).
+//!
+//! Alternatives that cannot fuse a tail (Winograd's three-stage form,
+//! batched matmul) simply stay as they are and keep competing on the
+//! pay-the-pass basis, which keeps the selection honest: fusion wins only
+//! where an in-tile FMA/max really beats a second trip through memory.
+
+use super::{Layer, Network};
+use crate::tir::ops::Epilogue;
+
+/// Add fused-epilogue candidates to every layer that declares a tail.
+/// Idempotent: candidates already present are not duplicated.
+pub fn fuse(net: &Network) -> Network {
+    Network {
+        name: net.name,
+        display: net.display,
+        layers: net.layers.iter().map(fuse_layer).collect(),
+    }
+}
+
+fn fuse_layer(l: &Layer) -> Layer {
+    if l.epilogue == Epilogue::None {
+        return l.clone();
+    }
+    let mut alternatives = l.alternatives.clone();
+    for op in &l.alternatives {
+        if op.epilogue() != Epilogue::None {
+            continue; // already a fused candidate
+        }
+        if let Some(fused) = op.with_epilogue(l.epilogue) {
+            if !alternatives.contains(&fused) {
+                alternatives.push(fused);
+            }
+        }
+    }
+    Layer { alternatives, count: l.count, epilogue: l.epilogue }
+}
+
+/// The inverse selection: only unfused alternatives, layer epilogues (and
+/// therefore their standalone-pass cost) intact. This is the baseline the
+/// fusion benchmark deploys — the same graph, forbidden from fusing.
+pub fn strip(net: &Network) -> Network {
+    let layers = net
+        .layers
+        .iter()
+        .map(|l| {
+            let alternatives: Vec<_> =
+                l.alternatives.iter().filter(|op| !op.is_fused()).copied().collect();
+            assert!(!alternatives.is_empty(), "layer of {} had only fused alternatives", net.name);
+            Layer { alternatives, count: l.count, epilogue: l.epilogue }
+        })
+        .collect();
+    Network { name: net.name, display: net.display, layers }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::networks;
+    use crate::tir::ops::OpSpec;
+
+    #[test]
+    fn fuse_adds_exactly_the_fusable_candidates() {
+        let base = OpSpec::Matmul { m: 8, n: 8, k: 8, epilogue: Epilogue::None };
+        let bmm = OpSpec::BatchMatmul { b: 2, m: 4, n: 4, k: 4 };
+        let net = Network {
+            name: "t",
+            display: "T",
+            layers: vec![
+                Layer::with_epilogue(base, 1, Epilogue::BiasRelu),
+                Layer::single(bmm, 1),        // no tail: untouched
+                Layer::single(base, 2),       // no tail: untouched
+            ],
+        };
+        let fused = fuse(&net);
+        assert_eq!(fused.layers[0].alternatives.len(), 2);
+        assert_eq!(
+            fused.layers[0].alternatives[1],
+            base.with_epilogue(Epilogue::BiasRelu).unwrap()
+        );
+        assert_eq!(fused.layers[1].alternatives, vec![bmm]);
+        assert_eq!(fused.layers[2].alternatives, vec![base]);
+        // counts and epilogues survive
+        assert_eq!(fused.layers[2].count, 2);
+        assert_eq!(fused.layers[0].epilogue, Epilogue::BiasRelu);
+    }
+
+    #[test]
+    fn fuse_is_idempotent_and_strip_inverts_it() {
+        for raw in [networks::resnet50(), networks::bert_base()] {
+            let once = fuse(&raw);
+            let twice = fuse(&once);
+            for (a, b) in once.layers.iter().zip(twice.layers.iter()) {
+                assert_eq!(a.alternatives, b.alternatives, "{} not idempotent", raw.name);
+            }
+            let stripped = strip(&once);
+            for (s, r) in stripped.layers.iter().zip(raw.layers.iter()) {
+                assert_eq!(s.alternatives, r.alternatives, "{} strip != declared", raw.name);
+                assert_eq!(s.epilogue, r.epilogue);
+            }
+        }
+    }
+
+    #[test]
+    fn winograd_alternatives_stay_unfused() {
+        let fused = fuse(&networks::resnet50());
+        for l in &fused.layers {
+            for op in &l.alternatives {
+                if matches!(op, OpSpec::Conv2dWinograd { .. }) {
+                    assert!(!op.is_fused());
+                }
+            }
+        }
+        // but a 3x3 layer with a winograd alternative did gain a fused
+        // direct-conv candidate
+        let with_wino = fused
+            .layers
+            .iter()
+            .find(|l| l.alternatives.iter().any(|o| matches!(o, OpSpec::Conv2dWinograd { .. })))
+            .expect("resnet50 has winograd-capable layers");
+        assert!(with_wino.alternatives.iter().any(|o| o.is_fused()));
+        assert_eq!(with_wino.alternatives.len(), 3); // direct, winograd, fused direct
+    }
+}

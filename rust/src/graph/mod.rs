@@ -6,26 +6,88 @@
 //! v2 (wide mixed convolutions), PyTorch ResNet-50 v1 (deep 3×3/1×1
 //! bottlenecks) and PyTorch BERT base uncased (dense + batched matmul).
 //! Layers may carry *alternative* implementations (direct conv vs Winograd
-//! for 3×3 stride-1) — the coordinator tunes each family and deploys the
-//! faster one, as TVM's relay op strategy does.
+//! for 3×3 stride-1, fused vs unfused epilogues via [`fuse`]) — the
+//! coordinator tunes each and deploys the fastest, as TVM's relay op
+//! strategy does.
+//!
+//! A layer additionally records the elementwise [`Epilogue`] its graph
+//! context demands (the bias/ReLU tail of a conv+BN+ReLU or dense+bias
+//! chain). An alternative whose op *fuses* that epilogue implements the
+//! layer outright; an unfused alternative must be followed by a standalone
+//! memory-bound pass over the output tensor, whose cost enters the latency
+//! model as a synthetic task (see [`Network::epilogue_tasks`]). That makes
+//! fused-vs-unfused a per-layer deployment decision taken on measured
+//! numbers, by the same min-over-alternatives machinery that picks direct
+//! vs Winograd.
 
+pub mod fuse;
 pub mod networks;
 
 pub use networks::{all_networks, bert_base, resnet50, ssd_inception, ssd_mobilenet};
 
-use crate::tir::ops::OpSpec;
+use crate::tir::ops::{Epilogue, OpSpec};
 use std::collections::BTreeMap;
 
-/// One layer: equivalent implementation alternatives + repetition count.
+/// One layer: equivalent implementation alternatives + repetition count +
+/// the elementwise tail the surrounding graph applies to its output.
 #[derive(Debug, Clone)]
 pub struct Layer {
     pub alternatives: Vec<OpSpec>,
     pub count: u32,
+    /// What the graph does to this layer's output before the next layer
+    /// consumes it. `Epilogue::None` means the raw contraction is the
+    /// whole layer. An alternative carrying the same epilogue fused needs
+    /// no extra pass; any other alternative pays the standalone pass.
+    pub epilogue: Epilogue,
 }
 
 impl Layer {
+    /// A single-implementation layer. The required epilogue is read off
+    /// the op itself, so a fused op makes a self-consistent layer and an
+    /// unfused op reproduces the pre-fusion behavior exactly.
     pub fn single(op: OpSpec, count: u32) -> Self {
-        Layer { alternatives: vec![op], count }
+        Layer { alternatives: vec![op], count, epilogue: op.epilogue() }
+    }
+
+    /// A layer whose graph context applies `epilogue` to the output of an
+    /// (unfused) `op` — the form `networks.rs` declares; [`fuse::fuse`]
+    /// then adds the fused-candidate alternatives.
+    pub fn with_epilogue(op: OpSpec, count: u32, epilogue: Epilogue) -> Self {
+        Layer { alternatives: vec![op], count, epilogue }
+    }
+}
+
+/// A standalone elementwise epilogue pass some layer needs when its
+/// deployed alternative does not fuse the tail — a synthetic tuning-free
+/// task whose simulated latency joins the per-op latency map.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct EpilogueTask {
+    /// Map key, disjoint from every op cache key (`epilogue_` prefix; op
+    /// keys start with their family name).
+    pub key: String,
+    pub epilogue: Epilogue,
+    /// Output-tensor elements the pass sweeps.
+    pub elems: i64,
+    /// Bias-vector length (output channels).
+    pub channels: i64,
+}
+
+impl EpilogueTask {
+    /// The standalone pass a layer's unfused alternatives would need, if
+    /// any. Shape comes from the first alternative — all alternatives of
+    /// a layer compute the same output tensor.
+    pub fn for_layer(l: &Layer) -> Option<EpilogueTask> {
+        if l.epilogue == Epilogue::None {
+            return None;
+        }
+        let rep = l.alternatives.first()?;
+        let (elems, channels) = (rep.out_elems(), rep.bias_len());
+        Some(EpilogueTask {
+            key: format!("epilogue_{}_x{}_c{}", l.epilogue.wire_name(), elems, channels),
+            epilogue: l.epilogue,
+            elems,
+            channels,
+        })
     }
 }
 
@@ -42,27 +104,57 @@ pub struct Network {
 impl Network {
     /// All distinct operator tasks across layers and alternatives —
     /// the tuning work-list (each tuned once, shared via the cache).
+    /// Fused and unfused variants of one shape have different cache keys,
+    /// so both survive deduplication and both get tuned.
     pub fn unique_tasks(&self) -> Vec<OpSpec> {
         let mut seen = BTreeMap::new();
         for l in &self.layers {
             for op in &l.alternatives {
-                seen.entry(op.cache_key(), ).or_insert(*op);
+                seen.entry(op.cache_key()).or_insert(*op);
+            }
+        }
+        seen.into_values().collect()
+    }
+
+    /// All distinct standalone epilogue passes any layer might need —
+    /// the synthetic companions to [`Self::unique_tasks`]. The
+    /// coordinator simulates each once and adds it to the latency map.
+    pub fn epilogue_tasks(&self) -> Vec<EpilogueTask> {
+        let mut seen = BTreeMap::new();
+        for l in &self.layers {
+            if let Some(t) = EpilogueTask::for_layer(l) {
+                seen.entry(t.key.clone()).or_insert(t);
             }
         }
         seen.into_values().collect()
     }
 
     /// End-to-end latency given per-task latencies: every layer picks its
-    /// fastest alternative, weighted by count.
+    /// fastest *viable* alternative, weighted by count. An alternative is
+    /// viable if it fuses exactly the layer's epilogue (cost = its own
+    /// latency) or fuses nothing (cost = its latency + the standalone
+    /// epilogue pass, looked up under the [`EpilogueTask`] key). The map
+    /// must cover [`Self::unique_tasks`] and [`Self::epilogue_tasks`].
     pub fn latency(&self, task_latency: &BTreeMap<String, f64>) -> f64 {
         self.layers
             .iter()
             .map(|l| {
+                let pass = EpilogueTask::for_layer(l)
+                    .and_then(|t| task_latency.get(&t.key).copied());
                 let best = l
                     .alternatives
                     .iter()
-                    .filter_map(|op| task_latency.get(&op.cache_key()))
-                    .cloned()
+                    .filter_map(|op| {
+                        let own = *task_latency.get(&op.cache_key())?;
+                        if op.epilogue() == l.epilogue {
+                            Some(own) // fused exactly right (or nothing to fuse)
+                        } else if op.epilogue() == Epilogue::None {
+                            // viable only if the standalone pass was costed
+                            Some(own + pass?)
+                        } else {
+                            None // fuses a different tail — cannot implement this layer
+                        }
+                    })
                     .fold(f64::MAX, f64::min);
                 assert!(best < f64::MAX, "missing latency for a layer of {}", self.name);
                 best * l.count as f64
@@ -70,12 +162,20 @@ impl Network {
             .sum()
     }
 
-    /// Total theoretical flops (one forward pass, best-alternative basis
-    /// uses the first alternative).
+    /// Total theoretical flops (one forward pass, first-alternative basis,
+    /// including each layer's epilogue tail whether fused or standalone).
     pub fn flops(&self) -> u64 {
         self.layers
             .iter()
-            .map(|l| l.alternatives[0].flops() * l.count as u64)
+            .map(|l| {
+                let base = l.alternatives[0];
+                let tail = l
+                    .epilogue
+                    .flops_per_elem()
+                    .saturating_sub(base.epilogue().flops_per_elem())
+                    * base.out_elems() as u64;
+                (base.flops() + tail) * l.count as u64
+            })
             .sum()
     }
 }
@@ -98,7 +198,7 @@ mod tests {
     #[test]
     fn unique_tasks_deduplicate() {
         // same op in two layers counts once
-        let op = OpSpec::Matmul { m: 8, n: 8, k: 8 };
+        let op = OpSpec::Matmul { m: 8, n: 8, k: 8, epilogue: Epilogue::None };
         let net = Network {
             name: "t",
             display: "T",
@@ -113,21 +213,71 @@ mod tests {
     }
 
     #[test]
+    fn unique_tasks_keep_fused_and_unfused_variants_distinct() {
+        let base = OpSpec::Matmul { m: 8, n: 8, k: 8, epilogue: Epilogue::None };
+        let fused = base.with_epilogue(Epilogue::BiasRelu).unwrap();
+        let net = Network {
+            name: "t",
+            display: "T",
+            layers: vec![
+                Layer { alternatives: vec![base, fused], count: 1, epilogue: Epilogue::BiasRelu },
+                // a second layer repeating both variants adds nothing new
+                Layer { alternatives: vec![base, fused], count: 2, epilogue: Epilogue::BiasRelu },
+            ],
+        };
+        let tasks = net.unique_tasks();
+        assert_eq!(tasks.len(), 2, "fused and unfused must be distinct tasks: {tasks:?}");
+        assert!(tasks.contains(&base) && tasks.contains(&fused));
+        // one distinct standalone pass backs both layers
+        let passes = net.epilogue_tasks();
+        assert_eq!(passes.len(), 1);
+        assert_eq!(passes[0].elems, 64);
+        assert_eq!(passes[0].channels, 8);
+        assert!(passes[0].key.starts_with("epilogue_bias_relu_"));
+    }
+
+    #[test]
     fn latency_picks_fastest_alternative() {
         let net = Network {
             name: "t",
             display: "T",
             layers: vec![Layer {
                 alternatives: vec![
-                    OpSpec::Matmul { m: 8, n: 8, k: 8 },
-                    OpSpec::Matmul { m: 8, n: 8, k: 16 },
+                    OpSpec::Matmul { m: 8, n: 8, k: 8, epilogue: Epilogue::None },
+                    OpSpec::Matmul { m: 8, n: 8, k: 16, epilogue: Epilogue::None },
                 ],
                 count: 2,
+                epilogue: Epilogue::None,
             }],
         };
         let mut lat = BTreeMap::new();
-        lat.insert(OpSpec::Matmul { m: 8, n: 8, k: 8 }.cache_key(), 5.0);
-        lat.insert(OpSpec::Matmul { m: 8, n: 8, k: 16 }.cache_key(), 3.0);
+        lat.insert(
+            OpSpec::Matmul { m: 8, n: 8, k: 8, epilogue: Epilogue::None }.cache_key(),
+            5.0,
+        );
+        lat.insert(
+            OpSpec::Matmul { m: 8, n: 8, k: 16, epilogue: Epilogue::None }.cache_key(),
+            3.0,
+        );
+        assert_eq!(net.latency(&lat), 6.0);
+    }
+
+    #[test]
+    fn latency_charges_unfused_alternatives_the_standalone_pass() {
+        let base = OpSpec::Matmul { m: 8, n: 8, k: 8, epilogue: Epilogue::None };
+        let fused = base.with_epilogue(Epilogue::Bias).unwrap();
+        let layer = Layer { alternatives: vec![base, fused], count: 1, epilogue: Epilogue::Bias };
+        let pass_key = EpilogueTask::for_layer(&layer).unwrap().key;
+        let net = Network { name: "t", display: "T", layers: vec![layer] };
+
+        let mut lat = BTreeMap::new();
+        lat.insert(base.cache_key(), 5.0);
+        lat.insert(fused.cache_key(), 5.5);
+        lat.insert(pass_key.clone(), 1.0);
+        // unfused would cost 5.0 + 1.0; the fused kernel at 5.5 wins
+        assert_eq!(net.latency(&lat), 5.5);
+        // make fusion a loss and the unfused + pass path wins instead
+        lat.insert(fused.cache_key(), 7.0);
         assert_eq!(net.latency(&lat), 6.0);
     }
 

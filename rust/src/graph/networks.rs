@@ -3,41 +3,91 @@
 //! These are operator-accurate reproductions of the layer shapes in the
 //! published architectures (MobileNetV2-SSD at 300², InceptionV2-SSD at
 //! 300², ResNet-50 v1 at 224², BERT-base at sequence 128), lightly merged:
-//! repeated blocks become `count > 1`, and residual adds / activations /
-//! norms are omitted (they are memory-bound elementwise ops outside the
-//! paper's tuning scope). 3×3 stride-1 convolutions additionally carry a
-//! Winograd alternative where H/W are even, as TVM's op strategy offers.
+//! repeated blocks become `count > 1`, and residual adds / softmax / norms
+//! are omitted (memory-bound elementwise ops outside the paper's tuning
+//! scope). 3×3 stride-1 convolutions additionally carry a Winograd
+//! alternative where H/W are even, as TVM's op strategy offers.
+//!
+//! What is *not* omitted any more is each layer's bias/activation tail:
+//! layers declare the [`Epilogue`] their graph context applies (folded
+//! batch-norm scale/shift → `Bias`, plus ReLU-family activation →
+//! `BiasRelu`), so the fusion pass ([`super::fuse`]) can offer fused
+//! kernels and the latency model can charge unfused deployments the
+//! standalone elementwise pass they would really need. The constructors
+//! here return the *declared* form — unfused alternatives only;
+//! [`all_networks`] applies the fusion pass so every consumer of the
+//! benchmark set tunes over fused candidates automatically.
 
-use super::{Layer, Network};
-use crate::tir::ops::OpSpec;
+use super::{fuse, Layer, Network};
+use crate::tir::ops::{Epilogue, OpSpec};
 
 fn conv(cin: i64, h: i64, w: i64, cout: i64, k: i64, stride: i64, pad: i64) -> OpSpec {
-    OpSpec::Conv2d { n: 1, cin, h, w, cout, kh: k, kw: k, stride, pad }
+    OpSpec::Conv2d {
+        n: 1,
+        cin,
+        h,
+        w,
+        cout,
+        kh: k,
+        kw: k,
+        stride,
+        pad,
+        epilogue: Epilogue::None,
+    }
 }
 
 fn dw(c: i64, h: i64, w: i64, k: i64, stride: i64, pad: i64) -> OpSpec {
-    OpSpec::DepthwiseConv2d { n: 1, c, h, w, kh: k, kw: k, stride, pad }
+    OpSpec::DepthwiseConv2d {
+        n: 1,
+        c,
+        h,
+        w,
+        kh: k,
+        kw: k,
+        stride,
+        pad,
+        epilogue: Epilogue::None,
+    }
+}
+
+fn dense(m: i64, n: i64, k: i64) -> OpSpec {
+    OpSpec::Matmul { m, n, k, epilogue: Epilogue::None }
+}
+
+/// BN+ReLU tail (the overwhelmingly common conv context).
+const BR: Epilogue = Epilogue::BiasRelu;
+/// Linear bias tail (projection layers, predictor heads).
+const B: Epilogue = Epilogue::Bias;
+
+/// A conv layer with its graph-context epilogue.
+fn conv_layer(op: OpSpec, count: u32, epilogue: Epilogue) -> Layer {
+    Layer::with_epilogue(op, count, epilogue)
 }
 
 /// 3×3 s1 conv with a Winograd alternative when spatial dims are even.
-fn conv3x3_layer(cin: i64, h: i64, w: i64, cout: i64, count: u32) -> Layer {
+/// The Winograd form cannot fuse the tail; it competes by paying the
+/// standalone pass (see `Network::latency`).
+fn conv3x3_layer(cin: i64, h: i64, w: i64, cout: i64, count: u32, epilogue: Epilogue) -> Layer {
     let direct = conv(cin, h, w, cout, 3, 1, 1);
     if h % 2 == 0 && w % 2 == 0 {
         Layer {
             alternatives: vec![direct, OpSpec::Conv2dWinograd { n: 1, cin, h, w, cout }],
             count,
+            epilogue,
         }
     } else {
-        Layer::single(direct, count)
+        Layer::with_epilogue(direct, count, epilogue)
     }
 }
 
 /// TensorFlow SSD MobileNet v2 (300×300).
 pub fn ssd_mobilenet() -> Network {
     let mut layers = Vec::new();
-    // stem
-    layers.push(Layer::single(conv(3, 300, 300, 32, 3, 2, 1), 1));
-    // inverted residual stages: (expand 1x1, depthwise 3x3, project 1x1)
+    // stem (conv + BN + ReLU6)
+    layers.push(conv_layer(conv(3, 300, 300, 32, 3, 2, 1), 1, BR));
+    // inverted residual stages: (expand 1x1, depthwise 3x3, project 1x1);
+    // expand and depthwise carry ReLU6, the projection is linear (the
+    // "linear bottleneck" of MobileNetV2)
     // (cin, expanded, cout, h, w, stride, repeats)
     let blocks: [(i64, i64, i64, i64, i64, i64, u32); 7] = [
         (32, 32, 16, 150, 150, 1, 1),
@@ -50,24 +100,24 @@ pub fn ssd_mobilenet() -> Network {
     ];
     for (cin, exp, cout, h, w, s, reps) in blocks {
         if exp != cin {
-            layers.push(Layer::single(conv(cin, h, w, exp, 1, 1, 0), reps));
+            layers.push(conv_layer(conv(cin, h, w, exp, 1, 1, 0), reps, BR));
         }
-        layers.push(Layer::single(dw(exp, h, w, 3, s, 1), reps));
+        layers.push(conv_layer(dw(exp, h, w, 3, s, 1), reps, BR));
         let (oh, ow) = (OpSpec::out_dim(h, 3, s, 1), OpSpec::out_dim(w, 3, s, 1));
-        layers.push(Layer::single(conv(exp, oh, ow, cout, 1, 1, 0), reps));
+        layers.push(conv_layer(conv(exp, oh, ow, cout, 1, 1, 0), reps, B));
     }
     // final 1x1 + SSD feature heads
-    layers.push(Layer::single(conv(320, 10, 10, 1280, 1, 1, 0), 1));
-    // box/class predictors on 19/10/5/3/2/1 grids
+    layers.push(conv_layer(conv(320, 10, 10, 1280, 1, 1, 0), 1, BR));
+    // box/class predictors on 19/10/5/3/2/1 grids (raw logits: bias only)
     for (c, g) in [(576i64, 19i64), (1280, 10), (512, 5), (256, 3), (256, 2), (128, 1)] {
-        layers.push(Layer::single(conv(c, g, g, 24, 3, 1, 1), 1)); // loc
-        layers.push(Layer::single(conv(c, g, g, 546, 3, 1, 1), 1)); // cls
+        layers.push(conv_layer(conv(c, g, g, 24, 3, 1, 1), 1, B)); // loc
+        layers.push(conv_layer(conv(c, g, g, 546, 3, 1, 1), 1, B)); // cls
     }
     // extra feature layers
-    layers.push(Layer::single(conv(1280, 10, 10, 256, 1, 1, 0), 1));
-    layers.push(Layer::single(conv(256, 10, 10, 512, 3, 2, 1), 1));
-    layers.push(Layer::single(conv(512, 5, 5, 128, 1, 1, 0), 1));
-    layers.push(Layer::single(conv(128, 5, 5, 256, 3, 2, 1), 1));
+    layers.push(conv_layer(conv(1280, 10, 10, 256, 1, 1, 0), 1, BR));
+    layers.push(conv_layer(conv(256, 10, 10, 512, 3, 2, 1), 1, BR));
+    layers.push(conv_layer(conv(512, 5, 5, 128, 1, 1, 0), 1, BR));
+    layers.push(conv_layer(conv(128, 5, 5, 256, 3, 2, 1), 1, BR));
     Network { name: "ssd_mobilenet", display: "TF SSD MobileNet", layers }
 }
 
@@ -75,44 +125,44 @@ pub fn ssd_mobilenet() -> Network {
 pub fn ssd_inception() -> Network {
     let mut layers = Vec::new();
     // stem
-    layers.push(Layer::single(conv(3, 300, 300, 64, 7, 2, 3), 1));
-    layers.push(Layer::single(conv(64, 75, 75, 64, 1, 1, 0), 1));
-    layers.push(conv3x3_layer(64, 75, 75, 192, 1)); // odd dims -> direct only
+    layers.push(conv_layer(conv(3, 300, 300, 64, 7, 2, 3), 1, BR));
+    layers.push(conv_layer(conv(64, 75, 75, 64, 1, 1, 0), 1, BR));
+    layers.push(conv3x3_layer(64, 75, 75, 192, 1, BR)); // odd dims -> direct only
     // inception blocks at 38x38 (mixed 3b/3c-style)
     for _ in 0..1 {
-        layers.push(Layer::single(conv(192, 38, 38, 64, 1, 1, 0), 2));
-        layers.push(Layer::single(conv(192, 38, 38, 96, 1, 1, 0), 2));
-        layers.push(conv3x3_layer(96, 38, 38, 128, 2));
-        layers.push(Layer::single(conv(192, 38, 38, 32, 1, 1, 0), 2));
-        layers.push(conv3x3_layer(32, 38, 38, 96, 4)); // double 3x3 branch
+        layers.push(conv_layer(conv(192, 38, 38, 64, 1, 1, 0), 2, BR));
+        layers.push(conv_layer(conv(192, 38, 38, 96, 1, 1, 0), 2, BR));
+        layers.push(conv3x3_layer(96, 38, 38, 128, 2, BR));
+        layers.push(conv_layer(conv(192, 38, 38, 32, 1, 1, 0), 2, BR));
+        layers.push(conv3x3_layer(32, 38, 38, 96, 4, BR)); // double 3x3 branch
     }
     // inception blocks at 19x19 (4b-4e style)
-    layers.push(Layer::single(conv(576, 19, 19, 224, 1, 1, 0), 4));
-    layers.push(Layer::single(conv(576, 19, 19, 96, 1, 1, 0), 4));
-    layers.push(Layer::single(conv(96, 19, 19, 128, 3, 1, 1), 8));
-    layers.push(Layer::single(conv(576, 19, 19, 128, 1, 1, 0), 4));
-    layers.push(Layer::single(conv(128, 19, 19, 192, 3, 1, 1), 4));
+    layers.push(conv_layer(conv(576, 19, 19, 224, 1, 1, 0), 4, BR));
+    layers.push(conv_layer(conv(576, 19, 19, 96, 1, 1, 0), 4, BR));
+    layers.push(conv_layer(conv(96, 19, 19, 128, 3, 1, 1), 8, BR));
+    layers.push(conv_layer(conv(576, 19, 19, 128, 1, 1, 0), 4, BR));
+    layers.push(conv_layer(conv(128, 19, 19, 192, 3, 1, 1), 4, BR));
     // 10x10 blocks (5a/5b)
-    layers.push(Layer::single(conv(1024, 10, 10, 352, 1, 1, 0), 2));
-    layers.push(Layer::single(conv(1024, 10, 10, 192, 1, 1, 0), 2));
-    layers.push(conv3x3_layer(192, 10, 10, 320, 4));
-    // SSD heads
+    layers.push(conv_layer(conv(1024, 10, 10, 352, 1, 1, 0), 2, BR));
+    layers.push(conv_layer(conv(1024, 10, 10, 192, 1, 1, 0), 2, BR));
+    layers.push(conv3x3_layer(192, 10, 10, 320, 4, BR));
+    // SSD heads (raw logits)
     for (c, g) in [(576i64, 19i64), (1024, 10), (512, 5), (256, 3), (256, 2), (128, 1)] {
-        layers.push(Layer::single(conv(c, g, g, 24, 3, 1, 1), 1));
-        layers.push(Layer::single(conv(c, g, g, 546, 3, 1, 1), 1));
+        layers.push(conv_layer(conv(c, g, g, 24, 3, 1, 1), 1, B));
+        layers.push(conv_layer(conv(c, g, g, 546, 3, 1, 1), 1, B));
     }
     // extras
-    layers.push(Layer::single(conv(1024, 10, 10, 256, 1, 1, 0), 1));
-    layers.push(Layer::single(conv(256, 10, 10, 512, 3, 2, 1), 1));
-    layers.push(Layer::single(conv(512, 5, 5, 128, 1, 1, 0), 1));
-    layers.push(Layer::single(conv(128, 5, 5, 256, 3, 2, 1), 1));
+    layers.push(conv_layer(conv(1024, 10, 10, 256, 1, 1, 0), 1, BR));
+    layers.push(conv_layer(conv(256, 10, 10, 512, 3, 2, 1), 1, BR));
+    layers.push(conv_layer(conv(512, 5, 5, 128, 1, 1, 0), 1, BR));
+    layers.push(conv_layer(conv(128, 5, 5, 256, 3, 2, 1), 1, BR));
     Network { name: "ssd_inception", display: "TF SSD Inception", layers }
 }
 
 /// PyTorch ResNet-50 v1 (224×224).
 pub fn resnet50() -> Network {
     let mut layers = Vec::new();
-    layers.push(Layer::single(conv(3, 224, 224, 64, 7, 2, 3), 1));
+    layers.push(conv_layer(conv(3, 224, 224, 64, 7, 2, 3), 1, BR));
     // bottleneck stages: (h, w, cin_mid, planes_in, planes_out, blocks)
     let stages: [(i64, i64, i64, i64, u32); 4] = [
         (56, 56, 64, 256, 3),
@@ -121,16 +171,18 @@ pub fn resnet50() -> Network {
         (7, 7, 512, 2048, 3),
     ];
     for (h, w, mid, out, blocks) in stages {
-        // 1x1 reduce (from the wide input), 3x3 mid, 1x1 expand
-        layers.push(Layer::single(conv(out, h, w, mid, 1, 1, 0), blocks - 1));
-        layers.push(Layer::single(conv(out / 2, h, w, mid, 1, 1, 0), 1)); // first block
-        layers.push(conv3x3_layer(mid, h, w, mid, blocks));
-        layers.push(Layer::single(conv(mid, h, w, out, 1, 1, 0), blocks));
-        // downsample shortcut of the first block
-        layers.push(Layer::single(conv(out / 2, h, w, out, 1, 1, 0), 1));
+        // 1x1 reduce (from the wide input), 3x3 mid, 1x1 expand; the
+        // expand's ReLU fires only after the residual add, so its tail is
+        // the linear BN fold — bias only
+        layers.push(conv_layer(conv(out, h, w, mid, 1, 1, 0), blocks - 1, BR));
+        layers.push(conv_layer(conv(out / 2, h, w, mid, 1, 1, 0), 1, BR)); // first block
+        layers.push(conv3x3_layer(mid, h, w, mid, blocks, BR));
+        layers.push(conv_layer(conv(mid, h, w, out, 1, 1, 0), blocks, B));
+        // downsample shortcut of the first block (linear)
+        layers.push(conv_layer(conv(out / 2, h, w, out, 1, 1, 0), 1, B));
     }
     // classifier
-    layers.push(Layer::single(OpSpec::Matmul { m: 1, n: 1000, k: 2048 }, 1));
+    layers.push(Layer::with_epilogue(dense(1, 1000, 2048), 1, B));
     Network { name: "resnet50", display: "PT ResNet50", layers }
 }
 
@@ -138,23 +190,34 @@ pub fn resnet50() -> Network {
 pub fn bert_base() -> Network {
     let l = 12u32; // encoder layers
     let layers = vec![
-        // QKV projections (3 per layer) + attention output projection
-        Layer::single(OpSpec::Matmul { m: 128, n: 768, k: 768 }, 4 * l),
-        // attention scores and context: 12 heads of 64 dims
+        // QKV projections (3 per layer) + attention output projection —
+        // linear bias tails (layer norm stays outside scope)
+        Layer::with_epilogue(dense(128, 768, 768), 4 * l, B),
+        // attention scores and context: 12 heads of 64 dims (softmax
+        // outside scope; batched matmul carries no epilogue)
         Layer::single(OpSpec::BatchMatmul { b: 12, m: 128, n: 128, k: 64 }, l),
         Layer::single(OpSpec::BatchMatmul { b: 12, m: 128, n: 64, k: 128 }, l),
-        // feed-forward
-        Layer::single(OpSpec::Matmul { m: 128, n: 3072, k: 768 }, l),
-        Layer::single(OpSpec::Matmul { m: 128, n: 768, k: 3072 }, l),
-        // pooler
-        Layer::single(OpSpec::Matmul { m: 1, n: 768, k: 768 }, 1),
+        // feed-forward: the intermediate projection's activation is in
+        // the fusable ReLU class, the output projection is linear
+        Layer::with_epilogue(dense(128, 3072, 768), l, BR),
+        Layer::with_epilogue(dense(128, 768, 3072), l, B),
+        // pooler (tanh outside scope)
+        Layer::with_epilogue(dense(1, 768, 768), 1, B),
     ];
     Network { name: "bert_base", display: "PT Bert", layers }
 }
 
-/// All four benchmark networks in the paper's column order.
+/// All four benchmark networks in the paper's column order, with the
+/// epilogue-fusion pass applied — every layer that declares a tail also
+/// offers its fused-kernel candidate, so tuning, serving and the tables
+/// all deploy fused-vs-unfused by measured latency.
 pub fn all_networks() -> Vec<Network> {
-    vec![ssd_mobilenet(), ssd_inception(), resnet50(), bert_base()]
+    vec![
+        fuse::fuse(&ssd_mobilenet()),
+        fuse::fuse(&ssd_inception()),
+        fuse::fuse(&resnet50()),
+        fuse::fuse(&bert_base()),
+    ]
 }
 
 #[cfg(test)]
@@ -179,10 +242,31 @@ mod tests {
     fn task_counts_reasonable() {
         for n in all_networks() {
             let t = n.unique_tasks().len();
+            // fusion roughly doubles the conv-family work-list (each
+            // fusable shape tunes unfused and fused)
             assert!(
-                (4..=60).contains(&t),
-                "{}: {t} unique tasks (expected a few dozen)",
+                (4..=120).contains(&t),
+                "{}: {t} unique tasks (expected up to ~a hundred)",
                 n.name
+            );
+        }
+    }
+
+    #[test]
+    fn declared_networks_carry_epilogues_and_fusion_adds_candidates() {
+        for raw in [ssd_mobilenet(), ssd_inception(), resnet50(), bert_base()] {
+            assert!(
+                raw.layers.iter().any(|l| l.epilogue != Epilogue::None),
+                "{} declares no epilogues",
+                raw.name
+            );
+            // declared form is unfused; the pass adds the fused candidates
+            assert!(raw.unique_tasks().iter().all(|op| !op.is_fused()), "{}", raw.name);
+            let fused = fuse::fuse(&raw);
+            assert!(
+                fused.unique_tasks().iter().any(|op| op.is_fused()),
+                "fusion added no candidates to {}",
+                raw.name
             );
         }
     }

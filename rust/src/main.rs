@@ -43,7 +43,7 @@ use tuna::graph;
 use tuna::isa::{Target, TargetKind};
 use tuna::metrics;
 use tuna::search::EsParams;
-use tuna::tir::ops::OpSpec;
+use tuna::tir::ops::{Epilogue, OpSpec};
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -118,8 +118,24 @@ fn targets_of(flags: &BTreeMap<String, String>) -> Result<Vec<TargetKind>, Strin
 
 /// Parse `--op` specs like `matmul:256x256x256`, `bmm:12x128x128x64`,
 /// `conv2d:64,56,56,64,3,1,1` (cin,h,w,cout,k,stride,pad),
-/// `dwconv:96,112,112,3,2,1`, `winograd:64,56,56,64`.
+/// `dwconv:96,112,112,3,2,1`, `winograd:64,56,56,64`. A `+bias` or
+/// `+bias_relu` suffix selects the fused-epilogue variant of the op
+/// (matmul/conv2d/dwconv only), e.g. `matmul:256x256x256+bias_relu`.
 fn parse_op(s: &str) -> Result<OpSpec, String> {
+    let (s, epilogue) = match s.split_once('+') {
+        Some((base, tail)) => {
+            let e = Epilogue::from_wire(tail)
+                .ok_or_else(|| format!("unknown epilogue suffix {tail:?} (bias, bias_relu)"))?;
+            (base, e)
+        }
+        None => (s, Epilogue::None),
+    };
+    let op = parse_base_op(s)?;
+    op.with_epilogue(epilogue)
+        .ok_or_else(|| format!("op kind cannot fuse a {epilogue} epilogue"))
+}
+
+fn parse_base_op(s: &str) -> Result<OpSpec, String> {
     let (kind, rest) = s.split_once(':').ok_or("op spec needs kind:dims")?;
     let dims: Vec<i64> = rest
         .split(|c| c == 'x' || c == ',')
@@ -135,7 +151,7 @@ fn parse_op(s: &str) -> Result<OpSpec, String> {
     match kind {
         "matmul" | "dense" => {
             need(3)?;
-            Ok(OpSpec::Matmul { m: dims[0], n: dims[1], k: dims[2] })
+            Ok(OpSpec::Matmul { m: dims[0], n: dims[1], k: dims[2], epilogue: Epilogue::None })
         }
         "bmm" => {
             need(4)?;
@@ -153,6 +169,7 @@ fn parse_op(s: &str) -> Result<OpSpec, String> {
                 kw: dims[4],
                 stride: dims[5],
                 pad: dims[6],
+                epilogue: Epilogue::None,
             })
         }
         "dwconv" => {
@@ -166,6 +183,7 @@ fn parse_op(s: &str) -> Result<OpSpec, String> {
                 kw: dims[3],
                 stride: dims[4],
                 pad: dims[5],
+                epilogue: Epilogue::None,
             })
         }
         "winograd" => {

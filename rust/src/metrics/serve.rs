@@ -75,13 +75,15 @@ impl LatencyHistogram {
     }
 }
 
-/// Per-target serving counters: ops answered, schedule-cache outcome of
-/// those ops, and the per-op service-latency histogram.
+/// Per-target serving counters: ops answered (split by whether the op
+/// carried a fused epilogue), schedule-cache outcome of those ops, and the
+/// per-op service-latency histogram.
 #[derive(Debug)]
 pub struct TargetMetrics {
     /// The target's wire name — the `target` label value.
     pub name: &'static str,
-    ops: AtomicU64,
+    ops_fused: AtomicU64,
+    ops_unfused: AtomicU64,
     cache_hits: AtomicU64,
     cache_misses: AtomicU64,
     latency: LatencyHistogram,
@@ -91,7 +93,8 @@ impl TargetMetrics {
     fn new(name: &'static str) -> TargetMetrics {
         TargetMetrics {
             name,
-            ops: AtomicU64::new(0),
+            ops_fused: AtomicU64::new(0),
+            ops_unfused: AtomicU64::new(0),
             cache_hits: AtomicU64::new(0),
             cache_misses: AtomicU64::new(0),
             latency: LatencyHistogram::new(),
@@ -100,8 +103,16 @@ impl TargetMetrics {
 
     /// Record one tune op answered for this target. `cache_hit: None`
     /// means the op failed before a cache verdict (counts as neither).
-    pub fn record_op(&self, cache_hit: Option<bool>, seconds: f64) {
-        self.ops.fetch_add(1, Ordering::Relaxed);
+    /// `fused` is the op's own epilogue verdict ([`OpSpec::is_fused`] —
+    /// the `fused` label value), so fusion adoption is visible per target.
+    ///
+    /// [`OpSpec::is_fused`]: crate::tir::ops::OpSpec::is_fused
+    pub fn record_op(&self, cache_hit: Option<bool>, fused: bool, seconds: f64) {
+        if fused {
+            self.ops_fused.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.ops_unfused.fetch_add(1, Ordering::Relaxed);
+        }
         match cache_hit {
             Some(true) => self.cache_hits.fetch_add(1, Ordering::Relaxed),
             Some(false) => self.cache_misses.fetch_add(1, Ordering::Relaxed),
@@ -110,8 +121,17 @@ impl TargetMetrics {
         self.latency.observe(seconds);
     }
 
+    /// Total ops answered, fused and unfused.
     pub fn ops(&self) -> u64 {
-        self.ops.load(Ordering::Relaxed)
+        self.ops_fused() + self.ops_unfused()
+    }
+
+    pub fn ops_fused(&self) -> u64 {
+        self.ops_fused.load(Ordering::Relaxed)
+    }
+
+    pub fn ops_unfused(&self) -> u64 {
+        self.ops_unfused.load(Ordering::Relaxed)
     }
 
     pub fn cache_hits(&self) -> u64 {
@@ -199,13 +219,23 @@ impl ServeMetrics {
             "code",
             self.errors.iter().map(|(n, c)| (*n, c.load(Ordering::Relaxed))),
         );
-        counter_block(
-            &mut out,
-            "tuna_serve_ops_total",
-            "Tune ops answered (tune requests plus each op of a tune_net).",
-            "target",
-            self.targets.iter().map(|t| (t.name, t.ops())),
+        out.push_str(
+            "# HELP tuna_serve_ops_total Tune ops answered (tune requests plus \
+             each op of a tune_net), by fused-epilogue verdict.\n\
+             # TYPE tuna_serve_ops_total counter\n",
         );
+        for t in &self.targets {
+            out.push_str(&format!(
+                "tuna_serve_ops_total{{target=\"{}\",fused=\"false\"}} {}\n",
+                t.name,
+                t.ops_unfused()
+            ));
+            out.push_str(&format!(
+                "tuna_serve_ops_total{{target=\"{}\",fused=\"true\"}} {}\n",
+                t.name,
+                t.ops_fused()
+            ));
+        }
         counter_block(
             &mut out,
             "tuna_serve_op_cache_hits_total",
@@ -314,10 +344,11 @@ mod tests {
         m.inc_cmd("never_registered"); // dropped, not a panic
         m.inc_error("parse");
         let t = m.target("graviton2").unwrap();
-        t.record_op(Some(true), 2e-5);
-        t.record_op(Some(false), 0.5);
-        t.record_op(None, 1e-5);
+        t.record_op(Some(true), false, 2e-5);
+        t.record_op(Some(false), true, 0.5);
+        t.record_op(None, false, 1e-5);
         assert_eq!((t.ops(), t.cache_hits(), t.cache_misses()), (3, 1, 1));
+        assert_eq!((t.ops_fused(), t.ops_unfused()), (1, 2));
 
         let text = m.render();
         for want in [
@@ -326,10 +357,12 @@ mod tests {
             "tuna_serve_requests_total{cmd=\"tune_net\"} 1",
             "tuna_serve_requests_total{cmd=\"stats\"} 0",
             "tuna_serve_errors_total{code=\"parse\"} 1",
-            "tuna_serve_ops_total{target=\"graviton2\"} 3",
+            "tuna_serve_ops_total{target=\"graviton2\",fused=\"false\"} 2",
+            "tuna_serve_ops_total{target=\"graviton2\",fused=\"true\"} 1",
             "tuna_serve_op_cache_hits_total{target=\"graviton2\"} 1",
             "tuna_serve_op_cache_misses_total{target=\"graviton2\"} 1",
-            "tuna_serve_ops_total{target=\"v100\"} 0",
+            "tuna_serve_ops_total{target=\"v100\",fused=\"false\"} 0",
+            "tuna_serve_ops_total{target=\"v100\",fused=\"true\"} 0",
             "# TYPE tuna_serve_op_seconds histogram",
             "tuna_serve_op_seconds_bucket{target=\"graviton2\",le=\"+Inf\"} 3",
             "tuna_serve_op_seconds_count{target=\"graviton2\"} 3",

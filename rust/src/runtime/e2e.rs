@@ -69,7 +69,7 @@ pub fn config_for_tiles(op: &OpSpec, kind: TargetKind, tiles: (i64, i64, i64)) -
 
 /// Static features of one GEMM under a Pallas tile triple (host model).
 fn gemm_features(cm: &CostModel, m: i64, n: i64, k: i64, tiles: (i64, i64, i64)) -> FeatureVector {
-    let op = OpSpec::Matmul { m, n, k };
+    let op = OpSpec::Matmul { m, n, k, epilogue: crate::tir::ops::Epilogue::None };
     let cfg = config_for_tiles(&op, cm.kind(), tiles);
     cm.features(&op, &cfg)
 }
@@ -141,7 +141,7 @@ pub fn run(dir: &Path, repeats: usize) -> Result<()> {
 
     // ---- phase 2+3: statically rank the matmul_* variants, then verify --
     let (m, n, k) = (256i64, 256i64, 256i64); // python model.MATMUL_SHAPE
-    let op = OpSpec::Matmul { m, n, k };
+    let op = OpSpec::Matmul { m, n, k, epilogue: crate::tir::ops::Epilogue::None };
     let x_in = mk_input(m, Some(k), 1);
     let w_in = mk_input(k, Some(n), 2);
     // f64 reference for numerics

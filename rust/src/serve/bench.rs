@@ -379,6 +379,7 @@ pub fn report_json(r: &BenchReport) -> Json {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::tir::ops::Epilogue;
 
     #[test]
     fn percentile_is_nearest_rank() {
@@ -394,8 +395,8 @@ mod tests {
         let mut cfg = BenchConfig::new(
             TargetKind::Graviton2,
             vec![
-                OpSpec::Matmul { m: 32, n: 32, k: 32 },
-                OpSpec::Matmul { m: 64, n: 32, k: 16 },
+                OpSpec::Matmul { m: 32, n: 32, k: 32, epilogue: Epilogue::None },
+                OpSpec::Matmul { m: 64, n: 32, k: 16, epilogue: Epilogue::None },
             ],
         );
         cfg.params = TuneParams::from_es(&EsParams {

@@ -308,7 +308,7 @@ impl State {
                 OpOutcome::Tuned { cache_hit, .. } => Some(*cache_hit),
                 OpOutcome::Failed { .. } => None,
             };
-            m.record_op(verdict, start.elapsed().as_secs_f64());
+            m.record_op(verdict, op.is_fused(), start.elapsed().as_secs_f64());
         }
         outcome
     }
@@ -674,7 +674,7 @@ fn write_line(stream: &mut TcpStream, resp: &Response) -> io::Result<()> {
 mod tests {
     use super::*;
     use crate::search::EsParams;
-    use crate::tir::ops::OpSpec;
+    use crate::tir::ops::{Epilogue, OpSpec};
 
     /// A daemon state over one uncalibrated coordinator — exercises the
     /// dispatch layer without sockets (the socket path is covered by
@@ -709,7 +709,7 @@ mod tests {
         let state = test_state();
         let req = Request::Tune {
             target: TargetKind::Graviton2,
-            op: OpSpec::Matmul { m: 32, n: 32, k: 32 },
+            op: OpSpec::Matmul { m: 32, n: 32, k: 32, epilogue: Epilogue::None },
             params: Some(tiny_params()),
         };
         let first = state.execute(&req);
@@ -731,7 +731,7 @@ mod tests {
         let state = test_state();
         let unserved = state.execute(&Request::Tune {
             target: TargetKind::TeslaV100,
-            op: OpSpec::Matmul { m: 8, n: 8, k: 8 },
+            op: OpSpec::Matmul { m: 8, n: 8, k: 8, epilogue: Epilogue::None },
             params: None,
         });
         let Response::Error { code, detail } = unserved else {
@@ -777,8 +777,8 @@ mod tests {
     #[test]
     fn tune_net_matches_individual_tunes_and_shares_the_cache() {
         let ops = [
-            OpSpec::Matmul { m: 32, n: 32, k: 32 },
-            OpSpec::Matmul { m: 64, n: 32, k: 16 },
+            OpSpec::Matmul { m: 32, n: 32, k: 32, epilogue: Epilogue::None },
+            OpSpec::Matmul { m: 64, n: 32, k: 16, epilogue: Epilogue::None },
         ];
         // reference: the same ops tuned one by one on a fresh state
         let single = test_state();
@@ -830,7 +830,7 @@ mod tests {
         // an unserved target fails the whole batch with one typed error
         let r = state.execute(&Request::TuneNet {
             target: TargetKind::TeslaV100,
-            ops: vec![OpSpec::Matmul { m: 8, n: 8, k: 8 }],
+            ops: vec![OpSpec::Matmul { m: 8, n: 8, k: 8, epilogue: Epilogue::None }],
             params: None,
         });
         assert!(
@@ -842,7 +842,7 @@ mod tests {
     #[test]
     fn metrics_exposition_counts_known_traffic_exactly() {
         let state = test_state();
-        let op = OpSpec::Matmul { m: 32, n: 32, k: 32 };
+        let op = OpSpec::Matmul { m: 32, n: 32, k: 32, epilogue: Epilogue::None };
         let tune = Request::Tune {
             target: TargetKind::Graviton2,
             op,
@@ -864,22 +864,34 @@ mod tests {
             .encode(),
         );
         state.respond(&Request::Stats.encode());
+        // one fused-epilogue tune: lands in the fused="true" ops series
+        let fused = op.with_epilogue(Epilogue::BiasRelu).unwrap();
+        state.respond(
+            &Request::Tune {
+                target: TargetKind::Graviton2,
+                op: fused,
+                params: Some(tiny_params()),
+            }
+            .encode(),
+        );
 
         let r = state.respond(&Request::Metrics.encode());
         let Response::Metrics { text } = r else { panic!("{r:?}") };
         for want in [
-            "tuna_serve_requests_total{cmd=\"tune\"} 3",
+            "tuna_serve_requests_total{cmd=\"tune\"} 4",
             "tuna_serve_requests_total{cmd=\"tune_net\"} 1",
             "tuna_serve_requests_total{cmd=\"stats\"} 1",
             "tuna_serve_requests_total{cmd=\"metrics\"} 1",
             "tuna_serve_errors_total{code=\"parse\"} 1",
-            // 3 single ops + 2 batched ops; one search total
-            "tuna_serve_ops_total{target=\"graviton2\"} 5",
+            // 3 single ops + 2 batched ops unfused, 1 fused; two searches
+            // total (the fused op is a distinct cache entry)
+            "tuna_serve_ops_total{target=\"graviton2\",fused=\"false\"} 5",
+            "tuna_serve_ops_total{target=\"graviton2\",fused=\"true\"} 1",
             "tuna_serve_op_cache_hits_total{target=\"graviton2\"} 4",
-            "tuna_serve_op_cache_misses_total{target=\"graviton2\"} 1",
-            "tuna_serve_op_seconds_count{target=\"graviton2\"} 5",
-            "tuna_cache_entries{target=\"graviton2\"} 1",
-            "tuna_searches_total{target=\"graviton2\"} 1",
+            "tuna_serve_op_cache_misses_total{target=\"graviton2\"} 2",
+            "tuna_serve_op_seconds_count{target=\"graviton2\"} 6",
+            "tuna_cache_entries{target=\"graviton2\"} 2",
+            "tuna_searches_total{target=\"graviton2\"} 2",
         ] {
             assert!(text.contains(want), "missing {want:?} in:\n{text}");
         }
@@ -900,7 +912,7 @@ mod tests {
                 best_score: 1.0,
                 top_k: vec![(ScheduleConfig { choices: vec![0] }, 1.0)],
                 evaluations: 1,
-                op: Some(OpSpec::Matmul { m: 8, n: 8, k: 8 }),
+                op: Some(OpSpec::Matmul { m: 8, n: 8, k: 8, epilogue: Epilogue::None }),
             },
         );
         state.foreign = loaded.filter_target(TargetKind::TeslaV100);
@@ -920,7 +932,7 @@ mod tests {
     #[test]
     fn save_roundtrips_through_a_fresh_daemon_state() {
         let state = test_state();
-        let op = OpSpec::Matmul { m: 48, n: 32, k: 32 };
+        let op = OpSpec::Matmul { m: 48, n: 32, k: 32, epilogue: Epilogue::None };
         let tune = Request::Tune {
             target: TargetKind::Graviton2,
             op,

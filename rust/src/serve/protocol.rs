@@ -780,6 +780,7 @@ fn count_field(j: &Json, name: &str) -> Result<u64, String> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::tir::ops::Epilogue;
 
     #[test]
     fn wire_names_roundtrip_every_target() {
@@ -801,7 +802,7 @@ mod tests {
         let reqs = [
             Request::Tune {
                 target: TargetKind::Graviton2,
-                op: OpSpec::Matmul { m: 64, n: 64, k: 64 },
+                op: OpSpec::Matmul { m: 64, n: 64, k: 64, epilogue: Epilogue::None },
                 params: None,
             },
             Request::Tune {
@@ -812,14 +813,14 @@ mod tests {
             Request::TuneNet {
                 target: TargetKind::Graviton2,
                 ops: vec![
-                    OpSpec::Matmul { m: 128, n: 768, k: 768 },
+                    OpSpec::Matmul { m: 128, n: 768, k: 768, epilogue: Epilogue::None },
                     OpSpec::BatchMatmul { b: 12, m: 128, n: 128, k: 64 },
                 ],
                 params: None,
             },
             Request::TuneNet {
                 target: TargetKind::TeslaV100,
-                ops: vec![OpSpec::Matmul { m: 8, n: 8, k: 8 }],
+                ops: vec![OpSpec::Matmul { m: 8, n: 8, k: 8, epilogue: Epilogue::None }],
                 params: Some(TuneParams::default()),
             },
             Request::Stats,
@@ -867,7 +868,7 @@ mod tests {
             target: TargetKind::Graviton2,
             results: vec![
                 OpOutcome::Tuned {
-                    op: OpSpec::Matmul { m: 16, n: 16, k: 16 },
+                    op: OpSpec::Matmul { m: 16, n: 16, k: 16, epilogue: Epilogue::None },
                     config: cfg,
                     predicted_cost: 123.5,
                     latency_s: 0.00625,

@@ -162,16 +162,20 @@ pub fn tune_tasks_sharded(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::tir::ops::Epilogue;
 
     fn sample_tasks() -> Vec<OpSpec> {
         vec![
-            OpSpec::Matmul { m: 128, n: 768, k: 768 },
-            OpSpec::Matmul { m: 128, n: 3072, k: 768 },
-            OpSpec::Matmul { m: 128, n: 768, k: 3072 },
+            OpSpec::Matmul { m: 128, n: 768, k: 768, epilogue: Epilogue::None },
+            OpSpec::Matmul { m: 128, n: 3072, k: 768, epilogue: Epilogue::None },
+            OpSpec::Matmul { m: 128, n: 768, k: 3072, epilogue: Epilogue::None },
             OpSpec::BatchMatmul { b: 12, m: 128, n: 128, k: 64 },
             OpSpec::BatchMatmul { b: 12, m: 128, n: 64, k: 128 },
-            OpSpec::Matmul { m: 1, n: 768, k: 768 },
-            OpSpec::Conv2d { n: 1, cin: 64, h: 56, w: 56, cout: 64, kh: 3, kw: 3, stride: 1, pad: 1 },
+            OpSpec::Matmul { m: 1, n: 768, k: 768, epilogue: Epilogue::None },
+            OpSpec::Conv2d {
+                n: 1, cin: 64, h: 56, w: 56, cout: 64, kh: 3, kw: 3, stride: 1, pad: 1,
+                epilogue: Epilogue::None,
+            },
         ]
     }
 
@@ -231,7 +235,7 @@ mod tests {
         assert_eq!(empty.len(), 4);
         assert!(empty.iter().all(Vec::is_empty));
         // singleton task list: one occupied shard, the rest empty
-        let one = [OpSpec::Matmul { m: 8, n: 8, k: 8 }];
+        let one = [OpSpec::Matmul { m: 8, n: 8, k: 8, epilogue: Epilogue::None }];
         let shards = partition(kind, &one, 4);
         assert_eq!(shards.iter().map(Vec::len).sum::<usize>(), 1);
         // n = 1 degenerates to the whole list in order
@@ -257,9 +261,10 @@ mod tests {
             op: Some(op),
         };
         let mut a = ScheduleCache::new();
-        a.insert("ka".into(), entry(OpSpec::Matmul { m: 8, n: 8, k: 8 }));
+        a.insert("ka".into(), entry(OpSpec::Matmul { m: 8, n: 8, k: 8, epilogue: Epilogue::None }));
         let mut b = ScheduleCache::new();
-        b.insert("kb".into(), entry(OpSpec::Matmul { m: 16, n: 8, k: 8 }));
+        let kb = OpSpec::Matmul { m: 16, n: 8, k: 8, epilogue: Epilogue::None };
+        b.insert("kb".into(), entry(kb));
         let (merged, stats) = merge_caches([a, b]);
         assert_eq!(merged.len(), 2);
         assert_eq!(stats.inserted, 2);

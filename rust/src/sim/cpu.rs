@@ -118,7 +118,7 @@ mod tests {
     use crate::codegen;
     use crate::isa::march::{cortex_a53, graviton2, xeon_8124m};
     use crate::isa::TargetKind;
-    use crate::tir::ops::OpSpec;
+    use crate::tir::ops::{Epilogue, OpSpec};
     use crate::transform;
 
     fn sim(op: &OpSpec, kind: TargetKind, march: &MicroArch, cfg_idx: u64) -> SimResult {
@@ -131,7 +131,7 @@ mod tests {
     #[test]
     fn latency_positive_and_bounded_by_roofline() {
         let m = xeon_8124m();
-        let op = OpSpec::Matmul { m: 256, n: 256, k: 256 };
+        let op = OpSpec::Matmul { m: 256, n: 256, k: 256, epilogue: Epilogue::None };
         let r = sim(&op, TargetKind::XeonPlatinum8124M, &m, 0);
         assert!(r.seconds > 0.0);
         // cannot beat peak flops
@@ -148,13 +148,13 @@ mod tests {
     fn bigger_problem_is_slower() {
         let m = graviton2();
         let small = sim(
-            &OpSpec::Matmul { m: 64, n: 64, k: 64 },
+            &OpSpec::Matmul { m: 64, n: 64, k: 64, epilogue: Epilogue::None },
             TargetKind::Graviton2,
             &m,
             0,
         );
         let big = sim(
-            &OpSpec::Matmul { m: 256, n: 256, k: 256 },
+            &OpSpec::Matmul { m: 256, n: 256, k: 256, epilogue: Epilogue::None },
             TargetKind::Graviton2,
             &m,
             0,
@@ -164,7 +164,7 @@ mod tests {
 
     #[test]
     fn a53_slower_than_xeon() {
-        let op = OpSpec::Matmul { m: 128, n: 128, k: 128 };
+        let op = OpSpec::Matmul { m: 128, n: 128, k: 128, epilogue: Epilogue::None };
         let xeon = sim(&op, TargetKind::XeonPlatinum8124M, &xeon_8124m(), 0);
         let a53 = sim(&op, TargetKind::CortexA53, &cortex_a53(), 0);
         assert!(a53.seconds > 5.0 * xeon.seconds);
@@ -173,7 +173,7 @@ mod tests {
     #[test]
     fn schedules_differ_measurably() {
         let m = graviton2();
-        let op = OpSpec::Matmul { m: 128, n: 128, k: 128 };
+        let op = OpSpec::Matmul { m: 128, n: 128, k: 128, epilogue: Epilogue::None };
         let kind = TargetKind::Graviton2;
         let space = transform::config_space(&op, kind);
         let mut lats = Vec::new();
@@ -188,7 +188,7 @@ mod tests {
     #[test]
     fn noise_is_deterministic() {
         let m = graviton2();
-        let op = OpSpec::Matmul { m: 64, n: 64, k: 64 };
+        let op = OpSpec::Matmul { m: 64, n: 64, k: 64, epilogue: Epilogue::None };
         let a = sim(&op, TargetKind::Graviton2, &m, 3);
         let b = sim(&op, TargetKind::Graviton2, &m, 3);
         assert_eq!(a.seconds, b.seconds);

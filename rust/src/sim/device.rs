@@ -84,15 +84,34 @@ impl Device {
     /// Raw simulation without measurement accounting (used for final
     /// latency reports — Table I measures the *chosen* schedule once).
     pub fn run(&self, op: &OpSpec, cfg: &ScheduleConfig) -> SimResult {
-        let f = transform::apply(op, self.kind, cfg);
+        self.simulate_func(&transform::apply(op, self.kind, cfg))
+    }
+
+    /// Simulate the standalone elementwise pass an *unfused* deployment
+    /// needs after its producer (bias add / bias+ReLU over the whole
+    /// output tensor). Schedule-free — there is nothing to tune in a
+    /// memory-bound sweep — so the network aggregator can price every
+    /// [`EpilogueTask`](crate::graph::EpilogueTask) once and let
+    /// `Network::latency` charge it to unfused alternatives.
+    pub fn run_epilogue(&self, task: &crate::graph::EpilogueTask) -> SimResult {
+        let f = transform::templates::epilogue_standalone(
+            task.epilogue,
+            task.elems,
+            task.channels,
+            self.kind,
+        );
+        self.simulate_func(&f)
+    }
+
+    fn simulate_func(&self, f: &crate::tir::TirFunc) -> SimResult {
         match &self.target {
             Target::Cpu(m) => {
-                let prog = codegen::lower_cpu(&f, m);
-                super::cpu::simulate(&f, &prog, m)
+                let prog = codegen::lower_cpu(f, m);
+                super::cpu::simulate(f, &prog, m)
             }
             Target::Gpu(g) => {
-                let prog = codegen::lower_gpu(&f, g);
-                super::gpu::simulate(&f, &prog, g)
+                let prog = codegen::lower_gpu(f, g);
+                super::gpu::simulate(f, &prog, g)
             }
         }
     }
@@ -115,11 +134,12 @@ impl Device {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::tir::ops::Epilogue;
 
     #[test]
     fn measurement_accounting_accumulates() {
         let d = Device::new(TargetKind::Graviton2);
-        let op = OpSpec::Matmul { m: 64, n: 64, k: 64 };
+        let op = OpSpec::Matmul { m: 64, n: 64, k: 64, epilogue: Epilogue::None };
         let space = crate::transform::config_space(&op, d.kind);
         let before = d.device_seconds();
         let r = d.measure(&op, &space.default_config());
@@ -131,7 +151,7 @@ mod tests {
     #[test]
     fn run_does_not_charge_device_time() {
         let d = Device::new(TargetKind::Graviton2);
-        let op = OpSpec::Matmul { m: 64, n: 64, k: 64 };
+        let op = OpSpec::Matmul { m: 64, n: 64, k: 64, epilogue: Epilogue::None };
         let space = crate::transform::config_space(&op, d.kind);
         let _ = d.run(&op, &space.default_config());
         assert_eq!(d.device_seconds(), 0.0);
@@ -140,9 +160,34 @@ mod tests {
     #[test]
     fn gpu_device_works() {
         let d = Device::new(TargetKind::TeslaV100);
-        let op = OpSpec::Matmul { m: 128, n: 128, k: 64 };
+        let op = OpSpec::Matmul { m: 128, n: 128, k: 64, epilogue: Epilogue::None };
         let space = crate::transform::config_space(&op, d.kind);
         let r = d.measure(&op, &space.default_config());
         assert!(r.latency_s > 0.0);
+    }
+
+    /// The standalone pass simulates on both target families, costs
+    /// nonzero time, and — being memory-bound — stays well below its
+    /// producer's contraction latency.
+    #[test]
+    fn standalone_epilogue_pass_prices_on_both_targets() {
+        use crate::graph::{EpilogueTask, Layer};
+        for kind in [TargetKind::Graviton2, TargetKind::TeslaV100] {
+            let d = Device::new(kind);
+            let op = OpSpec::Matmul { m: 128, n: 128, k: 128, epilogue: Epilogue::None };
+            let layer = Layer::with_epilogue(op, 1, Epilogue::BiasRelu);
+            let task = EpilogueTask::for_layer(&layer).unwrap();
+            let pass = d.run_epilogue(&task);
+            assert!(pass.seconds > 0.0, "{kind:?}");
+            let space = crate::transform::config_space(&op, kind);
+            let producer = d.run(&op, &space.default_config());
+            assert!(
+                pass.seconds < producer.seconds,
+                "{kind:?}: pass {} !< producer {}",
+                pass.seconds,
+                producer.seconds
+            );
+            assert_eq!(d.device_seconds(), 0.0, "epilogue pass charged device time");
+        }
     }
 }

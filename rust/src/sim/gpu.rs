@@ -198,7 +198,7 @@ mod tests {
     use crate::codegen;
     use crate::isa::march::{jetson_xavier, tesla_v100};
     use crate::isa::TargetKind;
-    use crate::tir::ops::OpSpec;
+    use crate::tir::ops::{Epilogue, OpSpec};
     use crate::transform;
 
     fn sim(op: &OpSpec, gpu: &GpuArch, cfg_idx: u64) -> SimResult {
@@ -211,7 +211,7 @@ mod tests {
 
     #[test]
     fn v100_faster_than_xavier() {
-        let op = OpSpec::Matmul { m: 512, n: 512, k: 256 };
+        let op = OpSpec::Matmul { m: 512, n: 512, k: 256, epilogue: Epilogue::None };
         let v = sim(&op, &tesla_v100(), 0);
         let x = sim(&op, &jetson_xavier(), 0);
         assert!(x.seconds > 2.0 * v.seconds, "v100 {} xavier {}", v.seconds, x.seconds);
@@ -220,7 +220,7 @@ mod tests {
     #[test]
     fn roofline_respected() {
         let g = tesla_v100();
-        let op = OpSpec::Matmul { m: 1024, n: 1024, k: 512 };
+        let op = OpSpec::Matmul { m: 1024, n: 1024, k: 512, epilogue: Epilogue::None };
         let r = sim(&op, &g, 0);
         let min_s = op.flops() as f64 / (g.peak_gflops() * 1e9);
         assert!(r.seconds >= min_s, "sim {} beats roofline {min_s}", r.seconds);
@@ -229,7 +229,7 @@ mod tests {
     #[test]
     fn schedules_discriminated() {
         let g = tesla_v100();
-        let op = OpSpec::Matmul { m: 256, n: 256, k: 128 };
+        let op = OpSpec::Matmul { m: 256, n: 256, k: 128, epilogue: Epilogue::None };
         let kind = TargetKind::TeslaV100;
         let space = transform::config_space(&op, kind);
         let mut lats = Vec::new();
@@ -243,7 +243,8 @@ mod tests {
 
     #[test]
     fn launch_overhead_floors_tiny_kernels() {
-        let r = sim(&OpSpec::Matmul { m: 16, n: 16, k: 8 }, &tesla_v100(), 0);
+        let op = OpSpec::Matmul { m: 16, n: 16, k: 8, epilogue: Epilogue::None };
+        let r = sim(&op, &tesla_v100(), 0);
         assert!(r.seconds >= LAUNCH_OVERHEAD_S);
     }
 }

@@ -244,7 +244,7 @@ fn walk(nodes: &[PlanNode], env: &mut [i64], ops: &mut Vec<TraceOp>) {
 mod tests {
     use super::*;
     use crate::isa::TargetKind;
-    use crate::tir::ops::OpSpec;
+    use crate::tir::ops::{Epilogue, OpSpec};
     use crate::transform;
 
     fn bases_for(f: &crate::tir::TirFunc) -> Vec<u64> {
@@ -261,7 +261,7 @@ mod tests {
 
     #[test]
     fn small_nest_traced_fully() {
-        let op = OpSpec::Matmul { m: 16, n: 16, k: 16 };
+        let op = OpSpec::Matmul { m: 16, n: 16, k: 16, epilogue: Epilogue::None };
         let t = TargetKind::Graviton2;
         let s = transform::config_space(&op, t);
         let f = transform::apply(&op, t, &s.default_config());
@@ -273,7 +273,7 @@ mod tests {
 
     #[test]
     fn big_nest_is_sampled_and_scaled() {
-        let op = OpSpec::Matmul { m: 256, n: 256, k: 256 };
+        let op = OpSpec::Matmul { m: 256, n: 256, k: 256, epilogue: Epilogue::None };
         let t = TargetKind::Graviton2;
         let s = transform::config_space(&op, t);
         let f = transform::apply(&op, t, &s.default_config());
@@ -291,6 +291,7 @@ mod tests {
     fn addresses_stay_inside_buffers() {
         let op = OpSpec::Conv2d {
             n: 1, cin: 8, h: 14, w: 14, cout: 8, kh: 3, kw: 3, stride: 1, pad: 1,
+            epilogue: Epilogue::None,
         };
         let t = TargetKind::Graviton2;
         let s = transform::config_space(&op, t);

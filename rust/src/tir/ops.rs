@@ -5,16 +5,89 @@
 //! `batch_matrix_multiplication`) plus `dense`, which dominates BERT.
 //! An [`OpSpec`] is pure *what* (shapes, semantics, flops); the scheduled
 //! *how* lives in [`crate::transform`].
-
+//!
+//! Contraction ops can additionally carry a fused [`Epilogue`] — the
+//! elementwise bias/ReLU tail the surrounding graph would otherwise run
+//! as a separate memory-bound pass. A fused spec is a *distinct workload*
+//! (different flops, different cache key, different lowering), so fused
+//! and unfused variants of the same shape tune and cache independently;
+//! the graph layer ([`crate::graph::fuse`]) decides per layer which one
+//! deploys, by measured latency.
 
 use crate::util::json::Json;
 use std::fmt;
+
+/// The elementwise tail fused into a contraction op's output tile.
+///
+/// `None` is the default everywhere — omitted on the wire and in cache
+/// files, absent from `Display`/cache keys — so specs written before
+/// epilogues existed keep their exact serialized form and keep addressing
+/// the same cache entries.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum Epilogue {
+    /// Bare contraction, no fused tail.
+    #[default]
+    None,
+    /// Per-output-channel bias add: `C[..., c] += bias[c]`.
+    Bias,
+    /// Bias add followed by ReLU: `C = max(C + bias, 0)`.
+    BiasRelu,
+}
+
+impl Epilogue {
+    pub const ALL: [Epilogue; 3] = [Epilogue::None, Epilogue::Bias, Epilogue::BiasRelu];
+
+    /// Flops the tail adds per output element (add = 1, max = 1).
+    pub fn flops_per_elem(self) -> u64 {
+        match self {
+            Epilogue::None => 0,
+            Epilogue::Bias => 1,
+            Epilogue::BiasRelu => 2,
+        }
+    }
+
+    /// Canonical wire/JSON name. `None` has no wire form — it is encoded
+    /// by omission.
+    pub fn wire_name(self) -> &'static str {
+        match self {
+            Epilogue::None => "none",
+            Epilogue::Bias => "bias",
+            Epilogue::BiasRelu => "bias_relu",
+        }
+    }
+
+    /// Strict inverse of [`Self::wire_name`] for the non-`None` variants.
+    pub fn from_wire(s: &str) -> Option<Epilogue> {
+        match s {
+            "none" => Some(Epilogue::None),
+            "bias" => Some(Epilogue::Bias),
+            "bias_relu" => Some(Epilogue::BiasRelu),
+            _ => None,
+        }
+    }
+
+    /// Cache-key / `Display` suffix. Empty for `None` so every pre-fusion
+    /// key is byte-identical to what this code writes today.
+    pub fn key_suffix(self) -> &'static str {
+        match self {
+            Epilogue::None => "",
+            Epilogue::Bias => "_ebias",
+            Epilogue::BiasRelu => "_ebias_relu",
+        }
+    }
+}
+
+impl fmt::Display for Epilogue {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.wire_name())
+    }
+}
 
 /// A tensor-operator workload instance.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum OpSpec {
     /// `C[m,n] = Σ_k A[m,k]·B[k,n]` (dense layer: batch folded into m).
-    Matmul { m: i64, n: i64, k: i64 },
+    Matmul { m: i64, n: i64, k: i64, epilogue: Epilogue },
     /// `C[b,m,n] = Σ_k A[b,m,k]·B[b,k,n]` (attention score/context).
     BatchMatmul { b: i64, m: i64, n: i64, k: i64 },
     /// NCHW direct convolution.
@@ -28,6 +101,7 @@ pub enum OpSpec {
         kw: i64,
         stride: i64,
         pad: i64,
+        epilogue: Epilogue,
     },
     /// Depthwise convolution (channel multiplier 1).
     DepthwiseConv2d {
@@ -39,9 +113,13 @@ pub enum OpSpec {
         kw: i64,
         stride: i64,
         pad: i64,
+        epilogue: Epilogue,
     },
     /// Winograd F(m=2, r=3) convolution: input/weight transform, batched
     /// GEMM over tiles, output transform. Only valid for 3×3 stride-1.
+    /// Carries no epilogue — its 3-stage structure has no single output
+    /// tile to fuse into, so a Winograd alternative competes against fused
+    /// direct convolution by paying the standalone-pass cost instead.
     Conv2dWinograd {
         n: i64,
         cin: i64,
@@ -68,17 +146,91 @@ impl OpSpec {
         (size + 2 * pad - k) / stride + 1
     }
 
-    /// Theoretical flop count (mul+add = 2 flops).
-    pub fn flops(&self) -> u64 {
+    /// The fused epilogue, `Epilogue::None` for families that cannot
+    /// carry one (batched matmul, Winograd).
+    pub fn epilogue(&self) -> Epilogue {
         match *self {
-            OpSpec::Matmul { m, n, k } => (2 * m * n * k) as u64,
+            OpSpec::Matmul { epilogue, .. }
+            | OpSpec::Conv2d { epilogue, .. }
+            | OpSpec::DepthwiseConv2d { epilogue, .. } => epilogue,
+            OpSpec::BatchMatmul { .. } | OpSpec::Conv2dWinograd { .. } => Epilogue::None,
+        }
+    }
+
+    /// Whether this spec carries a fused (non-`None`) epilogue.
+    pub fn is_fused(&self) -> bool {
+        self.epilogue() != Epilogue::None
+    }
+
+    /// The same shape with `epilogue` fused in, or `None` for families
+    /// that cannot fuse one — the graph fusion pass's candidate builder.
+    pub fn with_epilogue(&self, epilogue: Epilogue) -> Option<OpSpec> {
+        let mut op = *self;
+        match &mut op {
+            OpSpec::Matmul { epilogue: e, .. }
+            | OpSpec::Conv2d { epilogue: e, .. }
+            | OpSpec::DepthwiseConv2d { epilogue: e, .. } => {
+                *e = epilogue;
+                Some(op)
+            }
+            OpSpec::BatchMatmul { .. } | OpSpec::Conv2dWinograd { .. } => {
+                if epilogue == Epilogue::None {
+                    Some(op)
+                } else {
+                    None
+                }
+            }
+        }
+    }
+
+    /// This shape with any fused epilogue stripped — the unfused tuning
+    /// task of the same contraction.
+    pub fn unfused(&self) -> OpSpec {
+        self.with_epilogue(Epilogue::None).expect("stripping an epilogue is always valid")
+    }
+
+    /// Output-tensor element count — the domain an epilogue (fused or
+    /// standalone) sweeps.
+    pub fn out_elems(&self) -> i64 {
+        match *self {
+            OpSpec::Matmul { m, n, .. } => m * n,
+            OpSpec::BatchMatmul { b, m, n, .. } => b * m * n,
+            OpSpec::Conv2d { n, h, w, cout, kh, kw, stride, pad, .. } => {
+                n * cout
+                    * Self::out_dim(h, kh, stride, pad)
+                    * Self::out_dim(w, kw, stride, pad)
+            }
+            OpSpec::DepthwiseConv2d { n, c, h, w, kh, kw, stride, pad, .. } => {
+                n * c * Self::out_dim(h, kh, stride, pad) * Self::out_dim(w, kw, stride, pad)
+            }
+            OpSpec::Conv2dWinograd { n, h, w, cout, .. } => n * cout * h * w,
+        }
+    }
+
+    /// Bias-vector length: one element per output channel (the `n` of a
+    /// dense layer, `cout`/`c` of a convolution).
+    pub fn bias_len(&self) -> i64 {
+        match *self {
+            OpSpec::Matmul { n, .. } => n,
+            OpSpec::BatchMatmul { n, .. } => n,
+            OpSpec::Conv2d { cout, .. } => cout,
+            OpSpec::DepthwiseConv2d { c, .. } => c,
+            OpSpec::Conv2dWinograd { cout, .. } => cout,
+        }
+    }
+
+    /// Theoretical flop count (mul+add = 2 flops). A fused epilogue adds
+    /// its per-element tail (bias add, ReLU max) on every output element.
+    pub fn flops(&self) -> u64 {
+        let contraction = match *self {
+            OpSpec::Matmul { m, n, k, .. } => (2 * m * n * k) as u64,
             OpSpec::BatchMatmul { b, m, n, k } => (2 * b * m * n * k) as u64,
-            OpSpec::Conv2d { n, cin, h, w, cout, kh, kw, stride, pad } => {
+            OpSpec::Conv2d { n, cin, h, w, cout, kh, kw, stride, pad, .. } => {
                 let oh = Self::out_dim(h, kh, stride, pad);
                 let ow = Self::out_dim(w, kw, stride, pad);
                 (2 * n * cout * oh * ow * cin * kh * kw) as u64
             }
-            OpSpec::DepthwiseConv2d { n, c, h, w, kh, kw, stride, pad } => {
+            OpSpec::DepthwiseConv2d { n, c, h, w, kh, kw, stride, pad, .. } => {
                 let oh = Self::out_dim(h, kh, stride, pad);
                 let ow = Self::out_dim(w, kw, stride, pad);
                 (2 * n * c * oh * ow * kh * kw) as u64
@@ -96,21 +248,24 @@ impl OpSpec {
                 let xform_out = 32 * cout * tiles; // 2*2*4 muladds * 2 flops
                 (gemm + xform_in + xform_out) as u64
             }
-        }
+        };
+        contraction + self.epilogue().flops_per_elem() * self.out_elems() as u64
     }
 
     /// Total bytes of all input+output tensors (f32), a memory-traffic
-    /// lower bound used by roofline reporting.
+    /// lower bound used by roofline reporting. A fused epilogue adds only
+    /// its bias vector — the whole point of fusing is that the output
+    /// tensor is *not* read back and rewritten by a second pass.
     pub fn min_bytes(&self) -> u64 {
         let elems: i64 = match *self {
-            OpSpec::Matmul { m, n, k } => m * k + k * n + m * n,
+            OpSpec::Matmul { m, n, k, .. } => m * k + k * n + m * n,
             OpSpec::BatchMatmul { b, m, n, k } => b * (m * k + k * n + m * n),
-            OpSpec::Conv2d { n, cin, h, w, cout, kh, kw, stride, pad } => {
+            OpSpec::Conv2d { n, cin, h, w, cout, kh, kw, stride, pad, .. } => {
                 let oh = Self::out_dim(h, kh, stride, pad);
                 let ow = Self::out_dim(w, kw, stride, pad);
                 n * cin * h * w + cout * cin * kh * kw + n * cout * oh * ow
             }
-            OpSpec::DepthwiseConv2d { n, c, h, w, kh, kw, stride, pad } => {
+            OpSpec::DepthwiseConv2d { n, c, h, w, kh, kw, stride, pad, .. } => {
                 let oh = Self::out_dim(h, kh, stride, pad);
                 let ow = Self::out_dim(w, kw, stride, pad);
                 n * c * h * w + c * kh * kw + n * c * oh * ow
@@ -119,7 +274,8 @@ impl OpSpec {
                 n * cin * h * w + cout * cin * 9 + n * cout * h * w
             }
         };
-        elems as u64 * 4
+        let bias = if self.is_fused() { self.bias_len() } else { 0 };
+        (elems + bias) as u64 * 4
     }
 
     /// Arithmetic intensity in flops/byte (roofline x-axis).
@@ -136,21 +292,26 @@ impl OpSpec {
     /// names of [`Self::kind_name`]. This is what makes persisted schedule-
     /// cache entries *self-describing* — a process that never saw the
     /// workload can recover the exact `OpSpec` from the entry alone.
+    ///
+    /// A non-`None` epilogue is an extra `"epilogue"` string field; `None`
+    /// is encoded by omission, so unfused specs (and every spec written
+    /// before epilogues existed) serialize byte-identically to the
+    /// pre-fusion format.
     pub fn to_json(&self) -> Json {
         let kind = Json::Str(self.kind_name().into());
         let num = |v: i64| Json::Num(v as f64);
-        match *self {
-            OpSpec::Matmul { m, n, k } => {
-                Json::obj(vec![("kind", kind), ("m", num(m)), ("n", num(n)), ("k", num(k))])
+        let mut fields = match *self {
+            OpSpec::Matmul { m, n, k, .. } => {
+                vec![("kind", kind), ("m", num(m)), ("n", num(n)), ("k", num(k))]
             }
-            OpSpec::BatchMatmul { b, m, n, k } => Json::obj(vec![
+            OpSpec::BatchMatmul { b, m, n, k } => vec![
                 ("kind", kind),
                 ("b", num(b)),
                 ("m", num(m)),
                 ("n", num(n)),
                 ("k", num(k)),
-            ]),
-            OpSpec::Conv2d { n, cin, h, w, cout, kh, kw, stride, pad } => Json::obj(vec![
+            ],
+            OpSpec::Conv2d { n, cin, h, w, cout, kh, kw, stride, pad, .. } => vec![
                 ("kind", kind),
                 ("n", num(n)),
                 ("cin", num(cin)),
@@ -161,8 +322,8 @@ impl OpSpec {
                 ("kw", num(kw)),
                 ("stride", num(stride)),
                 ("pad", num(pad)),
-            ]),
-            OpSpec::DepthwiseConv2d { n, c, h, w, kh, kw, stride, pad } => Json::obj(vec![
+            ],
+            OpSpec::DepthwiseConv2d { n, c, h, w, kh, kw, stride, pad, .. } => vec![
                 ("kind", kind),
                 ("n", num(n)),
                 ("c", num(c)),
@@ -172,21 +333,27 @@ impl OpSpec {
                 ("kw", num(kw)),
                 ("stride", num(stride)),
                 ("pad", num(pad)),
-            ]),
-            OpSpec::Conv2dWinograd { n, cin, h, w, cout } => Json::obj(vec![
+            ],
+            OpSpec::Conv2dWinograd { n, cin, h, w, cout } => vec![
                 ("kind", kind),
                 ("n", num(n)),
                 ("cin", num(cin)),
                 ("h", num(h)),
                 ("w", num(w)),
                 ("cout", num(cout)),
-            ]),
+            ],
+        };
+        if self.is_fused() {
+            fields.push(("epilogue", Json::Str(self.epilogue().wire_name().into())));
         }
+        Json::obj(fields)
     }
 
     /// Parse the [`Self::to_json`] form. Dimensions must be integral
     /// numbers — a fractional or absurd value marks a corrupt record and
-    /// fails the parse rather than silently truncating.
+    /// fails the parse rather than silently truncating. A missing
+    /// `"epilogue"` field is `Epilogue::None` (every pre-fusion record),
+    /// and an epilogue on a family that cannot fuse one is an error.
     pub fn from_json(j: &Json) -> Result<OpSpec, String> {
         let kind = j
             .get("kind")
@@ -202,15 +369,24 @@ impl OpSpec {
             }
             Ok(v as i64)
         };
-        match kind {
-            "dense" => Ok(OpSpec::Matmul { m: dim("m")?, n: dim("n")?, k: dim("k")? }),
-            "batch_matmul" => Ok(OpSpec::BatchMatmul {
+        let epilogue = match j.get("epilogue") {
+            None => Epilogue::None,
+            Some(v) => {
+                let s = v.as_str().ok_or("op 'epilogue' must be a string")?;
+                Epilogue::from_wire(s).ok_or_else(|| {
+                    format!("unknown epilogue {s:?} (none|bias|bias_relu)")
+                })?
+            }
+        };
+        let op = match kind {
+            "dense" => OpSpec::Matmul { m: dim("m")?, n: dim("n")?, k: dim("k")?, epilogue },
+            "batch_matmul" => OpSpec::BatchMatmul {
                 b: dim("b")?,
                 m: dim("m")?,
                 n: dim("n")?,
                 k: dim("k")?,
-            }),
-            "conv2d" => Ok(OpSpec::Conv2d {
+            },
+            "conv2d" => OpSpec::Conv2d {
                 n: dim("n")?,
                 cin: dim("cin")?,
                 h: dim("h")?,
@@ -220,8 +396,9 @@ impl OpSpec {
                 kw: dim("kw")?,
                 stride: dim("stride")?,
                 pad: dim("pad")?,
-            }),
-            "depthwise_conv2d" => Ok(OpSpec::DepthwiseConv2d {
+                epilogue,
+            },
+            "depthwise_conv2d" => OpSpec::DepthwiseConv2d {
                 n: dim("n")?,
                 c: dim("c")?,
                 h: dim("h")?,
@@ -230,30 +407,42 @@ impl OpSpec {
                 kw: dim("kw")?,
                 stride: dim("stride")?,
                 pad: dim("pad")?,
-            }),
-            "conv2d_winograd" => Ok(OpSpec::Conv2dWinograd {
+                epilogue,
+            },
+            "conv2d_winograd" => OpSpec::Conv2dWinograd {
                 n: dim("n")?,
                 cin: dim("cin")?,
                 h: dim("h")?,
                 w: dim("w")?,
                 cout: dim("cout")?,
-            }),
-            other => Err(format!("unknown op kind {other:?}")),
+            },
+            other => return Err(format!("unknown op kind {other:?}")),
+        };
+        if epilogue != Epilogue::None && op.epilogue() != epilogue {
+            return Err(format!("op kind {kind:?} cannot carry an epilogue"));
         }
+        Ok(op)
     }
 }
 
 impl fmt::Display for OpSpec {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         match *self {
-            OpSpec::Matmul { m, n, k } => write!(f, "dense_m{m}_n{n}_k{k}"),
+            OpSpec::Matmul { m, n, k, epilogue } => {
+                write!(f, "dense_m{m}_n{n}_k{k}{}", epilogue.key_suffix())
+            }
             OpSpec::BatchMatmul { b, m, n, k } => write!(f, "bmm_b{b}_m{m}_n{n}_k{k}"),
-            OpSpec::Conv2d { n, cin, h, w, cout, kh, kw, stride, pad } => write!(
+            OpSpec::Conv2d { n, cin, h, w, cout, kh, kw, stride, pad, epilogue } => write!(
                 f,
-                "conv2d_n{n}_c{cin}_hw{h}x{w}_o{cout}_k{kh}x{kw}_s{stride}_p{pad}"
+                "conv2d_n{n}_c{cin}_hw{h}x{w}_o{cout}_k{kh}x{kw}_s{stride}_p{pad}{}",
+                epilogue.key_suffix()
             ),
-            OpSpec::DepthwiseConv2d { n, c, h, w, kh, kw, stride, pad } => {
-                write!(f, "dwconv_n{n}_c{c}_hw{h}x{w}_k{kh}x{kw}_s{stride}_p{pad}")
+            OpSpec::DepthwiseConv2d { n, c, h, w, kh, kw, stride, pad, epilogue } => {
+                write!(
+                    f,
+                    "dwconv_n{n}_c{c}_hw{h}x{w}_k{kh}x{kw}_s{stride}_p{pad}{}",
+                    epilogue.key_suffix()
+                )
             }
             OpSpec::Conv2dWinograd { n, cin, h, w, cout } => {
                 write!(f, "winograd_n{n}_c{cin}_hw{h}x{w}_o{cout}")
@@ -265,14 +454,25 @@ impl fmt::Display for OpSpec {
 /// The representative single-operator shapes used by Figures 3/4 (ResNet-
 /// and BERT-class layer sizes).
 pub fn figure_op_suite() -> Vec<OpSpec> {
+    let e = Epilogue::None;
     vec![
-        OpSpec::Conv2d { n: 1, cin: 64, h: 56, w: 56, cout: 64, kh: 3, kw: 3, stride: 1, pad: 1 },
-        OpSpec::Conv2d { n: 1, cin: 128, h: 28, w: 28, cout: 128, kh: 3, kw: 3, stride: 1, pad: 1 },
-        OpSpec::Conv2d { n: 1, cin: 256, h: 14, w: 14, cout: 256, kh: 3, kw: 3, stride: 1, pad: 1 },
+        OpSpec::Conv2d {
+            n: 1, cin: 64, h: 56, w: 56, cout: 64, kh: 3, kw: 3, stride: 1, pad: 1, epilogue: e,
+        },
+        OpSpec::Conv2d {
+            n: 1, cin: 128, h: 28, w: 28, cout: 128, kh: 3, kw: 3, stride: 1, pad: 1, epilogue: e,
+        },
+        OpSpec::Conv2d {
+            n: 1, cin: 256, h: 14, w: 14, cout: 256, kh: 3, kw: 3, stride: 1, pad: 1, epilogue: e,
+        },
         OpSpec::Conv2dWinograd { n: 1, cin: 64, h: 56, w: 56, cout: 64 },
         OpSpec::Conv2dWinograd { n: 1, cin: 128, h: 28, w: 28, cout: 128 },
-        OpSpec::DepthwiseConv2d { n: 1, c: 96, h: 112, w: 112, kh: 3, kw: 3, stride: 2, pad: 1 },
-        OpSpec::DepthwiseConv2d { n: 1, c: 144, h: 56, w: 56, kh: 3, kw: 3, stride: 1, pad: 1 },
+        OpSpec::DepthwiseConv2d {
+            n: 1, c: 96, h: 112, w: 112, kh: 3, kw: 3, stride: 2, pad: 1, epilogue: e,
+        },
+        OpSpec::DepthwiseConv2d {
+            n: 1, c: 144, h: 56, w: 56, kh: 3, kw: 3, stride: 1, pad: 1, epilogue: e,
+        },
         OpSpec::BatchMatmul { b: 12, m: 128, n: 128, k: 64 },
         OpSpec::BatchMatmul { b: 12, m: 128, n: 64, k: 128 },
     ]
@@ -291,7 +491,7 @@ mod tests {
 
     #[test]
     fn matmul_flops() {
-        let op = OpSpec::Matmul { m: 128, n: 128, k: 128 };
+        let op = OpSpec::Matmul { m: 128, n: 128, k: 128, epilogue: Epilogue::None };
         assert_eq!(op.flops(), 2 * 128 * 128 * 128);
     }
 
@@ -299,8 +499,27 @@ mod tests {
     fn conv_flops_match_formula() {
         let op = OpSpec::Conv2d {
             n: 1, cin: 64, h: 56, w: 56, cout: 64, kh: 3, kw: 3, stride: 1, pad: 1,
+            epilogue: Epilogue::None,
         };
         assert_eq!(op.flops(), 2 * 64 * 56 * 56 * 64 * 9);
+    }
+
+    #[test]
+    fn epilogue_adds_tail_flops_and_bias_bytes() {
+        let base = OpSpec::Matmul { m: 32, n: 48, k: 16, epilogue: Epilogue::None };
+        let bias = base.with_epilogue(Epilogue::Bias).unwrap();
+        let relu = base.with_epilogue(Epilogue::BiasRelu).unwrap();
+        assert_eq!(bias.flops(), base.flops() + 32 * 48);
+        assert_eq!(relu.flops(), base.flops() + 2 * 32 * 48);
+        // fused bias adds exactly the bias vector's bytes — no output
+        // round trip
+        assert_eq!(bias.min_bytes(), base.min_bytes() + 48 * 4);
+        assert_eq!(relu.min_bytes(), bias.min_bytes());
+        assert_eq!(relu.unfused(), base);
+        // non-fusable families refuse an epilogue
+        let bmm = OpSpec::BatchMatmul { b: 2, m: 4, n: 4, k: 4 };
+        assert_eq!(bmm.with_epilogue(Epilogue::Bias), None);
+        assert_eq!(bmm.with_epilogue(Epilogue::None), Some(bmm));
     }
 
     #[test]
@@ -312,24 +531,44 @@ mod tests {
 
     #[test]
     fn display_stable() {
-        let op = OpSpec::Matmul { m: 1, n: 2, k: 3 };
+        // pre-fusion keys must stay byte-identical (old cache files
+        // address entries by these strings)
+        let op = OpSpec::Matmul { m: 1, n: 2, k: 3, epilogue: Epilogue::None };
         assert_eq!(op.cache_key(), "dense_m1_n2_k3");
+        assert_eq!(
+            op.with_epilogue(Epilogue::Bias).unwrap().cache_key(),
+            "dense_m1_n2_k3_ebias"
+        );
+        assert_eq!(
+            op.with_epilogue(Epilogue::BiasRelu).unwrap().cache_key(),
+            "dense_m1_n2_k3_ebias_relu"
+        );
     }
 
     #[test]
     fn json_roundtrips_every_variant() {
-        let ops = [
-            OpSpec::Matmul { m: 128, n: 768, k: 768 },
+        let mut ops = vec![
             OpSpec::BatchMatmul { b: 12, m: 128, n: 128, k: 64 },
-            OpSpec::Conv2d { n: 1, cin: 64, h: 56, w: 56, cout: 64, kh: 3, kw: 3, stride: 1, pad: 1 },
-            OpSpec::DepthwiseConv2d { n: 1, c: 96, h: 112, w: 112, kh: 3, kw: 3, stride: 2, pad: 1 },
             OpSpec::Conv2dWinograd { n: 1, cin: 64, h: 56, w: 56, cout: 64 },
         ];
+        for ep in Epilogue::ALL {
+            ops.push(OpSpec::Matmul { m: 128, n: 768, k: 768, epilogue: ep });
+            ops.push(OpSpec::Conv2d {
+                n: 1, cin: 64, h: 56, w: 56, cout: 64, kh: 3, kw: 3, stride: 1, pad: 1,
+                epilogue: ep,
+            });
+            ops.push(OpSpec::DepthwiseConv2d {
+                n: 1, c: 96, h: 112, w: 112, kh: 3, kw: 3, stride: 2, pad: 1, epilogue: ep,
+            });
+        }
         for op in ops {
             // through text too, so the writer/parser pair is covered
             let text = op.to_json().to_string();
             let back = OpSpec::from_json(&Json::parse(&text).unwrap()).unwrap();
             assert_eq!(back, op, "{op} mangled by the JSON round trip");
+            // an unfused spec serializes with no epilogue field at all —
+            // byte-compatibility with pre-fusion writers
+            assert_eq!(text.contains("epilogue"), op.is_fused(), "{text}");
         }
     }
 
@@ -341,9 +580,20 @@ mod tests {
             r#"{"kind":"dense","m":1.5,"n":2,"k":3}"#,      // fractional dim
             r#"{"kind":"sparse","m":1,"n":2,"k":3}"#,       // unknown family
             r#"{"kind":"dense","m":"x","n":2,"k":3}"#,      // non-numeric dim
+            // unknown epilogue name
+            r#"{"kind":"dense","m":1,"n":2,"k":3,"epilogue":"gelu"}"#,
+            // an epilogue on a family that cannot fuse one
+            r#"{"kind":"batch_matmul","b":1,"m":2,"n":3,"k":4,"epilogue":"bias"}"#,
+            r#"{"kind":"conv2d_winograd","n":1,"cin":2,"h":4,"w":4,"cout":8,"epilogue":"bias"}"#,
         ] {
             let j = Json::parse(bad).unwrap();
             assert!(OpSpec::from_json(&j).is_err(), "accepted {bad}");
         }
+        // explicit "none" is accepted (tolerant reader) and normalizes to
+        // the omitted form
+        let j = Json::parse(r#"{"kind":"dense","m":1,"n":2,"k":3,"epilogue":"none"}"#).unwrap();
+        let op = OpSpec::from_json(&j).unwrap();
+        assert_eq!(op, OpSpec::Matmul { m: 1, n: 2, k: 3, epilogue: Epilogue::None });
+        assert!(!op.to_json().to_string().contains("epilogue"));
     }
 }

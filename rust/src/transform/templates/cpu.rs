@@ -6,10 +6,13 @@
 //! toggles on the small reduction loops, and thread-parallelism on the
 //! outermost loop.
 
-use super::{nest, tile_candidates, LoopSpec};
+use super::{epilogue_tail, nest, tile_candidates, LoopSpec};
 use crate::isa::TargetKind;
 use crate::isets::Affine;
-use crate::tir::{ops::OpSpec, Access, LoopKind, Stmt, StmtOp, TirFunc};
+use crate::tir::{
+    ops::{Epilogue, OpSpec},
+    Access, LoopKind, Stmt, StmtOp, TirFunc,
+};
 use crate::transform::primitives as prim;
 use crate::transform::space::{ConfigSpace, ScheduleConfig};
 
@@ -19,7 +22,7 @@ const CAP: usize = 6;
 
 pub fn space_for(op: &OpSpec, _target: TargetKind) -> ConfigSpace {
     match *op {
-        OpSpec::Matmul { m, n, k } => ConfigSpace::new()
+        OpSpec::Matmul { m, n, k, .. } => ConfigSpace::new()
             .int_knob("tile_m", tile_candidates(m, 128, CAP + 2))
             .int_knob("tile_n", tile_candidates(n, 128, CAP + 2))
             .int_knob("tile_k", tile_candidates(k, 128, CAP + 2))
@@ -63,13 +66,13 @@ pub fn build(op: &OpSpec, target: TargetKind, cfg: &ScheduleConfig) -> TirFunc {
     let space = space_for(op, target);
     assert!(space.contains(cfg), "config does not belong to space of {op}");
     match *op {
-        OpSpec::Matmul { m, n, k } => build_matmul(m, n, k, &space, cfg),
+        OpSpec::Matmul { m, n, k, epilogue } => build_matmul(m, n, k, epilogue, &space, cfg),
         OpSpec::BatchMatmul { b, m, n, k } => build_bmm(b, m, n, k, &space, cfg),
-        OpSpec::Conv2d { n, cin, h, w, cout, kh, kw, stride, pad } => {
-            build_conv2d(n, cin, h, w, cout, kh, kw, stride, pad, &space, cfg)
+        OpSpec::Conv2d { n, cin, h, w, cout, kh, kw, stride, pad, epilogue } => {
+            build_conv2d(n, cin, h, w, cout, kh, kw, stride, pad, epilogue, &space, cfg)
         }
-        OpSpec::DepthwiseConv2d { n, c, h, w, kh, kw, stride, pad } => {
-            build_depthwise(n, c, h, w, kh, kw, stride, pad, &space, cfg)
+        OpSpec::DepthwiseConv2d { n, c, h, w, kh, kw, stride, pad, epilogue } => {
+            build_depthwise(n, c, h, w, kh, kw, stride, pad, epilogue, &space, cfg)
         }
         OpSpec::Conv2dWinograd { n, cin, h, w, cout } => {
             build_winograd(n, cin, h, w, cout, &space, cfg)
@@ -78,15 +81,24 @@ pub fn build(op: &OpSpec, target: TargetKind, cfg: &ScheduleConfig) -> TirFunc {
 }
 
 /// Matmul: built from the *naive* nest by real transformations —
-/// split×3, reorder, parallel/vectorize/unroll annotations.
-fn build_matmul(m: i64, n: i64, k: i64, space: &ConfigSpace, cfg: &ScheduleConfig) -> TirFunc {
+/// split×3, reorder, parallel/vectorize/unroll annotations. A fused
+/// epilogue appends a bias/ReLU sweep of the (cache-resident) output
+/// right behind the contraction — no standalone pass, no extra kernel.
+fn build_matmul(
+    m: i64,
+    n: i64,
+    k: i64,
+    e: Epilogue,
+    space: &ConfigSpace,
+    cfg: &ScheduleConfig,
+) -> TirFunc {
     let tm = space.get_int(cfg, "tile_m");
     let tn = space.get_int(cfg, "tile_n");
     let tk = space.get_int(cfg, "tile_k");
     let order = space.get_tag(cfg, "order").to_string();
     let unroll_k = space.get_int(cfg, "unroll_k") == 1;
 
-    let mut f = TirFunc::new(format!("dense_m{m}_n{n}_k{k}"));
+    let mut f = TirFunc::new(format!("dense_m{m}_n{n}_k{k}{}", e.key_suffix()));
     let a = f.add_buffer("A", vec![m, k]);
     let b = f.add_buffer("B", vec![k, n]);
     let c = f.add_buffer("C", vec![m, n]);
@@ -123,6 +135,18 @@ fn build_matmul(m: i64, n: i64, k: i64, space: &ConfigSpace, cfg: &ScheduleConfi
     prim::annotate(&mut f, ni, LoopKind::Vectorize);
     if unroll_k && tk <= 16 {
         prim::annotate(&mut f, ki, LoopKind::Unroll);
+    }
+    if e != Epilogue::None {
+        let bias = f.add_buffer("BIAS", vec![n]);
+        let tail = epilogue_tail(
+            &mut f,
+            e,
+            c,
+            bias,
+            &[("e.m", m, LoopKind::Parallel), ("e.n", n, LoopKind::Vectorize)],
+            |v| (vec![Affine::var(v[0]), Affine::var(v[1])], Affine::var(v[1])),
+        );
+        f.body.push(tail);
     }
     f
 }
@@ -192,6 +216,7 @@ fn build_conv2d(
     kw: i64,
     stride: i64,
     pad: i64,
+    e: Epilogue,
     space: &ConfigSpace,
     cfg: &ScheduleConfig,
 ) -> TirFunc {
@@ -204,7 +229,8 @@ fn build_conv2d(
     let ci_outer = space.get_tag(cfg, "ci_order") == "ci_outer";
     let unroll_kw = space.get_int(cfg, "unroll_kw") == 1;
 
-    let mut f = TirFunc::new(format!("conv2d_c{cin}_o{cout}_{h}x{w}_{layout}"));
+    let mut f =
+        TirFunc::new(format!("conv2d_c{cin}_o{cout}_{h}x{w}_{layout}{}", e.key_suffix()));
     let kw_kind = if unroll_kw { LoopKind::Unroll } else { LoopKind::Serial };
 
     if layout == "nchwc" {
@@ -288,6 +314,27 @@ fn build_conv2d(
             }
         });
         f.body = vec![node];
+        if e != Epilogue::None {
+            let bias = f.add_buffer("BIAS", vec![cout]);
+            let tail = epilogue_tail(
+                &mut f,
+                e,
+                out,
+                bias,
+                &[
+                    ("e.n", n, LoopKind::Serial),
+                    ("e.co.o", cout / tco, LoopKind::Parallel),
+                    ("e.oh", oh, LoopKind::Serial),
+                    ("e.ow", ow, LoopKind::Serial),
+                    ("e.co.i", tco, LoopKind::Vectorize),
+                ],
+                |v| {
+                    let oi = v.iter().map(|&x| Affine::var(x)).collect();
+                    (oi, Affine::scaled(v[1], tco).add(&Affine::var(v[4])))
+                },
+            );
+            f.body.push(tail);
+        }
     } else {
         let inp = f.add_buffer("IN", vec![n, cin, hp, wp]);
         let wgt = f.add_buffer("W", vec![cout, cin, kh, kw]);
@@ -357,6 +404,26 @@ fn build_conv2d(
             }
         });
         f.body = vec![node];
+        if e != Epilogue::None {
+            let bias = f.add_buffer("BIAS", vec![cout]);
+            let tail = epilogue_tail(
+                &mut f,
+                e,
+                out,
+                bias,
+                &[
+                    ("e.n", n, LoopKind::Serial),
+                    ("e.co", cout, LoopKind::Parallel),
+                    ("e.oh", oh, LoopKind::Serial),
+                    ("e.ow", ow, LoopKind::Vectorize),
+                ],
+                |v| {
+                    let oi = v.iter().map(|&x| Affine::var(x)).collect();
+                    (oi, Affine::var(v[1]))
+                },
+            );
+            f.body.push(tail);
+        }
     }
     f
 }
@@ -372,6 +439,7 @@ fn build_depthwise(
     kw: i64,
     stride: i64,
     pad: i64,
+    e: Epilogue,
     space: &ConfigSpace,
     cfg: &ScheduleConfig,
 ) -> TirFunc {
@@ -384,7 +452,7 @@ fn build_depthwise(
     let unroll_kw = space.get_int(cfg, "unroll_kw") == 1;
     let kw_kind = if unroll_kw { LoopKind::Unroll } else { LoopKind::Serial };
 
-    let mut f = TirFunc::new(format!("dwconv_c{c}_{h}x{w}_{layout}"));
+    let mut f = TirFunc::new(format!("dwconv_c{c}_{h}x{w}_{layout}{}", e.key_suffix()));
     if layout == "nchwc" {
         let inp = f.add_buffer("IN5", vec![n, c / tc, hp, wp, tc]);
         let wgt = f.add_buffer("W3", vec![c / tc, kh, kw, tc]);
@@ -441,6 +509,27 @@ fn build_depthwise(
             }
         });
         f.body = vec![node];
+        if e != Epilogue::None {
+            let bias = f.add_buffer("BIAS", vec![c]);
+            let tail = epilogue_tail(
+                &mut f,
+                e,
+                out,
+                bias,
+                &[
+                    ("e.n", n, LoopKind::Serial),
+                    ("e.c.o", c / tc, LoopKind::Parallel),
+                    ("e.oh", oh, LoopKind::Serial),
+                    ("e.ow", ow, LoopKind::Serial),
+                    ("e.c.i", tc, LoopKind::Vectorize),
+                ],
+                |v| {
+                    let oi = v.iter().map(|&x| Affine::var(x)).collect();
+                    (oi, Affine::scaled(v[1], tc).add(&Affine::var(v[4])))
+                },
+            );
+            f.body.push(tail);
+        }
     } else {
         let inp = f.add_buffer("IN", vec![n, c, hp, wp]);
         let wgt = f.add_buffer("W", vec![c, kh, kw]);
@@ -481,6 +570,26 @@ fn build_depthwise(
             }
         });
         f.body = vec![node];
+        if e != Epilogue::None {
+            let bias = f.add_buffer("BIAS", vec![c]);
+            let tail = epilogue_tail(
+                &mut f,
+                e,
+                out,
+                bias,
+                &[
+                    ("e.n", n, LoopKind::Serial),
+                    ("e.c", c, LoopKind::Parallel),
+                    ("e.oh", oh, LoopKind::Serial),
+                    ("e.ow", ow, LoopKind::Vectorize),
+                ],
+                |v| {
+                    let oi = v.iter().map(|&x| Affine::var(x)).collect();
+                    (oi, Affine::var(v[1]))
+                },
+            );
+            f.body.push(tail);
+        }
     }
     f
 }
@@ -634,7 +743,7 @@ mod tests {
 
     #[test]
     fn matmul_flops_invariant_across_configs() {
-        let op = OpSpec::Matmul { m: 64, n: 64, k: 64 };
+        let op = OpSpec::Matmul { m: 64, n: 64, k: 64, epilogue: Epilogue::None };
         let space = space_for(&op, Graviton2);
         let expected = op.flops();
         for idx in [0u64, 7, 31, space.size() - 1] {
@@ -647,6 +756,7 @@ mod tests {
     fn conv2d_both_layouts_preserve_flops() {
         let op = OpSpec::Conv2d {
             n: 1, cin: 16, h: 14, w: 14, cout: 16, kh: 3, kw: 3, stride: 1, pad: 1,
+            epilogue: Epilogue::None,
         };
         let space = space_for(&op, Graviton2);
         let expected = op.flops();
@@ -660,11 +770,46 @@ mod tests {
     fn depthwise_flops() {
         let op = OpSpec::DepthwiseConv2d {
             n: 1, c: 16, h: 14, w: 14, kh: 3, kw: 3, stride: 1, pad: 1,
+            epilogue: Epilogue::None,
         };
         let space = space_for(&op, Graviton2);
         for idx in 0..space.size().min(32) {
             let f = build(&op, Graviton2, &space.from_index(idx));
             assert_eq!(f.total_flops(), op.flops(), "config {idx}");
+        }
+    }
+
+    /// Fused variants share the unfused op's config space (the epilogue
+    /// adds no knobs) and their lowered flops include exactly the tail.
+    #[test]
+    fn fused_epilogues_lower_with_tail_flops() {
+        let bases = [
+            OpSpec::Matmul { m: 32, n: 32, k: 32, epilogue: Epilogue::None },
+            OpSpec::Conv2d {
+                n: 1, cin: 8, h: 14, w: 14, cout: 16, kh: 3, kw: 3, stride: 1, pad: 1,
+                epilogue: Epilogue::None,
+            },
+            OpSpec::DepthwiseConv2d {
+                n: 1, c: 16, h: 14, w: 14, kh: 3, kw: 3, stride: 1, pad: 1,
+                epilogue: Epilogue::None,
+            },
+        ];
+        for base in bases {
+            let base_space = space_for(&base, Graviton2);
+            for e in [Epilogue::Bias, Epilogue::BiasRelu] {
+                let op = base.with_epilogue(e).unwrap();
+                let space = space_for(&op, Graviton2);
+                assert_eq!(space.fingerprint(), base_space.fingerprint(), "{op}");
+                for idx in 0..space.size().min(24) {
+                    let f = build(&op, Graviton2, &space.from_index(idx));
+                    assert_eq!(f.total_flops(), op.flops(), "{op} config {idx}");
+                    assert_eq!(
+                        f.total_flops() - base.flops(),
+                        e.flops_per_elem() * op.out_elems() as u64,
+                        "{op} tail flops"
+                    );
+                }
+            }
         }
     }
 

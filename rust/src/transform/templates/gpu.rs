@@ -8,10 +8,13 @@
 //! cooperative loads) — exactly how AutoTVM's CUDA templates prune their
 //! spaces. Convolutions use register tiling with direct global loads.
 
-use super::{nest, nest_multi, LoopSpec};
+use super::{epilogue_tail, nest, nest_multi, LoopSpec};
 use crate::isa::TargetKind;
 use crate::isets::Affine;
-use crate::tir::{ops::OpSpec, Access, LoopKind, MemSpace, Stmt, StmtOp, TirFunc, TirNode};
+use crate::tir::{
+    ops::{Epilogue, OpSpec},
+    Access, LoopKind, MemSpace, Stmt, StmtOp, TirFunc, TirNode,
+};
 use crate::transform::space::{ConfigSpace, ScheduleConfig};
 
 /// Valid GEMM tile tuple encoded as "BM.BN.KS.TM.TN".
@@ -109,7 +112,7 @@ fn parse_tile(s: &str) -> Vec<i64> {
 
 pub fn space_for(op: &OpSpec, _target: TargetKind) -> ConfigSpace {
     match *op {
-        OpSpec::Matmul { m, n, k } => ConfigSpace::new()
+        OpSpec::Matmul { m, n, k, .. } => ConfigSpace::new()
             .tag_knob(
                 "tile",
                 &gemm_tiles(m, n, k).iter().map(|s| s.as_str()).collect::<Vec<_>>(),
@@ -158,31 +161,40 @@ pub fn build(op: &OpSpec, target: TargetKind, cfg: &ScheduleConfig) -> TirFunc {
     let space = space_for(op, target);
     assert!(space.contains(cfg), "config does not belong to space of {op}");
     match *op {
-        OpSpec::Matmul { m, n, k } => build_gemm("gemm", 1, m, n, k, &space, cfg),
-        OpSpec::BatchMatmul { b, m, n, k } => build_gemm("bmm", b, m, n, k, &space, cfg),
+        OpSpec::Matmul { m, n, k, epilogue } => {
+            build_gemm("gemm", 1, m, n, k, epilogue, &space, cfg)
+        }
+        OpSpec::BatchMatmul { b, m, n, k } => {
+            build_gemm("bmm", b, m, n, k, Epilogue::None, &space, cfg)
+        }
         // GPU winograd: the batched GEMM over the 16-point transformed
         // domain dominates; transforms are fused elementwise kernels whose
         // cost the network aggregator charges separately (see DESIGN.md).
         OpSpec::Conv2dWinograd { n, cin, h, w, cout } => {
             let nt = n * (h / 2) * (w / 2);
-            build_gemm("winograd_gemm", 16, cout, nt, cin, &space, cfg)
+            build_gemm("winograd_gemm", 16, cout, nt, cin, Epilogue::None, &space, cfg)
         }
-        OpSpec::Conv2d { n, cin, h, w, cout, kh, kw, stride, pad } => {
-            build_conv(n, cin, h, w, cout, kh, kw, stride, pad, &space, cfg, false)
+        OpSpec::Conv2d { n, cin, h, w, cout, kh, kw, stride, pad, epilogue } => {
+            build_conv(n, cin, h, w, cout, kh, kw, stride, pad, epilogue, &space, cfg, false)
         }
-        OpSpec::DepthwiseConv2d { n, c, h, w, kh, kw, stride, pad } => {
-            build_conv(n, 1, h, w, c, kh, kw, stride, pad, &space, cfg, true)
+        OpSpec::DepthwiseConv2d { n, c, h, w, kh, kw, stride, pad, epilogue } => {
+            build_conv(n, 1, h, w, c, kh, kw, stride, pad, epilogue, &space, cfg, true)
         }
     }
 }
 
 /// Shared-memory-staged block GEMM, optionally batched over grid.z.
+/// A fused epilogue lands on the `Cl` register tile between the reduction
+/// and the write-back, so the bias/ReLU tail never round-trips through
+/// global memory.
+#[allow(clippy::too_many_arguments)]
 fn build_gemm(
     name: &str,
     batch: i64,
     m: i64,
     n: i64,
     k: i64,
+    e: Epilogue,
     space: &ConfigSpace,
     cfg: &ScheduleConfig,
 ) -> TirFunc {
@@ -192,10 +204,14 @@ fn build_gemm(
     let tx_threads = bn / tn;
     let ty_threads = bm / tm;
 
-    let mut f = TirFunc::new(format!("{name}_b{batch}_m{m}_n{n}_k{k}_t{bm}x{bn}x{ks}"));
+    let mut f = TirFunc::new(format!(
+        "{name}_b{batch}_m{m}_n{n}_k{k}_t{bm}x{bn}x{ks}{}",
+        e.key_suffix()
+    ));
     let a = f.add_buffer("A", vec![batch, m, k]);
     let b = f.add_buffer("B", vec![batch, k, n]);
     let c = f.add_buffer("C", vec![batch, m, n]);
+    let bias = if e != Epilogue::None { Some(f.add_buffer("BIAS", vec![n])) } else { None };
     let asm = f.add_buffer_in("As", vec![bm, ks], MemSpace::Shared);
     let bsm = f.add_buffer_in("Bs", vec![ks, bn], MemSpace::Shared);
     let cl = f.add_buffer_in("Cl", vec![tm, tn], MemSpace::Local);
@@ -306,7 +322,25 @@ fn build_gemm(
                 }
             },
         );
-        vec![init, ko, wb]
+        let mut nodes = vec![init, ko];
+        if let Some(bias) = bias {
+            // bias/ReLU on the register tile, before it leaves the thread
+            nodes.push(epilogue_tail(
+                f,
+                e,
+                cl,
+                bias,
+                &[("e.m", tm, LoopKind::Serial), ("e.n", tn, LoopKind::Serial)],
+                |w| {
+                    let col = Affine::scaled(vbx, bn)
+                        .add(&Affine::scaled(vtx, tn))
+                        .add(&Affine::var(w[1]));
+                    (vec![Affine::var(w[0]), Affine::var(w[1])], col)
+                },
+            ));
+        }
+        nodes.push(wb);
+        nodes
     });
     f.body = vec![node];
     f
@@ -325,6 +359,7 @@ fn build_conv(
     kw: i64,
     stride: i64,
     pad: i64,
+    e: Epilogue,
     space: &ConfigSpace,
     cfg: &ScheduleConfig,
     depthwise: bool,
@@ -338,7 +373,10 @@ fn build_conv(
     let kw_kind = if unroll_kw { LoopKind::Unroll } else { LoopKind::Serial };
 
     let kind = if depthwise { "dwconv" } else { "conv2d" };
-    let mut f = TirFunc::new(format!("{kind}_gpu_o{cout}_{h}x{w}_t{bc}.{bh}.{tc}.{tw}"));
+    let mut f = TirFunc::new(format!(
+        "{kind}_gpu_o{cout}_{h}x{w}_t{bc}.{bh}.{tc}.{tw}{}",
+        e.key_suffix()
+    ));
     // depthwise: input channel == output channel; direct: full cin reduce.
     let inp = if depthwise {
         f.add_buffer("IN", vec![n, cout, hp, wp])
@@ -351,6 +389,7 @@ fn build_conv(
         f.add_buffer("W", vec![cout, cin, kh, kw])
     };
     let out = f.add_buffer("OUT", vec![n, cout, oh, ow]);
+    let bias = if e != Epilogue::None { Some(f.add_buffer("BIAS", vec![cout])) } else { None };
     let cl = f.add_buffer_in("Cl", vec![tc, bh, tw], MemSpace::Local);
 
     let outer: Vec<LoopSpec> = vec![
@@ -473,7 +512,35 @@ fn build_conv(
                 }
             },
         );
-        vec![init, red, wb]
+        let mut nodes = vec![init, red];
+        if let Some(bias) = bias {
+            // bias/ReLU on the register tile; the batch loop mirrors the
+            // reduction's degenerate batch handling (n==1 in all conv
+            // workloads) so fused flops stay exactly op.flops()
+            nodes.push(epilogue_tail(
+                f,
+                e,
+                cl,
+                bias,
+                &[
+                    ("e.bn", n, LoopKind::Serial),
+                    ("e.c", tc, LoopKind::Serial),
+                    ("e.h", bh, LoopKind::Serial),
+                    ("e.w", tw, LoopKind::Serial),
+                ],
+                |u| {
+                    let co_e = Affine::scaled(vby, bc)
+                        .add(&Affine::scaled(vty, tc))
+                        .add(&Affine::var(u[1]));
+                    (
+                        vec![Affine::var(u[1]), Affine::var(u[2]), Affine::var(u[3])],
+                        co_e,
+                    )
+                },
+            ));
+        }
+        nodes.push(wb);
+        nodes
     });
     f.body = vec![node];
     f
@@ -496,7 +563,7 @@ mod tests {
 
     #[test]
     fn gemm_builds_with_shared_staging() {
-        let op = OpSpec::Matmul { m: 128, n: 128, k: 64 };
+        let op = OpSpec::Matmul { m: 128, n: 128, k: 64, epilogue: Epilogue::None };
         let space = space_for(&op, TeslaV100);
         let f = build(&op, TeslaV100, &space.default_config());
         let shared: Vec<_> =
@@ -518,11 +585,45 @@ mod tests {
     fn conv_gpu_builds() {
         let op = OpSpec::Conv2d {
             n: 1, cin: 64, h: 56, w: 56, cout: 64, kh: 3, kw: 3, stride: 1, pad: 1,
+            epilogue: Epilogue::None,
         };
         let space = space_for(&op, TeslaV100);
         assert!(space.size() > 4);
         let f = build(&op, TeslaV100, &space.default_config());
         assert!(f.preorder_loops().iter().any(|l| l.kind == LoopKind::GpuThreadX));
+    }
+
+    /// The fused tail lands on the `Cl` register tile (not the global
+    /// output buffer) and adds exactly the epilogue flops.
+    #[test]
+    fn fused_epilogues_stay_in_registers() {
+        let bases = [
+            OpSpec::Matmul { m: 128, n: 128, k: 64, epilogue: Epilogue::None },
+            OpSpec::Conv2d {
+                n: 1, cin: 16, h: 28, w: 28, cout: 32, kh: 3, kw: 3, stride: 1, pad: 1,
+                epilogue: Epilogue::None,
+            },
+        ];
+        for base in bases {
+            let base_space = space_for(&base, TeslaV100);
+            for e in [Epilogue::Bias, Epilogue::BiasRelu] {
+                let op = base.with_epilogue(e).unwrap();
+                let space = space_for(&op, TeslaV100);
+                assert_eq!(space.fingerprint(), base_space.fingerprint(), "{op}");
+                let f = build(&op, TeslaV100, &space.default_config());
+                assert_eq!(f.total_flops(), op.flops(), "{op}");
+                let local = f
+                    .buffers
+                    .iter()
+                    .position(|b| b.space == MemSpace::Local)
+                    .unwrap() as u16;
+                for (_, s) in f.statements() {
+                    if matches!(s.op, StmtOp::Add | StmtOp::Max) {
+                        assert_eq!(s.store.buffer, local, "{op}: tail wrote global memory");
+                    }
+                }
+            }
+        }
     }
 
     #[test]

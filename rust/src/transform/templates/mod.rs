@@ -12,7 +12,11 @@ pub mod cpu;
 pub mod gpu;
 
 use crate::isa::TargetKind;
-use crate::tir::{ops::OpSpec, LoopKind, LoopNode, Stmt, TirFunc, TirNode};
+use crate::isets::Affine;
+use crate::tir::{
+    ops::{Epilogue, OpSpec},
+    Access, LoopKind, LoopNode, Stmt, StmtOp, TirFunc, TirNode,
+};
 use crate::transform::space::{ConfigSpace, ScheduleConfig};
 
 /// Build the config space for `op` on `target`.
@@ -76,6 +80,95 @@ pub fn nest_multi(
     node_vec.into_iter().next().unwrap()
 }
 
+/// Build the elementwise epilogue tail as one loop nest: a bias add
+/// (`out += bias`) and, for [`Epilogue::BiasRelu`], a ReLU clamp
+/// (lowered as a max on the just-written element — the IR has no
+/// constants, so the self-load stands in for `max(x, 0)` at identical
+/// instruction cost). `idx` maps the fresh loop vars to the output index
+/// vector and the bias index. Both templates use this: the CPU templates
+/// sweep the cache-resident output tile, the GPU templates the register
+/// tile, so the fused tail never costs a second trip through global
+/// memory for the contraction result.
+pub fn epilogue_tail(
+    f: &mut TirFunc,
+    e: Epilogue,
+    out: u16,
+    bias: u16,
+    specs: &[LoopSpec],
+    idx: impl FnOnce(&[u32]) -> (Vec<Affine>, Affine),
+) -> TirNode {
+    assert!(e != Epilogue::None, "no tail to lower for Epilogue::None");
+    let vars: Vec<u32> = specs.iter().map(|_| f.fresh_var()).collect();
+    let (oi, bi) = idx(&vars);
+    let mut body = vec![TirNode::Stmt(Stmt {
+        op: StmtOp::Add,
+        store: Access::store(out, oi.clone()),
+        loads: vec![Access::load(out, oi.clone()), Access::load(bias, vec![bi])],
+    })];
+    if e == Epilogue::BiasRelu {
+        body.push(TirNode::Stmt(Stmt {
+            op: StmtOp::Max,
+            store: Access::store(out, oi.clone()),
+            loads: vec![Access::load(out, oi)],
+        }));
+    }
+    for (i, &(name, extent, kind)) in specs.iter().enumerate().rev() {
+        body = vec![TirNode::Loop(LoopNode {
+            var: vars[i],
+            name: name.to_string(),
+            extent,
+            kind,
+            body,
+        })];
+    }
+    body.into_iter().next().unwrap()
+}
+
+/// The *standalone* elementwise epilogue pass an unfused deployment needs:
+/// a full read-modify-write sweep of the producer's output tensor (viewed
+/// channel-major, `[channels, elems/channels]`) plus the bias vector. This
+/// is the memory round-trip fusion saves; the simulator prices it so
+/// `Network::latency` can charge unfused alternatives a measured (not
+/// hard-coded) pass cost.
+pub fn epilogue_standalone(e: Epilogue, elems: i64, channels: i64, target: TargetKind) -> TirFunc {
+    assert!(e != Epilogue::None, "no standalone pass for Epilogue::None");
+    assert!(channels > 0 && elems % channels == 0, "bad epilogue shape {elems}x{channels}");
+    let rows = elems / channels;
+    let mut f = TirFunc::new(format!("epilogue_{}_x{elems}_c{channels}", e.wire_name()));
+    let out = f.add_buffer("OUT", vec![channels, rows]);
+    let bias = f.add_buffer("BIAS", vec![channels]);
+    let tail = if target.is_gpu() {
+        // one block per channel, coalesced thread sweep over the row
+        let t = crate::util::divisors(rows).into_iter().filter(|&d| d <= 256).max().unwrap_or(1);
+        epilogue_tail(
+            &mut f,
+            e,
+            out,
+            bias,
+            &[
+                ("bx", channels, LoopKind::GpuBlockX),
+                ("tx", t, LoopKind::GpuThreadX),
+                ("x", rows / t, LoopKind::Serial),
+            ],
+            |v| {
+                let row = Affine::scaled(v[2], t).add(&Affine::var(v[1]));
+                (vec![Affine::var(v[0]), row], Affine::var(v[0]))
+            },
+        )
+    } else {
+        epilogue_tail(
+            &mut f,
+            e,
+            out,
+            bias,
+            &[("c", channels, LoopKind::Parallel), ("x", rows, LoopKind::Vectorize)],
+            |v| (vec![Affine::var(v[0]), Affine::var(v[1])], Affine::var(v[0])),
+        )
+    };
+    f.body = vec![tail];
+    f
+}
+
 /// Divisor-based tile candidates: divisors of `n` clamped to `max`, at most
 /// `cap` values (log-spaced thin-out), always including 1 and min(n,max).
 pub fn tile_candidates(n: i64, max: i64, cap: usize) -> Vec<i64> {
@@ -118,5 +211,44 @@ mod tests {
     fn tile_candidates_clamped() {
         let c = tile_candidates(56, 16, 8);
         assert!(c.iter().all(|&d| d <= 16 && 56 % d == 0));
+    }
+
+    #[test]
+    fn standalone_epilogue_flops_match_tail_cost() {
+        // elems × flops-per-elem, on both target families
+        for target in [TargetKind::Graviton2, TargetKind::TeslaV100] {
+            for e in [Epilogue::Bias, Epilogue::BiasRelu] {
+                let f = epilogue_standalone(e, 3136 * 64, 64, target);
+                assert_eq!(f.total_flops(), e.flops_per_elem() * 3136 * 64);
+            }
+        }
+    }
+
+    #[test]
+    fn standalone_epilogue_gpu_nest_has_launch_loops() {
+        let f = epilogue_standalone(Epilogue::BiasRelu, 56 * 56 * 32, 32, TargetKind::TeslaV100);
+        let kinds: Vec<_> = f.preorder_loops().iter().map(|l| l.kind).collect();
+        assert!(kinds.contains(&LoopKind::GpuBlockX));
+        assert!(kinds.contains(&LoopKind::GpuThreadX));
+    }
+
+    #[test]
+    fn bias_tail_is_single_statement_relu_adds_max() {
+        let mut f = TirFunc::new("t");
+        let out = f.add_buffer("OUT", vec![8, 8]);
+        let bias = f.add_buffer("BIAS", vec![8]);
+        let specs = [("a", 8i64, LoopKind::Serial), ("b", 8i64, LoopKind::Serial)];
+        let tail = epilogue_tail(&mut f, Epilogue::Bias, out, bias, &specs, |v| {
+            (vec![Affine::var(v[0]), Affine::var(v[1])], Affine::var(v[0]))
+        });
+        f.body = vec![tail];
+        let ops: Vec<StmtOp> = f.statements().iter().map(|(_, s)| s.op).collect();
+        assert_eq!(ops, vec![StmtOp::Add]);
+        let tail2 = epilogue_tail(&mut f, Epilogue::BiasRelu, out, bias, &specs, |v| {
+            (vec![Affine::var(v[0]), Affine::var(v[1])], Affine::var(v[0]))
+        });
+        f.body = vec![tail2];
+        let ops: Vec<StmtOp> = f.statements().iter().map(|(_, s)| s.op).collect();
+        assert_eq!(ops, vec![StmtOp::Add, StmtOp::Max]);
     }
 }

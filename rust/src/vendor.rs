@@ -141,6 +141,7 @@ fn vendor_gpu(op: &OpSpec, space: &ConfigSpace) -> ScheduleConfig {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::tir::ops::Epilogue;
     use crate::tir::ops::figure_op_suite;
 
     #[test]
@@ -160,7 +161,7 @@ mod tests {
     #[test]
     fn vendor_beats_worst_random_on_cpu() {
         use crate::sim::Device;
-        let op = OpSpec::Matmul { m: 128, n: 128, k: 128 };
+        let op = OpSpec::Matmul { m: 128, n: 128, k: 128, epilogue: Epilogue::None };
         let kind = TargetKind::Graviton2;
         let d = Device::new(kind);
         let space = crate::transform::config_space(&op, kind);

@@ -164,6 +164,42 @@ fn sharded_tune_merge_serve_query_across_process_boundaries() {
     );
     assert!(metrics.contains("tuna_serve_requests_total{cmd=\"tune_net\"} 1"), "{metrics}");
 
+    // a fused-epilogue op through the same argv → wire → daemon path:
+    // the `+bias_relu` suffix addresses its own cache entry — one cold
+    // search, then a warm search-free hit, across process boundaries
+    let mut args = vec![
+        "query",
+        "--port",
+        port_s.as_str(),
+        "--target",
+        "graviton2",
+        "--op",
+        "matmul:16x16x16+bias_relu",
+    ];
+    args.extend(ES_FLAGS);
+    let cold = run_ok(&args);
+    assert!(cold.contains("\"cache_hit\":false"), "fused op was pre-cached: {cold}");
+    assert!(
+        cold.contains("\"epilogue\":\"bias_relu\""),
+        "response echo lost the epilogue: {cold}"
+    );
+    let warm = run_ok(&args);
+    assert!(warm.contains("\"cache_hit\":true"), "fused re-query missed the cache: {warm}");
+    assert!(warm.contains("\"evaluations\":0"), "fused warm hit evaluated: {warm}");
+
+    // an unknown epilogue suffix is a clean argv-level error
+    let bad_op = "matmul:8x8x8+gelu";
+    let bad = Command::new(bin())
+        .args(["query", "--port", port_s.as_str(), "--target", "graviton2", "--op", bad_op])
+        .output()
+        .expect("failed to spawn query");
+    assert!(!bad.status.success(), "unknown epilogue suffix exited 0");
+    assert!(
+        String::from_utf8_lossy(&bad.stderr).contains("epilogue"),
+        "unhelpful suffix error: {}",
+        String::from_utf8_lossy(&bad.stderr)
+    );
+
     // a target the daemon does not serve is a clean non-zero exit
     let unserved = Command::new(bin())
         .args(["query", "--port", port_s.as_str(), "--target", "v100", "--op", "matmul:8x8x8"])

@@ -13,7 +13,7 @@ use tuna::graph::{Layer, Network};
 use tuna::isa::march::tesla_v100;
 use tuna::isa::{AsmProgram, TargetKind};
 use tuna::search::{BatchObjective, EsParams, EvolutionStrategies};
-use tuna::tir::ops::OpSpec;
+use tuna::tir::ops::{Epilogue, OpSpec};
 use tuna::transform::{self, ScheduleConfig};
 use tuna::CostModel;
 
@@ -35,7 +35,10 @@ fn batched_scores_bit_identical_cpu() {
     let kind = TargetKind::Graviton2;
     let cm = CostModel::with_default_coeffs(kind);
     let ev = CandidateEvaluator::new(cm.clone());
-    let op = OpSpec::Conv2d { n: 1, cin: 8, h: 14, w: 14, cout: 16, kh: 3, kw: 3, stride: 1, pad: 1 };
+    let op = OpSpec::Conv2d {
+        n: 1, cin: 8, h: 14, w: 14, cout: 16, kh: 3, kw: 3, stride: 1, pad: 1,
+        epilogue: Epilogue::None,
+    };
     let cfgs = sample_cfgs(&op, kind, 32);
     let batched = ev.score_batch(&op, &cfgs);
     let sequential: Vec<f64> = cfgs.iter().map(|c| cm.predict(&op, c)).collect();
@@ -52,7 +55,7 @@ fn batched_scores_bit_identical_gpu() {
     let kind = TargetKind::TeslaV100;
     let cm = CostModel::with_default_coeffs(kind);
     let ev = CandidateEvaluator::new(cm.clone());
-    let op = OpSpec::Matmul { m: 128, n: 128, k: 64 };
+    let op = OpSpec::Matmul { m: 128, n: 128, k: 64, epilogue: Epilogue::None };
     let cfgs = sample_cfgs(&op, kind, 32);
     let batched = ev.score_batch(&op, &cfgs);
     let sequential: Vec<f64> = cfgs.iter().map(|c| cm.predict(&op, c)).collect();
@@ -63,7 +66,7 @@ fn batched_scores_bit_identical_gpu() {
 #[test]
 fn missing_launch_is_typed_error() {
     let kind = TargetKind::TeslaV100;
-    let op = OpSpec::Matmul { m: 64, n: 64, k: 32 };
+    let op = OpSpec::Matmul { m: 64, n: 64, k: 32, epilogue: Epilogue::None };
     let space = transform::config_space(&op, kind);
     let f = transform::apply(&op, kind, &space.default_config());
     let gpu = tesla_v100();
@@ -84,7 +87,7 @@ fn search_propagates_eval_errors() {
             Err(CostError::MissingLaunch { func: "synthetic".into() })
         }
     }
-    let op = OpSpec::Matmul { m: 32, n: 32, k: 32 };
+    let op = OpSpec::Matmul { m: 32, n: 32, k: 32, epilogue: Epilogue::None };
     let space = transform::config_space(&op, TargetKind::Graviton2);
     let r = EvolutionStrategies::new(tiny_es()).run_batched(&space, &Failing);
     assert_eq!(r.unwrap_err(), CostError::MissingLaunch { func: "synthetic".into() });
@@ -95,7 +98,7 @@ fn search_propagates_eval_errors() {
 fn schedule_cache_roundtrips_through_json() {
     let kind = TargetKind::Graviton2;
     let c = Coordinator::new_uncalibrated(kind);
-    let op = OpSpec::Matmul { m: 48, n: 48, k: 24 };
+    let op = OpSpec::Matmul { m: 48, n: 48, k: 24, epilogue: Epilogue::None };
     let rep = c.tune_op(&op, &Strategy::TunaStatic(tiny_es()));
 
     let space = transform::config_space(&op, kind);
@@ -130,10 +133,13 @@ fn toy_net() -> Network {
         name: "cache_toy",
         display: "CacheToy",
         layers: vec![
-            Layer::single(OpSpec::Matmul { m: 64, n: 64, k: 64 }, 2),
-            Layer::single(OpSpec::Matmul { m: 64, n: 32, k: 64 }, 1),
+            Layer::single(OpSpec::Matmul { m: 64, n: 64, k: 64, epilogue: Epilogue::None }, 2),
+            Layer::single(OpSpec::Matmul { m: 64, n: 32, k: 64, epilogue: Epilogue::None }, 1),
             Layer::single(
-                OpSpec::DepthwiseConv2d { n: 1, c: 16, h: 14, w: 14, kh: 3, kw: 3, stride: 1, pad: 1 },
+                OpSpec::DepthwiseConv2d {
+                    n: 1, c: 16, h: 14, w: 14, kh: 3, kw: 3, stride: 1, pad: 1,
+                    epilogue: Epilogue::None,
+                },
                 1,
             ),
         ],
@@ -209,8 +215,10 @@ fn persisted_cache_skips_searches_across_coordinators() {
 fn swap_coeffs_matches_fresh_evaluator_cpu() {
     let kind = TargetKind::Graviton2;
     let ev = CandidateEvaluator::new(CostModel::with_default_coeffs(kind));
-    let op =
-        OpSpec::Conv2d { n: 1, cin: 8, h: 14, w: 14, cout: 16, kh: 3, kw: 3, stride: 1, pad: 1 };
+    let op = OpSpec::Conv2d {
+        n: 1, cin: 8, h: 14, w: 14, cout: 16, kh: 3, kw: 3, stride: 1, pad: 1,
+        epilogue: Epilogue::None,
+    };
     let cfgs = sample_cfgs(&op, kind, 24);
     ev.score_batch(&op, &cfgs);
     let misses_before = ev.stats().misses;
@@ -233,7 +241,7 @@ fn swap_coeffs_matches_fresh_evaluator_cpu() {
 fn swap_coeffs_matches_fresh_evaluator_gpu() {
     let kind = TargetKind::TeslaV100;
     let ev = CandidateEvaluator::new(CostModel::with_default_coeffs(kind));
-    let op = OpSpec::Matmul { m: 128, n: 128, k: 64 };
+    let op = OpSpec::Matmul { m: 128, n: 128, k: 64, epilogue: Epilogue::None };
     let cfgs = sample_cfgs(&op, kind, 24);
     ev.score_batch(&op, &cfgs);
     let misses_before = ev.stats().misses;
@@ -253,7 +261,7 @@ fn swap_coeffs_matches_fresh_evaluator_gpu() {
 fn recalibrate_matches_bare_model_calibration() {
     let kind = TargetKind::Graviton2;
     let ev = CandidateEvaluator::new(CostModel::with_default_coeffs(kind));
-    let op = OpSpec::Matmul { m: 48, n: 48, k: 48 };
+    let op = OpSpec::Matmul { m: 48, n: 48, k: 48, epilogue: Epilogue::None };
     let cfgs = sample_cfgs(&op, kind, 20);
     // synthetic ground truth over memoized features
     let samples: Vec<_> = cfgs
@@ -281,7 +289,7 @@ fn recalibrate_matches_bare_model_calibration() {
 fn score_batch_with_scores_many_models_from_one_feature_pass() {
     let kind = TargetKind::Graviton2;
     let ev = CandidateEvaluator::new(CostModel::with_default_coeffs(kind));
-    let op = OpSpec::Matmul { m: 64, n: 32, k: 32 };
+    let op = OpSpec::Matmul { m: 64, n: 32, k: 32, epilogue: Epilogue::None };
     let cfgs = sample_cfgs(&op, kind, 16);
     ev.score_batch(&op, &cfgs); // the one feature pass
     let misses_before = ev.stats().misses;
@@ -301,7 +309,7 @@ fn score_batch_with_scores_many_models_from_one_feature_pass() {
 #[test]
 fn coordinator_recalibration_rescores_cache_without_new_searches() {
     let c = Coordinator::new_uncalibrated(TargetKind::Graviton2);
-    let op = OpSpec::Matmul { m: 64, n: 64, k: 64 };
+    let op = OpSpec::Matmul { m: 64, n: 64, k: 64, epilogue: Epilogue::None };
     let strategy = Strategy::TunaStatic(tiny_es());
     let first = c.tune_op(&op, &strategy);
     assert!(!first.cache_hit);
@@ -330,10 +338,10 @@ fn bounded_cache_evicts_and_falls_back_to_search() {
     c.set_cache_capacity(Some(2));
     let strategy = Strategy::TunaStatic(tiny_es());
     let ops = [
-        OpSpec::Matmul { m: 32, n: 32, k: 32 },
-        OpSpec::Matmul { m: 48, n: 32, k: 32 },
-        OpSpec::Matmul { m: 64, n: 32, k: 32 },
-        OpSpec::Matmul { m: 96, n: 32, k: 32 },
+        OpSpec::Matmul { m: 32, n: 32, k: 32, epilogue: Epilogue::None },
+        OpSpec::Matmul { m: 48, n: 32, k: 32, epilogue: Epilogue::None },
+        OpSpec::Matmul { m: 64, n: 32, k: 32, epilogue: Epilogue::None },
+        OpSpec::Matmul { m: 96, n: 32, k: 32, epilogue: Epilogue::None },
     ];
     let first: Vec<_> = ops.iter().map(|op| c.tune_op(op, &strategy)).collect();
     let (entries, _, _) = c.cache_stats();
@@ -358,7 +366,7 @@ fn bounded_cache_evicts_and_falls_back_to_search() {
 /// Different targets never share cache entries even for the same op.
 #[test]
 fn cache_keys_isolate_targets() {
-    let op = OpSpec::Matmul { m: 32, n: 32, k: 32 };
+    let op = OpSpec::Matmul { m: 32, n: 32, k: 32, epilogue: Epilogue::None };
     let sig = "es_x";
     let g = transform::config_space(&op, TargetKind::Graviton2);
     let x = transform::config_space(&op, TargetKind::XeonPlatinum8124M);

@@ -7,7 +7,7 @@ use tuna::graph::{Layer, Network};
 use tuna::isa::TargetKind;
 use tuna::search::EsParams;
 use tuna::sim::Device;
-use tuna::tir::ops::OpSpec;
+use tuna::tir::ops::{Epilogue, OpSpec};
 
 fn tiny_es() -> EsParams {
     EsParams { population: 14, iterations: 7, k: 10, seed: 9, ..Default::default() }
@@ -18,16 +18,18 @@ fn toy_net() -> Network {
         name: "toy",
         display: "Toy",
         layers: vec![
-            Layer::single(OpSpec::Matmul { m: 64, n: 64, k: 64 }, 2),
+            Layer::single(OpSpec::Matmul { m: 64, n: 64, k: 64, epilogue: Epilogue::None }, 2),
             Layer::single(
                 OpSpec::Conv2d {
                     n: 1, cin: 8, h: 14, w: 14, cout: 16, kh: 3, kw: 3, stride: 1, pad: 1,
+                    epilogue: Epilogue::None,
                 },
                 1,
             ),
             Layer::single(
                 OpSpec::DepthwiseConv2d {
                     n: 1, c: 16, h: 14, w: 14, kh: 3, kw: 3, stride: 1, pad: 1,
+                    epilogue: Epilogue::None,
                 },
                 3,
             ),
@@ -41,7 +43,7 @@ fn toy_net() -> Network {
 fn tuna_beats_median_random() {
     let kind = TargetKind::Graviton2;
     let c = Coordinator::new(kind);
-    let op = OpSpec::Matmul { m: 128, n: 128, k: 64 };
+    let op = OpSpec::Matmul { m: 128, n: 128, k: 64, epilogue: Epilogue::None };
     let r = c.tune_op(&op, &Strategy::TunaStatic(tiny_es()));
     let space = tuna::transform::config_space(&op, kind);
     let mut rng = tuna::util::Rng::new(33);
@@ -96,7 +98,7 @@ fn equal_budget_comparison_favors_tuna() {
 fn gpu_pipeline_end_to_end() {
     let kind = TargetKind::TeslaV100;
     let c = Coordinator::new(kind);
-    let op = OpSpec::Matmul { m: 256, n: 256, k: 128 };
+    let op = OpSpec::Matmul { m: 256, n: 256, k: 128, epilogue: Epilogue::None };
     let r = c.tune_op(&op, &Strategy::TunaStatic(tiny_es()));
     assert!(r.latency_s > 0.0);
     assert_eq!(r.device_s, 0.0);
@@ -112,7 +114,7 @@ fn gpu_pipeline_end_to_end() {
 fn schedule_cache_dedups_work() {
     let kind = TargetKind::Graviton2;
     let c = Coordinator::new(kind);
-    let op = OpSpec::Matmul { m: 64, n: 64, k: 64 };
+    let op = OpSpec::Matmul { m: 64, n: 64, k: 64, epilogue: Epilogue::None };
     let net = Network {
         name: "dup",
         display: "Dup",
@@ -132,6 +134,7 @@ fn alternative_selection_picks_faster_family() {
     let c = Coordinator::new(kind);
     let direct = OpSpec::Conv2d {
         n: 1, cin: 16, h: 16, w: 16, cout: 16, kh: 3, kw: 3, stride: 1, pad: 1,
+        epilogue: Epilogue::None,
     };
     let wino = OpSpec::Conv2dWinograd { n: 1, cin: 16, h: 16, w: 16, cout: 16 };
     let net = Network {
@@ -149,7 +152,7 @@ fn alternative_selection_picks_faster_family() {
 #[test]
 fn autotvm_is_reproducible() {
     let kind = TargetKind::Graviton2;
-    let op = OpSpec::Matmul { m: 64, n: 64, k: 32 };
+    let op = OpSpec::Matmul { m: 64, n: 64, k: 32, epilogue: Epilogue::None };
     let space = tuna::transform::config_space(&op, kind);
     let run = || {
         let d = Device::new(kind);
@@ -176,6 +179,7 @@ fn topk_ratio_in_plausible_band() {
     let c = Coordinator::new(kind);
     let op = OpSpec::Conv2d {
         n: 1, cin: 8, h: 14, w: 14, cout: 16, kh: 3, kw: 3, stride: 1, pad: 1,
+        epilogue: Epilogue::None,
     };
     let ratio = tuna::metrics::topk_sweep_ratio(&c, &op, 5, 24);
     assert!(ratio.is_finite() && ratio > 0.2 && ratio < 1.5, "ratio {ratio}");

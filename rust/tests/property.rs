@@ -6,12 +6,16 @@ use std::collections::BTreeMap;
 use tuna::isa::TargetKind;
 use tuna::isets::{Affine, StridedSet};
 use tuna::serve::protocol::{ErrorCode, OpOutcome, Request, Response, TargetStats, TuneParams};
-use tuna::tir::ops::OpSpec;
+use tuna::tir::ops::{Epilogue, OpSpec};
 use tuna::transform;
 use tuna::transform::ScheduleConfig;
 use tuna::util::Rng;
 
 const CASES: usize = 60;
+
+fn random_epilogue(rng: &mut Rng) -> Epilogue {
+    Epilogue::ALL[rng.below(Epilogue::ALL.len())]
+}
 
 fn random_op(rng: &mut Rng) -> OpSpec {
     let pick = |rng: &mut Rng, xs: &[i64]| xs[rng.below(xs.len())];
@@ -20,6 +24,7 @@ fn random_op(rng: &mut Rng) -> OpSpec {
             m: pick(rng, &[16, 32, 48, 64]),
             n: pick(rng, &[16, 32, 64]),
             k: pick(rng, &[16, 24, 64]),
+            epilogue: random_epilogue(rng),
         },
         1 => OpSpec::BatchMatmul {
             b: pick(rng, &[2, 4]),
@@ -37,6 +42,7 @@ fn random_op(rng: &mut Rng) -> OpSpec {
             kw: 3,
             stride: pick(rng, &[1, 2]),
             pad: 1,
+            epilogue: random_epilogue(rng),
         },
         3 => OpSpec::DepthwiseConv2d {
             n: 1,
@@ -47,6 +53,7 @@ fn random_op(rng: &mut Rng) -> OpSpec {
             kw: 3,
             stride: pick(rng, &[1, 2]),
             pad: 1,
+            epilogue: random_epilogue(rng),
         },
         _ => OpSpec::Conv2dWinograd {
             n: 1,
@@ -79,9 +86,11 @@ fn prop_schedules_preserve_flops() {
                     st.iter().map(|l| l.extent as u64).product::<u64>() * s.op.flops()
                 })
                 .sum();
-            // winograd-on-GPU is GEMM-stage only (documented substitution)
+            // winograd-on-GPU is GEMM-stage only (documented substitution);
+            // MulAdds cover the contraction — a fused tail contributes
+            // Add/Max statements, priced separately in op.flops()
             if !matches!(op, OpSpec::Conv2dWinograd { .. }) {
-                assert_eq!(muladds, op.flops(), "case {case}: {op} cfg {cfg:?}");
+                assert_eq!(muladds, op.unfused().flops(), "case {case}: {op} cfg {cfg:?}");
             } else {
                 assert!(muladds > 0);
             }
@@ -498,4 +507,68 @@ fn prop_simulator_respects_roofline() {
             );
         }
     }
+}
+
+// ---------------------------------------------------------------------
+// epilogue serialization properties: every fused variant survives JSON
+// bit-identically, `None` is encoded by omission, and cache files written
+// before epilogues existed keep loading (and keep their keys).
+
+/// INVARIANT: every op kind × every epilogue variant round-trips
+/// `to_json` → `from_json` bit-identically; `Epilogue::None` serializes
+/// by omission (so pre-fusion records never change shape); every variant
+/// of a shape gets a distinct cache key.
+#[test]
+fn prop_epilogue_json_roundtrip_and_key_distinctness() {
+    let mut rng = Rng::new(1111);
+    for case in 0..CASES {
+        let base = random_op(&mut rng).unfused();
+        let mut keys = Vec::new();
+        for e in Epilogue::ALL {
+            // batch_matmul / winograd cannot fuse a tail — with_epilogue
+            // declines, and that totality is part of the invariant
+            let Some(op) = base.with_epilogue(e) else {
+                assert!(e != Epilogue::None, "with_epilogue(None) must be total");
+                continue;
+            };
+            let text = op.to_json().to_string();
+            let back = OpSpec::from_json(&op.to_json())
+                .unwrap_or_else(|err| panic!("case {case}: rejected {text}: {err}"));
+            assert_eq!(back, op, "case {case}: {text}");
+            if e == Epilogue::None {
+                assert!(!text.contains("epilogue"), "None must be omitted: {text}");
+            } else {
+                assert!(text.contains(e.wire_name()), "case {case}: {text}");
+            }
+            keys.push(op.cache_key());
+        }
+        let mut dedup = keys.clone();
+        dedup.sort();
+        dedup.dedup();
+        assert_eq!(dedup.len(), keys.len(), "case {case}: colliding keys {keys:?}");
+    }
+}
+
+/// INVARIANT: version-2 cache files written before epilogues existed
+/// (ops with no "epilogue" field) still load — no `UnsupportedVersion`,
+/// the embedded op defaults to `Epilogue::None`, and re-saving keeps the
+/// record byte-compatible (no "epilogue" key fabricated).
+#[test]
+fn prop_pre_epilogue_v2_cache_files_still_load() {
+    use tuna::eval::ScheduleCache;
+    use tuna::util::json::Json;
+    let text = r#"{"version":2,"entries":{"Graviton2/dense_m32_n32_k32/s1/f9":{"chosen":[3,0,1],"best_score":1.5,"evaluations":7,"top_k":[[[3,0,1],1.5]],"op":{"kind":"dense","m":32,"n":32,"k":32}}}}"#;
+    let cache = ScheduleCache::from_json(&Json::parse(text).unwrap())
+        .unwrap_or_else(|e| panic!("pre-epilogue v2 file rejected: {e:?}"));
+    assert_eq!(cache.len(), 1);
+    let entry = cache.peek("Graviton2/dense_m32_n32_k32/s1/f9").unwrap();
+    let expected = OpSpec::Matmul { m: 32, n: 32, k: 32, epilogue: Epilogue::None };
+    assert_eq!(entry.op, Some(expected), "missing epilogue field must default to None");
+    assert_eq!(cache.tasks().len(), 1, "pre-epilogue entries stay re-rankable");
+    let resaved = cache.to_json().to_string();
+    assert!(!resaved.contains("epilogue"), "re-save fabricated an epilogue: {resaved}");
+    // a fused op in the same file shape parses to the fused spec
+    let fused = r#"{"kind":"dense","m":32,"n":32,"k":32,"epilogue":"bias_relu"}"#;
+    let op = OpSpec::from_json(&Json::parse(fused).unwrap()).unwrap();
+    assert_eq!(op, expected.with_epilogue(Epilogue::BiasRelu).unwrap());
 }

@@ -24,7 +24,7 @@ use tuna::isa::TargetKind;
 use tuna::search::EsParams;
 use tuna::serve::protocol::{ErrorCode, Request, Response, TuneParams};
 use tuna::serve::{ServeConfig, Server};
-use tuna::tir::ops::OpSpec;
+use tuna::tir::ops::{Epilogue, OpSpec};
 
 fn tiny_es() -> EsParams {
     EsParams { population: 10, iterations: 5, k: 8, seed: 23, ..Default::default() }
@@ -109,7 +109,7 @@ impl Client {
 fn warm_cache_hit_over_the_socket_is_search_free_and_bit_identical() {
     let (addr, daemon) = start_daemon(base_config());
     let mut client = Client::connect(addr);
-    let op = OpSpec::Matmul { m: 48, n: 48, k: 24 };
+    let op = OpSpec::Matmul { m: 48, n: 48, k: 24, epilogue: Epilogue::None };
 
     // first tune performs a search
     let first = client.tune(TargetKind::Graviton2, op);
@@ -161,7 +161,7 @@ fn warm_cache_hit_over_the_socket_is_search_free_and_bit_identical() {
 fn recalibrate_over_the_socket_reranks_without_searching_or_lowering() {
     let (addr, daemon) = start_daemon(base_config());
     let mut client = Client::connect(addr);
-    let op = OpSpec::Matmul { m: 64, n: 64, k: 64 };
+    let op = OpSpec::Matmul { m: 64, n: 64, k: 64, epilogue: Epilogue::None };
 
     let Response::Tuned { cache_hit: false, .. } = client.tune(TargetKind::Graviton2, op)
     else {
@@ -209,8 +209,10 @@ fn recalibrate_over_the_socket_reranks_without_searching_or_lowering() {
 #[test]
 fn save_then_fresh_daemon_with_warm_cache_serves_zero_search() {
     let path = temp_path("warm");
-    let ops =
-        [OpSpec::Matmul { m: 32, n: 32, k: 32 }, OpSpec::Matmul { m: 64, n: 32, k: 32 }];
+    let ops = [
+        OpSpec::Matmul { m: 32, n: 32, k: 32, epilogue: Epilogue::None },
+        OpSpec::Matmul { m: 64, n: 32, k: 32, epilogue: Epilogue::None },
+    ];
 
     // daemon A tunes and persists
     let (addr_a, daemon_a) = start_daemon(base_config());
@@ -293,7 +295,7 @@ fn malformed_input_gets_typed_errors_and_the_connection_survives() {
     );
 
     // after nine rejected requests, the same connection still works
-    let op = OpSpec::Matmul { m: 16, n: 16, k: 16 };
+    let op = OpSpec::Matmul { m: 16, n: 16, k: 16, epilogue: Epilogue::None };
     let ok = client.tune(TargetKind::Graviton2, op);
     assert!(
         matches!(ok, Response::Tuned { .. }),
@@ -311,7 +313,7 @@ fn concurrent_warm_hammer_on_one_target_is_bit_identical_and_exactly_counted() {
     // path, no LRU cross-talk) and the counters must come out exact
     let cfg = ServeConfig { threads: 4, ..base_config() };
     let (addr, daemon) = start_daemon(cfg);
-    let op = OpSpec::Matmul { m: 40, n: 40, k: 20 };
+    let op = OpSpec::Matmul { m: 40, n: 40, k: 20, epilogue: Epilogue::None };
 
     // warm the op: exactly one search, one miss
     let mut client = Client::connect(addr);
@@ -362,8 +364,8 @@ fn tune_net_over_the_socket_matches_single_op_tuning_and_fills_the_cache() {
     let (addr, daemon) = start_daemon(base_config());
     let mut client = Client::connect(addr);
     let ops = vec![
-        OpSpec::Matmul { m: 32, n: 32, k: 32 },
-        OpSpec::Matmul { m: 64, n: 48, k: 16 },
+        OpSpec::Matmul { m: 32, n: 32, k: 32, epilogue: Epilogue::None },
+        OpSpec::Matmul { m: 64, n: 48, k: 16, epilogue: Epilogue::None },
         OpSpec::BatchMatmul { b: 4, m: 16, n: 16, k: 16 },
     ];
 
@@ -436,10 +438,84 @@ fn tune_net_over_the_socket_matches_single_op_tuning_and_fills_the_cache() {
 }
 
 #[test]
+fn fused_tune_net_warm_hits_are_bit_identical_to_in_process_tuning() {
+    use tuna::serve::protocol::OpOutcome;
+    let (addr, daemon) = start_daemon(base_config());
+    let mut client = Client::connect(addr);
+    let base = OpSpec::Matmul { m: 32, n: 32, k: 16, epilogue: Epilogue::None };
+    let ops = vec![
+        base,
+        base.with_epilogue(Epilogue::Bias).unwrap(),
+        base.with_epilogue(Epilogue::BiasRelu).unwrap(),
+    ];
+    let batch = Request::TuneNet {
+        target: TargetKind::Graviton2,
+        ops: ops.clone(),
+        params: Some(tiny_params()),
+    };
+
+    // cold batch: the fused variants are distinct tuning tasks of the
+    // same shape — each gets its own search and cache entry
+    let resp = client.send(&batch);
+    let Response::TunedNet { results: cold, .. } = resp else { panic!("{resp:?}") };
+    assert_eq!(cold.len(), ops.len());
+    for (i, r) in cold.iter().enumerate() {
+        let OpOutcome::Tuned { op, cache_hit, evaluations, .. } = r else {
+            panic!("ops[{i}] failed: {r:?}")
+        };
+        assert_eq!(*op, ops[i], "batch results out of request order");
+        assert!(!cache_hit, "cold fused batch claimed a hit (key collision?)");
+        assert!(*evaluations > 0);
+    }
+    assert_eq!(client.stats_for(TargetKind::Graviton2).searches, ops.len() as u64);
+
+    // repeat batch: every variant is a warm hit, zero re-search, and the
+    // served schedules are byte-identical to the cold run
+    let resp = client.send(&batch);
+    let Response::TunedNet { results: warm, .. } = resp else { panic!("{resp:?}") };
+    for (i, (c, w)) in cold.iter().zip(&warm).enumerate() {
+        let (
+            OpOutcome::Tuned { config, predicted_cost, latency_s, .. },
+            OpOutcome::Tuned {
+                config: wc,
+                predicted_cost: wp,
+                latency_s: wl,
+                cache_hit,
+                evaluations,
+                ..
+            },
+        ) = (c, w)
+        else {
+            panic!("warm ops[{i}] failed: {w:?}")
+        };
+        assert!(*cache_hit, "ops[{i}]: warm fused batch missed the cache");
+        assert_eq!(*evaluations, 0, "ops[{i}]: warm hit still evaluated");
+        assert_eq!(wc, config, "ops[{i}]: warm hit changed the schedule");
+        assert_eq!(wp, predicted_cost, "ops[{i}]: warm hit re-scored");
+        assert_eq!(wl, latency_s, "ops[{i}]: deployed latency diverged");
+    }
+    let stats = client.stats_for(TargetKind::Graviton2);
+    assert_eq!(stats.searches, ops.len() as u64, "warm fused batch searched");
+
+    // every variant — fused included — matches in-process tuning with the
+    // same model and search parameters, bit for bit
+    let reference = Coordinator::new_uncalibrated(TargetKind::Graviton2);
+    for (i, r) in cold.iter().enumerate() {
+        let OpOutcome::Tuned { config, predicted_cost, .. } = r else { unreachable!() };
+        let want = reference.tune_op(&ops[i], &Strategy::TunaStatic(tiny_es()));
+        assert_eq!(config, &want.chosen, "ops[{i}]: served schedule diverged in-process");
+        assert_eq!(*predicted_cost, want.top_k[0].1, "ops[{i}]: served cost diverged");
+    }
+
+    client.shutdown();
+    daemon.join().unwrap();
+}
+
+#[test]
 fn metrics_exposition_over_the_socket_counts_traffic_exactly() {
     let (addr, daemon) = start_daemon(base_config());
     let mut client = Client::connect(addr);
-    let op = OpSpec::Matmul { m: 24, n: 24, k: 24 };
+    let op = OpSpec::Matmul { m: 24, n: 24, k: 24, epilogue: Epilogue::None };
 
     // known traffic: 2 tunes (1 miss + 1 hit), 1 batch of the same op
     // (1 more hit), 1 garbage line, 1 stats
@@ -472,7 +548,8 @@ fn metrics_exposition_over_the_socket_counts_traffic_exactly() {
         "tuna_serve_requests_total{cmd=\"stats\"} 1",
         "tuna_serve_requests_total{cmd=\"metrics\"} 1",
         "tuna_serve_errors_total{code=\"parse\"} 1",
-        "tuna_serve_ops_total{target=\"graviton2\"} 3",
+        "tuna_serve_ops_total{target=\"graviton2\",fused=\"false\"} 3",
+        "tuna_serve_ops_total{target=\"graviton2\",fused=\"true\"} 0",
         "tuna_serve_op_cache_hits_total{target=\"graviton2\"} 2",
         "tuna_serve_op_cache_misses_total{target=\"graviton2\"} 1",
         "# TYPE tuna_serve_op_seconds histogram",
@@ -501,7 +578,7 @@ fn concurrent_tunes_on_different_targets_both_succeed() {
     let tune_on = move |target: TargetKind| {
         std::thread::spawn(move || {
             let mut client = Client::connect(addr);
-            let op = OpSpec::Matmul { m: 32, n: 32, k: 32 };
+            let op = OpSpec::Matmul { m: 32, n: 32, k: 32, epilogue: Epilogue::None };
             let resp = client.tune(target, op);
             assert!(matches!(resp, Response::Tuned { cache_hit: false, .. }), "{resp:?}");
         })

@@ -13,7 +13,7 @@ use tuna::graph::bert_base;
 use tuna::isa::TargetKind;
 use tuna::search::EsParams;
 use tuna::shard::{self, ShardWorker};
-use tuna::tir::ops::OpSpec;
+use tuna::tir::ops::{Epilogue, OpSpec};
 use tuna::CostModel;
 
 fn tiny_es() -> EsParams {
@@ -97,8 +97,8 @@ fn recalibration_reranks_entries_loaded_from_disk() {
     let kind = TargetKind::Graviton2;
     let strategy = Strategy::TunaStatic(tiny_es());
     let ops = [
-        OpSpec::Matmul { m: 64, n: 64, k: 64 },
-        OpSpec::Matmul { m: 48, n: 32, k: 32 },
+        OpSpec::Matmul { m: 64, n: 64, k: 64, epilogue: Epilogue::None },
+        OpSpec::Matmul { m: 48, n: 32, k: 32, epilogue: Epilogue::None },
     ];
     let path = temp_path("rerank");
 
@@ -138,7 +138,7 @@ fn recalibration_reranks_entries_loaded_from_disk() {
 fn pre_opspec_cache_file_migrates_gracefully() {
     let kind = TargetKind::Graviton2;
     let strategy = Strategy::TunaStatic(tiny_es());
-    let op = OpSpec::Matmul { m: 64, n: 64, k: 64 };
+    let op = OpSpec::Matmul { m: 64, n: 64, k: 64, epilogue: Epilogue::None };
     let path = temp_path("v1");
 
     // produce a v2 file, then strip it down to the version-1 format
