@@ -365,6 +365,14 @@ impl Coordinator {
         self.cache.read().unwrap().clone()
     }
 
+    /// Clone of the cached entry for `key`, if resident. Uncounted and
+    /// recency-free — this is how a fleet worker reads back exactly what
+    /// the record stage wrote, to append it to its journal
+    /// ([`crate::eval::CacheJournal`]) byte-for-byte.
+    pub fn cached_entry(&self, key: &str) -> Option<CachedSchedule> {
+        self.cache.read().unwrap().peek(key).cloned()
+    }
+
     /// Merge an in-memory cache (e.g. a shard worker's
     /// [`Self::export_cache`]) into this coordinator's serving cache. On
     /// key clashes the top-k lists are unioned and the chosen config

@@ -473,13 +473,33 @@ impl ScheduleCache {
     }
 
     /// Persist to `path` (creates parent directories).
+    ///
+    /// The write is atomic: bytes go to a same-directory temp file which is
+    /// then renamed over `path`, so a concurrent reader (or a crash
+    /// mid-save) observes either the old complete file or the new one —
+    /// never a truncated hybrid. The temp name carries the pid and a
+    /// process-wide sequence number, so concurrent saves to the same path
+    /// cannot collide on it.
     pub fn save(&self, path: &Path) -> io::Result<()> {
         if let Some(parent) = path.parent() {
             if !parent.as_os_str().is_empty() {
                 std::fs::create_dir_all(parent)?;
             }
         }
-        std::fs::write(path, self.to_json().to_string())
+        static SEQ: AtomicU64 = AtomicU64::new(0);
+        let file_name = match path.file_name() {
+            Some(n) => n.to_string_lossy().into_owned(),
+            None => "cache".to_string(),
+        };
+        let tmp = path.with_file_name(format!(
+            "{file_name}.tmp.{}.{}",
+            std::process::id(),
+            SEQ.fetch_add(1, Ordering::Relaxed)
+        ));
+        std::fs::write(&tmp, self.to_json().to_string())?;
+        std::fs::rename(&tmp, path).inspect_err(|_| {
+            let _ = std::fs::remove_file(&tmp);
+        })
     }
 
     /// Load from `path`. Every failure mode is a typed [`CacheError`]:
@@ -543,7 +563,7 @@ pub(crate) fn cfg_from_json(j: &Json) -> Result<ScheduleConfig, String> {
     Ok(ScheduleConfig { choices })
 }
 
-fn entry_to_json(e: &CachedSchedule) -> Json {
+pub(crate) fn entry_to_json(e: &CachedSchedule) -> Json {
     let mut fields = vec![
         ("chosen", cfg_to_json(&e.chosen)),
         ("best_score", Json::Num(e.best_score)),
@@ -566,7 +586,7 @@ fn entry_to_json(e: &CachedSchedule) -> Json {
     Json::obj(fields)
 }
 
-fn entry_from_json(j: &Json) -> Result<CachedSchedule, String> {
+pub(crate) fn entry_from_json(j: &Json) -> Result<CachedSchedule, String> {
     let chosen = cfg_from_json(j.get("chosen").ok_or("missing 'chosen'")?)?;
     let best_score = j.get("best_score").and_then(Json::as_f64).ok_or("missing 'best_score'")?;
     let evaluations =
@@ -908,5 +928,55 @@ mod tests {
         bounded.merge(back);
         assert_eq!(bounded.len(), 2);
         assert_eq!(bounded.evicted(), 1);
+    }
+
+    #[test]
+    fn save_is_atomic_under_concurrent_readers() {
+        // Regression guard for the temp-file + rename save: the old
+        // truncate-then-write path let a reader (or a crash) observe a
+        // half-written file. Here a writer alternates between two caches of
+        // different sizes while a reader loads in a loop — every load must
+        // see one complete document or the other, never a torn one.
+        let dir = std::env::temp_dir().join(format!("tuna_atomic_save_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("cache.json");
+        let cache_of = |n: usize| {
+            let mut c = ScheduleCache::new();
+            for i in 0..n {
+                c.insert(format!("k{i}"), sample_entry());
+            }
+            c
+        };
+        let small = cache_of(40);
+        let large = cache_of(400);
+        small.save(&path).unwrap();
+
+        let stop = std::sync::atomic::AtomicBool::new(false);
+        std::thread::scope(|s| {
+            s.spawn(|| {
+                for i in 0..60 {
+                    if i % 2 == 0 { &large } else { &small }.save(&path).unwrap();
+                }
+                stop.store(true, Ordering::Release);
+            });
+            while !stop.load(Ordering::Acquire) {
+                let c = ScheduleCache::load(&path)
+                    .unwrap_or_else(|e| panic!("reader observed a partial save: {e}"));
+                assert!(
+                    c.len() == 40 || c.len() == 400,
+                    "reader observed a hybrid file with {} entries",
+                    c.len()
+                );
+            }
+        });
+
+        // no temp residue: every temp file was renamed into place
+        let leftovers: Vec<String> = std::fs::read_dir(&dir)
+            .unwrap()
+            .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
+            .filter(|n| n != "cache.json")
+            .collect();
+        assert!(leftovers.is_empty(), "stray temp files: {leftovers:?}");
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -1,0 +1,516 @@
+//! The append-only schedule-cache journal (`.tunaj`).
+//!
+//! [`ScheduleCache::save`] snapshots the whole cache in one atomic write —
+//! right for explicit checkpoints, wrong for long tuning campaigns where a
+//! crash between snapshots throws away every search since the last one.
+//! The journal closes that gap: every insert/update appends **one
+//! checksummed record**, so after a crash the work lost is at most the
+//! record being written at the instant of death.
+//!
+//! ## On-disk form
+//!
+//! A line-oriented text file (full spec in `docs/CACHE_FORMAT.md`):
+//!
+//! ```text
+//! tunaj 1
+//! <16 hex digits> {"entry":{...},"key":"..."}
+//! <16 hex digits> {"entry":{...},"key":"..."}
+//! ```
+//!
+//! The first line is the header (format name + version). Each record line
+//! is the FNV-1a 64-bit checksum of the payload, one space, then the
+//! payload: a single-line JSON object holding the cache key and the entry
+//! in exactly the serialization the snapshot format uses
+//! ([`ScheduleCache`] entries round-trip bit-exactly between the two).
+//! Records are full entry states, so a key appearing twice means the later
+//! record supersedes the earlier one (**last wins**) — an updated entry is
+//! re-appended, never patched in place.
+//!
+//! ## Recovery semantics
+//!
+//! Replay validates every line independently: length/shape, checksum,
+//! then typed entry parsing. A line that fails any check is **dropped and
+//! counted**, and replay continues at the next line boundary — it never
+//! panics and never loads a record whose bytes don't match their
+//! checksum. In the common crash case the only invalid line is the torn
+//! final record, so recovery is exactly the longest valid prefix. A torn
+//! or entirely missing header yields an empty journal; a *complete but
+//! wrong* header (another format, an unknown version) is a typed
+//! [`CacheError`] — that file is not ours to truncate.
+//!
+//! [`CacheJournal::open`] additionally restores a clean appendable tail:
+//! a torn trailing record is truncated away (a valid record missing only
+//! its newline is completed instead), so new appends can never concatenate
+//! onto half a record.
+//!
+//! ## Compaction
+//!
+//! Updated entries accumulate superseded records, so the journal grows
+//! past the cache it encodes. [`CacheJournal::compact`] rewrites it as a
+//! snapshot of the live cache + empty tail, via a same-directory temp file
+//! and atomic rename (crash-safe: readers see the old journal or the new
+//! one, never a partial rewrite). [`CacheJournal::sync_from`] triggers it
+//! automatically every [`DEFAULT_COMPACT_EVERY`] appended records.
+//!
+//! Appends are flushed to the OS per record — surviving a process crash
+//! (abort, SIGKILL) needs no fsync; surviving a kernel crash or power loss
+//! mid-write is what the checksum + torn-tail drop are for.
+
+use super::cache::{entry_from_json, entry_to_json, CacheError, CachedSchedule, ScheduleCache};
+use crate::util::hash::fnv1a64;
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::fs::OpenOptions;
+use std::io::{self, Write};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Header line content (without the newline).
+const HEADER: &str = "tunaj 1";
+/// The header as written: format name + version, newline-terminated.
+const HEADER_LINE: &str = "tunaj 1\n";
+
+/// Appended records between automatic compactions (see
+/// [`CacheJournal::sync_from`]); tune with
+/// [`CacheJournal::set_compact_every`], `0` disables.
+pub const DEFAULT_COMPACT_EVERY: usize = 1024;
+
+/// What replaying a journal recovered.
+#[derive(Debug, Default)]
+pub struct JournalReplay {
+    /// Recovered `(key, entry)` pairs in record order. A key may appear
+    /// more than once; the later record supersedes (apply in order, or use
+    /// [`Self::into_cache`]).
+    pub entries: Vec<(String, CachedSchedule)>,
+    /// Invalid lines skipped (torn tail, corrupt checksum, garbage).
+    pub dropped: usize,
+}
+
+impl JournalReplay {
+    /// Valid records recovered.
+    pub fn records(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Fold the recovered records into a cache, later records winning.
+    pub fn into_cache(self) -> ScheduleCache {
+        let mut cache = ScheduleCache::new();
+        for (k, e) in self.entries {
+            cache.insert(k, e);
+        }
+        cache
+    }
+}
+
+/// What `open` must do to leave the file cleanly appendable.
+enum Tail {
+    /// File ends at a record boundary (or is the bare header).
+    Clean,
+    /// Last record is valid but missing its newline: complete it.
+    Unterminated,
+    /// Empty file or torn header: rewrite as a fresh header.
+    Rewrite,
+    /// Torn/corrupt trailing record: truncate the file to `keep` bytes.
+    Truncate { keep: u64 },
+}
+
+/// An open append-only cache journal. See the module docs for the format
+/// and recovery semantics.
+pub struct CacheJournal {
+    path: PathBuf,
+    file: std::fs::File,
+    /// Records appended since the last compaction (or open).
+    tail_records: usize,
+    compact_every: usize,
+    /// `key → entry fingerprint` of everything already journaled — what
+    /// [`Self::sync_from`] diffs against so unchanged entries are never
+    /// re-appended.
+    fingerprints: BTreeMap<String, u64>,
+}
+
+impl CacheJournal {
+    /// Create a fresh journal at `path` (parent directories are created;
+    /// an existing file is truncated).
+    pub fn create(path: &Path) -> io::Result<CacheJournal> {
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
+        }
+        std::fs::write(path, HEADER_LINE)?;
+        let file = OpenOptions::new().append(true).open(path)?;
+        Ok(CacheJournal {
+            path: path.to_path_buf(),
+            file,
+            tail_records: 0,
+            compact_every: DEFAULT_COMPACT_EVERY,
+            fingerprints: BTreeMap::new(),
+        })
+    }
+
+    /// Open an existing journal: replay it, restore a clean appendable
+    /// tail (truncating a torn trailing record, completing an
+    /// unterminated valid one), and return the journal plus what was
+    /// recovered. The caller decides what to do with the replay —
+    /// typically [`JournalReplay::into_cache`] into a coordinator.
+    pub fn open(path: &Path) -> Result<(CacheJournal, JournalReplay), CacheError> {
+        let bytes = std::fs::read(path)?;
+        let (replay, tail) = scan(&bytes)?;
+        match tail {
+            Tail::Clean => {}
+            Tail::Unterminated => {
+                let mut f = OpenOptions::new().append(true).open(path)?;
+                f.write_all(b"\n")?;
+            }
+            Tail::Rewrite => std::fs::write(path, HEADER_LINE)?,
+            Tail::Truncate { keep } => {
+                let f = OpenOptions::new().write(true).open(path)?;
+                f.set_len(keep)?;
+            }
+        }
+        let file = OpenOptions::new().append(true).open(path)?;
+        let fingerprints = replay
+            .entries
+            .iter()
+            .map(|(k, e)| (k.clone(), entry_fingerprint(e)))
+            .collect();
+        Ok((
+            CacheJournal {
+                path: path.to_path_buf(),
+                file,
+                tail_records: replay.entries.len(),
+                compact_every: DEFAULT_COMPACT_EVERY,
+                fingerprints,
+            },
+            replay,
+        ))
+    }
+
+    /// Read-only replay of a journal file (no tail repair, no lock on the
+    /// file): what a monitor or test uses to inspect a journal another
+    /// process is writing.
+    pub fn replay(path: &Path) -> Result<JournalReplay, CacheError> {
+        let bytes = std::fs::read(path)?;
+        let (replay, _) = scan(&bytes)?;
+        Ok(replay)
+    }
+
+    /// Append one record (full entry state for `key`), flushed to the OS
+    /// before returning.
+    pub fn append(&mut self, key: &str, entry: &CachedSchedule) -> io::Result<()> {
+        self.append_record(key, entry, entry_fingerprint(entry))
+    }
+
+    /// Diff `cache` against what is already journaled and append every
+    /// new or changed entry; returns how many records were appended.
+    /// Auto-compacts once the tail passes the configured threshold. This
+    /// is the serve daemon's interval flush: cheap when nothing changed
+    /// (pure fingerprint comparison), incremental when something did.
+    pub fn sync_from(&mut self, cache: &ScheduleCache) -> io::Result<usize> {
+        let mut appended = 0;
+        for (k, e) in cache.iter() {
+            let fp = entry_fingerprint(e);
+            if self.fingerprints.get(k) != Some(&fp) {
+                self.append_record(k, e, fp)?;
+                appended += 1;
+            }
+        }
+        self.maybe_compact(cache)?;
+        Ok(appended)
+    }
+
+    /// Rewrite the journal as a snapshot of `cache` + empty tail,
+    /// dropping every superseded record. Atomic (temp file + rename): a
+    /// crash mid-compaction leaves the old journal intact.
+    pub fn compact(&mut self, cache: &ScheduleCache) -> io::Result<()> {
+        static SEQ: AtomicU64 = AtomicU64::new(0);
+        let file_name = match self.path.file_name() {
+            Some(n) => n.to_string_lossy().into_owned(),
+            None => "journal".to_string(),
+        };
+        let tmp = self.path.with_file_name(format!(
+            "{file_name}.compact.{}.{}",
+            std::process::id(),
+            SEQ.fetch_add(1, Ordering::Relaxed)
+        ));
+        let mut buf = String::from(HEADER_LINE);
+        let mut fingerprints = BTreeMap::new();
+        for (k, e) in cache.iter() {
+            push_record(&mut buf, k, e);
+            fingerprints.insert(k.to_string(), entry_fingerprint(e));
+        }
+        std::fs::write(&tmp, &buf)?;
+        std::fs::rename(&tmp, &self.path).inspect_err(|_| {
+            let _ = std::fs::remove_file(&tmp);
+        })?;
+        self.file = OpenOptions::new().append(true).open(&self.path)?;
+        self.fingerprints = fingerprints;
+        self.tail_records = 0;
+        Ok(())
+    }
+
+    /// [`Self::compact`] iff the tail has reached the threshold; returns
+    /// whether it ran.
+    pub fn maybe_compact(&mut self, cache: &ScheduleCache) -> io::Result<bool> {
+        if self.compact_every > 0 && self.tail_records >= self.compact_every {
+            self.compact(cache)?;
+            return Ok(true);
+        }
+        Ok(false)
+    }
+
+    /// Set the auto-compaction threshold (records appended since the last
+    /// compaction); `0` disables auto-compaction.
+    pub fn set_compact_every(&mut self, every: usize) {
+        self.compact_every = every;
+    }
+
+    /// Records appended since the last compaction (or open).
+    pub fn tail_records(&self) -> usize {
+        self.tail_records
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    fn append_record(&mut self, key: &str, entry: &CachedSchedule, fp: u64) -> io::Result<()> {
+        let mut line = String::new();
+        push_record(&mut line, key, entry);
+        self.file.write_all(line.as_bytes())?;
+        self.file.flush()?;
+        self.tail_records += 1;
+        self.fingerprints.insert(key.to_string(), fp);
+        Ok(())
+    }
+}
+
+/// Serialize one record line (checksum, space, payload, newline) onto
+/// `buf`. The payload is a single-line JSON object — the in-tree JSON
+/// writer emits no whitespace, so the line framing is safe.
+fn push_record(buf: &mut String, key: &str, entry: &CachedSchedule) {
+    let payload = Json::obj(vec![
+        ("entry", entry_to_json(entry)),
+        ("key", Json::Str(key.to_string())),
+    ])
+    .to_string();
+    buf.push_str(&format!("{:016x} ", fnv1a64(payload.as_bytes())));
+    buf.push_str(&payload);
+    buf.push('\n');
+}
+
+/// Content fingerprint of an entry — what `sync_from` compares to decide
+/// whether a key must be re-appended. Derived from the serialized form,
+/// so it agrees exactly with what replay will reconstruct.
+fn entry_fingerprint(entry: &CachedSchedule) -> u64 {
+    fnv1a64(entry_to_json(entry).to_string().as_bytes())
+}
+
+/// Validate and parse one record line (everything between newlines).
+/// `None` means the line is invalid in any way — wrong shape, checksum
+/// mismatch, unparseable payload — and must be dropped, not trusted.
+fn parse_record(line: &[u8]) -> Option<(String, CachedSchedule)> {
+    if line.len() < 18 || line[16] != b' ' {
+        return None;
+    }
+    let sum_hex = std::str::from_utf8(&line[..16]).ok()?;
+    if !sum_hex.bytes().all(|b| b.is_ascii_hexdigit()) {
+        return None;
+    }
+    let sum = u64::from_str_radix(sum_hex, 16).ok()?;
+    let payload = &line[17..];
+    if fnv1a64(payload) != sum {
+        return None;
+    }
+    let payload = std::str::from_utf8(payload).ok()?;
+    let j = Json::parse(payload).ok()?;
+    let key = j.get("key")?.as_str()?.to_string();
+    let entry = entry_from_json(j.get("entry")?).ok()?;
+    Some((key, entry))
+}
+
+/// Scan a journal image: header check, then line-by-line record
+/// validation. Returns what was recovered plus what `open` must do to the
+/// physical tail.
+fn scan(bytes: &[u8]) -> Result<(JournalReplay, Tail), CacheError> {
+    let mut replay = JournalReplay::default();
+    // header
+    let mut pos = match bytes.iter().position(|&b| b == b'\n') {
+        Some(i) => {
+            let line = &bytes[..i];
+            if line != HEADER.as_bytes() {
+                return Err(bad_header(line));
+            }
+            i + 1
+        }
+        None => {
+            // no newline anywhere: either a torn header (crash before the
+            // first record — includes the empty file) or not our file
+            if HEADER.as_bytes().starts_with(bytes) {
+                return Ok((replay, Tail::Rewrite));
+            }
+            return Err(bad_header(bytes));
+        }
+    };
+    let mut tail = Tail::Clean;
+    while pos < bytes.len() {
+        match bytes[pos..].iter().position(|&b| b == b'\n') {
+            Some(rel) => {
+                match parse_record(&bytes[pos..pos + rel]) {
+                    Some((k, e)) => replay.entries.push((k, e)),
+                    None => replay.dropped += 1,
+                }
+                pos += rel + 1;
+            }
+            None => {
+                // final line has no newline: a valid record that lost only
+                // its terminator is kept; anything else is a torn tail
+                match parse_record(&bytes[pos..]) {
+                    Some((k, e)) => {
+                        replay.entries.push((k, e));
+                        tail = Tail::Unterminated;
+                    }
+                    None => {
+                        replay.dropped += 1;
+                        tail = Tail::Truncate { keep: pos as u64 };
+                    }
+                }
+                break;
+            }
+        }
+    }
+    Ok((replay, tail))
+}
+
+/// A complete-but-wrong first line: distinguish a version we don't speak
+/// from a file that is not a journal at all.
+fn bad_header(line: &[u8]) -> CacheError {
+    if line.starts_with(b"tunaj ") {
+        CacheError::Malformed(format!(
+            "unsupported journal version: {:?}",
+            String::from_utf8_lossy(line)
+        ))
+    } else {
+        CacheError::Malformed("not a tuna journal (bad header)".into())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tir::ops::{Epilogue, OpSpec};
+    use crate::transform::ScheduleConfig;
+
+    fn entry(score: f64) -> CachedSchedule {
+        CachedSchedule {
+            chosen: ScheduleConfig { choices: vec![1, 2] },
+            best_score: score,
+            top_k: vec![(ScheduleConfig { choices: vec![1, 2] }, score)],
+            evaluations: 9,
+            op: Some(OpSpec::Matmul { m: 16, n: 16, k: 16, epilogue: Epilogue::None }),
+        }
+    }
+
+    fn temp(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("tuna_journal_{tag}_{}.tunaj", std::process::id()))
+    }
+
+    #[test]
+    fn roundtrip_with_last_wins() {
+        let path = temp("roundtrip");
+        let mut j = CacheJournal::create(&path).unwrap();
+        j.append("a", &entry(1.0)).unwrap();
+        j.append("b", &entry(2.0)).unwrap();
+        j.append("a", &entry(3.0)).unwrap(); // supersedes the first record
+        let replay = CacheJournal::replay(&path).unwrap();
+        assert_eq!(replay.records(), 3);
+        assert_eq!(replay.dropped, 0);
+        let cache = replay.into_cache();
+        assert_eq!(cache.len(), 2);
+        assert_eq!(cache.peek("a"), Some(&entry(3.0)));
+        assert_eq!(cache.peek("b"), Some(&entry(2.0)));
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn open_truncates_torn_tail_and_resumes() {
+        let path = temp("torn");
+        let mut j = CacheJournal::create(&path).unwrap();
+        j.append("a", &entry(1.0)).unwrap();
+        let clean_len = std::fs::metadata(&path).unwrap().len();
+        j.append("b", &entry(2.0)).unwrap();
+        drop(j);
+        // tear the second record in half
+        let bytes = std::fs::read(&path).unwrap();
+        let cut = (clean_len as usize + bytes.len()) / 2;
+        std::fs::write(&path, &bytes[..cut]).unwrap();
+
+        let (mut j, replay) = CacheJournal::open(&path).unwrap();
+        assert_eq!(replay.records(), 1, "torn record replayed");
+        assert_eq!(replay.dropped, 1);
+        // the torn bytes are gone: appends land on a clean boundary
+        assert_eq!(std::fs::metadata(&path).unwrap().len(), clean_len);
+        j.append("c", &entry(3.0)).unwrap();
+        let replay = CacheJournal::replay(&path).unwrap();
+        assert_eq!(replay.records(), 2);
+        assert_eq!(replay.dropped, 0);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn open_completes_a_record_that_lost_only_its_newline() {
+        let path = temp("unterminated");
+        let mut j = CacheJournal::create(&path).unwrap();
+        j.append("a", &entry(1.0)).unwrap();
+        drop(j);
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() - 1]).unwrap();
+
+        let (mut j, replay) = CacheJournal::open(&path).unwrap();
+        assert_eq!(replay.records(), 1, "complete payload dropped over a missing newline");
+        j.append("b", &entry(2.0)).unwrap();
+        assert_eq!(CacheJournal::replay(&path).unwrap().records(), 2);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn torn_header_recovers_empty_and_wrong_header_is_typed() {
+        let path = temp("header");
+        std::fs::write(&path, "tunaj").unwrap(); // torn mid-header
+        let (j, replay) = CacheJournal::open(&path).unwrap();
+        assert_eq!(replay.records(), 0);
+        drop(j);
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), HEADER_LINE);
+
+        std::fs::write(&path, "tunaj 9\n").unwrap(); // complete, unknown version
+        assert!(matches!(CacheJournal::replay(&path), Err(CacheError::Malformed(_))));
+        std::fs::write(&path, "{\"version\":2}\n").unwrap(); // not a journal
+        assert!(matches!(CacheJournal::replay(&path), Err(CacheError::Malformed(_))));
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn sync_from_appends_only_changes_and_compacts() {
+        let path = temp("sync");
+        let mut j = CacheJournal::create(&path).unwrap();
+        let mut cache = ScheduleCache::new();
+        cache.insert("a".into(), entry(1.0));
+        cache.insert("b".into(), entry(2.0));
+        assert_eq!(j.sync_from(&cache).unwrap(), 2);
+        assert_eq!(j.sync_from(&cache).unwrap(), 0, "unchanged entries re-appended");
+        cache.insert("a".into(), entry(9.0)); // update
+        assert_eq!(j.sync_from(&cache).unwrap(), 1);
+        assert_eq!(j.tail_records(), 3);
+
+        // compaction rewrites as snapshot + empty tail, dropping the
+        // superseded record, and replay agrees with the cache
+        j.compact(&cache).unwrap();
+        assert_eq!(j.tail_records(), 0);
+        let replay = CacheJournal::replay(&path).unwrap();
+        assert_eq!(replay.records(), 2);
+        let back = replay.into_cache();
+        assert_eq!(back.peek("a"), cache.peek("a"));
+        assert_eq!(back.peek("b"), cache.peek("b"));
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -46,8 +46,10 @@
 //! swap.
 
 pub mod cache;
+pub mod journal;
 
 pub use cache::{CacheError, CachedSchedule, MergeStats, ScheduleCache};
+pub use journal::{CacheJournal, JournalReplay};
 
 use crate::analysis::cost::{
     CostError, CostModel, FeatureExtractor, FeatureVector, LinearScorer,

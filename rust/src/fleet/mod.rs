@@ -1,0 +1,555 @@
+//! Fleet orchestration: multi-process tuning campaigns over the shard
+//! partitioner, with journal-backed crash recovery.
+//!
+//! Tuna's searches never touch a device, so a network-scale tuning
+//! campaign is a pure fan-out problem ([`crate::shard`] is the in-process
+//! form). This module is the *multi-process* form — `tuna tune-fleet`:
+//!
+//! 1. **spawn** — the conductor ([`run_fleet`]) launches one worker
+//!    process per shard (`tuna tune-shard`, [`run_worker`]). Both sides
+//!    compute the same deterministic FNV partition
+//!    ([`crate::shard::partition`]), so the only coordination is the
+//!    shard index on the command line.
+//! 2. **heartbeat** — each worker appends every fresh search outcome to
+//!    its own append-only journal ([`CacheJournal`]); the conductor
+//!    watches journal *growth* as the liveness signal. No sockets, no
+//!    signal handlers — a worker that stops making progress simply stops
+//!    growing its file.
+//! 3. **retry** — a worker that dies (crash, OOM kill, injected fault) is
+//!    respawned with bounded exponential backoff, up to a retry budget.
+//!    The respawn *resumes*: it replays the shard journal, imports the
+//!    recovered entries, and every already-finished task becomes a cache
+//!    hit — completed searches are never repeated, and the recorded
+//!    entries (scores, top-k, evaluation counts) are preserved exactly.
+//! 4. **reassign** — a worker past the heartbeat deadline (hung, not
+//!    dead) is killed and its shard reassigned the same way; the journal
+//!    makes the handoff lossless.
+//! 5. **merge** — each finished worker saves its shard cache atomically;
+//!    the conductor folds them through [`merge_caches`] into one serving
+//!    cache. Every task is tuned by exactly one worker attempt's search,
+//!    so the merged cache is **bit-identical** to an unsharded
+//!    `tune_network` run — the fault-injection suite
+//!    (`rust/tests/fleet_faults.rs`) pins that down under SIGKILL,
+//!    injected aborts and straggler reassignment.
+//!
+//! Fault injection for tests and CI smoke runs is environment-driven:
+//! [`FAULT_AFTER_ENV`] makes a worker abort after N journal appends, and
+//! [`TASK_DELAY_ENV`] slows it down per task (widening kill windows /
+//! forcing straggler deadlines). The conductor strips both from worker
+//! environments and re-injects them only for first attempts listed in
+//! [`FleetConfig::first_attempt_env`] — so an injected fault fires once
+//! and the retry runs clean. See `docs/FLEET.md`.
+
+use crate::coordinator::{Coordinator, Strategy};
+use crate::eval::journal::{CacheJournal, JournalReplay};
+use crate::eval::{CacheError, MergeStats, ScheduleCache};
+use crate::isa::TargetKind;
+use crate::search::EsParams;
+use crate::shard::{merge_caches, partition};
+use crate::transform;
+use std::io;
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
+use std::time::{Duration, Instant};
+
+/// Conductor-level fault knob (read by the CLI, not this module):
+/// `"<shard>:<after>"` injects [`FAULT_AFTER_ENV`]`=<after>` into that
+/// shard's *first* attempt — the CI smoke uses it to prove a forced
+/// worker death still merges clean.
+pub const FLEET_FAULT_ENV: &str = "TUNA_FLEET_FAULT";
+/// Worker fault knob: abort the process after this many journal appends
+/// in the current run (the crash lands *after* a flushed record — the
+/// torn-tail case is covered separately by the journal property tests).
+pub const FAULT_AFTER_ENV: &str = "TUNA_FLEET_FAULT_AFTER";
+/// Worker slowdown knob: sleep this many milliseconds after each task —
+/// widens the mid-shard kill window and forces straggler deadlines.
+pub const TASK_DELAY_ENV: &str = "TUNA_FLEET_TASK_DELAY_MS";
+
+/// How [`run_fleet`] drives a campaign.
+pub struct FleetConfig {
+    /// The `tuna` binary to spawn workers from (tests use
+    /// `CARGO_BIN_EXE_tuna`; the CLI uses `std::env::current_exe`).
+    pub bin: PathBuf,
+    /// Worker processes = shards. The partition is deterministic in this
+    /// count, so it must match between conductor runs resuming the same
+    /// `work_dir`.
+    pub workers: usize,
+    /// Holds per-shard journals (`shard-N.tunaj`, kept across retries —
+    /// they are the resume state) and shard caches (`shard-N.json`).
+    pub work_dir: PathBuf,
+    /// Where the merged serving cache is saved (atomically).
+    pub out: PathBuf,
+    /// Passed through to every worker after the shard arguments: network,
+    /// target, search hyperparameters, `--uncalibrated`.
+    pub worker_args: Vec<String>,
+    /// Respawns allowed per shard beyond the first attempt (retries and
+    /// reassignments share the budget).
+    pub max_retries: usize,
+    /// A running worker whose journal has not grown for this long is
+    /// killed and its shard reassigned.
+    pub heartbeat_timeout: Duration,
+    /// Conductor poll cadence.
+    pub poll_interval: Duration,
+    /// Backoff before respawning a failed shard: `base · 2^(attempt-1)`.
+    pub backoff_base: Duration,
+    /// `(shard, env key, env value)` injected into that shard's **first**
+    /// attempt only — fault/delay knobs fire once, retries run clean.
+    pub first_attempt_env: Vec<(usize, String, String)>,
+}
+
+impl FleetConfig {
+    pub fn new(bin: PathBuf, workers: usize, work_dir: PathBuf, out: PathBuf) -> Self {
+        FleetConfig {
+            bin,
+            workers,
+            work_dir,
+            out,
+            worker_args: Vec::new(),
+            max_retries: 2,
+            heartbeat_timeout: Duration::from_secs(60),
+            poll_interval: Duration::from_millis(200),
+            backoff_base: Duration::from_millis(500),
+            first_attempt_env: Vec::new(),
+        }
+    }
+}
+
+/// Per-shard outcome in a [`FleetReport`].
+#[derive(Debug, Clone)]
+pub struct ShardOutcome {
+    pub shard: usize,
+    /// Worker processes spawned for this shard (1 = no faults).
+    pub attempts: usize,
+    /// Respawns caused by a worker death.
+    pub retries: usize,
+    /// Respawns caused by a missed heartbeat deadline.
+    pub reassigned: usize,
+    /// Entries in the shard cache this worker saved.
+    pub entries: usize,
+}
+
+/// What a fleet campaign did.
+#[derive(Debug, Clone)]
+pub struct FleetReport {
+    pub shards: Vec<ShardOutcome>,
+    /// Entries in the merged serving cache.
+    pub merged_entries: usize,
+    /// Merge accounting — `combined` is 0 under a disjoint partition.
+    pub merge: MergeStats,
+}
+
+impl FleetReport {
+    /// Total failure-triggered respawns across shards.
+    pub fn retries(&self) -> usize {
+        self.shards.iter().map(|s| s.retries).sum()
+    }
+
+    /// Total heartbeat-triggered reassignments across shards.
+    pub fn reassignments(&self) -> usize {
+        self.shards.iter().map(|s| s.reassigned).sum()
+    }
+}
+
+/// Why a campaign could not complete.
+#[derive(Debug)]
+pub enum FleetError {
+    /// Bad configuration (zero workers, missing binary).
+    Config(String),
+    /// Filesystem/process-spawn failure in the conductor itself.
+    Io(io::Error),
+    /// A shard exhausted its retry budget; the campaign is aborted (every
+    /// other worker is killed) but the journals remain for a later resume.
+    ShardFailed { shard: usize, attempts: usize, detail: String },
+    /// A finished shard's cache (or the merged output) failed to load.
+    Cache(PathBuf, CacheError),
+}
+
+impl std::fmt::Display for FleetError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FleetError::Config(e) => write!(f, "fleet misconfigured: {e}"),
+            FleetError::Io(e) => write!(f, "fleet conductor I/O failure: {e}"),
+            FleetError::ShardFailed { shard, attempts, detail } => {
+                write!(f, "shard {shard} failed after {attempts} attempts: {detail}")
+            }
+            FleetError::Cache(p, e) => write!(f, "shard cache {} unusable: {e}", p.display()),
+        }
+    }
+}
+
+impl std::error::Error for FleetError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            FleetError::Io(e) => Some(e),
+            FleetError::Cache(_, e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<io::Error> for FleetError {
+    fn from(e: io::Error) -> Self {
+        FleetError::Io(e)
+    }
+}
+
+/// The journal a shard's worker appends to — kept across retries; this is
+/// the shard's resume state and its heartbeat signal.
+pub fn shard_journal_path(work_dir: &Path, shard: usize) -> PathBuf {
+    work_dir.join(format!("shard-{shard}.tunaj"))
+}
+
+/// The cache a shard's worker saves on success (atomic snapshot of
+/// exactly its shard's entries).
+pub fn shard_cache_path(work_dir: &Path, shard: usize) -> PathBuf {
+    work_dir.join(format!("shard-{shard}.json"))
+}
+
+/// Conductor-side state for one shard.
+struct Slot {
+    shard: usize,
+    child: Option<Child>,
+    attempts: usize,
+    retries: usize,
+    reassigned: usize,
+    done: bool,
+    journal: PathBuf,
+    cache_out: PathBuf,
+    last_len: u64,
+    last_growth: Instant,
+    respawn_at: Option<Instant>,
+}
+
+impl Slot {
+    fn kill(&mut self) {
+        if let Some(mut child) = self.child.take() {
+            let _ = child.kill();
+            let _ = child.wait();
+        }
+    }
+}
+
+/// Run a whole campaign: spawn, monitor, retry/reassign, merge. See the
+/// module docs for the lifecycle. On success the merged cache is saved
+/// atomically to `cfg.out` and the report describes what each shard went
+/// through.
+pub fn run_fleet(cfg: &FleetConfig) -> Result<FleetReport, FleetError> {
+    if cfg.workers == 0 {
+        return Err(FleetError::Config("at least one worker is required".into()));
+    }
+    std::fs::create_dir_all(&cfg.work_dir)?;
+    let mut slots: Vec<Slot> = (0..cfg.workers)
+        .map(|shard| {
+            let cache_out = shard_cache_path(&cfg.work_dir, shard);
+            // a stale shard cache from an older campaign must not mask a
+            // worker that never finished; journals, by contrast, are the
+            // resume state and are deliberately kept
+            let _ = std::fs::remove_file(&cache_out);
+            Slot {
+                shard,
+                child: None,
+                attempts: 0,
+                retries: 0,
+                reassigned: 0,
+                done: false,
+                journal: shard_journal_path(&cfg.work_dir, shard),
+                cache_out,
+                last_len: 0,
+                last_growth: Instant::now(),
+                respawn_at: Some(Instant::now()),
+            }
+        })
+        .collect();
+
+    while !slots.iter().all(|s| s.done) {
+        for i in 0..slots.len() {
+            if let Err(e) = step(cfg, &mut slots[i]) {
+                for s in &mut slots {
+                    s.kill();
+                }
+                return Err(e);
+            }
+        }
+        if slots.iter().all(|s| s.done) {
+            break;
+        }
+        std::thread::sleep(cfg.poll_interval);
+    }
+
+    let mut outcomes = Vec::new();
+    let mut caches = Vec::new();
+    for slot in &slots {
+        let cache = ScheduleCache::load(&slot.cache_out)
+            .map_err(|e| FleetError::Cache(slot.cache_out.clone(), e))?;
+        outcomes.push(ShardOutcome {
+            shard: slot.shard,
+            attempts: slot.attempts,
+            retries: slot.retries,
+            reassigned: slot.reassigned,
+            entries: cache.len(),
+        });
+        caches.push(cache);
+    }
+    let (merged, merge) = merge_caches(caches);
+    merged.save(&cfg.out)?;
+    Ok(FleetReport { shards: outcomes, merged_entries: merged.len(), merge })
+}
+
+/// Advance one shard's state machine by one poll tick.
+fn step(cfg: &FleetConfig, slot: &mut Slot) -> Result<(), FleetError> {
+    if slot.done {
+        return Ok(());
+    }
+    if let Some(child) = slot.child.as_mut() {
+        match child.try_wait().map_err(FleetError::Io)? {
+            Some(status) => {
+                slot.child = None;
+                if status.success() && slot.cache_out.exists() {
+                    slot.done = true;
+                } else {
+                    let detail = if status.success() {
+                        "worker exited 0 without saving its shard cache".to_string()
+                    } else {
+                        format!("worker died ({status})")
+                    };
+                    schedule_respawn(cfg, slot, false, detail)?;
+                }
+            }
+            None => {
+                // heartbeat: journal growth is the liveness signal
+                let len = std::fs::metadata(&slot.journal).map(|m| m.len()).unwrap_or(0);
+                if len > slot.last_len {
+                    slot.last_len = len;
+                    slot.last_growth = Instant::now();
+                } else if slot.last_growth.elapsed() > cfg.heartbeat_timeout {
+                    slot.kill();
+                    let detail = format!(
+                        "no journal growth for {:?}; shard reassigned",
+                        cfg.heartbeat_timeout
+                    );
+                    schedule_respawn(cfg, slot, true, detail)?;
+                }
+            }
+        }
+    } else if let Some(at) = slot.respawn_at {
+        if Instant::now() >= at {
+            spawn_worker(cfg, slot)?;
+        }
+    }
+    Ok(())
+}
+
+/// Book a respawn with exponential backoff, or fail the campaign if the
+/// shard is out of attempts.
+fn schedule_respawn(
+    cfg: &FleetConfig,
+    slot: &mut Slot,
+    reassignment: bool,
+    detail: String,
+) -> Result<(), FleetError> {
+    eprintln!("fleet: shard {} attempt {}: {detail}", slot.shard, slot.attempts);
+    if slot.attempts > cfg.max_retries {
+        return Err(FleetError::ShardFailed {
+            shard: slot.shard,
+            attempts: slot.attempts,
+            detail,
+        });
+    }
+    if reassignment {
+        slot.reassigned += 1;
+        // the worker was killed for stalling, not crashing — no backoff,
+        // the reassigned attempt starts immediately
+        slot.respawn_at = Some(Instant::now());
+    } else {
+        slot.retries += 1;
+        let backoff = cfg.backoff_base * (1u32 << (slot.attempts - 1).min(6) as u32);
+        slot.respawn_at = Some(Instant::now() + backoff);
+    }
+    Ok(())
+}
+
+fn spawn_worker(cfg: &FleetConfig, slot: &mut Slot) -> Result<(), FleetError> {
+    let mut cmd = Command::new(&cfg.bin);
+    cmd.arg("tune-shard")
+        .args(["--shards", &cfg.workers.to_string()])
+        .args(["--shard", &slot.shard.to_string()])
+        .arg("--journal")
+        .arg(&slot.journal)
+        .arg("--out")
+        .arg(&slot.cache_out)
+        .args(&cfg.worker_args)
+        .stdout(Stdio::null())
+        // fault knobs never leak from the conductor's own environment —
+        // they are injected per shard, first attempt only, below
+        .env_remove(FLEET_FAULT_ENV)
+        .env_remove(FAULT_AFTER_ENV)
+        .env_remove(TASK_DELAY_ENV);
+    if slot.attempts == 0 {
+        for (shard, key, value) in &cfg.first_attempt_env {
+            if *shard == slot.shard {
+                cmd.env(key, value);
+            }
+        }
+    }
+    let child = cmd.spawn().map_err(|e| {
+        FleetError::Config(format!("cannot spawn worker {}: {e}", cfg.bin.display()))
+    })?;
+    slot.child = Some(child);
+    slot.attempts += 1;
+    slot.respawn_at = None;
+    slot.last_len = std::fs::metadata(&slot.journal).map(|m| m.len()).unwrap_or(0);
+    slot.last_growth = Instant::now();
+    Ok(())
+}
+
+/// How `tuna tune-shard` (one fleet worker process) runs.
+pub struct WorkerConfig {
+    /// Network name, resolved against [`crate::graph::all_networks`].
+    pub net: String,
+    pub kind: TargetKind,
+    /// Total shard count — must match the conductor's worker count.
+    pub shards: usize,
+    /// This worker's shard index.
+    pub shard: usize,
+    /// Append-only journal: replayed on start (resume), appended per
+    /// fresh search.
+    pub journal: PathBuf,
+    /// Where the finished shard cache is saved (atomically).
+    pub out: PathBuf,
+    pub es: EsParams,
+    /// `false` uses the latency-table model (fast, deterministic startup
+    /// — what the fault tests use).
+    pub calibrated: bool,
+    /// [`FAULT_AFTER_ENV`]: abort after this many appends this run.
+    pub fault_after: Option<usize>,
+    /// [`TASK_DELAY_ENV`]: sleep after each task.
+    pub task_delay: Duration,
+}
+
+/// What a worker run did.
+#[derive(Debug, Clone, Copy)]
+pub struct WorkerReport {
+    /// Tasks in this worker's shard.
+    pub tasks: usize,
+    /// Records recovered from the journal on start.
+    pub replayed: usize,
+    /// Tasks served by the replayed journal (no search ran).
+    pub resumed: usize,
+    /// Fresh searches this run.
+    pub searched: usize,
+}
+
+/// Tune one shard of a network: replay the journal, search every task not
+/// already covered (journaling each fresh outcome), and save exactly this
+/// shard's entries as the shard cache. Deterministic given the partition
+/// inputs — which is what makes the conductor's merge bit-identical to
+/// unsharded tuning no matter how many times a shard was retried.
+pub fn run_worker(cfg: &WorkerConfig) -> Result<WorkerReport, String> {
+    if cfg.shards == 0 || cfg.shard >= cfg.shards {
+        return Err(format!("shard {} out of range (shards = {})", cfg.shard, cfg.shards));
+    }
+    let net = crate::graph::all_networks()
+        .into_iter()
+        .find(|n| n.name == cfg.net)
+        .ok_or_else(|| format!("unknown network {:?}", cfg.net))?;
+    let tasks = net.unique_tasks();
+    let mine = {
+        let mut parts = partition(cfg.kind, &tasks, cfg.shards);
+        parts.swap_remove(cfg.shard)
+    };
+
+    let (mut journal, replay) = if cfg.journal.exists() {
+        CacheJournal::open(&cfg.journal).map_err(|e| e.to_string())?
+    } else {
+        (CacheJournal::create(&cfg.journal).map_err(|e| e.to_string())?, JournalReplay::default())
+    };
+    let replayed = replay.records();
+
+    let coordinator = if cfg.calibrated {
+        Coordinator::new(cfg.kind)
+    } else {
+        Coordinator::new_uncalibrated(cfg.kind)
+    };
+    coordinator.import_cache(replay.into_cache());
+
+    let strategy = Strategy::TunaStatic(cfg.es.clone());
+    let sig = strategy
+        .cache_sig()
+        .ok_or("fleet workers require a cacheable (deviceless) strategy")?;
+
+    let mut out_cache = ScheduleCache::new();
+    let mut resumed = 0usize;
+    let mut searched = 0usize;
+    let mut appended = 0usize;
+    for op in &mine {
+        let space = transform::config_space(op, cfg.kind);
+        let key = ScheduleCache::key(cfg.kind, op, &space, &sig);
+        let report = coordinator.try_search_op(op, &strategy).map_err(|e| e.to_string())?;
+        let entry = coordinator
+            .cached_entry(&key)
+            .ok_or_else(|| format!("no cache entry recorded for {key}"))?;
+        if report.cache_hit {
+            resumed += 1;
+        } else {
+            searched += 1;
+            journal.append(&key, &entry).map_err(|e| e.to_string())?;
+            appended += 1;
+            if cfg.fault_after.is_some_and(|after| appended >= after) {
+                eprintln!(
+                    "fleet worker shard {}: injected fault after {appended} appends",
+                    cfg.shard
+                );
+                std::process::abort();
+            }
+        }
+        out_cache.insert(key, entry);
+        if !cfg.task_delay.is_zero() {
+            std::thread::sleep(cfg.task_delay);
+        }
+    }
+
+    // exactly this shard's entries — replayed-but-stale journal records
+    // (e.g. an older campaign's hyperparameters) never leak into the merge
+    out_cache.save(&cfg.out).map_err(|e| e.to_string())?;
+    Ok(WorkerReport { tasks: mine.len(), replayed, resumed, searched })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_workers_is_a_config_error() {
+        let cfg = FleetConfig::new(
+            PathBuf::from("/nonexistent/tuna"),
+            0,
+            std::env::temp_dir().join("tuna_fleet_cfg_test"),
+            std::env::temp_dir().join("tuna_fleet_cfg_test_out.json"),
+        );
+        assert!(matches!(run_fleet(&cfg), Err(FleetError::Config(_))));
+    }
+
+    #[test]
+    fn worker_rejects_out_of_range_shard() {
+        let cfg = WorkerConfig {
+            net: "bert_base".into(),
+            kind: TargetKind::Graviton2,
+            shards: 2,
+            shard: 2,
+            journal: PathBuf::from("unused.tunaj"),
+            out: PathBuf::from("unused.json"),
+            es: EsParams::default(),
+            calibrated: false,
+            fault_after: None,
+            task_delay: Duration::ZERO,
+        };
+        assert!(run_worker(&cfg).is_err());
+    }
+
+    #[test]
+    fn shard_paths_are_stable() {
+        let dir = Path::new("w");
+        assert_eq!(shard_journal_path(dir, 3), Path::new("w/shard-3.tunaj"));
+        assert_eq!(shard_cache_path(dir, 3), Path::new("w/shard-3.json"));
+    }
+}

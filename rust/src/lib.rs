@@ -48,6 +48,11 @@
 //! * [`shard`] — distributed tuning: deterministic work partitioner
 //!   (FNV-1a over `(target, op key)`), per-shard tuning workers, and the
 //!   cache-merge step that folds N worker caches into one serving cache.
+//! * [`fleet`] — multi-process tuning campaigns over the shard
+//!   partitioner: a conductor that spawns worker processes, heartbeats
+//!   them via append-only cache journals ([`eval::CacheJournal`]),
+//!   retries/reassigns failures, and merges the shard caches into one
+//!   serving cache bit-identical to unsharded tuning.
 //! * [`serve`] — the tune-serving daemon: per-target coordinators with
 //!   calibrated models and warm schedule caches behind a loopback TCP
 //!   socket, speaking a line-delimited JSON protocol (`tune`, batched
@@ -70,6 +75,7 @@ pub mod graph;
 pub mod isa;
 pub mod isets;
 pub mod eval;
+pub mod fleet;
 pub mod metrics;
 #[cfg(feature = "pjrt")]
 pub mod runtime;

@@ -12,11 +12,25 @@
 //!                                      sharded tuning + schedule-cache I/O
 //! tuna merge-caches --inputs a.json,b.json,... --out merged.json
 //!                                      fold N worker caches into one
+//! tuna tune-fleet --net <name> --target <t> --workers N --out merged.json
+//!                 [--work-dir DIR] [--retries N] [--heartbeat-secs N]
+//!                 [--poll-ms N] [--pop N] [--iters N] [--seed N]
+//!                 [--uncalibrated]     multi-process tuning campaign:
+//!                                      spawn/heartbeat/retry/merge
+//!                                      (docs/FLEET.md; fault knob
+//!                                       TUNA_FLEET_FAULT=shard:after)
+//! tuna tune-shard --net <name> --target <t> --shards N --shard I
+//!                 --journal J.tunaj --out shard.json [--pop N] ...
+//!                                      one fleet worker (journaled,
+//!                                      crash-resumable)
 //! tuna serve --targets <list> --port N [--load-cache a.json,b.json]
 //!            [--save-cache out.json] [--cache-cap N] [--serve-threads N]
+//!            [--journal serve.tunaj] [--journal-every SECS]
 //!                                      tune-serving daemon on 127.0.0.1
 //!                                      (protocol: docs/SERVING.md;
-//!                                       --port 0 picks an ephemeral port)
+//!                                       --port 0 picks an ephemeral port;
+//!                                       the journal makes crashes lose at
+//!                                       most the tail since the last sync)
 //! tuna query --port N [--host H] --op <spec> --target <t> [--pop N] ...
 //! tuna query --port N --net <name> --target <t> [--pop N] ...
 //!                                      batched tune_net for a whole network;
@@ -58,6 +72,8 @@ fn main() {
         "tune-op" => cmd_tune_op(&flags),
         "tune-net" => cmd_tune_net(&flags),
         "merge-caches" => cmd_merge_caches(&flags),
+        "tune-fleet" => cmd_tune_fleet(&flags),
+        "tune-shard" => cmd_tune_shard(&flags),
         "serve" => cmd_serve(&flags),
         "query" => cmd_query(&flags),
         "bench-serve" => cmd_bench_serve(&flags),
@@ -83,8 +99,8 @@ fn main() {
 fn usage() {
     eprintln!(
         "tuna — static-analysis DNN optimization (paper reproduction)\n\
-         commands: targets | calibrate | tune-op | tune-net | merge-caches | serve | query |\n\
-         \x20         bench-serve | tables | sweep | e2e\n\
+         commands: targets | calibrate | tune-op | tune-net | merge-caches | tune-fleet |\n\
+         \x20         tune-shard | serve | query | bench-serve | tables | sweep | e2e\n\
          see rust/src/main.rs header for flags"
     );
 }
@@ -352,6 +368,113 @@ fn cmd_merge_caches(flags: &BTreeMap<String, String>) -> Result<(), String> {
     Ok(())
 }
 
+/// Fleet conductor (`tuna tune-fleet`): spawn one `tune-shard` worker
+/// process per shard, heartbeat them via journal growth, retry/reassign
+/// failures, and merge the shard caches into one serving cache — the
+/// multi-process form of `tune-net --shards N`. The env knob
+/// `TUNA_FLEET_FAULT="<shard>:<after>"` injects a worker abort after that
+/// many journal appends into the shard's first attempt (CI smoke).
+fn cmd_tune_fleet(flags: &BTreeMap<String, String>) -> Result<(), String> {
+    use tuna::fleet::{run_fleet, FleetConfig, FAULT_AFTER_ENV, FLEET_FAULT_ENV};
+    let net = flags.get("net").ok_or("--net required")?;
+    network_by_name(net)?; // fail early, not in every worker
+    let kind = single_target(flags)?;
+    let workers: usize = match flags.get("workers") {
+        Some(w) => w.parse().map_err(|e| format!("bad --workers {w:?}: {e}"))?,
+        None => 4,
+    };
+    let out = flags.get("out").ok_or("--out required")?;
+    let work_dir = flags.get("work-dir").map(String::as_str).unwrap_or("fleet_work");
+    let bin = std::env::current_exe().map_err(|e| e.to_string())?;
+    let mut cfg = FleetConfig::new(bin, workers, work_dir.into(), out.into());
+    if let Some(r) = flags.get("retries") {
+        cfg.max_retries = r.parse().map_err(|e| format!("bad --retries {r:?}: {e}"))?;
+    }
+    if let Some(s) = flags.get("heartbeat-secs") {
+        let s: u64 = s.parse().map_err(|e| format!("bad --heartbeat-secs {s:?}: {e}"))?;
+        cfg.heartbeat_timeout = std::time::Duration::from_secs(s.max(1));
+    }
+    if let Some(ms) = flags.get("poll-ms") {
+        let ms: u64 = ms.parse().map_err(|e| format!("bad --poll-ms {ms:?}: {e}"))?;
+        cfg.poll_interval = std::time::Duration::from_millis(ms.max(10));
+    }
+    let mut worker_args =
+        vec!["--net".to_string(), net.clone(), "--target".to_string(), kind.wire_name().into()];
+    for key in ["pop", "iters", "seed"] {
+        if let Some(v) = flags.get(key) {
+            worker_args.push(format!("--{key}"));
+            worker_args.push(v.clone());
+        }
+    }
+    if flags.contains_key("uncalibrated") {
+        worker_args.push("--uncalibrated".into());
+    }
+    cfg.worker_args = worker_args;
+    if let Ok(spec) = std::env::var(FLEET_FAULT_ENV) {
+        let (shard, after) = spec
+            .split_once(':')
+            .ok_or_else(|| format!("bad {FLEET_FAULT_ENV}={spec:?} (want shard:after)"))?;
+        let shard: usize = shard.parse().map_err(|e| format!("bad fault shard: {e}"))?;
+        let _: usize = after.parse().map_err(|e| format!("bad fault count: {e}"))?;
+        eprintln!("fleet: injecting fault into shard {shard} first attempt (after {after} appends)");
+        cfg.first_attempt_env.push((shard, FAULT_AFTER_ENV.to_string(), after.to_string()));
+    }
+    let report = run_fleet(&cfg).map_err(|e| e.to_string())?;
+    for s in &report.shards {
+        println!(
+            "shard {:<3} attempts {}  retries {}  reassigned {}  entries {}",
+            s.shard, s.attempts, s.retries, s.reassigned, s.entries
+        );
+    }
+    println!(
+        "merged {} entries into {out} ({} inserted, {} combined; {} retries, {} reassignments)",
+        report.merged_entries,
+        report.merge.inserted,
+        report.merge.combined,
+        report.retries(),
+        report.reassignments()
+    );
+    Ok(())
+}
+
+/// One fleet worker (`tuna tune-shard`, spawned by `tune-fleet`): tune
+/// shard `--shard` of the `--shards`-way partition, journaling every
+/// fresh search outcome and resuming from the journal after a crash.
+fn cmd_tune_shard(flags: &BTreeMap<String, String>) -> Result<(), String> {
+    use tuna::fleet::{run_worker, WorkerConfig, FAULT_AFTER_ENV, TASK_DELAY_ENV};
+    fn env_num<T: std::str::FromStr>(key: &str) -> Option<T> {
+        std::env::var(key).ok().and_then(|v| v.parse().ok())
+    }
+    let cfg = WorkerConfig {
+        net: flags.get("net").ok_or("--net required")?.clone(),
+        kind: single_target(flags)?,
+        shards: flags
+            .get("shards")
+            .ok_or("--shards required")?
+            .parse()
+            .map_err(|e| format!("bad --shards: {e}"))?,
+        shard: flags
+            .get("shard")
+            .ok_or("--shard required")?
+            .parse()
+            .map_err(|e| format!("bad --shard: {e}"))?,
+        journal: flags.get("journal").ok_or("--journal required")?.into(),
+        out: flags.get("out").ok_or("--out required")?.into(),
+        es: es_params(flags),
+        calibrated: !flags.contains_key("uncalibrated"),
+        fault_after: env_num::<usize>(FAULT_AFTER_ENV),
+        task_delay: std::time::Duration::from_millis(
+            env_num::<u64>(TASK_DELAY_ENV).unwrap_or(0),
+        ),
+    };
+    let r = run_worker(&cfg)?;
+    eprintln!(
+        "shard {}/{}: {} tasks ({} resumed from journal, {} searched)",
+        cfg.shard, cfg.shards, r.tasks, r.resumed, r.searched
+    );
+    Ok(())
+}
+
 /// Run the tune-serving daemon (`tuna serve`). Prints the bound address
 /// on stdout — `listening on 127.0.0.1:PORT` — before entering the accept
 /// loop; scripts and the CLI integration test wait for that line.
@@ -377,6 +500,14 @@ fn cmd_serve(flags: &BTreeMap<String, String>) -> Result<(), String> {
     if let Some(cap) = flags.get("cache-cap") {
         cfg.cache_capacity =
             Some(cap.parse().map_err(|e| format!("bad --cache-cap {cap:?}: {e}"))?);
+    }
+    if let Some(p) = flags.get("journal") {
+        cfg.journal = Some(p.into());
+    }
+    if let Some(secs) = flags.get("journal-every") {
+        let secs: u64 =
+            secs.parse().map_err(|e| format!("bad --journal-every {secs:?}: {e}"))?;
+        cfg.journal_every = std::time::Duration::from_secs(secs.max(1));
     }
     let server = Server::bind(cfg).map_err(|e| e.to_string())?;
     println!("listening on {}", server.local_addr());

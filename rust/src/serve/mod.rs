@@ -59,7 +59,7 @@ pub mod bench;
 pub mod protocol;
 
 use crate::coordinator::{Coordinator, Strategy};
-use crate::eval::{CacheError, ScheduleCache};
+use crate::eval::{CacheError, CacheJournal, ScheduleCache};
 use crate::isa::TargetKind;
 use crate::metrics::serve::{gauge_block, ServeMetrics};
 use crate::search::EsParams;
@@ -105,6 +105,17 @@ pub struct ServeConfig {
     /// Calibrate coordinators at startup (production default). `false`
     /// keeps the latency-table coefficients — cheaper for tests.
     pub calibrated: bool,
+    /// Append-only cache journal (`.tunaj`, see
+    /// [`crate::eval::CacheJournal`]). If the file exists it is replayed
+    /// at startup — crash recovery needs no graceful shutdown — and while
+    /// serving, new/changed entries are appended every
+    /// [`ServeConfig::journal_every`], so a crash loses at most the tail
+    /// since the last sync. One daemon per journal file; entries loaded
+    /// via `cache_paths` should not overlap the journal (overlapping keys
+    /// merge by the usual clash rules, which sum evaluation counts).
+    pub journal: Option<PathBuf>,
+    /// Journal sync cadence (only meaningful with `journal`).
+    pub journal_every: Duration,
 }
 
 impl Default for ServeConfig {
@@ -117,6 +128,8 @@ impl Default for ServeConfig {
             save_on_shutdown: None,
             cache_capacity: None,
             calibrated: true,
+            journal: None,
+            journal_every: Duration::from_secs(5),
         }
     }
 }
@@ -472,6 +485,8 @@ pub struct Server {
     state: State,
     threads: usize,
     save_on_shutdown: Option<PathBuf>,
+    journal: Option<CacheJournal>,
+    journal_every: Duration,
 }
 
 impl Server {
@@ -521,6 +536,36 @@ impl Server {
             }
             foreign.merge_from(rest);
         }
+        // the journal is both a warm-load source (replay: crash recovery
+        // without a graceful shutdown) and the sink the serving loop syncs
+        // to — recovered entries are split per target exactly like a
+        // cache_paths file, and journaled entries for unserved targets are
+        // preserved through foreign
+        let journal = match &config.journal {
+            Some(path) if path.exists() => {
+                let (journal, replay) = CacheJournal::open(path)
+                    .map_err(|e| ServeError::Cache(path.clone(), e))?;
+                let recovered = replay.into_cache();
+                for t in &coords {
+                    let own = recovered.filter_target(t.kind);
+                    if !own.is_empty() {
+                        t.coordinator.import_cache(own);
+                    }
+                }
+                let mut rest = ScheduleCache::new();
+                for (k, v) in recovered.iter() {
+                    if !served_prefixes.iter().any(|p| k.starts_with(p.as_str())) {
+                        rest.insert(k.to_string(), v.clone());
+                    }
+                }
+                foreign.merge_from(rest);
+                Some(journal)
+            }
+            Some(path) => Some(
+                CacheJournal::create(path).map_err(|e| ServeError::Cache(path.clone(), e.into()))?,
+            ),
+            None => None,
+        };
         let listener = TcpListener::bind((Ipv4Addr::LOCALHOST, config.port))?;
         let addr = listener.local_addr()?;
         let metrics = metrics_for(&coords);
@@ -529,6 +574,8 @@ impl Server {
             state: State { coords, foreign, stop: AtomicBool::new(false), addr, metrics },
             threads: config.threads.max(1),
             save_on_shutdown: config.save_on_shutdown,
+            journal,
+            journal_every: config.journal_every,
         })
     }
 
@@ -540,9 +587,43 @@ impl Server {
     /// Serve until a `shutdown` request, then drain in-flight connections
     /// and persist the caches if configured. Blocks the calling thread.
     pub fn run(self) -> Result<(), ServeError> {
-        let Server { listener, state, threads, save_on_shutdown } = self;
+        let Server { listener, state, threads, save_on_shutdown, journal, journal_every } = self;
         let queue: WorkQueue<Conn> = WorkQueue::new();
         std::thread::scope(|s| {
+            if let Some(mut journal) = journal {
+                // interval journaler: diff the merged cache against what is
+                // already on disk and append the changes, so a SIGKILL at
+                // any instant loses at most the tail since the last sync.
+                // Sleeps in short slices to observe shutdown promptly and
+                // performs one final sync before exiting the scope.
+                let state = &state;
+                s.spawn(move || {
+                    let mut last = Instant::now();
+                    loop {
+                        let stopping = state.stopping();
+                        if stopping || last.elapsed() >= journal_every {
+                            match catch_unwind(AssertUnwindSafe(|| state.merged_cache())) {
+                                Ok(merged) => {
+                                    if let Err(e) = journal.sync_from(&merged) {
+                                        eprintln!(
+                                            "serve: journal {} sync failed: {e}",
+                                            journal.path().display()
+                                        );
+                                    }
+                                }
+                                Err(_) => eprintln!(
+                                    "serve: cache export panicked; journal sync skipped"
+                                ),
+                            }
+                            last = Instant::now();
+                        }
+                        if stopping {
+                            break;
+                        }
+                        std::thread::sleep(Duration::from_millis(100));
+                    }
+                });
+            }
             for _ in 0..threads {
                 s.spawn(|| {
                     while let Some(mut conn) = queue.pop() {

@@ -1,0 +1,200 @@
+//! Fault-injection tests for the fleet conductor (`tuna tune-fleet`):
+//! worker processes are killed, made to abort, and made to stall, and in
+//! every case the campaign must finish with a merged cache **bit-identical**
+//! to an unsharded `tune_network` run — same keys, same chosen configs,
+//! same top-k, same evaluation counts. Workers are real OS processes
+//! (`CARGO_BIN_EXE_tuna tune-shard`); the kill in the first test is a real
+//! SIGKILL delivered mid-shard, not a cooperative shutdown.
+
+use std::path::{Path, PathBuf};
+use std::process::{Command, Stdio};
+use std::time::{Duration, Instant};
+
+use tuna::coordinator::{Coordinator, Strategy};
+use tuna::eval::{CacheJournal, ScheduleCache};
+use tuna::fleet::{
+    run_fleet, shard_journal_path, FleetConfig, FAULT_AFTER_ENV, TASK_DELAY_ENV,
+};
+use tuna::graph::{all_networks, Network};
+use tuna::isa::TargetKind;
+use tuna::search::EsParams;
+use tuna::shard::partition;
+
+const KIND: TargetKind = TargetKind::Graviton2;
+const WORKERS: usize = 2;
+
+/// Must match [`worker_args`] exactly — the cache address embeds the
+/// search signature, and bit-identity embeds everything else.
+fn es() -> EsParams {
+    EsParams { population: 8, iterations: 4, seed: 11, ..Default::default() }
+}
+
+fn worker_args() -> Vec<String> {
+    ["--net", "bert_base", "--target", "graviton2", "--uncalibrated", "--pop", "8",
+        "--iters", "4", "--seed", "11"]
+        .into_iter()
+        .map(String::from)
+        .collect()
+}
+
+fn bin() -> &'static str {
+    env!("CARGO_BIN_EXE_tuna")
+}
+
+fn work_dir(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("tuna_fleet_{tag}_{}", std::process::id()))
+}
+
+/// The fused form — what `tune-shard` workers resolve `--net bert_base`
+/// to, so the reference must tune the same task list.
+fn fused_bert() -> Network {
+    all_networks().into_iter().find(|n| n.name == "bert_base").expect("bert_base missing")
+}
+
+/// The unsharded ground truth: one process tunes every task, and its
+/// exported cache serialization is the byte string the fleet's merged
+/// cache file must equal.
+fn reference_cache_text(net: &Network) -> String {
+    let single = Coordinator::new_uncalibrated(KIND);
+    single.tune_network(net, &Strategy::TunaStatic(es()));
+    single.export_cache().to_json().to_string()
+}
+
+fn fleet_config(dir: &Path, out: &Path) -> FleetConfig {
+    let mut cfg = FleetConfig::new(bin().into(), WORKERS, dir.to_path_buf(), out.to_path_buf());
+    cfg.worker_args = worker_args();
+    cfg.poll_interval = Duration::from_millis(50);
+    cfg.backoff_base = Duration::from_millis(100);
+    cfg
+}
+
+/// The shard a fault should land on: the one with the most tasks, so a
+/// mid-shard kill always leaves both journaled and unjournaled work.
+fn victim_shard(net: &Network) -> (usize, usize) {
+    let tasks = net.unique_tasks();
+    let parts = partition(KIND, &tasks, WORKERS);
+    let (victim, part) =
+        parts.iter().enumerate().max_by_key(|(_, p)| p.len()).expect("empty partition");
+    assert!(part.len() >= 2, "victim shard too small to interrupt mid-shard");
+    (victim, part.len())
+}
+
+/// SIGKILL a worker mid-shard, then let the conductor finish the campaign
+/// over the same work dir: the respawn resumes from the journal (the
+/// killed worker's completed searches are never repeated) and the merged
+/// cache is bit-identical to unsharded tuning.
+#[test]
+fn sigkilled_worker_resumes_from_journal_and_merge_is_bit_identical() {
+    let net = fused_bert();
+    let (victim, victim_tasks) = victim_shard(&net);
+    let dir = work_dir("sigkill");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let journal = shard_journal_path(&dir, victim);
+
+    // a real worker process on the victim shard, slowed down so the kill
+    // window between tasks is wide
+    let mut worker = Command::new(bin())
+        .args(["tune-shard", "--shards", &WORKERS.to_string(), "--shard", &victim.to_string()])
+        .arg("--journal")
+        .arg(&journal)
+        .arg("--out")
+        .arg(dir.join(format!("shard-{victim}.json")))
+        .args(worker_args())
+        .env(TASK_DELAY_ENV, "400")
+        .stdout(Stdio::null())
+        .stderr(Stdio::null())
+        .spawn()
+        .expect("failed to spawn tune-shard worker");
+
+    // wait for at least one flushed record, then SIGKILL — no flush, no
+    // save, no goodbye
+    let deadline = Instant::now() + Duration::from_secs(120);
+    loop {
+        let records =
+            CacheJournal::replay(&journal).map(|r| r.records()).unwrap_or(0);
+        if records >= 1 {
+            break;
+        }
+        assert!(Instant::now() < deadline, "worker journaled nothing in 120s");
+        std::thread::sleep(Duration::from_millis(25));
+    }
+    worker.kill().expect("kill failed");
+    let status = worker.wait().expect("wait failed");
+    assert!(!status.success(), "SIGKILLed worker exited 0");
+    let survivors = CacheJournal::replay(&journal).unwrap().records();
+    assert!(survivors >= 1, "no complete record survived the kill");
+    assert!(survivors < victim_tasks, "worker finished before the kill landed");
+
+    // the campaign over the same work dir: the victim's respawn replays
+    // the journal and only searches what the dead worker never finished
+    let out = dir.join("merged.json");
+    let report = run_fleet(&fleet_config(&dir, &out)).expect("fleet did not recover");
+    assert_eq!(report.merged_entries, net.unique_tasks().len());
+
+    // every complete pre-kill record was resumed, not re-searched: one
+    // journal record per task, ever
+    assert_eq!(CacheJournal::replay(&journal).unwrap().records(), victim_tasks);
+
+    let merged = std::fs::read_to_string(&out).unwrap();
+    assert_eq!(merged, reference_cache_text(&net), "merged cache diverged from unsharded run");
+
+    // the merged file round-trips as a first-class cache
+    assert_eq!(ScheduleCache::load(&out).unwrap().len(), net.unique_tasks().len());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// An injected abort (the CI smoke's fault knob) on a first attempt is
+/// retried with backoff; the retry resumes and the merge is still
+/// bit-identical.
+#[test]
+fn injected_abort_is_retried_and_merge_is_bit_identical() {
+    let net = fused_bert();
+    let (victim, _) = victim_shard(&net);
+    let dir = work_dir("abort");
+    let _ = std::fs::remove_dir_all(&dir);
+    let out = dir.join("merged.json");
+
+    let mut cfg = fleet_config(&dir, &out);
+    // the victim's first attempt aborts right after its first journal
+    // append; the retry runs clean (first-attempt-only injection)
+    cfg.first_attempt_env = vec![(victim, FAULT_AFTER_ENV.to_string(), "1".to_string())];
+    let report = run_fleet(&cfg).expect("fleet did not survive the injected abort");
+
+    assert!(report.retries() >= 1, "no retry recorded: {report:?}");
+    assert!(report.shards[victim].attempts >= 2, "victim was not respawned: {report:?}");
+    assert_eq!(report.reassignments(), 0, "abort was misclassified as a stall");
+    assert_eq!(report.merged_entries, net.unique_tasks().len());
+
+    let merged = std::fs::read_to_string(&out).unwrap();
+    assert_eq!(merged, reference_cache_text(&net), "retried campaign diverged");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A worker that stalls (alive but journaling nothing) past the heartbeat
+/// deadline is killed and its shard reassigned; the campaign still
+/// completes with a full, bit-identical merge.
+#[test]
+fn stalled_worker_is_reassigned_past_the_heartbeat_deadline() {
+    let net = fused_bert();
+    let (victim, _) = victim_shard(&net);
+    let dir = work_dir("straggler");
+    let _ = std::fs::remove_dir_all(&dir);
+    let out = dir.join("merged.json");
+
+    let mut cfg = fleet_config(&dir, &out);
+    // the victim's first attempt sleeps 60s after each task — it will
+    // journal once, then stall far past the 3s heartbeat deadline
+    cfg.first_attempt_env = vec![(victim, TASK_DELAY_ENV.to_string(), "60000".to_string())];
+    cfg.heartbeat_timeout = Duration::from_secs(3);
+    cfg.poll_interval = Duration::from_millis(100);
+    let report = run_fleet(&cfg).expect("fleet did not recover from the straggler");
+
+    assert!(report.reassignments() >= 1, "straggler was never reassigned: {report:?}");
+    assert!(report.shards[victim].attempts >= 2, "victim was not respawned: {report:?}");
+    assert_eq!(report.merged_entries, net.unique_tasks().len());
+
+    let merged = std::fs::read_to_string(&out).unwrap();
+    assert_eq!(merged, reference_cache_text(&net), "reassigned campaign diverged");
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -3,6 +3,7 @@
 //! proptest; same idea: random cases + shrink-free minimal assertions).
 
 use std::collections::BTreeMap;
+use tuna::eval::{CacheJournal, CachedSchedule};
 use tuna::isa::TargetKind;
 use tuna::isets::{Affine, StridedSet};
 use tuna::serve::protocol::{ErrorCode, OpOutcome, Request, Response, TargetStats, TuneParams};
@@ -571,4 +572,160 @@ fn prop_pre_epilogue_v2_cache_files_still_load() {
     let fused = r#"{"kind":"dense","m":32,"n":32,"k":32,"epilogue":"bias_relu"}"#;
     let op = OpSpec::from_json(&Json::parse(fused).unwrap()).unwrap();
     assert_eq!(op, expected.with_epilogue(Epilogue::BiasRelu).unwrap());
+}
+
+// ---------------------------------------------------------------------
+// journal recovery properties: arbitrary truncation and corruption of a
+// `.tunaj` file recovers exactly the complete, checksum-valid records —
+// never a panic, never a garbage entry (format: docs/CACHE_FORMAT.md).
+
+fn random_entry(rng: &mut Rng) -> CachedSchedule {
+    fn cfg(rng: &mut Rng) -> ScheduleConfig {
+        ScheduleConfig { choices: (0..1 + rng.below(4)).map(|_| rng.below(8)).collect() }
+    }
+    let mut top_k: Vec<(ScheduleConfig, f64)> = (0..1 + rng.below(3))
+        .map(|_| (cfg(rng), rng.below(100_000) as f64 * 0.001))
+        .collect();
+    top_k.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+    CachedSchedule {
+        chosen: top_k[0].0.clone(),
+        best_score: top_k[0].1,
+        top_k,
+        evaluations: rng.below(500) as u64,
+        // a quarter of entries look like v1 migrations (no embedded op)
+        op: if rng.below(4) == 0 { None } else { Some(random_op(rng)) },
+    }
+}
+
+fn journal_temp(tag: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("tuna_prop_{tag}_{}.tunaj", std::process::id()))
+}
+
+/// INVARIANT: replay returns every appended record in order (duplicates
+/// included), and `into_cache` folds them with last-wins.
+#[test]
+fn prop_journal_replay_matches_appends_with_last_wins() {
+    let mut rng = Rng::new(4242);
+    let path = journal_temp("roundtrip");
+    for case in 0..12 {
+        let keys = ["k/a", "k/b", "k/c"];
+        let mut j = CacheJournal::create(&path).unwrap();
+        let mut appended: Vec<(String, CachedSchedule)> = Vec::new();
+        for _ in 0..1 + rng.below(6) {
+            let key = keys[rng.below(keys.len())].to_string();
+            let e = random_entry(&mut rng);
+            j.append(&key, &e).unwrap();
+            appended.push((key, e));
+        }
+        drop(j);
+        let replay = CacheJournal::replay(&path).unwrap();
+        assert_eq!(replay.dropped, 0, "case {case}");
+        assert_eq!(replay.entries, appended, "case {case}");
+
+        let mut want = BTreeMap::new();
+        for (k, e) in appended {
+            want.insert(k, e);
+        }
+        let cache = CacheJournal::replay(&path).unwrap().into_cache();
+        assert_eq!(cache.len(), want.len(), "case {case}");
+        for (k, e) in &want {
+            assert_eq!(cache.peek(k), Some(e), "case {case}: {k} did not last-win");
+        }
+    }
+    let _ = std::fs::remove_file(&path);
+}
+
+/// INVARIANT: for EVERY byte-length prefix of a journal (every possible
+/// torn write), replay recovers exactly the records whose bytes survived
+/// (a record missing only its trailing newline counts as survived) — and
+/// `open` repairs the tail so a subsequent replay sees zero drops.
+#[test]
+fn prop_journal_every_prefix_truncation_recovers_complete_records() {
+    let mut rng = Rng::new(8484);
+    let full = journal_temp("trunc_full");
+    let cut_path = journal_temp("trunc_cut");
+    for case in 0..10 {
+        let mut j = CacheJournal::create(&full).unwrap();
+        let mut appended: Vec<(String, CachedSchedule)> = Vec::new();
+        let mut ends: Vec<usize> = Vec::new();
+        for i in 0..1 + rng.below(4) {
+            let e = random_entry(&mut rng);
+            j.append(&format!("k/{i}"), &e).unwrap();
+            appended.push((format!("k/{i}"), e));
+            ends.push(std::fs::metadata(&full).unwrap().len() as usize);
+        }
+        drop(j);
+        let bytes = std::fs::read(&full).unwrap();
+        for cut in 0..=bytes.len() {
+            std::fs::write(&cut_path, &bytes[..cut]).unwrap();
+            let replay = CacheJournal::replay(&cut_path)
+                .unwrap_or_else(|e| panic!("case {case} cut {cut}: typed error {e}"));
+            // a record survives iff at most its newline is missing
+            let want = ends.iter().filter(|&&end| cut + 1 >= end).count();
+            assert_eq!(replay.records(), want, "case {case} cut {cut}");
+            assert_eq!(replay.entries, appended[..want], "case {case} cut {cut}");
+            assert!(replay.dropped <= 1, "case {case} cut {cut}: {}", replay.dropped);
+
+            // open() must repair the tail in place: same recovery, and the
+            // file it leaves behind replays clean
+            let (j, repaired) = CacheJournal::open(&cut_path)
+                .unwrap_or_else(|e| panic!("case {case} cut {cut}: open failed {e}"));
+            assert_eq!(repaired.records(), want, "case {case} cut {cut}: open diverged");
+            drop(j);
+            let clean = CacheJournal::replay(&cut_path).unwrap();
+            assert_eq!(clean.records(), want, "case {case} cut {cut}: repair lost records");
+            assert_eq!(clean.dropped, 0, "case {case} cut {cut}: torn tail left behind");
+        }
+    }
+    let _ = std::fs::remove_file(&full);
+    let _ = std::fs::remove_file(&cut_path);
+}
+
+/// INVARIANT: a single bit flip anywhere past the header drops the
+/// affected record(s) — the struck record, plus its successor if the flip
+/// destroyed the newline between them — and nothing else. The corruption
+/// is always *noticed* (dropped > 0) and never replayed as data.
+#[test]
+fn prop_journal_bit_flips_never_load_garbage() {
+    let mut rng = Rng::new(2626);
+    let full = journal_temp("flip_full");
+    let flip_path = journal_temp("flip");
+    for case in 0..CASES {
+        let mut j = CacheJournal::create(&full).unwrap();
+        let header_len = std::fs::metadata(&full).unwrap().len() as usize;
+        let mut appended: Vec<(String, CachedSchedule)> = Vec::new();
+        let mut bounds: Vec<(usize, usize)> = Vec::new();
+        let mut prev = header_len;
+        for i in 0..2 + rng.below(3) {
+            let e = random_entry(&mut rng);
+            j.append(&format!("k/{i}"), &e).unwrap();
+            appended.push((format!("k/{i}"), e));
+            let end = std::fs::metadata(&full).unwrap().len() as usize;
+            bounds.push((prev, end));
+            prev = end;
+        }
+        drop(j);
+        let mut bytes = std::fs::read(&full).unwrap();
+        let idx = header_len + rng.below(bytes.len() - header_len);
+        bytes[idx] ^= 1 << rng.below(8);
+        std::fs::write(&flip_path, &bytes).unwrap();
+
+        let victim = bounds.iter().position(|&(s, e)| s <= idx && idx < e).unwrap();
+        // flipping the record's own newline fuses it with its successor:
+        // one unparseable line, two records lost
+        let ate_newline = idx == bounds[victim].1 - 1;
+        let want: Vec<(String, CachedSchedule)> = appended
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| *i != victim && !(ate_newline && *i == victim + 1))
+            .map(|(_, rec)| rec.clone())
+            .collect();
+
+        let replay = CacheJournal::replay(&flip_path)
+            .unwrap_or_else(|e| panic!("case {case} idx {idx}: typed error {e}"));
+        assert_eq!(replay.entries, want, "case {case}: flip at {idx}");
+        assert!(replay.dropped >= 1, "case {case}: flip at {idx} went unnoticed");
+    }
+    let _ = std::fs::remove_file(&full);
+    let _ = std::fs::remove_file(&flip_path);
 }

@@ -596,3 +596,124 @@ fn concurrent_tunes_on_different_targets_both_succeed() {
     client.shutdown();
     daemon.join().unwrap();
 }
+
+/// SIGKILL a journaling daemon process mid-flight, restart it from the
+/// same journal, and every op tuned before the crash is served warm —
+/// search-free, zero evaluations, bit-identical to the pre-crash
+/// responses. The daemon is the real binary (`CARGO_BIN_EXE_tuna serve`)
+/// so the kill is a real SIGKILL: no shutdown hook, no atexit save — the
+/// interval journal sync is the only thing that survives.
+#[test]
+fn killed_daemon_restarts_from_journal_and_serves_pre_crash_hits() {
+    use std::process::{Child, Command, Stdio};
+    use std::time::Instant;
+    use tuna::eval::CacheJournal;
+
+    let journal = std::env::temp_dir()
+        .join(format!("tuna_serve_e2e_crash_{}.tunaj", std::process::id()));
+    let _ = std::fs::remove_file(&journal);
+
+    struct Daemon(Option<Child>);
+    impl Drop for Daemon {
+        fn drop(&mut self) {
+            if let Some(mut child) = self.0.take() {
+                let _ = child.kill();
+                let _ = child.wait();
+            }
+        }
+    }
+
+    fn spawn_daemon(journal: &std::path::Path) -> (Daemon, SocketAddr) {
+        let mut child = Command::new(env!("CARGO_BIN_EXE_tuna"))
+            .args(["serve", "--targets", "graviton2", "--port", "0", "--journal-every", "1"])
+            .arg("--journal")
+            .arg(journal)
+            .stdout(Stdio::piped())
+            .stderr(Stdio::null())
+            .spawn()
+            .expect("failed to spawn serve daemon");
+        // "listening on 127.0.0.1:PORT"
+        let stdout = child.stdout.take().expect("no stdout pipe");
+        let mut line = String::new();
+        BufReader::new(stdout).read_line(&mut line).expect("daemon stdout unreadable");
+        let addr: SocketAddr = line
+            .trim()
+            .rsplit(' ')
+            .next()
+            .and_then(|a| a.parse().ok())
+            .unwrap_or_else(|| panic!("no address in daemon banner {line:?}"));
+        (Daemon(Some(child)), addr)
+    }
+
+    let ops = [
+        OpSpec::Matmul { m: 40, n: 32, k: 24, epilogue: Epilogue::None },
+        OpSpec::Matmul { m: 56, n: 32, k: 32, epilogue: Epilogue::None },
+    ];
+
+    // daemon A tunes both ops cold
+    let (mut daemon_a, addr_a) = spawn_daemon(&journal);
+    let mut client = Client::connect(addr_a);
+    let mut pre_crash = Vec::new();
+    for op in ops {
+        let resp = client.tune(TargetKind::Graviton2, op);
+        assert!(
+            matches!(resp, Response::Tuned { cache_hit: false, .. }),
+            "cold tune of {op} failed: {resp:?}"
+        );
+        pre_crash.push(resp);
+    }
+
+    // wait for the interval journaler to sync both entries (a concurrent
+    // read can catch a torn tail — replay just drops it, so retry)
+    let deadline = Instant::now() + Duration::from_secs(120);
+    loop {
+        if let Ok(replay) = CacheJournal::replay(&journal) {
+            if replay.records() >= ops.len() {
+                break;
+            }
+        }
+        assert!(Instant::now() < deadline, "journal never synced {} records", ops.len());
+        std::thread::sleep(Duration::from_millis(100));
+    }
+
+    // SIGKILL: no graceful save path runs
+    let mut child = daemon_a.0.take().expect("daemon already gone");
+    child.kill().expect("kill failed");
+    let status = child.wait().expect("wait failed");
+    assert!(!status.success(), "SIGKILLed daemon exited 0");
+
+    // daemon B: same journal, fresh process — replays at bind
+    let (mut daemon_b, addr_b) = spawn_daemon(&journal);
+    let mut client = Client::connect(addr_b);
+    for (op, want) in ops.iter().zip(&pre_crash) {
+        let got = client.tune(TargetKind::Graviton2, *op);
+        let (
+            Response::Tuned { cache_hit, evaluations, config, predicted_cost, latency_s, .. },
+            Response::Tuned {
+                config: want_config,
+                predicted_cost: want_cost,
+                latency_s: want_latency,
+                ..
+            },
+        ) = (&got, want)
+        else {
+            panic!("post-restart tune of {op} failed: {got:?}");
+        };
+        assert!(*cache_hit, "{op} was lost in the crash");
+        assert_eq!(*evaluations, 0, "{op} re-evaluated after restart");
+        assert_eq!(config, want_config, "{op} schedule changed across the crash");
+        assert_eq!(predicted_cost, want_cost, "{op} score changed across the crash");
+        assert_eq!(latency_s, want_latency, "{op} deployed latency changed across the crash");
+    }
+    assert_eq!(
+        client.stats_for(TargetKind::Graviton2).searches,
+        0,
+        "restarted daemon searched instead of replaying its journal"
+    );
+
+    // clean exit this time
+    client.shutdown();
+    let status = daemon_b.0.take().unwrap().wait().expect("daemon did not exit");
+    assert!(status.success(), "daemon exited with {:?}", status.code());
+    let _ = std::fs::remove_file(&journal);
+}
