@@ -24,11 +24,12 @@
 //! be re-run under fresh coefficients without re-lowering anything.
 
 use super::{cache, gpu_ptx, gpu_tlp, ilp, loop_map, simd_count};
-use crate::codegen;
-use crate::isa::march::{GpuArch, Target};
-use crate::isa::{AsmProgram, MicroArch, TargetKind};
+use crate::codegen::{self, Lowering};
+use crate::isa::march::{GpuArch, RiscvArch, Target};
+use crate::isa::{AsmProgram, MicroArch, Opcode, TargetKind};
 use crate::tir::{ops::OpSpec, TirFunc};
-use crate::transform::{self, ScheduleConfig};
+use crate::transform::ScheduleConfig;
+use std::sync::Arc;
 
 /// CPU feature names (order fixed — coefficients index into it).
 pub const CPU_FEATURES: [&str; 7] = [
@@ -49,6 +50,17 @@ pub const GPU_FEATURES: [&str; 6] = [
     "bank_conflict",
     "low_occupancy",
     "barriers",
+];
+
+/// RISC-V (scalar) feature names: the CPU set minus the vector classes —
+/// a scalar in-order core has no SIMD pipe to count.
+pub const RISCV_FEATURES: [&str; 6] = [
+    "scalar_fma",
+    "scalar_mem",
+    "scalar_alu",
+    "loop_control",
+    "l1_dmov_lines",
+    "ilp_cycles",
 ];
 
 /// Typed feature-extraction failure. The evaluation pipeline propagates
@@ -109,6 +121,34 @@ pub fn extract_cpu(f: &TirFunc, prog: &AsmProgram, march: &MicroArch) -> Feature
     FeatureVector { values }
 }
 
+/// Extract RISC-V scalar features: the same joint IR/asm analyses as the
+/// CPU path (loop map, instruction classes, cache lines, list-scheduled
+/// ILP over the in-order core descriptor), but bucketed for an ISA with no
+/// vector unit. `fmadd.s` executions are counted directly off the loop map
+/// so the split from the generic scalar-ALU class never perturbs the
+/// shared [`simd_count`] buckets the CPU features are pinned to.
+pub fn extract_riscv(f: &TirFunc, prog: &AsmProgram, arch: &RiscvArch) -> FeatureVector {
+    let core = &arch.core;
+    let lm = loop_map::map_loops(f, prog);
+    let counts = simd_count::count(prog, &lm);
+    let sfma = lm.count_instrs(prog, |i| i.op == Opcode::SFma);
+    let l1_elems = (core.l1d.size_bytes / 4) as i64;
+    let ca = cache::analyze(f, l1_elems);
+    let ilp_cost = ilp::program_cost(prog, &lm, core);
+
+    let par = (prog.parallel_extent.min(core.num_cores as i64)).max(1) as f64;
+    let line_elems = (core.l1d.line_bytes / 4) as f64;
+    let values = vec![
+        sfma as f64 / par,
+        (counts.sload + counts.sstore) as f64 / par,
+        ((counts.salu - sfma) + counts.lea) as f64 / par,
+        counts.control as f64 / par,
+        ca.est_misses(line_elems) / par,
+        ilp_cost / par,
+    ];
+    FeatureVector { values }
+}
+
 /// Extract GPU features. Errors (rather than panicking) when the program
 /// carries no launch configuration — the launch check runs first so a
 /// malformed program never reaches the PTX analyses.
@@ -141,30 +181,46 @@ pub fn extract_gpu(
     })
 }
 
-/// Stage 1: lowering + analysis. Owns the target description and nothing
-/// else — feature vectors depend only on `(op, config, target)`, so one
-/// extractor serves every coefficient vector anyone will ever score with.
-#[derive(Debug, Clone)]
+/// Stage 1: lowering + analysis. Owns the target description (and the
+/// backend it resolves to) and nothing else — feature vectors depend only
+/// on `(op, config, target)`, so one extractor serves every coefficient
+/// vector anyone will ever score with.
+#[derive(Clone)]
 pub struct FeatureExtractor {
     pub kind: TargetKind,
     target: Target,
+    lowering: Arc<dyn Lowering>,
+}
+
+impl std::fmt::Debug for FeatureExtractor {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("FeatureExtractor")
+            .field("kind", &self.kind)
+            .field("target", &self.target)
+            .field("family", &self.lowering.family())
+            .finish()
+    }
 }
 
 impl FeatureExtractor {
     pub fn new(kind: TargetKind) -> Self {
-        FeatureExtractor { kind, target: kind.build() }
+        let target = kind.build();
+        let lowering: Arc<dyn Lowering> = Arc::from(codegen::create_lowering(&target));
+        FeatureExtractor { kind, target, lowering }
     }
 
     pub fn target(&self) -> &Target {
         &self.target
     }
 
+    /// The backend this extractor analyzes through.
+    pub fn lowering(&self) -> &dyn Lowering {
+        &*self.lowering
+    }
+
     /// Feature dimensionality for this target family.
     pub fn dim(&self) -> usize {
-        match self.target {
-            Target::Cpu(_) => CPU_FEATURES.len(),
-            Target::Gpu(_) => GPU_FEATURES.len(),
-        }
+        self.lowering.feature_names().len()
     }
 
     /// Lower a (op, config) and extract its features, surfacing extraction
@@ -175,12 +231,9 @@ impl FeatureExtractor {
         op: &OpSpec,
         cfg: &ScheduleConfig,
     ) -> Result<FeatureVector, CostError> {
-        let f = transform::apply(op, self.kind, cfg);
-        let prog = codegen::lower(&f, &self.target);
-        match &self.target {
-            Target::Cpu(m) => Ok(extract_cpu(&f, &prog, m)),
-            Target::Gpu(g) => extract_gpu(&f, &prog, g),
-        }
+        let f = self.lowering.schedule(op, cfg);
+        let prog = self.lowering.lower(&f);
+        self.lowering.extract(&f, &prog)
     }
 
     /// Lower a (op, config) and extract its features.
@@ -208,9 +261,10 @@ impl LinearScorer {
     }
 
     /// Latency-table-derived default coefficients for `target` (usable
-    /// before calibration; calibration replaces them).
+    /// before calibration; calibration replaces them). Sourced from the
+    /// backend — see [`Lowering::default_coeffs`].
     pub fn default_for(target: &Target) -> Self {
-        LinearScorer { coeffs: default_coeffs(target) }
+        LinearScorer { coeffs: codegen::create_lowering(target).default_coeffs() }
     }
 
     pub fn coeffs(&self) -> &[f64] {
@@ -332,33 +386,12 @@ impl CostModel {
     }
 }
 
-/// Latency-table-derived initial coefficients.
-fn default_coeffs(target: &Target) -> Vec<f64> {
-    match target {
-        Target::Cpu(m) => vec![
-            1.0 / m.fma_units as f64,              // fma reciprocal throughput
-            1.0 / m.load_units as f64,             // vector memory
-            1.0 / m.load_units as f64,             // scalar memory
-            1.0 / (m.issue_width as f64 - 1.0),    // scalar ALU
-            0.5,                                   // loop control
-            m.l2.latency as f64,                   // per L1 miss (hits in L2)
-            0.35,                                  // ILP-scheduled cycles blend
-        ],
-        Target::Gpu(_) => vec![
-            1.0,  // compute cycles
-            1.0,  // memory stalls
-            1.0,  // starvation
-            2.0,  // bank-conflict serialization
-            0.3,  // low occupancy
-            1.0,  // barriers
-        ],
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::codegen::cpu::CpuCodegen;
     use crate::tir::ops::Epilogue;
+    use crate::transform;
 
     /// Fusion accounting: features come from the actual lowered TIR, so a
     /// fused op's vector includes the in-tile tail, while the unfused
@@ -384,7 +417,7 @@ mod tests {
             64,
             kind,
         );
-        let prog = codegen::lower_cpu(&pass, &march);
+        let prog = CpuCodegen::new(&march).lower(&pass);
         let fv_pass = extract_cpu(&pass, &prog, &march);
         let miss = |fv: &FeatureVector| fv.values[5]; // l1_dmov_lines
         assert!(miss(&fv_pass) > 0.0, "standalone pass costs no memory traffic");
@@ -438,7 +471,7 @@ mod tests {
     /// same bits as the one-call API.
     #[test]
     fn staged_path_matches_predict_bitwise() {
-        for kind in [TargetKind::Graviton2, TargetKind::TeslaV100] {
+        for kind in [TargetKind::Graviton2, TargetKind::TeslaV100, TargetKind::SiFiveU74] {
             let cm = CostModel::with_default_coeffs(kind);
             let extractor = FeatureExtractor::new(kind);
             let scorer = LinearScorer::new(cm.coeffs().to_vec());

@@ -144,7 +144,6 @@ pub fn analyze(prog: &AsmProgram, gpu: &GpuArch) -> PtxAnalysis {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::codegen;
     use crate::isa::march::tesla_v100;
     use crate::isa::TargetKind;
     use crate::tir::ops::{Epilogue, OpSpec};
@@ -155,7 +154,7 @@ mod tests {
         let s = transform::config_space(op, t);
         let f = transform::apply(op, t, &s.default_config());
         let g = tesla_v100();
-        let prog = codegen::lower_gpu(&f, &g);
+        let prog = crate::codegen::gpu::GpuCodegen::new(&g).lower(&f);
         let a = analyze(&prog, &g);
         (f, a)
     }
@@ -172,7 +171,7 @@ mod tests {
             let s = transform::config_space(&op, t);
             let f = transform::apply(&op, t, &s.default_config());
             let g = tesla_v100();
-            let prog = codegen::lower_gpu(&f, &g);
+            let prog = crate::codegen::gpu::GpuCodegen::new(&g).lower(&f);
             let a = analyze(&prog, &g);
             let launch = prog.launch.unwrap();
             let total_threads = launch.num_blocks() * launch.threads_per_block() as u64;

@@ -179,7 +179,6 @@ fn collect_bindings(nodes: &[TirNode], bind: &mut HashMap<u32, char>) {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::codegen;
     use crate::isa::march::tesla_v100;
     use crate::isa::TargetKind;
     use crate::tir::ops::{Epilogue, OpSpec};
@@ -190,7 +189,7 @@ mod tests {
         let s = transform::config_space(op, t);
         let f = transform::apply(op, t, &s.from_index(cfg_idx));
         let g = tesla_v100();
-        let prog = codegen::lower_gpu(&f, &g);
+        let prog = crate::codegen::gpu::GpuCodegen::new(&g).lower(&f);
         let ptx = super::super::gpu_ptx::analyze(&prog, &g);
         analyze(&f, &prog, &ptx, &g)
     }

@@ -49,13 +49,16 @@ pub fn identify_loops(prog: &AsmProgram) -> Vec<AsmLoop> {
                 if let Some(t) = last.target {
                     if let Some(&entry) = pos.get(&t) {
                         if entry <= i {
-                            // boundary from the compare feeding the branch
+                            // boundary from the compare feeding the branch;
+                            // fused compare-and-branch latches (RISC-V
+                            // `blt`) carry it on the branch itself
                             let boundary = b
                                 .instrs
                                 .iter()
                                 .rev()
                                 .find(|x| matches!(x.op, Opcode::Cmp | Opcode::PtxSetp))
                                 .and_then(|x| x.imm)
+                                .or(last.imm)
                                 .unwrap_or(0);
                             out.push(AsmLoop { entry, latch: i, boundary, trip: 0 });
                         }
@@ -134,7 +137,7 @@ impl LoopMap {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::codegen;
+    use crate::codegen::cpu::CpuCodegen;
     use crate::isa::march::xeon_8124m;
     use crate::isa::TargetKind;
     use crate::tir::ops::{Epilogue, OpSpec};
@@ -144,7 +147,7 @@ mod tests {
         let t = TargetKind::XeonPlatinum8124M;
         let s = transform::config_space(op, t);
         let f = transform::apply(op, t, &s.default_config());
-        let prog = codegen::lower_cpu(&f, &xeon_8124m());
+        let prog = CpuCodegen::new(&xeon_8124m()).lower(&f);
         (f, prog)
     }
 
@@ -205,7 +208,7 @@ mod tests {
         let space = transform::config_space(&op, t);
         for idx in 0..space.size().min(48) {
             let f = transform::apply(&op, t, &space.from_index(idx));
-            let prog = codegen::lower_cpu(&f, &xeon_8124m());
+            let prog = CpuCodegen::new(&xeon_8124m()).lower(&f);
             let lm = map_loops(&f, &prog);
             let vfma = lm.count_instrs(&prog, |i| i.op == Opcode::VFma);
             let sfma = lm.count_instrs(&prog, |i| i.op == Opcode::SFma);

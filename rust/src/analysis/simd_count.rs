@@ -71,7 +71,6 @@ pub fn count(prog: &AsmProgram, lm: &LoopMap) -> SimdCounts {
 mod tests {
     use super::*;
     use crate::analysis::loop_map;
-    use crate::codegen;
     use crate::isa::march::xeon_8124m;
     use crate::isa::TargetKind;
     use crate::tir::ops::{Epilogue, OpSpec};
@@ -97,7 +96,7 @@ mod tests {
         let m = xeon_8124m();
         let count_for = |cfg| {
             let f = transform::apply(&op, t, &cfg);
-            let prog = codegen::lower_cpu(&f, &m);
+            let prog = crate::codegen::cpu::CpuCodegen::new(&m).lower(&f);
             let lm = loop_map::map_loops(&f, &prog);
             count(&prog, &lm)
         };

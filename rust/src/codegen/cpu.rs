@@ -14,10 +14,14 @@
 //! * address arithmetic (`lea`) is CSE'd per loop level with constant
 //!   offsets folded into the memory operand.
 
+use crate::analysis::cost::{self, CostError, FeatureVector};
 use crate::isa::instr::{AddrSpace, TensorDecl};
 use crate::isa::{AsmProgram, BasicBlock, Instr, MemRef, MicroArch, Opcode, Reg};
 use crate::isets::Affine;
+use crate::sim::SimResult;
+use crate::tir::ops::{Epilogue, OpSpec};
 use crate::tir::{Access, BufferDecl, LoopKind, LoopNode, Stmt, StmtOp, TirFunc, TirNode};
+use crate::transform::{templates, ConfigSpace, ScheduleConfig};
 use std::collections::HashMap;
 
 /// Signature of an affine expression's variable part (sorted terms).
@@ -523,8 +527,87 @@ impl<'a> CpuCodegen<'a> {
     }
 }
 
+/// The CPU backend behind [`crate::codegen::Lowering`]: owns its march
+/// descriptor and wires the CPU templates, codegen, feature extraction and
+/// in-order/OoO simulator together.
+pub struct CpuLowering {
+    march: MicroArch,
+}
+
+impl CpuLowering {
+    pub fn new(march: MicroArch) -> Self {
+        CpuLowering { march }
+    }
+
+    pub fn march(&self) -> &MicroArch {
+        &self.march
+    }
+}
+
+impl crate::codegen::Lowering for CpuLowering {
+    fn family(&self) -> &'static str {
+        "cpu"
+    }
+
+    fn lower(&self, f: &TirFunc) -> AsmProgram {
+        CpuCodegen::new(&self.march).lower(f)
+    }
+
+    fn space(&self, op: &OpSpec) -> ConfigSpace {
+        templates::cpu::space_for(op)
+    }
+
+    fn schedule(&self, op: &OpSpec, cfg: &ScheduleConfig) -> TirFunc {
+        templates::cpu::build(op, cfg)
+    }
+
+    fn epilogue_standalone(&self, e: Epilogue, elems: i64, channels: i64) -> TirFunc {
+        templates::epilogue_standalone_vec(e, elems, channels)
+    }
+
+    fn feature_names(&self) -> &'static [&'static str] {
+        &cost::CPU_FEATURES
+    }
+
+    fn extract(&self, f: &TirFunc, prog: &AsmProgram) -> Result<FeatureVector, CostError> {
+        Ok(cost::extract_cpu(f, prog, &self.march))
+    }
+
+    fn default_coeffs(&self) -> Vec<f64> {
+        let m = &self.march;
+        vec![
+            1.0 / m.fma_units as f64,           // fma reciprocal throughput
+            1.0 / m.load_units as f64,          // vector memory
+            1.0 / m.load_units as f64,          // scalar memory
+            1.0 / (m.issue_width as f64 - 1.0), // scalar ALU
+            0.5,                                // loop control
+            m.l2.latency as f64,                // per L1 miss (hits in L2)
+            0.35,                               // ILP-scheduled cycles blend
+        ]
+    }
+
+    fn simulate(&self, f: &TirFunc, prog: &AsmProgram) -> SimResult {
+        crate::sim::cpu::simulate(f, prog, &self.march)
+    }
+
+    fn vendor_config(&self, op: &OpSpec) -> ScheduleConfig {
+        let space = templates::cpu::space_for(op);
+        crate::vendor::vendor_cpu(op, &space, self.march.isa.f32_lanes())
+    }
+
+    fn describe(&self) -> String {
+        format!(
+            "cpu    {:>4} cores @ {:.2} GHz, {}-bit SIMD, peak {:.0} GF/s",
+            self.march.num_cores,
+            self.march.freq_ghz,
+            self.march.isa.simd_bits(),
+            self.march.peak_gflops()
+        )
+    }
+}
+
 /// Extent of the outermost Parallel loop (1 if none).
-fn outer_parallel_extent(nodes: &[TirNode]) -> i64 {
+pub(crate) fn outer_parallel_extent(nodes: &[TirNode]) -> i64 {
     for n in nodes {
         if let TirNode::Loop(l) = n {
             if l.kind == LoopKind::Parallel {

@@ -14,11 +14,15 @@
 //! * per-thread register count and static shared-memory bytes are reported
 //!   the way `ptxas -v` would, feeding the occupancy feature.
 
+use crate::analysis::cost::{self, CostError, FeatureVector};
 use crate::isa::instr::{AddrSpace, LaunchConfig, TensorDecl};
 use crate::isa::march::GpuArch;
 use crate::isa::{AsmProgram, BasicBlock, Instr, MemRef, Opcode, Reg};
 use crate::isets::Affine;
+use crate::sim::SimResult;
+use crate::tir::ops::{Epilogue, OpSpec};
 use crate::tir::{Access, BufferDecl, LoopKind, LoopNode, MemSpace, Stmt, StmtOp, TirFunc, TirNode};
+use crate::transform::{templates, ConfigSpace, ScheduleConfig};
 use std::collections::HashMap;
 
 type TermsKey = Vec<(u32, i64)>;
@@ -320,6 +324,80 @@ fn subtree_writes_shared(n: &TirNode, f: &TirFunc) -> bool {
     match n {
         TirNode::Stmt(s) => f.buffers[s.store.buffer as usize].space == MemSpace::Shared,
         TirNode::Loop(l) => l.body.iter().any(|c| subtree_writes_shared(c, f)),
+    }
+}
+
+/// The GPU backend behind the [`crate::codegen::Lowering`] trait.
+pub struct GpuLowering {
+    gpu: GpuArch,
+}
+
+impl GpuLowering {
+    pub fn new(gpu: GpuArch) -> Self {
+        GpuLowering { gpu }
+    }
+
+    pub fn gpu(&self) -> &GpuArch {
+        &self.gpu
+    }
+}
+
+impl crate::codegen::Lowering for GpuLowering {
+    fn family(&self) -> &'static str {
+        "gpu"
+    }
+
+    fn lower(&self, f: &TirFunc) -> AsmProgram {
+        GpuCodegen::new(&self.gpu).lower(f)
+    }
+
+    fn space(&self, op: &OpSpec) -> ConfigSpace {
+        templates::gpu::space_for(op)
+    }
+
+    fn schedule(&self, op: &OpSpec, cfg: &ScheduleConfig) -> TirFunc {
+        templates::gpu::build(op, cfg)
+    }
+
+    fn epilogue_standalone(&self, e: Epilogue, elems: i64, channels: i64) -> TirFunc {
+        templates::epilogue_standalone_gpu(e, elems, channels)
+    }
+
+    fn feature_names(&self) -> &'static [&'static str] {
+        &cost::GPU_FEATURES
+    }
+
+    fn extract(&self, f: &TirFunc, prog: &AsmProgram) -> Result<FeatureVector, CostError> {
+        cost::extract_gpu(f, prog, &self.gpu)
+    }
+
+    fn default_coeffs(&self) -> Vec<f64> {
+        vec![
+            1.0, // fma per thread
+            1.0, // global memory instrs
+            1.0, // shared memory instrs
+            2.0, // sync overhead
+            0.3, // occupancy penalty
+            1.0, // DRAM line traffic
+        ]
+    }
+
+    fn simulate(&self, f: &TirFunc, prog: &AsmProgram) -> SimResult {
+        crate::sim::gpu::simulate(f, prog, &self.gpu)
+    }
+
+    fn vendor_config(&self, op: &OpSpec) -> ScheduleConfig {
+        let space = templates::gpu::space_for(op);
+        crate::vendor::vendor_gpu(op, &space)
+    }
+
+    fn describe(&self) -> String {
+        format!(
+            "gpu    {:>4} SMs   @ {:.2} GHz, peak {:.0} GF/s",
+            self.gpu.num_sms,
+            self.gpu.freq_ghz,
+            self.gpu.peak_gflops()
+        )
     }
 }
 

@@ -1,66 +1,141 @@
-//! Lowering from scheduled TIR to virtual assembly.
+//! Lowering from scheduled TIR to virtual assembly — one backend per
+//! [`Target`] family, all behind the [`Lowering`] trait.
 //!
 //! This module plays the role LLVM/NVCC play for the paper: it turns the
 //! loop-structured IR into flat basic blocks, and in doing so *loses* the
 //! loop structure the same ways a real backend does —
 //!
 //! * `Unroll` loops disappear entirely (constant-folded into offsets),
-//! * `Vectorize` loops become packed SIMD instructions plus scalar tails,
+//! * `Vectorize` loops become packed SIMD instructions plus scalar tails
+//!   (CPU) or stay real scalar loops (RISC-V),
 //! * accumulators are *register-promoted* out of reduction loops,
 //! * loop-invariant loads are hoisted to the level they depend on,
 //! * address arithmetic is CSE'd within blocks,
 //!
 //! which is exactly why the paper's Algorithms 1/3 must jointly parse the
 //! IR and the assembly to recover per-loop instruction counts.
+//!
+//! # The backend trait
+//!
+//! [`Lowering`] is the single dispatch surface for everything that is
+//! per-target-family: schedule templates (space + builder), lowering,
+//! feature extraction, default cost coefficients, ground-truth simulation
+//! and the vendor-heuristic schedule. [`create_lowering`] is the only
+//! place a `Target` is matched on its family — adding a backend means
+//! implementing this trait, registering it there, and adding one row to
+//! the conformance table in `tests/lowering_conformance.rs` (see
+//! `docs/ARCHITECTURE.md`, "Adding a backend").
 
 pub mod cpu;
 pub mod gpu;
+pub mod riscv;
 
-use crate::isa::march::{GpuArch, Target};
-use crate::isa::{AsmProgram, MicroArch};
+use crate::analysis::cost::{CostError, FeatureVector};
+use crate::isa::march::Target;
+use crate::isa::{AsmProgram, TargetKind};
+use crate::sim::SimResult;
+use crate::tir::ops::{Epilogue, OpSpec};
 use crate::tir::TirFunc;
+use crate::transform::{ConfigSpace, ScheduleConfig};
 
-/// Lower a scheduled CPU function.
-pub fn lower_cpu(f: &TirFunc, march: &MicroArch) -> AsmProgram {
-    cpu::CpuCodegen::new(march).lower(f)
+pub use cpu::CpuLowering;
+pub use gpu::GpuLowering;
+pub use riscv::RiscvLowering;
+
+/// One backend = one implementation. Every method is per-family behavior
+/// that used to live in an open-coded `match` somewhere in the crate.
+pub trait Lowering: Send + Sync {
+    /// Backend family tag for reports and conformance tables
+    /// (`"cpu"` / `"gpu"` / `"riscv"`).
+    fn family(&self) -> &'static str;
+
+    /// Lower a scheduled TIR function to virtual assembly.
+    fn lower(&self, f: &TirFunc) -> AsmProgram;
+
+    /// Schedule-template hook: the op's config space on this backend.
+    fn space(&self, op: &OpSpec) -> ConfigSpace;
+
+    /// Schedule-template hook: build the scheduled TIR for `op` × `cfg`.
+    /// `cfg` must belong to [`Lowering::space`] for the same op.
+    fn schedule(&self, op: &OpSpec, cfg: &ScheduleConfig) -> TirFunc;
+
+    /// The standalone elementwise epilogue pass an unfused deployment
+    /// needs (see [`crate::transform::templates::epilogue_standalone`]).
+    fn epilogue_standalone(&self, e: Epilogue, elems: i64, channels: i64) -> TirFunc;
+
+    /// Feature names, order fixed — coefficients index into this, and
+    /// every vector from [`Lowering::extract`] has exactly this length.
+    fn feature_names(&self) -> &'static [&'static str];
+
+    /// Extract cost features from the scheduled IR + lowered assembly.
+    fn extract(&self, f: &TirFunc, prog: &AsmProgram) -> Result<FeatureVector, CostError>;
+
+    /// Latency-table-derived default coefficients (usable before
+    /// calibration; calibration replaces them).
+    fn default_coeffs(&self) -> Vec<f64>;
+
+    /// Ground-truth simulation of one kernel execution.
+    fn simulate(&self, f: &TirFunc, prog: &AsmProgram) -> SimResult;
+
+    /// Fixed "vendor kernel library" heuristic schedule for `op` (the
+    /// Framework baseline — see [`crate::vendor`]).
+    fn vendor_config(&self, op: &OpSpec) -> ScheduleConfig;
+
+    /// One-line march summary for `tuna targets`.
+    fn describe(&self) -> String;
 }
 
-/// Lower a scheduled GPU kernel.
-pub fn lower_gpu(f: &TirFunc, gpu: &GpuArch) -> AsmProgram {
-    gpu::GpuCodegen::new(gpu).lower(f)
-}
-
-/// Lower for either flavor of target — the single entry point the
-/// candidate-evaluation pipeline routes through.
-pub fn lower(f: &TirFunc, target: &Target) -> AsmProgram {
+/// The backend factory — the single place a [`Target`] is matched on its
+/// family. Everything downstream (evaluator, device simulator, serve
+/// daemon, CLI) holds a `Box<dyn Lowering>`/`Arc<dyn Lowering>` from here.
+pub fn create_lowering(target: &Target) -> Box<dyn Lowering> {
     match target {
-        Target::Cpu(m) => lower_cpu(f, m),
-        Target::Gpu(g) => lower_gpu(f, g),
+        Target::Cpu(m) => Box::new(CpuLowering::new(m.clone())),
+        Target::Gpu(g) => Box::new(GpuLowering::new(g.clone())),
+        Target::Riscv(r) => Box::new(RiscvLowering::new(r.clone())),
     }
+}
+
+/// [`create_lowering`] by discriminant — builds the march descriptor.
+pub fn lowering_for(kind: TargetKind) -> Box<dyn Lowering> {
+    create_lowering(&kind.build())
+}
+
+/// Lower for any target — convenience over the factory for one-shot
+/// callers (hot paths hold their own [`Lowering`] instead).
+pub fn lower(f: &TirFunc, target: &Target) -> AsmProgram {
+    create_lowering(target).lower(f)
 }
 
 #[cfg(test)]
 mod tests {
-    use crate::isa::march::{tesla_v100, xeon_8124m};
+    use super::*;
     use crate::isa::TargetKind;
-    use crate::tir::ops::OpSpec;
-    use crate::transform;
 
     #[test]
-    fn lower_all_figure_ops_cpu_and_gpu() {
-        let xeon = xeon_8124m();
-        let v100 = tesla_v100();
-        for op in crate::tir::ops::figure_op_suite() {
-            let s = transform::config_space(&op, TargetKind::XeonPlatinum8124M);
-            let f = transform::apply(&op, TargetKind::XeonPlatinum8124M, &s.default_config());
-            let prog = super::lower_cpu(&f, &xeon);
-            assert!(prog.total_instrs() > 0, "{op} cpu empty");
+    fn lower_all_figure_ops_on_every_target() {
+        for kind in TargetKind::ALL {
+            let lw = lowering_for(kind);
+            for op in crate::tir::ops::figure_op_suite() {
+                let s = lw.space(&op);
+                let f = lw.schedule(&op, &s.default_config());
+                let prog = lw.lower(&f);
+                assert!(prog.total_instrs() > 0, "{op} on {kind:?} empty");
+                assert_eq!(
+                    prog.launch.is_some(),
+                    kind.is_gpu(),
+                    "{op} on {kind:?}: launch config presence mismatch"
+                );
+            }
+        }
+    }
 
-            let s = transform::config_space(&op, TargetKind::TeslaV100);
-            let f = transform::apply(&op, TargetKind::TeslaV100, &s.default_config());
-            let prog = super::lower_gpu(&f, &v100);
-            assert!(prog.total_instrs() > 0, "{op} gpu empty");
-            assert!(prog.launch.is_some(), "{op} gpu has no launch config");
+    #[test]
+    fn factory_families_match_kinds() {
+        for kind in TargetKind::ALL {
+            let lw = lowering_for(kind);
+            assert_eq!(lw.family() == "gpu", kind.is_gpu(), "{kind:?}");
+            assert_eq!(lw.feature_names().len(), lw.default_coeffs().len(), "{kind:?}");
         }
     }
 }

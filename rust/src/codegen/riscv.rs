@@ -1,0 +1,535 @@
+//! RISC-V backend: scheduled TIR → virtual RV64GC scalar assembly.
+//!
+//! The U74-class core has no vector unit, so this backend is what LLVM's
+//! RISC-V target does to the same loop nests *without* SLP: every statement
+//! instance is one scalar `fmadd.s`/`flw`/`fsw` sequence. Behaviours that
+//! matter for the paper's joint IR/asm analysis:
+//!
+//! * do-while loop shape like the CPU backend — preheader `mov ctr,0`,
+//!   body block, latch — but with RISC-V's *fused* compare-and-branch:
+//!   the latch is `add ctr,ctr,1; blt ctr,EXT,body` (a single `Jcc`
+//!   carrying the boundary immediate, no separate `cmp`). Algorithm 1's
+//!   boundary recovery reads the immediate off the branch itself.
+//! * `Unroll` loops vanish (constant-folded), exactly as on the CPU;
+//! * `Vectorize` loops — which the RISC-V schedule templates demote to
+//!   `Serial` — are lowered as real scalar loops if one ever reaches us;
+//! * accumulators are register-promoted into the f0–f31 FP register file,
+//!   with a spill guard that leaves excess groups in memory;
+//! * address arithmetic (`lea` standing in for `add`/`sh2add`) is CSE'd
+//!   per loop level, constant offsets folded into the memory operand.
+
+use crate::analysis::cost::{self, CostError, FeatureVector};
+use crate::isa::instr::{AddrSpace, TensorDecl};
+use crate::isa::march::RiscvArch;
+use crate::isa::{AsmProgram, BasicBlock, Instr, MemRef, Opcode, Reg};
+use crate::isets::Affine;
+use crate::sim::SimResult;
+use crate::tir::ops::{Epilogue, OpSpec};
+use crate::tir::{Access, BufferDecl, LoopKind, LoopNode, Stmt, StmtOp, TirFunc, TirNode};
+use crate::transform::{templates, ConfigSpace, ScheduleConfig};
+use std::collections::HashMap;
+
+/// Signature of an affine expression's variable part (sorted terms).
+type TermsKey = Vec<(u32, i64)>;
+
+struct LevelCache {
+    /// address CSE: (tensor, terms) -> (reg, konst captured at creation)
+    addr: HashMap<(u16, TermsKey), (Reg, i64)>,
+    /// loaded-value CSE: (tensor, terms, konst) -> freg
+    value: HashMap<(u16, TermsKey, i64), Reg>,
+}
+
+impl LevelCache {
+    fn new() -> Self {
+        LevelCache { addr: HashMap::new(), value: HashMap::new() }
+    }
+}
+
+struct LoopCtx {
+    var: u32,
+    body_label: u32,
+    /// index into prog.blocks of the loop's body (entry) block.
+    body_block: usize,
+    counter: Reg,
+    /// instructions to append right after this loop closes (acc stores).
+    pending_after: Vec<Instr>,
+}
+
+pub struct RiscvCodegen<'a> {
+    arch: &'a RiscvArch,
+    prog: AsmProgram,
+    next_label: u32,
+    next_gpr: u16,
+    next_fpr: u16,
+    stack: Vec<LoopCtx>,
+    caches: Vec<LevelCache>, // caches[0] = function level, then one per loop
+    const_env: HashMap<u32, i64>,
+    max_live_fpr: u32,
+}
+
+impl<'a> RiscvCodegen<'a> {
+    pub fn new(arch: &'a RiscvArch) -> Self {
+        RiscvCodegen {
+            arch,
+            prog: AsmProgram::new(),
+            next_label: 0,
+            next_gpr: 0,
+            next_fpr: 0,
+            stack: Vec::new(),
+            caches: vec![LevelCache::new()],
+            const_env: HashMap::new(),
+            max_live_fpr: 0,
+        }
+    }
+
+    pub fn lower(mut self, f: &TirFunc) -> AsmProgram {
+        // tensor table with page-aligned simulated base addresses
+        let mut base = 0x10_0000u64;
+        for b in &f.buffers {
+            self.prog.tensors.push(TensorDecl {
+                name: b.name.clone(),
+                elems: b.elems(),
+                elem_bytes: b.elem_bytes,
+                base_addr: base,
+            });
+            base += (b.bytes() as u64 + 4095) / 4096 * 4096 + 4096;
+        }
+        self.prog.parallel_extent = super::cpu::outer_parallel_extent(&f.body);
+        self.new_block();
+        self.gen_seq(&f.body, f);
+        let budget = self.arch.core.isa.num_simd_regs() as u32;
+        self.prog.regs_used = self.max_live_fpr.min(budget);
+        self.prog
+    }
+
+    // ---- block management ----
+
+    fn new_block(&mut self) -> usize {
+        let label = self.next_label;
+        self.next_label += 1;
+        self.prog.blocks.push(BasicBlock::new(label));
+        self.prog.blocks.len() - 1
+    }
+
+    fn emit(&mut self, i: Instr) {
+        self.prog.blocks.last_mut().unwrap().instrs.push(i);
+    }
+
+    /// Emit into the block of loop level `level` (0 = function level).
+    fn emit_at(&mut self, level: usize, i: Instr) {
+        if level == 0 {
+            self.prog.blocks[0].instrs.push(i);
+        } else {
+            let idx = self.stack[level - 1].body_block;
+            self.prog.blocks[idx].instrs.push(i);
+        }
+    }
+
+    fn fresh_gpr(&mut self) -> Reg {
+        let r = Reg::Gpr(self.next_gpr);
+        self.next_gpr += 1;
+        r
+    }
+
+    /// Fresh FP register (modeled with the Vec register class — one f32
+    /// lane on this ISA).
+    fn fresh_fpr(&mut self) -> Reg {
+        let r = Reg::Vec(self.next_fpr);
+        self.next_fpr += 1;
+        self.max_live_fpr = self.max_live_fpr.max(self.live_fprs() + 1);
+        r
+    }
+
+    /// Currently-live FP registers = value-cache entries (each holds a
+    /// loaded value or promoted accumulator across its loop level).
+    fn live_fprs(&self) -> u32 {
+        self.caches.iter().map(|c| c.value.len() as u32).sum()
+    }
+
+    // ---- tree walk ----
+
+    fn gen_seq(&mut self, nodes: &[TirNode], f: &TirFunc) {
+        for n in nodes {
+            match n {
+                TirNode::Loop(l) => self.gen_loop(l, f),
+                TirNode::Stmt(s) => self.gen_stmt(s, f),
+            }
+        }
+    }
+
+    fn gen_loop(&mut self, l: &LoopNode, f: &TirFunc) {
+        match l.kind {
+            LoopKind::Unroll => {
+                // full unroll: duplicate the body with the var pinned
+                for v in 0..l.extent {
+                    self.const_env.insert(l.var, v);
+                    self.gen_seq(&l.body, f);
+                }
+                self.const_env.remove(&l.var);
+            }
+            _ => {
+                // Serial / Parallel / (demoted Vectorize): real scalar loop
+                let counter = self.fresh_gpr();
+                self.emit(Instr::new(Opcode::Mov).dst(counter).imm(0));
+                let body_idx = self.new_block();
+                let body_label = self.prog.blocks[body_idx].label;
+                self.stack.push(LoopCtx {
+                    var: l.var,
+                    body_label,
+                    body_block: body_idx,
+                    counter,
+                    pending_after: Vec::new(),
+                });
+                self.caches.push(LevelCache::new());
+                self.gen_seq(&l.body, f);
+                // latch
+                let body_label = self.stack.last().unwrap().body_label;
+                self.emit(Instr::new(Opcode::SAdd).dst(counter).src(counter).imm(1));
+                if self.arch.fused_branch {
+                    // blt ctr, EXT, body — boundary rides on the branch
+                    self.emit(
+                        Instr::new(Opcode::Jcc).src(counter).imm(l.extent).target(body_label),
+                    );
+                } else {
+                    self.emit(Instr::new(Opcode::Cmp).src(counter).imm(l.extent));
+                    self.emit(Instr::new(Opcode::Jcc).target(body_label));
+                }
+                let ctx = self.stack.pop().unwrap();
+                self.caches.pop();
+                self.new_block();
+                for i in ctx.pending_after {
+                    self.emit(i);
+                }
+            }
+        }
+    }
+
+    /// Current loop level (0 = function scope).
+    fn level(&self) -> usize {
+        self.stack.len()
+    }
+
+    /// Linearize an access into a single affine element-offset expression,
+    /// folding unrolled (pinned) vars into the constant.
+    fn linearize(&self, a: &Access, buf: &BufferDecl) -> Affine {
+        let mut lin = Affine::constant(0);
+        let mut rowstride = 1i64;
+        for (dim, idx) in a.indices.iter().enumerate().rev() {
+            let mut scaled = Affine::constant(idx.konst * rowstride);
+            for t in &idx.terms {
+                if let Some(&v) = self.const_env.get(&t.var) {
+                    scaled.konst += t.coeff * v * rowstride;
+                } else {
+                    scaled = scaled.add(&Affine::scaled(t.var, t.coeff * rowstride));
+                }
+            }
+            lin = lin.add(&scaled);
+            rowstride *= buf.shape[dim];
+        }
+        lin
+    }
+
+    /// Deepest loop level whose var appears in `terms` (0 if none).
+    fn dep_level(&self, terms: &TermsKey) -> usize {
+        for (i, ctx) in self.stack.iter().enumerate().rev() {
+            if terms.iter().any(|(v, _)| *v == ctx.var) {
+                return i + 1;
+            }
+        }
+        0
+    }
+
+    fn terms_key(lin: &Affine) -> TermsKey {
+        let mut t: TermsKey = lin.terms.iter().map(|t| (t.var, t.coeff)).collect();
+        t.sort_unstable();
+        t
+    }
+
+    /// Get (or create via `lea`) an address register for the variable part
+    /// of `lin`; returns (reg, byte_offset_to_add).
+    fn addr_reg(&mut self, tensor: u16, lin: &Affine) -> (Reg, i64) {
+        let key = Self::terms_key(lin);
+        let level = self.dep_level(&key);
+        if let Some(&(reg, base)) = self.caches[level].addr.get(&(tensor, key.clone())) {
+            return (reg, (lin.konst - base) * 4);
+        }
+        let reg = self.fresh_gpr();
+        let mut ins = Instr::new(Opcode::Lea).dst(reg);
+        for (v, _) in &key {
+            if let Some(ctx) = self.stack.iter().find(|c| c.var == *v) {
+                ins = ins.src(ctx.counter);
+            }
+        }
+        ins = ins.imm(lin.konst);
+        self.emit_at(level, ins);
+        self.caches[level].addr.insert((tensor, key), (reg, lin.konst));
+        (reg, 0)
+    }
+
+    /// Emit (or reuse) a scalar load of `lin` from `tensor`.
+    fn emit_load(&mut self, tensor: u16, lin: &Affine) -> Reg {
+        let key = Self::terms_key(lin);
+        let level = self.dep_level(&key);
+        let vkey = (tensor, key, lin.konst);
+        if let Some(&r) = self.caches[level].value.get(&vkey) {
+            return r;
+        }
+        let (areg, off) = self.addr_reg(tensor, lin);
+        let dst = self.fresh_fpr();
+        let mem = MemRef { tensor, space: AddrSpace::Global, addr_reg: areg, offset: off, width: 4 };
+        self.emit_at(level, Instr::new(Opcode::SLoad).dst(dst).mem(mem));
+        self.caches[level].value.insert(vkey, dst);
+        dst
+    }
+
+    fn emit_store(&mut self, tensor: u16, lin: &Affine, src: Reg) {
+        let (areg, off) = self.addr_reg(tensor, lin);
+        let mem = MemRef { tensor, space: AddrSpace::Global, addr_reg: areg, offset: off, width: 4 };
+        self.emit(Instr::new(Opcode::SStore).src(src).mem(mem));
+    }
+
+    // ---- statement emission ----
+
+    fn gen_stmt(&mut self, s: &Stmt, f: &TirFunc) {
+        let scalar_op = match s.op {
+            StmtOp::MulAdd => Some(Opcode::SFma),
+            StmtOp::Add | StmtOp::Max => Some(Opcode::SAdd),
+            StmtOp::Copy | StmtOp::Zero => None,
+        };
+
+        // promotion: consecutive innermost loops whose vars are absent from
+        // the store index can hold the accumulator in an f-register.
+        let store_buf = &f.buffers[s.store.buffer as usize];
+        let store_lin = self.linearize(&s.store, store_buf);
+        let store_key = Self::terms_key(&store_lin);
+        let acc_level = self.dep_level(&store_key); // innermost level store depends on
+        let reduction = s.op == StmtOp::MulAdd || s.op == StmtOp::Max || s.op == StmtOp::Add;
+        let promote = reduction && acc_level < self.level();
+
+        let mut srcs = Vec::new();
+        for a in &s.loads {
+            let buf = &f.buffers[a.buffer as usize];
+            let lin = self.linearize(a, buf);
+            srcs.push(self.emit_load(a.buffer, &lin));
+        }
+        match scalar_op {
+            Some(op) => {
+                if promote {
+                    let acc = self.promoted_acc(s.store.buffer, &store_lin, acc_level);
+                    let mut ins = Instr::new(op).dst(acc).src(acc);
+                    for r in srcs {
+                        ins = ins.src(r);
+                    }
+                    self.emit(ins);
+                } else {
+                    let acc = self.emit_load(s.store.buffer, &store_lin);
+                    let mut ins = Instr::new(op).dst(acc).src(acc);
+                    for r in srcs {
+                        ins = ins.src(r);
+                    }
+                    self.emit(ins);
+                    self.emit_store(s.store.buffer, &store_lin, acc);
+                    self.invalidate_value(s.store.buffer, &store_lin);
+                }
+            }
+            None => {
+                let src = if s.op == StmtOp::Zero {
+                    let z = self.fresh_gpr();
+                    self.emit(Instr::new(Opcode::Mov).dst(z).imm(0));
+                    z
+                } else {
+                    srcs[0]
+                };
+                self.emit_store(s.store.buffer, &store_lin, src);
+            }
+        }
+    }
+
+    /// Load the accumulator once at `acc_level` and schedule its store for
+    /// when the reduction loops close. Found via the value cache so
+    /// unrolled duplicates reuse it; a spill guard keeps the live set
+    /// within the 32-entry f-register file.
+    fn promoted_acc(&mut self, tensor: u16, lin: &Affine, acc_level: usize) -> Reg {
+        let key = Self::terms_key(lin);
+        let vkey = (tensor, key, lin.konst);
+        if let Some(&r) = self.caches[acc_level].value.get(&vkey) {
+            return r;
+        }
+        // spill guard: too many live accumulator registers -> unpromoted
+        let budget = self.arch.core.isa.num_simd_regs() as u32;
+        if self.live_fprs() + 2 >= budget {
+            return self.emit_load(tensor, lin);
+        }
+        let (areg, off) = self.addr_reg(tensor, lin);
+        let dst = self.fresh_fpr();
+        let mem = MemRef { tensor, space: AddrSpace::Global, addr_reg: areg, offset: off, width: 4 };
+        self.emit_at(acc_level, Instr::new(Opcode::SLoad).dst(dst).mem(mem.clone()));
+        self.caches[acc_level].value.insert(vkey, dst);
+        // store after the outermost reduction loop (level acc_level+1) exits
+        if acc_level < self.stack.len() {
+            self.stack[acc_level]
+                .pending_after
+                .push(Instr::new(Opcode::SStore).src(dst).mem(mem));
+        } else {
+            self.emit(Instr::new(Opcode::SStore).src(dst).mem(mem));
+        }
+        dst
+    }
+
+    fn invalidate_value(&mut self, tensor: u16, lin: &Affine) {
+        let key = Self::terms_key(lin);
+        for c in self.caches.iter_mut() {
+            c.value.remove(&(tensor, key.clone(), lin.konst));
+        }
+    }
+}
+
+/// The RISC-V backend behind [`crate::codegen::Lowering`]: scalar in-order
+/// lowering, scalar schedule templates, and features/simulation driven by
+/// the same static analyses as the CPU backend, parameterized by the
+/// embedded [`MicroArch`](crate::isa::MicroArch) core descriptor.
+pub struct RiscvLowering {
+    arch: RiscvArch,
+}
+
+impl RiscvLowering {
+    pub fn new(arch: RiscvArch) -> Self {
+        RiscvLowering { arch }
+    }
+
+    pub fn arch(&self) -> &RiscvArch {
+        &self.arch
+    }
+}
+
+impl crate::codegen::Lowering for RiscvLowering {
+    fn family(&self) -> &'static str {
+        "riscv"
+    }
+
+    fn lower(&self, f: &TirFunc) -> AsmProgram {
+        RiscvCodegen::new(&self.arch).lower(f)
+    }
+
+    fn space(&self, op: &OpSpec) -> ConfigSpace {
+        templates::riscv::space_for(op)
+    }
+
+    fn schedule(&self, op: &OpSpec, cfg: &ScheduleConfig) -> TirFunc {
+        templates::riscv::build(op, cfg)
+    }
+
+    fn epilogue_standalone(&self, e: Epilogue, elems: i64, channels: i64) -> TirFunc {
+        templates::epilogue_standalone_scalar(e, elems, channels)
+    }
+
+    fn feature_names(&self) -> &'static [&'static str] {
+        &cost::RISCV_FEATURES
+    }
+
+    fn extract(&self, f: &TirFunc, prog: &AsmProgram) -> Result<FeatureVector, CostError> {
+        Ok(cost::extract_riscv(f, prog, &self.arch))
+    }
+
+    fn default_coeffs(&self) -> Vec<f64> {
+        let m = &self.arch.core;
+        vec![
+            1.0 / m.fma_units as f64,                        // fma reciprocal throughput
+            1.0 / m.load_units as f64,                       // scalar memory
+            1.0 / (m.issue_width as f64 - 1.0).max(1.0),     // address/ALU
+            0.5,                                             // loop control
+            m.l2.latency as f64,                             // per L1 miss (hits in L2)
+            0.35,                                            // ILP-scheduled cycles blend
+        ]
+    }
+
+    fn simulate(&self, f: &TirFunc, prog: &AsmProgram) -> SimResult {
+        crate::sim::cpu::simulate(f, prog, &self.arch.core)
+    }
+
+    fn vendor_config(&self, op: &OpSpec) -> ScheduleConfig {
+        let space = templates::riscv::space_for(op);
+        // scalar register blocking: the vendor library heuristic tiles for
+        // the f-register file instead of SIMD lanes — 4 behaves like a
+        // typical hand-tuned RV64 micro-kernel (4x4 accumulator block).
+        crate::vendor::vendor_cpu(op, &space, 4)
+    }
+
+    fn describe(&self) -> String {
+        format!(
+            "riscv  {:>4} cores @ {:.2} GHz, scalar in-order, peak {:.0} GF/s",
+            self.arch.core.num_cores,
+            self.arch.core.freq_ghz,
+            self.arch.peak_gflops()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::loop_map;
+    use crate::isa::march::sifive_u74;
+    use crate::tir::ops::{figure_op_suite, Epilogue, OpSpec};
+
+    fn lower_default(op: &OpSpec) -> (TirFunc, AsmProgram) {
+        let arch = sifive_u74();
+        let lw = RiscvLowering::new(arch.clone());
+        let s = templates::riscv::space_for(op);
+        let f = templates::riscv::build(op, &s.default_config());
+        let prog = crate::codegen::Lowering::lower(&lw, &f);
+        (f, prog)
+    }
+
+    #[test]
+    fn emits_no_vector_instructions() {
+        use crate::isa::Opcode::*;
+        for op in figure_op_suite() {
+            let (_, prog) = lower_default(&op);
+            let vector: u64 = prog
+                .blocks
+                .iter()
+                .map(|b| {
+                    b.count(|i| matches!(i.op, VFma | VAdd | VMax | VLoad | VStore | VBroadcast))
+                })
+                .sum();
+            assert_eq!(vector, 0, "{op}: scalar backend emitted vector ops");
+        }
+    }
+
+    #[test]
+    fn fused_latch_carries_boundary() {
+        let op = OpSpec::Matmul { m: 32, n: 32, k: 32, epilogue: Epilogue::None };
+        let (_, prog) = lower_default(&op);
+        // no stand-alone compares anywhere: every latch is a fused blt
+        let cmps: u64 =
+            prog.blocks.iter().map(|b| b.count(|i| i.op == Opcode::Cmp)).sum();
+        assert_eq!(cmps, 0, "fused-branch march emitted separate cmp");
+        let loops = loop_map::identify_loops(&prog);
+        assert!(!loops.is_empty());
+        for l in &loops {
+            assert!(l.boundary > 0, "boundary lost on fused branch: {l:?}");
+        }
+    }
+
+    /// Algorithm 1 cross-check on the scalar backend: every MulAdd instance
+    /// is exactly one `fmadd.s` execution.
+    #[test]
+    fn sfma_executions_match_ir_flops() {
+        for (m, n, k) in [(32, 32, 32), (64, 32, 16)] {
+            let op = OpSpec::Matmul { m, n, k, epilogue: Epilogue::None };
+            let (f, prog) = lower_default(&op);
+            let lm = loop_map::map_loops(&f, &prog);
+            let sfma = lm.count_instrs(&prog, |i| i.op == Opcode::SFma);
+            assert_eq!(sfma * 2, f.total_flops(), "m{m} n{n} k{k}");
+        }
+    }
+
+    #[test]
+    fn register_pressure_within_file() {
+        for op in figure_op_suite() {
+            let (_, prog) = lower_default(&op);
+            assert!(prog.regs_used <= 32, "{op}: regs_used {}", prog.regs_used);
+        }
+    }
+}

@@ -171,7 +171,7 @@ impl RunConfig {
     }
 }
 
-/// Parse a comma-separated target list (`xeon,graviton2,a53,v100,xavier`).
+/// Parse a comma-separated target list (`xeon,graviton2,a53,v100,xavier,u74`).
 pub fn parse_targets(s: &str) -> Result<Vec<TargetKind>, String> {
     s.split(',')
         .map(|t| match t.trim().to_lowercase().as_str() {
@@ -180,6 +180,7 @@ pub fn parse_targets(s: &str) -> Result<Vec<TargetKind>, String> {
             "a53" | "cortex-a53" | "aisage" | "edge-cpu" => Ok(TargetKind::CortexA53),
             "v100" | "p3" | "gpu" => Ok(TargetKind::TeslaV100),
             "xavier" | "jetson" | "agx" => Ok(TargetKind::JetsonXavier),
+            "u74" | "riscv" | "rv64" | "unmatched" => Ok(TargetKind::SiFiveU74),
             "all" => Err("ALL".to_string()),
             other => Err(format!("unknown target {other:?}")),
         })
@@ -218,9 +219,12 @@ mod tests {
 
     #[test]
     fn target_list_parses() {
-        let t = parse_targets("xeon, v100").unwrap();
-        assert_eq!(t, vec![TargetKind::XeonPlatinum8124M, TargetKind::TeslaV100]);
-        assert_eq!(parse_targets("all").unwrap().len(), 5);
+        let t = parse_targets("xeon, v100, u74").unwrap();
+        assert_eq!(
+            t,
+            vec![TargetKind::XeonPlatinum8124M, TargetKind::TeslaV100, TargetKind::SiFiveU74]
+        );
+        assert_eq!(parse_targets("all").unwrap().len(), TargetKind::ALL.len());
         assert!(parse_targets("tpu").is_err());
     }
 

@@ -54,10 +54,7 @@ pub fn calibration_samples(ev: &CandidateEvaluator) -> Vec<(FeatureVector, f64)>
     let device = Device::new(kind);
     let mut rng = crate::util::Rng::new(0xCA11B);
     let mut samples = Vec::new();
-    let freq_ghz = match kind.build() {
-        crate::isa::Target::Cpu(m) => m.freq_ghz,
-        crate::isa::Target::Gpu(g) => g.freq_ghz,
-    };
+    let freq_ghz = kind.build().freq_ghz();
     for op in micro_suite() {
         let space = transform::config_space(&op, kind);
         let n = SAMPLES_PER_OP.min(space.size());

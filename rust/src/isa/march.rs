@@ -1,4 +1,5 @@
-//! Micro-architecture descriptors for the five paper targets.
+//! Micro-architecture descriptors for the five paper targets plus the
+//! post-paper RISC-V-class target.
 //!
 //! Numbers come from public microarchitecture references (Agner Fog tables
 //! for Skylake-SP, ARM Cortex technical reference manuals, Nvidia CUDA
@@ -171,11 +172,56 @@ impl GpuArch {
     }
 }
 
-/// A compilation target: CPU or GPU.
+/// RISC-V-class scalar march descriptor (a third target *family*, not a
+/// third CPU). The `core` block reuses the generic [`MicroArch`] fields —
+/// the ILP model, cache analysis and in-order pipeline simulator are all
+/// parameterized by them — with a scalar ISA ([`CpuIsa::Rv64Gc`], one f32
+/// lane). `fused_branch` captures the RISC-V branch shape the lowering
+/// emits: `blt` compares and branches in one instruction, so loop latches
+/// carry no separate `cmp`.
+#[derive(Debug, Clone)]
+pub struct RiscvArch {
+    pub core: MicroArch,
+    /// compare-and-branch latches (`addi; blt`), no separate `cmp`.
+    pub fused_branch: bool,
+}
+
+impl RiscvArch {
+    pub fn peak_gflops(&self) -> f64 {
+        self.core.peak_gflops()
+    }
+}
+
+/// A compilation target: one arm per backend family. Adding a family means
+/// adding an arm here, implementing [`crate::codegen::Lowering`] for it and
+/// registering it in [`crate::codegen::create_lowering`] — every other
+/// dispatch in the crate routes through that factory or through the
+/// exhaustive matches in this module.
 #[derive(Debug, Clone)]
 pub enum Target {
     Cpu(MicroArch),
     Gpu(GpuArch),
+    Riscv(RiscvArch),
+}
+
+impl Target {
+    /// Core/SM clock — calibration converts simulated seconds to cycles.
+    pub fn freq_ghz(&self) -> f64 {
+        match self {
+            Target::Cpu(m) => m.freq_ghz,
+            Target::Gpu(g) => g.freq_ghz,
+            Target::Riscv(r) => r.core.freq_ghz,
+        }
+    }
+
+    /// Peak f32 GFLOP/s (roofline reporting).
+    pub fn peak_gflops(&self) -> f64 {
+        match self {
+            Target::Cpu(m) => m.peak_gflops(),
+            Target::Gpu(g) => g.peak_gflops(),
+            Target::Riscv(r) => r.peak_gflops(),
+        }
+    }
 }
 
 /// Target discriminant used in configs and reports.
@@ -186,19 +232,29 @@ pub enum TargetKind {
     CortexA53,
     TeslaV100,
     JetsonXavier,
+    SiFiveU74,
 }
 
 impl TargetKind {
-    pub const ALL: [TargetKind; 5] = [
+    pub const ALL: [TargetKind; 6] = [
         TargetKind::XeonPlatinum8124M,
         TargetKind::Graviton2,
         TargetKind::CortexA53,
         TargetKind::TeslaV100,
         TargetKind::JetsonXavier,
+        TargetKind::SiFiveU74,
     ];
 
+    /// Exhaustive on purpose (no wildcard): a new variant fails to compile
+    /// here instead of silently inheriting a family.
     pub fn is_gpu(self) -> bool {
-        matches!(self, TargetKind::TeslaV100 | TargetKind::JetsonXavier)
+        match self {
+            TargetKind::XeonPlatinum8124M
+            | TargetKind::Graviton2
+            | TargetKind::CortexA53
+            | TargetKind::SiFiveU74 => false,
+            TargetKind::TeslaV100 | TargetKind::JetsonXavier => true,
+        }
     }
 
     /// Canonical short name used on the wire by the serve protocol and in
@@ -212,6 +268,7 @@ impl TargetKind {
             TargetKind::CortexA53 => "a53",
             TargetKind::TeslaV100 => "v100",
             TargetKind::JetsonXavier => "xavier",
+            TargetKind::SiFiveU74 => "u74",
         }
     }
 
@@ -228,16 +285,19 @@ impl TargetKind {
             TargetKind::CortexA53 => "ARM Quad-core Cortex-A53 64-bit CPU (Acer aiSage)",
             TargetKind::TeslaV100 => "Nvidia V100 GPU",
             TargetKind::JetsonXavier => "Nvidia Jetson AGX Xavier GPU",
+            TargetKind::SiFiveU74 => "SiFive U74 RISC-V RV64GC CPU (HiFive Unmatched)",
         }
     }
 
-    /// EC2 on-demand $/hr used by Table III (paper's prices).
+    /// EC2 on-demand $/hr used by Table III (paper's prices). Exhaustive:
+    /// edge/dev-board targets are priced `None`, each named explicitly.
     pub fn dollars_per_hour(self) -> Option<f64> {
         match self {
             TargetKind::XeonPlatinum8124M => Some(1.53), // c5.9xlarge
             TargetKind::Graviton2 => Some(0.616),        // m6g.4xlarge
             TargetKind::TeslaV100 => Some(3.06),         // p3.2xlarge
-            _ => None,                                   // edge devices: no cloud price
+            // edge devices / dev boards: no cloud price
+            TargetKind::CortexA53 | TargetKind::JetsonXavier | TargetKind::SiFiveU74 => None,
         }
     }
 
@@ -248,6 +308,7 @@ impl TargetKind {
             TargetKind::CortexA53 => Target::Cpu(cortex_a53()),
             TargetKind::TeslaV100 => Target::Gpu(tesla_v100()),
             TargetKind::JetsonXavier => Target::Gpu(jetson_xavier()),
+            TargetKind::SiFiveU74 => Target::Riscv(sifive_u74()),
         }
     }
 }
@@ -331,6 +392,31 @@ pub fn tesla_v100() -> GpuArch {
     }
 }
 
+/// SiFive U74 (HiFive Unmatched, FU740): dual-issue in-order RV64GC at
+/// 1.2 GHz, 4 application cores, scalar F/D floating point (no vector
+/// extension), 32 KB L1d, 2 MB shared L2, single-channel DDR4.
+pub fn sifive_u74() -> RiscvArch {
+    RiscvArch {
+        core: MicroArch {
+            name: "sifive-u74".into(),
+            isa: CpuIsa::Rv64Gc,
+            freq_ghz: 1.2,
+            num_cores: 4,
+            issue_width: 2,
+            fma_units: 1,
+            load_units: 1,
+            store_units: 1,
+            in_order: true,
+            rob_size: 8,
+            l1d: CacheDesc { size_bytes: 32 * 1024, assoc: 8, line_bytes: 64, latency: 3 },
+            l2: CacheDesc { size_bytes: 2 * 1024 * 1024, assoc: 16, line_bytes: 64, latency: 21 },
+            dram_gbps: 7.8,
+            dram_latency: 160,
+        },
+        fused_branch: true,
+    }
+}
+
 /// Nvidia Jetson AGX Xavier (512-core Volta, 8 SMs).
 pub fn jetson_xavier() -> GpuArch {
     GpuArch {
@@ -360,8 +446,21 @@ mod tests {
             match k.build() {
                 Target::Cpu(m) => assert!(m.peak_gflops() > 0.0),
                 Target::Gpu(g) => assert!(g.peak_gflops() > 0.0),
+                Target::Riscv(r) => assert!(r.peak_gflops() > 0.0),
             }
+            assert!(k.build().freq_ghz() > 0.0);
+            assert!(k.build().peak_gflops() > 0.0);
         }
+    }
+
+    #[test]
+    fn u74_is_scalar_in_order() {
+        let r = sifive_u74();
+        assert!(r.core.in_order);
+        assert!(r.fused_branch);
+        assert_eq!(r.core.isa.f32_lanes(), 1);
+        // 1.2 GHz * 4 cores * 1 FMA * 1 lane * 2 flops = 9.6 GFLOP/s
+        assert!((r.peak_gflops() - 9.6).abs() < 1e-9);
     }
 
     #[test]
@@ -393,5 +492,6 @@ mod tests {
         assert_eq!(TargetKind::Graviton2.dollars_per_hour(), Some(0.616));
         assert_eq!(TargetKind::TeslaV100.dollars_per_hour(), Some(3.06));
         assert_eq!(TargetKind::CortexA53.dollars_per_hour(), None);
+        assert_eq!(TargetKind::SiFiveU74.dollars_per_hour(), None);
     }
 }

@@ -12,13 +12,14 @@
 //! Five targets mirror the paper's testbed:
 //! Intel Xeon Platinum 8124M (c5.9xlarge), AWS Graviton2 (m6g.4xlarge),
 //! ARM Cortex-A53 (Acer aiSage), Nvidia V100 (p3.2xlarge) and Nvidia
-//! Jetson AGX Xavier.
+//! Jetson AGX Xavier. A sixth, post-paper target — the SiFive U74, a
+//! scalar in-order RISC-V core — exercises the N-target backend surface.
 
 pub mod instr;
 pub mod march;
 
 pub use instr::{AsmProgram, BasicBlock, Instr, MemRef, Opcode, Reg};
-pub use march::{CacheDesc, GpuArch, MicroArch, Target, TargetKind};
+pub use march::{CacheDesc, GpuArch, MicroArch, RiscvArch, Target, TargetKind};
 
 
 
@@ -32,15 +33,20 @@ pub enum CpuIsa {
     X86Avx2,
     /// AArch64 NEON: `fmla`, `ldr q`, `str q`, 128-bit.
     AArch64Neon,
+    /// RV64GC scalar F/D: `fmadd.s`, `flw`, `fsw` — no vector unit, one
+    /// f32 per register. The RISC-V lowering never emits packed ops.
+    Rv64Gc,
 }
 
 impl CpuIsa {
-    /// SIMD register width in bits.
+    /// SIMD register width in bits (the scalar FP register width for ISAs
+    /// without a vector unit).
     pub fn simd_bits(self) -> u32 {
         match self {
             CpuIsa::X86Avx512 => 512,
             CpuIsa::X86Avx2 => 256,
             CpuIsa::AArch64Neon => 128,
+            CpuIsa::Rv64Gc => 32,
         }
     }
 
@@ -50,12 +56,14 @@ impl CpuIsa {
     }
 
     /// Number of architectural SIMD registers (drives spill behaviour in
-    /// the virtual register allocator).
+    /// the virtual register allocator). For scalar RV64GC this is the
+    /// f0–f31 FP register file.
     pub fn num_simd_regs(self) -> usize {
         match self {
             CpuIsa::X86Avx512 => 32,
             CpuIsa::X86Avx2 => 16,
             CpuIsa::AArch64Neon => 32,
+            CpuIsa::Rv64Gc => 32,
         }
     }
 }
@@ -69,5 +77,6 @@ mod tests {
         assert_eq!(CpuIsa::X86Avx512.f32_lanes(), 16);
         assert_eq!(CpuIsa::X86Avx2.f32_lanes(), 8);
         assert_eq!(CpuIsa::AArch64Neon.f32_lanes(), 4);
+        assert_eq!(CpuIsa::Rv64Gc.f32_lanes(), 1);
     }
 }

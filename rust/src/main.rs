@@ -54,7 +54,7 @@ use std::process::exit;
 use tuna::config::parse_targets;
 use tuna::coordinator::{Coordinator, Strategy};
 use tuna::graph;
-use tuna::isa::{Target, TargetKind};
+use tuna::isa::TargetKind;
 use tuna::metrics;
 use tuna::search::EsParams;
 use tuna::tir::ops::{Epilogue, OpSpec};
@@ -232,23 +232,7 @@ fn es_params(flags: &BTreeMap<String, String>) -> EsParams {
 
 fn cmd_targets() -> Result<(), String> {
     for k in TargetKind::ALL {
-        match k.build() {
-            Target::Cpu(m) => println!(
-                "{:<55} cpu  {:>4} cores @ {:.2} GHz, {}-bit SIMD, peak {:.0} GF/s",
-                k.display_name(),
-                m.num_cores,
-                m.freq_ghz,
-                m.isa.simd_bits(),
-                m.peak_gflops()
-            ),
-            Target::Gpu(g) => println!(
-                "{:<55} gpu  {:>4} SMs  @ {:.2} GHz, peak {:.0} GF/s",
-                k.display_name(),
-                g.num_sms,
-                g.freq_ghz,
-                g.peak_gflops()
-            ),
-        }
+        println!("{:<55} {}", k.display_name(), tuna::codegen::lowering_for(k).describe());
     }
     Ok(())
 }
@@ -256,11 +240,7 @@ fn cmd_targets() -> Result<(), String> {
 fn cmd_calibrate(flags: &BTreeMap<String, String>) -> Result<(), String> {
     for kind in targets_of(flags)? {
         let cm = tuna::coordinator::calibrate::calibrated_model(kind);
-        let names: &[&str] = if kind.is_gpu() {
-            &tuna::analysis::cost::GPU_FEATURES
-        } else {
-            &tuna::analysis::cost::CPU_FEATURES
-        };
+        let names = tuna::codegen::lowering_for(kind).feature_names();
         println!("# {}", kind.display_name());
         for (n, c) in names.iter().zip(cm.coeffs()) {
             println!("  {n:<16} {c:.6}");

@@ -115,7 +115,6 @@ fn noise(prog: &AsmProgram) -> f64 {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::codegen;
     use crate::isa::march::{cortex_a53, graviton2, xeon_8124m};
     use crate::isa::TargetKind;
     use crate::tir::ops::{Epilogue, OpSpec};
@@ -124,7 +123,7 @@ mod tests {
     fn sim(op: &OpSpec, kind: TargetKind, march: &MicroArch, cfg_idx: u64) -> SimResult {
         let s = transform::config_space(op, kind);
         let f = transform::apply(op, kind, &s.from_index(cfg_idx % s.size()));
-        let prog = codegen::lower_cpu(&f, march);
+        let prog = crate::codegen::cpu::CpuCodegen::new(march).lower(&f);
         simulate(&f, &prog, march)
     }
 

@@ -8,7 +8,7 @@
 //! coordinator accumulates into the Table-II compile-time comparison.
 
 use super::SimResult;
-use crate::codegen;
+use crate::codegen::{self, Lowering};
 use crate::isa::march::Target;
 use crate::isa::TargetKind;
 use crate::tir::ops::OpSpec;
@@ -49,6 +49,7 @@ pub struct MeasureResult {
 pub struct Device {
     pub kind: TargetKind,
     target: Target,
+    lowering: Box<dyn Lowering>,
     pub costs: MeasureCosts,
     /// accumulated virtual device time (nanoseconds, atomic so parallel
     /// host threads can share the device handle — the *device* itself is
@@ -60,13 +61,21 @@ pub struct Device {
 
 impl Device {
     pub fn new(kind: TargetKind) -> Self {
+        let target = kind.build();
+        let lowering = codegen::create_lowering(&target);
         Device {
             kind,
-            target: kind.build(),
+            target,
+            lowering,
             costs: MeasureCosts::default(),
             device_ns: AtomicU64::new(0),
             measurements: AtomicU64::new(0),
         }
+    }
+
+    /// The target descriptor this device simulates.
+    pub fn target(&self) -> &Target {
+        &self.target
     }
 
     /// Execute a scheduled candidate and account for the measurement cost.
@@ -104,16 +113,8 @@ impl Device {
     }
 
     fn simulate_func(&self, f: &crate::tir::TirFunc) -> SimResult {
-        match &self.target {
-            Target::Cpu(m) => {
-                let prog = codegen::lower_cpu(f, m);
-                super::cpu::simulate(f, &prog, m)
-            }
-            Target::Gpu(g) => {
-                let prog = codegen::lower_gpu(f, g);
-                super::gpu::simulate(f, &prog, g)
-            }
-        }
+        let prog = self.lowering.lower(f);
+        self.lowering.simulate(f, &prog)
     }
 
     /// Virtual device time consumed so far (seconds).
@@ -166,13 +167,13 @@ mod tests {
         assert!(r.latency_s > 0.0);
     }
 
-    /// The standalone pass simulates on both target families, costs
+    /// The standalone pass simulates on every target family, costs
     /// nonzero time, and — being memory-bound — stays well below its
     /// producer's contraction latency.
     #[test]
     fn standalone_epilogue_pass_prices_on_both_targets() {
         use crate::graph::{EpilogueTask, Layer};
-        for kind in [TargetKind::Graviton2, TargetKind::TeslaV100] {
+        for kind in [TargetKind::Graviton2, TargetKind::TeslaV100, TargetKind::SiFiveU74] {
             let d = Device::new(kind);
             let op = OpSpec::Matmul { m: 128, n: 128, k: 128, epilogue: Epilogue::None };
             let layer = Layer::with_epilogue(op, 1, Epilogue::BiasRelu);

@@ -195,7 +195,6 @@ fn noise(prog: &AsmProgram) -> f64 {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::codegen;
     use crate::isa::march::{jetson_xavier, tesla_v100};
     use crate::isa::TargetKind;
     use crate::tir::ops::{Epilogue, OpSpec};
@@ -205,7 +204,7 @@ mod tests {
         let kind = TargetKind::TeslaV100;
         let s = transform::config_space(op, kind);
         let f = transform::apply(op, kind, &s.from_index(cfg_idx % s.size()));
-        let prog = codegen::lower_gpu(&f, gpu);
+        let prog = crate::codegen::gpu::GpuCodegen::new(gpu).lower(&f);
         simulate(&f, &prog, gpu)
     }
 

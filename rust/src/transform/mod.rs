@@ -18,15 +18,18 @@ use crate::isa::TargetKind;
 use crate::tir::{ops::OpSpec, TirFunc};
 
 /// Build the config space for an operator on a target.
+///
+/// Routes through [`crate::codegen::lowering_for`] — the backend trait is
+/// the single dispatch point for per-family schedule templates.
 pub fn config_space(op: &OpSpec, target: TargetKind) -> ConfigSpace {
-    templates::space_for(op, target)
+    crate::codegen::lowering_for(target).space(op)
 }
 
 /// Apply a schedule config, producing the scheduled TIR.
 ///
 /// Panics if `config` does not belong to `config_space(op, target)`.
 pub fn apply(op: &OpSpec, target: TargetKind, config: &ScheduleConfig) -> TirFunc {
-    templates::build(op, target, config)
+    crate::codegen::lowering_for(target).schedule(op, config)
 }
 
 #[cfg(test)]

@@ -7,7 +7,6 @@
 //! outermost loop.
 
 use super::{epilogue_tail, nest, tile_candidates, LoopSpec};
-use crate::isa::TargetKind;
 use crate::isets::Affine;
 use crate::tir::{
     ops::{Epilogue, OpSpec},
@@ -20,7 +19,7 @@ use crate::transform::space::{ConfigSpace, ScheduleConfig};
 /// like AutoTVM's conv2d spaces).
 const CAP: usize = 6;
 
-pub fn space_for(op: &OpSpec, _target: TargetKind) -> ConfigSpace {
+pub fn space_for(op: &OpSpec) -> ConfigSpace {
     match *op {
         OpSpec::Matmul { m, n, k, .. } => ConfigSpace::new()
             .int_knob("tile_m", tile_candidates(m, 128, CAP + 2))
@@ -62,8 +61,8 @@ pub fn space_for(op: &OpSpec, _target: TargetKind) -> ConfigSpace {
     }
 }
 
-pub fn build(op: &OpSpec, target: TargetKind, cfg: &ScheduleConfig) -> TirFunc {
-    let space = space_for(op, target);
+pub fn build(op: &OpSpec, cfg: &ScheduleConfig) -> TirFunc {
+    let space = space_for(op);
     assert!(space.contains(cfg), "config does not belong to space of {op}");
     match *op {
         OpSpec::Matmul { m, n, k, epilogue } => build_matmul(m, n, k, epilogue, &space, cfg),
@@ -739,15 +738,15 @@ fn build_winograd(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::isa::TargetKind::Graviton2;
+
 
     #[test]
     fn matmul_flops_invariant_across_configs() {
         let op = OpSpec::Matmul { m: 64, n: 64, k: 64, epilogue: Epilogue::None };
-        let space = space_for(&op, Graviton2);
+        let space = space_for(&op);
         let expected = op.flops();
         for idx in [0u64, 7, 31, space.size() - 1] {
-            let f = build(&op, Graviton2, &space.from_index(idx));
+            let f = build(&op, &space.from_index(idx));
             assert_eq!(f.total_flops(), expected, "config {idx}");
         }
     }
@@ -758,10 +757,10 @@ mod tests {
             n: 1, cin: 16, h: 14, w: 14, cout: 16, kh: 3, kw: 3, stride: 1, pad: 1,
             epilogue: Epilogue::None,
         };
-        let space = space_for(&op, Graviton2);
+        let space = space_for(&op);
         let expected = op.flops();
         for idx in 0..space.size().min(64) {
-            let f = build(&op, Graviton2, &space.from_index(idx));
+            let f = build(&op, &space.from_index(idx));
             assert_eq!(f.total_flops(), expected, "config {idx}");
         }
     }
@@ -772,9 +771,9 @@ mod tests {
             n: 1, c: 16, h: 14, w: 14, kh: 3, kw: 3, stride: 1, pad: 1,
             epilogue: Epilogue::None,
         };
-        let space = space_for(&op, Graviton2);
+        let space = space_for(&op);
         for idx in 0..space.size().min(32) {
-            let f = build(&op, Graviton2, &space.from_index(idx));
+            let f = build(&op, &space.from_index(idx));
             assert_eq!(f.total_flops(), op.flops(), "config {idx}");
         }
     }
@@ -795,13 +794,13 @@ mod tests {
             },
         ];
         for base in bases {
-            let base_space = space_for(&base, Graviton2);
+            let base_space = space_for(&base);
             for e in [Epilogue::Bias, Epilogue::BiasRelu] {
                 let op = base.with_epilogue(e).unwrap();
-                let space = space_for(&op, Graviton2);
+                let space = space_for(&op);
                 assert_eq!(space.fingerprint(), base_space.fingerprint(), "{op}");
                 for idx in 0..space.size().min(24) {
-                    let f = build(&op, Graviton2, &space.from_index(idx));
+                    let f = build(&op, &space.from_index(idx));
                     assert_eq!(f.total_flops(), op.flops(), "{op} config {idx}");
                     assert_eq!(
                         f.total_flops() - base.flops(),
@@ -816,8 +815,8 @@ mod tests {
     #[test]
     fn winograd_builds_three_stages() {
         let op = OpSpec::Conv2dWinograd { n: 1, cin: 8, h: 8, w: 8, cout: 8 };
-        let space = space_for(&op, Graviton2);
-        let f = build(&op, Graviton2, &space.default_config());
+        let space = space_for(&op);
+        let f = build(&op, &space.default_config());
         assert_eq!(f.body.len(), 3);
         assert!(f.total_flops() > 0);
     }
@@ -825,8 +824,8 @@ mod tests {
     #[test]
     fn bmm_has_parallel_batch() {
         let op = OpSpec::BatchMatmul { b: 4, m: 16, n: 16, k: 16 };
-        let space = space_for(&op, Graviton2);
-        let f = build(&op, Graviton2, &space.default_config());
+        let space = space_for(&op);
+        let f = build(&op, &space.default_config());
         assert_eq!(f.preorder_loops()[0].kind, LoopKind::Parallel);
         assert_eq!(f.total_flops(), op.flops());
     }

@@ -9,7 +9,6 @@
 //! spaces. Convolutions use register tiling with direct global loads.
 
 use super::{epilogue_tail, nest, nest_multi, LoopSpec};
-use crate::isa::TargetKind;
 use crate::isets::Affine;
 use crate::tir::{
     ops::{Epilogue, OpSpec},
@@ -110,7 +109,7 @@ fn parse_tile(s: &str) -> Vec<i64> {
     s.split('.').map(|p| p.parse().unwrap()).collect()
 }
 
-pub fn space_for(op: &OpSpec, _target: TargetKind) -> ConfigSpace {
+pub fn space_for(op: &OpSpec) -> ConfigSpace {
     match *op {
         OpSpec::Matmul { m, n, k, .. } => ConfigSpace::new()
             .tag_knob(
@@ -157,8 +156,8 @@ pub fn space_for(op: &OpSpec, _target: TargetKind) -> ConfigSpace {
     }
 }
 
-pub fn build(op: &OpSpec, target: TargetKind, cfg: &ScheduleConfig) -> TirFunc {
-    let space = space_for(op, target);
+pub fn build(op: &OpSpec, cfg: &ScheduleConfig) -> TirFunc {
+    let space = space_for(op);
     assert!(space.contains(cfg), "config does not belong to space of {op}");
     match *op {
         OpSpec::Matmul { m, n, k, epilogue } => {
@@ -549,7 +548,7 @@ fn build_conv(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::isa::TargetKind::TeslaV100;
+
 
     #[test]
     fn gemm_tiles_all_valid() {
@@ -564,8 +563,8 @@ mod tests {
     #[test]
     fn gemm_builds_with_shared_staging() {
         let op = OpSpec::Matmul { m: 128, n: 128, k: 64, epilogue: Epilogue::None };
-        let space = space_for(&op, TeslaV100);
-        let f = build(&op, TeslaV100, &space.default_config());
+        let space = space_for(&op);
+        let f = build(&op, &space.default_config());
         let shared: Vec<_> =
             f.buffers.iter().filter(|b| b.space == MemSpace::Shared).collect();
         assert_eq!(shared.len(), 2);
@@ -587,9 +586,9 @@ mod tests {
             n: 1, cin: 64, h: 56, w: 56, cout: 64, kh: 3, kw: 3, stride: 1, pad: 1,
             epilogue: Epilogue::None,
         };
-        let space = space_for(&op, TeslaV100);
+        let space = space_for(&op);
         assert!(space.size() > 4);
-        let f = build(&op, TeslaV100, &space.default_config());
+        let f = build(&op, &space.default_config());
         assert!(f.preorder_loops().iter().any(|l| l.kind == LoopKind::GpuThreadX));
     }
 
@@ -605,12 +604,12 @@ mod tests {
             },
         ];
         for base in bases {
-            let base_space = space_for(&base, TeslaV100);
+            let base_space = space_for(&base);
             for e in [Epilogue::Bias, Epilogue::BiasRelu] {
                 let op = base.with_epilogue(e).unwrap();
-                let space = space_for(&op, TeslaV100);
+                let space = space_for(&op);
                 assert_eq!(space.fingerprint(), base_space.fingerprint(), "{op}");
-                let f = build(&op, TeslaV100, &space.default_config());
+                let f = build(&op, &space.default_config());
                 assert_eq!(f.total_flops(), op.flops(), "{op}");
                 let local = f
                     .buffers
@@ -629,8 +628,8 @@ mod tests {
     #[test]
     fn bmm_uses_grid_z() {
         let op = OpSpec::BatchMatmul { b: 12, m: 128, n: 128, k: 64 };
-        let space = space_for(&op, TeslaV100);
-        let f = build(&op, TeslaV100, &space.default_config());
+        let space = space_for(&op);
+        let f = build(&op, &space.default_config());
         let bz = f.preorder_loops().iter().any(|l| l.kind == LoopKind::GpuBlockZ && l.extent == 12);
         assert!(bz);
     }

@@ -10,32 +10,14 @@
 
 pub mod cpu;
 pub mod gpu;
+pub mod riscv;
 
 use crate::isa::TargetKind;
 use crate::isets::Affine;
 use crate::tir::{
-    ops::{Epilogue, OpSpec},
+    ops::Epilogue,
     Access, LoopKind, LoopNode, Stmt, StmtOp, TirFunc, TirNode,
 };
-use crate::transform::space::{ConfigSpace, ScheduleConfig};
-
-/// Build the config space for `op` on `target`.
-pub fn space_for(op: &OpSpec, target: TargetKind) -> ConfigSpace {
-    if target.is_gpu() {
-        gpu::space_for(op, target)
-    } else {
-        cpu::space_for(op, target)
-    }
-}
-
-/// Build the scheduled TIR for `op` × `target` × `config`.
-pub fn build(op: &OpSpec, target: TargetKind, config: &ScheduleConfig) -> TirFunc {
-    if target.is_gpu() {
-        gpu::build(op, target, config)
-    } else {
-        cpu::build(op, target, config)
-    }
-}
 
 /// Loop spec for the nest builder: (name, extent, kind).
 pub type LoopSpec<'a> = (&'a str, i64, LoopKind);
@@ -131,40 +113,69 @@ pub fn epilogue_tail(
 /// `Network::latency` can charge unfused alternatives a measured (not
 /// hard-coded) pass cost.
 pub fn epilogue_standalone(e: Epilogue, elems: i64, channels: i64, target: TargetKind) -> TirFunc {
+    crate::codegen::lowering_for(target).epilogue_standalone(e, elems, channels)
+}
+
+/// Shared scaffolding for the standalone pass: name, buffers, shape check.
+fn epilogue_frame(e: Epilogue, elems: i64, channels: i64) -> (TirFunc, u16, u16, i64) {
     assert!(e != Epilogue::None, "no standalone pass for Epilogue::None");
     assert!(channels > 0 && elems % channels == 0, "bad epilogue shape {elems}x{channels}");
     let rows = elems / channels;
     let mut f = TirFunc::new(format!("epilogue_{}_x{elems}_c{channels}", e.wire_name()));
     let out = f.add_buffer("OUT", vec![channels, rows]);
     let bias = f.add_buffer("BIAS", vec![channels]);
-    let tail = if target.is_gpu() {
-        // one block per channel, coalesced thread sweep over the row
-        let t = crate::util::divisors(rows).into_iter().filter(|&d| d <= 256).max().unwrap_or(1);
-        epilogue_tail(
-            &mut f,
-            e,
-            out,
-            bias,
-            &[
-                ("bx", channels, LoopKind::GpuBlockX),
-                ("tx", t, LoopKind::GpuThreadX),
-                ("x", rows / t, LoopKind::Serial),
-            ],
-            |v| {
-                let row = Affine::scaled(v[2], t).add(&Affine::var(v[1]));
-                (vec![Affine::var(v[0]), row], Affine::var(v[0]))
-            },
-        )
-    } else {
-        epilogue_tail(
-            &mut f,
-            e,
-            out,
-            bias,
-            &[("c", channels, LoopKind::Parallel), ("x", rows, LoopKind::Vectorize)],
-            |v| (vec![Affine::var(v[0]), Affine::var(v[1])], Affine::var(v[0])),
-        )
-    };
+    (f, out, bias, rows)
+}
+
+/// CPU flavor: parallel channels, vectorized row sweep.
+pub(crate) fn epilogue_standalone_vec(e: Epilogue, elems: i64, channels: i64) -> TirFunc {
+    let (mut f, out, bias, rows) = epilogue_frame(e, elems, channels);
+    let tail = epilogue_tail(
+        &mut f,
+        e,
+        out,
+        bias,
+        &[("c", channels, LoopKind::Parallel), ("x", rows, LoopKind::Vectorize)],
+        |v| (vec![Affine::var(v[0]), Affine::var(v[1])], Affine::var(v[0])),
+    );
+    f.body = vec![tail];
+    f
+}
+
+/// Scalar flavor (RISC-V): parallel channels, serial row sweep.
+pub(crate) fn epilogue_standalone_scalar(e: Epilogue, elems: i64, channels: i64) -> TirFunc {
+    let (mut f, out, bias, rows) = epilogue_frame(e, elems, channels);
+    let tail = epilogue_tail(
+        &mut f,
+        e,
+        out,
+        bias,
+        &[("c", channels, LoopKind::Parallel), ("x", rows, LoopKind::Serial)],
+        |v| (vec![Affine::var(v[0]), Affine::var(v[1])], Affine::var(v[0])),
+    );
+    f.body = vec![tail];
+    f
+}
+
+/// GPU flavor: one block per channel, coalesced thread sweep over the row.
+pub(crate) fn epilogue_standalone_gpu(e: Epilogue, elems: i64, channels: i64) -> TirFunc {
+    let (mut f, out, bias, rows) = epilogue_frame(e, elems, channels);
+    let t = crate::util::divisors(rows).into_iter().filter(|&d| d <= 256).max().unwrap_or(1);
+    let tail = epilogue_tail(
+        &mut f,
+        e,
+        out,
+        bias,
+        &[
+            ("bx", channels, LoopKind::GpuBlockX),
+            ("tx", t, LoopKind::GpuThreadX),
+            ("x", rows / t, LoopKind::Serial),
+        ],
+        |v| {
+            let row = Affine::scaled(v[2], t).add(&Affine::var(v[1]));
+            (vec![Affine::var(v[0]), row], Affine::var(v[0]))
+        },
+    );
     f.body = vec![tail];
     f
 }
@@ -215,8 +226,8 @@ mod tests {
 
     #[test]
     fn standalone_epilogue_flops_match_tail_cost() {
-        // elems × flops-per-elem, on both target families
-        for target in [TargetKind::Graviton2, TargetKind::TeslaV100] {
+        // elems × flops-per-elem, on every target family
+        for target in TargetKind::ALL {
             for e in [Epilogue::Bias, Epilogue::BiasRelu] {
                 let f = epilogue_standalone(e, 3136 * 64, 64, target);
                 assert_eq!(f.total_flops(), e.flops_per_elem() * 3136 * 64);

@@ -1,0 +1,79 @@
+//! RISC-V (scalar in-order) schedule templates.
+//!
+//! The scalar core wants the same things the paper's CPU schedules tune —
+//! cache-blocked tiles, loop orders, register-blocking unrolls — minus
+//! vectorization, which RV64GC (no V extension) cannot express. So the
+//! template *reuses* the CPU divisor-tiling space verbatim (the knobs are
+//! machine-agnostic; the space fingerprint is identical, and the schedule
+//! cache keeps the families apart with its `TargetKind`-prefixed keys) and
+//! demotes every `Vectorize` annotation the CPU builder produces to a
+//! `Serial` loop. That keeps the joint IR/asm loop mapping honest: the
+//! RISC-V codegen materializes those loops as real scalar loops, and a
+//! `Vectorize` node that never becomes SIMD would otherwise be skipped by
+//! `loop_map::materializes`.
+
+use super::cpu;
+use crate::tir::{LoopKind, TirFunc, TirNode};
+use crate::transform::space::{ConfigSpace, ScheduleConfig};
+
+pub fn space_for(op: &crate::tir::ops::OpSpec) -> ConfigSpace {
+    cpu::space_for(op)
+}
+
+pub fn build(op: &crate::tir::ops::OpSpec, cfg: &ScheduleConfig) -> TirFunc {
+    let mut f = cpu::build(op, cfg);
+    for n in f.body.iter_mut() {
+        demote_vectorize(n);
+    }
+    f
+}
+
+/// Vectorize → Serial, recursively: the scalar ISA has no packed ops.
+fn demote_vectorize(n: &mut TirNode) {
+    if let TirNode::Loop(l) = n {
+        if l.kind == LoopKind::Vectorize {
+            l.kind = LoopKind::Serial;
+        }
+        for c in l.body.iter_mut() {
+            demote_vectorize(c);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tir::ops::{figure_op_suite, Epilogue, OpSpec};
+
+    #[test]
+    fn no_vectorize_loops_survive() {
+        for op in figure_op_suite() {
+            let space = space_for(&op);
+            for idx in 0..space.size().min(16) {
+                let f = build(&op, &space.from_index(idx));
+                assert!(
+                    f.preorder_loops().iter().all(|l| l.kind != LoopKind::Vectorize),
+                    "{op} config {idx} kept a Vectorize loop"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn space_matches_cpu_fingerprint() {
+        // same knobs as the CPU family — cache keys differ by kind prefix
+        for op in figure_op_suite() {
+            assert_eq!(space_for(&op).fingerprint(), cpu::space_for(&op).fingerprint(), "{op}");
+        }
+    }
+
+    #[test]
+    fn flops_invariant_across_configs() {
+        let op = OpSpec::Matmul { m: 64, n: 64, k: 64, epilogue: Epilogue::Bias };
+        let space = space_for(&op);
+        for idx in [0u64, 7, 31, space.size() - 1] {
+            let f = build(&op, &space.from_index(idx % space.size()));
+            assert_eq!(f.total_flops(), op.flops(), "config {idx}");
+        }
+    }
+}

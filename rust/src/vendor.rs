@@ -7,22 +7,16 @@
 //! applied *without* looking at measurements or the cost model, so they are
 //! good but never shape-specialized, exactly like a vendor library.
 
-use crate::isa::{CpuIsa, Target, TargetKind};
+use crate::isa::TargetKind;
 use crate::tir::ops::OpSpec;
 use crate::transform::{ConfigSpace, ScheduleConfig};
 
-/// Pick the vendor-library schedule for `op` on `target`.
+/// Pick the vendor-library schedule for `op` on `target` — routed through
+/// the backend trait ([`crate::codegen::Lowering::vendor_config`]), whose
+/// impls call back into the crate-private `vendor_cpu`/`vendor_gpu`
+/// heuristics with family-appropriate parameters.
 pub fn vendor_config(op: &OpSpec, target: TargetKind) -> ScheduleConfig {
-    let space = crate::transform::config_space(op, target);
-    if target.is_gpu() {
-        vendor_gpu(op, &space)
-    } else {
-        let lanes = match target.build() {
-            Target::Cpu(m) => m.isa.f32_lanes(),
-            _ => CpuIsa::AArch64Neon.f32_lanes(),
-        };
-        vendor_cpu(op, &space, lanes)
-    }
+    crate::codegen::lowering_for(target).vendor_config(op)
 }
 
 /// Choose the candidate value closest to `want` for an integer knob.
@@ -66,7 +60,7 @@ fn pick_tag(space: &ConfigSpace, cfg: &mut ScheduleConfig, name: &str, want: &st
     }
 }
 
-fn vendor_cpu(op: &OpSpec, space: &ConfigSpace, lanes: i64) -> ScheduleConfig {
+pub(crate) fn vendor_cpu(op: &OpSpec, space: &ConfigSpace, lanes: i64) -> ScheduleConfig {
     let mut cfg = space.default_config();
     match op {
         OpSpec::Matmul { .. } | OpSpec::BatchMatmul { .. } => {
@@ -101,7 +95,7 @@ fn vendor_cpu(op: &OpSpec, space: &ConfigSpace, lanes: i64) -> ScheduleConfig {
     cfg
 }
 
-fn vendor_gpu(op: &OpSpec, space: &ConfigSpace) -> ScheduleConfig {
+pub(crate) fn vendor_gpu(op: &OpSpec, space: &ConfigSpace) -> ScheduleConfig {
     let mut cfg = space.default_config();
     match op {
         OpSpec::Matmul { .. } | OpSpec::BatchMatmul { .. } | OpSpec::Conv2dWinograd { .. } => {

@@ -1,0 +1,287 @@
+//! Cross-backend conformance suite for the [`tuna::codegen::Lowering`]
+//! trait — the contract every backend must satisfy to plug into the
+//! tune → cache → shard → serve stack.
+//!
+//! The suite is table-driven: one [`BackendRow`] per `TargetKind`. Adding
+//! a backend to the crate means adding exactly one row here (the
+//! table↔enum coverage test fails until you do), after which every
+//! invariant below — schedule totality, flops preservation, lowering
+//! well-formedness, feature dimensional stability, cache round-trip
+//! bit-identity — runs against the new backend for free.
+
+use tuna::codegen::{self, Lowering};
+use tuna::coordinator::{Coordinator, Strategy};
+use tuna::eval::ScheduleCache;
+use tuna::isa::TargetKind;
+use tuna::search::EsParams;
+use tuna::tir::ops::{figure_op_suite, Epilogue, OpSpec};
+use tuna::transform::{self, ScheduleConfig};
+
+/// One backend's expected conformance profile. `family` pins the trait's
+/// self-description; `expects_launch` pins whether lowered programs carry
+/// a GPU launch config; `promises_exact_flops` pins whether the scheduled
+/// IR's `total_flops` equals `op.flops()` exactly (GPU templates insert
+/// explicit copy/staging statements, so they promise ≥ instead).
+struct BackendRow {
+    kind: TargetKind,
+    family: &'static str,
+    expects_launch: bool,
+    promises_exact_flops: bool,
+}
+
+const TABLE: [BackendRow; 6] = [
+    BackendRow {
+        kind: TargetKind::XeonPlatinum8124M,
+        family: "cpu",
+        expects_launch: false,
+        promises_exact_flops: true,
+    },
+    BackendRow {
+        kind: TargetKind::Graviton2,
+        family: "cpu",
+        expects_launch: false,
+        promises_exact_flops: true,
+    },
+    BackendRow {
+        kind: TargetKind::CortexA53,
+        family: "cpu",
+        expects_launch: false,
+        promises_exact_flops: true,
+    },
+    BackendRow {
+        kind: TargetKind::TeslaV100,
+        family: "gpu",
+        expects_launch: true,
+        promises_exact_flops: false,
+    },
+    BackendRow {
+        kind: TargetKind::JetsonXavier,
+        family: "gpu",
+        expects_launch: true,
+        promises_exact_flops: false,
+    },
+    BackendRow {
+        kind: TargetKind::SiFiveU74,
+        family: "riscv",
+        expects_launch: false,
+        promises_exact_flops: true,
+    },
+];
+
+fn tiny_es() -> EsParams {
+    EsParams { population: 10, iterations: 5, k: 8, seed: 31, ..Default::default() }
+}
+
+/// A small spread of configs per space: the default plus grid-strided
+/// samples, enough to exercise tiling/unroll/vectorize variation without
+/// walking whole spaces.
+fn sample_cfgs(lw: &dyn Lowering, op: &OpSpec, n: u64) -> Vec<ScheduleConfig> {
+    let space = lw.space(op);
+    let mut cfgs = vec![space.default_config()];
+    let n = n.min(space.size()).max(1);
+    for i in 0..n {
+        cfgs.push(space.from_index(i * space.size() / n));
+    }
+    cfgs
+}
+
+/// The op matrix: every figure-suite shape, re-fused with every epilogue
+/// it supports (the suite itself mixes epilogues; re-fusing makes the
+/// coverage exhaustive rather than incidental).
+fn op_matrix() -> Vec<OpSpec> {
+    let mut ops = Vec::new();
+    let mut seen = std::collections::BTreeSet::new();
+    for op in figure_op_suite() {
+        let base = op.unfused();
+        for e in Epilogue::ALL {
+            if let Some(fused) = base.with_epilogue(e) {
+                if seen.insert(fused.cache_key()) {
+                    ops.push(fused);
+                }
+            }
+        }
+    }
+    ops
+}
+
+/// The table and the enum must cover each other exactly — a new
+/// `TargetKind` without a conformance row (or a stale row) fails here,
+/// which is the mechanism that makes "new backend = one table row" true.
+#[test]
+fn table_covers_every_target_kind_exactly_once() {
+    assert_eq!(TABLE.len(), TargetKind::ALL.len(), "row count != enum size");
+    for kind in TargetKind::ALL {
+        let rows: Vec<_> = TABLE.iter().filter(|r| r.kind == kind).collect();
+        assert_eq!(rows.len(), 1, "{kind:?} must have exactly one conformance row");
+    }
+}
+
+/// Each row's static expectations hold: the factory yields the declared
+/// family, launch-config presence matches, and `is_gpu` agrees with the
+/// family tag (the two must never drift apart — sharding and serving
+/// branch on both).
+#[test]
+fn families_and_launch_expectations_match() {
+    for row in &TABLE {
+        let lw = codegen::lowering_for(row.kind);
+        assert_eq!(lw.family(), row.family, "{:?}", row.kind);
+        assert_eq!(row.kind.is_gpu(), row.family == "gpu", "{:?}", row.kind);
+        assert_eq!(row.expects_launch, row.family == "gpu", "{:?}", row.kind);
+        assert!(!lw.describe().is_empty(), "{:?} has no march description", row.kind);
+    }
+}
+
+/// Schedule totality and work preservation: every op in the matrix has a
+/// non-empty space on every backend, every sampled config builds, and the
+/// built IR carries the op's flops (exactly where the family promises
+/// exactness, at least otherwise — schedules reorder work, never change
+/// it).
+#[test]
+fn spaces_schedules_and_flops_conform() {
+    for row in &TABLE {
+        let lw = codegen::lowering_for(row.kind);
+        for op in op_matrix() {
+            let space = lw.space(&op);
+            assert!(space.size() > 0, "{op} on {:?}: empty space", row.kind);
+            for cfg in sample_cfgs(lw.as_ref(), &op, 4) {
+                let f = lw.schedule(&op, &cfg);
+                if row.promises_exact_flops {
+                    assert_eq!(
+                        f.total_flops(),
+                        op.flops(),
+                        "{op} on {:?} cfg {cfg:?}",
+                        row.kind
+                    );
+                } else {
+                    assert!(
+                        f.total_flops() > 0,
+                        "{op} on {:?} cfg {cfg:?}: no work",
+                        row.kind
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Lowering well-formedness: no panics, non-empty programs, launch
+/// metadata present exactly when the row expects it.
+#[test]
+fn lowering_emits_wellformed_programs() {
+    for row in &TABLE {
+        let lw = codegen::lowering_for(row.kind);
+        for op in op_matrix() {
+            for cfg in sample_cfgs(lw.as_ref(), &op, 3) {
+                let f = lw.schedule(&op, &cfg);
+                let prog = lw.lower(&f);
+                assert!(prog.total_instrs() > 0, "{op} on {:?}: empty program", row.kind);
+                assert_eq!(
+                    prog.launch.is_some(),
+                    row.expects_launch,
+                    "{op} on {:?}: launch presence",
+                    row.kind
+                );
+            }
+        }
+    }
+}
+
+/// Feature conformance: extraction succeeds on every sampled lowering,
+/// every value is finite, and the dimension equals the backend's declared
+/// feature-name count for every op×config (coefficients index into the
+/// names, so a single ragged vector breaks scoring).
+#[test]
+fn features_are_finite_and_dimension_stable() {
+    for row in &TABLE {
+        let lw = codegen::lowering_for(row.kind);
+        let dim = lw.feature_names().len();
+        assert!(dim > 0, "{:?}: no features", row.kind);
+        assert_eq!(lw.default_coeffs().len(), dim, "{:?}: coeffs/names ragged", row.kind);
+        for op in op_matrix() {
+            for cfg in sample_cfgs(lw.as_ref(), &op, 3) {
+                let f = lw.schedule(&op, &cfg);
+                let prog = lw.lower(&f);
+                let fv = lw
+                    .extract(&f, &prog)
+                    .unwrap_or_else(|e| panic!("{op} on {:?}: extract failed {e}", row.kind));
+                assert_eq!(fv.dim(), dim, "{op} on {:?} cfg {cfg:?}", row.kind);
+                for (i, v) in fv.values.iter().enumerate() {
+                    assert!(
+                        v.is_finite() && *v >= 0.0,
+                        "{op} on {:?}: feature {} = {v}",
+                        row.kind,
+                        lw.feature_names()[i]
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Simulation conformance: the backend's ground-truth simulator prices
+/// every sampled schedule at a strictly positive latency.
+#[test]
+fn simulation_prices_every_backend() {
+    let op = OpSpec::Matmul { m: 48, n: 48, k: 32, epilogue: Epilogue::Bias };
+    for row in &TABLE {
+        let lw = codegen::lowering_for(row.kind);
+        for cfg in sample_cfgs(lw.as_ref(), &op, 3) {
+            let f = lw.schedule(&op, &cfg);
+            let prog = lw.lower(&f);
+            let r = lw.simulate(&f, &prog);
+            assert!(r.seconds > 0.0, "{op} on {:?} cfg {cfg:?}", row.kind);
+        }
+    }
+}
+
+/// Tune → cache → save → load → save round trip, per backend: the tuned
+/// entry lands under this target's key prefix, and the persisted bytes
+/// are a fixed point of load→save (bit-identical re-serialization is what
+/// lets shard merges and fleet journals compare caches by bytes).
+#[test]
+fn tune_cache_roundtrip_is_bit_identical_per_target() {
+    let op = OpSpec::Matmul { m: 48, n: 48, k: 24, epilogue: Epilogue::None };
+    let strategy = Strategy::TunaStatic(tiny_es());
+    let sig = strategy.cache_sig().unwrap();
+    let mut keys = Vec::new();
+    for row in &TABLE {
+        let c = Coordinator::new_uncalibrated(row.kind);
+        let rep = c.tune_op(&op, &strategy);
+        assert!(!rep.top_k.is_empty(), "{:?}: no top-k", row.kind);
+
+        let space = transform::config_space(&op, row.kind);
+        let key = ScheduleCache::key(row.kind, &op, &space, &sig);
+        assert!(
+            key.starts_with(&format!("{:?}/", row.kind)),
+            "{key} lost its target prefix"
+        );
+        keys.push(key.clone());
+
+        let exported = c.export_cache();
+        assert!(exported.peek(&key).is_some(), "{:?}: tuned entry not cached", row.kind);
+
+        let path = std::env::temp_dir().join(format!(
+            "tuna_conformance_{}_{}.json",
+            row.kind.wire_name(),
+            std::process::id()
+        ));
+        exported.save(&path).unwrap();
+        let first = std::fs::read_to_string(&path).unwrap();
+        let back = ScheduleCache::load(&path).unwrap();
+        assert_eq!(
+            back.peek(&key).map(|e| e.chosen.clone()),
+            exported.peek(&key).map(|e| e.chosen.clone()),
+            "{:?}: chosen config did not survive the file",
+            row.kind
+        );
+        back.save(&path).unwrap();
+        let second = std::fs::read_to_string(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
+        assert_eq!(first, second, "{:?}: save→load→save not bit-identical", row.kind);
+    }
+    // the same op tuned on every backend lands under distinct addresses
+    let mut dedup = keys.clone();
+    dedup.sort();
+    dedup.dedup();
+    assert_eq!(dedup.len(), keys.len(), "cache keys collided across targets: {keys:?}");
+}

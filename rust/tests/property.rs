@@ -73,7 +73,8 @@ fn prop_schedules_preserve_flops() {
     let mut rng = Rng::new(101);
     for case in 0..CASES {
         let op = random_op(&mut rng);
-        let target = if case % 2 == 0 { TargetKind::Graviton2 } else { TargetKind::TeslaV100 };
+        let target = [TargetKind::Graviton2, TargetKind::TeslaV100, TargetKind::SiFiveU74]
+            [case % 3];
         let space = transform::config_space(&op, target);
         let cfg = space.random(&mut rng);
         let f = transform::apply(&op, target, &cfg);
@@ -117,7 +118,7 @@ fn prop_loop_map_recovers_exact_counts() {
         let space = transform::config_space(&op, target);
         let cfg = space.random(&mut rng);
         let f = transform::apply(&op, target, &cfg);
-        let prog = tuna::codegen::lower_cpu(&f, &march);
+        let prog = tuna::codegen::cpu::CpuCodegen::new(&march).lower(&f);
         let lm = loop_map::map_loops(&f, &prog);
         let vec_lanes: u64 = {
             let mut s = 0;
@@ -486,15 +487,11 @@ fn prop_protocol_decoder_rejects_truncation_and_trailing_garbage() {
 /// (no schedule can beat peak flops) and is strictly positive.
 #[test]
 fn prop_simulator_respects_roofline() {
-    use tuna::isa::Target;
     use tuna::sim::Device;
     let mut rng = Rng::new(707);
-    for kind in [TargetKind::Graviton2, TargetKind::TeslaV100] {
+    for kind in [TargetKind::Graviton2, TargetKind::TeslaV100, TargetKind::SiFiveU74] {
         let device = Device::new(kind);
-        let peak = match kind.build() {
-            Target::Cpu(m) => m.peak_gflops(),
-            Target::Gpu(g) => g.peak_gflops(),
-        };
+        let peak = kind.build().peak_gflops();
         for _ in 0..12 {
             let op = random_op(&mut rng);
             let space = transform::config_space(&op, kind);
@@ -728,4 +725,105 @@ fn prop_journal_bit_flips_never_load_garbage() {
     }
     let _ = std::fs::remove_file(&full);
     let _ = std::fs::remove_file(&flip_path);
+}
+
+// ---------------------------------------------------------------------
+// backend-extensibility properties: the target enum, its wire names and
+// the cache address space must stay collision-free as backends are added
+// (these pinned the RISC-V backend's arrival; the next backend rides the
+// same assertions for free).
+
+/// INVARIANT: target wire names round-trip for every enum variant, are
+/// mutually distinct, and unknown/non-canonical names are rejected — the
+/// serve protocol's target field depends on this staying total.
+#[test]
+fn prop_target_wire_names_roundtrip_over_all() {
+    let mut wires = Vec::new();
+    for kind in TargetKind::ALL {
+        let wire = kind.wire_name();
+        assert_eq!(TargetKind::from_wire(wire), Some(kind), "{kind:?}");
+        wires.push(wire);
+    }
+    let mut dedup = wires.clone();
+    dedup.sort();
+    dedup.dedup();
+    assert_eq!(dedup.len(), TargetKind::ALL.len(), "colliding wire names {wires:?}");
+    // strict inverse: aliases and case variants belong to the CLI parser,
+    // never to the wire
+    for bad in ["tpu", "", "XEON", "riscv", "rv64", "unmatched", "u-74"] {
+        assert!(TargetKind::from_wire(bad).is_none(), "{bad:?} accepted on the wire");
+    }
+}
+
+/// INVARIANT: cache keys are distinct across every target × base op ×
+/// epilogue combination — a new backend can never alias another target's
+/// entries even when it shares a config-space fingerprint (the RISC-V
+/// spaces are bit-identical to the CPU ones; only the kind prefix
+/// separates them).
+#[test]
+fn prop_cache_keys_distinct_across_targets_ops_epilogues() {
+    use std::collections::BTreeSet;
+    use tuna::eval::ScheduleCache;
+    // dedup the figure suite down to unique unfused shapes first: two
+    // suite entries sharing a base shape *should* share fused keys
+    let mut bases = Vec::new();
+    let mut seen = BTreeSet::new();
+    for op in tuna::tir::ops::figure_op_suite() {
+        let base = op.unfused();
+        if seen.insert(base.cache_key()) {
+            bases.push(base);
+        }
+    }
+    let mut keys = BTreeSet::new();
+    let mut count = 0usize;
+    for kind in TargetKind::ALL {
+        for base in &bases {
+            for e in Epilogue::ALL {
+                let Some(op) = base.with_epilogue(e) else { continue };
+                let space = transform::config_space(&op, kind);
+                let key = ScheduleCache::key(kind, &op, &space, "es_p8_i4");
+                assert!(
+                    key.starts_with(&format!("{kind:?}/")),
+                    "{key} lost its target prefix"
+                );
+                assert!(keys.insert(key.clone()), "duplicate cache key {key}");
+                count += 1;
+            }
+        }
+    }
+    assert_eq!(keys.len(), count);
+}
+
+/// INVARIANT: a version-2 cache file written before the RISC-V backend
+/// existed still loads with the enum's sixth variant present, entries for
+/// the new target coexist in the same file, per-target filtering slices
+/// cleanly, and re-saving is byte-stable (save → load → save is the
+/// identity on bytes).
+#[test]
+fn prop_v2_cache_files_byte_stable_with_new_target() {
+    use tuna::eval::ScheduleCache;
+    use tuna::util::json::Json;
+    let text = concat!(
+        r#"{"version":2,"entries":{"#,
+        r#""Graviton2/dense_m32_n32_k32/000000000000002a/es_p8_i4":"#,
+        r#"{"chosen":[3,0,1],"best_score":1.5,"evaluations":7,"top_k":[[[3,0,1],1.5]],"op":{"kind":"dense","m":32,"n":32,"k":32}},"#,
+        r#""SiFiveU74/dense_m32_n32_k32/000000000000002a/es_p8_i4":"#,
+        r#"{"chosen":[1,2,0],"best_score":9.5,"evaluations":5,"top_k":[[[1,2,0],9.5]],"op":{"kind":"dense","m":32,"n":32,"k":32}},"#,
+        r#""TeslaV100/dense_m32_n32_k32/00000000000000ff/es_p8_i4":"#,
+        r#"{"chosen":[2],"best_score":0.5,"evaluations":9,"top_k":[[[2],0.5]],"op":{"kind":"dense","m":32,"n":32,"k":32}}"#,
+        r#"}}"#,
+    );
+    let cache = ScheduleCache::from_json(&Json::parse(text).unwrap())
+        .unwrap_or_else(|e| panic!("v2 file with u74 entries rejected: {e:?}"));
+    assert_eq!(cache.len(), 3);
+    for kind in [TargetKind::Graviton2, TargetKind::SiFiveU74, TargetKind::TeslaV100] {
+        assert_eq!(cache.filter_target(kind).len(), 1, "{kind:?} slice wrong");
+    }
+    for kind in [TargetKind::XeonPlatinum8124M, TargetKind::CortexA53, TargetKind::JetsonXavier] {
+        assert_eq!(cache.filter_target(kind).len(), 0, "{kind:?} slice not empty");
+    }
+    let saved = cache.to_json().to_string();
+    let reloaded = ScheduleCache::from_json(&Json::parse(&saved).unwrap())
+        .unwrap_or_else(|e| panic!("own save rejected: {e:?}"));
+    assert_eq!(reloaded.to_json().to_string(), saved, "save→load→save not byte-stable");
 }
