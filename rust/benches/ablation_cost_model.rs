@@ -1,19 +1,26 @@
-//! Ablation — which cost-model features earn their keep? (DESIGN.md §7)
+//! Ablation — which parts of the cost model earn their keep? (DESIGN.md §7)
 //!
-//! For each CPU feature, zero its coefficient and measure the drop in
-//! rank correlation (Spearman) between static scores and device ground
-//! truth across a held-out operator set. Also compares calibrated vs
-//! latency-table-default coefficients, and ES vs random vs exhaustive
-//! search quality under the same evaluation budget.
+//! Three studies:
 //!
-//! Every coefficient variant is scored from **one** feature pass: the
-//! candidates are lowered and analyzed once into the evaluator's memoized
-//! feature store, and each variant is then a batch of dot products
-//! (`score_batch_with`). The bench reports the measured gap — re-scoring a
-//! variant is orders of magnitude cheaper than the feature pass it reuses.
+//! 1. **Scorer family × target.** Every registered scorer (latency-table
+//!    linear defaults, calibrated linear, the offline-trained quadratic)
+//!    is evaluated on every selected backend against device ground truth
+//!    over a held-out operator grid, reporting Spearman rank correlation
+//!    per scorer per target. Written to `BENCH_scorer_ablation.json` at
+//!    the repo root; the run fails if the learned quadratic scorer does
+//!    not match or beat the calibrated linear scorer on at least one
+//!    target.
+//! 2. **Per-feature ablation** (Graviton2): zero each CPU feature's
+//!    coefficient and measure the rank-correlation drop. Every variant is
+//!    scored from **one** feature pass — candidates are lowered and
+//!    analyzed once into the evaluator's memoized feature store, and each
+//!    variant is then a batch of dot products (`score_batch_with`).
+//! 3. **Search-algorithm ablation**: ES vs random vs exhaustive at an
+//!    equal static-evaluation budget.
 //!
 //! ```bash
 //! cargo bench --bench ablation_cost_model
+//! TUNA_BENCH_FAST=1 cargo bench --bench ablation_cost_model   # 2 targets
 //! ```
 
 mod common;
@@ -21,7 +28,7 @@ mod common;
 use std::time::Instant;
 
 use tuna::analysis::cost::CPU_FEATURES;
-use tuna::analysis::CostModel;
+use tuna::analysis::{CostModel, ScorerSpec};
 use tuna::coordinator::calibrate;
 use tuna::eval::CandidateEvaluator;
 use tuna::isa::TargetKind;
@@ -29,6 +36,7 @@ use tuna::search::{self, EsParams, EvolutionStrategies};
 use tuna::sim::Device;
 use tuna::tir::ops::{Epilogue, OpSpec};
 use tuna::transform::ScheduleConfig;
+use tuna::util::json::Json;
 use tuna::util::stats::spearman;
 
 /// Held-out candidate grid + device ground truth for one operator.
@@ -36,6 +44,38 @@ struct Task {
     op: OpSpec,
     cfgs: Vec<ScheduleConfig>,
     truths: Vec<f64>,
+}
+
+/// Held-out operators — disjoint from the calibration micro-suite.
+fn held_out_ops() -> [OpSpec; 3] {
+    [
+        OpSpec::Matmul { m: 128, n: 128, k: 128, epilogue: Epilogue::None },
+        OpSpec::Conv2d {
+            n: 1, cin: 32, h: 28, w: 28, cout: 32, kh: 3, kw: 3, stride: 1, pad: 1,
+            epilogue: Epilogue::None,
+        },
+        OpSpec::DepthwiseConv2d {
+            n: 1, c: 48, h: 28, w: 28, kh: 3, kw: 3, stride: 1, pad: 1,
+            epilogue: Epilogue::None,
+        },
+    ]
+}
+
+/// Build the held-out grid for `kind`: strided samples of each op's own
+/// config space, priced once on the device simulator.
+fn held_out_tasks(kind: TargetKind, grid: u64) -> Vec<Task> {
+    let device = Device::new(kind);
+    held_out_ops()
+        .iter()
+        .map(|&op| {
+            let space = tuna::transform::config_space(&op, kind);
+            let n = space.size().min(grid);
+            let cfgs: Vec<ScheduleConfig> =
+                (0..n).map(|i| space.from_index(i * space.size() / n)).collect();
+            let truths = cfgs.iter().map(|c| device.run(&op, c).seconds).collect();
+            Task { op, cfgs, truths }
+        })
+        .collect()
 }
 
 fn mean_rank_corr(tasks: &[Task], per_op_scores: &[Vec<f64>]) -> f64 {
@@ -47,36 +87,115 @@ fn mean_rank_corr(tasks: &[Task], per_op_scores: &[Vec<f64>]) -> f64 {
     rhos.iter().sum::<f64>() / rhos.len() as f64
 }
 
+/// Targets for the scorer study. `TUNA_BENCH_TARGETS` wins; the FAST
+/// smoke keeps one CPU and the RISC-V backend; otherwise all six.
+fn scorer_targets() -> Vec<TargetKind> {
+    if std::env::var("TUNA_BENCH_TARGETS").is_ok() {
+        return common::targets();
+    }
+    if std::env::var("TUNA_BENCH_FAST").as_deref() == Ok("1") {
+        vec![TargetKind::Graviton2, TargetKind::SiFiveU74]
+    } else {
+        TargetKind::ALL.to_vec()
+    }
+}
+
+/// One scorer variant of the study: display/wire name plus its model for
+/// a given target.
+fn scorer_variants(kind: TargetKind) -> Vec<(&'static str, CostModel)> {
+    vec![
+        ("linear-default", CostModel::with_default_coeffs(kind)),
+        ("linear-calibrated", calibrate::calibrated_model(kind)),
+        (
+            "quadratic",
+            CostModel::with_scorer(kind, calibrate::calibrated_scorer(kind, ScorerSpec::Quadratic)),
+        ),
+    ]
+}
+
+/// Study 1: rank correlation per scorer per target, persisted as
+/// `BENCH_scorer_ablation.json`.
+fn scorer_ablation() {
+    let grid = if std::env::var("TUNA_BENCH_FAST").as_deref() == Ok("1") { 16 } else { 32 };
+    println!("## Ablation: scorer family x target (held-out ops, grid {grid})\n");
+    println!("{:<16} {:<20} {:>10}", "target", "scorer", "rank-corr");
+
+    let mut target_docs = Vec::new();
+    let mut learned_wins = Vec::new();
+    for kind in scorer_targets() {
+        let tasks = held_out_tasks(kind, grid);
+        let mut rows = Vec::new();
+        for (name, model) in scorer_variants(kind) {
+            let scores: Vec<Vec<f64>> = tasks
+                .iter()
+                .map(|t| t.cfgs.iter().map(|c| model.predict(&t.op, c)).collect())
+                .collect();
+            let rho = mean_rank_corr(&tasks, &scores);
+            assert!(rho.is_finite() && (-1.0..=1.0).contains(&rho), "{name} on {kind:?}: {rho}");
+            println!("{:<16} {:<20} {:>10.3}", kind.wire_name(), name, rho);
+            rows.push((name, rho));
+        }
+        let of = |n: &str| rows.iter().find(|(name, _)| *name == n).unwrap().1;
+        if of("quadratic") >= of("linear-calibrated") {
+            learned_wins.push(kind.wire_name());
+        }
+        target_docs.push(Json::obj(vec![
+            ("target", Json::Str(kind.wire_name().into())),
+            ("held_out_ops", Json::Num(held_out_ops().len() as f64)),
+            (
+                "scorers",
+                Json::Arr(
+                    rows.iter()
+                        .map(|(name, rho)| {
+                            Json::obj(vec![
+                                ("scorer", Json::Str((*name).into())),
+                                ("rank_corr", Json::Num(*rho)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ]));
+    }
+
+    let doc = Json::obj(vec![
+        ("bench", Json::Str("scorer_ablation".into())),
+        (
+            "provenance",
+            Json::Str(
+                "measured by `cargo bench --bench ablation_cost_model`; regenerate in \
+                 place with the same command (the CI learned-scorer smoke runs the \
+                 TUNA_BENCH_FAST=1 form and validates the schema)"
+                    .into(),
+            ),
+        ),
+        ("targets", Json::Arr(target_docs)),
+    ]);
+    let mut text = doc.to_string();
+    text.push('\n');
+    std::fs::write("BENCH_scorer_ablation.json", text).expect("write BENCH_scorer_ablation.json");
+    println!("\nwrote BENCH_scorer_ablation.json");
+
+    // the PR's acceptance bar: the learned scorer earns its place by
+    // ranking at least one backend no worse than the calibrated linear fit
+    assert!(
+        !learned_wins.is_empty(),
+        "quadratic scorer beat linear-calibrated on no target at all"
+    );
+    println!("learned scorer >= linear-calibrated on: {}\n", learned_wins.join(", "));
+}
+
 fn main() {
+    scorer_ablation();
+
     let kind = TargetKind::Graviton2;
     let device = Device::new(kind);
-    let ops = [
-        OpSpec::Matmul { m: 128, n: 128, k: 128, epilogue: Epilogue::None },
-        OpSpec::Conv2d {
-            n: 1, cin: 32, h: 28, w: 28, cout: 32, kh: 3, kw: 3, stride: 1, pad: 1,
-            epilogue: Epilogue::None,
-        },
-        OpSpec::DepthwiseConv2d {
-            n: 1, c: 48, h: 28, w: 28, kh: 3, kw: 3, stride: 1, pad: 1,
-            epilogue: Epilogue::None,
-        },
-    ];
 
     // one evaluator holds the calibrated scorer and the shared feature store
     let ev = CandidateEvaluator::new(calibrate::calibrated_model(kind));
     let base_coeffs = ev.coeffs();
 
-    let tasks: Vec<Task> = ops
-        .iter()
-        .map(|&op| {
-            let space = tuna::transform::config_space(&op, kind);
-            let n = space.size().min(32);
-            let cfgs: Vec<ScheduleConfig> =
-                (0..n).map(|i| space.from_index(i * space.size() / n)).collect();
-            let truths = cfgs.iter().map(|c| device.run(&op, c).seconds).collect();
-            Task { op, cfgs, truths }
-        })
-        .collect();
+    let tasks = held_out_tasks(kind, 32);
 
     // ---- stage 1, exactly once: lower + analyze every candidate ----
     let t0 = Instant::now();

@@ -1,4 +1,4 @@
-//! The two-stage linear hardware cost model: `score = a₀f₀ + a₁f₁ + … + aₙfₙ`.
+//! The two-stage hardware cost model: features, then a swappable scorer.
 //!
 //! Scoring a candidate has two stages with wildly different costs, and this
 //! module keeps them explicit:
@@ -6,29 +6,41 @@
 //! 1. **feature extraction** ([`FeatureExtractor`]) — schedule → lowered
 //!    assembly → the joint IR/assembly analyses in this module. This is the
 //!    expensive stage (micro- to milliseconds per candidate) and depends
-//!    only on the target, never on the model's coefficients;
-//! 2. **linear scoring** ([`LinearScorer`]) — the dot product with the
-//!    per-architecture coefficients. Nanoseconds, and the *only* stage that
-//!    changes under calibration, ablation, or what-if coefficient sweeps.
+//!    only on the target, never on the model's parameters;
+//! 2. **scoring** ([`Scorer`]) — a cheap function of the feature vector.
+//!    Nanoseconds, and the *only* stage that changes under calibration,
+//!    ablation, or what-if sweeps. Two implementations ship: the paper's
+//!    [`LinearScorer`] (`score = Σ aᵢ·fᵢ`, latency-table defaults refined
+//!    by NNLS) and the learned [`QuadraticScorer`] (log-space
+//!    feature-crossing ridge fit, grown from the AutoTVM baseline's
+//!    surrogate) — with [`AnyScorer`] as the closed transport enum the
+//!    cache, wire protocol and CLI construct from a [`ScorerSpec`].
 //!
-//! The coefficients are derived from instruction latency tables and refined
-//! by NNLS against microbenchmark profiles (the paper's "hardware
-//! instruction latency and empirical profiling data"). The model predicts
-//! *relative* performance — its job is to rank the candidates of a schedule
-//! search, not to forecast wall-clock.
+//! Both models predict *relative* performance — their job is to rank the
+//! candidates of a schedule search, not to forecast wall-clock.
 //!
 //! [`CostModel`] is the thin composition of the two stages and keeps the
 //! historical single-call API (`predict` = extract + score, bit-identical
 //! to the staged path). The candidate evaluator in [`crate::eval`] exploits
 //! the split directly: it memoizes stage-1 feature vectors so stage 2 can
-//! be re-run under fresh coefficients without re-lowering anything.
+//! be re-run under a fresh scorer without re-lowering anything.
+//!
+//! Trained scorers serialize to versioned JSON files
+//! ([`AnyScorer::save`] / [`AnyScorer::load`], written by
+//! `tuna train-scorer`) with the same atomic-rename discipline and typed
+//! load errors as the schedule cache — a scorer file never loads silently
+//! wrong.
 
 use super::{cache, gpu_ptx, gpu_tlp, ilp, loop_map, simd_count};
 use crate::codegen::{self, Lowering};
 use crate::isa::march::{GpuArch, RiscvArch, Target};
 use crate::isa::{AsmProgram, MicroArch, Opcode, TargetKind};
-use crate::tir::{ops::OpSpec, TirFunc};
+use crate::tir::{ops::{Epilogue, OpSpec}, TirFunc};
 use crate::transform::ScheduleConfig;
+use crate::util::json::Json;
+use std::io;
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
 /// CPU feature names (order fixed — coefficients index into it).
@@ -63,15 +75,39 @@ pub const RISCV_FEATURES: [&str; 6] = [
     "ilp_cycles",
 ];
 
-/// Typed feature-extraction failure. The evaluation pipeline propagates
-/// this instead of panicking mid-search: a search over thousands of
-/// candidates should surface *which* candidate was unanalyzable, not crash
-/// the host thread pool.
+/// Registry of scorer names the crate can construct — one entry per
+/// [`ScorerSpec`] variant. Wire flags (`--scorer`), scorer files and the
+/// conformance table all resolve against this list, so an unknown name is
+/// a typed [`CostError::UnknownScorer`] everywhere, never a panic.
+pub const SCORER_NAMES: [&str; 2] = ["linear", "quadratic"];
+
+/// On-disk format version of serialized scorer files. Bump on layout
+/// changes; loaders reject unknown versions rather than misread them.
+pub const SCORER_FILE_VERSION: f64 = 1.0;
+
+/// Typed cost-model failure. The evaluation pipeline propagates these
+/// instead of panicking mid-search: a search over thousands of candidates
+/// should surface *which* candidate was unanalyzable (and a daemon should
+/// surface *why* a recalibration was rejected), not crash the host thread
+/// pool.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum CostError {
     /// A program reached GPU feature extraction without kernel launch
     /// metadata (no grid/block configuration was emitted).
     MissingLaunch { func: String },
+    /// A scorer name outside [`SCORER_NAMES`].
+    UnknownScorer { name: String },
+    /// A coefficient/parameter vector of the wrong length for the scorer
+    /// or target it was offered to.
+    CoeffDim { expected: usize, got: usize },
+    /// The scorer's parameters are not raw feature coefficients, so an
+    /// online coefficient swap (`recalibrate` over the socket) cannot be
+    /// applied to it — retrain offline with `tuna train-scorer` instead.
+    CoeffSwapUnsupported { scorer: &'static str },
+    /// A serialized scorer file failed to load: unreadable, invalid JSON
+    /// (including any truncation), unsupported version, wrong target, or a
+    /// malformed parameter table.
+    ScorerFile { detail: String },
 }
 
 impl std::fmt::Display for CostError {
@@ -79,6 +115,22 @@ impl std::fmt::Display for CostError {
         match self {
             CostError::MissingLaunch { func } => {
                 write!(f, "GPU program {func:?} has no launch configuration")
+            }
+            CostError::UnknownScorer { name } => {
+                write!(f, "unknown scorer {name:?} (known: {})", SCORER_NAMES.join(", "))
+            }
+            CostError::CoeffDim { expected, got } => {
+                write!(f, "coefficient vector has {got} entries, expected {expected}")
+            }
+            CostError::CoeffSwapUnsupported { scorer } => {
+                write!(
+                    f,
+                    "{scorer} scorer does not accept raw coefficient swaps; \
+                     retrain it offline with `tuna train-scorer`"
+                )
+            }
+            CostError::ScorerFile { detail } => {
+                write!(f, "scorer file unusable: {detail}")
             }
         }
     }
@@ -247,9 +299,64 @@ impl FeatureExtractor {
     }
 }
 
-/// Stage 2: the linear model proper. Owns the coefficients and the fitting
-/// logic — swapping in a new `LinearScorer` re-ranks already-extracted
-/// features without touching stage 1.
+/// Stage 2 of the cost model: anything that maps a memoized
+/// [`FeatureVector`] to a pseudo-cycle score (lower is better).
+///
+/// The contract every scorer must satisfy to plug into the
+/// evaluator → coordinator → cache → serve stack (pinned, scorer × target,
+/// by `rust/tests/scorer_conformance.rs`):
+///
+/// * **purity** — `score` depends only on the feature vector and the
+///   scorer's own parameters; same inputs, same bits, so batch scoring,
+///   cache re-ranking and shard workers all agree with a fresh scorer;
+/// * **positivity** — scores of well-formed feature vectors are finite and
+///   `> 0` (searches minimize; `0`/NaN would wedge top-k ordering);
+/// * **introspection** — [`Scorer::params`] exposes the learned parameter
+///   vector for serialization, and [`Scorer::linear_coeffs`] exposes raw
+///   feature coefficients exactly when the scorer is a plain dot product
+///   (the online-recalibration wire path keys off this);
+/// * **typed swap policy** — [`Scorer::try_set_coeffs`] either applies a
+///   feature-space coefficient vector or explains why it cannot
+///   ([`CostError::CoeffSwapUnsupported`] / [`CostError::CoeffDim`]) —
+///   never panics, never half-applies.
+pub trait Scorer: Send + Sync + std::fmt::Debug {
+    /// Registry name — one of [`SCORER_NAMES`].
+    fn name(&self) -> &'static str;
+
+    /// Dimensionality of the feature space this scorer consumes.
+    fn feature_dim(&self) -> usize;
+
+    /// The learned parameter vector (for serialization and introspection —
+    /// feature coefficients for the linear model, φ-space weights for the
+    /// quadratic one).
+    fn params(&self) -> &[f64];
+
+    /// Raw feature coefficients, exactly when scoring is a plain dot
+    /// product; `None` for nonlinear scorers.
+    fn linear_coeffs(&self) -> Option<&[f64]> {
+        None
+    }
+
+    /// Score one feature vector (pseudo-cycles; lower is better).
+    fn score(&self, fv: &FeatureVector) -> f64;
+
+    /// Batch scoring over already-extracted features (the memoized-store
+    /// fast path; the default is a scalar loop).
+    fn score_all(&self, fvs: &[FeatureVector]) -> Vec<f64> {
+        fvs.iter().map(|fv| self.score(fv)).collect()
+    }
+
+    /// Replace the feature-space coefficients, or say why that is not a
+    /// meaningful operation for this scorer.
+    fn try_set_coeffs(&mut self, coeffs: Vec<f64>) -> Result<(), CostError>;
+
+    /// Refit against `(features, measured cycles)` samples.
+    fn calibrate(&mut self, samples: &[(FeatureVector, f64)]);
+}
+
+/// Stage 2, the paper's model: the linear scorer. Owns the coefficients
+/// and the NNLS fitting logic — swapping in a new `LinearScorer` re-ranks
+/// already-extracted features without touching stage 1.
 #[derive(Debug, Clone, PartialEq)]
 pub struct LinearScorer {
     coeffs: Vec<f64>,
@@ -296,37 +403,470 @@ impl LinearScorer {
     }
 }
 
-/// The per-architecture linear model: stage 1 + stage 2 composed behind
-/// the historical one-call API. `predict` is bit-identical to running the
-/// stages by hand.
+impl Scorer for LinearScorer {
+    fn name(&self) -> &'static str {
+        "linear"
+    }
+
+    fn feature_dim(&self) -> usize {
+        self.coeffs.len()
+    }
+
+    fn params(&self) -> &[f64] {
+        &self.coeffs
+    }
+
+    fn linear_coeffs(&self) -> Option<&[f64]> {
+        Some(&self.coeffs)
+    }
+
+    fn score(&self, fv: &FeatureVector) -> f64 {
+        LinearScorer::score(self, fv)
+    }
+
+    fn try_set_coeffs(&mut self, coeffs: Vec<f64>) -> Result<(), CostError> {
+        if coeffs.len() != self.coeffs.len() {
+            return Err(CostError::CoeffDim { expected: self.coeffs.len(), got: coeffs.len() });
+        }
+        self.coeffs = coeffs;
+        Ok(())
+    }
+
+    fn calibrate(&mut self, samples: &[(FeatureVector, f64)]) {
+        LinearScorer::calibrate(self, samples);
+    }
+}
+
+/// The learned nonlinear scorer: a ridge fit over quadratic feature
+/// crossings in log space — the AutoTVM baseline's surrogate
+/// ([`crate::autotvm::surrogate::Surrogate`]) transplanted from one-hot
+/// knob encodings onto Tuna's hardware feature vectors.
+///
+/// The basis is `φ(f) = [1, z₁ … z_d, zᵢ·zⱼ for i ≤ j]` with
+/// `zᵢ = ln(1 + fᵢ)` (raw features span ~9 orders of magnitude; log1p
+/// keeps the normal equations well-conditioned), fit against `ln(cycles)`
+/// so the prediction `exp(w·φ)` is always finite and strictly positive.
+/// Cross terms let the model price interactions a linear fit cannot —
+/// e.g. memory traffic hurting more when ILP is already the bottleneck.
+///
+/// Training is offline and fully deterministic (deterministic sampling +
+/// deterministic normal-equation solve — no RNG in the fit), which is what
+/// makes `tuna train-scorer` byte-reproducible and fleet merges under this
+/// scorer bit-identical to unsharded tuning.
+#[derive(Debug, Clone, PartialEq)]
+pub struct QuadraticScorer {
+    /// Feature-space dimensionality d (φ-space is `1 + d + d(d+1)/2`).
+    dim: usize,
+    /// φ-space weights; all-zero ⇒ the constant pre-fit score `e⁰ = 1`.
+    weights: Vec<f64>,
+}
+
+impl QuadraticScorer {
+    /// φ-space length for a d-dimensional feature space.
+    pub fn param_len(dim: usize) -> usize {
+        1 + dim + dim * (dim + 1) / 2
+    }
+
+    /// An unfit scorer (scores every candidate 1.0 until [`Self::fit`]).
+    pub fn zeroed(dim: usize) -> Self {
+        QuadraticScorer { dim, weights: vec![0.0; Self::param_len(dim)] }
+    }
+
+    /// Rebuild from serialized weights (validated against `dim`).
+    pub fn from_weights(dim: usize, weights: Vec<f64>) -> Result<Self, CostError> {
+        if weights.len() != Self::param_len(dim) {
+            return Err(CostError::CoeffDim {
+                expected: Self::param_len(dim),
+                got: weights.len(),
+            });
+        }
+        Ok(QuadraticScorer { dim, weights })
+    }
+
+    /// A deterministically pre-trained scorer for `kind`: fit on a small
+    /// fixed grid of one calibration shape priced by the backend's own
+    /// simulator. This is the uncalibrated-construction path (fleet
+    /// workers, `--uncalibrated` coordinators, conformance tests) — cheap,
+    /// seedless, and bit-identical across processes.
+    pub fn pretrained(kind: TargetKind) -> Self {
+        let lw = codegen::lowering_for(kind);
+        let op = OpSpec::Matmul { m: 32, n: 32, k: 32, epilogue: Epilogue::None };
+        let space = lw.space(&op);
+        let n = space.size().min(16).max(1);
+        let mut samples = Vec::new();
+        for i in 0..n {
+            let cfg = space.from_index(i * space.size() / n);
+            let f = lw.schedule(&op, &cfg);
+            let prog = lw.lower(&f);
+            let Ok(fv) = lw.extract(&f, &prog) else { continue };
+            // nanoseconds, not cycles: the log-space fit absorbs the unit
+            // as an additive constant, so ranking is unaffected
+            let ns = lw.simulate(&f, &prog).seconds * 1e9;
+            samples.push((fv, ns));
+        }
+        let mut s = Self::zeroed(lw.feature_names().len());
+        s.fit(&samples);
+        s
+    }
+
+    /// The quadratic basis of one feature vector.
+    fn phi(&self, fv: &FeatureVector) -> Vec<f64> {
+        let z: Vec<f64> = fv.values.iter().map(|v| v.max(0.0).ln_1p()).collect();
+        let mut phi = Vec::with_capacity(Self::param_len(z.len()));
+        phi.push(1.0);
+        phi.extend_from_slice(&z);
+        for i in 0..z.len() {
+            for j in i..z.len() {
+                phi.push(z[i] * z[j]);
+            }
+        }
+        phi
+    }
+
+    pub fn weights(&self) -> &[f64] {
+        &self.weights
+    }
+
+    /// `exp(w·φ(f))`, clamped in the exponent so the score stays finite
+    /// even under an adversarial weight file.
+    pub fn score(&self, fv: &FeatureVector) -> f64 {
+        let phi = self.phi(fv);
+        let dot: f64 = self.weights.iter().zip(&phi).map(|(w, p)| w * p).sum();
+        dot.clamp(-700.0, 700.0).exp()
+    }
+
+    /// Refit from scratch against `(features, measured cycles)` samples:
+    /// ridge regression (λ = 1e-2, matching the AutoTVM surrogate) on
+    /// `ln(cycles)`. Fewer than 3 samples, or a degenerate solve, keeps
+    /// the current weights — an under-determined refit must not wipe a
+    /// trained model.
+    pub fn fit(&mut self, samples: &[(FeatureVector, f64)]) {
+        if samples.len() < 3 {
+            return;
+        }
+        let x: Vec<Vec<f64>> = samples.iter().map(|(f, _)| self.phi(f)).collect();
+        let y: Vec<f64> = samples.iter().map(|(_, c)| c.max(1e-12).ln()).collect();
+        let w = crate::util::stats::ridge_fit(&x, &y, 1e-2);
+        if w.len() == self.weights.len() && w.iter().any(|&c| c != 0.0) {
+            self.weights = w;
+        }
+    }
+}
+
+impl Scorer for QuadraticScorer {
+    fn name(&self) -> &'static str {
+        "quadratic"
+    }
+
+    fn feature_dim(&self) -> usize {
+        self.dim
+    }
+
+    fn params(&self) -> &[f64] {
+        &self.weights
+    }
+
+    fn score(&self, fv: &FeatureVector) -> f64 {
+        QuadraticScorer::score(self, fv)
+    }
+
+    fn try_set_coeffs(&mut self, _coeffs: Vec<f64>) -> Result<(), CostError> {
+        Err(CostError::CoeffSwapUnsupported { scorer: "quadratic" })
+    }
+
+    fn calibrate(&mut self, samples: &[(FeatureVector, f64)]) {
+        self.fit(samples);
+    }
+}
+
+/// Which scorer to construct — the parsed form of a `--scorer` flag.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ScorerSpec {
+    Linear,
+    Quadratic,
+}
+
+impl ScorerSpec {
+    pub const ALL: [ScorerSpec; 2] = [ScorerSpec::Linear, ScorerSpec::Quadratic];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            ScorerSpec::Linear => "linear",
+            ScorerSpec::Quadratic => "quadratic",
+        }
+    }
+
+    /// Strict inverse of [`Self::name`]; anything else is a typed
+    /// [`CostError::UnknownScorer`].
+    pub fn parse(name: &str) -> Result<ScorerSpec, CostError> {
+        Self::ALL
+            .into_iter()
+            .find(|s| s.name() == name)
+            .ok_or_else(|| CostError::UnknownScorer { name: name.to_string() })
+    }
+
+    /// Deterministically construct this scorer for `kind` without any
+    /// calibration run: latency-table defaults for the linear model, the
+    /// fixed-grid pre-training for the quadratic one.
+    pub fn default_scorer(self, kind: TargetKind) -> AnyScorer {
+        match self {
+            ScorerSpec::Linear => AnyScorer::Linear(LinearScorer::default_for(&kind.build())),
+            ScorerSpec::Quadratic => AnyScorer::Quadratic(QuadraticScorer::pretrained(kind)),
+        }
+    }
+}
+
+impl std::fmt::Display for ScorerSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// The closed set of scorers the crate ships, as one transportable value —
+/// what [`CostModel`] and the candidate evaluator actually hold. The
+/// [`Scorer`] trait is the contract; this enum is the concrete transport
+/// that stays `Clone + PartialEq` (serve-state snapshots and bit-identity
+/// tests compare scorers structurally).
+#[derive(Debug, Clone, PartialEq)]
+pub enum AnyScorer {
+    Linear(LinearScorer),
+    Quadratic(QuadraticScorer),
+}
+
+impl From<LinearScorer> for AnyScorer {
+    fn from(s: LinearScorer) -> Self {
+        AnyScorer::Linear(s)
+    }
+}
+
+impl From<QuadraticScorer> for AnyScorer {
+    fn from(s: QuadraticScorer) -> Self {
+        AnyScorer::Quadratic(s)
+    }
+}
+
+impl AnyScorer {
+    fn inner(&self) -> &dyn Scorer {
+        match self {
+            AnyScorer::Linear(s) => s,
+            AnyScorer::Quadratic(s) => s,
+        }
+    }
+
+    fn inner_mut(&mut self) -> &mut dyn Scorer {
+        match self {
+            AnyScorer::Linear(s) => s,
+            AnyScorer::Quadratic(s) => s,
+        }
+    }
+
+    pub fn spec(&self) -> ScorerSpec {
+        match self {
+            AnyScorer::Linear(_) => ScorerSpec::Linear,
+            AnyScorer::Quadratic(_) => ScorerSpec::Quadratic,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        self.inner().name()
+    }
+
+    pub fn feature_dim(&self) -> usize {
+        self.inner().feature_dim()
+    }
+
+    pub fn params(&self) -> &[f64] {
+        self.inner().params()
+    }
+
+    pub fn linear_coeffs(&self) -> Option<&[f64]> {
+        self.inner().linear_coeffs()
+    }
+
+    pub fn score(&self, fv: &FeatureVector) -> f64 {
+        self.inner().score(fv)
+    }
+
+    pub fn try_set_coeffs(&mut self, coeffs: Vec<f64>) -> Result<(), CostError> {
+        self.inner_mut().try_set_coeffs(coeffs)
+    }
+
+    pub fn calibrate(&mut self, samples: &[(FeatureVector, f64)]) {
+        self.inner_mut().calibrate(samples);
+    }
+
+    /// Serialize to the versioned scorer-file document. Key order is fixed
+    /// (BTreeMap) and numbers print shortest-round-trip, so the bytes are
+    /// a pure function of the parameters — the byte-stability the
+    /// round-trip and train-determinism tests pin.
+    pub fn to_json(&self, kind: TargetKind) -> Json {
+        Json::obj(vec![
+            ("version", Json::Num(SCORER_FILE_VERSION)),
+            ("scorer", Json::Str(self.name().to_string())),
+            ("target", Json::Str(kind.wire_name().to_string())),
+            ("dim", Json::Num(self.feature_dim() as f64)),
+            ("params", Json::Arr(self.params().iter().map(|&w| Json::Num(w)).collect())),
+        ])
+    }
+
+    /// Deserialize a scorer-file document. Every failure mode is a typed
+    /// [`CostError`]: unsupported version, unknown target or scorer name,
+    /// ragged or non-finite parameters — never a panic, never a silently
+    /// mis-sized model.
+    pub fn from_json(j: &Json) -> Result<(TargetKind, AnyScorer), CostError> {
+        let malformed = |d: &str| CostError::ScorerFile { detail: d.to_string() };
+        match j.get("version").and_then(Json::as_f64) {
+            Some(v) if v == SCORER_FILE_VERSION => {}
+            Some(v) => return Err(malformed(&format!("unsupported version {v}"))),
+            None => return Err(malformed("missing numeric 'version' field")),
+        }
+        let target = j
+            .get("target")
+            .and_then(Json::as_str)
+            .ok_or_else(|| malformed("missing 'target' field"))?;
+        let kind = TargetKind::from_wire(target)
+            .ok_or_else(|| malformed(&format!("unknown target {target:?}")))?;
+        let name = j
+            .get("scorer")
+            .and_then(Json::as_str)
+            .ok_or_else(|| malformed("missing 'scorer' field"))?;
+        let spec = ScorerSpec::parse(name)?;
+        let dim = j
+            .get("dim")
+            .and_then(Json::as_f64)
+            .filter(|d| d.fract() == 0.0 && *d >= 1.0)
+            .ok_or_else(|| malformed("missing or non-integral 'dim' field"))?
+            as usize;
+        let expected_dim = codegen::lowering_for(kind).feature_names().len();
+        if dim != expected_dim {
+            return Err(CostError::CoeffDim { expected: expected_dim, got: dim });
+        }
+        let params = j
+            .get("params")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| malformed("missing 'params' array"))?
+            .iter()
+            .map(|v| v.as_f64().filter(|w| w.is_finite()))
+            .collect::<Option<Vec<f64>>>()
+            .ok_or_else(|| malformed("non-numeric or non-finite parameter"))?;
+        let scorer = match spec {
+            ScorerSpec::Linear => {
+                if params.len() != dim {
+                    return Err(CostError::CoeffDim { expected: dim, got: params.len() });
+                }
+                AnyScorer::Linear(LinearScorer::new(params))
+            }
+            ScorerSpec::Quadratic => {
+                AnyScorer::Quadratic(QuadraticScorer::from_weights(dim, params)?)
+            }
+        };
+        Ok((kind, scorer))
+    }
+
+    /// Persist to `path` with the schedule cache's atomic-write discipline:
+    /// same-directory temp file (pid + sequence suffix), then rename — a
+    /// crash mid-save leaves the old complete file, never a torn one.
+    pub fn save(&self, kind: TargetKind, path: &Path) -> io::Result<()> {
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
+        }
+        static SEQ: AtomicU64 = AtomicU64::new(0);
+        let file_name = match path.file_name() {
+            Some(n) => n.to_string_lossy().into_owned(),
+            None => "scorer".to_string(),
+        };
+        let tmp = path.with_file_name(format!(
+            "{file_name}.tmp.{}.{}",
+            std::process::id(),
+            SEQ.fetch_add(1, Ordering::Relaxed)
+        ));
+        std::fs::write(&tmp, self.to_json(kind).to_string())?;
+        std::fs::rename(&tmp, path).inspect_err(|_| {
+            let _ = std::fs::remove_file(&tmp);
+        })
+    }
+
+    /// Load from `path`; every failure mode (unreadable file, truncated or
+    /// invalid JSON, bad document) is a typed [`CostError`].
+    pub fn load(path: &Path) -> Result<(TargetKind, AnyScorer), CostError> {
+        let text = std::fs::read_to_string(path).map_err(|e| CostError::ScorerFile {
+            detail: format!("unreadable {}: {e}", path.display()),
+        })?;
+        let j = Json::parse(&text)
+            .map_err(|e| CostError::ScorerFile { detail: format!("invalid JSON: {e}") })?;
+        Self::from_json(&j)
+    }
+}
+
+impl Scorer for AnyScorer {
+    fn name(&self) -> &'static str {
+        AnyScorer::name(self)
+    }
+
+    fn feature_dim(&self) -> usize {
+        AnyScorer::feature_dim(self)
+    }
+
+    fn params(&self) -> &[f64] {
+        AnyScorer::params(self)
+    }
+
+    fn linear_coeffs(&self) -> Option<&[f64]> {
+        AnyScorer::linear_coeffs(self)
+    }
+
+    fn score(&self, fv: &FeatureVector) -> f64 {
+        AnyScorer::score(self, fv)
+    }
+
+    fn try_set_coeffs(&mut self, coeffs: Vec<f64>) -> Result<(), CostError> {
+        AnyScorer::try_set_coeffs(self, coeffs)
+    }
+
+    fn calibrate(&mut self, samples: &[(FeatureVector, f64)]) {
+        AnyScorer::calibrate(self, samples);
+    }
+}
+
+/// The per-architecture cost model: stage 1 + stage 2 composed behind the
+/// historical one-call API. `predict` is bit-identical to running the
+/// stages by hand, whichever scorer is installed.
 #[derive(Debug, Clone)]
 pub struct CostModel {
     extractor: FeatureExtractor,
-    scorer: LinearScorer,
+    scorer: AnyScorer,
 }
 
 impl CostModel {
-    /// Model with latency-table-derived default coefficients (usable
-    /// before calibration; calibration replaces them).
+    /// Linear model with latency-table-derived default coefficients
+    /// (usable before calibration; calibration replaces them).
     pub fn with_default_coeffs(kind: TargetKind) -> Self {
         let extractor = FeatureExtractor::new(kind);
-        let scorer = LinearScorer::default_for(extractor.target());
+        let scorer = AnyScorer::Linear(LinearScorer::default_for(extractor.target()));
         CostModel { extractor, scorer }
     }
 
-    /// Model with explicit (calibrated) coefficients.
+    /// Linear model with explicit (calibrated) coefficients.
     pub fn with_coeffs(kind: TargetKind, coeffs: Vec<f64>) -> Self {
-        CostModel { extractor: FeatureExtractor::new(kind), scorer: LinearScorer::new(coeffs) }
+        Self::with_scorer(kind, LinearScorer::new(coeffs))
+    }
+
+    /// Model over an explicit scorer (any [`AnyScorer`] variant — trained,
+    /// loaded from a scorer file, or a [`ScorerSpec::default_scorer`]).
+    pub fn with_scorer(kind: TargetKind, scorer: impl Into<AnyScorer>) -> Self {
+        CostModel { extractor: FeatureExtractor::new(kind), scorer: scorer.into() }
     }
 
     /// Recompose from previously split stages.
-    pub fn from_parts(extractor: FeatureExtractor, scorer: LinearScorer) -> Self {
-        CostModel { extractor, scorer }
+    pub fn from_parts(extractor: FeatureExtractor, scorer: impl Into<AnyScorer>) -> Self {
+        CostModel { extractor, scorer: scorer.into() }
     }
 
     /// Split into the two stages (the candidate evaluator holds them
-    /// separately so coefficients can change under a shared feature memo).
-    pub fn into_parts(self) -> (FeatureExtractor, LinearScorer) {
+    /// separately so the scorer can change under a shared feature memo).
+    pub fn into_parts(self) -> (FeatureExtractor, AnyScorer) {
         (self.extractor, self.scorer)
     }
 
@@ -342,15 +882,17 @@ impl CostModel {
         &self.extractor
     }
 
-    pub fn scorer(&self) -> &LinearScorer {
+    pub fn scorer(&self) -> &AnyScorer {
         &self.scorer
     }
 
+    /// The scorer's learned parameter vector — feature coefficients for
+    /// the linear model (the historical meaning of this accessor).
     pub fn coeffs(&self) -> &[f64] {
-        self.scorer.coeffs()
+        self.scorer.params()
     }
 
-    /// `score = Σ aᵢ·fᵢ` — lower is better (pseudo-cycles).
+    /// Stage 2 on an extracted vector — lower is better (pseudo-cycles).
     pub fn score(&self, fv: &FeatureVector) -> f64 {
         self.scorer.score(fv)
     }
@@ -511,5 +1053,137 @@ mod tests {
         let ys: Vec<f64> = samples.iter().map(|(_, y)| *y).collect();
         let r = crate::util::stats::pearson(&preds, &ys);
         assert!(r > 0.95, "calibration fit r={r}");
+    }
+
+    /// The quadratic scorer is a pure deterministic function: two
+    /// independently pre-trained instances agree bitwise, and every score
+    /// over a real schedule space is finite and strictly positive.
+    #[test]
+    fn quadratic_scorer_is_deterministic_finite_positive() {
+        for kind in [TargetKind::Graviton2, TargetKind::TeslaV100, TargetKind::SiFiveU74] {
+            let a = QuadraticScorer::pretrained(kind);
+            let b = QuadraticScorer::pretrained(kind);
+            assert_eq!(a, b, "{kind:?}: pretraining is not deterministic");
+            let ex = FeatureExtractor::new(kind);
+            assert_eq!(a.feature_dim(), ex.dim(), "{kind:?}: dim mismatch");
+            let op = OpSpec::Matmul { m: 48, n: 48, k: 32, epilogue: Epilogue::None };
+            let space = transform::config_space(&op, kind);
+            for i in 0..space.size().min(12) {
+                let fv = ex.features(&op, &space.from_index(i));
+                let s = a.score(&fv);
+                assert!(s.is_finite() && s > 0.0, "{kind:?}: score {s}");
+                assert_eq!(s.to_bits(), b.score(&fv).to_bits(), "{kind:?}: impure score");
+            }
+        }
+    }
+
+    /// Swap policy: linear accepts matching coefficients and rejects a
+    /// ragged vector with a typed error; quadratic rejects any raw swap
+    /// with [`CostError::CoeffSwapUnsupported`] — and a rejected swap
+    /// leaves the scorer bitwise untouched.
+    #[test]
+    fn coeff_swap_policy_is_typed_and_non_poisoning() {
+        let mut lin = AnyScorer::Linear(LinearScorer::new(vec![1.0, 2.0, 3.0]));
+        assert_eq!(
+            lin.try_set_coeffs(vec![1.0]),
+            Err(CostError::CoeffDim { expected: 3, got: 1 })
+        );
+        assert_eq!(lin.params(), &[1.0, 2.0, 3.0], "failed swap mutated the scorer");
+        assert_eq!(lin.try_set_coeffs(vec![4.0, 5.0, 6.0]), Ok(()));
+        assert_eq!(lin.params(), &[4.0, 5.0, 6.0]);
+
+        let before = QuadraticScorer::pretrained(TargetKind::Graviton2);
+        let mut quad = AnyScorer::Quadratic(before.clone());
+        let dim = before.feature_dim();
+        assert_eq!(
+            quad.try_set_coeffs(vec![1.0; dim]),
+            Err(CostError::CoeffSwapUnsupported { scorer: "quadratic" })
+        );
+        assert_eq!(quad, AnyScorer::Quadratic(before), "rejected swap mutated the scorer");
+    }
+
+    /// Scorer files are byte-stable: serialize → parse → serialize is a
+    /// fixed point, and save → load → save reproduces the file bytes for
+    /// every scorer variant.
+    #[test]
+    fn scorer_file_roundtrip_is_byte_stable() {
+        let kind = TargetKind::SiFiveU74;
+        for spec in ScorerSpec::ALL {
+            let scorer = spec.default_scorer(kind);
+            let first = scorer.to_json(kind).to_string();
+            let (back_kind, back) = AnyScorer::from_json(&Json::parse(&first).unwrap())
+                .unwrap_or_else(|e| panic!("{spec}: round trip failed: {e}"));
+            assert_eq!(back_kind, kind);
+            assert_eq!(back, scorer, "{spec}: parameters did not survive the document");
+            assert_eq!(back.to_json(kind).to_string(), first, "{spec}: not a fixed point");
+
+            let path = std::env::temp_dir().join(format!(
+                "tuna_scorer_rt_{}_{}.json",
+                spec,
+                std::process::id()
+            ));
+            scorer.save(kind, &path).unwrap();
+            let bytes = std::fs::read_to_string(&path).unwrap();
+            let (_, loaded) = AnyScorer::load(&path).unwrap();
+            loaded.save(kind, &path).unwrap();
+            let bytes2 = std::fs::read_to_string(&path).unwrap();
+            let _ = std::fs::remove_file(&path);
+            assert_eq!(bytes, bytes2, "{spec}: save→load→save not bit-identical");
+        }
+    }
+
+    /// Malformed scorer inputs are typed errors, never panics: unknown
+    /// names, bad versions, ragged parameter tables, missing files.
+    #[test]
+    fn scorer_failure_modes_are_typed() {
+        assert_eq!(
+            ScorerSpec::parse("mlp"),
+            Err(CostError::UnknownScorer { name: "mlp".to_string() })
+        );
+        for name in SCORER_NAMES {
+            assert_eq!(ScorerSpec::parse(name).map(|s| s.name()), Ok(name));
+        }
+
+        let kind = TargetKind::Graviton2;
+        let good = ScorerSpec::Linear.default_scorer(kind).to_json(kind);
+        let mut wrong_version = good.clone();
+        if let Json::Obj(m) = &mut wrong_version {
+            m.insert("version".into(), Json::Num(99.0));
+        }
+        assert!(matches!(
+            AnyScorer::from_json(&wrong_version),
+            Err(CostError::ScorerFile { .. })
+        ));
+        let mut ragged = good.clone();
+        if let Json::Obj(m) = &mut ragged {
+            m.insert("params".into(), Json::Arr(vec![Json::Num(1.0)]));
+        }
+        assert!(matches!(AnyScorer::from_json(&ragged), Err(CostError::CoeffDim { .. })));
+        assert!(matches!(
+            QuadraticScorer::from_weights(6, vec![0.0; 3]),
+            Err(CostError::CoeffDim { expected: 28, got: 3 })
+        ));
+        assert!(matches!(
+            AnyScorer::load(Path::new("/nonexistent/tuna/scorer.json")),
+            Err(CostError::ScorerFile { .. })
+        ));
+    }
+
+    /// `CostModel::with_scorer(quadratic)` predicts bit-identically to the
+    /// hand-staged extract → score path — the composition contract holds
+    /// for nonlinear scorers too.
+    #[test]
+    fn quadratic_staged_path_matches_predict_bitwise() {
+        let kind = TargetKind::Graviton2;
+        let cm = CostModel::with_scorer(kind, QuadraticScorer::pretrained(kind));
+        let ex = FeatureExtractor::new(kind);
+        let scorer = QuadraticScorer::pretrained(kind);
+        let op = OpSpec::Matmul { m: 64, n: 64, k: 32, epilogue: Epilogue::None };
+        let space = transform::config_space(&op, kind);
+        for i in 0..space.size().min(16) {
+            let cfg = space.from_index(i);
+            let staged = scorer.score(&ex.try_features(&op, &cfg).unwrap());
+            assert_eq!(staged.to_bits(), cm.predict(&op, &cfg).to_bits());
+        }
     }
 }

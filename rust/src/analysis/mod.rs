@@ -25,5 +25,8 @@ pub mod ilp;
 pub mod loop_map;
 pub mod simd_count;
 
-pub use cost::{CostError, CostModel, FeatureExtractor, FeatureVector, LinearScorer};
+pub use cost::{
+    AnyScorer, CostError, CostModel, FeatureExtractor, FeatureVector, LinearScorer,
+    QuadraticScorer, Scorer, ScorerSpec,
+};
 pub use loop_map::LoopMap;

@@ -15,7 +15,9 @@
 //! later searches use, and refitting against the same samples re-runs only
 //! the NNLS solve, never the lowering.
 
-use crate::analysis::cost::FeatureVector;
+use crate::analysis::cost::{
+    AnyScorer, FeatureVector, LinearScorer, QuadraticScorer, ScorerSpec,
+};
 use crate::analysis::CostModel;
 use crate::eval::CandidateEvaluator;
 use crate::isa::TargetKind;
@@ -24,6 +26,10 @@ use crate::tir::ops::{Epilogue, OpSpec};
 use crate::transform;
 use std::collections::HashMap;
 use std::sync::{Mutex, OnceLock};
+
+/// The default sampling seed for calibration and offline scorer training
+/// (`tuna train-scorer --seed` overrides it).
+pub const DEFAULT_TRAIN_SEED: u64 = 0xCA11B;
 
 /// Calibration micro-suite: deliberately small and disjoint from
 /// `figure_op_suite()` and all network shapes.
@@ -50,9 +56,19 @@ const SAMPLES_PER_OP: u64 = 24;
 /// (stage 1, through `ev`'s feature store) with its simulated device
 /// cycles. The sample set is deterministic for a given target.
 pub fn calibration_samples(ev: &CandidateEvaluator) -> Vec<(FeatureVector, f64)> {
+    calibration_samples_seeded(ev, DEFAULT_TRAIN_SEED)
+}
+
+/// [`calibration_samples`] under an explicit sampling seed — the substrate
+/// of `tuna train-scorer`, whose byte-reproducibility contract is "same
+/// seed, same serialized model".
+pub fn calibration_samples_seeded(
+    ev: &CandidateEvaluator,
+    seed: u64,
+) -> Vec<(FeatureVector, f64)> {
     let kind = ev.extractor().kind;
     let device = Device::new(kind);
-    let mut rng = crate::util::Rng::new(0xCA11B);
+    let mut rng = crate::util::Rng::new(seed);
     let mut samples = Vec::new();
     let freq_ghz = kind.build().freq_ghz();
     for op in micro_suite() {
@@ -128,6 +144,50 @@ pub fn calibrated_model(kind: TargetKind) -> CostModel {
     CostModel::with_coeffs(kind, calibrated_coeffs(kind))
 }
 
+/// Train a `spec` scorer for `kind` from scratch against the device
+/// simulator: seeded micro-suite samples (gathered through a fresh
+/// evaluator's feature store) fit by the scorer's own calibration rule —
+/// NNLS for the linear model, the log-space quadratic ridge fit otherwise.
+/// Fully deterministic in `(kind, spec, seed)`, which is what makes
+/// `tuna train-scorer` byte-reproducible.
+pub fn train_scorer(kind: TargetKind, spec: ScorerSpec, seed: u64) -> AnyScorer {
+    let ev = CandidateEvaluator::new(CostModel::with_default_coeffs(kind));
+    let samples = calibration_samples_seeded(&ev, seed);
+    let mut scorer = match spec {
+        ScorerSpec::Linear => AnyScorer::Linear(LinearScorer::default_for(&kind.build())),
+        ScorerSpec::Quadratic => {
+            AnyScorer::Quadratic(QuadraticScorer::zeroed(ev.extractor().dim()))
+        }
+    };
+    scorer.calibrate(&samples);
+    scorer
+}
+
+/// Process-lifetime cache of trained nonlinear scorers, the sibling of
+/// [`coeff_cache`] (linear calibration stays in the coefficient cache so
+/// the historical `cached_coeffs`/`store_coeffs` surface keeps working).
+fn scorer_cache() -> &'static Mutex<HashMap<(&'static str, &'static str), AnyScorer>> {
+    static CACHE: OnceLock<Mutex<HashMap<(&'static str, &'static str), AnyScorer>>> =
+        OnceLock::new();
+    CACHE.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+/// A calibrated/trained `spec` scorer for `kind`, fitting (and process-
+/// caching) on first use. The linear spec composes from the coefficient
+/// cache, so it agrees bit-for-bit with [`calibrated_model`].
+pub fn calibrated_scorer(kind: TargetKind, spec: ScorerSpec) -> AnyScorer {
+    if spec == ScorerSpec::Linear {
+        return AnyScorer::Linear(LinearScorer::new(calibrated_coeffs(kind)));
+    }
+    let key = (kind.display_name(), spec.name());
+    if let Some(s) = scorer_cache().lock().unwrap().get(&key) {
+        return s.clone();
+    }
+    let scorer = train_scorer(kind, spec, DEFAULT_TRAIN_SEED);
+    scorer_cache().lock().unwrap().insert(key, scorer.clone());
+    scorer
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -191,5 +251,39 @@ mod tests {
         let again = calibration_samples(&ev);
         assert_eq!(ev.stats().misses, lowered, "resampling re-lowered");
         assert_eq!(again.len(), samples.len());
+    }
+
+    /// Offline training is a pure function of `(kind, spec, seed)`: two
+    /// runs agree parameter-for-parameter (bitwise), and a different seed
+    /// actually changes the sample set.
+    #[test]
+    fn train_scorer_is_seed_deterministic() {
+        let kind = TargetKind::Graviton2;
+        for spec in ScorerSpec::ALL {
+            let a = train_scorer(kind, spec, 7);
+            let b = train_scorer(kind, spec, 7);
+            assert_eq!(a, b, "{spec}: same seed, different model");
+            let params: Vec<u64> = a.params().iter().map(|w| w.to_bits()).collect();
+            let params_b: Vec<u64> = b.params().iter().map(|w| w.to_bits()).collect();
+            assert_eq!(params, params_b, "{spec}: parameters differ bitwise");
+        }
+        let a = train_scorer(kind, ScorerSpec::Quadratic, 7);
+        let c = train_scorer(kind, ScorerSpec::Quadratic, 8);
+        assert_ne!(a, c, "seed does not reach the sampler");
+    }
+
+    /// The scorer cache mirrors the coefficient cache: repeat calls return
+    /// the same trained model, and the linear spec stays bit-compatible
+    /// with the historical coefficient surface.
+    #[test]
+    fn calibrated_scorer_is_cached_and_linear_compatible() {
+        let kind = TargetKind::CortexA53;
+        let lin = calibrated_scorer(kind, ScorerSpec::Linear);
+        assert_eq!(lin.params(), calibrated_model(kind).coeffs());
+
+        let a = calibrated_scorer(kind, ScorerSpec::Quadratic);
+        let b = calibrated_scorer(kind, ScorerSpec::Quadratic);
+        assert_eq!(a, b, "scorer cache returned different models");
+        assert_eq!(a.name(), "quadratic");
     }
 }

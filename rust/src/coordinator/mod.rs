@@ -62,7 +62,7 @@
 
 pub mod calibrate;
 
-use crate::analysis::cost::CostError;
+use crate::analysis::cost::{CostError, ScorerSpec};
 use crate::analysis::CostModel;
 use crate::autotvm::{self, TunerParams};
 use crate::eval::{CacheError, CachedSchedule, CandidateEvaluator, MergeStats, ScheduleCache};
@@ -194,10 +194,32 @@ impl Coordinator {
         c
     }
 
+    /// [`Self::new`] under an explicit scorer choice: the linear spec is
+    /// exactly `new` (same process-cached coefficients), any other spec
+    /// composes the process-cached trained scorer
+    /// ([`calibrate::calibrated_scorer`]) with a fresh stage 1.
+    pub fn new_with_scorer(kind: TargetKind, spec: ScorerSpec) -> Self {
+        match spec {
+            ScorerSpec::Linear => Self::new(kind),
+            _ => Self::with_model(
+                kind,
+                CostModel::with_scorer(kind, calibrate::calibrated_scorer(kind, spec)),
+            ),
+        }
+    }
+
     /// Build with the uncalibrated (latency-table) cost model — used by
     /// the calibration ablation.
     pub fn new_uncalibrated(kind: TargetKind) -> Self {
         Self::with_model(kind, CostModel::with_default_coeffs(kind))
+    }
+
+    /// [`Self::new_uncalibrated`] under an explicit scorer choice — the
+    /// spec's deterministic default construction
+    /// ([`ScorerSpec::default_scorer`]), no calibration run. For the
+    /// linear spec this is exactly `new_uncalibrated`.
+    pub fn new_uncalibrated_with_scorer(kind: TargetKind, spec: ScorerSpec) -> Self {
+        Self::with_model(kind, CostModel::with_scorer(kind, spec.default_scorer(kind)))
     }
 
     /// Build around an already-fitted model — how shard workers inherit
@@ -271,6 +293,18 @@ impl Coordinator {
         self.evaluator.swap_coeffs(coeffs);
         self.coeff_epoch.fetch_add(1, Ordering::AcqRel);
         self.rescore_cached()
+    }
+
+    /// Fallible form of [`Self::swap_coeffs`] — the recalibration wire
+    /// path. A wrong-length vector or a scorer that rejects raw
+    /// coefficient swaps (e.g. the quadratic model) comes back as a typed
+    /// [`CostError`] with the coordinator fully untouched: no epoch bump,
+    /// no re-rank, scorer and cache exactly as before.
+    pub fn try_swap_coeffs(&self, coeffs: Vec<f64>) -> Result<usize, CostError> {
+        let _serialized = self.recal.lock().unwrap();
+        self.evaluator.try_swap_coeffs(coeffs)?;
+        self.coeff_epoch.fetch_add(1, Ordering::AcqRel);
+        Ok(self.rescore_cached())
     }
 
     /// Recalibration from `(features, cycles)` samples (e.g. fresh device
@@ -889,6 +923,40 @@ mod tests {
         assert_eq!(hits, (threads * per_thread) as u64);
         assert_eq!(misses, 1);
         assert_eq!(c.searches_performed(), 1, "a warm hit searched");
+    }
+
+    /// A quadratic-scorer coordinator runs the whole staged pipeline —
+    /// search, cache, warm hit — and a rejected raw coefficient swap is a
+    /// typed error that leaves scorer, cache, and epoch untouched (warm
+    /// hits stay bit-identical across the failure).
+    #[test]
+    fn quadratic_coordinator_tunes_and_rejects_swaps_unpoisoned() {
+        let c = Coordinator::new_uncalibrated_with_scorer(
+            TargetKind::Graviton2,
+            ScorerSpec::Quadratic,
+        );
+        let op = OpSpec::Matmul { m: 48, n: 48, k: 24, epilogue: Epilogue::None };
+        let strategy = Strategy::TunaStatic(tiny_es());
+        let first = c.tune_op(&op, &strategy);
+        assert!(!first.cache_hit && !first.top_k.is_empty());
+
+        let err = c.try_swap_coeffs(vec![1.0; 7]).unwrap_err();
+        assert_eq!(err, CostError::CoeffSwapUnsupported { scorer: "quadratic" });
+
+        let warm = c.tune_op(&op, &strategy);
+        assert!(warm.cache_hit, "failed swap invalidated the cache");
+        assert_eq!(warm.chosen, first.chosen);
+        assert_eq!(warm.top_k, first.top_k, "failed swap re-ranked the entry");
+
+        // the linear coordinator's fallible path still applies good swaps
+        let lin = Coordinator::new_uncalibrated(TargetKind::Graviton2);
+        lin.tune_op(&op, &strategy);
+        let reranked = lin.try_swap_coeffs(vec![1.0; 7]).unwrap();
+        assert_eq!(reranked, 1);
+        assert_eq!(
+            lin.try_swap_coeffs(vec![1.0; 3]).unwrap_err(),
+            CostError::CoeffDim { expected: 7, got: 3 }
+        );
     }
 
     #[test]

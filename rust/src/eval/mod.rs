@@ -1,9 +1,11 @@
 //! The staged candidate-evaluation pipeline.
 //!
-//! Tuna's static score is `Σ aᵢ·fᵢ`: stage 1 (lower → analyze, the
-//! [`FeatureExtractor`]) costs micro- to milliseconds per candidate, stage 2
-//! (the [`LinearScorer`] dot product) costs nanoseconds. This module keeps
-//! the two stages separate all the way through the evaluation path:
+//! Tuna's static score is a cheap function of hardware-derived features:
+//! stage 1 (lower → analyze, the [`FeatureExtractor`]) costs micro- to
+//! milliseconds per candidate, stage 2 (the scorer — the paper's
+//! [`LinearScorer`] dot product or a learned [`AnyScorer`] variant) costs
+//! nanoseconds. This module keeps the two stages separate all the way
+//! through the evaluation path:
 //!
 //! 1. **memoized feature store** — [`CandidateEvaluator`] memoizes stage-1
 //!    `FeatureVector`s (not final scores) in sharded maps keyed by the
@@ -14,11 +16,12 @@
 //!    only the dot product. The memo hit path performs no heap allocation
 //!    (candidates are located by structural hash + in-place comparison, and
 //!    scored without copying the stored vector);
-//! 2. **swappable scorer** — the evaluator's [`LinearScorer`] sits behind a
+//! 2. **swappable scorer** — the evaluator's [`AnyScorer`] sits behind a
 //!    lock: [`CandidateEvaluator::swap_coeffs`] /
-//!    [`CandidateEvaluator::recalibrate`] replace the coefficients without
-//!    touching the feature store, and
-//!    [`CandidateEvaluator::score_batch_with`] scores any number of
+//!    [`CandidateEvaluator::try_swap_coeffs`] /
+//!    [`CandidateEvaluator::recalibrate`] replace the scorer's parameters
+//!    without touching the feature store, and
+//!    [`CandidateEvaluator::score_batch_with`] scores any number of linear
 //!    coefficient vectors over one set of lowered features;
 //! 3. **batched fan-out** — [`CandidateEvaluator::score_batch`] scores a
 //!    whole population with one index-space parallel map: no per-candidate
@@ -40,10 +43,10 @@
 //!
 //! Scores are computed by exactly the same code path as
 //! [`CostModel::predict`] (`transform::apply` → `codegen::lower` → feature
-//! extraction → linear score), so batched results are bit-identical to
-//! per-candidate prediction — a property the `eval_pipeline` integration
-//! tests pin down on CPU and GPU targets, before and after a coefficient
-//! swap.
+//! extraction → scorer), so batched results are bit-identical to
+//! per-candidate prediction for every scorer — a property the
+//! `eval_pipeline` and `scorer_conformance` suites pin down on CPU and GPU
+//! targets, before and after a coefficient swap.
 
 pub mod cache;
 pub mod journal;
@@ -52,7 +55,7 @@ pub use cache::{CacheError, CachedSchedule, MergeStats, ScheduleCache};
 pub use journal::{CacheJournal, JournalReplay};
 
 use crate::analysis::cost::{
-    CostError, CostModel, FeatureExtractor, FeatureVector, LinearScorer,
+    AnyScorer, CostError, CostModel, FeatureExtractor, FeatureVector, LinearScorer,
 };
 use crate::search::BatchObjective;
 use crate::tir::ops::OpSpec;
@@ -100,11 +103,11 @@ impl EvalStats {
 
 /// The batched, memoizing candidate evaluator. Owns the two model stages
 /// separately: the immutable [`FeatureExtractor`] (pinned to one target)
-/// feeds a sharded feature store, and the [`LinearScorer`] — the only
-/// mutable stage — is applied on lookup and swappable at runtime.
+/// feeds a sharded feature store, and the scorer ([`AnyScorer`]) — the
+/// only mutable stage — is applied on lookup and swappable at runtime.
 pub struct CandidateEvaluator {
     extractor: FeatureExtractor,
-    scorer: RwLock<LinearScorer>,
+    scorer: RwLock<AnyScorer>,
     threads: usize,
     /// Feature store: structural hash → bucket of (key, features). Buckets
     /// resolve the (vanishingly rare) hash collisions by full comparison;
@@ -136,9 +139,16 @@ impl CandidateEvaluator {
         &self.extractor
     }
 
-    /// Snapshot of the current coefficients (stage 2).
+    /// Snapshot of the current scorer parameters (stage 2) — feature
+    /// coefficients for the linear scorer, φ-space weights otherwise.
     pub fn coeffs(&self) -> Vec<f64> {
-        self.scorer.read().unwrap().coeffs().to_vec()
+        self.scorer.read().unwrap().params().to_vec()
+    }
+
+    /// Snapshot of the current scorer (an owned clone — the live one can
+    /// be swapped underneath at any time).
+    pub fn scorer(&self) -> AnyScorer {
+        self.scorer.read().unwrap().clone()
     }
 
     /// Snapshot of the composed cost model the evaluator currently scores
@@ -154,7 +164,9 @@ impl CandidateEvaluator {
     ///
     /// Panics if `coeffs` does not match the target's feature
     /// dimensionality — a wrong-length vector would silently truncate in
-    /// the dot product and mis-rank everything downstream.
+    /// the dot product and mis-rank everything downstream — or if the
+    /// installed scorer rejects raw coefficient swaps; fallible callers
+    /// (the recalibration wire path) use [`Self::try_swap_coeffs`].
     pub fn swap_coeffs(&self, coeffs: Vec<f64>) {
         assert_eq!(
             coeffs.len(),
@@ -162,7 +174,24 @@ impl CandidateEvaluator {
             "coefficient vector does not match {:?}'s feature dimensionality",
             self.extractor.kind
         );
-        *self.scorer.write().unwrap() = LinearScorer::new(coeffs);
+        self.try_swap_coeffs(coeffs)
+            .unwrap_or_else(|e| panic!("coefficient swap rejected: {e}"));
+    }
+
+    /// Fallible coefficient swap: a wrong-length vector or a scorer whose
+    /// parameters are not raw feature coefficients comes back as a typed
+    /// [`CostError`] ([`CostError::CoeffDim`] /
+    /// [`CostError::CoeffSwapUnsupported`]) with the installed scorer left
+    /// untouched — the daemon's `recalibrate` arm must never poison the
+    /// coordinator it serves.
+    pub fn try_swap_coeffs(&self, coeffs: Vec<f64>) -> Result<(), CostError> {
+        if coeffs.len() != self.extractor.dim() {
+            return Err(CostError::CoeffDim {
+                expected: self.extractor.dim(),
+                got: coeffs.len(),
+            });
+        }
+        self.scorer.write().unwrap().try_set_coeffs(coeffs)
     }
 
     /// Refit the scorer by NNLS against `(features, measured cycles)`
@@ -298,9 +327,20 @@ impl CandidateEvaluator {
         op: &OpSpec,
         cfgs: &[ScheduleConfig],
     ) -> Result<Vec<f64>, CostError> {
-        // one coefficient snapshot per batch, not one lock per candidate
+        // one scorer snapshot per batch, not one lock per candidate
         let scorer = self.scorer.read().unwrap().clone();
-        self.try_score_batch_with(scorer.coeffs(), op, cfgs)
+        match scorer.linear_coeffs() {
+            // linear: delegate to the borrowed-coefficients fan-out (the
+            // historical path — bit-identical by construction)
+            Some(coeffs) => self.try_score_batch_with(coeffs, op, cfgs),
+            // nonlinear: same indexed fan-out over the feature store, the
+            // snapshot's own score applied on lookup
+            None => parallel_map_indexed(cfgs.len(), self.threads, |i| {
+                self.with_features(op, &cfgs[i], |fv| scorer.score(fv))
+            })
+            .into_iter()
+            .collect(),
+        }
     }
 
     /// Batch scoring under borrowed coefficients: the whole batch is
@@ -493,5 +533,55 @@ mod tests {
             assert_eq!(got, want, "variant {variant} diverged");
         }
         assert_eq!(ev.stats().misses, misses_before, "variant scoring re-lowered");
+    }
+
+    #[test]
+    fn quadratic_batch_matches_predict_bitwise_and_memoizes() {
+        use crate::analysis::cost::QuadraticScorer;
+        let kind = TargetKind::Graviton2;
+        let cm = CostModel::with_scorer(kind, QuadraticScorer::pretrained(kind));
+        let ev = CandidateEvaluator::with_threads(cm.clone(), 4);
+        let op = OpSpec::Matmul { m: 48, n: 32, k: 32, epilogue: Epilogue::None };
+        let cfgs = sample_cfgs(&op, kind, 16);
+        let batch = ev.score_batch(&op, &cfgs);
+        for (cfg, s) in cfgs.iter().zip(&batch) {
+            assert_eq!(
+                s.to_bits(),
+                cm.predict(&op, cfg).to_bits(),
+                "batched quadratic score diverged for {cfg:?}"
+            );
+        }
+        let misses = ev.stats().misses;
+        assert_eq!(ev.score_batch(&op, &cfgs), batch);
+        assert_eq!(ev.stats().misses, misses, "repeat quadratic batch re-lowered");
+    }
+
+    #[test]
+    fn try_swap_coeffs_is_typed_and_non_poisoning() {
+        use crate::analysis::cost::QuadraticScorer;
+        let kind = TargetKind::Graviton2;
+
+        let lin = CandidateEvaluator::new(CostModel::with_default_coeffs(kind));
+        assert_eq!(
+            lin.try_swap_coeffs(vec![1.0, 2.0]),
+            Err(CostError::CoeffDim { expected: 7, got: 2 })
+        );
+        assert!(lin.try_swap_coeffs(vec![1.0; 7]).is_ok());
+        assert_eq!(lin.coeffs(), vec![1.0; 7]);
+
+        let quad = CandidateEvaluator::new(CostModel::with_scorer(
+            kind,
+            QuadraticScorer::pretrained(kind),
+        ));
+        let before = quad.scorer();
+        let op = OpSpec::Matmul { m: 32, n: 32, k: 32, epilogue: Epilogue::None };
+        let cfgs = sample_cfgs(&op, kind, 6);
+        let warm = quad.score_batch(&op, &cfgs);
+        assert_eq!(
+            quad.try_swap_coeffs(vec![1.0; 7]),
+            Err(CostError::CoeffSwapUnsupported { scorer: "quadratic" })
+        );
+        assert_eq!(quad.scorer(), before, "failed swap mutated the scorer");
+        assert_eq!(quad.score_batch(&op, &cfgs), warm, "failed swap changed scores");
     }
 }

@@ -40,6 +40,7 @@
 //! [`FleetConfig::first_attempt_env`] — so an injected fault fires once
 //! and the retry runs clean. See `docs/FLEET.md`.
 
+use crate::analysis::cost::ScorerSpec;
 use crate::coordinator::{Coordinator, Strategy};
 use crate::eval::journal::{CacheJournal, JournalReplay};
 use crate::eval::{CacheError, MergeStats, ScheduleCache};
@@ -420,6 +421,11 @@ pub struct WorkerConfig {
     /// `false` uses the latency-table model (fast, deterministic startup
     /// — what the fault tests use).
     pub calibrated: bool,
+    /// Which scorer the worker's coordinator runs (`--scorer`). Must
+    /// match the conductor's choice — searches are deterministic per
+    /// scorer, so a mismatched worker would merge a differently-ranked
+    /// shard.
+    pub scorer: ScorerSpec,
     /// [`FAULT_AFTER_ENV`]: abort after this many appends this run.
     pub fault_after: Option<usize>,
     /// [`TASK_DELAY_ENV`]: sleep after each task.
@@ -466,9 +472,9 @@ pub fn run_worker(cfg: &WorkerConfig) -> Result<WorkerReport, String> {
     let replayed = replay.records();
 
     let coordinator = if cfg.calibrated {
-        Coordinator::new(cfg.kind)
+        Coordinator::new_with_scorer(cfg.kind, cfg.scorer)
     } else {
-        Coordinator::new_uncalibrated(cfg.kind)
+        Coordinator::new_uncalibrated_with_scorer(cfg.kind, cfg.scorer)
     };
     coordinator.import_cache(replay.into_cache());
 
@@ -540,6 +546,7 @@ mod tests {
             out: PathBuf::from("unused.json"),
             es: EsParams::default(),
             calibrated: false,
+            scorer: ScorerSpec::Linear,
             fault_after: None,
             task_delay: Duration::ZERO,
         };

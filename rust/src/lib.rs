@@ -88,7 +88,10 @@ pub mod transform;
 pub mod util;
 pub mod vendor;
 
-pub use analysis::cost::{CostError, CostModel, FeatureExtractor, FeatureVector, LinearScorer};
+pub use analysis::cost::{
+    AnyScorer, CostError, CostModel, FeatureExtractor, FeatureVector, LinearScorer,
+    QuadraticScorer, Scorer, ScorerSpec,
+};
 pub use eval::{CacheError, CandidateEvaluator, ScheduleCache};
 pub use isa::MicroArch;
 pub use tir::ops::OpSpec;

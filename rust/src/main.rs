@@ -5,27 +5,35 @@
 //! ```text
 //! tuna targets                         list the five target descriptors
 //! tuna calibrate --target <t>          fit + print cost-model coefficients
+//! tuna train-scorer --target <t> --out scorer.json
+//!                   [--scorer linear|quadratic] [--seed N]
+//!                                      fit a scorer offline and serialize it
+//!                                      (deterministic: same target/scorer/seed
+//!                                       always writes byte-identical files)
 //! tuna tune-op --op <spec> --target <t> [--strategy tuna|autotvm|vendor]
-//!                                      [--trials N] [--pop N] [--iters N]
+//!              [--trials N] [--pop N] [--iters N]
+//!              [--scorer NAME | --scorer-file F]
 //! tuna tune-net --net <name> --target <t> [--strategy ...] [--trials N]
 //!               [--shards N] [--load-cache a.json,b.json] [--save-cache out.json]
+//!               [--scorer NAME | --scorer-file F]
 //!                                      sharded tuning + schedule-cache I/O
 //! tuna merge-caches --inputs a.json,b.json,... --out merged.json
 //!                                      fold N worker caches into one
 //! tuna tune-fleet --net <name> --target <t> --workers N --out merged.json
 //!                 [--work-dir DIR] [--retries N] [--heartbeat-secs N]
 //!                 [--poll-ms N] [--pop N] [--iters N] [--seed N]
-//!                 [--uncalibrated]     multi-process tuning campaign:
+//!                 [--uncalibrated] [--scorer NAME]
+//!                                      multi-process tuning campaign:
 //!                                      spawn/heartbeat/retry/merge
 //!                                      (docs/FLEET.md; fault knob
 //!                                       TUNA_FLEET_FAULT=shard:after)
 //! tuna tune-shard --net <name> --target <t> --shards N --shard I
-//!                 --journal J.tunaj --out shard.json [--pop N] ...
+//!                 --journal J.tunaj --out shard.json [--pop N] [--scorer NAME] ...
 //!                                      one fleet worker (journaled,
 //!                                      crash-resumable)
 //! tuna serve --targets <list> --port N [--load-cache a.json,b.json]
 //!            [--save-cache out.json] [--cache-cap N] [--serve-threads N]
-//!            [--journal serve.tunaj] [--journal-every SECS]
+//!            [--journal serve.tunaj] [--journal-every SECS] [--scorer NAME]
 //!                                      tune-serving daemon on 127.0.0.1
 //!                                      (protocol: docs/SERVING.md;
 //!                                       --port 0 picks an ephemeral port;
@@ -51,6 +59,7 @@
 use std::collections::BTreeMap;
 use std::process::exit;
 
+use tuna::analysis::{AnyScorer, CostModel, ScorerSpec};
 use tuna::config::parse_targets;
 use tuna::coordinator::{Coordinator, Strategy};
 use tuna::graph;
@@ -69,6 +78,7 @@ fn main() {
     let r = match cmd.as_str() {
         "targets" => cmd_targets(),
         "calibrate" => cmd_calibrate(&flags),
+        "train-scorer" => cmd_train_scorer(&flags),
         "tune-op" => cmd_tune_op(&flags),
         "tune-net" => cmd_tune_net(&flags),
         "merge-caches" => cmd_merge_caches(&flags),
@@ -99,8 +109,8 @@ fn main() {
 fn usage() {
     eprintln!(
         "tuna — static-analysis DNN optimization (paper reproduction)\n\
-         commands: targets | calibrate | tune-op | tune-net | merge-caches | tune-fleet |\n\
-         \x20         tune-shard | serve | query | bench-serve | tables | sweep | e2e\n\
+         commands: targets | calibrate | train-scorer | tune-op | tune-net | merge-caches |\n\
+         \x20         tune-fleet | tune-shard | serve | query | bench-serve | tables | sweep | e2e\n\
          see rust/src/main.rs header for flags"
     );
 }
@@ -230,6 +240,68 @@ fn es_params(flags: &BTreeMap<String, String>) -> EsParams {
     p
 }
 
+/// `--scorer NAME` → which scorer family the command runs (default: the
+/// historical linear model, so existing invocations are bit-unchanged).
+fn scorer_spec_of(flags: &BTreeMap<String, String>) -> Result<ScorerSpec, String> {
+    match flags.get("scorer") {
+        Some(name) => ScorerSpec::parse(name).map_err(|e| e.to_string()),
+        None => Ok(ScorerSpec::Linear),
+    }
+}
+
+/// Build the coordinator a tuning command asked for: `--scorer-file`
+/// loads an offline-trained scorer (the file records which target it was
+/// fitted for, and it must match), `--scorer NAME` selects a calibrated
+/// built-in, and no flag at all keeps the historical linear path.
+fn coordinator_of(
+    kind: TargetKind,
+    flags: &BTreeMap<String, String>,
+) -> Result<Coordinator, String> {
+    if let Some(path) = flags.get("scorer-file") {
+        let (file_kind, scorer) =
+            AnyScorer::load(std::path::Path::new(path)).map_err(|e| e.to_string())?;
+        if file_kind != kind {
+            return Err(format!(
+                "scorer file {path} was trained for {}, not {}",
+                file_kind.wire_name(),
+                kind.wire_name()
+            ));
+        }
+        Ok(Coordinator::with_model(kind, CostModel::with_scorer(kind, scorer)))
+    } else {
+        Ok(Coordinator::new_with_scorer(kind, scorer_spec_of(flags)?))
+    }
+}
+
+/// Fit a scorer offline (`tuna train-scorer`) and serialize it next to
+/// the calibrated coefficient vectors. Deterministic: the same
+/// `--target`/`--scorer`/`--seed` always writes byte-identical files,
+/// so fleets can verify they loaded the same model by comparing bytes.
+fn cmd_train_scorer(flags: &BTreeMap<String, String>) -> Result<(), String> {
+    use tuna::coordinator::calibrate::{train_scorer, DEFAULT_TRAIN_SEED};
+    let kind = single_target(flags)?;
+    let spec = match flags.get("scorer") {
+        Some(name) => ScorerSpec::parse(name).map_err(|e| e.to_string())?,
+        None => ScorerSpec::Quadratic,
+    };
+    let seed: u64 = match flags.get("seed") {
+        Some(s) => s.parse().map_err(|e| format!("bad --seed {s:?}: {e}"))?,
+        None => DEFAULT_TRAIN_SEED,
+    };
+    let out = flags.get("out").ok_or("--out required")?;
+    let scorer = train_scorer(kind, spec, seed);
+    scorer
+        .save(kind, std::path::Path::new(out))
+        .map_err(|e| format!("write {out}: {e}"))?;
+    println!(
+        "trained {} scorer for {} (seed {seed}, {} params) -> {out}",
+        scorer.name(),
+        kind.display_name(),
+        scorer.params().len()
+    );
+    Ok(())
+}
+
 fn cmd_targets() -> Result<(), String> {
     for k in TargetKind::ALL {
         println!("{:<55} {}", k.display_name(), tuna::codegen::lowering_for(k).describe());
@@ -254,7 +326,7 @@ fn cmd_tune_op(flags: &BTreeMap<String, String>) -> Result<(), String> {
     let kinds = targets_of(flags)?;
     let strategy = strategy_of(flags)?;
     for kind in kinds {
-        let c = Coordinator::new(kind);
+        let c = coordinator_of(kind, flags)?;
         let space = tuna::transform::config_space(&op, kind);
         let r = c.tune_op(&op, &strategy);
         let gflops = op.flops() as f64 / r.latency_s / 1e9;
@@ -287,7 +359,7 @@ fn cmd_tune_net(flags: &BTreeMap<String, String>) -> Result<(), String> {
     // holds every tuned target (saving per target would overwrite)
     let mut outgoing = flags.get("save-cache").map(|_| tuna::eval::ScheduleCache::new());
     for kind in targets_of(flags)? {
-        let c = Coordinator::new(kind);
+        let c = coordinator_of(kind, flags)?;
         if let Some(paths) = flags.get("load-cache") {
             for p in paths.split(',') {
                 let p = p.trim();
@@ -358,6 +430,7 @@ fn cmd_tune_fleet(flags: &BTreeMap<String, String>) -> Result<(), String> {
     use tuna::fleet::{run_fleet, FleetConfig, FAULT_AFTER_ENV, FLEET_FAULT_ENV};
     let net = flags.get("net").ok_or("--net required")?;
     network_by_name(net)?; // fail early, not in every worker
+    scorer_spec_of(flags)?; // likewise: reject an unknown --scorer here
     let kind = single_target(flags)?;
     let workers: usize = match flags.get("workers") {
         Some(w) => w.parse().map_err(|e| format!("bad --workers {w:?}: {e}"))?,
@@ -380,7 +453,7 @@ fn cmd_tune_fleet(flags: &BTreeMap<String, String>) -> Result<(), String> {
     }
     let mut worker_args =
         vec!["--net".to_string(), net.clone(), "--target".to_string(), kind.wire_name().into()];
-    for key in ["pop", "iters", "seed"] {
+    for key in ["pop", "iters", "seed", "scorer"] {
         if let Some(v) = flags.get(key) {
             worker_args.push(format!("--{key}"));
             worker_args.push(v.clone());
@@ -442,6 +515,7 @@ fn cmd_tune_shard(flags: &BTreeMap<String, String>) -> Result<(), String> {
         out: flags.get("out").ok_or("--out required")?.into(),
         es: es_params(flags),
         calibrated: !flags.contains_key("uncalibrated"),
+        scorer: scorer_spec_of(flags)?,
         fault_after: env_num::<usize>(FAULT_AFTER_ENV),
         task_delay: std::time::Duration::from_millis(
             env_num::<u64>(TASK_DELAY_ENV).unwrap_or(0),
@@ -462,6 +536,7 @@ fn cmd_serve(flags: &BTreeMap<String, String>) -> Result<(), String> {
     use std::io::Write as _;
     use tuna::serve::{ServeConfig, Server};
     let mut cfg = ServeConfig { targets: targets_of(flags)?, ..ServeConfig::default() };
+    cfg.scorer = scorer_spec_of(flags)?;
     cfg.port = match flags.get("port") {
         Some(p) => p.parse().map_err(|e| format!("bad --port {p:?}: {e}"))?,
         None => 7700,

@@ -36,9 +36,12 @@
 //!   text exposition, so operators scrape instead of polling `stats`;
 //! * **online recalibration** — `recalibrate` swaps coefficients into the
 //!   live evaluator and re-ranks every resident cache entry from memoized
-//!   features ([`Coordinator::swap_coeffs`]): zero re-lowering, zero
+//!   features ([`Coordinator::try_swap_coeffs`]): zero re-lowering, zero
 //!   downtime, concurrent tunes race safely via the coordinator's
-//!   coefficient-epoch check;
+//!   coefficient-epoch check. A daemon running a scorer whose parameters
+//!   are not raw feature coefficients (`--scorer quadratic`) answers with
+//!   a typed `bad_coeffs` error and keeps serving unchanged — retrain
+//!   offline with `tuna train-scorer` instead;
 //! * **failure containment** — every malformed line is answered with a
 //!   typed [`protocol::ErrorCode`] on the same (still-open) connection,
 //!   and a panicking handler is caught ([`std::panic::catch_unwind`]) and
@@ -58,6 +61,7 @@
 pub mod bench;
 pub mod protocol;
 
+use crate::analysis::cost::ScorerSpec;
 use crate::coordinator::{Coordinator, Strategy};
 use crate::eval::{CacheError, CacheJournal, ScheduleCache};
 use crate::isa::TargetKind;
@@ -105,6 +109,11 @@ pub struct ServeConfig {
     /// Calibrate coordinators at startup (production default). `false`
     /// keeps the latency-table coefficients — cheaper for tests.
     pub calibrated: bool,
+    /// Which scorer every coordinator runs (`--scorer`). The linear
+    /// default preserves the historical daemon exactly; nonlinear scorers
+    /// serve identically but reject raw-coefficient `recalibrate`
+    /// requests with a typed `bad_coeffs` error.
+    pub scorer: ScorerSpec,
     /// Append-only cache journal (`.tunaj`, see
     /// [`crate::eval::CacheJournal`]). If the file exists it is replayed
     /// at startup — crash recovery needs no graceful shutdown — and while
@@ -128,6 +137,7 @@ impl Default for ServeConfig {
             save_on_shutdown: None,
             cache_capacity: None,
             calibrated: true,
+            scorer: ScorerSpec::Linear,
             journal: None,
             journal_every: Duration::from_secs(5),
         }
@@ -447,8 +457,18 @@ impl State {
                         detail: "coefficients must be finite".into(),
                     };
                 }
-                let reranked = c.swap_coeffs(coeffs.clone());
-                Response::Recalibrated { target: *target, reranked: reranked as u64 }
+                // the fallible path: a scorer that rejects raw coefficient
+                // swaps (e.g. quadratic) answers typed and leaves the
+                // coordinator — scorer, cache, epoch — exactly as it was
+                match c.try_swap_coeffs(coeffs.clone()) {
+                    Ok(reranked) => {
+                        Response::Recalibrated { target: *target, reranked: reranked as u64 }
+                    }
+                    Err(e) => Response::Error {
+                        code: ErrorCode::BadCoeffs,
+                        detail: e.to_string(),
+                    },
+                }
             }
             Request::Save { path } => {
                 let merged = self.merged_cache();
@@ -505,9 +525,9 @@ impl Server {
         let mut coords = Vec::with_capacity(targets.len());
         for kind in targets {
             let coordinator = if config.calibrated {
-                Coordinator::new(kind)
+                Coordinator::new_with_scorer(kind, config.scorer)
             } else {
-                Coordinator::new_uncalibrated(kind)
+                Coordinator::new_uncalibrated_with_scorer(kind, config.scorer)
             };
             if let Some(cap) = config.cache_capacity {
                 coordinator.set_cache_capacity(Some(cap));
@@ -839,6 +859,57 @@ mod tests {
             matches!(nan, Response::Error { code: ErrorCode::BadCoeffs, .. }),
             "non-finite coeffs: {nan:?}"
         );
+    }
+
+    /// A daemon running the quadratic scorer keeps serving bit-identically
+    /// across a rejected recalibrate: the swap answers `bad_coeffs` (the
+    /// scorer's parameters are not raw feature coefficients) and warm hits
+    /// before and after agree exactly.
+    #[test]
+    fn quadratic_state_rejects_recalibrate_without_poisoning() {
+        let coords = vec![Served::new(
+            TargetKind::Graviton2,
+            Coordinator::new_uncalibrated_with_scorer(
+                TargetKind::Graviton2,
+                ScorerSpec::Quadratic,
+            ),
+        )];
+        let metrics = metrics_for(&coords);
+        let state = State {
+            coords,
+            foreign: ScheduleCache::new(),
+            stop: AtomicBool::new(false),
+            addr: SocketAddr::from(([127, 0, 0, 1], 0)),
+            metrics,
+        };
+        let tune = Request::Tune {
+            target: TargetKind::Graviton2,
+            op: OpSpec::Matmul { m: 32, n: 32, k: 32, epilogue: Epilogue::None },
+            params: Some(tiny_params()),
+        };
+        let first = state.execute(&tune);
+        let Response::Tuned { config, predicted_cost, .. } = &first else {
+            panic!("{first:?}")
+        };
+        let (config, predicted) = (config.clone(), *predicted_cost);
+
+        let r = state.execute(&Request::Recalibrate {
+            target: TargetKind::Graviton2,
+            coeffs: vec![1.0; 7],
+        });
+        let Response::Error { code, detail } = r else {
+            panic!("quadratic daemon applied a raw coefficient swap: {r:?}")
+        };
+        assert_eq!(code, ErrorCode::BadCoeffs);
+        assert!(detail.contains("train-scorer"), "detail does not say how to retrain");
+
+        let warm = state.execute(&tune);
+        let Response::Tuned { cache_hit, config: c2, predicted_cost: p2, .. } = warm else {
+            panic!("daemon stopped serving after a failed recalibrate")
+        };
+        assert!(cache_hit, "failed recalibrate invalidated the cache");
+        assert_eq!(c2, config, "warm hit changed schedule after failed recalibrate");
+        assert_eq!(p2.to_bits(), predicted.to_bits(), "warm hit changed score");
     }
 
     #[test]

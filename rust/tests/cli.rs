@@ -219,6 +219,88 @@ fn sharded_tune_merge_serve_query_across_process_boundaries() {
     let _ = std::fs::remove_file(&merged);
 }
 
+/// `train-scorer` across the process boundary: two runs with the same
+/// target/scorer/seed write byte-identical model files, a different seed
+/// writes a different model, and `tune-op --scorer-file` both loads the
+/// artifact and rejects a target mismatch with a clean non-zero exit.
+#[test]
+fn train_scorer_is_byte_deterministic_and_loads_for_tuning() {
+    let a = temp_path("scorer_a");
+    let b = temp_path("scorer_b");
+    let other_seed = temp_path("scorer_seed9");
+
+    for out in [&a, &b] {
+        let out_s = out.display().to_string();
+        let stdout = run_ok(&[
+            "train-scorer",
+            "--target",
+            "graviton2",
+            "--scorer",
+            "quadratic",
+            "--seed",
+            "7",
+            "--out",
+            out_s.as_str(),
+        ]);
+        assert!(stdout.contains("quadratic"), "train-scorer reported nothing: {stdout}");
+    }
+    let bytes_a = std::fs::read(&a).expect("first model file missing");
+    let bytes_b = std::fs::read(&b).expect("second model file missing");
+    assert_eq!(bytes_a, bytes_b, "same seed produced different model files");
+    let _ = std::fs::remove_file(&b);
+
+    let other_s = other_seed.display().to_string();
+    run_ok(&[
+        "train-scorer",
+        "--target",
+        "graviton2",
+        "--scorer",
+        "quadratic",
+        "--seed",
+        "9",
+        "--out",
+        other_s.as_str(),
+    ]);
+    let bytes_seed9 = std::fs::read(&other_seed).expect("seed-9 model file missing");
+    assert_ne!(bytes_a, bytes_seed9, "seed is not reaching the training pipeline");
+    let _ = std::fs::remove_file(&other_seed);
+
+    // the trained artifact drives a tune
+    let a_s = a.display().to_string();
+    let mut args =
+        vec!["tune-op", "--op", "matmul:32x32x32", "--target", "graviton2"];
+    args.extend(["--scorer-file", a_s.as_str()]);
+    args.extend(ES_FLAGS);
+    let tuned = run_ok(&args);
+    assert!(tuned.contains("GF/s"), "tune-op under the scorer file reported nothing: {tuned}");
+
+    // the file records its target; tuning another target with it must fail
+    let mismatch = Command::new(bin())
+        .args(["tune-op", "--op", "matmul:32x32x32", "--target", "xeon"])
+        .args(["--scorer-file", a_s.as_str()])
+        .output()
+        .expect("failed to spawn tune-op");
+    assert!(!mismatch.status.success(), "target-mismatched scorer file exited 0");
+    assert!(
+        String::from_utf8_lossy(&mismatch.stderr).contains("trained for"),
+        "unhelpful mismatch error: {}",
+        String::from_utf8_lossy(&mismatch.stderr)
+    );
+    let _ = std::fs::remove_file(&a);
+
+    // an unknown scorer name is a clean argv-level error
+    let bad = Command::new(bin())
+        .args(["tune-op", "--op", "matmul:8x8x8", "--target", "graviton2", "--scorer", "mlp"])
+        .output()
+        .expect("failed to spawn tune-op");
+    assert!(!bad.status.success(), "unknown scorer name exited 0");
+    assert!(
+        String::from_utf8_lossy(&bad.stderr).contains("mlp"),
+        "unhelpful scorer error: {}",
+        String::from_utf8_lossy(&bad.stderr)
+    );
+}
+
 #[test]
 fn query_against_a_dead_port_fails_cleanly() {
     // port 1 on loopback is never listening in CI containers

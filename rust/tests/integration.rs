@@ -204,3 +204,68 @@ fn tables_render_complete() {
     assert!(t3.is_some()); // graviton2 has a cloud price
     assert!(tuna::metrics::table3(TargetKind::CortexA53, &results, &["toy"], &["Toy"]).is_none());
 }
+
+/// Pin the AutoTVM baseline's surrogate — the ridge-fit log-latency model
+/// whose quadratic feature-crossing technique the learned scorer grew out
+/// of. It guides `autotvm::tune`'s candidate proposals, so its contract
+/// matters beyond its own module: constant before any fit,
+/// under-determined fits are no-ops, refits are bit-reproducible, and a
+/// real fit rank-correlates with the simulator it stands in for.
+#[test]
+fn autotvm_surrogate_fit_predict_contract_holds() {
+    use tuna::autotvm::surrogate::Surrogate;
+    let kind = TargetKind::Graviton2;
+    let op = OpSpec::Matmul { m: 64, n: 64, k: 32, epilogue: Epilogue::None };
+    let space = tuna::transform::config_space(&op, kind);
+    let device = Device::new(kind);
+
+    // unfitted: the constant fallback, for every config
+    let mut sur = Surrogate::new(&space);
+    assert_eq!(sur.predict(&space.default_config()), 1.0);
+    assert_eq!(sur.predict(&space.from_index(space.size() - 1)), 1.0);
+
+    // fewer than three samples cannot determine a fit; the model must
+    // stay on the fallback rather than extrapolate from noise
+    let short: Vec<_> =
+        (0..2).map(|i| (space.from_index(i), device.run(&op, &space.from_index(i)).seconds)).collect();
+    sur.fit(&short);
+    assert_eq!(sur.predict(&space.default_config()), 1.0, "under-determined fit mutated the model");
+
+    // measure a deterministic grid on the simulator and fit for real
+    let n = space.size().min(24).max(3);
+    let measured: Vec<_> = (0..n)
+        .map(|i| {
+            let cfg = space.from_index(i * space.size() / n);
+            let secs = device.run(&op, &cfg).seconds;
+            (cfg, secs)
+        })
+        .collect();
+    sur.fit(&measured);
+
+    // the fit is deterministic: a second surrogate trained on the same
+    // measurements predicts bit-identically
+    let mut again = Surrogate::new(&space);
+    again.fit(&measured);
+    let probe = space.from_index(space.size() / 2);
+    assert!(sur.predict(&probe) != 1.0, "fit did not take");
+    assert_eq!(
+        sur.predict(&probe).to_bits(),
+        again.predict(&probe).to_bits(),
+        "surrogate refit is not deterministic"
+    );
+
+    // held out: random configs the fit never saw still rank close to the
+    // simulator's ground truth — the property that makes the surrogate a
+    // useful search guide at all
+    let mut rng = tuna::util::Rng::new(77);
+    let (mut preds, mut truths) = (Vec::new(), Vec::new());
+    for _ in 0..24 {
+        let cfg = space.random(&mut rng);
+        let p = sur.predict(&cfg);
+        assert!(p.is_finite() && p > 0.0, "surrogate prediction {p} for {cfg:?}");
+        preds.push(p);
+        truths.push(device.run(&op, &cfg).seconds);
+    }
+    let rho = tuna::util::stats::spearman(&preds, &truths);
+    assert!(rho > 0.3, "surrogate no longer tracks the simulator: spearman {rho}");
+}

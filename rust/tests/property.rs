@@ -3,6 +3,7 @@
 //! proptest; same idea: random cases + shrink-free minimal assertions).
 
 use std::collections::BTreeMap;
+use tuna::analysis::{AnyScorer, CostError, LinearScorer, QuadraticScorer};
 use tuna::eval::{CacheJournal, CachedSchedule};
 use tuna::isa::TargetKind;
 use tuna::isets::{Affine, StridedSet};
@@ -826,4 +827,117 @@ fn prop_v2_cache_files_byte_stable_with_new_target() {
     let reloaded = ScheduleCache::from_json(&Json::parse(&saved).unwrap())
         .unwrap_or_else(|e| panic!("own save rejected: {e:?}"));
     assert_eq!(reloaded.to_json().to_string(), saved, "save→load→save not byte-stable");
+}
+
+// ---------------------------------------------------------------------
+// scorer-file properties: serialized cost models survive the disk
+// bit-identically for arbitrary parameters, and every malformed document
+// — truncation, unknown names, ragged dimensions, wrong versions — loads
+// as a typed error, never a panic and never a silently mis-sized model.
+
+/// A random scorer with parameters spanning sign, scale and exact-zero
+/// cases, dimensioned for `kind`'s feature space.
+fn random_scorer(rng: &mut Rng, kind: TargetKind) -> AnyScorer {
+    let dim = tuna::codegen::lowering_for(kind).feature_names().len();
+    if rng.below(2) == 0 {
+        let coeffs = (0..dim).map(|_| rng.f64() * 10.0).collect();
+        AnyScorer::Linear(LinearScorer::new(coeffs))
+    } else {
+        let n = QuadraticScorer::param_len(dim);
+        let mut weights: Vec<f64> = (0..n).map(|_| rng.f64() * 4.0 - 2.0).collect();
+        // exact zeros exercise the integer-printing path of the writer
+        for w in weights.iter_mut() {
+            if rng.below(5) == 0 {
+                *w = 0.0;
+            }
+        }
+        AnyScorer::Quadratic(QuadraticScorer::from_weights(dim, weights).unwrap())
+    }
+}
+
+/// INVARIANT: for arbitrary parameters on every target, a scorer survives
+/// serialize → parse → serialize with byte-identical documents, and the
+/// reconstructed scorer is structurally equal (fleets compare scorer
+/// files by bytes to prove every worker loaded the same model).
+#[test]
+fn prop_scorer_files_roundtrip_byte_stable_over_random_weights() {
+    use tuna::util::json::Json;
+    let mut rng = Rng::new(1313);
+    for case in 0..CASES {
+        let kind = random_target(&mut rng);
+        let scorer = random_scorer(&mut rng, kind);
+        let text = scorer.to_json(kind).to_string();
+        let (k2, back) = AnyScorer::from_json(&Json::parse(&text).unwrap())
+            .unwrap_or_else(|e| panic!("case {case}: own encoding rejected: {e} ({text})"));
+        assert_eq!(k2, kind, "case {case}: target did not round-trip");
+        assert_eq!(back, scorer, "case {case}: scorer did not round-trip");
+        assert_eq!(
+            back.to_json(kind).to_string(),
+            text,
+            "case {case}: re-serialization drifted"
+        );
+    }
+}
+
+/// INVARIANT: every strict byte prefix of a serialized scorer file is
+/// rejected as a typed [`CostError`] — a torn write or truncated copy can
+/// never load as a plausible-but-wrong model.
+#[test]
+fn prop_scorer_file_every_prefix_truncation_rejected() {
+    let mut rng = Rng::new(2727);
+    let path = std::env::temp_dir()
+        .join(format!("tuna_prop_scorer_trunc_{}.json", std::process::id()));
+    for case in 0..6 {
+        let kind = random_target(&mut rng);
+        let scorer = random_scorer(&mut rng, kind);
+        scorer.save(kind, &path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        let (_, full) = AnyScorer::load(&path)
+            .unwrap_or_else(|e| panic!("case {case}: complete file rejected: {e}"));
+        assert_eq!(full, scorer, "case {case}");
+        for cut in 0..bytes.len() {
+            std::fs::write(&path, &bytes[..cut]).unwrap();
+            match AnyScorer::load(&path) {
+                Err(CostError::ScorerFile { .. }) => {}
+                other => panic!("case {case} cut {cut}: accepted truncation: {other:?}"),
+            }
+        }
+    }
+    let _ = std::fs::remove_file(&path);
+}
+
+/// INVARIANT: structurally valid JSON with the wrong contents — unknown
+/// scorer names, unknown targets, unsupported versions, dimensions that
+/// disagree with the target's feature space, ragged parameter arrays —
+/// is rejected with the matching typed error.
+#[test]
+fn prop_scorer_file_bad_documents_are_typed_errors() {
+    use tuna::util::json::Json;
+    let parse = |s: &str| AnyScorer::from_json(&Json::parse(s).unwrap());
+    // graviton2's feature space is 7-wide; a well-formed linear document
+    let good = r#"{"dim":7,"params":[1,1,1,1,1,1,1],"scorer":"linear","target":"graviton2","version":1}"#;
+    assert!(parse(good).is_ok(), "reference document rejected");
+    let unknown_scorer =
+        r#"{"dim":7,"params":[1],"scorer":"mlp","target":"graviton2","version":1}"#;
+    assert_eq!(
+        parse(unknown_scorer),
+        Err(CostError::UnknownScorer { name: "mlp".into() })
+    );
+    let unknown_target = r#"{"dim":7,"params":[1],"scorer":"linear","target":"tpu","version":1}"#;
+    assert!(matches!(parse(unknown_target), Err(CostError::ScorerFile { .. })));
+    let bad_version =
+        r#"{"dim":7,"params":[1,1,1,1,1,1,1],"scorer":"linear","target":"graviton2","version":99}"#;
+    assert!(matches!(parse(bad_version), Err(CostError::ScorerFile { .. })));
+    let wrong_dim =
+        r#"{"dim":6,"params":[1,1,1,1,1,1],"scorer":"linear","target":"graviton2","version":1}"#;
+    assert_eq!(parse(wrong_dim), Err(CostError::CoeffDim { expected: 7, got: 6 }));
+    let ragged_linear =
+        r#"{"dim":7,"params":[1,1,1],"scorer":"linear","target":"graviton2","version":1}"#;
+    assert_eq!(parse(ragged_linear), Err(CostError::CoeffDim { expected: 7, got: 3 }));
+    let ragged_quadratic =
+        r#"{"dim":7,"params":[1,1,1,1,1],"scorer":"quadratic","target":"graviton2","version":1}"#;
+    assert_eq!(
+        parse(ragged_quadratic),
+        Err(CostError::CoeffDim { expected: QuadraticScorer::param_len(7), got: 5 })
+    );
 }

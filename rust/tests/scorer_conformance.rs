@@ -1,0 +1,295 @@
+//! Cross-scorer conformance suite for the [`tuna::analysis::Scorer`]
+//! contract — the invariants every stage-2 cost model must satisfy to
+//! plug into the tune → cache → shard → serve stack.
+//!
+//! The suite is table-driven, mirroring `lowering_conformance.rs`: one
+//! [`ScorerRow`] per [`ScorerSpec`]. Adding a scorer to the crate means
+//! adding exactly one row here (the table↔enum coverage test fails until
+//! you do), after which every invariant below — deterministic
+//! construction, finite positive scoring, staged/batched bit-identity,
+//! serialization byte-stability, the typed coefficient-swap policy, and
+//! end-to-end tuning on every backend — runs against it for free.
+
+use tuna::analysis::cost::SCORER_NAMES;
+use tuna::analysis::{AnyScorer, CostError, CostModel, ScorerSpec};
+use tuna::coordinator::{Coordinator, Strategy};
+use tuna::eval::CandidateEvaluator;
+use tuna::isa::TargetKind;
+use tuna::search::EsParams;
+use tuna::tir::ops::{Epilogue, OpSpec};
+use tuna::transform::{self, ScheduleConfig};
+use tuna::util::json::Json;
+
+/// One scorer's expected conformance profile. `accepts_coeff_swap` pins
+/// the online-recalibration policy (`recalibrate` over the serve socket
+/// works iff it holds); `has_linear_coeffs` pins whether the evaluator's
+/// multi-coefficient fast path (`score_batch_with`) applies.
+struct ScorerRow {
+    spec: ScorerSpec,
+    name: &'static str,
+    accepts_coeff_swap: bool,
+    has_linear_coeffs: bool,
+}
+
+const TABLE: [ScorerRow; 2] = [
+    ScorerRow {
+        spec: ScorerSpec::Linear,
+        name: "linear",
+        accepts_coeff_swap: true,
+        has_linear_coeffs: true,
+    },
+    ScorerRow {
+        spec: ScorerSpec::Quadratic,
+        name: "quadratic",
+        accepts_coeff_swap: false,
+        has_linear_coeffs: false,
+    },
+];
+
+fn tiny_es() -> EsParams {
+    EsParams { population: 10, iterations: 5, k: 8, seed: 31, ..Default::default() }
+}
+
+/// A small spread of configs from the target's own space: the default
+/// plus grid-strided samples.
+fn sample_cfgs(kind: TargetKind, op: &OpSpec, n: u64) -> Vec<ScheduleConfig> {
+    let space = transform::config_space(op, kind);
+    let mut cfgs = vec![space.default_config()];
+    let n = n.min(space.size()).max(1);
+    for i in 0..n {
+        cfgs.push(space.from_index(i * space.size() / n));
+    }
+    cfgs
+}
+
+fn probe_op() -> OpSpec {
+    OpSpec::Matmul { m: 48, n: 48, k: 32, epilogue: Epilogue::Bias }
+}
+
+fn bits(params: &[f64]) -> Vec<u64> {
+    params.iter().map(|w| w.to_bits()).collect()
+}
+
+/// The table, the spec enum, and the wire-name registry must cover each
+/// other exactly — the mechanism that makes "new scorer = one table row"
+/// true.
+#[test]
+fn table_covers_every_scorer_exactly_once() {
+    assert_eq!(TABLE.len(), ScorerSpec::ALL.len(), "row count != spec enum size");
+    assert_eq!(TABLE.len(), SCORER_NAMES.len(), "row count != SCORER_NAMES size");
+    for spec in ScorerSpec::ALL {
+        let rows: Vec<_> = TABLE.iter().filter(|r| r.spec == spec).collect();
+        assert_eq!(rows.len(), 1, "{spec:?} must have exactly one conformance row");
+        assert_eq!(rows[0].name, spec.name(), "{spec:?}: row name drifted");
+        assert!(SCORER_NAMES.contains(&spec.name()), "{spec:?} missing from SCORER_NAMES");
+        assert_eq!(ScorerSpec::parse(spec.name()), Ok(spec), "{spec:?}: parse not inverse");
+    }
+}
+
+/// Uncalibrated construction is deterministic and dimensioned by the
+/// backend: two independent builds agree bitwise, and the scorer's
+/// feature dimensionality equals the lowering's feature-name count
+/// (mis-sized scorers would silently mis-score every candidate).
+#[test]
+fn default_construction_is_deterministic_and_dimensioned() {
+    for row in &TABLE {
+        for kind in TargetKind::ALL {
+            let a = row.spec.default_scorer(kind);
+            let b = row.spec.default_scorer(kind);
+            assert_eq!(a.name(), row.name, "{:?} on {kind:?}", row.spec);
+            assert_eq!(a.spec(), row.spec, "{:?} on {kind:?}", row.spec);
+            assert_eq!(
+                bits(a.params()),
+                bits(b.params()),
+                "{:?} on {kind:?}: construction not deterministic",
+                row.spec
+            );
+            let dim = tuna::codegen::lowering_for(kind).feature_names().len();
+            assert_eq!(a.feature_dim(), dim, "{:?} on {kind:?}: wrong dim", row.spec);
+            assert!(!a.params().is_empty(), "{:?} on {kind:?}: no params", row.spec);
+            assert_eq!(
+                a.linear_coeffs().is_some(),
+                row.has_linear_coeffs,
+                "{:?} on {kind:?}: linear_coeffs presence",
+                row.spec
+            );
+        }
+    }
+}
+
+/// Scoring conformance on every backend: predictions are finite and
+/// non-negative, pure (same input, same bits), and the one-call
+/// `predict` is bit-identical to running stage 1 and stage 2 by hand.
+#[test]
+fn scores_are_finite_pure_and_match_staged_path() {
+    let op = probe_op();
+    for row in &TABLE {
+        for kind in TargetKind::ALL {
+            let model = CostModel::with_scorer(kind, row.spec.default_scorer(kind));
+            for cfg in sample_cfgs(kind, &op, 4) {
+                let p = model.predict(&op, &cfg);
+                assert!(
+                    p.is_finite() && p >= 0.0,
+                    "{:?} on {kind:?} cfg {cfg:?}: score {p}",
+                    row.spec
+                );
+                let staged = model.score(&model.features(&op, &cfg));
+                assert_eq!(
+                    p.to_bits(),
+                    staged.to_bits(),
+                    "{:?} on {kind:?}: staged path diverged",
+                    row.spec
+                );
+                let again = model.predict(&op, &cfg);
+                assert_eq!(p.to_bits(), again.to_bits(), "{:?} on {kind:?}: impure", row.spec);
+            }
+        }
+    }
+}
+
+/// The evaluator's batched path (memoized features, parallel scoring,
+/// linear fast path where available) agrees bitwise with one-at-a-time
+/// prediction for every scorer on every backend.
+#[test]
+fn batch_scoring_matches_predict_bitwise() {
+    let op = probe_op();
+    for row in &TABLE {
+        for kind in TargetKind::ALL {
+            let model = CostModel::with_scorer(kind, row.spec.default_scorer(kind));
+            let reference = model.clone();
+            let ev = CandidateEvaluator::new(model);
+            let cfgs = sample_cfgs(kind, &op, 4);
+            let batch = ev.score_batch(&op, &cfgs);
+            assert_eq!(batch.len(), cfgs.len());
+            for (cfg, s) in cfgs.iter().zip(&batch) {
+                assert_eq!(
+                    s.to_bits(),
+                    reference.predict(&op, cfg).to_bits(),
+                    "{:?} on {kind:?} cfg {cfg:?}: batch diverged from predict",
+                    row.spec
+                );
+            }
+        }
+    }
+}
+
+/// Serialization conformance per scorer per target: `to_json` is a fixed
+/// point under parse→re-serialize, and save→load→save reproduces the
+/// file byte for byte (byte equality is how fleets verify that every
+/// worker loaded the same model).
+#[test]
+fn serialization_roundtrips_byte_stable_per_target() {
+    for row in &TABLE {
+        for kind in TargetKind::ALL {
+            let s = row.spec.default_scorer(kind);
+            let text = s.to_json(kind).to_string();
+            let (k2, s2) = AnyScorer::from_json(&Json::parse(&text).unwrap())
+                .unwrap_or_else(|e| panic!("{:?} on {kind:?}: from_json {e}", row.spec));
+            assert_eq!(k2, kind, "{:?}: target did not round-trip", row.spec);
+            assert_eq!(s2, s, "{:?} on {kind:?}: scorer did not round-trip", row.spec);
+            assert_eq!(
+                s2.to_json(kind).to_string(),
+                text,
+                "{:?} on {kind:?}: to_json not a fixed point",
+                row.spec
+            );
+
+            let path = std::env::temp_dir().join(format!(
+                "tuna_scorer_conformance_{}_{}_{}.json",
+                row.name,
+                kind.wire_name(),
+                std::process::id()
+            ));
+            s.save(kind, &path).unwrap();
+            let first = std::fs::read_to_string(&path).unwrap();
+            let (_, back) = AnyScorer::load(&path).unwrap();
+            back.save(kind, &path).unwrap();
+            let second = std::fs::read_to_string(&path).unwrap();
+            let _ = std::fs::remove_file(&path);
+            assert_eq!(first, second, "{:?} on {kind:?}: save→load→save drifted", row.spec);
+        }
+    }
+}
+
+/// The coefficient-swap policy is exactly what the row declares, every
+/// rejection is a typed error, and a rejected swap leaves the parameters
+/// bitwise untouched (a half-applied swap would poison every cached
+/// score downstream).
+#[test]
+fn coeff_swap_policy_matches_row_and_never_poisons() {
+    for row in &TABLE {
+        for kind in TargetKind::ALL {
+            let mut s = row.spec.default_scorer(kind);
+            let before = bits(s.params());
+            let dim = s.feature_dim();
+            if row.accepts_coeff_swap {
+                s.try_set_coeffs(vec![1.0; dim])
+                    .unwrap_or_else(|e| panic!("{:?} on {kind:?}: good swap failed {e}", row.spec));
+                assert_eq!(s.params(), vec![1.0; dim].as_slice());
+                let err = s.try_set_coeffs(vec![1.0; dim + 1]).unwrap_err();
+                assert_eq!(
+                    err,
+                    CostError::CoeffDim { expected: dim, got: dim + 1 },
+                    "{:?} on {kind:?}",
+                    row.spec
+                );
+                assert_eq!(s.params(), vec![1.0; dim].as_slice(), "ragged swap half-applied");
+            } else {
+                let err = s.try_set_coeffs(vec![1.0; dim]).unwrap_err();
+                assert!(
+                    matches!(err, CostError::CoeffSwapUnsupported { scorer } if scorer == row.name),
+                    "{:?} on {kind:?}: wrong rejection {err:?}",
+                    row.spec
+                );
+                assert_eq!(bits(s.params()), before, "{:?} on {kind:?}: rejected swap mutated", row.spec);
+            }
+        }
+    }
+}
+
+/// Unknown scorer names and unreadable scorer files fail as typed
+/// errors, never panics — the CLI and serve daemon surface these
+/// verbatim to operators.
+#[test]
+fn unknown_scorers_and_unreadable_files_are_typed_errors() {
+    assert_eq!(
+        ScorerSpec::parse("mlp"),
+        Err(CostError::UnknownScorer { name: "mlp".into() })
+    );
+    let missing = std::env::temp_dir().join(format!(
+        "tuna_scorer_conformance_missing_{}.json",
+        std::process::id()
+    ));
+    match AnyScorer::load(&missing) {
+        Err(CostError::ScorerFile { .. }) => {}
+        other => panic!("missing file should be ScorerFile, got {other:?}"),
+    }
+}
+
+/// End-to-end conformance: every scorer drives the full tune → cache
+/// pipeline on every backend, and a warm re-tune replays the cached
+/// decision bit-identically.
+#[test]
+fn every_scorer_tunes_every_target_with_stable_warm_hits() {
+    let op = OpSpec::Matmul { m: 48, n: 48, k: 24, epilogue: Epilogue::None };
+    let strategy = Strategy::TunaStatic(tiny_es());
+    for row in &TABLE {
+        for kind in TargetKind::ALL {
+            let c = Coordinator::new_uncalibrated_with_scorer(kind, row.spec);
+            let cold = c.tune_op(&op, &strategy);
+            assert!(!cold.top_k.is_empty(), "{:?} on {kind:?}: no top-k", row.spec);
+            assert!(
+                cold.latency_s.is_finite() && cold.latency_s > 0.0,
+                "{:?} on {kind:?}: latency {}",
+                row.spec,
+                cold.latency_s
+            );
+            let warm = c.tune_op(&op, &strategy);
+            assert_eq!(
+                warm.top_k, cold.top_k,
+                "{:?} on {kind:?}: warm hit not bit-identical",
+                row.spec
+            );
+        }
+    }
+}

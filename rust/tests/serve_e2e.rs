@@ -207,6 +207,54 @@ fn recalibrate_over_the_socket_reranks_without_searching_or_lowering() {
 }
 
 #[test]
+fn quadratic_daemon_rejects_recalibrate_typed_and_serves_warm_unpoisoned() {
+    use tuna::analysis::ScorerSpec;
+    let cfg = ServeConfig { scorer: ScorerSpec::Quadratic, ..base_config() };
+    let (addr, daemon) = start_daemon(cfg);
+    let mut client = Client::connect(addr);
+    let op = OpSpec::Matmul { m: 48, n: 48, k: 24, epilogue: Epilogue::None };
+
+    let first = client.tune(TargetKind::Graviton2, op);
+    let Response::Tuned { cache_hit: false, config, predicted_cost, .. } = first.clone()
+    else {
+        panic!("cold tune under the quadratic scorer failed: {first:?}");
+    };
+    // the daemon's choice matches in-process tuning under the same scorer
+    let reference =
+        Coordinator::new_uncalibrated_with_scorer(TargetKind::Graviton2, ScorerSpec::Quadratic);
+    let want = reference.tune_op(&op, &Strategy::TunaStatic(tiny_es()));
+    assert_eq!(config, want.chosen, "served schedule diverged from in-process tuning");
+    assert_eq!(predicted_cost, want.top_k[0].1, "served cost diverged");
+
+    // correctly-dimensioned coefficients still cannot recalibrate a
+    // nonlinear scorer: the rejection is typed and tells the operator to
+    // retrain offline instead
+    let resp = client.send(&Request::Recalibrate {
+        target: TargetKind::Graviton2,
+        coeffs: vec![1.0; 7],
+    });
+    let Response::Error { code, detail } = resp else {
+        panic!("quadratic scorer accepted a raw coefficient swap: {resp:?}");
+    };
+    assert_eq!(code, ErrorCode::BadCoeffs);
+    assert!(detail.contains("train-scorer"), "rejection lacks the remedy: {detail}");
+
+    // the failed recalibrate poisoned nothing: same connection, warm hit,
+    // bit-identical to the pre-failure response, no extra search
+    let warm = client.tune(TargetKind::Graviton2, op);
+    let Response::Tuned { cache_hit, config: wc, predicted_cost: wp, .. } = warm else {
+        panic!("post-rejection tune failed");
+    };
+    assert!(cache_hit, "failed recalibrate invalidated the cache");
+    assert_eq!(wc, config, "failed recalibrate changed the served schedule");
+    assert_eq!(wp, predicted_cost, "failed recalibrate re-scored the schedule");
+    assert_eq!(client.stats_for(TargetKind::Graviton2).searches, 1);
+
+    client.shutdown();
+    daemon.join().unwrap();
+}
+
+#[test]
 fn save_then_fresh_daemon_with_warm_cache_serves_zero_search() {
     let path = temp_path("warm");
     let ops = [

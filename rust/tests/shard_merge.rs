@@ -89,6 +89,56 @@ fn four_shard_merge_matches_single_process_bit_for_bit() {
     }
 }
 
+/// The same acceptance under the learned nonlinear scorer: partitioned
+/// tuning with the quadratic model, merged, must be byte-identical on
+/// disk to the unsharded coordinator's export — the property that lets a
+/// fleet prove a non-default scorer flowed to every worker.
+#[test]
+fn four_shard_merge_under_quadratic_scorer_is_byte_identical_to_unsharded() {
+    use tuna::analysis::ScorerSpec;
+    let kind = TargetKind::Graviton2;
+    let net = bert_base();
+    let tasks = net.unique_tasks();
+    let strategy = Strategy::TunaStatic(tiny_es());
+
+    let single = Coordinator::new_uncalibrated_with_scorer(kind, ScorerSpec::Quadratic);
+    assert_eq!(single.cost_model().scorer().name(), "quadratic");
+    let want = single.tune_network(&net, &strategy);
+
+    let shards = shard::partition(kind, &tasks, 4);
+    let caches: Vec<ScheduleCache> = shards
+        .iter()
+        .enumerate()
+        .map(|(id, shard_tasks)| {
+            let worker = ShardWorker::with_model(id, kind, single.cost_model());
+            worker.run(shard_tasks, &strategy);
+            worker.into_cache()
+        })
+        .collect();
+    let (merged, stats) = shard::merge_caches(caches);
+    assert_eq!(stats.inserted, tasks.len());
+    assert_eq!(stats.combined, 0, "disjoint shards clashed");
+
+    // byte identity: the merged file equals the unsharded export
+    let merged_path = temp_path("quad_merged");
+    let single_path = temp_path("quad_single");
+    merged.save(&merged_path).unwrap();
+    single.export_cache().save(&single_path).unwrap();
+    let merged_bytes = std::fs::read(&merged_path).unwrap();
+    let single_bytes = std::fs::read(&single_path).unwrap();
+    let _ = std::fs::remove_file(&merged_path);
+    let _ = std::fs::remove_file(&single_path);
+    assert_eq!(merged_bytes, single_bytes, "sharded quadratic tune diverged from unsharded");
+
+    // and the merged cache serves a quadratic coordinator search-free,
+    // reproducing the unsharded deployment exactly
+    let serving = Coordinator::with_model(kind, single.cost_model());
+    serving.import_cache(merged);
+    let got = serving.tune_network(&net, &strategy);
+    assert_eq!(serving.searches_performed(), 0, "merged cache missed a task");
+    assert_eq!(got.latency_s, want.latency_s, "sharded quadratic deployment diverged");
+}
+
 /// Recalibration must re-rank entries loaded purely from disk: the loading
 /// process never tuned the tasks and keeps no task map — the entries'
 /// embedded op specs are all it has.
